@@ -1,0 +1,52 @@
+//! C3 walkthrough: run the §5 decision flow offline (Figure 9(b)) on the
+//! real CPU microkernel artifacts, print the inflection points, persist
+//! the lookup table, and demonstrate runtime dispatch (Figure 9(c)).
+//!
+//!     cargo run --release --example heuristic_profile [reps]
+
+use fdpp::dataflow::profile::build_lookup_table;
+use fdpp::dataflow::ImplKind;
+use fdpp::runtime::Runtime;
+
+fn main() -> fdpp::Result<()> {
+    let reps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let mut rt = Runtime::load("artifacts")?;
+    println!("profiling micro GEMM artifacts (reps={reps}) on {}", rt.platform());
+    let table = build_lookup_table(&mut rt, reps)?;
+
+    println!("\nlookup table ({} / {}):", table.model, table.hardware);
+    println!("{:<22} {:>8} {:>8}", "op [N,K]", "M1", "M2");
+    for e in &table.entries {
+        println!(
+            "{:<22} {:>8} {:>8}",
+            format!("{} [{},{}]", e.op, e.n, e.k),
+            e.m1,
+            e.m2
+        );
+    }
+
+    println!("\nruntime dispatch demo (Figure 9(c)):");
+    for m in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let picks: Vec<String> = table
+            .entries
+            .iter()
+            .map(|e| {
+                let ik = e.dispatch(m);
+                let tag = match ik {
+                    ImplKind::A => "A",
+                    ImplKind::B => "B",
+                    ImplKind::C => "C",
+                };
+                format!("{}:{}", e.op, tag)
+            })
+            .collect();
+        println!("  M={m:<4} -> {}", picks.join("  "));
+    }
+
+    table.save_json("artifacts/lookup_table.json")?;
+    println!("\nwrote artifacts/lookup_table.json");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! C1 walkthrough (Figure 5): measure the softmax-input distribution of
+//! the *real* tiny model by executing the `prefill_scores` artifact, then
+//! derive the unified-max policy (phi + enable/disable) the way the
+//! engine does offline for each model.
+//!
+//!     cargo run --release --example softmax_stats
+
+use fdpp::runtime::{literal_i32, to_vec_f32, Runtime};
+use fdpp::softmaxstats::{derive_policy, paper_figure5_ranges, SoftmaxInputStats};
+use fdpp::util::rng::Rng;
+
+fn main() -> fdpp::Result<()> {
+    let mut rt = Runtime::load("artifacts")?;
+    let vocab = rt.manifest.model.vocab_size;
+    let seq = 64usize;
+    let mut rng = Rng::seed_from_u64(7);
+    let mut stats = SoftmaxInputStats::new();
+
+    println!("running prefill_scores_s{seq} over 4 synthetic prompts ...");
+    for _ in 0..4 {
+        let toks: Vec<i32> = (0..seq).map(|_| rng.gen_range(0, vocab - 1) as i32).collect();
+        let toks = literal_i32(&toks, &[1, seq])?;
+        let outs = rt.execute(&format!("prefill_scores_s{seq}"), &[&toks])?;
+        // outputs: logits, k, v, scores [Lyr, H, S, S]
+        let scores = to_vec_f32(&outs[3])?;
+        // keep causal-valid entries only
+        let (lyr, heads) = (rt.manifest.model.n_layers, rt.manifest.model.n_heads);
+        for l in 0..lyr {
+            for h in 0..heads {
+                for i in 0..seq {
+                    for j in 0..=i {
+                        let idx = ((l * heads + h) * seq + i) * seq + j;
+                        stats.push(scores[idx] as f64);
+                    }
+                }
+            }
+        }
+    }
+
+    println!("\nmeasured on the real tiny model (x_i = QK^T/sqrt(d)):");
+    println!(
+        "  count={} min={:.2} max={:.2} mean={:.3} std={:.3}",
+        stats.count, stats.min, stats.max, stats.mean,
+        stats.std()
+    );
+    let policy = derive_policy(&stats);
+    println!(
+        "  -> policy: enabled={} phi={:.3} window=({}, {}) expected recompute {:.2e}",
+        policy.enabled, policy.phi, policy.a, policy.b, policy.expected_recompute_rate
+    );
+    println!(
+        "  manifest phi (chosen at AOT time): {:.3}",
+        rt.manifest.model.phi
+    );
+
+    println!("\npaper Figure 5 ranges -> per-model decisions:");
+    for (name, lo, hi) in paper_figure5_ranges() {
+        let mut s = SoftmaxInputStats::new();
+        for i in 0..512 {
+            s.push(lo + (hi - lo) * i as f64 / 511.0);
+        }
+        let p = derive_policy(&s);
+        println!(
+            "  {:<14} range [{:>6.1}, {:>5.1}] -> async softmax {}",
+            name,
+            lo,
+            hi,
+            if p.enabled { "ENABLED" } else { "disabled (recompute-prone)" }
+        );
+    }
+    Ok(())
+}

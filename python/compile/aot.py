@@ -1,0 +1,230 @@
+# AOT bridge: lower every L2 entry point to HLO *text* + export weights.
+#
+# HLO text (not .serialize()) is the interchange format: jax >= 0.5 emits
+# HloModuleProto with 64-bit instruction ids which the xla crate's
+# xla_extension 0.5.1 rejects; the text parser reassigns ids and
+# round-trips cleanly (see /opt/xla-example/README.md).
+#
+# Outputs, under --out-dir (default ../artifacts):
+#   manifest.json          model config + entry/weight inventory
+#   weights/<name>.npy     one f32 .npy per weight tensor (Literal::read_npy)
+#   <entry>.hlo.txt        one HLO module per entry point
+#
+# Entry points (all return tuples; rust unwraps with decompose_tuple):
+#   decode_b{B}            async-softmax decode step, batch bucket B
+#   decode_b{B}_sync       synchronized-softmax baseline decode step
+#   decode_b{B}_jnpattn    oracle-attention decode step (test reference)
+#   prefill_s{S}           single-sequence prefill, length bucket S
+#   prefill_scores_s{S}    prefill that also returns QK^T scores (Fig. 5)
+#   micro_{impl}_m{M}_{op} ImplA/B/C microkernels for the §5 decision flow
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+DECODE_BATCHES = (1, 2, 4, 8)
+SYNC_BATCHES = (1, 8)
+PREFILL_SEQS = (16, 32, 64)
+SCORES_SEQ = 64
+MAX_SEQ = 256  # decode KV bucket (Lmax)
+
+MICRO_MS = (1, 4, 8, 32, 64)
+MICRO_IMPLS = ("gemv", "flat", "conv")
+MICRO_OPS = ("qkv_proj", "ffn1")  # two of the four Fig. 9(a) shapes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec_of(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def choose_phi(cfg, ws, seq=48, n_prompts=4, seed=7):
+    """Fig. 5 statistic: run prefill on sample prompts, collect the
+    softmax-input distribution, and pick the unified scaling factor phi
+    plus the safe window margin check (paper §3)."""
+    xs = []
+    key = jax.random.PRNGKey(seed)
+    for i in range(n_prompts):
+        key, sub = jax.random.split(key)
+        toks = jax.random.randint(sub, (1, seq), 0, cfg.vocab_size)
+        _, _, _, scores = M.prefill(cfg, ws, toks, return_scores=True)
+        # keep only causal-valid entries
+        mask = np.tril(np.ones((seq, seq), bool))
+        xs.append(np.asarray(scores)[:, :, mask].ravel())
+    x = np.concatenate(xs)
+    stats = {
+        "min": float(x.min()), "max": float(x.max()),
+        "mean": float(x.mean()), "std": float(x.std()),
+        "p01": float(np.percentile(x, 1)),
+        "p999": float(np.percentile(x, 99.9)),
+        "count": int(x.size),
+    }
+    # phi centers the observed range; the (a, b) window must cover the
+    # observed extremes with margin, else the engine disables C1 (the
+    # paper's OPT-6.7B rule).
+    phi = float(np.median(x))
+    return phi, stats
+
+
+def build_entries(cfg, ws):
+    """Yield (name, lowered, kind, params, input_specs) per entry point."""
+    wlist = M.weights_list(ws)
+    wspecs = [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in wlist]
+    h, dh, lyr = cfg.n_heads, cfg.head_dim, cfg.n_layers
+
+    def decode_fn(attn, impl):
+        def fn(*args):
+            n = len(M.WEIGHT_ORDER)
+            ws_d = M.weights_dict(args[:n])
+            tokens, pos, kc, vc = args[n:]
+            return M.decode_step(cfg, ws_d, tokens, pos, kc, vc,
+                                 impl=impl, attn=attn)
+        return fn
+
+    for b in DECODE_BATCHES:
+        impl = "gemv" if b == 1 else "flat"  # build-time lookup-table choice
+        cache = jax.ShapeDtypeStruct((lyr, b, h, MAX_SEQ, dh), jnp.float32)
+        ins = wspecs + [
+            jax.ShapeDtypeStruct((b,), jnp.int32),   # tokens
+            jax.ShapeDtypeStruct((b,), jnp.int32),   # pos
+            cache, cache,
+        ]
+        variants = [("", "async", impl)]
+        if b in SYNC_BATCHES:
+            variants.append(("_sync", "sync", impl))
+            variants.append(("_jnpattn", "jnp", "jnp"))
+        for suffix, attn, impl_ in variants:
+            name = f"decode_b{b}{suffix}"
+            lowered = jax.jit(decode_fn(attn, impl_)).lower(*ins)
+            yield (name, lowered, "decode",
+                   {"batch": b, "max_seq": MAX_SEQ, "attn": attn,
+                    "impl": impl_}, ins)
+
+    def prefill_fn(return_scores):
+        def fn(*args):
+            n = len(M.WEIGHT_ORDER)
+            ws_d = M.weights_dict(args[:n])
+            (tokens,) = args[n:]
+            return M.prefill(cfg, ws_d, tokens, return_scores=return_scores)
+        return fn
+
+    for s in PREFILL_SEQS:
+        ins = wspecs + [jax.ShapeDtypeStruct((1, s), jnp.int32)]
+        lowered = jax.jit(prefill_fn(False)).lower(*ins)
+        yield (f"prefill_s{s}", lowered, "prefill", {"seq": s}, ins)
+
+    ins = wspecs + [jax.ShapeDtypeStruct((1, SCORES_SEQ), jnp.int32)]
+    lowered = jax.jit(prefill_fn(True)).lower(*ins)
+    yield (f"prefill_scores_s{SCORES_SEQ}", lowered, "scores",
+           {"seq": SCORES_SEQ}, ins)
+
+    # Device-side KV insertion (perf pass, EXPERIMENTS.md §Perf): when a
+    # freshly prefilled sequence joins a running decode batch, the engine
+    # splices its KV into the dense cache *on device* instead of a full
+    # host gather/scatter round trip.
+    def insert_fn(kcache, vcache, k_new, v_new, lane):
+        start = (jnp.int32(0), lane[0], jnp.int32(0), jnp.int32(0),
+                 jnp.int32(0))
+        kc = jax.lax.dynamic_update_slice(kcache, k_new, start)
+        vc = jax.lax.dynamic_update_slice(vcache, v_new, start)
+        return kc, vc
+
+    for b in DECODE_BATCHES:
+        cache = jax.ShapeDtypeStruct((lyr, b, h, MAX_SEQ, dh), jnp.float32)
+        for s in PREFILL_SEQS:
+            kv_new = jax.ShapeDtypeStruct((lyr, 1, h, s, dh), jnp.float32)
+            ins = [cache, cache, kv_new, kv_new,
+                   jax.ShapeDtypeStruct((1,), jnp.int32)]
+            lowered = jax.jit(insert_fn).lower(*ins)
+            yield (f"insert_b{b}_s{s}", lowered, "insert",
+                   {"batch": b, "seq": s}, ins)
+
+    shapes = cfg.linear_shapes()
+    for op in MICRO_OPS:
+        n, k = shapes[op]
+        for impl in MICRO_IMPLS:
+            for m in MICRO_MS:
+                ins = [jax.ShapeDtypeStruct((m, k), jnp.float32),
+                       jax.ShapeDtypeStruct((k, n), jnp.float32)]
+                fn = M.micro_gemm(impl)
+                lowered = jax.jit(lambda x, w, _f=fn: (_f(x, w),)).lower(*ins)
+                yield (f"micro_{impl}_m{m}_{op}", lowered, "micro",
+                       {"impl": impl, "m": m, "n": n, "k": k, "op": op}, ins)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-micro", action="store_true",
+                    help="skip microkernel entries (faster CI builds)")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(os.path.join(out, "weights"), exist_ok=True)
+
+    cfg = M.TINY
+    ws = M.init_weights(cfg, seed=args.seed)
+
+    phi, stats = choose_phi(cfg, ws)
+    cfg = M.ModelConfig(**{**cfg.__dict__, "phi": phi})
+    print(f"phi={phi:.4f} softmax-input stats: {stats}")
+
+    weights_meta = []
+    for name in M.WEIGHT_ORDER:
+        arr = np.asarray(ws[name], np.float32)
+        np.save(os.path.join(out, "weights", f"{name}.npy"), arr)
+        weights_meta.append({"name": name, "shape": list(arr.shape),
+                             "dtype": "float32", "file": f"weights/{name}.npy"})
+
+    entries = []
+    for name, lowered, kind, params, ins in build_entries(cfg, ws):
+        if args.skip_micro and kind == "micro":
+            continue
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+        n_out = len(jax.tree_util.tree_leaves(lowered.out_info))
+        entries.append({
+            "name": name, "file": fname, "kind": kind, "params": params,
+            "inputs": [spec_of(s) for s in ins],
+            "num_outputs": n_out,
+            "takes_weights": kind not in ("micro", "insert"),
+        })
+        print(f"  {name}: {len(text)//1024} KiB, {n_out} outputs")
+
+    manifest = {
+        "model": {
+            "name": cfg.name, "vocab_size": cfg.vocab_size, "dim": cfg.dim,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim, "ffn_hidden": cfg.ffn_hidden,
+            "max_seq": MAX_SEQ,
+            "phi": cfg.phi, "softmax_a": cfg.softmax_a,
+            "softmax_b": cfg.softmax_b,
+        },
+        "softmax_input_stats": stats,
+        "weight_order": M.WEIGHT_ORDER,
+        "weights": weights_meta,
+        "entries": entries,
+        "linear_shapes": {k: list(v) for k, v in cfg.linear_shapes().items()},
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} entries + manifest to {out}")
+
+
+if __name__ == "__main__":
+    main()

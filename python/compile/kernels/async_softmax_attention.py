@@ -1,0 +1,143 @@
+# C1 — Asynchronized softmax with unified max value (paper §3).
+#
+# Decode-phase attention: one query token per (batch, head) against a KV
+# cache of length L, processed in chunks of `block_l` along L.
+#
+# The paper's scheme: every chunk j computes
+#     acc_j = sum_i e^{x_i - phi} * v_i        (numerator partial)
+#     den_j = sum_i e^{x_i - phi}              (denominator partial)
+# with a *unified* scaling factor phi, so chunks never exchange their
+# running max (no synchronized update, Figure 4(c)). If any x_i - phi
+# leaves the safe window (a, b), the row is *recomputed* with the
+# synchronized online-softmax scheme (Figure 4(b) / Eq. 2).
+#
+# jit-friendly adaptation: inside one pass over KV we track BOTH the
+# unified accumulators and the synchronized (online-softmax) accumulators,
+# then select per row at the end. Under `jax.jit` a data-dependent relaunch
+# is not expressible, and computing both tracks is the standard
+# select-don't-branch mapping; on a real TPU deployment the synchronized
+# track is the fallback kernel the paper relaunches. The per-row selector
+# is exported as `recompute_flag` so the engine can account the paper's
+# "recompute rate" (§3, negligible by Figure 5's statistics).
+#
+# Grid: (B, H, L / block_l) with the chunk dimension innermost/sequential —
+# the accumulators live in VMEM scratch carried across chunk steps, which
+# is the schedule Mosaic double-buffers on real hardware.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_BIG = -1e30  # finite stand-in for -inf (keeps exp()/max() NaN-free)
+
+
+def _kernel(q_ref, k_ref, v_ref, kvlen_ref, o_ref, flag_ref,
+            accu_ref, denu_ref, accs_ref, dens_ref, m_ref,
+            *, scale, phi, a, b, block_l, num_chunks):
+    chunk = pl.program_id(2)
+    q = q_ref[0, 0, :].astype(jnp.float32)            # [D]
+    k = k_ref[0, 0, :, :].astype(jnp.float32)         # [block_l, D]
+    v = v_ref[0, 0, :, :].astype(jnp.float32)         # [block_l, D]
+    kv_len = kvlen_ref[0]
+
+    @pl.when(chunk == 0)
+    def _init():
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+        denu_ref[...] = jnp.zeros_like(denu_ref)
+        accs_ref[...] = jnp.zeros_like(accs_ref)
+        dens_ref[...] = jnp.zeros_like(dens_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+
+    # x: softmax input row for this chunk, masked past kv_len.
+    idx = chunk * block_l + jax.lax.iota(jnp.int32, block_l)
+    x = jnp.dot(k, q) * scale                          # [block_l]
+    valid = idx < kv_len
+    x = jnp.where(valid, x, NEG_BIG)
+
+    # --- unified-max track (asynchronized; no cross-chunk dependency) ---
+    e_u = jnp.where(valid, jnp.exp(x - phi), 0.0)      # [block_l]
+    accu_ref[0, :] += jnp.dot(e_u, v)                  # [D]
+    denu_ref[0, 0] += jnp.sum(e_u)
+
+    # --- synchronized track (online softmax, Eq. 2) — the fallback ---
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(x))
+    corr = jnp.exp(m_prev - m_new)
+    e_s = jnp.where(valid, jnp.exp(x - m_new), 0.0)
+    accs_ref[0, :] = accs_ref[0, :] * corr + jnp.dot(e_s, v)
+    dens_ref[0, 0] = dens_ref[0, 0] * corr + jnp.sum(e_s)
+    m_ref[0, 0] = m_new
+
+    @pl.when(chunk == num_chunks - 1)
+    def _finalize():
+        m = m_ref[0, 0]
+        # Overflow/precision guard (§3 Approach: Recomputation): the row
+        # must be recomputed when its true max leaves the window around phi.
+        overflow = jnp.logical_or(m - phi > b, m - phi < a)
+        o_u = accu_ref[0, :] / denu_ref[0, 0]
+        o_s = accs_ref[0, :] / dens_ref[0, 0]
+        o_ref[0, 0, :] = jnp.where(overflow, o_s, o_u).astype(o_ref.dtype)
+        flag_ref[0, 0] = overflow.astype(jnp.float32)
+
+
+def _pick_block_l(l, block_l):
+    if l % block_l != 0:
+        block_l = min(block_l, l)
+        while l % block_l != 0:
+            block_l //= 2
+    return block_l
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("phi", "a", "b", "block_l", "scale", "interpret"),
+)
+def async_softmax_attention(q, k, v, kv_len, *, phi=0.0, a=-20.0, b=15.0,
+                            block_l=128, scale=None, interpret=True):
+    """Decode attention with the unified-max asynchronized softmax.
+
+    q: [B, H, D]; k, v: [B, H, L, D]; kv_len: i32[B] (valid KV prefix
+    per sequence — continuous batching mixes lengths).
+    Returns (o: [B, H, D], recompute_flag: f32[B, H]).
+    """
+    batch, heads, d = q.shape
+    l = k.shape[2]
+    block_l = _pick_block_l(l, block_l)
+    num_chunks = l // block_l
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+
+    kernel = functools.partial(
+        _kernel, scale=scale, phi=phi, a=a, b=b,
+        block_l=block_l, num_chunks=num_chunks,
+    )
+    grid = (batch, heads, num_chunks)
+    o, flag = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b_, h, c: (b_, h, 0)),
+            pl.BlockSpec((1, 1, block_l, d), lambda b_, h, c: (b_, h, c, 0)),
+            pl.BlockSpec((1, 1, block_l, d), lambda b_, h, c: (b_, h, c, 0)),
+            pl.BlockSpec((1,), lambda b_, h, c: (b_,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, d), lambda b_, h, c: (b_, h, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h, c: (b_, h)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),   # acc_u
+            pltpu.VMEM((1, 1), jnp.float32),   # den_u
+            pltpu.VMEM((1, d), jnp.float32),   # acc_s
+            pltpu.VMEM((1, 1), jnp.float32),   # den_s
+            pltpu.VMEM((1, 1), jnp.float32),   # running max m
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((batch, heads, d), q.dtype),
+            jax.ShapeDtypeStruct((batch, heads), jnp.float32),
+        ),
+        interpret=interpret,
+    )(q, k, v, kv_len)
+    return o, flag

@@ -1,0 +1,130 @@
+# C1 applied to the prefill phase: causal tiled attention whose partial
+# softmax uses the unified max value (paper §3 — the technique is not
+# decode-specific; FlashAttention's synchronized rescale is what it
+# replaces).
+#
+# Tiling: grid (B, H, Sq/block_q, Skv/block_kv) with the KV-block
+# dimension innermost/sequential; per-(b,h,q-block) accumulators live in
+# VMEM scratch carried across KV steps. Fully-masked KV blocks (above
+# the causal diagonal) are skipped via pl.when — the schedule the paper's
+# prefill kernel gets from its threadblock mapping.
+#
+# Like the decode kernel, both the unified-phi track and the
+# online-softmax fallback track are computed and selected per row at
+# finalize (jit-able overflow handling); the flag output reports the
+# recompute rate.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_BIG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, flag_ref,
+            accu_ref, denu_ref, accs_ref, dens_ref, m_ref,
+            *, scale, phi, a, b, block_q, block_kv, num_kv):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+        denu_ref[...] = jnp.zeros_like(denu_ref)
+        accs_ref[...] = jnp.zeros_like(accs_ref)
+        dens_ref[...] = jnp.zeros_like(dens_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # Skip KV blocks strictly above the causal diagonal.
+    @pl.when(k_start <= q_start + block_q - 1)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)      # [block_q, D]
+        k = k_ref[0, 0, :, :].astype(jnp.float32)      # [block_kv, D]
+        v = v_ref[0, 0, :, :].astype(jnp.float32)      # [block_kv, D]
+        x = jnp.dot(q, k.T) * scale                     # [block_q, block_kv]
+        rows = q_start + jax.lax.iota(jnp.int32, block_q)[:, None]
+        cols = k_start + jax.lax.iota(jnp.int32, block_kv)[None, :]
+        causal = cols <= rows
+        x = jnp.where(causal, x, NEG_BIG)
+
+        # unified-max track (asynchronized)
+        e_u = jnp.where(causal, jnp.exp(x - phi), 0.0)
+        accu_ref[...] += jnp.dot(e_u, v)
+        denu_ref[...] += jnp.sum(e_u, axis=1, keepdims=True)
+
+        # synchronized online-softmax track (fallback)
+        m_prev = m_ref[...]                             # [block_q, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(x, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        e_s = jnp.where(causal, jnp.exp(x - m_new), 0.0)
+        accs_ref[...] = accs_ref[...] * corr + jnp.dot(e_s, v)
+        dens_ref[...] = dens_ref[...] * corr + jnp.sum(e_s, axis=1, keepdims=True)
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_kv - 1)
+    def _finalize():
+        m = m_ref[...]
+        overflow = jnp.logical_or(m - phi > b, m - phi < a)  # [block_q, 1]
+        o_u = accu_ref[...] / denu_ref[...]
+        o_s = accs_ref[...] / dens_ref[...]
+        o_ref[0, 0, :, :] = jnp.where(overflow, o_s, o_u).astype(o_ref.dtype)
+        flag_ref[0, 0, :] = overflow[:, 0].astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("phi", "a", "b", "block_q", "block_kv", "scale",
+                     "interpret"),
+)
+def async_softmax_prefill(q, k, v, *, phi=0.0, a=-25.0, b=18.0,
+                          block_q=32, block_kv=64, scale=None,
+                          interpret=True):
+    """Causal self-attention with unified-max partial softmax.
+
+    q, k, v: [B, H, S, D]. Returns (o [B, H, S, D], flags f32[B, H, S]).
+    """
+    batch, heads, s, d = q.shape
+    block_q = min(block_q, s)
+    while s % block_q != 0:
+        block_q //= 2
+    block_kv = min(block_kv, s)
+    while s % block_kv != 0:
+        block_kv //= 2
+    num_kv = s // block_kv
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+
+    kernel = functools.partial(
+        _kernel, scale=scale, phi=phi, a=a, b=b,
+        block_q=block_q, block_kv=block_kv, num_kv=num_kv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, heads, s // block_q, num_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h, qi, ki: (b_, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h, qi, ki: (b_, h, ki, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h, qi, ki: (b_, h, qi)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc_u
+            pltpu.VMEM((block_q, 1), jnp.float32),   # den_u
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc_s
+            pltpu.VMEM((block_q, 1), jnp.float32),   # den_s
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((batch, heads, s, d), q.dtype),
+            jax.ShapeDtypeStruct((batch, heads, s), jnp.float32),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,133 @@
+# C2 — Flat GEMM optimization with double buffering (paper §4).
+#
+# Decode-phase linear layers multiply a *flat* activation [M, K] (M = batch
+# size, usually <= 8) by a weight [K, N]. cuBLAS-era libraries tile M to 64
+# and pad with zeros (>87% wasted MACs at M=8); FlashDecoding++ pads M only
+# to the hardware's native GEMM granularity (8) and tiles N for parallelism
+# and K sequentially for reuse.
+#
+# TPU adaptation (DESIGN.md §2): the native M granularity is the 8-sublane
+# MXU tile, so pad-to-8 carries over directly. The paper's shared-memory
+# double buffering maps to the Pallas schedule: the K loop is the
+# innermost *sequential* grid dimension over BlockSpec-carried tiles, which
+# Mosaic automatically double-buffers between HBM and VMEM; the accumulator
+# lives in VMEM scratch. `flat_gemm` (ImplB) uses the MXU (jnp.dot);
+# `conventional_gemm` (ImplC) adds M-tiling for big-M prefill GEMMs.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MIN_M_PAD = 8  # paper §4: pad M to 8 (Tensor-Core / MXU granularity), not 64
+
+
+def _ceil_to(x, m):
+    return (x + m - 1) // m * m
+
+
+def _flat_kernel(x_ref, w_ref, o_ref, acc_ref, *, num_k):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)   # [Mp, block_k]
+    w = w_ref[...].astype(jnp.float32)   # [block_k, block_n]
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == num_k - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_k", "interpret"),
+)
+def flat_gemm(x, w, *, block_n=128, block_k=128, interpret=True):
+    """ImplB: [M, K] @ [K, N] with M padded to 8 (not 64).
+
+    Grid = (N / block_n) parallel x (K / block_k) sequential; f32 VMEM
+    accumulator carried across the K steps.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (k, k2)
+    mp = max(MIN_M_PAD, _ceil_to(m, MIN_M_PAD))
+    block_k = min(block_k, _ceil_to(k, 8))
+    block_n = min(block_n, _ceil_to(n, 8))
+    kp = _ceil_to(k, block_k)
+    np_ = _ceil_to(n, block_n)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    num_k = kp // block_k
+
+    out = pl.pallas_call(
+        functools.partial(_flat_kernel, num_k=num_k),
+        grid=(np_ // block_n, num_k),
+        in_specs=[
+            pl.BlockSpec((mp, block_k), lambda nn, kk: (0, kk)),
+            pl.BlockSpec((block_k, block_n), lambda nn, kk: (kk, nn)),
+        ],
+        out_specs=pl.BlockSpec((mp, block_n), lambda nn, kk: (0, nn)),
+        scratch_shapes=[pltpu.VMEM((mp, block_n), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, num_k):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == num_k - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"),
+)
+def conventional_gemm(x, w, *, block_m=64, block_n=128, block_k=128,
+                      interpret=True):
+    """ImplC: conventionally tiled GEMM (M tiled to 64) for prefill shapes.
+
+    This is the cuBLAS/CUTLASS-style schedule the paper keeps for large M;
+    it is also the *baseline* whose zero-padding waste Fig. 10 exposes when
+    misapplied to flat shapes.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (k, k2)
+    block_k = min(block_k, _ceil_to(k, 8))
+    block_n = min(block_n, _ceil_to(n, 8))
+    mp = _ceil_to(max(m, block_m), block_m)
+    kp = _ceil_to(k, block_k)
+    np_ = _ceil_to(n, block_n)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    num_k = kp // block_k
+
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, num_k=num_k),
+        grid=(mp // block_m, np_ // block_n, num_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mm, nn, kk: (mm, kk)),
+            pl.BlockSpec((block_k, block_n), lambda mm, nn, kk: (kk, nn)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mm, nn, kk: (mm, nn)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]

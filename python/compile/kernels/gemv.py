@@ -1,0 +1,71 @@
+# ImplA — FastGEMV-style vector kernel (paper §5).
+#
+# For M in {1..4} the paper routes linear layers to CUDA-core GEMV
+# (FastGEMV) rather than Tensor Cores: at these shapes the MAC array is
+# almost entirely padding, and a bandwidth-bound vector kernel wins
+# (cuBLAS-TC reaches only 82.15% of FastGEMV at M=1 on A100, §5).
+#
+# TPU adaptation: CUDA cores -> the VPU. The kernel deliberately avoids
+# jnp.dot (MXU) and computes broadcast-multiply + K-reduction on vector
+# lanes, mirroring FastGEMV's per-row dot products.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ceil_to(x, m):
+    return (x + m - 1) // m * m
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, num_k):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)      # [M, block_k]
+    w = w_ref[...].astype(jnp.float32)      # [block_k, block_n]
+    # VPU path: broadcast multiply + reduce over K. No MXU contraction.
+    acc_ref[...] += jnp.sum(x[:, :, None] * w[None, :, :], axis=1)
+
+    @pl.when(kk == num_k - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_k", "interpret"),
+)
+def gemv(x, w, *, block_n=128, block_k=256, interpret=True):
+    """ImplA: [M, K] @ [K, N] via vector-unit dot products (M small).
+
+    No M padding at all — each of the M rows is a genuine vector workload.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (k, k2)
+    block_k = min(block_k, _ceil_to(k, 8))
+    block_n = min(block_n, _ceil_to(n, 8))
+    kp = _ceil_to(k, block_k)
+    np_ = _ceil_to(n, block_n)
+    xp = jnp.pad(x, ((0, 0), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    num_k = kp // block_k
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_k=num_k),
+        grid=(np_ // block_n, num_k),
+        in_specs=[
+            pl.BlockSpec((m, block_k), lambda nn, kk: (0, kk)),
+            pl.BlockSpec((block_k, block_n), lambda nn, kk: (kk, nn)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda nn, kk: (0, nn)),
+        scratch_shapes=[pltpu.VMEM((m, block_n), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((m, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:, :n]

@@ -1,0 +1,69 @@
+# Pure-jnp correctness oracles for the Pallas kernels.
+#
+# Everything here is the "textbook" computation (Figure 4(a) of the paper):
+# numerically-stable softmax with the true max, dense attention, dense
+# matmul. The kernels in this package must match these to ~1e-5 (f32).
+import jax.numpy as jnp
+
+
+def softmax_ref(x, axis=-1):
+    """Numerically-stable softmax (Figure 4(a)): m(x), f(x), l(x)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    f = jnp.exp(x - m)
+    return f / jnp.sum(f, axis=axis, keepdims=True)
+
+
+def attention_decode_ref(q, k, v, scale=None, kv_len=None):
+    """Single-token decode attention.
+
+    q: [B, H, D]; k, v: [B, H, L, D]. Returns o: [B, H, D].
+    If kv_len is given, positions >= kv_len are masked out.
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = (1.0 / jnp.sqrt(d)).astype(q.dtype)
+    # x: [B, H, L] — the softmax input row per (batch, head).
+    x = jnp.einsum("bhd,bhld->bhl", q, k) * scale
+    if kv_len is not None:
+        idx = jnp.arange(k.shape[2])
+        x = jnp.where(idx[None, None, :] < kv_len, x, -jnp.inf)
+    p = softmax_ref(x, axis=-1)
+    return jnp.einsum("bhl,bhld->bhd", p, v)
+
+
+def attention_prefill_ref(q, k, v, scale=None):
+    """Causal self-attention. q,k,v: [B, H, S, D] -> [B, H, S, D]."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = (1.0 / jnp.sqrt(d)).astype(q.dtype)
+    s = q.shape[2]
+    x = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    x = jnp.where(mask[None, None], x, -jnp.inf)
+    p = softmax_ref(x, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v)
+
+
+def matmul_ref(x, w):
+    """[M, K] @ [K, N] in f32 accumulation."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def unified_softmax_attention_ref(q, k, v, phi, scale=None, kv_len=None):
+    """Oracle for the *unified max value* path (Eq. 3/4 of the paper).
+
+    Mathematically identical to attention_decode_ref for any phi (the
+    scaling factor cancels); kept separate so tests can also check the
+    intermediate accumulators' finiteness for in-range phi.
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = (1.0 / jnp.sqrt(d)).astype(q.dtype)
+    x = jnp.einsum("bhd,bhld->bhl", q, k) * scale
+    if kv_len is not None:
+        idx = jnp.arange(k.shape[2])
+        x = jnp.where(idx[None, None, :] < kv_len, x, -jnp.inf)
+    e = jnp.exp(x - phi)  # no per-row max: the unified scaling factor
+    num = jnp.einsum("bhl,bhld->bhd", e, v)
+    den = jnp.sum(e, axis=-1, keepdims=True)
+    return num / den

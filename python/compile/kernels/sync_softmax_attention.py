@@ -1,0 +1,92 @@
+# Baseline — synchronized partial softmax (paper §2.3, Figure 4(b)).
+#
+# This is the FlashAttention/FlashDecoding scheme: each KV chunk computes a
+# partial softmax with its own local max, and every new chunk *rescales*
+# the previous accumulators by e^{m_prev - m_new} (Eq. 2 of the paper) —
+# the synchronized update whose overhead (~18.8% of attention time on
+# Llama2-7B/A100, §2.3) motivates C1. Used as the correctness fallback and
+# the baseline for the claim_softmax_overhead bench.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_BIG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, kvlen_ref, o_ref,
+            acc_ref, den_ref, m_ref,
+            *, scale, block_l, num_chunks):
+    chunk = pl.program_id(2)
+    q = q_ref[0, 0, :].astype(jnp.float32)
+    k = k_ref[0, 0, :, :].astype(jnp.float32)
+    v = v_ref[0, 0, :, :].astype(jnp.float32)
+    kv_len = kvlen_ref[0]
+
+    @pl.when(chunk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+
+    idx = chunk * block_l + jax.lax.iota(jnp.int32, block_l)
+    x = jnp.dot(k, q) * scale
+    valid = idx < kv_len
+    x = jnp.where(valid, x, NEG_BIG)
+
+    # Synchronized update (Eq. 2): rescale previous partials by the new max.
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(x))
+    corr = jnp.exp(m_prev - m_new)
+    e = jnp.where(valid, jnp.exp(x - m_new), 0.0)
+    acc_ref[0, :] = acc_ref[0, :] * corr + jnp.dot(e, v)
+    den_ref[0, 0] = den_ref[0, 0] * corr + jnp.sum(e)
+    m_ref[0, 0] = m_new
+
+    @pl.when(chunk == num_chunks - 1)
+    def _finalize():
+        o_ref[0, 0, :] = (acc_ref[0, :] / den_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_l", "scale", "interpret"),
+)
+def sync_softmax_attention(q, k, v, kv_len, *, block_l=128, scale=None,
+                           interpret=True):
+    """Decode attention with the synchronized partial softmax (baseline).
+
+    q: [B, H, D]; k, v: [B, H, L, D]; kv_len: i32[B]. Returns o: [B, H, D].
+    """
+    batch, heads, d = q.shape
+    l = k.shape[2]
+    if l % block_l != 0:
+        block_l = min(block_l, l)
+        while l % block_l != 0:
+            block_l //= 2
+    num_chunks = l // block_l
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_l=block_l, num_chunks=num_chunks,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, heads, num_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b_, h, c: (b_, h, 0)),
+            pl.BlockSpec((1, 1, block_l, d), lambda b_, h, c: (b_, h, c, 0)),
+            pl.BlockSpec((1, 1, block_l, d), lambda b_, h, c: (b_, h, c, 0)),
+            pl.BlockSpec((1,), lambda b_, h, c: (b_,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b_, h, c: (b_, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((batch, heads, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, kv_len)

@@ -1,0 +1,281 @@
+# L2 — the JAX model: a Llama-2-style decoder-only transformer whose
+# decode path runs on the FlashDecoding++ kernels (C1 attention, C2/ImplA
+# linear layers) and whose prefill path uses the conventional schedule the
+# paper keeps for large-M shapes.
+#
+# Build-time only: `aot.py` lowers the entry points defined here to HLO
+# text; the Rust engine executes them via PJRT. Python never serves.
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.async_softmax_attention import async_softmax_attention
+from compile.kernels.async_softmax_prefill import async_softmax_prefill
+from compile.kernels.flat_gemm import flat_gemm, conventional_gemm
+from compile.kernels.gemv import gemv
+from compile.kernels import ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters (paper Table 2 shape, tiny scale)."""
+    name: str = "llama2-tiny"
+    vocab_size: int = 512          # byte-level tokens + specials, padded
+    dim: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    ffn_hidden: int = 512          # SwiGLU inner width
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # C1 parameters: unified scaling factor and safe window (paper §3).
+    phi: float = 0.0
+    softmax_a: float = -25.0
+    softmax_b: float = 18.0
+
+    @property
+    def head_dim(self):
+        return self.dim // self.n_heads
+
+    def linear_shapes(self):
+        """The four [N, K] linear shapes of Figure 9(a), fused-QKV."""
+        d, f = self.dim, self.ffn_hidden
+        return {
+            "qkv_proj": (3 * d, d),    # W_K,W_Q,W_V fused
+            "o_proj": (d, d),
+            "ffn1": (2 * f, d),        # gate+up fused
+            "ffn2": (d, f),
+        }
+
+
+TINY = ModelConfig()
+
+# Paper Table 2 configurations (consumed by the Rust analytic hwmodel; ffn
+# widths from the public model cards).
+PAPER_CONFIGS = {
+    "llama2-7b": dict(vocab_size=32000, dim=4096, n_layers=32, n_heads=32,
+                      ffn_hidden=11008, context=4096),
+    "llama2-13b": dict(vocab_size=32000, dim=5120, n_layers=40, n_heads=40,
+                       ffn_hidden=13824, context=4096),
+    "opt-6.7b": dict(vocab_size=50272, dim=4096, n_layers=32, n_heads=32,
+                     ffn_hidden=16384, context=2048),
+    "chatglm2-6b": dict(vocab_size=65024, dim=4096, n_layers=28, n_heads=32,
+                        ffn_hidden=13696, context=32768),
+}
+
+
+# --------------------------------------------------------------------------
+# Weights
+# --------------------------------------------------------------------------
+
+WEIGHT_ORDER = [
+    "embed",       # [V, D]
+    "wqkv",        # [L, D, 3D]
+    "wo",          # [L, D, D]
+    "w13",         # [L, D, 2F]  (gate+up fused)
+    "w2",          # [L, F, D]
+    "ln1",         # [L, D]
+    "ln2",         # [L, D]
+    "ln_f",        # [D]
+    "lm_head",     # [D, V]
+]
+
+
+def weight_shapes(cfg: ModelConfig):
+    d, f, l, v = cfg.dim, cfg.ffn_hidden, cfg.n_layers, cfg.vocab_size
+    return {
+        "embed": (v, d),
+        "wqkv": (l, d, 3 * d),
+        "wo": (l, d, d),
+        "w13": (l, d, 2 * f),
+        "w2": (l, f, d),
+        "ln1": (l, d),
+        "ln2": (l, d),
+        "ln_f": (d,),
+        "lm_head": (d, v),
+    }
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0):
+    """Deterministic synthetic weights, scaled for stable logits."""
+    key = jax.random.PRNGKey(seed)
+    ws = {}
+    for name, shape in weight_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.startswith("ln"):
+            ws[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            ws[name] = (jax.random.normal(sub, shape, jnp.float32)
+                        * (1.0 / jnp.sqrt(fan_in)))
+    return ws
+
+
+def weights_list(ws):
+    return [ws[n] for n in WEIGHT_ORDER]
+
+
+def weights_dict(args):
+    return dict(zip(WEIGHT_ORDER, args))
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps):
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * g).astype(x.dtype)
+
+
+def rope(x, pos, theta):
+    """Rotary embedding. x: [..., H, Dh]; pos: [...] (one per leading dim)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = pos[..., None].astype(jnp.float32) * freqs   # [..., half]
+    cos = jnp.cos(angles)[..., None, :]                    # [..., 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+def _linear_decode(x, w, impl, interpret):
+    """Flat linear for decode: x [B, K] @ w [K, N] routed per ImplKind."""
+    if impl == "gemv":
+        return gemv(x, w, interpret=interpret)
+    if impl == "flat":
+        return flat_gemm(x, w, interpret=interpret)
+    if impl == "conv":
+        return conventional_gemm(x, w, interpret=interpret)
+    if impl == "jnp":
+        return ref.matmul_ref(x, w)
+    raise ValueError(impl)
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, ws, tokens, pos, kcache, vcache, *,
+                impl="flat", attn="async", interpret=True):
+    """One decode step for a batch of sequences.
+
+    tokens: i32[B]; pos: i32[B] (write position per sequence, 0-based);
+    kcache/vcache: f32[Lyr, B, H, Lmax, Dh].
+    Returns (logits f32[B, V], kcache, vcache, recompute_flags f32[B]).
+    """
+    b = tokens.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = ws["embed"][tokens]                      # [B, D]
+    kv_len = (pos + 1).astype(jnp.int32)         # valid prefix per sequence
+    batch_idx = jnp.arange(b)
+
+    def layer(x, layer_ws):
+        wqkv, wo, w13, w2, ln1, ln2, kc, vc = layer_ws
+        xn = rmsnorm(x, ln1, cfg.norm_eps)
+        qkv = _linear_decode(xn, wqkv, impl, interpret)   # [B, 3D]
+        q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+        q = rope(q.reshape(b, h, dh), pos, cfg.rope_theta)
+        k_new = rope(k_new.reshape(b, h, dh), pos, cfg.rope_theta)
+        v_new = v_new.reshape(b, h, dh)
+        # scatter the new token into the cache at its per-sequence position
+        kc = kc.at[batch_idx, :, pos, :].set(k_new)       # [B, H, Lmax, Dh]
+        vc = vc.at[batch_idx, :, pos, :].set(v_new)
+        if attn == "async":
+            o, flags = async_softmax_attention(
+                q, kc, vc, kv_len, phi=cfg.phi,
+                a=cfg.softmax_a, b=cfg.softmax_b, interpret=interpret)
+        elif attn == "sync":
+            from compile.kernels.sync_softmax_attention import (
+                sync_softmax_attention)
+            o = sync_softmax_attention(q, kc, vc, kv_len, interpret=interpret)
+            flags = jnp.zeros((b, h), jnp.float32)
+        else:  # pure-jnp reference attention (oracle path)
+            o = jax.vmap(lambda qq, kk, vv, n: ref.attention_decode_ref(
+                qq[None], kk[None], vv[None], kv_len=n)[0],
+                in_axes=(0, 0, 0, 0))(q, kc, vc, kv_len)
+            flags = jnp.zeros((b, h), jnp.float32)
+        o = _linear_decode(o.reshape(b, h * dh), wo, impl, interpret)
+        x = x + o
+        xn = rmsnorm(x, ln2, cfg.norm_eps)
+        gu = _linear_decode(xn, w13, impl, interpret)     # [B, 2F]
+        g, u = jnp.split(gu, 2, axis=-1)
+        y = _linear_decode(jax.nn.silu(g) * u, w2, impl, interpret)
+        x = x + y
+        return x, (kc, vc, jnp.max(flags, axis=-1))
+
+    # Unrolled layer loop (n_layers is small; lets XLA fuse across layers).
+    kcs, vcs, flags = [], [], []
+    for li in range(cfg.n_layers):
+        x, (kc, vc, fl) = layer(
+            x, (ws["wqkv"][li], ws["wo"][li], ws["w13"][li], ws["w2"][li],
+                ws["ln1"][li], ws["ln2"][li], kcache[li], vcache[li]))
+        kcs.append(kc)
+        vcs.append(vc)
+        flags.append(fl)
+    x = rmsnorm(x, ws["ln_f"], cfg.norm_eps)
+    logits = ref.matmul_ref(x, ws["lm_head"])             # [B, V]
+    return (logits, jnp.stack(kcs), jnp.stack(vcs),
+            jnp.max(jnp.stack(flags), axis=0))
+
+
+def prefill(cfg: ModelConfig, ws, tokens, *, interpret=True,
+            return_scores=False, attn="pallas"):
+    """Prefill a single sequence. tokens: i32[1, S].
+
+    Returns (logits f32[S, V] for every position — the engine pads
+    prompts up to the bucket length and reads row len-1,
+    k f32[Lyr, 1, H, S, Dh], v likewise[, scores f32[Lyr, H, S, S]]).
+    """
+    _, s = tokens.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = ws["embed"][tokens[0]]                    # [S, D]
+    pos = jnp.arange(s)
+    scale = 1.0 / (dh ** 0.5)
+    ks, vs, scores_all = [], [], []
+
+    for li in range(cfg.n_layers):
+        xn = rmsnorm(x, ws["ln1"][li], cfg.norm_eps)
+        qkv = ref.matmul_ref(xn, ws["wqkv"][li])  # [S, 3D] — ImplC regime
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = rope(q.reshape(s, h, dh), pos, cfg.rope_theta)
+        k = rope(k.reshape(s, h, dh), pos, cfg.rope_theta)
+        v = v.reshape(s, h, dh)
+        qh = q.transpose(1, 0, 2)[None]           # [1, H, S, Dh]
+        kh = k.transpose(1, 0, 2)[None]
+        vh = v.transpose(1, 0, 2)[None]
+        if return_scores:
+            sc = jnp.einsum("bhsd,bhtd->bhst", qh, kh) * scale
+            scores_all.append(sc[0])
+        if attn == "pallas":
+            # C1 for prefill: unified-max causal attention kernel.
+            o, _ = async_softmax_prefill(
+                qh, kh, vh, phi=cfg.phi, a=cfg.softmax_a, b=cfg.softmax_b,
+                interpret=interpret)
+        else:
+            o = ref.attention_prefill_ref(qh, kh, vh)  # causal oracle
+        o = o[0].transpose(1, 0, 2).reshape(s, h * dh)
+        x = x + ref.matmul_ref(o, ws["wo"][li])
+        xn = rmsnorm(x, ws["ln2"][li], cfg.norm_eps)
+        g, u = jnp.split(ref.matmul_ref(xn, ws["w13"][li]), 2, axis=-1)
+        x = x + ref.matmul_ref(jax.nn.silu(g) * u, ws["w2"][li])
+        ks.append(kh)
+        vs.append(vh)
+
+    xf = rmsnorm(x, ws["ln_f"], cfg.norm_eps)
+    logits = ref.matmul_ref(xf, ws["lm_head"])    # [S, V]
+    k_out = jnp.stack(ks)                         # [Lyr, 1, H, S, Dh]
+    v_out = jnp.stack(vs)
+    if return_scores:
+        return logits, k_out, v_out, jnp.stack(scores_all)
+    return logits, k_out, v_out
+
+
+def micro_gemm(impl, *, interpret=True):
+    """Microkernel entry for the §5 decision flow: fn(x[m,k], w[k,n])."""
+    def fn(x, w):
+        return _linear_decode(x, w, impl, interpret)
+    return fn

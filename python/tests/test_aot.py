@@ -1,0 +1,114 @@
+# AOT pipeline: manifest consistency and HLO-text well-formedness.
+# These run against the generated artifacts/ when present (CI runs
+# `make artifacts` first); otherwise they validate the generator logic.
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+HAVE_ARTIFACTS = os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+def test_to_hlo_text_roundtrippable():
+    """The HLO text must parse as an HloModule header (the format the
+    rust side's HloModuleProto::from_text_file consumes)."""
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[2,2]" in text
+
+
+def test_choose_phi_centers_distribution():
+    cfg = M.ModelConfig(vocab_size=512, dim=64, n_layers=1, n_heads=2,
+                        ffn_hidden=128)
+    ws = M.init_weights(cfg)
+    phi, stats = aot.choose_phi(cfg, ws, seq=16, n_prompts=2)
+    assert stats["min"] <= phi <= stats["max"]
+    assert stats["count"] > 0
+    # the window must cover the observed extremes (paper §3 requirement)
+    assert stats["max"] - phi < cfg.softmax_b
+    assert stats["min"] - phi > cfg.softmax_a
+
+
+@pytest.mark.skipif(not HAVE_ARTIFACTS, reason="run `make artifacts` first")
+class TestManifest:
+    @classmethod
+    def setup_class(cls):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            cls.man = json.load(f)
+
+    def test_model_block_complete(self):
+        m = self.man["model"]
+        for key in ("name", "vocab_size", "dim", "n_layers", "n_heads",
+                    "head_dim", "ffn_hidden", "max_seq", "phi",
+                    "softmax_a", "softmax_b"):
+            assert key in m, key
+        assert m["dim"] == m["n_heads"] * m["head_dim"]
+
+    def test_all_entry_files_exist(self):
+        for e in self.man["entries"]:
+            path = os.path.join(ART, e["file"])
+            assert os.path.exists(path), e["name"]
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), e["name"]
+
+    def test_weight_files_match_shapes(self):
+        for w in self.man["weights"]:
+            arr = np.load(os.path.join(ART, w["file"]))
+            assert list(arr.shape) == w["shape"], w["name"]
+            assert str(arr.dtype) == w["dtype"], w["name"]
+
+    def test_decode_buckets_present(self):
+        names = {e["name"] for e in self.man["entries"]}
+        for b in aot.DECODE_BATCHES:
+            assert f"decode_b{b}" in names
+        for b in aot.SYNC_BATCHES:
+            assert f"decode_b{b}_sync" in names
+            assert f"decode_b{b}_jnpattn" in names
+        for s in aot.PREFILL_SEQS:
+            assert f"prefill_s{s}" in names
+        assert f"prefill_scores_s{aot.SCORES_SEQ}" in names
+
+    def test_entry_input_counts(self):
+        n_w = len(self.man["weight_order"])
+        for e in self.man["entries"]:
+            if e["kind"] == "decode":
+                assert len(e["inputs"]) == n_w + 4, e["name"]
+                assert e["num_outputs"] == 4
+            elif e["kind"] in ("prefill", "scores"):
+                assert len(e["inputs"]) == n_w + 1, e["name"]
+            elif e["kind"] == "micro":
+                assert len(e["inputs"]) == 2
+                assert not e["takes_weights"]
+
+    def test_decode_cache_shapes_consistent(self):
+        m = self.man["model"]
+        for e in self.man["entries"]:
+            if e["kind"] != "decode":
+                continue
+            b = e["params"]["batch"]
+            cache = e["inputs"][-1]["shape"]
+            assert cache == [m["n_layers"], b, m["n_heads"], m["max_seq"],
+                             m["head_dim"]], e["name"]
+
+    def test_linear_shapes_block(self):
+        ls = self.man["linear_shapes"]
+        assert set(ls) == {"qkv_proj", "o_proj", "ffn1", "ffn2"}
+        m = self.man["model"]
+        assert ls["qkv_proj"] == [3 * m["dim"], m["dim"]]
+
+    def test_softmax_stats_recorded(self):
+        s = self.man["softmax_input_stats"]
+        assert s["min"] < s["max"]
+        assert s["count"] > 1000
+        # phi within the observed range (paper §3 insight: x_i is
+        # concentrated in a narrow static range)
+        assert s["min"] <= self.man["model"]["phi"] <= s["max"]

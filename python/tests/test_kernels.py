@@ -1,0 +1,337 @@
+# L1 correctness: every Pallas kernel vs the pure-jnp oracle in ref.py.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.async_softmax_attention import async_softmax_attention
+from compile.kernels.sync_softmax_attention import sync_softmax_attention
+from compile.kernels.flat_gemm import flat_gemm, conventional_gemm
+from compile.kernels.gemv import gemv
+from compile.kernels import ref
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# C1: asynchronized softmax attention
+# ---------------------------------------------------------------------------
+
+class TestAsyncSoftmaxAttention:
+    @pytest.mark.parametrize("b,h,l,d", [
+        (1, 1, 128, 64), (2, 4, 256, 64), (1, 4, 512, 32),
+        (4, 2, 256, 128), (8, 4, 128, 64),
+    ])
+    def test_matches_oracle(self, b, h, l, d):
+        q = rand(0, (b, h, d))
+        k = rand(1, (b, h, l, d))
+        v = rand(2, (b, h, l, d))
+        kv_len = jnp.full((b,), l, jnp.int32)
+        o, flags = async_softmax_attention(q, k, v, kv_len)
+        want = ref.attention_decode_ref(q, k, v, kv_len=l)
+        np.testing.assert_allclose(o, want, atol=2e-5, rtol=2e-5)
+        assert float(flags.sum()) == 0.0  # unit-scale inputs: no recompute
+
+    @pytest.mark.parametrize("kv_len", [1, 7, 100, 129, 255, 256])
+    def test_masking_partial_kv(self, kv_len):
+        b, h, l, d = 2, 2, 256, 64
+        q = rand(3, (b, h, d))
+        k = rand(4, (b, h, l, d))
+        v = rand(5, (b, h, l, d))
+        lens = jnp.full((b,), kv_len, jnp.int32)
+        o, _ = async_softmax_attention(q, k, v, lens)
+        want = ref.attention_decode_ref(q, k, v, kv_len=kv_len)
+        np.testing.assert_allclose(o, want, atol=2e-5, rtol=2e-5)
+
+    def test_per_sequence_kv_len(self):
+        """Continuous batching: every sequence has its own valid prefix."""
+        b, h, l, d = 4, 2, 128, 64
+        q = rand(6, (b, h, d))
+        k = rand(7, (b, h, l, d))
+        v = rand(8, (b, h, l, d))
+        lens = jnp.array([1, 33, 100, 128], jnp.int32)
+        o, _ = async_softmax_attention(q, k, v, lens)
+        for i, n in enumerate([1, 33, 100, 128]):
+            want = ref.attention_decode_ref(
+                q[i:i+1], k[i:i+1], v[i:i+1], kv_len=n)
+            np.testing.assert_allclose(o[i:i+1], want, atol=2e-5, rtol=2e-5)
+
+    def test_overflow_triggers_recompute_path(self):
+        """Rows whose max leaves (a, b) must fall back (paper §3) and
+        still be exact."""
+        b, h, l, d = 2, 4, 256, 64
+        q = rand(9, (b, h, d), scale=40.0)  # huge logits -> m - phi > b
+        k = rand(10, (b, h, l, d))
+        v = rand(11, (b, h, l, d))
+        lens = jnp.full((b,), l, jnp.int32)
+        o, flags = async_softmax_attention(q, k, v, lens, phi=0.0, b=15.0)
+        want = ref.attention_decode_ref(q, k, v, kv_len=l)
+        np.testing.assert_allclose(o, want, atol=2e-5, rtol=2e-5)
+        assert float(flags.sum()) > 0  # at least one row recomputed
+
+    def test_phi_invariance(self):
+        """Eq. 3: any in-range phi gives the same softmax."""
+        b, h, l, d = 1, 2, 128, 64
+        q = rand(12, (b, h, d))
+        k = rand(13, (b, h, l, d))
+        v = rand(14, (b, h, l, d))
+        lens = jnp.full((b,), l, jnp.int32)
+        outs = [async_softmax_attention(q, k, v, lens, phi=p)[0]
+                for p in (-2.0, 0.0, 3.0)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], atol=2e-5, rtol=2e-5)
+
+    def test_unified_ref_equals_stable_ref(self):
+        """The unified-max oracle itself is exact for in-range phi."""
+        q = rand(15, (2, 2, 64))
+        k = rand(16, (2, 2, 128, 64))
+        v = rand(17, (2, 2, 128, 64))
+        a = ref.unified_softmax_attention_ref(q, k, v, phi=1.0)
+        b_ = ref.attention_decode_ref(q, k, v)
+        np.testing.assert_allclose(a, b_, atol=1e-5, rtol=1e-5)
+
+    @pytest.mark.parametrize("block_l", [32, 64, 128, 256])
+    def test_block_size_invariance(self, block_l):
+        b, h, l, d = 2, 2, 256, 64
+        q = rand(18, (b, h, d))
+        k = rand(19, (b, h, l, d))
+        v = rand(20, (b, h, l, d))
+        lens = jnp.full((b,), 200, jnp.int32)
+        o, _ = async_softmax_attention(q, k, v, lens, block_l=block_l)
+        want = ref.attention_decode_ref(q, k, v, kv_len=200)
+        np.testing.assert_allclose(o, want, atol=2e-5, rtol=2e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 4), h=st.sampled_from([1, 2, 4]),
+        l=st.sampled_from([64, 128, 192, 256]),
+        d=st.sampled_from([32, 64]),
+        seed=st.integers(0, 2**16),
+        scale=st.sampled_from([0.1, 1.0, 5.0]),
+    )
+    def test_hypothesis_sweep(self, b, h, l, d, seed, scale):
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        q = jax.random.normal(k1, (b, h, d)) * scale
+        k = jax.random.normal(k2, (b, h, l, d))
+        v = jax.random.normal(k3, (b, h, l, d))
+        lens = jax.random.randint(k4, (b,), 1, l + 1).astype(jnp.int32)
+        o, _ = async_softmax_attention(q, k, v, lens)
+        for i in range(b):
+            want = ref.attention_decode_ref(
+                q[i:i+1], k[i:i+1], v[i:i+1], kv_len=int(lens[i]))
+            np.testing.assert_allclose(o[i:i+1], want, atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# Baseline: synchronized partial softmax
+# ---------------------------------------------------------------------------
+
+class TestSyncSoftmaxAttention:
+    @pytest.mark.parametrize("b,h,l,d", [(1, 1, 128, 64), (2, 4, 256, 64)])
+    def test_matches_oracle(self, b, h, l, d):
+        q = rand(21, (b, h, d))
+        k = rand(22, (b, h, l, d))
+        v = rand(23, (b, h, l, d))
+        o = sync_softmax_attention(q, k, v, jnp.full((b,), l, jnp.int32))
+        want = ref.attention_decode_ref(q, k, v, kv_len=l)
+        np.testing.assert_allclose(o, want, atol=2e-5, rtol=2e-5)
+
+    def test_extreme_values_safe(self):
+        """The synchronized scheme must be exact even at huge logits —
+        it is the fallback the async path relies on."""
+        b, h, l, d = 1, 2, 128, 64
+        q = rand(24, (b, h, d), scale=100.0)
+        k = rand(25, (b, h, l, d))
+        v = rand(26, (b, h, l, d))
+        o = sync_softmax_attention(q, k, v, jnp.full((b,), l, jnp.int32))
+        want = ref.attention_decode_ref(q, k, v, kv_len=l)
+        np.testing.assert_allclose(o, want, atol=2e-5, rtol=2e-5)
+
+    def test_agrees_with_async(self):
+        b, h, l, d = 2, 2, 256, 64
+        q = rand(27, (b, h, d))
+        k = rand(28, (b, h, l, d))
+        v = rand(29, (b, h, l, d))
+        lens = jnp.full((b,), 180, jnp.int32)
+        o_sync = sync_softmax_attention(q, k, v, lens)
+        o_async, _ = async_softmax_attention(q, k, v, lens)
+        np.testing.assert_allclose(o_sync, o_async, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# C2 / ImplA / ImplC: GEMM kernels
+# ---------------------------------------------------------------------------
+
+GEMM_SHAPES = [
+    (1, 256, 768),    # tiny-model qkv, M=1 (GEMV regime)
+    (4, 256, 256),    # o_proj, small batch
+    (8, 256, 1024),   # ffn1 at the paper's pad-to-8 boundary
+    (3, 512, 512),    # M not a multiple of 8 -> padding correctness
+    (8, 1000, 300),   # K, N not multiples of the block sizes
+    (16, 256, 512),
+]
+
+
+class TestFlatGemm:
+    @pytest.mark.parametrize("m,k,n", GEMM_SHAPES)
+    def test_matches_oracle(self, m, k, n):
+        x = rand(30 + m, (m, k))
+        w = rand(60 + n % 7, (k, n))
+        np.testing.assert_allclose(
+            flat_gemm(x, w), ref.matmul_ref(x, w), atol=1e-4, rtol=1e-4)
+
+    @pytest.mark.parametrize("block_n,block_k", [(64, 64), (128, 128),
+                                                 (256, 64), (32, 256)])
+    def test_tile_invariance(self, block_n, block_k):
+        x = rand(40, (8, 512))
+        w = rand(41, (512, 1024))
+        got = flat_gemm(x, w, block_n=block_n, block_k=block_k)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_m_padding_zero_rows_dont_leak(self):
+        """Padded rows must not influence the real rows."""
+        x = rand(42, (2, 256))
+        w = rand(43, (256, 512))
+        got2 = flat_gemm(x, w)
+        got8 = flat_gemm(jnp.pad(x, ((0, 6), (0, 0))), w)[:2]
+        np.testing.assert_allclose(got2, got8, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 16), k=st.sampled_from([128, 256, 384, 1000]),
+           n=st.sampled_from([128, 300, 512, 1024]), seed=st.integers(0, 999))
+    def test_hypothesis_sweep(self, m, k, n, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        x = jax.random.normal(k1, (m, k))
+        w = jax.random.normal(k2, (k, n))
+        np.testing.assert_allclose(
+            flat_gemm(x, w), ref.matmul_ref(x, w), atol=2e-4, rtol=2e-4)
+
+
+class TestConventionalGemm:
+    @pytest.mark.parametrize("m,k,n", [(64, 256, 512), (100, 300, 200),
+                                       (128, 256, 768), (7, 256, 256)])
+    def test_matches_oracle(self, m, k, n):
+        x = rand(50, (m, k))
+        w = rand(51, (k, n))
+        np.testing.assert_allclose(
+            conventional_gemm(x, w), ref.matmul_ref(x, w),
+            atol=2e-4, rtol=2e-4)
+
+
+class TestGemv:
+    @pytest.mark.parametrize("m,k,n", [(1, 256, 768), (1, 1024, 512),
+                                       (2, 256, 256), (4, 300, 1000)])
+    def test_matches_oracle(self, m, k, n):
+        x = rand(52, (m, k))
+        w = rand(53, (k, n))
+        np.testing.assert_allclose(
+            gemv(x, w), ref.matmul_ref(x, w), atol=1e-4, rtol=1e-4)
+
+    def test_all_impls_agree(self):
+        x = rand(54, (4, 512))
+        w = rand(55, (512, 768))
+        a = gemv(x, w)
+        b = flat_gemm(x, w)
+        c = conventional_gemm(x, w)
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(b, c, atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ref.py self-consistency
+# ---------------------------------------------------------------------------
+
+class TestRef:
+    def test_softmax_ref_sums_to_one(self):
+        x = rand(56, (4, 100))
+        p = ref.softmax_ref(x)
+        np.testing.assert_allclose(p.sum(-1), np.ones(4), atol=1e-6)
+
+    def test_softmax_ref_invariant_to_shift(self):
+        x = rand(57, (2, 64))
+        np.testing.assert_allclose(ref.softmax_ref(x),
+                                   ref.softmax_ref(x + 5.0), atol=1e-6)
+
+    def test_prefill_ref_is_causal(self):
+        """Future tokens must not affect earlier outputs."""
+        b, h, s, d = 1, 2, 16, 32
+        q = rand(58, (b, h, s, d))
+        k = rand(59, (b, h, s, d))
+        v = rand(60, (b, h, s, d))
+        o_full = ref.attention_prefill_ref(q, k, v)
+        o_half = ref.attention_prefill_ref(
+            q[:, :, :8], k[:, :, :8], v[:, :, :8])
+        np.testing.assert_allclose(o_full[:, :, :8], o_half,
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# C1 prefill: unified-max causal attention
+# ---------------------------------------------------------------------------
+
+from compile.kernels.async_softmax_prefill import async_softmax_prefill  # noqa: E402
+
+
+class TestAsyncSoftmaxPrefill:
+    @pytest.mark.parametrize("b,h,s,d", [
+        (1, 1, 32, 32), (2, 2, 64, 32), (1, 4, 128, 64), (2, 1, 16, 64),
+    ])
+    def test_matches_oracle(self, b, h, s, d):
+        q = rand(70, (b, h, s, d))
+        k = rand(71, (b, h, s, d))
+        v = rand(72, (b, h, s, d))
+        o, flags = async_softmax_prefill(q, k, v)
+        want = ref.attention_prefill_ref(q, k, v)
+        np.testing.assert_allclose(o, want, atol=2e-5, rtol=2e-5)
+        assert float(flags.sum()) == 0.0
+
+    @pytest.mark.parametrize("block_q,block_kv", [(8, 8), (16, 64), (64, 16)])
+    def test_block_invariance(self, block_q, block_kv):
+        q = rand(73, (1, 2, 64, 32))
+        k = rand(74, (1, 2, 64, 32))
+        v = rand(75, (1, 2, 64, 32))
+        o, _ = async_softmax_prefill(q, k, v, block_q=block_q,
+                                     block_kv=block_kv)
+        want = ref.attention_prefill_ref(q, k, v)
+        np.testing.assert_allclose(o, want, atol=2e-5, rtol=2e-5)
+
+    def test_overflow_fallback_exact(self):
+        q = rand(76, (1, 2, 64, 32), scale=50.0)
+        k = rand(77, (1, 2, 64, 32))
+        v = rand(78, (1, 2, 64, 32))
+        o, flags = async_softmax_prefill(q, k, v, phi=0.0, b=15.0)
+        want = ref.attention_prefill_ref(q, k, v)
+        np.testing.assert_allclose(o, want, atol=3e-5, rtol=3e-5)
+        assert float(flags.sum()) > 0
+
+    def test_causality(self):
+        """Perturbing future K/V must not change earlier outputs."""
+        q = rand(79, (1, 1, 64, 32))
+        k = rand(80, (1, 1, 64, 32))
+        v = rand(81, (1, 1, 64, 32))
+        o1, _ = async_softmax_prefill(q, k, v)
+        k2 = k.at[:, :, 32:, :].add(5.0)
+        v2 = v.at[:, :, 32:, :].add(-3.0)
+        o2, _ = async_softmax_prefill(q, k2, v2)
+        np.testing.assert_allclose(o1[:, :, :32], o2[:, :, :32],
+                                   atol=1e-6, rtol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(s=st.sampled_from([16, 32, 48, 64]), d=st.sampled_from([32, 64]),
+           seed=st.integers(0, 999))
+    def test_hypothesis_sweep(self, s, d, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        q = jax.random.normal(k1, (1, 2, s, d))
+        k = jax.random.normal(k2, (1, 2, s, d))
+        v = jax.random.normal(k3, (1, 2, s, d))
+        o, _ = async_softmax_prefill(q, k, v)
+        want = ref.attention_prefill_ref(q, k, v)
+        np.testing.assert_allclose(o, want, atol=5e-5, rtol=5e-5)

@@ -1,0 +1,165 @@
+# L2 correctness: the transformer entry points.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab_size=512, dim=128, n_layers=2, n_heads=2,
+                    ffn_hidden=256)
+WS = M.init_weights(CFG, seed=0)
+LMAX = 64
+
+
+def make_cache(b):
+    shape = (CFG.n_layers, b, CFG.n_heads, LMAX, CFG.head_dim)
+    return jnp.zeros(shape), jnp.zeros(shape)
+
+
+def prime_cache_from_prefill(kc, vc, k, v, lane, length):
+    """Insert prefill KV [Lyr,1,H,S,Dh] into decode cache lane."""
+    kc = kc.at[:, lane, :, :length, :].set(k[:, 0, :, :length, :])
+    vc = vc.at[:, lane, :, :length, :].set(v[:, 0, :, :length, :])
+    return kc, vc
+
+
+class TestPrefillDecodeConsistency:
+    def test_decode_continues_prefill(self):
+        """Prefill n tokens, then decode token n; logits must equal a
+        prefill over n+1 tokens at the last position."""
+        toks = jax.random.randint(jax.random.PRNGKey(0), (1, 9), 0,
+                                  CFG.vocab_size)
+        full_logits, _, _ = M.prefill(CFG, WS, toks)
+        # prefill first 8, then decode token 8
+        lg8, k8, v8 = M.prefill(CFG, WS, toks[:, :8])
+        kc, vc = make_cache(1)
+        kc, vc = prime_cache_from_prefill(kc, vc, k8, v8, 0, 8)
+        logits, _, _, flags = M.decode_step(
+            CFG, WS, toks[0, 8:9], jnp.array([8], jnp.int32), kc, vc,
+            impl="flat", attn="async")
+        np.testing.assert_allclose(
+            logits[0], full_logits[8], atol=2e-4, rtol=2e-4)
+
+    def test_multi_step_decode_matches_prefill(self):
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
+                                  CFG.vocab_size)
+        full_logits, _, _ = M.prefill(CFG, WS, toks)
+        lg, k, v = M.prefill(CFG, WS, toks[:, :8])
+        kc, vc = make_cache(1)
+        kc, vc = prime_cache_from_prefill(kc, vc, k, v, 0, 8)
+        for t in range(8, 12):
+            logits, kc, vc, _ = M.decode_step(
+                CFG, WS, toks[0, t:t+1], jnp.array([t], jnp.int32), kc, vc)
+            np.testing.assert_allclose(
+                logits[0], full_logits[t], atol=5e-4, rtol=5e-4,
+                err_msg=f"step {t}")
+
+    @pytest.mark.parametrize("impl", ["gemv", "flat", "conv", "jnp"])
+    def test_impl_variants_agree(self, impl):
+        """C3: every GEMM implementation must produce the same logits."""
+        toks = jnp.array([3], jnp.int32)
+        kc, vc = make_cache(1)
+        ref_logits, _, _, _ = M.decode_step(
+            CFG, WS, toks, jnp.array([0], jnp.int32), kc, vc, impl="jnp",
+            attn="jnp")
+        logits, _, _, _ = M.decode_step(
+            CFG, WS, toks, jnp.array([0], jnp.int32), kc, vc, impl=impl,
+            attn="async")
+        np.testing.assert_allclose(logits, ref_logits, atol=2e-4, rtol=2e-4)
+
+    def test_sync_and_async_attention_agree(self):
+        toks = jax.random.randint(jax.random.PRNGKey(2), (1, 10), 0,
+                                  CFG.vocab_size)
+        _, k, v = M.prefill(CFG, WS, toks)
+        kc, vc = make_cache(2)
+        kc, vc = prime_cache_from_prefill(kc, vc, k, v, 0, 10)
+        args = (CFG, WS, jnp.array([7, 0], jnp.int32),
+                jnp.array([10, 0], jnp.int32), kc, vc)
+        la, _, _, _ = M.decode_step(*args, attn="async")
+        ls, _, _, _ = M.decode_step(*args, attn="sync")
+        np.testing.assert_allclose(la, ls, atol=2e-4, rtol=2e-4)
+
+    def test_batched_decode_lanes_independent(self):
+        """A lane's logits must not depend on other lanes' content."""
+        toks = jax.random.randint(jax.random.PRNGKey(3), (1, 6), 0,
+                                  CFG.vocab_size)
+        _, k, v = M.prefill(CFG, WS, toks)
+        # lane 0 alone
+        kc1, vc1 = make_cache(1)
+        kc1, vc1 = prime_cache_from_prefill(kc1, vc1, k, v, 0, 6)
+        solo, _, _, _ = M.decode_step(
+            CFG, WS, jnp.array([5], jnp.int32), jnp.array([6], jnp.int32),
+            kc1, vc1)
+        # lane 0 with a noisy lane 1
+        kc2, vc2 = make_cache(2)
+        kc2, vc2 = prime_cache_from_prefill(kc2, vc2, k, v, 0, 6)
+        kc2 = kc2.at[:, 1].set(
+            jax.random.normal(jax.random.PRNGKey(4), kc2[:, 1].shape))
+        duo, _, _, _ = M.decode_step(
+            CFG, WS, jnp.array([5, 9], jnp.int32),
+            jnp.array([6, 3], jnp.int32), kc2, vc2)
+        np.testing.assert_allclose(duo[0], solo[0], atol=1e-4, rtol=1e-4)
+
+
+class TestCacheWrite:
+    def test_decode_writes_kv_at_position(self):
+        kc, vc = make_cache(1)
+        _, kc2, vc2, _ = M.decode_step(
+            CFG, WS, jnp.array([42], jnp.int32), jnp.array([5], jnp.int32),
+            kc, vc)
+        # position 5 must now be non-zero, all others untouched (zero)
+        assert float(jnp.abs(kc2[:, 0, :, 5, :]).sum()) > 0
+        untouched = jnp.concatenate(
+            [kc2[:, 0, :, :5, :], kc2[:, 0, :, 6:, :]], axis=2)
+        assert float(jnp.abs(untouched).sum()) == 0.0
+
+    def test_per_lane_positions(self):
+        kc, vc = make_cache(2)
+        _, kc2, _, _ = M.decode_step(
+            CFG, WS, jnp.array([1, 2], jnp.int32),
+            jnp.array([3, 7], jnp.int32), kc, vc)
+        assert float(jnp.abs(kc2[:, 0, :, 3, :]).sum()) > 0
+        assert float(jnp.abs(kc2[:, 1, :, 7, :]).sum()) > 0
+        assert float(jnp.abs(kc2[:, 0, :, 7, :]).sum()) == 0.0
+
+
+class TestScores:
+    def test_prefill_scores_shape_and_causality_irrelevant(self):
+        toks = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 0,
+                                  CFG.vocab_size)
+        _, _, _, scores = M.prefill(CFG, WS, toks, return_scores=True)
+        assert scores.shape == (CFG.n_layers, CFG.n_heads, 8, 8)
+        assert bool(jnp.all(jnp.isfinite(scores)))
+
+    def test_rope_positions_matter(self):
+        """Same token at different positions must produce different KV."""
+        kc, vc = make_cache(1)
+        _, ka, _, _ = M.decode_step(
+            CFG, WS, jnp.array([7], jnp.int32), jnp.array([0], jnp.int32),
+            kc, vc)
+        _, kb, _, _ = M.decode_step(
+            CFG, WS, jnp.array([7], jnp.int32), jnp.array([9], jnp.int32),
+            kc, vc)
+        a = ka[:, 0, :, 0, :]
+        b = kb[:, 0, :, 9, :]
+        assert float(jnp.abs(a - b).max()) > 1e-4
+
+
+class TestWeights:
+    def test_weight_shapes_match_spec(self):
+        shapes = M.weight_shapes(CFG)
+        for name, arr in WS.items():
+            assert tuple(arr.shape) == shapes[name], name
+
+    def test_weights_deterministic(self):
+        w2 = M.init_weights(CFG, seed=0)
+        for name in M.WEIGHT_ORDER:
+            np.testing.assert_array_equal(WS[name], w2[name])
+
+    def test_weights_list_order(self):
+        lst = M.weights_list(WS)
+        assert len(lst) == len(M.WEIGHT_ORDER)
+        back = M.weights_dict(lst)
+        for name in M.WEIGHT_ORDER:
+            np.testing.assert_array_equal(back[name], WS[name])

@@ -1,0 +1,86 @@
+//! Figure 10 — decode-phase speedup on NVIDIA GPUs (A100, RTX3090).
+//! Grid: 4 models x (batch size, input length) vs 7 engines; bars are
+//! speedup over HuggingFace. Blank bars (n/a) where an engine does not
+//! support a model (OpenPPL on OPT/ChatGLM2) — same as the paper.
+//! Ends with the abstract's aggregate claims.
+
+use fdpp::baselines::{EngineKind, EngineModel};
+use fdpp::bench_support::{banner, geomean};
+use fdpp::config::paper_models;
+use fdpp::hwmodel::{a100, rtx3090, GpuProfile};
+
+fn grid_for(model_ctx: usize) -> Vec<(usize, usize)> {
+    // (batch, input len) pairs, bounded by the model's context.
+    [(1, 128), (1, 512), (1, 1024), (1, 8192), (8, 1024), (32, 512), (64, 256)]
+        .into_iter()
+        .filter(|&(_, l)| l <= model_ctx)
+        .collect()
+}
+
+fn run_gpu(gpu: &GpuProfile) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let engines = EngineKind::all();
+    let mut vs_hf_pp = vec![];
+    let mut vs_fd_pp = vec![];
+    let mut per_engine_speedups: Vec<Vec<f64>> = vec![vec![]; engines.len()];
+
+    for model in paper_models() {
+        println!("\n[{} on {}]", model.name, gpu.name);
+        print!("{:<18}", "engine \\ (bs,len)");
+        let grid = grid_for(model.context);
+        for (b, l) in &grid {
+            print!("{:>12}", format!("({b},{l})"));
+        }
+        println!();
+        let hf = EngineModel::new(EngineKind::HuggingFace);
+        for (ei, kind) in engines.iter().enumerate() {
+            print!("{:<18}", kind.as_str());
+            if !kind.supports(&model) {
+                for _ in &grid {
+                    print!("{:>12}", "-");
+                }
+                println!();
+                continue;
+            }
+            let e = EngineModel::new(*kind);
+            for &(b, l) in &grid {
+                let sp = hf.decode_token_time(&model, gpu, b, l)
+                    / e.decode_token_time(&model, gpu, b, l);
+                print!("{sp:>11.2}x");
+                per_engine_speedups[ei].push(sp);
+                if *kind == EngineKind::FlashDecodingPP {
+                    vs_hf_pp.push(sp);
+                    let fd = EngineModel::new(EngineKind::FlashDecoding)
+                        .decode_token_time(&model, gpu, b, l);
+                    vs_fd_pp.push(fd / e.decode_token_time(&model, gpu, b, l));
+                }
+            }
+            println!();
+        }
+    }
+    let max_hf = vs_hf_pp.iter().cloned().fold(0.0, f64::max);
+    (vs_hf_pp, vs_fd_pp, vec![max_hf])
+}
+
+fn main() {
+    banner(
+        "Figure 10",
+        "decode speedup vs HuggingFace on NVIDIA GPUs (rows: engines)",
+    );
+    let mut all_hf = vec![];
+    let mut all_fd = vec![];
+    for gpu in [a100(), rtx3090()] {
+        let (hf, fd, _) = run_gpu(&gpu);
+        all_hf.extend(hf);
+        all_fd.extend(fd);
+    }
+    banner("Figure 10 aggregate", "abstract claims (NVIDIA)");
+    println!(
+        "FlashDecoding++ vs HuggingFace : max {:.2}x, geomean {:.2}x   (paper: up to 4.86x)",
+        all_hf.iter().cloned().fold(0.0f64, f64::max),
+        geomean(&all_hf)
+    );
+    println!(
+        "FlashDecoding++ vs FlashDecoding: geomean {:.2}x              (paper: avg 1.37x on A100)",
+        geomean(&all_fd)
+    );
+}

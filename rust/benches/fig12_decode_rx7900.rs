@@ -1,0 +1,44 @@
+//! Figure 12 — decode-phase speedup on AMD RX7900XTX.
+//! The AMD comparison set is HuggingFace vs FlashDecoding++ (the paper's
+//! AMD figures compare against HF, the strongest baseline that runs on
+//! ROCm for all four models).
+
+use fdpp::baselines::{EngineKind, EngineModel};
+use fdpp::bench_support::{banner, geomean};
+use fdpp::config::paper_models;
+use fdpp::hwmodel::rx7900xtx;
+
+fn main() {
+    banner("Figure 12", "decode speedup vs HuggingFace on AMD RX7900XTX");
+    let gpu = rx7900xtx();
+    let grid = [(1usize, 128usize), (1, 512), (1, 1024), (8, 512), (32, 256)];
+    let mut pp = vec![];
+    for model in paper_models() {
+        println!("\n[{}]", model.name);
+        print!("{:<18}", "engine \\ (bs,len)");
+        let g: Vec<_> = grid.iter().filter(|&&(_, l)| l <= model.context).collect();
+        for (b, l) in &g {
+            print!("{:>12}", format!("({b},{l})"));
+        }
+        println!();
+        let hf = EngineModel::new(EngineKind::HuggingFace);
+        for kind in [EngineKind::HuggingFace, EngineKind::FlashDecodingPP] {
+            print!("{:<18}", kind.as_str());
+            let e = EngineModel::new(kind);
+            for &&(b, l) in &g {
+                let sp =
+                    hf.decode_token_time(&model, &gpu, b, l) / e.decode_token_time(&model, &gpu, b, l);
+                print!("{sp:>11.2}x");
+                if kind == EngineKind::FlashDecodingPP {
+                    pp.push(sp);
+                }
+            }
+            println!();
+        }
+    }
+    println!(
+        "\nFlashDecoding++ vs HF on RX7900XTX: max {:.2}x, geomean {:.2}x   (paper: up to 2.18x on AMD)",
+        pp.iter().cloned().fold(0.0f64, f64::max),
+        geomean(&pp)
+    );
+}

@@ -1,0 +1,42 @@
+//! Figure 13 — decode-phase speedup on AMD MI210 (same protocol as
+//! Figure 12 on the datacenter AMD part).
+
+use fdpp::baselines::{EngineKind, EngineModel};
+use fdpp::bench_support::{banner, geomean};
+use fdpp::config::paper_models;
+use fdpp::hwmodel::mi210;
+
+fn main() {
+    banner("Figure 13", "decode speedup vs HuggingFace on AMD MI210");
+    let gpu = mi210();
+    let grid = [(1usize, 128usize), (1, 512), (1, 1024), (1, 2048), (8, 1024), (32, 512)];
+    let mut pp = vec![];
+    for model in paper_models() {
+        println!("\n[{}]", model.name);
+        print!("{:<18}", "engine \\ (bs,len)");
+        let g: Vec<_> = grid.iter().filter(|&&(_, l)| l <= model.context).collect();
+        for (b, l) in &g {
+            print!("{:>12}", format!("({b},{l})"));
+        }
+        println!();
+        let hf = EngineModel::new(EngineKind::HuggingFace);
+        for kind in [EngineKind::HuggingFace, EngineKind::FlashDecodingPP] {
+            print!("{:<18}", kind.as_str());
+            let e = EngineModel::new(kind);
+            for &&(b, l) in &g {
+                let sp =
+                    hf.decode_token_time(&model, &gpu, b, l) / e.decode_token_time(&model, &gpu, b, l);
+                print!("{sp:>11.2}x");
+                if kind == EngineKind::FlashDecodingPP {
+                    pp.push(sp);
+                }
+            }
+            println!();
+        }
+    }
+    println!(
+        "\nFlashDecoding++ vs HF on MI210: max {:.2}x, geomean {:.2}x   (paper: up to 2.18x on AMD)",
+        pp.iter().cloned().fold(0.0f64, f64::max),
+        geomean(&pp)
+    );
+}

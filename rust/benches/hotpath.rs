@@ -1,0 +1,92 @@
+//! L3 hot-path profile (perf pass, EXPERIMENTS.md §Perf): breaks one
+//! decode step into its host-side components so the optimization loop
+//! can see where non-PJRT time goes.
+//!
+//! Components measured:
+//!   - literal creation for tokens/positions
+//!   - dense KV gather (paged store -> batch tensor, composition change)
+//!   - dense KV literal creation
+//!   - PJRT execute (decode_b{B})
+//!   - logits host readback + sampling
+
+use fdpp::bench_support::banner;
+use fdpp::kvcache::{KvCache, KvGeometry};
+use fdpp::runtime::{literal_f32, literal_i32, to_vec_f32, Runtime};
+use fdpp::sampling::{argmax, Sampler, SamplingParams};
+use fdpp::util::bench::{bench, black_box};
+use fdpp::util::rng::Rng;
+
+fn main() -> fdpp::Result<()> {
+    banner("hotpath", "decode-step component breakdown (real CPU PJRT)");
+    let mut rt = Runtime::load("artifacts")?;
+    let m = rt.manifest.model.clone();
+    let geo = KvGeometry {
+        n_layers: m.n_layers,
+        n_heads: m.n_heads,
+        head_dim: m.head_dim,
+        block_tokens: 16,
+        max_seq: m.max_seq,
+    };
+
+    for &b in &[1usize, 4, 8] {
+        println!("\n-- bucket B={b} --");
+        let entry = format!("decode_b{b}");
+        rt.ensure_compiled(&entry)?;
+
+        // Populate a paged store with b sequences of ~64 tokens.
+        let mut kv = KvCache::new(geo, 256);
+        let mut rng = Rng::seed_from_u64(3);
+        let prefill_elems = geo.n_layers * geo.n_heads * 64 * geo.head_dim;
+        for id in 0..b as u64 {
+            kv.alloc_seq(id, 64).unwrap();
+            let k: Vec<f32> = (0..prefill_elems).map(|_| rng.gen_f32(-0.5, 0.5)).collect();
+            let v: Vec<f32> = (0..prefill_elems).map(|_| rng.gen_f32(-0.5, 0.5)).collect();
+            kv.write_prefill(id, &k, &v, 64, 64).unwrap();
+        }
+        let ids: Vec<Option<u64>> = (0..b as u64).map(Some).collect();
+
+        let toks: Vec<i32> = (0..b as i32).collect();
+        let pos = vec![64i32; b];
+        bench("literal_small (tokens+pos)", 3, 200, || {
+            black_box(literal_i32(&toks, &[b]).unwrap());
+            black_box(literal_i32(&pos, &[b]).unwrap());
+        });
+
+        let n = geo.dense_elems(b);
+        let mut kd = vec![0.0f32; n];
+        let mut vd = vec![0.0f32; n];
+        bench("kv_gather_dense", 2, 20, || {
+            kv.gather_dense(&ids, b, &mut kd, &mut vd).unwrap();
+        });
+        let shape = [geo.n_layers, b, geo.n_heads, geo.max_seq, geo.head_dim];
+        bench("kv_literal_create", 2, 20, || {
+            black_box(literal_f32(&kd, &shape).unwrap());
+        });
+
+        let toks_l = literal_i32(&toks, &[b])?;
+        let pos_l = literal_i32(&pos, &[b])?;
+        let kc = literal_f32(&kd, &shape)?;
+        let vc = literal_f32(&vd, &shape)?;
+        // Execute + readback (the irreducible PJRT part).
+        let mut outs = rt.execute(&entry, &[&toks_l, &pos_l, &kc, &vc])?;
+        let exec = bench("pjrt_execute (decode step)", 2, 10, || {
+            outs = rt.execute(&entry, &[&toks_l, &pos_l, &kc, &vc]).unwrap();
+        });
+
+        let logits = to_vec_f32(&outs[0])?;
+        let vocab = m.vocab_size;
+        let mut sampler = Sampler::new(0);
+        bench("logits_readback+sample", 3, 200, || {
+            let l = to_vec_f32(&outs[0]).unwrap();
+            for i in 0..b {
+                black_box(sampler.sample(&l[i * vocab..(i + 1) * vocab], SamplingParams::default()));
+            }
+        });
+        black_box(argmax(&logits[..vocab]));
+        println!(
+            "   => PJRT execute dominates; host components must stay <10% of {:.3} ms",
+            exec.median_s * 1e3
+        );
+    }
+    Ok(())
+}

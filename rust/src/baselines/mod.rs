@@ -1,0 +1,403 @@
+//! Baseline LLM-engine models (DESIGN.md §3 substitutions).
+//!
+//! Figures 1 and 10-13 compare FlashDecoding++ against seven engines.
+//! Each baseline is modeled as a *composition* of the kernel schedules it
+//! is documented to use (attention softmax scheme, GEMM padding policy,
+//! dataflow staticness) plus its framework dispatch overhead. The paper's
+//! three effects — C1 (softmax sync), C2 (pad-to-8 flat GEMM), C3
+//! (heuristic dataflow) — are exactly the axes on which these engines
+//! differ, so the bar *shapes* of the figures emerge from the composition.
+
+pub mod sim;
+
+use crate::config::ModelConfig;
+use crate::dataflow::ImplKind;
+use crate::hwmodel::{
+    attention_decode_time, attention_prefill_time, gemm_time, GpuProfile, SoftmaxScheme, Vendor,
+};
+use crate::model::{decode_layer_ops, prefill_layer_ops};
+
+/// The engines of Figure 10's legend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    HuggingFace,
+    Vllm,
+    DeepSpeed,
+    OpenPpl,
+    TensorRtLlm,
+    FlashDecoding,
+    FlashDecodingPP,
+}
+
+impl EngineKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineKind::HuggingFace => "HuggingFace",
+            EngineKind::Vllm => "vLLM",
+            EngineKind::DeepSpeed => "DeepSpeed",
+            EngineKind::OpenPpl => "OpenPPL",
+            EngineKind::TensorRtLlm => "TensorRT-LLM",
+            EngineKind::FlashDecoding => "FlashDecoding",
+            EngineKind::FlashDecodingPP => "FlashDecoding++",
+        }
+    }
+
+    pub fn all() -> Vec<EngineKind> {
+        vec![
+            EngineKind::HuggingFace,
+            EngineKind::Vllm,
+            EngineKind::DeepSpeed,
+            EngineKind::OpenPpl,
+            EngineKind::TensorRtLlm,
+            EngineKind::FlashDecoding,
+            EngineKind::FlashDecodingPP,
+        ]
+    }
+
+    /// Engines that support a given model (Figure 10's blank bars:
+    /// OpenPPL does not run OPT-6.7B / ChatGLM2-6B).
+    pub fn supports(&self, model: &ModelConfig) -> bool {
+        match self {
+            EngineKind::OpenPpl => model.name.starts_with("llama2"),
+            _ => true,
+        }
+    }
+}
+
+/// Schedule composition of one engine.
+#[derive(Debug, Clone)]
+pub struct EngineModel {
+    pub kind: EngineKind,
+    /// Decode attention softmax scheme.
+    pub decode_softmax: SoftmaxScheme,
+    /// Naive (unfused) prefill attention?
+    pub naive_prefill_attention: bool,
+    /// GEMM policy for flat decode shapes.
+    pub gemm_policy: GemmPolicy,
+    /// Framework dispatch cost per kernel launch on the host path.
+    pub per_op_overhead_s: f64,
+    /// Dispatched host ops per transformer layer per step.
+    pub ops_per_layer: f64,
+    /// Weight/KV element size (HF eager defaults to fp32; optimized
+    /// engines serve fp16/bf16).
+    pub elt_bytes: usize,
+}
+
+/// How the engine picks its GEMM kernel for a flat [M,K]x[K,N].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmPolicy {
+    /// cuBLAS-style: always the conventional pad-to-64 tiled kernel.
+    StaticConventional,
+    /// A statically tuned kernel choice per model (TensorRT-LLM builder):
+    /// flat kernel for decode, conventional for prefill — but no per-M
+    /// runtime adaptation and no GEMV escape hatch.
+    StaticTuned,
+    /// FlashDecoding++ §5: per-(op, M) lookup among ImplA/B/C.
+    Heuristic,
+}
+
+impl EngineModel {
+    pub fn new(kind: EngineKind) -> Self {
+        use EngineKind::*;
+        match kind {
+            HuggingFace => EngineModel {
+                kind,
+                decode_softmax: SoftmaxScheme::Naive,
+                naive_prefill_attention: true,
+                gemm_policy: GemmPolicy::StaticConventional,
+                per_op_overhead_s: 30e-6, // eager PyTorch dispatch
+                ops_per_layer: 12.0,
+                elt_bytes: 4,
+            },
+            Vllm => EngineModel {
+                kind,
+                decode_softmax: SoftmaxScheme::SyncPartial,
+                naive_prefill_attention: false,
+                gemm_policy: GemmPolicy::StaticConventional,
+                per_op_overhead_s: 8e-6,
+                ops_per_layer: 6.0,
+                elt_bytes: 2,
+            },
+            DeepSpeed => EngineModel {
+                kind,
+                decode_softmax: SoftmaxScheme::SyncPartial,
+                naive_prefill_attention: false,
+                gemm_policy: GemmPolicy::StaticConventional,
+                per_op_overhead_s: 4e-6,
+                ops_per_layer: 5.0,
+                elt_bytes: 2,
+            },
+            OpenPpl => EngineModel {
+                kind,
+                decode_softmax: SoftmaxScheme::SyncPartial,
+                naive_prefill_attention: false,
+                gemm_policy: GemmPolicy::StaticConventional,
+                per_op_overhead_s: 2e-6, // C++ runtime
+                ops_per_layer: 5.0,
+                elt_bytes: 2,
+            },
+            TensorRtLlm => EngineModel {
+                kind,
+                decode_softmax: SoftmaxScheme::SyncPartial,
+                naive_prefill_attention: false,
+                gemm_policy: GemmPolicy::StaticTuned,
+                per_op_overhead_s: 1.5e-6,
+                ops_per_layer: 4.0,
+                elt_bytes: 2,
+            },
+            FlashDecoding => EngineModel {
+                kind,
+                decode_softmax: SoftmaxScheme::SyncPartial,
+                naive_prefill_attention: false,
+                gemm_policy: GemmPolicy::StaticConventional,
+                per_op_overhead_s: 3e-6,
+                ops_per_layer: 5.0,
+                elt_bytes: 2,
+            },
+            FlashDecodingPP => EngineModel {
+                kind,
+                decode_softmax: SoftmaxScheme::AsyncUnified,
+                naive_prefill_attention: false,
+                gemm_policy: GemmPolicy::Heuristic,
+                per_op_overhead_s: 1.5e-6,
+                ops_per_layer: 4.0,
+                elt_bytes: 2,
+            },
+        }
+    }
+
+    fn decode_gemm(&self, gpu: &GpuProfile, m: usize, n: usize, k: usize, elt: usize) -> f64 {
+        match self.gemm_policy {
+            GemmPolicy::StaticConventional => gemm_time(gpu, ImplKind::C, m, n, k, elt),
+            GemmPolicy::StaticTuned => gemm_time(gpu, ImplKind::B, m, n, k, elt),
+            GemmPolicy::Heuristic => [ImplKind::A, ImplKind::B, ImplKind::C]
+                .into_iter()
+                .map(|ik| gemm_time(gpu, ik, m, n, k, elt))
+                .fold(f64::INFINITY, f64::min),
+        }
+    }
+
+    /// Element size on a given GPU. The paper's NVIDIA HF baseline runs
+    /// eager fp32 (transformers default); its ROCm HF runs fp16 (the
+    /// only supported path at the time) — which is why the AMD headline
+    /// speedup (2.18x) is smaller than NVIDIA's (4.86x).
+    fn effective_elt(&self, gpu: &GpuProfile) -> usize {
+        if self.kind == EngineKind::HuggingFace && gpu.vendor == Vendor::Amd {
+            2
+        } else {
+            self.elt_bytes
+        }
+    }
+
+    fn decode_softmax_for(&self, model: &ModelConfig) -> SoftmaxScheme {
+        // §3: the unified-max technique is disabled for OPT-6.7B (its
+        // softmax-input range is too wide, Figure 5).
+        if self.decode_softmax == SoftmaxScheme::AsyncUnified && model.name.starts_with("opt") {
+            SoftmaxScheme::SyncPartial
+        } else {
+            self.decode_softmax
+        }
+    }
+
+    /// Latency of generating ONE token at the given batch size with
+    /// kv_len tokens of context (Figure 10-13's "each token latency").
+    pub fn decode_token_time(
+        &self,
+        model: &ModelConfig,
+        gpu: &GpuProfile,
+        batch: usize,
+        kv_len: usize,
+    ) -> f64 {
+        let elt = self.effective_elt(gpu);
+        let ops = decode_layer_ops(model, batch, kv_len);
+        let mut per_layer = 0.0;
+        for l in &ops.linears {
+            per_layer += self.decode_gemm(gpu, l.m, l.n, l.k, elt);
+        }
+        per_layer += attention_decode_time(
+            gpu,
+            batch,
+            model.n_heads,
+            model.head_dim(),
+            kv_len,
+            self.decode_softmax_for(model),
+            elt,
+        );
+        // Norms/RoPE/residuals: activation-streaming traffic.
+        let elementwise = 10.0 * (batch * model.dim) as f64 * 4.0 / gpu.hbm_bw;
+        per_layer += elementwise;
+        let lm_head = self.decode_gemm(gpu, batch, model.vocab_size, model.dim, elt);
+        let overhead = self.per_op_overhead_s * self.ops_per_layer * model.n_layers as f64;
+        model.n_layers as f64 * per_layer + lm_head + overhead
+    }
+
+    /// Latency of the prefill phase over `seq` prompt tokens (Figure 11's
+    /// "first token latency").
+    pub fn prefill_time(
+        &self,
+        model: &ModelConfig,
+        gpu: &GpuProfile,
+        batch: usize,
+        seq: usize,
+    ) -> f64 {
+        let elt = self.effective_elt(gpu);
+        let ops = prefill_layer_ops(model, batch, seq);
+        let mut per_layer = 0.0;
+        for l in &ops.linears {
+            // Large-M shapes: every engine converges to the conventional
+            // kernel; the heuristic dispatch picks it automatically.
+            let ik = match self.gemm_policy {
+                GemmPolicy::Heuristic | GemmPolicy::StaticTuned => {
+                    if l.m < 64 {
+                        ImplKind::B
+                    } else {
+                        ImplKind::C
+                    }
+                }
+                GemmPolicy::StaticConventional => ImplKind::C,
+            };
+            per_layer += gemm_time(gpu, ik, l.m, l.n, l.k, elt);
+        }
+        per_layer += attention_prefill_time(
+            gpu,
+            batch,
+            model.n_heads,
+            model.head_dim(),
+            seq,
+            self.naive_prefill_attention,
+            elt,
+        );
+        let elementwise = 10.0 * (batch * seq * model.dim) as f64 * 4.0 / gpu.hbm_bw;
+        per_layer += elementwise;
+        let lm_head = gemm_time(gpu, ImplKind::C, batch, model.vocab_size, model.dim, elt);
+        let overhead = self.per_op_overhead_s * self.ops_per_layer * model.n_layers as f64;
+        model.n_layers as f64 * per_layer + lm_head + overhead
+    }
+}
+
+/// Convenience: decode speedup of `engine` over HuggingFace.
+pub fn decode_speedup_vs_hf(
+    engine: EngineKind,
+    model: &ModelConfig,
+    gpu: &GpuProfile,
+    batch: usize,
+    kv_len: usize,
+) -> f64 {
+    let hf = EngineModel::new(EngineKind::HuggingFace).decode_token_time(model, gpu, batch, kv_len);
+    let e = EngineModel::new(engine).decode_token_time(model, gpu, batch, kv_len);
+    hf / e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_model;
+    use crate::hwmodel::{a100, rx7900xtx};
+
+    #[test]
+    fn fdpp_beats_every_baseline_on_decode() {
+        let model = paper_model("llama2-7b").unwrap();
+        let gpu = a100();
+        let t_pp = EngineModel::new(EngineKind::FlashDecodingPP)
+            .decode_token_time(&model, &gpu, 1, 1024);
+        for kind in EngineKind::all() {
+            if kind == EngineKind::FlashDecodingPP {
+                continue;
+            }
+            let t = EngineModel::new(kind).decode_token_time(&model, &gpu, 1, 1024);
+            assert!(t_pp < t, "FD++ must beat {} ({t_pp} vs {t})", kind.as_str());
+        }
+    }
+
+    #[test]
+    fn hf_speedup_in_paper_band_nvidia() {
+        // Abstract: up to 4.86x vs HF on NVIDIA. At bs=1/1K on A100 the
+        // overview figure shows ~3-5x; require the model lands in a sane
+        // band and the *max over the sweep* reaches ~4x.
+        let model = paper_model("llama2-7b").unwrap();
+        let gpu = a100();
+        let mut max_sp: f64 = 0.0;
+        for (bs, kv) in [(1, 128), (1, 1024), (8, 1024), (32, 512), (64, 256)] {
+            let sp = decode_speedup_vs_hf(EngineKind::FlashDecodingPP, &model, &gpu, bs, kv);
+            assert!(sp > 1.5, "speedup vs HF at bs={bs} kv={kv}: {sp}");
+            max_sp = max_sp.max(sp);
+        }
+        assert!(
+            max_sp > 3.0 && max_sp < 8.0,
+            "max decode speedup vs HF {max_sp} (paper: up to 4.86)"
+        );
+    }
+
+    #[test]
+    fn fd_speedup_average_near_paper() {
+        // Abstract: avg 1.37x vs FlashDecoding (A100). Accept 1.1-1.7.
+        let model = paper_model("llama2-7b").unwrap();
+        let gpu = a100();
+        let mut sps = vec![];
+        for (bs, kv) in [(1, 128), (1, 1024), (8, 1024), (32, 512)] {
+            let fd =
+                EngineModel::new(EngineKind::FlashDecoding).decode_token_time(&model, &gpu, bs, kv);
+            let pp = EngineModel::new(EngineKind::FlashDecodingPP)
+                .decode_token_time(&model, &gpu, bs, kv);
+            sps.push(fd / pp);
+        }
+        let avg = sps.iter().sum::<f64>() / sps.len() as f64;
+        assert!(
+            (1.1..=1.8).contains(&avg),
+            "avg speedup vs FlashDecoding {avg} (paper: 1.37)"
+        );
+    }
+
+    #[test]
+    fn amd_speedup_band() {
+        // Abstract: up to 2.18x vs HF on AMD.
+        let model = paper_model("llama2-7b").unwrap();
+        let gpu = rx7900xtx();
+        let mut max_sp: f64 = 0.0;
+        for (bs, kv) in [(1, 128), (1, 1024), (8, 1024)] {
+            max_sp =
+                max_sp.max(decode_speedup_vs_hf(EngineKind::FlashDecodingPP, &model, &gpu, bs, kv));
+        }
+        assert!(max_sp > 1.5, "AMD max speedup {max_sp} (paper: up to 2.18)");
+    }
+
+    #[test]
+    fn opt_disables_async_softmax() {
+        let opt = paper_model("opt-6.7b").unwrap();
+        let e = EngineModel::new(EngineKind::FlashDecodingPP);
+        assert_eq!(e.decode_softmax_for(&opt), SoftmaxScheme::SyncPartial);
+        let llama = paper_model("llama2-7b").unwrap();
+        assert_eq!(e.decode_softmax_for(&llama), SoftmaxScheme::AsyncUnified);
+    }
+
+    #[test]
+    fn openppl_model_support_matrix() {
+        let opt = paper_model("opt-6.7b").unwrap();
+        let glm = paper_model("chatglm2-6b").unwrap();
+        let llama = paper_model("llama2-7b").unwrap();
+        assert!(!EngineKind::OpenPpl.supports(&opt));
+        assert!(!EngineKind::OpenPpl.supports(&glm));
+        assert!(EngineKind::OpenPpl.supports(&llama));
+        assert!(EngineKind::Vllm.supports(&opt));
+    }
+
+    #[test]
+    fn prefill_first_token_slower_than_decode_token() {
+        let model = paper_model("llama2-7b").unwrap();
+        let gpu = a100();
+        let e = EngineModel::new(EngineKind::FlashDecodingPP);
+        let prefill = e.prefill_time(&model, &gpu, 1, 1024);
+        let decode = e.decode_token_time(&model, &gpu, 1, 1024);
+        assert!(prefill > decode * 3.0);
+    }
+
+    #[test]
+    fn decode_time_monotone_in_kv_len() {
+        let model = paper_model("llama2-7b").unwrap();
+        let gpu = a100();
+        let e = EngineModel::new(EngineKind::FlashDecodingPP);
+        let t1 = e.decode_token_time(&model, &gpu, 8, 256);
+        let t2 = e.decode_token_time(&model, &gpu, 8, 2048);
+        assert!(t2 > t1);
+    }
+}

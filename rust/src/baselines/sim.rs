@@ -1,0 +1,229 @@
+//! Serving-level queueing simulator: composes the per-kernel engine
+//! models with each engine's *batching* behaviour to produce
+//! latency/throughput under load — the serving-system view of
+//! Figures 10-13 (the paper reports per-token kernel latency; deployed
+//! engines additionally differ in continuous batching, which this
+//! simulator captures).
+//!
+//! Event-driven over virtual time: Poisson arrivals, prefill admission,
+//! batched decode steps whose duration comes from
+//! `EngineModel::decode_token_time` at the current batch size and mean
+//! context length.
+
+use crate::baselines::{EngineKind, EngineModel};
+use crate::config::ModelConfig;
+use crate::hwmodel::GpuProfile;
+use crate::util::rng::Rng;
+
+/// Simulation workload + engine setup.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub engine: EngineKind,
+    /// Max decode batch the engine can form (HF eager: 1 — no continuous
+    /// batching; serving engines: their documented defaults).
+    pub max_batch: usize,
+    /// Request arrival rate (req/s).
+    pub rate: f64,
+    pub n_requests: usize,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Default max batch per engine (documented serving behaviour).
+    pub fn default_max_batch(engine: EngineKind) -> usize {
+        match engine {
+            EngineKind::HuggingFace => 1, // eager loop, no batching server
+            EngineKind::DeepSpeed => 16,
+            _ => 32,
+        }
+    }
+}
+
+/// Aggregated simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub engine: EngineKind,
+    pub throughput_tok_s: f64,
+    pub mean_first_token_s: f64,
+    pub p95_first_token_s: f64,
+    pub mean_batch: f64,
+    pub makespan_s: f64,
+}
+
+struct SimSeq {
+    arrival: f64,
+    first_token_at: Option<f64>,
+    kv_len: usize,
+    remaining: usize,
+}
+
+/// Run the simulation to completion.
+pub fn simulate(
+    cfg: &SimConfig,
+    model: &ModelConfig,
+    gpu: &GpuProfile,
+) -> SimResult {
+    let em = EngineModel::new(cfg.engine);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    // Arrival times.
+    let mut arrivals: Vec<f64> = Vec::with_capacity(cfg.n_requests);
+    let mut t = 0.0;
+    for _ in 0..cfg.n_requests {
+        t += rng.gen_exp(cfg.rate);
+        arrivals.push(t);
+    }
+
+    let mut queue: Vec<SimSeq> = Vec::new();
+    let mut running: Vec<SimSeq> = Vec::new();
+    let mut done: Vec<SimSeq> = Vec::new();
+    let mut next_arrival = 0usize;
+    let mut now = 0.0f64;
+    let mut tokens = 0u64;
+    let mut batch_samples = 0.0f64;
+    let mut batch_steps = 0u64;
+
+    while done.len() < cfg.n_requests {
+        // Admit arrivals up to `now`.
+        while next_arrival < cfg.n_requests && arrivals[next_arrival] <= now {
+            queue.push(SimSeq {
+                arrival: arrivals[next_arrival],
+                first_token_at: None,
+                kv_len: cfg.prompt_len,
+                remaining: cfg.output_len,
+            });
+            next_arrival += 1;
+        }
+        // Nothing active: jump to the next arrival.
+        if queue.is_empty() && running.is_empty() {
+            if next_arrival < cfg.n_requests {
+                now = arrivals[next_arrival];
+                continue;
+            }
+            break;
+        }
+        // Admission: prefill one queued request if a lane is free.
+        if !queue.is_empty() && running.len() < cfg.max_batch {
+            let mut seq = queue.remove(0);
+            now += em.prefill_time(model, gpu, 1, cfg.prompt_len);
+            seq.first_token_at = Some(now);
+            seq.kv_len += 1;
+            seq.remaining -= 1;
+            tokens += 1;
+            if seq.remaining == 0 {
+                done.push(seq);
+            } else {
+                running.push(seq);
+            }
+            continue;
+        }
+        // Decode step over the running batch.
+        let bs = running.len();
+        let mean_kv =
+            running.iter().map(|s| s.kv_len).sum::<usize>() as f64 / bs as f64;
+        now += em.decode_token_time(model, gpu, bs, mean_kv as usize);
+        batch_samples += bs as f64;
+        batch_steps += 1;
+        let mut still: Vec<SimSeq> = Vec::with_capacity(bs);
+        for mut s in running.drain(..) {
+            s.kv_len += 1;
+            s.remaining -= 1;
+            tokens += 1;
+            if s.remaining == 0 {
+                done.push(s);
+            } else {
+                still.push(s);
+            }
+        }
+        running = still;
+    }
+
+    let mut first: Vec<f64> = done
+        .iter()
+        .map(|s| s.first_token_at.unwrap() - s.arrival)
+        .collect();
+    first.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean_first = first.iter().sum::<f64>() / first.len() as f64;
+    let p95 = first[((first.len() as f64 * 0.95) as usize).min(first.len() - 1)];
+    SimResult {
+        engine: cfg.engine,
+        throughput_tok_s: tokens as f64 / now.max(1e-12),
+        mean_first_token_s: mean_first,
+        p95_first_token_s: p95,
+        mean_batch: if batch_steps > 0 {
+            batch_samples / batch_steps as f64
+        } else {
+            1.0
+        },
+        makespan_s: now,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_model;
+    use crate::hwmodel::a100;
+
+    fn cfg(engine: EngineKind, rate: f64) -> SimConfig {
+        SimConfig {
+            engine,
+            max_batch: SimConfig::default_max_batch(engine),
+            rate,
+            n_requests: 64,
+            prompt_len: 512,
+            output_len: 64,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let model = paper_model("llama2-7b").unwrap();
+        let gpu = a100();
+        let r = simulate(&cfg(EngineKind::FlashDecodingPP, 5.0), &model, &gpu);
+        assert!(r.throughput_tok_s > 0.0);
+        assert!(r.makespan_s > 0.0);
+        assert!(r.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn batching_engine_beats_hf_under_load() {
+        // Under concurrent load, continuous batching dominates: FD++
+        // throughput must exceed HF's by far more than the kernel-level
+        // speedup alone.
+        let model = paper_model("llama2-7b").unwrap();
+        let gpu = a100();
+        let hf = simulate(&cfg(EngineKind::HuggingFace, 5.0), &model, &gpu);
+        let pp = simulate(&cfg(EngineKind::FlashDecodingPP, 5.0), &model, &gpu);
+        assert!(
+            pp.throughput_tok_s > hf.throughput_tok_s * 2.0,
+            "pp {} vs hf {}",
+            pp.throughput_tok_s,
+            hf.throughput_tok_s
+        );
+        assert!(pp.mean_batch > 2.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let model = paper_model("llama2-7b").unwrap();
+        let gpu = a100();
+        let a = simulate(&cfg(EngineKind::Vllm, 3.0), &model, &gpu);
+        let b = simulate(&cfg(EngineKind::Vllm, 3.0), &model, &gpu);
+        assert_eq!(a.throughput_tok_s, b.throughput_tok_s);
+    }
+
+    #[test]
+    fn light_load_latency_dominated() {
+        // At very low rate there is no queueing: first-token latency ~=
+        // prefill time.
+        let model = paper_model("llama2-7b").unwrap();
+        let gpu = a100();
+        let em = EngineModel::new(EngineKind::FlashDecodingPP);
+        let prefill = em.prefill_time(&model, &gpu, 1, 512);
+        let r = simulate(&cfg(EngineKind::FlashDecodingPP, 0.05), &model, &gpu);
+        assert!(r.mean_first_token_s < prefill * 3.0);
+    }
+}

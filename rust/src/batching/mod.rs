@@ -1,0 +1,249 @@
+//! Continuous batching: decode-bucket selection and *sticky-lane* batch
+//! assembly.
+//!
+//! Decode artifacts exist for fixed batch buckets (1/2/4/8). Lanes are
+//! sticky: a sequence keeps its lane for its whole life, finished lanes
+//! become holes that later admissions fill. Sticky lanes are what make
+//! the device-side KV-insert fast path possible (EXPERIMENTS.md §Perf):
+//! joining a batch never shifts other sequences, so the dense device
+//! cache stays valid and only the new lane is spliced in on device.
+//! Bucket *growth* (more running sequences than lanes) and *shrink*
+//! (compaction when occupancy drops to the previous bucket) are the only
+//! events that force a host-side dense rebuild.
+
+use crate::error::{Error, Result};
+use crate::kvcache::SeqId;
+
+/// Pick the smallest bucket >= n; None if n exceeds the largest bucket.
+pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n)
+}
+
+/// Pick the smallest prefill sequence bucket >= len.
+pub fn pick_prefill_bucket(buckets: &[usize], len: usize) -> Option<usize> {
+    pick_bucket(buckets, len)
+}
+
+/// The decode batch the engine will execute this step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeBatch {
+    /// lanes[i] holds the sequence in lane i; None = padding hole.
+    pub lanes: Vec<Option<SeqId>>,
+    pub bucket: usize,
+}
+
+impl DecodeBatch {
+    pub fn occupancy(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+}
+
+/// What happened to the lane layout on admit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Admission {
+    pub lane: usize,
+    /// The bucket grew — the dense device cache must be rebuilt.
+    pub bucket_grew: bool,
+}
+
+/// Tracks the running set with sticky lanes.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    buckets: Vec<usize>,
+    lanes: Vec<Option<SeqId>>,
+    count: usize,
+}
+
+impl Batcher {
+    pub fn new(buckets: Vec<usize>) -> Self {
+        Batcher {
+            buckets,
+            lanes: Vec::new(),
+            count: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Sequence ids currently running, in lane order.
+    pub fn running_ids(&self) -> Vec<SeqId> {
+        self.lanes.iter().filter_map(|l| *l).collect()
+    }
+
+    pub fn contains(&self, id: SeqId) -> bool {
+        self.lanes.contains(&Some(id))
+    }
+
+    /// Admit a sequence: fill the first hole, growing the bucket if full.
+    pub fn admit(&mut self, id: SeqId) -> Result<Admission> {
+        if self.contains(id) {
+            return Err(Error::Schedule(format!("seq {id} already running")));
+        }
+        if self.count >= self.max_bucket() {
+            return Err(Error::Schedule("running set full".into()));
+        }
+        let mut grew = false;
+        if self.count == self.lanes.len() {
+            let next = pick_bucket(&self.buckets, self.count + 1)
+                .ok_or_else(|| Error::Schedule("no bucket fits".into()))?;
+            self.lanes.resize(next, None);
+            grew = true;
+        }
+        let lane = self
+            .lanes
+            .iter()
+            .position(|l| l.is_none())
+            .expect("hole must exist after resize");
+        self.lanes[lane] = Some(id);
+        self.count += 1;
+        Ok(Admission {
+            lane,
+            bucket_grew: grew,
+        })
+    }
+
+    /// Remove a finished/preempted sequence; its lane becomes a hole.
+    /// Returns true when the bucket shrank (compaction -> rebuild).
+    pub fn remove(&mut self, id: SeqId) -> Result<bool> {
+        let lane = self
+            .lanes
+            .iter()
+            .position(|l| *l == Some(id))
+            .ok_or_else(|| Error::Schedule(format!("seq {id} not running")))?;
+        self.lanes[lane] = None;
+        self.count -= 1;
+        // Shrink when occupancy fits the next smaller bucket (hysteresis:
+        // exact fit only, so a single finish can't thrash).
+        let target = pick_bucket(&self.buckets, self.count.max(1)).unwrap_or(0);
+        if self.count == 0 {
+            self.lanes.clear();
+            return Ok(true);
+        }
+        if target < self.lanes.len() {
+            let survivors: Vec<Option<SeqId>> =
+                self.lanes.iter().filter(|l| l.is_some()).cloned().collect();
+            self.lanes = survivors;
+            self.lanes.resize(target, None);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Assemble the decode batch for this step (sticky lane order).
+    pub fn assemble(&self) -> Result<DecodeBatch> {
+        if self.count == 0 {
+            return Err(Error::Schedule("nothing to decode".into()));
+        }
+        Ok(DecodeBatch {
+            lanes: self.lanes.clone(),
+            bucket: self.lanes.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let b = vec![1, 2, 4, 8];
+        assert_eq!(pick_bucket(&b, 1), Some(1));
+        assert_eq!(pick_bucket(&b, 3), Some(4));
+        assert_eq!(pick_bucket(&b, 8), Some(8));
+        assert_eq!(pick_bucket(&b, 9), None);
+    }
+
+    #[test]
+    fn sticky_lane_admission_and_growth() {
+        let mut b = Batcher::new(vec![1, 2, 4]);
+        let a0 = b.admit(10).unwrap();
+        assert_eq!((a0.lane, a0.bucket_grew), (0, true));
+        assert_eq!(b.bucket(), 1);
+        let a1 = b.admit(11).unwrap();
+        assert_eq!((a1.lane, a1.bucket_grew), (1, true));
+        assert_eq!(b.bucket(), 2);
+        let a2 = b.admit(12).unwrap();
+        assert!(a2.bucket_grew);
+        assert_eq!(b.bucket(), 4);
+        // lane 3 is a hole; next admit fills it without growth.
+        let a3 = b.admit(13).unwrap();
+        assert_eq!((a3.lane, a3.bucket_grew), (3, false));
+    }
+
+    #[test]
+    fn holes_are_reused_without_shifting() {
+        let mut b = Batcher::new(vec![1, 2, 4]);
+        for id in [1, 2, 3, 4] {
+            b.admit(id).unwrap();
+        }
+        assert_eq!(b.bucket(), 4);
+        // Remove one; occupancy 3 still needs bucket 4 -> no shrink, and
+        // the others keep their lanes.
+        let shrank = b.remove(2).unwrap();
+        assert!(!shrank);
+        let batch = b.assemble().unwrap();
+        assert_eq!(batch.lanes, vec![Some(1), None, Some(3), Some(4)]);
+        // The hole is refilled in place.
+        let a = b.admit(5).unwrap();
+        assert_eq!((a.lane, a.bucket_grew), (1, false));
+    }
+
+    #[test]
+    fn shrink_compacts_lanes() {
+        let mut b = Batcher::new(vec![1, 2, 4]);
+        for id in [1, 2, 3] {
+            b.admit(id).unwrap();
+        }
+        b.remove(2).unwrap(); // occupancy 2 -> target bucket 2 -> shrink
+        // NOTE: remove(2) leaves occupancy 2 which fits bucket 2 exactly.
+        assert_eq!(b.bucket(), 2);
+        let batch = b.assemble().unwrap();
+        assert_eq!(batch.lanes, vec![Some(1), Some(3)]);
+        b.remove(1).unwrap();
+        assert_eq!(b.bucket(), 1);
+        b.remove(3).unwrap();
+        assert!(b.is_empty());
+        assert_eq!(b.bucket(), 0);
+    }
+
+    #[test]
+    fn admit_limits() {
+        let mut b = Batcher::new(vec![1, 2]);
+        b.admit(1).unwrap();
+        assert!(b.admit(1).is_err(), "duplicate admit");
+        b.admit(2).unwrap();
+        assert!(b.admit(3).is_err(), "over max bucket");
+    }
+
+    #[test]
+    fn empty_assemble_errors() {
+        let b = Batcher::new(vec![1]);
+        assert!(b.assemble().is_err());
+    }
+
+    #[test]
+    fn running_ids_in_lane_order() {
+        let mut b = Batcher::new(vec![4]);
+        for id in [9, 7, 8] {
+            b.admit(id).unwrap();
+        }
+        assert_eq!(b.running_ids(), vec![9, 7, 8]);
+        b.remove(7).unwrap();
+        assert_eq!(b.running_ids(), vec![9, 8]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Shared helpers for the figure-reproduction benches: fixed-width table
+//! printing in the shape of the paper's tables/series, and simple timing
+//! utilities for the real-CPU measurement paths.
+
+use std::time::Instant;
+
+/// Print a header band for one reproduced figure/table.
+pub fn banner(id: &str, title: &str) {
+    println!();
+    println!("==================================================================");
+    println!("{id}: {title}");
+    println!("==================================================================");
+}
+
+/// Print a row of labeled values with a fixed-width first column.
+pub fn row(label: &str, values: &[String]) {
+    print!("{label:<28}");
+    for v in values {
+        print!("{v:>14}");
+    }
+    println!();
+}
+
+/// Format seconds adaptively (s / ms / us).
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+pub fn fmt_speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Median-of-N wall-clock timing of a closure (real-CPU benches).
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Geometric mean (the paper's "average speedup" aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.0), "2.000s");
+        assert_eq!(fmt_time(0.002), "2.000ms");
+        assert_eq!(fmt_time(2e-6), "2.0us");
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn time_median_positive() {
+        let t = time_median(3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Model and engine configuration.
+//!
+//! `ModelConfig` mirrors the paper's Table 2 (plus the tiny model the
+//! real CPU path serves); `EngineConfig` collects the serving knobs.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Architecture hyperparameters of a served model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_hidden: usize,
+    /// Maximum context length (Table 2 "Context Length").
+    pub context: usize,
+    /// C1: unified scaling factor for the asynchronized softmax (§3).
+    pub phi: f64,
+    /// C1: safe exponent window (a, b) around phi.
+    pub softmax_a: f64,
+    pub softmax_b: f64,
+}
+
+fn default_a() -> f64 {
+    -25.0
+}
+fn default_b() -> f64 {
+    18.0
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// The four [N, K] linear shapes of Figure 9(a) (fused-QKV layout).
+    pub fn linear_shapes(&self) -> [(&'static str, usize, usize); 4] {
+        let (d, f) = (self.dim, self.ffn_hidden);
+        [
+            ("qkv_proj", 3 * d, d),
+            ("o_proj", d, d),
+            ("ffn1", f, d),
+            ("ffn2", d, f),
+        ]
+    }
+
+    /// Parameter count (decoder-only, untied embeddings).
+    pub fn param_count(&self) -> usize {
+        let (d, f, v, l) = (self.dim, self.ffn_hidden, self.vocab_size, self.n_layers);
+        let per_layer = 4 * d * d + 3 * d * f + 2 * d;
+        2 * v * d + l * per_layer + d
+    }
+}
+
+/// Paper Table 2 model configurations.
+pub fn paper_models() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig {
+            name: "llama2-7b".into(),
+            vocab_size: 32000,
+            dim: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            ffn_hidden: 11008,
+            context: 4096,
+            phi: 0.0,
+            softmax_a: default_a(),
+            softmax_b: default_b(),
+        },
+        ModelConfig {
+            name: "llama2-13b".into(),
+            vocab_size: 32000,
+            dim: 5120,
+            n_layers: 40,
+            n_heads: 40,
+            ffn_hidden: 13824,
+            context: 4096,
+            phi: 0.0,
+            softmax_a: default_a(),
+            softmax_b: default_b(),
+        },
+        ModelConfig {
+            name: "opt-6.7b".into(),
+            vocab_size: 50272,
+            dim: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            ffn_hidden: 16384,
+            context: 2048,
+            phi: 0.0,
+            softmax_a: default_a(),
+            softmax_b: default_b(),
+        },
+        ModelConfig {
+            name: "chatglm2-6b".into(),
+            vocab_size: 65024,
+            dim: 4096,
+            n_layers: 28,
+            n_heads: 32,
+            ffn_hidden: 13696,
+            context: 32768,
+            phi: 0.0,
+            softmax_a: default_a(),
+            softmax_b: default_b(),
+        },
+    ]
+}
+
+pub fn paper_model(name: &str) -> Result<ModelConfig> {
+    paper_models()
+        .into_iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| Error::Config(format!("unknown paper model {name}")))
+}
+
+/// Serving-engine knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Directory holding manifest.json, weights/ and *.hlo.txt.
+    pub artifacts_dir: String,
+    /// Decode batch buckets available as compiled executables.
+    pub decode_buckets: Vec<usize>,
+    /// Prefill sequence-length buckets.
+    pub prefill_buckets: Vec<usize>,
+    /// KV pages per sequence pool (paged host store).
+    pub kv_block_tokens: usize,
+    pub kv_total_blocks: usize,
+    /// Max sequences resident in the decode batch at once.
+    pub max_running: usize,
+    /// Hard cap on generated tokens per request.
+    pub max_new_tokens: usize,
+    /// Use the asynchronized-softmax decode artifacts (C1). When false
+    /// the engine serves from the `_sync` baseline artifacts.
+    pub async_softmax: bool,
+    /// Sampling temperature <= 0 means greedy.
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: "artifacts".into(),
+            decode_buckets: vec![1, 2, 4, 8],
+            prefill_buckets: vec![16, 32, 64],
+            kv_block_tokens: 16,
+            kv_total_blocks: 256,
+            max_running: 8,
+            max_new_tokens: 64,
+            async_softmax: true,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Load overrides from a JSON file (missing fields keep defaults).
+    pub fn from_json_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = crate::util::json::parse(&text)?;
+        let d = EngineConfig::default();
+        let usizes = |key: &str, dv: usize| -> usize {
+            j.get(key).and_then(Json::as_usize).unwrap_or(dv)
+        };
+        let buckets = |key: &str, dv: &[usize]| -> Vec<usize> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_else(|| dv.to_vec())
+        };
+        Ok(EngineConfig {
+            artifacts_dir: j
+                .get("artifacts_dir")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+            decode_buckets: buckets("decode_buckets", &d.decode_buckets),
+            prefill_buckets: buckets("prefill_buckets", &d.prefill_buckets),
+            kv_block_tokens: usizes("kv_block_tokens", d.kv_block_tokens),
+            kv_total_blocks: usizes("kv_total_blocks", d.kv_total_blocks),
+            max_running: usizes("max_running", d.max_running),
+            max_new_tokens: usizes("max_new_tokens", d.max_new_tokens),
+            async_softmax: j
+                .get("async_softmax")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.async_softmax),
+            temperature: j
+                .get("temperature")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.temperature as f64) as f32,
+            top_k: usizes("top_k", d.top_k),
+            seed: j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.decode_buckets.is_empty() {
+            return Err(Error::Config("decode_buckets empty".into()));
+        }
+        let mut sorted = self.decode_buckets.clone();
+        sorted.sort_unstable();
+        if sorted != self.decode_buckets {
+            return Err(Error::Config("decode_buckets must be ascending".into()));
+        }
+        if self.kv_block_tokens == 0 || self.kv_total_blocks == 0 {
+            return Err(Error::Config("kv cache must be non-empty".into()));
+        }
+        if self.max_running > *self.decode_buckets.last().unwrap() {
+            return Err(Error::Config(
+                "max_running exceeds largest decode bucket".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_configs_match_paper() {
+        let m = paper_model("llama2-7b").unwrap();
+        assert_eq!((m.dim, m.n_heads, m.n_layers, m.context), (4096, 32, 32, 4096));
+        let m = paper_model("llama2-13b").unwrap();
+        assert_eq!((m.dim, m.n_heads, m.n_layers, m.context), (5120, 40, 40, 4096));
+        let m = paper_model("opt-6.7b").unwrap();
+        assert_eq!((m.dim, m.n_heads, m.n_layers, m.context), (4096, 32, 32, 2048));
+        let m = paper_model("chatglm2-6b").unwrap();
+        assert_eq!((m.dim, m.n_heads, m.n_layers, m.context), (4096, 32, 28, 32768));
+    }
+
+    #[test]
+    fn llama7b_param_count_near_7b() {
+        let m = paper_model("llama2-7b").unwrap();
+        let p = m.param_count() as f64;
+        assert!(p > 6.0e9 && p < 7.5e9, "param count {p}");
+    }
+
+    #[test]
+    fn linear_shapes_match_fig9a() {
+        // Figure 9(c): Llama2-7B shapes [12288,4096] (QKV), [4096,4096]
+        // (O), [11008,4096] and [4096,11008] (FFN).
+        let m = paper_model("llama2-7b").unwrap();
+        let s = m.linear_shapes();
+        assert_eq!(s[0], ("qkv_proj", 12288, 4096));
+        assert_eq!(s[1], ("o_proj", 4096, 4096));
+        assert_eq!(s[2], ("ffn1", 11008, 4096));
+        assert_eq!(s[3], ("ffn2", 4096, 11008));
+    }
+
+    #[test]
+    fn engine_config_validation() {
+        let mut c = EngineConfig::default();
+        c.validate().unwrap();
+        c.decode_buckets = vec![4, 1];
+        assert!(c.validate().is_err());
+        c.decode_buckets = vec![1, 4];
+        c.max_running = 100;
+        assert!(c.validate().is_err());
+    }
+}

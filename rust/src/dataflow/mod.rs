@@ -1,0 +1,314 @@
+//! C3 — Heuristic dataflow with hardware resource adaptation (paper §5).
+//!
+//! For each of the four [N, K] linear shapes of a model, an *offline*
+//! decision flow profiles three implementations while sweeping M:
+//!   ImplA — FastGEMV-style vector kernel (CUDA core / VPU),
+//!   ImplB — the paper's flat GEMM (pad-to-8, §4),
+//!   ImplC — conventionally tiled GEMM (cuBLAS/CUTLASS-style),
+//! finds the inflection points M1 (A->B) and M2 (B->C), and persists a
+//! lookup table. At runtime, dispatch is a table lookup — zero cost on
+//! the hot path (Figure 9).
+
+pub mod profile;
+
+use crate::error::{Error, Result};
+use crate::util::json::{parse, Json};
+
+/// The three implementation families of Figure 9(b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ImplKind {
+    /// FastGEMV-style (CUDA core / VPU).
+    A,
+    /// FlashDecoding++ flat GEMM (Tensor Core / MXU, pad-to-8).
+    B,
+    /// Conventional tiled GEMM (Tensor Core / MXU, M tiled to 64).
+    C,
+}
+
+impl ImplKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ImplKind::A => "ImplA/gemv",
+            ImplKind::B => "ImplB/flat",
+            ImplKind::C => "ImplC/conv",
+        }
+    }
+}
+
+/// One profiled point: implementation time at a given M for one [N, K].
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub m: usize,
+    pub impl_kind: ImplKind,
+    pub seconds: f64,
+}
+
+/// Inflection points for one [N, K] shape.
+#[derive(Debug, Clone)]
+pub struct OpInflection {
+    pub op: String,
+    pub n: usize,
+    pub k: usize,
+    /// Smallest profiled M where ImplB beats ImplA.
+    pub m1: usize,
+    /// Smallest profiled M where ImplC beats ImplB.
+    pub m2: usize,
+}
+
+impl OpInflection {
+    /// Runtime dispatch (Figure 9(c)): table lookup by M.
+    pub fn dispatch(&self, m: usize) -> ImplKind {
+        if m < self.m1 {
+            ImplKind::A
+        } else if m < self.m2 {
+            ImplKind::B
+        } else {
+            ImplKind::C
+        }
+    }
+}
+
+/// The per-model lookup table: one entry per [N, K] shape.
+#[derive(Debug, Clone, Default)]
+pub struct LookupTable {
+    pub model: String,
+    pub hardware: String,
+    pub entries: Vec<OpInflection>,
+}
+
+impl LookupTable {
+    pub fn dispatch(&self, op: &str, m: usize) -> Result<ImplKind> {
+        self.entries
+            .iter()
+            .find(|e| e.op == op)
+            .map(|e| e.dispatch(m))
+            .ok_or_else(|| Error::Config(format!("no lookup entry for op {op}")))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("hardware", Json::Str(self.hardware.clone())),
+            (
+                "entries",
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("op", Json::Str(e.op.clone())),
+                                ("n", Json::Num(e.n as f64)),
+                                ("k", Json::Num(e.k as f64)),
+                                ("m1", Json::Num(e.m1 as f64)),
+                                ("m2", Json::Num(e.m2 as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut entries = Vec::new();
+        for e in j.req_arr("entries")? {
+            entries.push(OpInflection {
+                op: e.req_str("op")?,
+                n: e.req_usize("n")?,
+                k: e.req_usize("k")?,
+                m1: e.req_usize("m1")?,
+                m2: e.req_usize("m2")?,
+            });
+        }
+        Ok(LookupTable {
+            model: j.req_str("model")?,
+            hardware: j.req_str("hardware")?,
+            entries,
+        })
+    }
+
+    pub fn save_json(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load_json(path: &str) -> Result<Self> {
+        Self::from_json(&parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+/// A profiler maps (impl, M) -> seconds for a fixed [N, K].
+pub trait GemmProfiler {
+    fn time(&mut self, impl_kind: ImplKind, m: usize) -> Result<f64>;
+}
+
+impl<F> GemmProfiler for F
+where
+    F: FnMut(ImplKind, usize) -> Result<f64>,
+{
+    fn time(&mut self, impl_kind: ImplKind, m: usize) -> Result<f64> {
+        self(impl_kind, m)
+    }
+}
+
+/// The decision flow of Figure 9(b): sweep M over `ms` (ascending),
+/// profile the three implementations, and locate M1 and M2.
+///
+/// Robustness: real profiles are noisy, so an inflection is declared at
+/// the first M where the challenger wins and *never loses again* at any
+/// larger profiled M (monotone suffix rule). This guarantees
+/// A-before-B-before-C monotone dispatch even on noisy data.
+pub fn find_inflections(
+    op: &str,
+    n: usize,
+    k: usize,
+    ms: &[usize],
+    profiler: &mut dyn GemmProfiler,
+) -> Result<OpInflection> {
+    if ms.is_empty() {
+        return Err(Error::Config("decision flow needs at least one M".into()));
+    }
+    let mut wins_b = vec![false; ms.len()]; // B beats A at ms[i]
+    let mut wins_c = vec![false; ms.len()]; // C beats B at ms[i]
+    for (i, &m) in ms.iter().enumerate() {
+        let ta = profiler.time(ImplKind::A, m)?;
+        let tb = profiler.time(ImplKind::B, m)?;
+        let tc = profiler.time(ImplKind::C, m)?;
+        wins_b[i] = tb < ta;
+        wins_c[i] = tc < tb;
+    }
+    let m1 = first_stable_win(ms, &wins_b);
+    let m2 = first_stable_win(ms, &wins_c).max(m1);
+    Ok(OpInflection {
+        op: op.to_string(),
+        n,
+        k,
+        m1,
+        m2,
+    })
+}
+
+/// Smallest ms[i] from which `wins` stays true; `usize::MAX`-like
+/// sentinel (beyond the last M) when the challenger never stabilizes.
+fn first_stable_win(ms: &[usize], wins: &[bool]) -> usize {
+    let mut idx = ms.len();
+    for i in (0..ms.len()).rev() {
+        if wins[i] {
+            idx = i;
+        } else {
+            break;
+        }
+    }
+    if idx == ms.len() {
+        ms.last().unwrap() + 1
+    } else {
+        ms[idx]
+    }
+}
+
+/// Standard M sweep for the decision flow.
+pub fn default_m_sweep() -> Vec<usize> {
+    vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic profiler with known crossovers: A wins below 8,
+    /// B wins in [8, 64), C wins from 64.
+    fn synthetic(impl_kind: ImplKind, m: usize) -> Result<f64> {
+        let t = match impl_kind {
+            ImplKind::A => m as f64,               // linear in M
+            ImplKind::B => 4.0 + m as f64 * 0.45,  // flat + slope
+            ImplKind::C => 28.0 + m as f64 * 0.05, // big constant, tiny slope
+        };
+        Ok(t)
+    }
+
+    #[test]
+    fn finds_known_inflections() {
+        let ms = default_m_sweep();
+        let inf = find_inflections("qkv", 12288, 4096, &ms, &mut synthetic).unwrap();
+        // A: t=m; B: 4+0.45m -> B wins from m=8 (8 vs 7.6). C beats B from
+        // 28+0.05m < 4+0.45m -> m >= 60 -> first profiled M = 64.
+        assert_eq!(inf.m1, 8);
+        assert_eq!(inf.m2, 64);
+    }
+
+    #[test]
+    fn dispatch_monotone() {
+        let inf = OpInflection {
+            op: "x".into(),
+            n: 1,
+            k: 1,
+            m1: 8,
+            m2: 64,
+        };
+        assert_eq!(inf.dispatch(1), ImplKind::A);
+        assert_eq!(inf.dispatch(7), ImplKind::A);
+        assert_eq!(inf.dispatch(8), ImplKind::B);
+        assert_eq!(inf.dispatch(63), ImplKind::B);
+        assert_eq!(inf.dispatch(64), ImplKind::C);
+        assert_eq!(inf.dispatch(10_000), ImplKind::C);
+    }
+
+    #[test]
+    fn never_winning_challenger_stays_out() {
+        // B never beats A -> m1 beyond the sweep -> always A below m2.
+        let mut prof = |ik: ImplKind, m: usize| -> Result<f64> {
+            Ok(match ik {
+                ImplKind::A => 1.0,
+                ImplKind::B => 2.0,
+                ImplKind::C => 3.0 - 0.001 * m as f64,
+            })
+        };
+        let ms = vec![1, 8, 64];
+        let inf = find_inflections("x", 1, 1, &ms, &mut prof).unwrap();
+        assert!(inf.m1 > 64);
+        assert!(inf.m2 >= inf.m1);
+        assert_eq!(inf.dispatch(64), ImplKind::A);
+    }
+
+    #[test]
+    fn noisy_profile_keeps_monotonicity() {
+        // B wins at m=2 by noise, loses at 4, then wins from 8 onward.
+        let mut prof = |ik: ImplKind, m: usize| -> Result<f64> {
+            Ok(match ik {
+                ImplKind::A => match m {
+                    2 => 10.0,
+                    _ => m as f64,
+                },
+                ImplKind::B => 4.0 + 0.45 * m as f64,
+                ImplKind::C => 1e9,
+            })
+        };
+        let ms = vec![1, 2, 4, 8, 16, 32];
+        let inf = find_inflections("x", 1, 1, &ms, &mut prof).unwrap();
+        assert_eq!(inf.m1, 8, "noise blip at m=2 must not set m1");
+    }
+
+    #[test]
+    fn lookup_table_roundtrip() {
+        let table = LookupTable {
+            model: "tiny".into(),
+            hardware: "cpu".into(),
+            entries: vec![OpInflection {
+                op: "qkv_proj".into(),
+                n: 768,
+                k: 256,
+                m1: 4,
+                m2: 32,
+            }],
+        };
+        let dir = std::env::temp_dir().join("fdpp_table_test.json");
+        let path = dir.to_str().unwrap();
+        table.save_json(path).unwrap();
+        let back = LookupTable::load_json(path).unwrap();
+        assert_eq!(back.entries[0].m1, 4);
+        assert_eq!(back.dispatch("qkv_proj", 2).unwrap(), ImplKind::A);
+        assert_eq!(back.dispatch("qkv_proj", 8).unwrap(), ImplKind::B);
+        assert!(back.dispatch("nope", 8).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

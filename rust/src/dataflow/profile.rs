@@ -1,0 +1,99 @@
+//! Real-CPU profiling backend for the §5 decision flow: times the
+//! AOT-compiled microkernel artifacts (`micro_{impl}_m{M}_{op}`) through
+//! the PJRT runtime and feeds the measurements to `find_inflections`.
+
+use crate::util::rng::Rng;
+
+use super::{find_inflections, ImplKind, LookupTable, OpInflection};
+use crate::bench_support::time_median;
+use crate::error::{Error, Result};
+use crate::runtime::{literal_f32, Runtime};
+
+fn impl_tag(ik: ImplKind) -> &'static str {
+    match ik {
+        ImplKind::A => "gemv",
+        ImplKind::B => "flat",
+        ImplKind::C => "conv",
+    }
+}
+
+/// Microkernel entry name convention from aot.py.
+pub fn micro_entry_name(ik: ImplKind, m: usize, op: &str) -> String {
+    format!("micro_{}_m{}_{}", impl_tag(ik), m, op)
+}
+
+/// Time one microkernel artifact (median of `reps` runs), seconds.
+pub fn time_micro(
+    rt: &mut Runtime,
+    ik: ImplKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    op: &str,
+    reps: usize,
+) -> Result<f64> {
+    let name = micro_entry_name(ik, m, op);
+    rt.ensure_compiled(&name)?;
+    let mut rng = Rng::seed_from_u64(0xF1A5);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+    let x = literal_f32(&x, &[m, k])?;
+    let w = literal_f32(&w, &[k, n])?;
+    // One warmup execution outside the timed region.
+    rt.execute(&name, &[&x, &w])?;
+    let mut err = None;
+    let t = time_median(reps, || {
+        if let Err(e) = rt.execute(&name, &[&x, &w]) {
+            err = Some(e);
+        }
+    });
+    match err {
+        Some(e) => Err(e),
+        None => Ok(t),
+    }
+}
+
+/// Run the full decision flow over every micro op in the manifest,
+/// producing the runtime lookup table (Figure 9(b) offline pass).
+pub fn build_lookup_table(rt: &mut Runtime, reps: usize) -> Result<LookupTable> {
+    // Discover (op, [ms], n, k) from manifest micro entries.
+    let mut ops: Vec<(String, usize, usize, Vec<usize>)> = Vec::new();
+    for e in rt.manifest.entries.clone() {
+        if e.kind != "micro" {
+            continue;
+        }
+        let op = e
+            .params
+            .get("op")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string();
+        let m = e.params.get("m").and_then(|v| v.as_usize()).unwrap_or(0);
+        let n = e.params.get("n").and_then(|v| v.as_usize()).unwrap_or(0);
+        let k = e.params.get("k").and_then(|v| v.as_usize()).unwrap_or(0);
+        match ops.iter_mut().find(|(o, ..)| *o == op) {
+            Some((_, _, _, ms)) => {
+                if !ms.contains(&m) {
+                    ms.push(m);
+                }
+            }
+            None => ops.push((op, n, k, vec![m])),
+        }
+    }
+    if ops.is_empty() {
+        return Err(Error::Artifact(
+            "no micro entries in manifest (rebuild artifacts without --skip-micro)".into(),
+        ));
+    }
+    let mut entries: Vec<OpInflection> = Vec::new();
+    for (op, n, k, mut ms) in ops {
+        ms.sort_unstable();
+        let mut profiler = |ik: ImplKind, m: usize| time_micro(rt, ik, m, n, k, &op, reps);
+        entries.push(find_inflections(&op, n, k, &ms, &mut profiler)?);
+    }
+    Ok(LookupTable {
+        model: rt.manifest.model.name.clone(),
+        hardware: format!("pjrt-{}", rt.platform()),
+        entries,
+    })
+}

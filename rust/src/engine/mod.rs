@@ -1,0 +1,490 @@
+//! The serving engine: single-owner hot loop tying together the PJRT
+//! runtime, paged KV cache, continuous batcher, scheduler and sampler.
+//!
+//! Per iteration: the scheduler picks prefill-vs-decode; prefill runs a
+//! single sequence through a bucketed prefill executable and admits it
+//! into the running set; decode assembles the bucketed batch, executes
+//! one step for every running sequence, samples, streams tokens, and
+//! retires finished sequences.
+//!
+//! KV residency (perf pass, EXPERIMENTS.md §Perf): the dense KV tensors
+//! persist on device across decode steps. Lanes are sticky, so a newly
+//! prefilled sequence is spliced into the running batch *on device* via
+//! the `insert_b{B}_s{S}` artifact — no host round trip. Only bucket
+//! growth/shrink forces a host-side rebuild through the paged store.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::batching::{pick_prefill_bucket, Batcher};
+use crate::config::EngineConfig;
+use crate::error::{Error, Result};
+use crate::kvcache::{KvCache, KvGeometry, SeqId};
+use crate::metrics::EngineMetrics;
+use crate::router::{FinishReason, Request, Router, SeqState, Sequence, TokenEvent};
+use crate::runtime::{literal_f32, literal_i32, to_vec_f32, Manifest, Runtime};
+use crate::sampling::{Sampler, SamplingParams};
+use crate::scheduler::{decide, preemption_victim, Action, SchedState};
+use crate::tokenizer::{ByteTokenizer, EOS};
+
+/// Device-resident dense KV state for the current batch composition.
+struct DenseState {
+    bucket: usize,
+    /// Mirrors the batcher's sticky lanes at the time of the last sync.
+    lanes: Vec<Option<SeqId>>,
+    k: xla::Literal,
+    v: xla::Literal,
+}
+
+/// The engine. Owns all sequence state; not Send — run it on a dedicated
+/// thread and talk to it via `Request` channels.
+pub struct Engine {
+    pub rt: Runtime,
+    pub cfg: EngineConfig,
+    kv: KvCache,
+    batcher: Batcher,
+    router: Router,
+    sampler: Sampler,
+    seqs: HashMap<SeqId, Sequence>,
+    dense: Option<DenseState>,
+    pub metrics: EngineMetrics,
+    pub tokenizer: ByteTokenizer,
+    vocab: usize,
+}
+
+impl Engine {
+    pub fn new(rt: Runtime, cfg: EngineConfig) -> Result<Self> {
+        cfg.validate()?;
+        let m = &rt.manifest.model;
+        let geo = KvGeometry {
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            head_dim: m.head_dim,
+            block_tokens: cfg.kv_block_tokens,
+            max_seq: m.max_seq,
+        };
+        let kv = KvCache::new(geo, cfg.kv_total_blocks);
+        let tokenizer = ByteTokenizer::new(m.vocab_size);
+        let vocab = m.vocab_size;
+        Ok(Engine {
+            batcher: Batcher::new(cfg.decode_buckets.clone()),
+            sampler: Sampler::new(cfg.seed),
+            router: Router::new(),
+            seqs: HashMap::new(),
+            dense: None,
+            metrics: EngineMetrics::default(),
+            kv,
+            rt,
+            cfg,
+            tokenizer,
+            vocab,
+        })
+    }
+
+    /// Pre-compile the executables the serving loop will need (moves the
+    /// compile cost out of the first request's latency).
+    pub fn warmup(&mut self) -> Result<()> {
+        for &b in &self.cfg.decode_buckets.clone() {
+            self.rt
+                .ensure_compiled(&Manifest::decode_entry_name(b, !self.cfg.async_softmax))?;
+        }
+        for &s in &self.cfg.prefill_buckets.clone() {
+            self.rt.ensure_compiled(&Manifest::prefill_entry_name(s))?;
+        }
+        Ok(())
+    }
+
+    /// Submit a text prompt; returns (seq id, token stream).
+    pub fn submit_text(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        params: SamplingParams,
+    ) -> Result<(SeqId, mpsc::Receiver<TokenEvent>)> {
+        let toks = self.tokenizer.encode(prompt);
+        self.submit_tokens(toks, max_new_tokens, params)
+    }
+
+    /// Submit pre-tokenized input.
+    pub fn submit_tokens(
+        &mut self,
+        prompt_tokens: Vec<u32>,
+        max_new_tokens: usize,
+        params: SamplingParams,
+    ) -> Result<(SeqId, mpsc::Receiver<TokenEvent>)> {
+        let max_prefill = *self.cfg.prefill_buckets.last().unwrap();
+        if prompt_tokens.is_empty() {
+            return Err(Error::Request("empty prompt".into()));
+        }
+        if prompt_tokens.len() > max_prefill {
+            return Err(Error::Request(format!(
+                "prompt of {} tokens exceeds the largest prefill bucket {max_prefill}",
+                prompt_tokens.len()
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        let id = self.router.submit(Request {
+            prompt_tokens,
+            max_new_tokens: max_new_tokens.min(self.cfg.max_new_tokens),
+            params,
+            stream: tx,
+            arrived: Instant::now(),
+        });
+        Ok((id, rx))
+    }
+
+    /// True when no work remains.
+    pub fn is_idle(&self) -> bool {
+        self.router.queued() == 0 && self.batcher.is_empty()
+    }
+
+    pub fn running(&self) -> usize {
+        self.batcher.len()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.router.queued()
+    }
+
+    /// Run one scheduling iteration. Returns the action taken.
+    pub fn step(&mut self) -> Result<Action> {
+        let next_blocks = self
+            .router
+            .queue
+            .front()
+            .map(|s| (s.prompt.len() + 1).div_ceil(self.cfg.kv_block_tokens))
+            .unwrap_or(0);
+        let action = decide(SchedState {
+            queued: self.router.queued(),
+            running: self.batcher.len(),
+            max_running: self.cfg.max_running,
+            free_blocks: self.kv.free_blocks(),
+            next_prefill_blocks: next_blocks,
+        });
+        match action {
+            Action::Prefill => self.step_prefill()?,
+            Action::Decode => self.step_decode()?,
+            Action::Idle => {}
+        }
+        Ok(action)
+    }
+
+    /// Run until all submitted work is finished (batch/offline mode).
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Prefill
+    // -----------------------------------------------------------------
+
+    fn step_prefill(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let mut seq = match self.router.pop_next() {
+            Some(s) => s,
+            None => return Ok(()),
+        };
+        let len = seq.prompt.len();
+        let bucket = match pick_prefill_bucket(&self.cfg.prefill_buckets, len) {
+            Some(b) => b,
+            None => {
+                seq.emit(TokenEvent::Finished {
+                    reason: FinishReason::Error,
+                    n_generated: 0,
+                });
+                return Err(Error::Request(format!("prompt {len} exceeds prefill buckets")));
+            }
+        };
+        // KV admission control (+1 for the first generated token).
+        if let Err(e) = self.kv.alloc_seq(seq.id, len + 1) {
+            // No room: requeue and let decode drain.
+            self.router.requeue_front(seq);
+            if self.batcher.is_empty() {
+                return Err(e); // truly stuck — surface it
+            }
+            return self.step_decode();
+        }
+
+        // Pad prompt to the bucket.
+        let mut toks: Vec<i32> = seq.prompt.iter().map(|&t| t as i32).collect();
+        toks.resize(bucket, 0);
+        let tokens_lit = literal_i32(&toks, &[1, bucket])?;
+        let entry = Manifest::prefill_entry_name(bucket);
+        let exec_t0 = Instant::now();
+        let outs = self.rt.execute(&entry, &[&tokens_lit])?;
+        let mut exec_dt = exec_t0.elapsed();
+        let [logits, k, v]: [xla::Literal; 3] = outs
+            .try_into()
+            .map_err(|_| Error::Artifact("prefill must return 3 outputs".into()))?;
+
+        // Persist KV to the paged backing store (needed for rebuilds and
+        // preemption; off the per-decode-step path).
+        let k_host = to_vec_f32(&k)?;
+        let v_host = to_vec_f32(&v)?;
+        self.kv.write_prefill(seq.id, &k_host, &v_host, bucket, len)?;
+        seq.kv_len = len;
+
+        // First token from the logits row of the last real position.
+        let logits_host = to_vec_f32(&logits)?;
+        let row = &logits_host[(len - 1) * self.vocab..len * self.vocab];
+        let tok = self.sampler.sample(row, seq.params);
+        seq.generated.push(tok);
+        seq.first_token_at = Some(Instant::now());
+        self.metrics.first_token.record(seq.arrived.elapsed());
+        seq.emit(TokenEvent::Token(tok));
+        self.metrics.tokens_generated += 1;
+        self.metrics.requests_admitted += 1;
+
+        if self.tokenizer.is_eos(tok) || seq.max_new_tokens <= 1 {
+            let reason = if self.tokenizer.is_eos(tok) {
+                FinishReason::Eos
+            } else {
+                FinishReason::MaxTokens
+            };
+            self.finish_seq(&mut seq, reason)?;
+        } else {
+            seq.state = SeqState::Decoding;
+            let admission = self.batcher.admit(seq.id)?;
+            if admission.bucket_grew {
+                // Bucket changed: the dense tensor shape no longer fits.
+                // Persist and drop; the next decode step rebuilds.
+                self.invalidate_dense()?;
+            } else if let Some(mut dense) = self.dense.take() {
+                // Fast path: splice this sequence's KV into the running
+                // dense cache on device (no host round trip).
+                let ins_entry = format!("insert_b{}_s{}", dense.bucket, bucket);
+                let lane_lit = literal_i32(&[admission.lane as i32], &[1])?;
+                let ins_t0 = Instant::now();
+                let mut outs = self
+                    .rt
+                    .execute(&ins_entry, &[&dense.k, &dense.v, &k, &v, &lane_lit])?;
+                exec_dt += ins_t0.elapsed();
+                if outs.len() != 2 {
+                    return Err(Error::Artifact(format!(
+                        "{ins_entry}: expected 2 outputs, got {}",
+                        outs.len()
+                    )));
+                }
+                dense.v = outs.pop().unwrap();
+                dense.k = outs.pop().unwrap();
+                dense.lanes[admission.lane] = Some(seq.id);
+                self.dense = Some(dense);
+                self.metrics.kv_inserts += 1;
+            }
+            self.seqs.insert(seq.id, seq);
+        }
+        self.metrics.prefill_steps += 1;
+        let dt = t0.elapsed();
+        self.metrics.step.record(dt);
+        self.metrics.step_overhead.record(dt.saturating_sub(exec_dt));
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Decode
+    // -----------------------------------------------------------------
+
+    fn step_decode(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        // KV headroom: each running sequence may need one fresh block.
+        while self.kv.free_blocks() < self.batcher.len() && self.batcher.len() > 1 {
+            self.preempt_youngest()?;
+        }
+        let batch = self.batcher.assemble()?;
+        let bucket = batch.bucket;
+        let geo = self.kv.geometry();
+
+        let stale = match &self.dense {
+            None => true,
+            Some(d) => d.bucket != bucket || d.lanes != batch.lanes,
+        };
+        if stale {
+            self.rebuild_dense(&batch.lanes, bucket)?;
+            self.metrics.kv_rebuilds += 1;
+        }
+
+        // Assemble token/pos lanes (holes: token 0, pos 0).
+        let mut toks = vec![0i32; bucket];
+        let mut pos = vec![0i32; bucket];
+        for (i, slot) in batch.lanes.iter().enumerate() {
+            if let Some(id) = slot {
+                let s = &self.seqs[id];
+                toks[i] = s.last_token() as i32;
+                pos[i] = s.kv_len as i32;
+            }
+        }
+        let toks_lit = literal_i32(&toks, &[bucket])?;
+        let pos_lit = literal_i32(&pos, &[bucket])?;
+
+        let entry = Manifest::decode_entry_name(bucket, !self.cfg.async_softmax);
+        let exec_t0 = Instant::now();
+        let outs = {
+            let d = self.dense.take().expect("dense state after rebuild");
+            let r = self.rt.execute(&entry, &[&toks_lit, &pos_lit, &d.k, &d.v]);
+            self.dense = Some(d);
+            r?
+        };
+        let exec_dt = exec_t0.elapsed();
+        let mut outs = outs;
+        if outs.len() != 4 {
+            return Err(Error::Artifact(format!(
+                "decode entry returned {} outputs, want 4",
+                outs.len()
+            )));
+        }
+        let flags = outs.pop().unwrap();
+        let v_new = outs.pop().unwrap();
+        let k_new = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+
+        // The updated caches become the new device state.
+        self.dense = Some(DenseState {
+            bucket,
+            lanes: batch.lanes.clone(),
+            k: k_new,
+            v: v_new,
+        });
+
+        let logits_host = to_vec_f32(&logits)?;
+        let flags_host = to_vec_f32(&flags)?;
+        let mut finished: Vec<SeqId> = Vec::new();
+        for (i, slot) in batch.lanes.iter().enumerate() {
+            let Some(id) = slot else { continue };
+            let seq = self.seqs.get_mut(id).unwrap();
+            let row = &logits_host[i * self.vocab..(i + 1) * self.vocab];
+            let tok = self.sampler.sample(row, seq.params);
+            self.kv.grow_one(*id)?;
+            seq.kv_len += 1;
+            seq.generated.push(tok);
+            seq.emit(TokenEvent::Token(tok));
+            self.metrics.tokens_generated += 1;
+            self.metrics.decode_rows += 1;
+            if flags_host[i] > 0.5 {
+                self.metrics.recompute_rows += 1;
+            }
+            let done_eos = tok == EOS;
+            let done_len =
+                seq.generated.len() >= seq.max_new_tokens || seq.kv_len + 1 >= geo.max_seq;
+            if done_eos || done_len {
+                finished.push(*id);
+            }
+        }
+        // Retire finished sequences (their lanes become holes; the dense
+        // tensor stays valid — holes are masked by pos/kv_len).
+        for id in finished {
+            let mut seq = self.seqs.remove(&id).unwrap();
+            let reason = if seq.generated.last() == Some(&EOS) {
+                FinishReason::Eos
+            } else {
+                FinishReason::MaxTokens
+            };
+            self.retire(&mut seq, reason)?;
+        }
+        self.metrics.decode_steps += 1;
+        let dt = t0.elapsed();
+        self.metrics.step.record(dt);
+        self.metrics.step_overhead.record(dt.saturating_sub(exec_dt));
+        let lanes = batch.occupancy().max(1) as u32;
+        self.metrics.per_token.record(dt / lanes);
+        Ok(())
+    }
+
+    /// Remove a sequence from the running set, keeping the dense state
+    /// consistent (hole without shrink; invalidate on shrink).
+    fn retire(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
+        let shrank = self.batcher.remove(seq.id)?;
+        if shrank {
+            self.invalidate_dense()?;
+        } else if let Some(d) = self.dense.as_mut() {
+            for slot in d.lanes.iter_mut() {
+                if *slot == Some(seq.id) {
+                    *slot = None;
+                }
+            }
+        }
+        self.finish_seq(seq, reason)
+    }
+
+    /// Persist the device cache into the paged store and drop it.
+    fn invalidate_dense(&mut self) -> Result<()> {
+        if let Some(prev) = self.dense.take() {
+            // Only still-allocated lanes are written back.
+            let lanes: Vec<Option<SeqId>> = prev
+                .lanes
+                .iter()
+                .map(|slot| slot.filter(|id| self.kv.contains(*id)))
+                .collect();
+            if lanes.iter().any(Option::is_some) {
+                let k_host = to_vec_f32(&prev.k)?;
+                let v_host = to_vec_f32(&prev.v)?;
+                self.kv.scatter_dense(&lanes, prev.bucket, &k_host, &v_host)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild the dense device KV from the paged store for a new batch
+    /// composition, first persisting the previous composition's state.
+    fn rebuild_dense(&mut self, lanes: &[Option<SeqId>], bucket: usize) -> Result<()> {
+        self.invalidate_dense()?;
+        let geo = self.kv.geometry();
+        let n = geo.dense_elems(bucket);
+        let mut k_host = vec![0.0f32; n];
+        let mut v_host = vec![0.0f32; n];
+        self.kv.gather_dense(lanes, bucket, &mut k_host, &mut v_host)?;
+        let shape = [geo.n_layers, bucket, geo.n_heads, geo.max_seq, geo.head_dim];
+        self.dense = Some(DenseState {
+            bucket,
+            lanes: lanes.to_vec(),
+            k: literal_f32(&k_host, &shape)?,
+            v: literal_f32(&v_host, &shape)?,
+        });
+        Ok(())
+    }
+
+    /// Preempt the youngest running sequence (KV pressure): its lane is
+    /// freed and the request finishes with `Preempted`.
+    fn preempt_youngest(&mut self) -> Result<()> {
+        let ids = self.batcher.running_ids();
+        let victim_idx = preemption_victim(&ids)
+            .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
+        let id = ids[victim_idx];
+        let mut seq = self.seqs.remove(&id).unwrap();
+        self.retire(&mut seq, FinishReason::Preempted)
+    }
+
+    fn finish_seq(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
+        seq.state = SeqState::Finished(reason);
+        seq.emit(TokenEvent::Finished {
+            reason,
+            n_generated: seq.generated.len(),
+        });
+        if self.kv.contains(seq.id) {
+            self.kv.free_seq(seq.id)?;
+        }
+        self.metrics.requests_finished += 1;
+        Ok(())
+    }
+
+    /// Offline helper: generate `max_new_tokens` for one prompt, blocking.
+    pub fn generate_text(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        params: SamplingParams,
+    ) -> Result<String> {
+        let (_, rx) = self.submit_text(prompt, max_new_tokens, params)?;
+        self.run_to_completion()?;
+        let mut out = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            if let TokenEvent::Token(t) = ev {
+                out.push(t);
+            }
+        }
+        Ok(self.tokenizer.decode(&out))
+    }
+}

@@ -1,0 +1,57 @@
+//! Unified error type for the engine.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All the ways the engine can fail.
+#[derive(Debug)]
+pub enum Error {
+    /// PJRT / XLA runtime failure.
+    Xla(xla::Error),
+    /// Artifact manifest or HLO file problems.
+    Artifact(String),
+    /// KV-cache exhaustion or misuse.
+    KvCache(String),
+    /// Scheduling / batching invariant violation.
+    Schedule(String),
+    /// Configuration errors.
+    Config(String),
+    /// Request-level errors (bad input, closed stream, ...).
+    Request(String),
+    /// I/O.
+    Io(std::io::Error),
+    /// JSON (manifest, lookup tables).
+    Json(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::KvCache(m) => write!(f, "kvcache: {m}"),
+            Error::Schedule(m) => write!(f, "schedule: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Request(m) => write!(f, "request: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json(e) => write!(f, "json: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+

@@ -1,0 +1,129 @@
+//! C2 analytics — flat GEMM tiling (paper §4).
+//!
+//! Implements Eq. (5): the computation/memory ratio of a flat GEMM tiled
+//! as (B_N, B_K), the parallelism `N / B_N`, the padding-waste model that
+//! motivates pad-to-8, and the B_N chooser the paper derives from the two
+//! regimes (small N parallelism-bound, large N memory-bound).
+
+/// Tiling configuration of one flat GEMM launch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tiling {
+    pub b_n: usize,
+    pub b_k: usize,
+    /// Whether the double-buffering schedule is enabled (large-N regime).
+    pub double_buffer: bool,
+}
+
+/// Eq. (5): computation/memory ratio of a flat GEMM [M,K]x[K,N] tiled by
+/// (B_N, B_K). Simplified closed form: 2*M*K / (K + M*K/B_N + M).
+pub fn compute_memory_ratio(m: usize, k: usize, b_n: usize) -> f64 {
+    let (m, k, b_n) = (m as f64, k as f64, b_n as f64);
+    2.0 * m * k / (k + m * k / b_n + m)
+}
+
+/// Thread-block parallelism of the launch: N / B_N (K tiles are
+/// sequential within a block to avoid reduction atomics, §4).
+pub fn parallelism(n: usize, b_n: usize) -> usize {
+    n.div_ceil(b_n)
+}
+
+/// Fraction of the MAC array doing useful work when M is padded to
+/// `pad_to` (previous designs: 64; FlashDecoding++: 8).
+pub fn padding_utilization(m: usize, pad_to: usize) -> f64 {
+    let padded = m.div_ceil(pad_to) * pad_to;
+    m as f64 / padded as f64
+}
+
+/// The paper's B_N heuristic: keep `N / B_N` close to the hardware
+/// parallelism (number of SMs) for small N — parallelism-bound regime —
+/// and grow B_N (enabling double buffering) once N is large enough that
+/// memory latency dominates.
+pub fn choose_tiling(n: usize, k: usize, sms: usize) -> Tiling {
+    // Target ~1-2 waves of blocks across the SMs.
+    let target_blocks = (sms * 2).max(1);
+    let mut b_n = 16;
+    while n / b_n > target_blocks && b_n < 512 {
+        b_n *= 2;
+    }
+    // Large-N regime: plenty of blocks even at big tiles -> memory-bound;
+    // enable double buffering (paper §4 "we apply such a technique when N
+    // is large").
+    let double_buffer = n / b_n >= sms;
+    let b_k = if k >= 4096 { 64 } else { 32.min(k.max(8)) };
+    Tiling {
+        b_n,
+        b_k,
+        double_buffer,
+    }
+}
+
+/// All power-of-two B_N candidates in a sweep range (Figure 7's x-axis).
+pub fn bn_candidates() -> Vec<usize> {
+    vec![16, 32, 64, 128, 256, 512]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq5_increases_with_bn() {
+        // The computation/memory ratio is positively correlated with B_N.
+        let mut prev = 0.0;
+        for b_n in [16, 32, 64, 128, 256] {
+            let r = compute_memory_ratio(8, 4096, b_n);
+            assert!(r > prev, "ratio must increase with B_N");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn eq5_closed_form_spot_check() {
+        // 2*M*K / (K + M*K/B_N + M) with M=8, K=4096, B_N=128.
+        let want = 2.0 * 8.0 * 4096.0 / (4096.0 + 8.0 * 4096.0 / 128.0 + 8.0);
+        assert!((compute_memory_ratio(8, 4096, 128) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallelism_decreases_with_bn() {
+        assert_eq!(parallelism(4096, 32), 128);
+        assert_eq!(parallelism(4096, 256), 16);
+        assert!(parallelism(4096, 32) > parallelism(4096, 256));
+    }
+
+    #[test]
+    fn padding_math_matches_paper() {
+        // §1: pad-to-64 at batch 8 wastes >87% of the MACs.
+        assert!((padding_utilization(8, 64) - 0.125).abs() < 1e-12);
+        // FlashDecoding++ pads to 8: fully utilized at batch 8.
+        assert!((padding_utilization(8, 8) - 1.0).abs() < 1e-12);
+        // and M=3 still wastes less at pad-8 than pad-64.
+        assert!(padding_utilization(3, 8) > padding_utilization(3, 64));
+    }
+
+    #[test]
+    fn tiling_regimes() {
+        let sms = 108; // A100
+        // Small N: parallelism-bound -> small B_N, N/B_N near 2*SMs.
+        let small = choose_tiling(2048, 4096, sms);
+        assert!(small.b_n <= 32);
+        // Large N: memory-bound -> bigger tiles + double buffering.
+        let large = choose_tiling(32768, 4096, sms);
+        assert!(large.b_n > small.b_n);
+        assert!(large.double_buffer);
+    }
+
+    #[test]
+    fn choose_tiling_parallelism_near_constant() {
+        // Paper insight: N/B_N tends to a constant related to SM count.
+        let sms = 108;
+        for n in [4096, 8192, 16384, 32768] {
+            let t = choose_tiling(n, 4096, sms);
+            let par = parallelism(n, t.b_n);
+            assert!(
+                par >= sms && par <= 4 * sms,
+                "N={n}: parallelism {par} strays from SM count"
+            );
+        }
+    }
+}

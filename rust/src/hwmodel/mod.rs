@@ -1,0 +1,409 @@
+//! Analytic GPU cost model — the testbed substitute (DESIGN.md §3).
+//!
+//! The paper's evaluation runs on four GPUs we don't have; every figure,
+//! though, compares *kernel schedules* (padding waste, synchronization
+//! overhead, parallelism-vs-reuse tradeoffs, resource choice), which are
+//! functions of a resource model: SM count, HBM bandwidth, matrix-unit
+//! and vector-unit throughput, launch overhead. This module implements
+//! that model with published hardware specs and the schedule equations
+//! from the paper (§4 Eq. 5, §5 insight about FastGEMV's M-fold weight
+//! re-reads, §2.3/§3 partial-softmax synchronization).
+//!
+//! Absolute times are estimates; the reproduced quantities are the
+//! *ratios and crossovers* of Figures 1, 7, 9, 10-13.
+
+use crate::dataflow::ImplKind;
+use crate::gemm;
+
+/// Published hardware characteristics of one GPU.
+#[derive(Debug, Clone)]
+pub struct GpuProfile {
+    pub name: String,
+    pub vendor: Vendor,
+    /// Streaming multiprocessors (NVIDIA) / compute units (AMD).
+    pub sms: usize,
+    /// HBM/GDDR bandwidth, bytes per second.
+    pub hbm_bw: f64,
+    /// Matrix-unit (Tensor Core / Matrix Core) f16 FLOP/s, dense.
+    pub tc_flops: f64,
+    /// Vector-unit (CUDA core / stream processor) f32 FLOP/s.
+    pub cc_flops: f64,
+    /// Kernel launch + driver overhead per kernel, seconds.
+    pub launch_s: f64,
+    /// VRAM capacity in bytes (Table 1).
+    pub vram_bytes: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vendor {
+    Nvidia,
+    Amd,
+}
+
+/// Table 1 hardware platforms.
+pub fn a100() -> GpuProfile {
+    GpuProfile {
+        name: "A100-80GB".into(),
+        vendor: Vendor::Nvidia,
+        sms: 108,
+        hbm_bw: 2.039e12,
+        tc_flops: 312e12,
+        cc_flops: 19.5e12,
+        launch_s: 4.0e-6,
+        vram_bytes: 80 << 30,
+    }
+}
+
+pub fn rtx3090() -> GpuProfile {
+    GpuProfile {
+        name: "RTX3090".into(),
+        vendor: Vendor::Nvidia,
+        sms: 82,
+        hbm_bw: 0.936e12,
+        tc_flops: 71e12,
+        cc_flops: 35.6e12,
+        launch_s: 4.0e-6,
+        vram_bytes: 24 << 30,
+    }
+}
+
+pub fn mi210() -> GpuProfile {
+    GpuProfile {
+        name: "MI210".into(),
+        vendor: Vendor::Amd,
+        sms: 104,
+        hbm_bw: 1.638e12,
+        tc_flops: 181e12,
+        cc_flops: 22.6e12,
+        launch_s: 6.0e-6,
+        vram_bytes: 64 << 30,
+    }
+}
+
+pub fn rx7900xtx() -> GpuProfile {
+    GpuProfile {
+        name: "RX7900XTX".into(),
+        vendor: Vendor::Amd,
+        sms: 96,
+        hbm_bw: 0.960e12,
+        tc_flops: 122.8e12,
+        cc_flops: 61.4e12,
+        launch_s: 6.0e-6,
+        vram_bytes: 24 << 30,
+    }
+}
+
+pub fn all_gpus() -> Vec<GpuProfile> {
+    vec![a100(), rtx3090(), mi210(), rx7900xtx()]
+}
+
+// ---------------------------------------------------------------------------
+// GEMM kernel models
+// ---------------------------------------------------------------------------
+
+/// Achievable-fraction constants (calibrated once against the paper's two
+/// §5 measurements, then held fixed across all figures — see tests).
+mod cal {
+    /// FastGEMV reaches near-streaming bandwidth.
+    pub const GEMV_BW_EFF: f64 = 0.88;
+    /// cuBLAS-style TC GEMM on flat shapes: lower effective bandwidth
+    /// (tile quantization + epilogue) — yields the 82.15% §5 ratio.
+    pub const CONV_BW_EFF: f64 = 0.72;
+    /// Flat GEMM with double buffering (large N).
+    pub const FLAT_BW_EFF_DB: f64 = 0.85;
+    /// Flat GEMM without double buffering (small N, parallelism-bound).
+    pub const FLAT_BW_EFF: f64 = 0.66;
+    /// MXU/TC sustained fraction for well-shaped GEMMs.
+    pub const TC_EFF: f64 = 0.75;
+    /// Vector-unit sustained fraction.
+    pub const CC_EFF: f64 = 0.80;
+}
+
+/// Time (s) of one x[M,K] @ w[K,N] with implementation `impl_kind`.
+/// `elt` is the element size in bytes (2 for fp16/bf16).
+pub fn gemm_time(gpu: &GpuProfile, impl_kind: ImplKind, m: usize, n: usize, k: usize, elt: usize) -> f64 {
+    let (mf, nf, kf) = (m as f64, n as f64, k as f64);
+    match impl_kind {
+        ImplKind::A => {
+            // FastGEMV processes each output row as an independent GEMV:
+            // the weight matrix is re-streamed per row (no MAC-array
+            // reuse) — this is why ImplA loses past small M (§5). L2
+            // catches part of the re-reads, so the effective traffic
+            // grows sublinearly in M (calibrated to the §5 49.75% point).
+            let passes = 1.0 + (mf - 1.0) * 0.55;
+            let bytes = passes * kf * nf * elt as f64 + (mf * kf + mf * nf) * elt as f64;
+            let t_mem = bytes / (gpu.hbm_bw * cal::GEMV_BW_EFF);
+            let t_cmp = 2.0 * mf * nf * kf / (gpu.cc_flops * cal::CC_EFF);
+            t_mem.max(t_cmp) + gpu.launch_s
+        }
+        ImplKind::B => {
+            // Flat GEMM (§4): pad M to 8, tile N/K, weights read once.
+            let mp = m.div_ceil(8) * 8;
+            let tiling = gemm::choose_tiling(n, k, gpu.sms);
+            let blocks = gemm::parallelism(n, tiling.b_n);
+            // Memory-bound with double buffering overlapping the K loop.
+            let bw_eff = if tiling.double_buffer {
+                cal::FLAT_BW_EFF_DB
+            } else {
+                cal::FLAT_BW_EFF
+            };
+            // Bandwidth utilization needs enough blocks in flight.
+            let bw_util = (blocks as f64 / (gpu.sms as f64 * 0.5)).min(1.0);
+            let bytes = (kf * nf + mp as f64 * kf + mp as f64 * nf) * elt as f64;
+            let t_mem = bytes / (gpu.hbm_bw * bw_eff * bw_util);
+            let t_cmp = 2.0 * mp as f64 * nf * kf / (gpu.tc_flops * cal::TC_EFF);
+            t_mem.max(t_cmp) + gpu.launch_s
+        }
+        ImplKind::C => {
+            // Conventional tiled GEMM: pad M to 64 (the pre-§4 design).
+            let mp = m.div_ceil(64) * 64;
+            let bytes = (kf * nf + mp as f64 * kf + mp as f64 * nf) * elt as f64;
+            let t_mem = bytes / (gpu.hbm_bw * cal::CONV_BW_EFF);
+            // Padded rows burn real MACs.
+            let t_cmp = 2.0 * mp as f64 * nf * kf / (gpu.tc_flops * cal::TC_EFF);
+            t_mem.max(t_cmp) + gpu.launch_s
+        }
+    }
+}
+
+/// Figure 7 model: normalized flat-GEMM performance at a forced N-tile
+/// size `b_n` (instead of the heuristic choice). M is padded to 8.
+pub fn flat_gemm_time_forced_bn(gpu: &GpuProfile, m: usize, n: usize, k: usize, b_n: usize, elt: usize) -> f64 {
+    let mp = m.div_ceil(8) * 8;
+    let (mf, nf, kf) = (mp as f64, n as f64, k as f64);
+    let blocks = gemm::parallelism(n, b_n);
+    // Parallelism-bound regime: too few blocks idle SMs (both compute and
+    // memory pipelines).
+    let util = (blocks as f64 / (gpu.sms as f64 * 0.5)).min(1.0);
+    // Reuse regime (Eq. 5): small B_N re-reads activations; express as
+    // traffic inflation from the compute/memory-ratio formula.
+    let ideal_ratio = gemm::compute_memory_ratio(mp, k, 4096.min(n));
+    let ratio = gemm::compute_memory_ratio(mp, k, b_n);
+    let traffic_inflation = ideal_ratio / ratio;
+    let double_buffer = blocks >= gpu.sms;
+    let bw_eff = if double_buffer {
+        cal::FLAT_BW_EFF_DB
+    } else {
+        cal::FLAT_BW_EFF
+    };
+    let bytes = (kf * nf + mf * kf * 0.0 + mf * nf) * elt as f64 * traffic_inflation
+        + mf * kf * elt as f64 * blocks as f64; // activations re-read per block
+    let t_mem = bytes / (gpu.hbm_bw * bw_eff * util);
+    let t_cmp = 2.0 * mf * nf * kf / (gpu.tc_flops * cal::TC_EFF * util);
+    t_mem.max(t_cmp) + gpu.launch_s
+}
+
+// ---------------------------------------------------------------------------
+// Attention kernel models
+// ---------------------------------------------------------------------------
+
+/// Softmax scheme of the decode-attention kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SoftmaxScheme {
+    /// Whole-row softmax, scores materialized to HBM (HF eager).
+    Naive,
+    /// Partial softmax with synchronized max updates (FlashAttention /
+    /// FlashDecoding, Figure 4(b)).
+    SyncPartial,
+    /// Unified-max asynchronized partials (FlashDecoding++, Figure 4(c)).
+    AsyncUnified,
+}
+
+/// KV chunk length used by split-KV decode kernels.
+pub const KV_CHUNK: usize = 256;
+
+/// §2.3 calibration: the synchronized update costs 18.8% of attention
+/// time for Llama2-7B @ 1K on A100. The rescale traffic+flops scale with
+/// the same terms as the base kernel, so the fraction is scheme-constant.
+const SYNC_UPDATE_FRAC: f64 = 0.188 / (1.0 - 0.188);
+
+/// Expected recompute rate of the unified-max scheme (Figure 5: tails are
+/// negligible for supported models).
+const ASYNC_RECOMPUTE_RATE: f64 = 0.005;
+
+/// Time (s) of decode attention for a whole model layer.
+pub fn attention_decode_time(
+    gpu: &GpuProfile,
+    batch: usize,
+    heads: usize,
+    head_dim: usize,
+    kv_len: usize,
+    scheme: SoftmaxScheme,
+    elt: usize,
+) -> f64 {
+    let rows = (batch * heads) as f64;
+    let kv_bytes = 2.0 * rows * kv_len as f64 * head_dim as f64 * elt as f64;
+    let flops = 4.0 * rows * kv_len as f64 * head_dim as f64;
+    // Split-KV kernels expose rows*chunks blocks of parallelism; decode
+    // attention is bandwidth-bound on every platform here.
+    let chunks = kv_len.div_ceil(KV_CHUNK).max(1);
+    let blocks = rows * chunks as f64;
+    let util = (blocks / (gpu.sms as f64 * 0.5)).min(1.0);
+    let t_mem = kv_bytes / (gpu.hbm_bw * 0.85 * util);
+    let t_cmp = flops / (gpu.cc_flops * cal::CC_EFF);
+    let base = t_mem.max(t_cmp);
+    match scheme {
+        SoftmaxScheme::Naive => {
+            // Scores round-trip HBM (write P, read for softmax, write
+            // softmax, read for PV) + separate kernel launches.
+            let score_bytes = 4.0 * rows * kv_len as f64 * 4.0; // f32 scores
+            base + score_bytes / (gpu.hbm_bw * 0.85 * util) + 3.0 * gpu.launch_s
+        }
+        SoftmaxScheme::SyncPartial => base * (1.0 + SYNC_UPDATE_FRAC) + gpu.launch_s,
+        SoftmaxScheme::AsyncUnified => {
+            // No synchronized updates; a final cross-chunk reduction and
+            // the rare recompute remain.
+            base * (1.0 + ASYNC_RECOMPUTE_RATE) + gpu.launch_s
+        }
+    }
+}
+
+/// Time (s) of causal prefill attention (FlashAttention-style fused
+/// kernel unless `naive`).
+pub fn attention_prefill_time(
+    gpu: &GpuProfile,
+    batch: usize,
+    heads: usize,
+    head_dim: usize,
+    seq: usize,
+    naive: bool,
+    elt: usize,
+) -> f64 {
+    let rows = (batch * heads) as f64;
+    // Causal: half the score matrix.
+    let flops = 2.0 * rows * (seq as f64) * (seq as f64) * head_dim as f64;
+    let io = 3.0 * rows * seq as f64 * head_dim as f64 * elt as f64;
+    let t_cmp = flops / (gpu.tc_flops * cal::TC_EFF);
+    let t_mem = io / (gpu.hbm_bw * 0.85);
+    if naive {
+        // Materialize S = QK^T ([seq, seq] f32) twice over.
+        let score_bytes = 4.0 * rows * (seq as f64) * (seq as f64) * 4.0 / 2.0;
+        t_cmp.max(t_mem) + score_bytes / (gpu.hbm_bw * 0.85) + 3.0 * gpu.launch_s
+    } else {
+        t_cmp.max(t_mem) + gpu.launch_s
+    }
+}
+
+/// Roofline helper: attainable FLOP/s at arithmetic intensity `ai`.
+pub fn roofline(gpu: &GpuProfile, ai: f64, matrix_unit: bool) -> f64 {
+    let peak = if matrix_unit { gpu.tc_flops } else { gpu.cc_flops };
+    peak.min(ai * gpu.hbm_bw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn section5_claim_gemv_vs_tc_at_m1() {
+        // §5: "cuBLAS only achieves 82.15% of FastGEMV" for a Llama2-7B
+        // linear at batch 1 on A100. Reproduce the ratio within ±8pts.
+        let g = a100();
+        let (n, k) = (4096, 4096); // O projection
+        let t_a = gemm_time(&g, ImplKind::A, 1, n, k, 2);
+        let t_c = gemm_time(&g, ImplKind::C, 1, n, k, 2);
+        let perf_ratio = t_a / t_c; // cuBLAS perf / FastGEMV perf
+        assert!(
+            (0.74..=0.90).contains(&perf_ratio),
+            "cuBLAS/FastGEMV perf ratio {perf_ratio:.4} (paper: 0.8215)"
+        );
+    }
+
+    #[test]
+    fn section5_claim_cc_vs_tc_at_m4() {
+        // §5: CUDA core at batch 4 reaches only 49.75% of Tensor Core.
+        let g = a100();
+        let (n, k) = (4096, 4096);
+        let t_a = gemm_time(&g, ImplKind::A, 4, n, k, 2);
+        let t_b = gemm_time(&g, ImplKind::B, 4, n, k, 2);
+        let perf_ratio = t_b / t_a; // CC perf / TC perf
+        assert!(
+            (0.30..=0.65).contains(&perf_ratio),
+            "CC/TC perf ratio at M=4: {perf_ratio:.4} (paper: 0.4975)"
+        );
+    }
+
+    #[test]
+    fn impl_crossovers_exist_and_order() {
+        // ImplA wins at M=1, ImplB in the middle, ImplC at large M.
+        let g = a100();
+        let (n, k) = (12288, 4096);
+        let t = |ik, m| gemm_time(&g, ik, m, n, k, 2);
+        assert!(t(ImplKind::A, 1) < t(ImplKind::B, 1));
+        assert!(t(ImplKind::A, 1) < t(ImplKind::C, 1));
+        assert!(t(ImplKind::B, 8) < t(ImplKind::A, 8));
+        assert!(t(ImplKind::B, 8) < t(ImplKind::C, 8));
+        assert!(t(ImplKind::C, 512) < t(ImplKind::A, 512));
+        assert!(t(ImplKind::C, 512) <= t(ImplKind::B, 512) * 1.001);
+    }
+
+    #[test]
+    fn pad8_beats_pad64_on_flat_shapes() {
+        // The §4 headline: >50% loss from pad-to-64 on flat GEMMs.
+        let g = a100();
+        for m in [1usize, 2, 4, 8] {
+            let t_b = gemm_time(&g, ImplKind::B, m, 11008, 4096, 2);
+            let t_c = gemm_time(&g, ImplKind::C, m, 11008, 4096, 2);
+            assert!(
+                t_b < t_c,
+                "flat GEMM must beat conventional at M={m}: {t_b} vs {t_c}"
+            );
+        }
+    }
+
+    #[test]
+    fn sync_softmax_overhead_matches_profiling() {
+        // §2.3: synchronized update = 18.8% of attention (Llama2-7B, 1K).
+        let g = a100();
+        let t_sync = attention_decode_time(&g, 1, 32, 128, 1024, SoftmaxScheme::SyncPartial, 2);
+        let t_async = attention_decode_time(&g, 1, 32, 128, 1024, SoftmaxScheme::AsyncUnified, 2);
+        let overhead = (t_sync - t_async) / t_sync;
+        assert!(
+            (0.12..=0.25).contains(&overhead),
+            "sync overhead fraction {overhead:.3} (paper: 0.188)"
+        );
+    }
+
+    #[test]
+    fn naive_attention_slowest() {
+        let g = a100();
+        let t_n = attention_decode_time(&g, 1, 32, 128, 1024, SoftmaxScheme::Naive, 2);
+        let t_s = attention_decode_time(&g, 1, 32, 128, 1024, SoftmaxScheme::SyncPartial, 2);
+        assert!(t_n > t_s);
+    }
+
+    #[test]
+    fn fig7_shape_small_n_parallelism_bound() {
+        // Figure 7: at small N the best B_N is small; at large N bigger
+        // B_N wins (memory-bound regime).
+        let g = a100();
+        let best_bn = |n: usize| {
+            gemm::bn_candidates()
+                .into_iter()
+                .min_by(|&x, &y| {
+                    flat_gemm_time_forced_bn(&g, 8, n, 4096, x, 2)
+                        .partial_cmp(&flat_gemm_time_forced_bn(&g, 8, n, 4096, y, 2))
+                        .unwrap()
+                })
+                .unwrap()
+        };
+        assert!(best_bn(1024) <= 64, "small N should prefer small B_N");
+        assert!(best_bn(32768) >= 64, "large N should prefer larger B_N");
+    }
+
+    #[test]
+    fn roofline_clamps() {
+        let g = a100();
+        assert_eq!(roofline(&g, 1e9, true), g.tc_flops);
+        assert!(roofline(&g, 1.0, true) < g.tc_flops);
+    }
+
+    #[test]
+    fn gpu_table1_specs() {
+        assert_eq!(a100().vram_bytes, 80 << 30);
+        assert_eq!(rtx3090().vram_bytes, 24 << 30);
+        assert_eq!(mi210().vram_bytes, 64 << 30);
+        assert_eq!(rx7900xtx().vram_bytes, 24 << 30);
+        assert_eq!(all_gpus().len(), 4);
+    }
+}

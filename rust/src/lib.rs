@@ -1,0 +1,39 @@
+//! FlashDecoding++ — a reproduction of "FlashDecoding++: Faster Large
+//! Language Model Inference on GPUs" (Hong et al., 2023) as a three-layer
+//! Rust + JAX + Pallas inference engine.
+//!
+//! Layer 1 (Pallas, build-time Python) implements the paper's kernels:
+//! the asynchronized softmax with unified max value (§3) and the flat
+//! GEMM with pad-to-8 / double buffering (§4). Layer 2 (JAX) is a
+//! Llama-style transformer lowered AOT to HLO text. Layer 3 — this crate —
+//! owns everything on the request path: the PJRT runtime, the KV cache,
+//! continuous batching, the prefill/decode scheduler, the heuristic
+//! dataflow dispatch (§5), the serving loop, and the analytic GPU model
+//! that regenerates the paper's figures.
+//!
+//! Python never runs at serving time; `make artifacts` is the only
+//! compile-path entry.
+
+pub mod baselines;
+pub mod batching;
+pub mod bench_support;
+pub mod config;
+pub mod dataflow;
+pub mod engine;
+pub mod error;
+pub mod gemm;
+pub mod hwmodel;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod router;
+pub mod runtime;
+pub mod sampling;
+pub mod scheduler;
+pub mod server;
+pub mod softmaxstats;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,158 @@
+//! fdpp — FlashDecoding++ engine CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   serve             JSON-lines TCP API
+//!   generate          one-off generation
+//!   profile-dataflow  §5 decision flow on the real CPU microkernels
+//!   simulate          analytic GPU engine comparison (hwmodel)
+//!   inspect           list artifacts + model metadata
+
+use fdpp::baselines::{EngineKind, EngineModel};
+use fdpp::bench_support::{banner, fmt_speedup, fmt_time, row};
+use fdpp::config::{paper_model, paper_models, EngineConfig};
+use fdpp::dataflow::profile::build_lookup_table;
+use fdpp::engine::Engine;
+use fdpp::error::Result;
+use fdpp::hwmodel;
+use fdpp::runtime::Runtime;
+use fdpp::sampling::SamplingParams;
+use fdpp::util::cli::Args;
+
+const USAGE: &str = "usage: fdpp [--artifacts DIR] <serve|generate|profile-dataflow|simulate|inspect> [flags]
+  serve             --addr HOST:PORT  --sync-softmax
+  generate          --prompt TEXT  --max-new-tokens N  --temperature T  --top-k K
+  profile-dataflow  --out FILE  --reps N
+  simulate          --gpu a100|rtx3090|mi210|rx7900xtx  --model NAME  --batch N  --kv-len N
+  inspect";
+
+fn gpu_by_name(name: &str) -> hwmodel::GpuProfile {
+    match name.to_lowercase().as_str() {
+        "a100" => hwmodel::a100(),
+        "rtx3090" => hwmodel::rtx3090(),
+        "mi210" => hwmodel::mi210(),
+        "rx7900xtx" => hwmodel::rx7900xtx(),
+        other => {
+            eprintln!("unknown gpu {other}, using a100");
+            hwmodel::a100()
+        }
+    }
+}
+
+fn main() {
+    fdpp::util::log::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    match args.subcommand.as_deref() {
+        Some("serve") => {
+            let cfg = EngineConfig {
+                artifacts_dir: artifacts.clone(),
+                async_softmax: !args.bool_flag("sync-softmax"),
+                ..EngineConfig::default()
+            };
+            let addr = args.str_or("addr", "127.0.0.1:7331");
+            fdpp::server::serve(&addr, &artifacts, cfg)
+        }
+        Some("generate") => {
+            let prompt = args.required("prompt")?;
+            let max_new = args.usize_or("max-new-tokens", 32)?;
+            let temperature = args.f32_or("temperature", 0.0)?;
+            let top_k = args.usize_or("top-k", 0)?;
+            let rt = Runtime::load(&artifacts)?;
+            let mut engine = Engine::new(rt, EngineConfig::default())?;
+            engine.warmup()?;
+            let t0 = std::time::Instant::now();
+            let text = engine.generate_text(
+                &prompt,
+                max_new,
+                SamplingParams {
+                    temperature,
+                    top_k,
+                },
+            )?;
+            let dt = t0.elapsed();
+            println!("{text}");
+            eprintln!(
+                "[{} tokens in {:.2?}; {:.1} tok/s; recompute rate {:.4}]",
+                engine.metrics.tokens_generated,
+                dt,
+                engine.metrics.tokens_generated as f64 / dt.as_secs_f64(),
+                engine.metrics.recompute_rate(),
+            );
+            Ok(())
+        }
+        Some("profile-dataflow") => {
+            let out = args.str_or("out", "artifacts/lookup_table.json");
+            let reps = args.usize_or("reps", 5)?;
+            let mut rt = Runtime::load(&artifacts)?;
+            let table = build_lookup_table(&mut rt, reps)?;
+            banner("§5", "heuristic dataflow lookup table (real CPU profile)");
+            row("op [N,K]", &["M1".into(), "M2".into()]);
+            for e in &table.entries {
+                row(
+                    &format!("{} [{},{}]", e.op, e.n, e.k),
+                    &[e.m1.to_string(), e.m2.to_string()],
+                );
+            }
+            table.save_json(&out)?;
+            println!("wrote {out}");
+            Ok(())
+        }
+        Some("simulate") => {
+            let gpu = gpu_by_name(&args.str_or("gpu", "a100"));
+            let model = paper_model(&args.str_or("model", "llama2-7b"))?;
+            let batch = args.usize_or("batch", 1)?;
+            let kv_len = args.usize_or("kv-len", 1024)?;
+            banner(
+                "simulate",
+                &format!("{} on {} (decode bs={batch} kv={kv_len})", model.name, gpu.name),
+            );
+            let hf = EngineModel::new(EngineKind::HuggingFace)
+                .decode_token_time(&model, &gpu, batch, kv_len);
+            row("engine", &["tok latency".into(), "vs HF".into()]);
+            for kind in EngineKind::all() {
+                if !kind.supports(&model) {
+                    row(kind.as_str(), &["n/a".into(), "-".into()]);
+                    continue;
+                }
+                let t = EngineModel::new(kind).decode_token_time(&model, &gpu, batch, kv_len);
+                row(kind.as_str(), &[fmt_time(t), fmt_speedup(hf / t)]);
+            }
+            Ok(())
+        }
+        Some("inspect") => {
+            let rt = Runtime::load(&artifacts)?;
+            let m = &rt.manifest.model;
+            println!(
+                "model {} dim={} layers={} heads={} vocab={} max_seq={} phi={:.4}",
+                m.name, m.dim, m.n_layers, m.n_heads, m.vocab_size, m.max_seq, m.phi
+            );
+            println!("paper models known to hwmodel:");
+            for pm in paper_models() {
+                println!(
+                    "  {} dim={} layers={} ctx={} params={:.2}B",
+                    pm.name,
+                    pm.dim,
+                    pm.n_layers,
+                    pm.context,
+                    pm.param_count() as f64 / 1e9
+                );
+            }
+            println!("{} entries:", rt.manifest.entries.len());
+            for e in &rt.manifest.entries {
+                println!("  {} ({}, {} outputs)", e.name, e.kind, e.num_outputs);
+            }
+            Ok(())
+        }
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

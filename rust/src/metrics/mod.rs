@@ -1,0 +1,173 @@
+//! Engine telemetry: latency histograms, counters, percentile summaries.
+//!
+//! Everything is plain data (no atomics on the hot path — the engine step
+//! loop is single-owner and hands out snapshots).
+
+use std::time::Duration;
+
+/// Fixed-boundary log-scale latency histogram, microsecond resolution.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in micros, ascending; last is +inf.
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    sum_us: u128,
+    count: u64,
+    max_us: u64,
+    min_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 1us .. ~100s in 48 log-spaced buckets.
+        let mut bounds = Vec::with_capacity(48);
+        let mut b = 1.0f64;
+        for _ in 0..48 {
+            bounds.push(b as u64);
+            b *= 1.47;
+        }
+        LatencyHistogram {
+            counts: vec![0; bounds.len() + 1],
+            bounds,
+            sum_us: 0,
+            count: 0,
+            max_us: 0,
+            min_us: u64::MAX,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self.bounds.partition_point(|&b| b < us);
+        self.counts[idx] += 1;
+        self.sum_us += us as u128;
+        self.count += 1;
+        self.max_us = self.max_us.max(us);
+        self.min_us = self.min_us.min(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros((self.sum_us / self.count as u128) as u64)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(if self.count == 0 { 0 } else { self.max_us })
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound).
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((self.count as f64) * p.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let us = if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max_us
+                };
+                return Duration::from_micros(us.min(self.max_us));
+            }
+        }
+        Duration::from_micros(self.max_us)
+    }
+}
+
+/// Aggregated serving metrics, snapshotted by `Engine::metrics()`.
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    /// Time from request arrival to first generated token.
+    pub first_token: LatencyHistogram,
+    /// Per-token decode latency (one engine step amortized per sequence).
+    pub per_token: LatencyHistogram,
+    /// Whole-step wall time (prefill or decode).
+    pub step: LatencyHistogram,
+    /// Host-side overhead per step (everything except PJRT execute).
+    pub step_overhead: LatencyHistogram,
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub tokens_generated: u64,
+    pub requests_finished: u64,
+    pub requests_admitted: u64,
+    /// C1 accounting: decode rows that took the recompute fallback.
+    pub recompute_rows: u64,
+    pub decode_rows: u64,
+    /// KV composition rebuilds (full host round trip) — perf-pass counter.
+    pub kv_rebuilds: u64,
+    /// Device-side KV insertions (fast path; no host round trip).
+    pub kv_inserts: u64,
+}
+
+impl EngineMetrics {
+    /// Fraction of decode rows that fell back to synchronized softmax.
+    pub fn recompute_rate(&self) -> f64 {
+        if self.decode_rows == 0 {
+            0.0
+        } else {
+            self.recompute_rows as f64 / self.decode_rows as f64
+        }
+    }
+
+    pub fn throughput_tokens_per_sec(&self, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            0.0
+        } else {
+            self.tokens_generated as f64 / wall.as_secs_f64()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic() {
+        let mut h = LatencyHistogram::default();
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_millis(10));
+        assert!(h.percentile(0.5) <= Duration::from_millis(5));
+        assert_eq!(h.max(), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i * 37));
+        }
+        assert!(h.percentile(0.5) <= h.percentile(0.9));
+        assert!(h.percentile(0.9) <= h.percentile(0.999));
+    }
+
+    #[test]
+    fn recompute_rate() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.recompute_rate(), 0.0);
+        m.decode_rows = 100;
+        m.recompute_rows = 3;
+        assert!((m.recompute_rate() - 0.03).abs() < 1e-12);
+    }
+}

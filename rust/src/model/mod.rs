@@ -1,0 +1,162 @@
+//! Model-level operation inventory: for a given `ModelConfig` and phase,
+//! enumerate every GEMM/attention op of one transformer layer with its
+//! M/N/K shape, FLOPs and bytes moved. This feeds the analytic GPU model
+//! (`hwmodel`) and the heuristic-dataflow profiler (§5).
+
+use crate::config::ModelConfig;
+
+/// One linear (GEMM/GEMV) op instance: x[M,K] @ w[K,N].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearOp {
+    pub name: &'static str,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl LinearOp {
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Minimum HBM traffic in bytes at element size `elt` (weights +
+    /// activations in, activations out — weight-dominated for flat M).
+    pub fn min_bytes(&self, elt: usize) -> f64 {
+        ((self.k * self.n + self.m * self.k + self.m * self.n) * elt) as f64
+    }
+
+    /// Arithmetic intensity (FLOPs per byte).
+    pub fn intensity(&self, elt: usize) -> f64 {
+        self.flops() / self.min_bytes(elt)
+    }
+}
+
+/// One attention op instance (per layer, whole batch).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttentionOp {
+    pub batch: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Query length (1 for decode).
+    pub q_len: usize,
+    /// KV length attended over.
+    pub kv_len: usize,
+}
+
+impl AttentionOp {
+    /// QK^T + PV FLOPs.
+    pub fn flops(&self) -> f64 {
+        4.0 * (self.batch * self.heads * self.q_len * self.kv_len * self.head_dim) as f64
+    }
+
+    /// Bytes: read K,V once, read Q, write O (f16/bf16 KV typical: elt).
+    pub fn min_bytes(&self, elt: usize) -> f64 {
+        let kv = 2 * self.batch * self.heads * self.kv_len * self.head_dim;
+        let qo = 2 * self.batch * self.heads * self.q_len * self.head_dim;
+        ((kv + qo) * elt) as f64
+    }
+}
+
+/// The per-layer op list for one phase.
+#[derive(Debug, Clone)]
+pub struct LayerOps {
+    pub linears: Vec<LinearOp>,
+    pub attention: AttentionOp,
+}
+
+/// Decode phase: M = batch size, attention over kv_len.
+pub fn decode_layer_ops(cfg: &ModelConfig, batch: usize, kv_len: usize) -> LayerOps {
+    let ops = cfg
+        .linear_shapes()
+        .iter()
+        .map(|&(name, n, k)| LinearOp {
+            name,
+            m: batch,
+            n,
+            k,
+        })
+        .collect();
+    LayerOps {
+        linears: ops,
+        attention: AttentionOp {
+            batch,
+            heads: cfg.n_heads,
+            head_dim: cfg.head_dim(),
+            q_len: 1,
+            kv_len,
+        },
+    }
+}
+
+/// Prefill phase: M = batch * seq_len, causal attention over seq.
+pub fn prefill_layer_ops(cfg: &ModelConfig, batch: usize, seq_len: usize) -> LayerOps {
+    let m = batch * seq_len;
+    let ops = cfg
+        .linear_shapes()
+        .iter()
+        .map(|&(name, n, k)| LinearOp {
+            name,
+            m,
+            n,
+            k,
+        })
+        .collect();
+    LayerOps {
+        linears: ops,
+        attention: AttentionOp {
+            batch,
+            heads: cfg.n_heads,
+            head_dim: cfg.head_dim(),
+            q_len: seq_len,
+            // causal: average attended length is seq/2; model as seq here
+            // and let the cost model halve causal work.
+            kv_len: seq_len,
+        },
+    }
+}
+
+/// KV-cache bytes appended per decoded token (whole model).
+pub fn kv_bytes_per_token(cfg: &ModelConfig, elt: usize) -> usize {
+    2 * cfg.n_layers * cfg.n_heads * cfg.head_dim() * elt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_model;
+
+    #[test]
+    fn decode_ops_are_flat() {
+        let cfg = paper_model("llama2-7b").unwrap();
+        let ops = decode_layer_ops(&cfg, 8, 1024);
+        for l in &ops.linears {
+            assert_eq!(l.m, 8);
+            assert!(l.n >= 4096 && l.k >= 4096);
+        }
+        assert_eq!(ops.attention.q_len, 1);
+        assert_eq!(ops.attention.kv_len, 1024);
+    }
+
+    #[test]
+    fn flat_gemm_is_memory_bound_conventional_is_not() {
+        let cfg = paper_model("llama2-7b").unwrap();
+        // A100 bf16 roofline knee sits around 142 FLOP/byte.
+        let dec = decode_layer_ops(&cfg, 1, 1024).linears[0];
+        assert!(dec.intensity(2) < 10.0, "decode GEMV intensity {}", dec.intensity(2));
+        let pre = prefill_layer_ops(&cfg, 1, 1024).linears[0];
+        assert!(pre.intensity(2) > 100.0, "prefill intensity {}", pre.intensity(2));
+    }
+
+    #[test]
+    fn kv_bytes_per_token_llama7b() {
+        let cfg = paper_model("llama2-7b").unwrap();
+        // 2 * 32 layers * 4096 dim * 2 bytes = 512 KiB / token
+        assert_eq!(kv_bytes_per_token(&cfg, 2), 524288);
+    }
+
+    #[test]
+    fn linear_flops_symmetry() {
+        let op = LinearOp { name: "x", m: 8, n: 1024, k: 512 };
+        assert_eq!(op.flops(), 2.0 * 8.0 * 1024.0 * 512.0);
+    }
+}

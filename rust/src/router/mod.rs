@@ -1,0 +1,200 @@
+//! Request intake and sequence lifecycle.
+//!
+//! A `Request` enters through the router, becomes a `Sequence` with a
+//! state machine (Queued -> Prefilling -> Decoding -> Finished), and
+//! streams generated tokens back over a channel. The engine thread is
+//! the single owner of sequence state; the async server side only holds
+//! the sender/receiver endpoints.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::kvcache::SeqId;
+use crate::sampling::SamplingParams;
+
+/// Why a sequence stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    /// KV capacity forced us to stop early.
+    Preempted,
+    Error,
+}
+
+/// Streamed events a client receives.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    Token(u32),
+    Finished {
+        reason: FinishReason,
+        /// Total generated tokens.
+        n_generated: usize,
+    },
+}
+
+/// An incoming generation request.
+#[derive(Debug)]
+pub struct Request {
+    pub prompt_tokens: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub params: SamplingParams,
+    pub stream: mpsc::Sender<TokenEvent>,
+    pub arrived: Instant,
+}
+
+/// Sequence lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqState {
+    Queued,
+    Decoding,
+    Finished(FinishReason),
+}
+
+/// Engine-side sequence record.
+#[derive(Debug)]
+pub struct Sequence {
+    pub id: SeqId,
+    pub state: SeqState,
+    pub prompt: Vec<u32>,
+    pub generated: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub params: SamplingParams,
+    pub stream: mpsc::Sender<TokenEvent>,
+    pub arrived: Instant,
+    pub first_token_at: Option<Instant>,
+    /// Current context length (prompt + generated) stored in KV.
+    pub kv_len: usize,
+}
+
+impl Sequence {
+    pub fn last_token(&self) -> u32 {
+        *self
+            .generated
+            .last()
+            .unwrap_or_else(|| self.prompt.last().expect("non-empty prompt"))
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, SeqState::Finished(_))
+    }
+
+    /// Push a token to the client; ignore a hung-up receiver.
+    pub fn emit(&mut self, ev: TokenEvent) {
+        let _ = self.stream.send(ev);
+    }
+}
+
+/// FIFO intake queue owned by the engine.
+#[derive(Debug, Default)]
+pub struct Router {
+    next_id: SeqId,
+    pub queue: VecDeque<Sequence>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Router {
+            next_id: 1,
+            queue: VecDeque::new(),
+        }
+    }
+
+    /// Convert a request into a queued sequence.
+    pub fn submit(&mut self, req: Request) -> SeqId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Sequence {
+            id,
+            state: SeqState::Queued,
+            prompt: req.prompt_tokens,
+            generated: Vec::new(),
+            max_new_tokens: req.max_new_tokens,
+            params: req.params,
+            stream: req.stream,
+            arrived: req.arrived,
+            first_token_at: None,
+            kv_len: 0,
+        });
+        id
+    }
+
+    pub fn pop_next(&mut self) -> Option<Sequence> {
+        self.queue.pop_front()
+    }
+
+    /// Requeue at the front (preemption).
+    pub fn requeue_front(&mut self, seq: Sequence) {
+        self.queue.push_front(seq);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_request(prompt: Vec<u32>) -> (Request, mpsc::Receiver<TokenEvent>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                prompt_tokens: prompt,
+                max_new_tokens: 4,
+                params: SamplingParams::default(),
+                stream: tx,
+                arrived: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn submit_assigns_monotone_ids() {
+        let mut r = Router::new();
+        let (q1, _rx1) = mk_request(vec![1]);
+        let (q2, _rx2) = mk_request(vec![2]);
+        let a = r.submit(q1);
+        let b = r.submit(q2);
+        assert!(b > a);
+        assert_eq!(r.queued(), 2);
+        assert_eq!(r.pop_next().unwrap().id, a, "FIFO");
+    }
+
+    #[test]
+    fn sequence_last_token_logic() {
+        let mut r = Router::new();
+        let (q, _rx) = mk_request(vec![5, 6, 7]);
+        r.submit(q);
+        let mut s = r.pop_next().unwrap();
+        assert_eq!(s.last_token(), 7);
+        s.generated.push(42);
+        assert_eq!(s.last_token(), 42);
+    }
+
+    #[test]
+    fn emit_survives_dropped_receiver() {
+        let mut r = Router::new();
+        let (q, rx) = mk_request(vec![1]);
+        r.submit(q);
+        let mut s = r.pop_next().unwrap();
+        drop(rx);
+        s.emit(TokenEvent::Token(9)); // must not panic
+    }
+
+    #[test]
+    fn requeue_front_puts_sequence_first() {
+        let mut r = Router::new();
+        let (q1, _r1) = mk_request(vec![1]);
+        let (q2, _r2) = mk_request(vec![2]);
+        r.submit(q1);
+        r.submit(q2);
+        let first = r.pop_next().unwrap();
+        let first_id = first.id;
+        r.requeue_front(first);
+        assert_eq!(r.pop_next().unwrap().id, first_id);
+    }
+}

@@ -1,0 +1,339 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (HLO text + weight .npy files + manifest.json) and executes them on
+//! the PJRT CPU client from the Rust hot path.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use xla::FromRawBytes;
+
+use crate::error::{Error, Result};
+use crate::util::json::{parse, Json};
+
+/// Tensor spec in the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub params: Json,
+    pub inputs: Vec<TensorSpec>,
+    pub num_outputs: usize,
+    pub takes_weights: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub file: String,
+}
+
+/// Model metadata recorded by aot.py.
+#[derive(Debug, Clone)]
+pub struct ManifestModel {
+    pub name: String,
+    pub vocab_size: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn_hidden: usize,
+    pub max_seq: usize,
+    pub phi: f64,
+    pub softmax_a: f64,
+    pub softmax_b: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ManifestModel,
+    pub softmax_input_stats: Json,
+    pub weight_order: Vec<String>,
+    pub weights: Vec<WeightMeta>,
+    pub entries: Vec<EntryMeta>,
+    pub linear_shapes: HashMap<String, (usize, usize)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Artifact(format!("{}: {e}", path.display())))?;
+        Self::from_json(&parse(&text)?)
+    }
+
+    fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: j
+                .req_arr("shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            dtype: j.req_str("dtype")?,
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let m = j.field("model")?;
+        let model = ManifestModel {
+            name: m.req_str("name")?,
+            vocab_size: m.req_usize("vocab_size")?,
+            dim: m.req_usize("dim")?,
+            n_layers: m.req_usize("n_layers")?,
+            n_heads: m.req_usize("n_heads")?,
+            head_dim: m.req_usize("head_dim")?,
+            ffn_hidden: m.req_usize("ffn_hidden")?,
+            max_seq: m.req_usize("max_seq")?,
+            phi: m.req_f64("phi")?,
+            softmax_a: m.req_f64("softmax_a")?,
+            softmax_b: m.req_f64("softmax_b")?,
+        };
+        let weight_order = j
+            .req_arr("weight_order")?
+            .iter()
+            .filter_map(Json::as_str)
+            .map(str::to_string)
+            .collect();
+        let mut weights = Vec::new();
+        for w in j.req_arr("weights")? {
+            weights.push(WeightMeta {
+                name: w.req_str("name")?,
+                shape: w
+                    .req_arr("shape")?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+                dtype: w.req_str("dtype")?,
+                file: w.req_str("file")?,
+            });
+        }
+        let mut entries = Vec::new();
+        for e in j.req_arr("entries")? {
+            let mut inputs = Vec::new();
+            for i in e.req_arr("inputs")? {
+                inputs.push(Self::tensor_spec(i)?);
+            }
+            entries.push(EntryMeta {
+                name: e.req_str("name")?,
+                file: e.req_str("file")?,
+                kind: e.req_str("kind")?,
+                params: e.get("params").cloned().unwrap_or(Json::Null),
+                inputs,
+                num_outputs: e.req_usize("num_outputs")?,
+                takes_weights: e.req_bool("takes_weights")?,
+            });
+        }
+        let mut linear_shapes = HashMap::new();
+        if let Some(Json::Obj(ls)) = j.get("linear_shapes") {
+            for (k, v) in ls {
+                if let Some(arr) = v.as_arr() {
+                    if arr.len() == 2 {
+                        linear_shapes.insert(
+                            k.clone(),
+                            (
+                                arr[0].as_usize().unwrap_or(0),
+                                arr[1].as_usize().unwrap_or(0),
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        Ok(Manifest {
+            model,
+            softmax_input_stats: j.get("softmax_input_stats").cloned().unwrap_or(Json::Null),
+            weight_order,
+            weights,
+            entries,
+            linear_shapes,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::Artifact(format!("no entry {name} in manifest")))
+    }
+
+    /// Decode entry name for a batch bucket (async or sync variant).
+    pub fn decode_entry_name(batch: usize, sync: bool) -> String {
+        if sync {
+            format!("decode_b{batch}_sync")
+        } else {
+            format!("decode_b{batch}")
+        }
+    }
+
+    pub fn prefill_entry_name(seq: usize) -> String {
+        format!("prefill_s{seq}")
+    }
+}
+
+/// The PJRT execution engine: compiled-executable cache + weights.
+///
+/// Not `Send`: the engine thread owns it; the server talks to it over
+/// channels (vLLM-router style single-owner hot loop).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    /// Weight literals in manifest order (prepended to entry inputs).
+    weights: Vec<xla::Literal>,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Compile-time accounting (startup cost, reported by `fdpp inspect`).
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    /// Load manifest + weights and initialize the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut weights = Vec::with_capacity(manifest.weights.len());
+        for w in &manifest.weights {
+            let path = dir.join(&w.file);
+            let lit = xla::Literal::read_npy(&path, &())
+                .map_err(|e| Error::Artifact(format!("weight {}: {e}", w.name)))?;
+            weights.push(lit);
+        }
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            weights,
+            execs: HashMap::new(),
+            compile_seconds: 0.0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for an entry.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.execs.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.entry(name)?.clone();
+        let path = self.dir.join(&entry.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compile_seconds += t0.elapsed().as_secs_f64();
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry with the given non-weight inputs; returns the
+    /// decomposed output tuple as literals. Inputs are borrowed — the
+    /// decode hot path passes its device-resident KV literals without
+    /// copying them.
+    pub fn execute(&mut self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let entry = self.manifest.entry(name)?;
+        let takes_weights = entry.takes_weights;
+        let expected = entry.inputs.len();
+        let exe = self.execs.get(name).unwrap();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.weights.len() + inputs.len());
+        if takes_weights {
+            args.extend(self.weights.iter());
+        }
+        args.extend(inputs.iter());
+        if args.len() != expected {
+            return Err(Error::Artifact(format!(
+                "entry {name}: expected {expected} inputs, got {}",
+                args.len()
+            )));
+        }
+        let result = exe.execute::<&xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// Number of entries available.
+    pub fn entry_names(&self) -> Vec<String> {
+        self.manifest.entries.iter().map(|e| e.name.clone()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(Error::Artifact(format!(
+            "literal_f32: {} elements for shape {:?}",
+            data.len(),
+            shape
+        )));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(Error::Artifact(format!(
+            "literal_i32: {} elements for shape {:?}",
+            data.len(),
+            shape
+        )));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(literal_f32(&[1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn entry_name_helpers() {
+        assert_eq!(Manifest::decode_entry_name(4, false), "decode_b4");
+        assert_eq!(Manifest::decode_entry_name(1, true), "decode_b1_sync");
+        assert_eq!(Manifest::prefill_entry_name(32), "prefill_s32");
+    }
+}

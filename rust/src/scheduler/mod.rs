@@ -1,0 +1,115 @@
+//! Prefill/decode scheduling policy.
+//!
+//! Decides, each engine iteration, whether to run a prefill (admitting a
+//! queued request) or a decode step over the running batch. The policy
+//! is prefill-priority up to `max_running` lanes (keeps the decode batch
+//! full, which is where FlashDecoding++'s flat-GEMM wins live), with KV
+//! headroom checks and preemption of the *youngest* running sequence on
+//! KV exhaustion.
+
+/// What the engine should do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Admit + prefill the next queued request.
+    Prefill,
+    /// Run one decode step over the running set.
+    Decode,
+    /// Nothing to do.
+    Idle,
+}
+
+/// Scheduler inputs for one decision.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedState {
+    pub queued: usize,
+    pub running: usize,
+    pub max_running: usize,
+    /// Free KV blocks and the blocks a prefill of the next queued request
+    /// would need.
+    pub free_blocks: usize,
+    pub next_prefill_blocks: usize,
+}
+
+/// The scheduling policy (pure function — proptest-able).
+pub fn decide(s: SchedState) -> Action {
+    let can_admit =
+        s.queued > 0 && s.running < s.max_running && s.free_blocks >= s.next_prefill_blocks;
+    if can_admit {
+        Action::Prefill
+    } else if s.running > 0 {
+        Action::Decode
+    } else if s.queued > 0 {
+        // Queued but can't admit (KV pressure with nothing running):
+        // decode can't help either; the engine must preempt/evict. Treat
+        // as Prefill attempt so the engine surfaces the KV error path.
+        Action::Prefill
+    } else {
+        Action::Idle
+    }
+}
+
+/// Pick the victim for preemption: the *youngest* running sequence
+/// (latest admission) loses its lane — it has the least sunk prefill
+/// work. Returns its index in `running_ids`.
+pub fn preemption_victim(running_ids: &[u64]) -> Option<usize> {
+    if running_ids.is_empty() {
+        None
+    } else {
+        // Admission order == lane order (Batcher preserves FIFO), so the
+        // youngest is the last lane.
+        Some(running_ids.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st(queued: usize, running: usize, free: usize, need: usize) -> SchedState {
+        SchedState {
+            queued,
+            running,
+            max_running: 4,
+            free_blocks: free,
+            next_prefill_blocks: need,
+        }
+    }
+
+    #[test]
+    fn prefill_priority_when_room() {
+        assert_eq!(decide(st(2, 1, 100, 4)), Action::Prefill);
+    }
+
+    #[test]
+    fn decode_when_lanes_full() {
+        assert_eq!(decide(st(2, 4, 100, 4)), Action::Decode);
+    }
+
+    #[test]
+    fn decode_when_queue_empty() {
+        assert_eq!(decide(st(0, 3, 100, 0)), Action::Decode);
+    }
+
+    #[test]
+    fn idle_when_nothing() {
+        assert_eq!(decide(st(0, 0, 100, 0)), Action::Idle);
+    }
+
+    #[test]
+    fn kv_pressure_blocks_admission() {
+        // Not enough free blocks for the next prefill -> keep decoding
+        // (running seqs will finish and free blocks).
+        assert_eq!(decide(st(1, 2, 1, 4)), Action::Decode);
+    }
+
+    #[test]
+    fn kv_pressure_with_empty_running_surfaces_prefill() {
+        assert_eq!(decide(st(1, 0, 0, 4)), Action::Prefill);
+    }
+
+    #[test]
+    fn victim_is_youngest() {
+        assert_eq!(preemption_victim(&[5, 9, 12]), Some(2));
+        assert_eq!(preemption_victim(&[]), None);
+    }
+}

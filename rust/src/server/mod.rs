@@ -1,0 +1,325 @@
+//! JSON-lines TCP serving front-end (std::net + threads; offline build).
+//!
+//! The engine is single-owner and not Send, so it runs on a dedicated
+//! OS thread; connection handlers forward requests over an mpsc channel
+//! and stream `TokenEvent`s back per request.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": "...", "max_new_tokens": 32, "temperature": 0.0}
+//!   <- {"token": 104, "text": "h"}            (per generated token)
+//!   <- {"done": true, "reason": "eos", "n": 12}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::thread;
+
+use crate::config::EngineConfig;
+use crate::engine::Engine;
+use crate::error::{Error, Result};
+use crate::router::{FinishReason, TokenEvent};
+use crate::runtime::Runtime;
+use crate::sampling::SamplingParams;
+use crate::tokenizer::ByteTokenizer;
+use crate::util::json::{parse, Json};
+use crate::{log_info, log_warn};
+
+/// A parsed wire request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+}
+
+impl WireRequest {
+    pub fn from_json_line(line: &str) -> Result<Self> {
+        let j = parse(line)?;
+        Ok(WireRequest {
+            prompt: j.req_str("prompt")?,
+            max_new_tokens: j
+                .get("max_new_tokens")
+                .and_then(Json::as_usize)
+                .unwrap_or(32),
+            temperature: j.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+            top_k: j.get("top_k").and_then(Json::as_usize).unwrap_or(0),
+        })
+    }
+}
+
+/// Wire responses.
+pub fn token_response(token: u32, text: &str) -> String {
+    Json::obj(vec![
+        ("token", Json::Num(token as f64)),
+        ("text", Json::Str(text.to_string())),
+    ])
+    .to_string()
+}
+
+pub fn done_response(reason: FinishReason, n: usize) -> String {
+    let reason = match reason {
+        FinishReason::Eos => "eos",
+        FinishReason::MaxTokens => "max_tokens",
+        FinishReason::Preempted => "preempted",
+        FinishReason::Error => "error",
+    };
+    Json::obj(vec![
+        ("done", Json::Bool(true)),
+        ("reason", Json::Str(reason.to_string())),
+        ("n", Json::Num(n as f64)),
+    ])
+    .to_string()
+}
+
+pub fn error_response(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+/// A request as it travels to the engine thread.
+pub struct EngineJob {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub params: SamplingParams,
+    pub reply: mpsc::Sender<TokenEvent>,
+}
+
+/// Handle to the engine thread.
+pub struct EngineHandle {
+    pub tx: mpsc::Sender<EngineJob>,
+    pub join: thread::JoinHandle<()>,
+}
+
+/// Spawn the engine loop on its own thread. The engine (PJRT handles are
+/// not Send) is constructed *inside* the thread; startup errors are
+/// reported back synchronously before this function returns.
+pub fn spawn_engine(artifacts_dir: &str, cfg: EngineConfig) -> Result<EngineHandle> {
+    let (tx, rx) = mpsc::channel::<EngineJob>();
+    let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+    let dir = artifacts_dir.to_string();
+    let join = thread::spawn(move || {
+        let mut engine = match Runtime::load(&dir)
+            .and_then(|rt| Engine::new(rt, cfg))
+            .and_then(|mut e| e.warmup().map(|_| e))
+        {
+            Ok(e) => {
+                let _ = ready_tx.send(Ok(()));
+                e
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e.to_string()));
+                return;
+            }
+        };
+        engine_loop(&mut engine, rx);
+    });
+    match ready_rx.recv() {
+        Ok(Ok(())) => Ok(EngineHandle { tx, join }),
+        Ok(Err(msg)) => Err(Error::Request(format!("engine startup failed: {msg}"))),
+        Err(_) => Err(Error::Request("engine thread died during startup".into())),
+    }
+}
+
+/// The engine thread: drain incoming jobs, then step until idle.
+fn engine_loop(engine: &mut Engine, rx: mpsc::Receiver<EngineJob>) {
+    let mut streams: Vec<(mpsc::Receiver<TokenEvent>, mpsc::Sender<TokenEvent>)> = Vec::new();
+    loop {
+        // Accept new jobs (block only when idle).
+        loop {
+            let job = if engine.is_idle() && streams.is_empty() {
+                match rx.recv() {
+                    Ok(j) => j,
+                    Err(_) => return,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(j) => j,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        if engine.is_idle() && streams.is_empty() {
+                            return;
+                        }
+                        break;
+                    }
+                }
+            };
+            let toks = engine.tokenizer.encode(&job.prompt);
+            match engine.submit_tokens(toks, job.max_new_tokens, job.params) {
+                Ok((_, seq_rx)) => streams.push((seq_rx, job.reply)),
+                Err(e) => {
+                    let _ = job.reply.send(TokenEvent::Finished {
+                        reason: FinishReason::Error,
+                        n_generated: 0,
+                    });
+                    log_warn!("submit failed: {e}");
+                }
+            }
+        }
+        if !engine.is_idle() {
+            if let Err(e) = engine.step() {
+                log_warn!("engine step failed: {e}");
+            }
+        }
+        // Pump generated tokens out to the per-request reply channels.
+        streams.retain(|(seq_rx, reply)| loop {
+            match seq_rx.try_recv() {
+                Ok(ev) => {
+                    let done = matches!(ev, TokenEvent::Finished { .. });
+                    if reply.send(ev).is_err() || done {
+                        return false;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => return true,
+                Err(mpsc::TryRecvError::Disconnected) => return false,
+            }
+        });
+    }
+}
+
+/// Run the TCP server (blocks forever).
+pub fn serve(addr: &str, artifacts_dir: &str, cfg: EngineConfig) -> Result<()> {
+    let vocab = {
+        let manifest = crate::runtime::Manifest::load(std::path::Path::new(artifacts_dir))?;
+        manifest.model.vocab_size
+    };
+    let handle = spawn_engine(artifacts_dir, cfg)?;
+    let listener =
+        TcpListener::bind(addr).map_err(|e| Error::Request(format!("bind {addr}: {e}")))?;
+    log_info!("serving on {addr}");
+    for sock in listener.incoming() {
+        let sock = match sock {
+            Ok(s) => s,
+            Err(e) => {
+                log_warn!("accept: {e}");
+                continue;
+            }
+        };
+        let tx = handle.tx.clone();
+        thread::spawn(move || {
+            if let Err(e) = handle_conn(sock, tx, vocab) {
+                log_warn!("conn: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(sock: TcpStream, engine_tx: mpsc::Sender<EngineJob>, vocab: usize) -> Result<()> {
+    let mut w = sock.try_clone().map_err(Error::Io)?;
+    let r = BufReader::new(sock);
+    let tokenizer = ByteTokenizer::new(vocab);
+    for line in r.lines() {
+        let line = line.map_err(Error::Io)?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match WireRequest::from_json_line(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                writeln!(w, "{}", error_response(&format!("bad request: {e}")))
+                    .map_err(Error::Io)?;
+                continue;
+            }
+        };
+        let (reply_tx, reply_rx) = mpsc::channel::<TokenEvent>();
+        engine_tx
+            .send(EngineJob {
+                prompt: req.prompt,
+                max_new_tokens: req.max_new_tokens,
+                params: SamplingParams {
+                    temperature: req.temperature,
+                    top_k: req.top_k,
+                },
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::Request("engine gone".into()))?;
+        while let Ok(ev) = reply_rx.recv() {
+            match ev {
+                TokenEvent::Token(t) => {
+                    writeln!(w, "{}", token_response(t, &tokenizer.decode(&[t])))
+                        .map_err(Error::Io)?;
+                }
+                TokenEvent::Finished { reason, n_generated } => {
+                    writeln!(w, "{}", done_response(reason, n_generated)).map_err(Error::Io)?;
+                    break;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    sock: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        Ok(Client {
+            sock: TcpStream::connect(addr).map_err(Error::Io)?,
+        })
+    }
+
+    /// Send one request and collect the full generation.
+    pub fn generate(&mut self, prompt: &str, max_new_tokens: usize) -> Result<String> {
+        let req = Json::obj(vec![
+            ("prompt", Json::Str(prompt.to_string())),
+            ("max_new_tokens", Json::Num(max_new_tokens as f64)),
+        ]);
+        writeln!(self.sock, "{}", req.to_string()).map_err(Error::Io)?;
+        let mut out = String::new();
+        let reader = BufReader::new(self.sock.try_clone().map_err(Error::Io)?);
+        for line in reader.lines() {
+            let line = line.map_err(Error::Io)?;
+            let j = parse(&line)?;
+            if j.get("done").is_some() {
+                break;
+            }
+            if let Ok(text) = j.req_str("text") {
+                out.push_str(&text);
+            }
+            if j.get("error").is_some() {
+                return Err(Error::Request(j.req_str("error")?));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_request_defaults() {
+        let r = WireRequest::from_json_line(r#"{"prompt":"hi"}"#).unwrap();
+        assert_eq!(r.max_new_tokens, 32);
+        assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.top_k, 0);
+    }
+
+    #[test]
+    fn wire_request_full() {
+        let r = WireRequest::from_json_line(
+            r#"{"prompt":"p","max_new_tokens":8,"temperature":0.7,"top_k":40}"#,
+        )
+        .unwrap();
+        assert_eq!(r.max_new_tokens, 8);
+        assert!((r.temperature - 0.7).abs() < 1e-6);
+        assert_eq!(r.top_k, 40);
+    }
+
+    #[test]
+    fn responses_are_valid_json() {
+        for s in [
+            token_response(104, "h"),
+            done_response(FinishReason::Eos, 3),
+            error_response("nope"),
+        ] {
+            parse(&s).unwrap();
+        }
+        assert!(token_response(104, "h").contains("\"token\":104"));
+        assert!(done_response(FinishReason::MaxTokens, 2).contains("max_tokens"));
+    }
+}

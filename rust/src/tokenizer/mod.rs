@@ -1,0 +1,89 @@
+//! Byte-level tokenizer for the real serving path.
+//!
+//! The tiny model is trained (synthetically initialized) over a byte
+//! vocabulary: ids 0..=255 are raw bytes, followed by special tokens.
+//! This keeps the end-to-end path honest (prompt -> ids -> model ->
+//! ids -> text) without shipping a BPE training corpus.
+
+/// Special token ids start after the byte range.
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+pub const PAD: u32 = 258;
+
+/// Number of ids the tokenizer can emit (vocab may be padded above this).
+pub const TOKENIZER_VOCAB: usize = 259;
+
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    /// Model vocab size (>= TOKENIZER_VOCAB; extra ids are never emitted).
+    vocab_size: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab_size: usize) -> Self {
+        assert!(
+            vocab_size >= TOKENIZER_VOCAB,
+            "model vocab {vocab_size} smaller than tokenizer range"
+        );
+        ByteTokenizer { vocab_size }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    /// Encode text as BOS + bytes.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(BOS);
+        out.extend(text.bytes().map(|b| b as u32));
+        out
+    }
+
+    /// Decode generated ids back to text (specials and out-of-range ids
+    /// are dropped; invalid utf-8 is replaced).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&t| t < 256)
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_eos(&self, id: u32) -> bool {
+        id == EOS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new(512);
+        let ids = t.encode("What is the largest ocean?");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(t.decode(&ids), "What is the largest ocean?");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::new(512);
+        let s = "héllo → 世界";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let t = ByteTokenizer::new(512);
+        assert_eq!(t.decode(&[BOS, b'h' as u32, EOS, b'i' as u32, PAD]), "hi");
+    }
+
+    #[test]
+    #[should_panic]
+    fn vocab_too_small_panics() {
+        ByteTokenizer::new(100);
+    }
+}

@@ -1,0 +1,85 @@
+//! Micro-bench harness (in-tree criterion substitute): warmup + timed
+//! iterations with mean / median / p95 reporting and a black_box.
+
+use std::time::Instant;
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<42} {:>10} iters  mean {:>12}  median {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt(self.mean_s),
+            fmt(self.median_s),
+            fmt(self.p95_s),
+        );
+    }
+}
+
+fn fmt(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run a closure with warmup, then measure per-iteration wall time.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let p95_idx = ((times.len() as f64 * 0.95) as usize).min(times.len() - 1);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_s: mean,
+        median_s: times[times.len() / 2],
+        p95_s: times[p95_idx],
+        min_s: times[0],
+    };
+    r.report();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop", 2, 50, || {
+            black_box(1 + 1);
+        });
+        assert!(r.mean_s >= 0.0);
+        assert!(r.median_s <= r.p95_s + 1e-9);
+        assert_eq!(r.iters, 50);
+    }
+}

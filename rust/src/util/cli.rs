@@ -1,0 +1,109 @@
+//! Minimal CLI argument parser (in-tree substrate, offline build):
+//! `--flag value` / `--flag=value` / boolean `--flag`, with a positional
+//! subcommand, typed getters and defaults.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.bools.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                return Err(Error::Config(format!("unexpected positional argument '{a}'")));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: '{v}' is not a number"))),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.get(key) == Some("true")
+    }
+
+    pub fn required(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| Error::Config(format!("missing required flag --{key}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --addr 0.0.0.0:1 --sync-softmax --reps=5");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("addr"), Some("0.0.0.0:1"));
+        assert!(a.bool_flag("sync-softmax"));
+        assert_eq!(a.usize_or("reps", 1).unwrap(), 5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --n abc");
+        assert!(a.usize_or("n", 0).is_err());
+        assert!(a.required("nope").is_err());
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    }
+}

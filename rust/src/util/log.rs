@@ -1,0 +1,80 @@
+//! Tiny leveled logger (in-tree substrate): level from `FDPP_LOG`
+//! (error|warn|info|debug, default info), timestamps relative to process
+//! start.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Initialize from the environment; idempotent.
+pub fn init() {
+    START.get_or_init(Instant::now);
+    if let Ok(v) = std::env::var("FDPP_LOG") {
+        let lvl = match v.to_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            _ => Level::Info,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    }
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+    };
+    eprintln!("[{:>9.4}s {tag}] {msg}", t.as_secs_f64());
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        init();
+        assert!(enabled(Level::Error));
+        LEVEL.store(Level::Warn as u8, Ordering::Relaxed);
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        LEVEL.store(Level::Info as u8, Ordering::Relaxed);
+    }
+}

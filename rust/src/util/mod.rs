@@ -1,0 +1,9 @@
+//! In-tree substrates for the fully-offline build: JSON, CLI parsing,
+//! deterministic RNG, logging, and the micro-bench harness. These stand
+//! in for serde_json / clap / rand / tracing / criterion (DESIGN.md §3).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;

@@ -1,0 +1,188 @@
+//! Integration: the serving engine end-to-end on real artifacts —
+//! continuous batching, determinism, preemption, async/sync parity,
+//! and the TCP server round trip.
+
+use fdpp::config::EngineConfig;
+use fdpp::engine::Engine;
+use fdpp::router::{FinishReason, TokenEvent};
+use fdpp::runtime::Runtime;
+use fdpp::sampling::SamplingParams;
+
+fn engine_with(cfg: EngineConfig) -> Option<Engine> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(Engine::new(rt, cfg).unwrap()),
+        Err(e) => {
+            eprintln!("skipping engine integration test (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn collect(rx: &std::sync::mpsc::Receiver<TokenEvent>) -> (Vec<u32>, Option<FinishReason>) {
+    let mut toks = vec![];
+    let mut fin = None;
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            TokenEvent::Token(t) => toks.push(t),
+            TokenEvent::Finished { reason, .. } => fin = Some(reason),
+        }
+    }
+    (toks, fin)
+}
+
+#[test]
+fn greedy_generation_is_deterministic() {
+    let Some(mut e1) = engine_with(EngineConfig::default()) else { return };
+    let a = e1
+        .generate_text("determinism", 12, SamplingParams::default())
+        .unwrap();
+    let Some(mut e2) = engine_with(EngineConfig::default()) else { return };
+    let b = e2
+        .generate_text("determinism", 12, SamplingParams::default())
+        .unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn continuous_batching_serves_concurrent_requests() {
+    let Some(mut engine) = engine_with(EngineConfig::default()) else { return };
+    let mut rxs = vec![];
+    for p in ["alpha", "beta prompt", "gamma gamma gamma"] {
+        let (_, rx) = engine.submit_text(p, 10, SamplingParams::default()).unwrap();
+        rxs.push(rx);
+    }
+    engine.run_to_completion().unwrap();
+    for rx in &rxs {
+        let (toks, fin) = collect(rx);
+        assert_eq!(toks.len(), 10);
+        assert_eq!(fin, Some(FinishReason::MaxTokens));
+    }
+    // Batched decode actually happened (3 lanes -> bucket 4).
+    assert!(engine.metrics.kv_rebuilds >= 1);
+    assert_eq!(engine.metrics.requests_finished, 3);
+    assert!(engine.metrics.decode_steps < 30, "lanes must share steps");
+}
+
+#[test]
+fn batched_output_matches_solo_output() {
+    // A request decoded inside a batch must produce the same tokens as
+    // the same request decoded alone (lane isolation, greedy sampling).
+    let Some(mut solo) = engine_with(EngineConfig::default()) else { return };
+    let want = solo
+        .generate_text("isolation check", 8, SamplingParams::default())
+        .unwrap();
+
+    let Some(mut batched) = engine_with(EngineConfig::default()) else { return };
+    let (_, rx_main) = batched
+        .submit_text("isolation check", 8, SamplingParams::default())
+        .unwrap();
+    let (_, _rx_other) = batched
+        .submit_text("other request padding the batch", 8, SamplingParams::default())
+        .unwrap();
+    batched.run_to_completion().unwrap();
+    let (toks, _) = collect(&rx_main);
+    let got = batched.tokenizer.decode(&toks);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn sync_engine_produces_same_tokens_as_async() {
+    let Some(mut a) = engine_with(EngineConfig {
+        decode_buckets: vec![1, 8],
+        async_softmax: true,
+        ..EngineConfig::default()
+    }) else {
+        return;
+    };
+    let Some(mut s) = engine_with(EngineConfig {
+        decode_buckets: vec![1, 8],
+        async_softmax: false,
+        ..EngineConfig::default()
+    }) else {
+        return;
+    };
+    let pa = a.generate_text("parity", 10, SamplingParams::default()).unwrap();
+    let ps = s.generate_text("parity", 10, SamplingParams::default()).unwrap();
+    assert_eq!(pa, ps, "C1 must not change greedy outputs");
+}
+
+#[test]
+fn preemption_under_kv_pressure() {
+    // Tiny KV pool: 3 concurrent sequences cannot all fit; the youngest
+    // must be preempted, the others must finish.
+    let Some(mut engine) = engine_with(EngineConfig {
+        kv_block_tokens: 16,
+        kv_total_blocks: 8, // 128 tokens total
+        max_new_tokens: 64,
+        ..EngineConfig::default()
+    }) else {
+        return;
+    };
+    let mut rxs = vec![];
+    for p in ["first request with a long prompt padding",
+              "second request also has a long prompt!!",
+              "third"] {
+        let (_, rx) = engine.submit_text(p, 60, SamplingParams::default()).unwrap();
+        rxs.push(rx);
+    }
+    engine.run_to_completion().unwrap();
+    let reasons: Vec<_> = rxs.iter().map(|rx| collect(rx).1.unwrap()).collect();
+    assert!(
+        reasons.iter().any(|r| *r == FinishReason::Preempted),
+        "expected at least one preemption, got {reasons:?}"
+    );
+    assert!(
+        reasons.iter().filter(|r| **r != FinishReason::Preempted).count() >= 1,
+        "someone must finish normally: {reasons:?}"
+    );
+    // All KV blocks returned.
+    assert_eq!(engine.metrics.requests_finished, 3);
+}
+
+#[test]
+fn oversized_prompt_rejected() {
+    let Some(mut engine) = engine_with(EngineConfig::default()) else { return };
+    let long = "x".repeat(100); // > largest prefill bucket (64)
+    assert!(engine
+        .submit_text(&long, 4, SamplingParams::default())
+        .is_err());
+    // token-less submission rejected too (text prompts always carry BOS)
+    assert!(engine
+        .submit_tokens(vec![], 4, SamplingParams::default())
+        .is_err());
+}
+
+#[test]
+fn recompute_rate_accounted_and_small() {
+    let Some(mut engine) = engine_with(EngineConfig::default()) else { return };
+    engine
+        .generate_text("rate accounting", 16, SamplingParams::default())
+        .unwrap();
+    let r = engine.metrics.recompute_rate();
+    assert!(r < 0.5, "recompute rate {r} suspiciously high");
+    assert!(engine.metrics.decode_rows > 0);
+}
+
+#[test]
+fn server_round_trip() {
+    if Runtime::load("artifacts").is_err() {
+        return;
+    }
+    let addr = "127.0.0.1:17341";
+    let cfg = EngineConfig::default();
+    std::thread::spawn(move || {
+        let _ = fdpp::server::serve(addr, "artifacts", cfg);
+    });
+    // Wait for the listener (engine warmup takes a while).
+    let mut client = None;
+    for _ in 0..600 {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        if let Ok(c) = fdpp::server::Client::connect(addr) {
+            client = Some(c);
+            break;
+        }
+    }
+    let mut client = client.expect("server did not come up");
+    let out = client.generate("hello server", 6).unwrap();
+    assert!(!out.is_empty());
+}

@@ -1,0 +1,160 @@
+//! Integration: the full AOT path — Rust loads the HLO artifacts and the
+//! numbers coming back through PJRT must match the oracle-attention
+//! variants and be internally consistent across entry points.
+//!
+//! Requires `make artifacts` (skips gracefully when absent).
+
+use fdpp::runtime::{literal_f32, literal_i32, to_vec_f32, Manifest, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping integration test (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+fn zero_cache(rt: &Runtime, b: usize) -> (xla::Literal, xla::Literal, [usize; 5]) {
+    let m = &rt.manifest.model;
+    let shape = [m.n_layers, b, m.n_heads, m.max_seq, m.head_dim];
+    let n: usize = shape.iter().product();
+    (
+        literal_f32(&vec![0.0; n], &shape).unwrap(),
+        literal_f32(&vec![0.0; n], &shape).unwrap(),
+        shape,
+    )
+}
+
+#[test]
+fn decode_async_matches_oracle_attention_entry() {
+    let Some(mut rt) = runtime() else { return };
+    let (kc, vc, _) = zero_cache(&rt, 1);
+    let toks = literal_i32(&[42], &[1]).unwrap();
+    let pos = literal_i32(&[0], &[1]).unwrap();
+    let a = rt
+        .execute("decode_b1", &[&toks, &pos, &kc, &vc])
+        .unwrap();
+    let b = rt
+        .execute("decode_b1_jnpattn", &[&toks, &pos, &kc, &vc])
+        .unwrap();
+    let la = to_vec_f32(&a[0]).unwrap();
+    let lb = to_vec_f32(&b[0]).unwrap();
+    let d = max_abs_diff(&la, &lb);
+    assert!(d < 2e-3, "async-kernel logits vs oracle logits: {d}");
+}
+
+#[test]
+fn decode_sync_matches_async() {
+    let Some(mut rt) = runtime() else { return };
+    let (kc, vc, _) = zero_cache(&rt, 1);
+    let toks = literal_i32(&[7], &[1]).unwrap();
+    let pos = literal_i32(&[0], &[1]).unwrap();
+    let a = rt.execute("decode_b1", &[&toks, &pos, &kc, &vc]).unwrap();
+    let s = rt
+        .execute("decode_b1_sync", &[&toks, &pos, &kc, &vc])
+        .unwrap();
+    let d = max_abs_diff(&to_vec_f32(&a[0]).unwrap(), &to_vec_f32(&s[0]).unwrap());
+    assert!(d < 2e-3, "sync vs async logits: {d}");
+}
+
+#[test]
+fn prefill_then_decode_consistent_with_longer_prefill() {
+    let Some(mut rt) = runtime() else { return };
+    let m = rt.manifest.model.clone();
+    let vocab = m.vocab_size;
+    // 9 deterministic tokens.
+    let toks9: Vec<i32> = (0..9).map(|i| ((i * 37 + 11) % vocab) as i32).collect();
+
+    // Full prefill over 16-bucket (pad with 0) -> logits at position 8.
+    let mut padded = toks9.clone();
+    padded.resize(16, 0);
+    let t16 = literal_i32(&padded, &[1, 16]).unwrap();
+    let outs = rt.execute("prefill_s16", &[&t16]).unwrap();
+    let full_logits = to_vec_f32(&outs[0]).unwrap();
+    let want = &full_logits[8 * vocab..9 * vocab];
+
+    // Prefill the first 8, insert KV into a dense cache, decode token 8.
+    let mut p8 = toks9[..8].to_vec();
+    p8.resize(16, 0);
+    let t8 = literal_i32(&p8, &[1, 16]).unwrap();
+    let outs8 = rt.execute("prefill_s16", &[&t8]).unwrap();
+    let k8 = to_vec_f32(&outs8[1]).unwrap(); // [Lyr,1,H,16,Dh]
+    let v8 = to_vec_f32(&outs8[2]).unwrap();
+
+    let (_, _, shape) = zero_cache(&rt, 1);
+    let n: usize = shape.iter().product();
+    let mut kd = vec![0.0f32; n];
+    let mut vd = vec![0.0f32; n];
+    // copy [Lyr,1,H,8,Dh] into [Lyr,1,H,max_seq,Dh]
+    let (lyr, h, dh, ms) = (m.n_layers, m.n_heads, m.head_dim, m.max_seq);
+    for l in 0..lyr {
+        for hh in 0..h {
+            for t in 0..8 {
+                let src = ((l * h + hh) * 16 + t) * dh;
+                let dst = ((l * h + hh) * ms + t) * dh;
+                kd[dst..dst + dh].copy_from_slice(&k8[src..src + dh]);
+                vd[dst..dst + dh].copy_from_slice(&v8[src..src + dh]);
+            }
+        }
+    }
+    let kc = literal_f32(&kd, &shape).unwrap();
+    let vc = literal_f32(&vd, &shape).unwrap();
+    let toks = literal_i32(&[toks9[8]], &[1]).unwrap();
+    let pos = literal_i32(&[8], &[1]).unwrap();
+    let dec = rt.execute("decode_b1", &[&toks, &pos, &kc, &vc]).unwrap();
+    let got = to_vec_f32(&dec[0]).unwrap();
+    let d = max_abs_diff(&got, want);
+    assert!(d < 5e-3, "decode-continues-prefill mismatch: {d}");
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let Some(mut rt) = runtime() else { return };
+    let (kc, vc, _) = zero_cache(&rt, 2);
+    let toks = literal_i32(&[1, 2], &[2]).unwrap();
+    let pos = literal_i32(&[0, 0], &[2]).unwrap();
+    let a = rt.execute("decode_b2", &[&toks, &pos, &kc, &vc]).unwrap();
+    let b = rt.execute("decode_b2", &[&toks, &pos, &kc, &vc]).unwrap();
+    assert_eq!(to_vec_f32(&a[0]).unwrap(), to_vec_f32(&b[0]).unwrap());
+}
+
+#[test]
+fn manifest_entries_well_formed() {
+    let Some(rt) = runtime() else { return };
+    let man = &rt.manifest;
+    assert!(man.entries.len() >= 10);
+    for e in &man.entries {
+        assert!(e.num_outputs >= 1, "{}", e.name);
+        assert!(!e.inputs.is_empty(), "{}", e.name);
+        assert!(
+            std::path::Path::new("artifacts").join(&e.file).exists(),
+            "missing HLO file for {}",
+            e.name
+        );
+    }
+    // naming convention helpers resolve
+    assert!(man.entry(&Manifest::decode_entry_name(1, false)).is_ok());
+    assert!(man.entry(&Manifest::prefill_entry_name(16)).is_ok());
+    // the four Fig 9(a) shapes are recorded
+    assert_eq!(man.linear_shapes.len(), 4);
+}
+
+#[test]
+fn recompute_flags_stay_zero_on_normal_inputs() {
+    let Some(mut rt) = runtime() else { return };
+    let (kc, vc, _) = zero_cache(&rt, 1);
+    let toks = literal_i32(&[100], &[1]).unwrap();
+    let pos = literal_i32(&[0], &[1]).unwrap();
+    let outs = rt.execute("decode_b1", &[&toks, &pos, &kc, &vc]).unwrap();
+    let flags = to_vec_f32(&outs[3]).unwrap();
+    assert!(flags.iter().all(|&f| f == 0.0), "unexpected recompute: {flags:?}");
+}

@@ -1,0 +1,278 @@
+//! Property-based tests over the coordinator invariants (in-tree
+//! randomized harness; DESIGN.md §8): KV-cache block conservation,
+//! batcher FIFO/budget, dispatch totality/monotonicity, scheduler
+//! conservation, Eq. 5 monotonicity, JSON round-trips.
+
+use fdpp::batching::{pick_bucket, Batcher};
+use fdpp::dataflow::{find_inflections, ImplKind, LookupTable, OpInflection};
+use fdpp::gemm::compute_memory_ratio;
+use fdpp::kvcache::{KvCache, KvGeometry};
+use fdpp::scheduler::{decide, Action, SchedState};
+use fdpp::util::json;
+use fdpp::util::rng::Rng;
+
+const CASES: usize = 200;
+
+fn geo(rng: &mut Rng) -> KvGeometry {
+    KvGeometry {
+        n_layers: rng.gen_range(1, 3),
+        n_heads: rng.gen_range(1, 3),
+        head_dim: 4 * rng.gen_range(1, 3),
+        block_tokens: [4, 8, 16][rng.gen_range(0, 2)],
+        max_seq: 64,
+    }
+}
+
+/// KV cache never double-allocates, never leaks, and free+used is
+/// constant under random alloc/grow/free sequences.
+#[test]
+fn prop_kvcache_block_conservation() {
+    let mut rng = Rng::seed_from_u64(0xC0FFEE);
+    for case in 0..CASES {
+        let g = geo(&mut rng);
+        let total = rng.gen_range(4, 32);
+        let mut kv = KvCache::new(g, total);
+        let mut live: Vec<u64> = vec![];
+        for op in 0..50 {
+            match rng.gen_range(0, 2) {
+                0 => {
+                    let id = (case * 1000 + op) as u64;
+                    let toks = rng.gen_range(1, g.max_seq);
+                    if kv.alloc_seq(id, toks).is_ok() {
+                        assert!(!live.contains(&id));
+                        live.push(id);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let id = live[rng.gen_range(0, live.len() - 1)];
+                        let _ = kv.grow_one(id);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let idx = rng.gen_range(0, live.len() - 1);
+                        let id = live.swap_remove(idx);
+                        kv.free_seq(id).unwrap();
+                    }
+                }
+            }
+            assert_eq!(kv.used_blocks() + kv.free_blocks(), total, "block leak");
+        }
+        for id in live {
+            kv.free_seq(id).unwrap();
+        }
+        assert_eq!(kv.free_blocks(), total, "blocks must all return");
+    }
+}
+
+/// Batcher (sticky lanes): membership preserved, occupancy fits the
+/// bucket, holes only appear where sequences left, lanes never shift
+/// except across a shrink, and shrink only fires when occupancy fits a
+/// smaller bucket.
+#[test]
+fn prop_batcher_sticky_lanes() {
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    for _ in 0..CASES {
+        let buckets = vec![1, 2, 4, 8];
+        let mut b = Batcher::new(buckets.clone());
+        let mut live: Vec<u64> = vec![];
+        let mut next_id = 0u64;
+        let mut prev: Option<Vec<Option<u64>>> = None;
+        for _ in 0..40 {
+            let mut layout_may_change = false;
+            match rng.gen_range(0, 2) {
+                0 if live.len() < 8 => {
+                    let adm = b.admit(next_id).unwrap();
+                    assert!(adm.lane < b.bucket());
+                    live.push(next_id);
+                    next_id += 1;
+                    // joining must never move existing lanes
+                    if let (Some(p), false) = (&prev, adm.bucket_grew) {
+                        let cur = b.assemble().unwrap().lanes;
+                        for (i, slot) in p.iter().enumerate() {
+                            if slot.is_some() {
+                                assert_eq!(cur[i], *slot, "sticky lane moved");
+                            }
+                        }
+                    }
+                    layout_may_change = true;
+                }
+                1 if !live.is_empty() => {
+                    let idx = rng.gen_range(0, live.len() - 1);
+                    let id = live.swap_remove(idx);
+                    let shrank = b.remove(id).unwrap();
+                    if shrank {
+                        layout_may_change = true;
+                        assert!(
+                            live.len() <= pick_bucket(&buckets, live.len().max(1)).unwrap()
+                        );
+                    }
+                    layout_may_change = true;
+                }
+                _ => {}
+            }
+            let _ = layout_may_change;
+            assert_eq!(b.len(), live.len());
+            if live.is_empty() {
+                assert!(b.assemble().is_err());
+                prev = None;
+                continue;
+            }
+            let batch = b.assemble().unwrap();
+            assert_eq!(batch.occupancy(), live.len());
+            assert!(buckets.contains(&batch.bucket));
+            assert!(batch.bucket >= live.len(), "bucket too small");
+            // every live id has exactly one lane
+            for id in &live {
+                assert_eq!(
+                    batch.lanes.iter().filter(|l| **l == Some(*id)).count(),
+                    1,
+                    "seq {id} lane count"
+                );
+            }
+            prev = Some(batch.lanes);
+        }
+    }
+}
+
+/// Dispatch is total and monotone in M: the chosen impl only ever moves
+/// A -> B -> C as M grows, for any profiler (even adversarial ones).
+#[test]
+fn prop_dispatch_total_and_monotone() {
+    let mut rng = Rng::seed_from_u64(0xD15);
+    for case in 0..CASES {
+        let ms = vec![1, 2, 4, 8, 16, 32, 64, 128];
+        // adversarial random profiler
+        let seed = case as u64;
+        let mut profiler = move |ik: ImplKind, m: usize| -> fdpp::Result<f64> {
+            let mut r = Rng::seed_from_u64(
+                seed ^ (m as u64) << 3
+                    ^ match ik {
+                        ImplKind::A => 1,
+                        ImplKind::B => 2,
+                        ImplKind::C => 3,
+                    },
+            );
+            Ok(r.next_f64())
+        };
+        let inf = find_inflections("x", 64, 64, &ms, &mut profiler).unwrap();
+        assert!(inf.m1 <= inf.m2, "m1 {} > m2 {}", inf.m1, inf.m2);
+        let mut rank_prev = 0u8;
+        for m in 0..300 {
+            let ik = inf.dispatch(m);
+            let rank = match ik {
+                ImplKind::A => 0,
+                ImplKind::B => 1,
+                ImplKind::C => 2,
+            };
+            assert!(rank >= rank_prev, "dispatch regressed at M={m}");
+            rank_prev = rank;
+        }
+        let _ = rng.next_u64();
+    }
+}
+
+/// Scheduler conserves work: it never invents an action with nothing to
+/// do, never idles when work exists.
+#[test]
+fn prop_scheduler_no_lost_work() {
+    let mut rng = Rng::seed_from_u64(0x5EED);
+    for _ in 0..CASES * 5 {
+        let s = SchedState {
+            queued: rng.gen_range(0, 5),
+            running: rng.gen_range(0, 8),
+            max_running: 8,
+            free_blocks: rng.gen_range(0, 16),
+            next_prefill_blocks: rng.gen_range(0, 8),
+        };
+        let a = decide(s);
+        match a {
+            Action::Idle => assert!(s.queued == 0 && s.running == 0),
+            Action::Decode => assert!(s.running > 0),
+            Action::Prefill => assert!(s.queued > 0),
+        }
+        if s.queued + s.running > 0 {
+            assert_ne!(a, Action::Idle, "idle with work present: {s:?}");
+        }
+    }
+}
+
+/// Eq. 5 monotonicity: the compute/memory ratio increases with B_N and
+/// with M, and is bounded by 2*M (the K -> inf limit... actually 2*M*K/(K/1) bound).
+#[test]
+fn prop_eq5_monotone() {
+    let mut rng = Rng::seed_from_u64(0xE05);
+    for _ in 0..CASES {
+        let m = rng.gen_range(1, 64);
+        let k = 64 * rng.gen_range(1, 128);
+        let bn1 = 8 * rng.gen_range(1, 32);
+        let bn2 = bn1 * 2;
+        let r1 = compute_memory_ratio(m, k, bn1);
+        let r2 = compute_memory_ratio(m, k, bn2);
+        assert!(r2 >= r1, "ratio must grow with B_N");
+        let rm = compute_memory_ratio(m + 1, k, bn1);
+        assert!(rm >= r1, "ratio must grow with M");
+        assert!(r1 > 0.0 && r1 <= 2.0 * m as f64);
+    }
+}
+
+/// Lookup tables survive JSON round trips byte-for-byte semantically.
+#[test]
+fn prop_lookup_table_json_roundtrip() {
+    let mut rng = Rng::seed_from_u64(0x10AD);
+    for case in 0..CASES {
+        let entries: Vec<OpInflection> = (0..rng.gen_range(1, 4))
+            .map(|i| {
+                let m1 = rng.gen_range(1, 64);
+                OpInflection {
+                    op: format!("op{i}"),
+                    n: rng.gen_range(1, 20000),
+                    k: rng.gen_range(1, 20000),
+                    m1,
+                    m2: m1 + rng.gen_range(0, 512),
+                }
+            })
+            .collect();
+        let t = LookupTable {
+            model: format!("m{case}"),
+            hardware: "hw".into(),
+            entries,
+        };
+        let j = t.to_json().to_string();
+        let back = LookupTable::from_json(&json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.model, t.model);
+        assert_eq!(back.entries.len(), t.entries.len());
+        for (a, b) in back.entries.iter().zip(&t.entries) {
+            assert_eq!((a.m1, a.m2, a.n, a.k, &a.op), (b.m1, b.m2, b.n, b.k, &b.op));
+        }
+    }
+}
+
+/// Random JSON values round-trip through the in-tree serializer/parser.
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> json::Json {
+        match if depth == 0 { rng.gen_range(0, 3) } else { rng.gen_range(0, 5) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.next_u64() % 2 == 0),
+            2 => json::Json::Num((rng.next_f64() * 2e6) - 1e6),
+            3 => json::Json::Arr((0..rng.gen_range(0, 4)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.gen_range(0, 4) {
+                    m.insert(format!("k{i}\"\n→"), gen_value(rng, depth - 1));
+                }
+                json::Json::Obj(m)
+            }
+        }
+    }
+    let mut rng = Rng::seed_from_u64(0xF022);
+    for _ in 0..CASES {
+        let v = gen_value(&mut rng, 3);
+        let text = v.to_string();
+        let back = json::parse(&text).unwrap();
+        // numbers may lose a ulp through the f64 formatter; compare text
+        assert_eq!(back.to_string(), text);
+    }
+}
