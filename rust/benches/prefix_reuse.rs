@@ -1,0 +1,152 @@
+//! Prefix-cache bench: shared-prefix workload (N tenant system prompts,
+//! Zipf-distributed reuse) through the simulation engine, cache on vs
+//! off. Reports hit rate, prefill tokens saved, and verifies that every
+//! request's output is byte-identical to the no-cache run on the same
+//! seed — reuse must be a pure optimization.
+//!
+//! Acceptance target (ISSUE 1): >= 50% prefill-token reduction at
+//! 8 tenants with Zipf(1.0) reuse.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use fdpp::bench_support::banner;
+use fdpp::config::EngineConfig;
+use fdpp::router::TokenEvent;
+use fdpp::sampling::SamplingParams;
+use fdpp::simengine::{SimEngine, SimSpec};
+use fdpp::workload::{shared_prefix_trace, SharedPrefixSpec, TraceRequest};
+
+fn cfg(prefix_cache: bool) -> EngineConfig {
+    EngineConfig {
+        kv_block_tokens: 16,
+        kv_total_blocks: 512,
+        max_new_tokens: 16,
+        prefix_cache,
+        ..EngineConfig::default()
+    }
+}
+
+struct RunResult {
+    outputs: Vec<Vec<u32>>,
+    prefill_computed: u64,
+    tokens_reused: u64,
+    hit_rate: f64,
+    evicted: u64,
+    wall_s: f64,
+}
+
+fn run(trace: &[TraceRequest], prefix_cache: bool) -> fdpp::Result<RunResult> {
+    let mut engine = SimEngine::new(cfg(prefix_cache), SimSpec::default())?;
+    let t0 = Instant::now();
+    let mut rxs: Vec<mpsc::Receiver<TokenEvent>> = Vec::with_capacity(trace.len());
+    for r in trace {
+        let (_, rx) =
+            engine.submit_text(&r.prompt, r.max_new_tokens, SamplingParams::default())?;
+        rxs.push(rx);
+    }
+    engine.run_to_completion()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let outputs = rxs
+        .iter()
+        .map(|rx| {
+            let mut toks = vec![];
+            while let Ok(ev) = rx.try_recv() {
+                if let TokenEvent::Token(t) = ev {
+                    toks.push(t);
+                }
+            }
+            toks
+        })
+        .collect();
+    let m = &engine.metrics;
+    Ok(RunResult {
+        outputs,
+        prefill_computed: m.prefill_tokens_computed,
+        tokens_reused: m.prefix_tokens_reused,
+        hit_rate: m.prefix_hit_rate(),
+        evicted: m.prefix_blocks_evicted,
+        wall_s,
+    })
+}
+
+fn main() -> fdpp::Result<()> {
+    banner(
+        "prefix reuse",
+        "radix-tree prefix cache on the shared-prefix workload (sim engine)",
+    );
+    let spec = SharedPrefixSpec {
+        n_tenants: 8,
+        zipf_s: 1.0,
+        seed: 7,
+        ..SharedPrefixSpec::default()
+    };
+    let trace = shared_prefix_trace(&spec);
+    println!(
+        "{} requests, {} tenants, Zipf({}), {}-char system prompts\n",
+        trace.len(),
+        spec.n_tenants,
+        spec.zipf_s,
+        spec.system_prompt_len
+    );
+
+    let cold = run(&trace, false)?;
+    let warm = run(&trace, true)?;
+
+    // Correctness first: reuse must not change a single token.
+    let mut mismatches = 0usize;
+    for (i, (a, b)) in warm.outputs.iter().zip(&cold.outputs).enumerate() {
+        if a != b {
+            mismatches += 1;
+            if mismatches <= 3 {
+                println!("MISMATCH request {i}: cached {a:?} != cold {b:?}");
+            }
+        }
+    }
+    assert_eq!(
+        mismatches, 0,
+        "cached outputs must be byte-identical to the no-cache path"
+    );
+    println!("outputs: byte-identical across all {} requests", trace.len());
+
+    let total_prompt_tokens = cold.prefill_computed as f64;
+    let reduction = 1.0 - warm.prefill_computed as f64 / total_prompt_tokens;
+    println!();
+    println!(
+        "{:<34} {:>12} {:>12}",
+        "", "cache off", "cache on"
+    );
+    println!(
+        "{:<34} {:>12} {:>12}",
+        "prefill tokens computed", cold.prefill_computed, warm.prefill_computed
+    );
+    println!(
+        "{:<34} {:>12} {:>12}",
+        "prefix tokens reused", cold.tokens_reused, warm.tokens_reused
+    );
+    println!(
+        "{:<34} {:>11.1}% {:>11.1}%",
+        "lookup hit rate",
+        cold.hit_rate * 100.0,
+        warm.hit_rate * 100.0
+    );
+    println!(
+        "{:<34} {:>12} {:>12}",
+        "cached blocks evicted", cold.evicted, warm.evicted
+    );
+    println!(
+        "{:<34} {:>11.2}s {:>11.2}s",
+        "wall time", cold.wall_s, warm.wall_s
+    );
+    println!();
+    println!(
+        "prefill-token reduction: {:.1}% (target >= 50%)",
+        reduction * 100.0
+    );
+    assert!(
+        reduction >= 0.5,
+        "prefill-token reduction {reduction:.3} below the 50% target"
+    );
+    println!("PASS");
+    Ok(())
+}

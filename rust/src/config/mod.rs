@@ -135,6 +135,9 @@ pub struct EngineConfig {
     /// Use the asynchronized-softmax decode artifacts (C1). When false
     /// the engine serves from the `_sync` baseline artifacts.
     pub async_softmax: bool,
+    /// Enable the radix-tree prefix cache: requests reuse the KV of the
+    /// longest cached prompt prefix instead of re-prefilling it.
+    pub prefix_cache: bool,
     /// Sampling temperature <= 0 means greedy.
     pub temperature: f32,
     pub top_k: usize,
@@ -152,6 +155,7 @@ impl Default for EngineConfig {
             max_running: 8,
             max_new_tokens: 64,
             async_softmax: true,
+            prefix_cache: true,
             temperature: 0.0,
             top_k: 0,
             seed: 0,
@@ -190,6 +194,10 @@ impl EngineConfig {
                 .get("async_softmax")
                 .and_then(Json::as_bool)
                 .unwrap_or(d.async_softmax),
+            prefix_cache: j
+                .get("prefix_cache")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.prefix_cache),
             temperature: j
                 .get("temperature")
                 .and_then(Json::as_f64)

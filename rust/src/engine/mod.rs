@@ -22,10 +22,11 @@ use crate::config::EngineConfig;
 use crate::error::{Error, Result};
 use crate::kvcache::{KvCache, KvGeometry, SeqId};
 use crate::metrics::EngineMetrics;
+use crate::prefixcache::{PrefixCache, PrefixMatch};
 use crate::router::{FinishReason, Request, Router, SeqState, Sequence, TokenEvent};
 use crate::runtime::{literal_f32, literal_i32, to_vec_f32, Manifest, Runtime};
 use crate::sampling::{Sampler, SamplingParams};
-use crate::scheduler::{decide, preemption_victim, Action, SchedState};
+use crate::scheduler::{decide, preemption_victim, Action, PreemptCandidate, SchedState};
 use crate::tokenizer::{ByteTokenizer, EOS};
 
 /// Device-resident dense KV state for the current batch composition.
@@ -43,6 +44,7 @@ pub struct Engine {
     pub rt: Runtime,
     pub cfg: EngineConfig,
     kv: KvCache,
+    prefix: PrefixCache,
     batcher: Batcher,
     router: Router,
     sampler: Sampler,
@@ -68,6 +70,7 @@ impl Engine {
         let tokenizer = ByteTokenizer::new(m.vocab_size);
         let vocab = m.vocab_size;
         Ok(Engine {
+            prefix: PrefixCache::new(cfg.kv_block_tokens),
             batcher: Batcher::new(cfg.decode_buckets.clone()),
             sampler: Sampler::new(cfg.seed),
             router: Router::new(),
@@ -147,20 +150,128 @@ impl Engine {
         self.router.queued()
     }
 
+    /// Matched prefix usable for reuse: capped so at least the prompt's
+    /// last token still runs through prefill (its logits row seeds the
+    /// first generated token), floored to whole blocks.
+    fn usable_prefix(&self, prompt_len: usize, matched: usize) -> usize {
+        let bt = self.cfg.kv_block_tokens;
+        (matched.min(prompt_len.saturating_sub(1)) / bt) * bt
+    }
+
+    /// Radix-tree lookup for a prompt, truncated to the usable range.
+    fn lookup_prefix(&mut self, prompt: &[u32]) -> PrefixMatch {
+        if !self.cfg.prefix_cache {
+            return PrefixMatch::default();
+        }
+        let m = self.prefix.match_prefix(prompt);
+        let usable = self.usable_prefix(prompt.len(), m.tokens);
+        if usable == 0 {
+            return PrefixMatch::default();
+        }
+        PrefixMatch {
+            blocks: m.blocks[..usable / self.cfg.kv_block_tokens].to_vec(),
+            tokens: usable,
+        }
+    }
+
+    /// Admit a sequence's KV: prefix attach first, then eviction of the
+    /// uncached shortfall + retry, then — with nothing running to wait
+    /// for — a cold allocation with the cache fully evictable. Returns
+    /// the attached match, `Ok(None)` when admission should wait for
+    /// decode to free blocks, or `Err` when truly stuck.
+    ///
+    /// Attach-before-evict ordering matters throughout: matched blocks
+    /// are refcount-1 (tree-only) until the alloc increfs them, so
+    /// eviction must never run between a successful match and its
+    /// attach; every eviction below is followed by a *fresh* match.
+    fn admit_kv(&mut self, id: SeqId, prompt: &[u32]) -> Result<Option<PrefixMatch>> {
+        let len = prompt.len();
+        let need = (len + 1).div_ceil(self.cfg.kv_block_tokens);
+        let matched = self.lookup_prefix(prompt);
+        if self
+            .kv
+            .alloc_seq_with_prefix(id, len + 1, &matched.blocks, matched.tokens)
+            .is_ok()
+        {
+            return Ok(Some(matched));
+        }
+        // Only the *uncached* shortfall needs reclaiming: matched blocks
+        // attach by incref, they are not allocated.
+        let want = need
+            .saturating_sub(matched.blocks.len())
+            .saturating_sub(self.kv.free_blocks());
+        let freed = self.prefix.evict(want, &mut self.kv);
+        self.metrics.prefix_blocks_evicted += freed as u64;
+        let matched = self.lookup_prefix(prompt);
+        if self
+            .kv
+            .alloc_seq_with_prefix(id, len + 1, &matched.blocks, matched.tokens)
+            .is_ok()
+        {
+            return Ok(Some(matched));
+        }
+        if !self.batcher.is_empty() {
+            return Ok(None);
+        }
+        // Nothing running will ever free blocks: drop every cache claim
+        // and admit cold (or surface the allocator's error).
+        let freed = self.prefix.evict(need, &mut self.kv);
+        self.metrics.prefix_blocks_evicted += freed as u64;
+        self.kv.alloc_seq(id, len + 1)?;
+        Ok(Some(PrefixMatch::default()))
+    }
+
+    /// Blocks the next queued prefill needs and how many are cached
+    /// (a peek: no LRU touch, no attach).
+    fn admission_outlook(&self) -> (usize, usize) {
+        match self.router.queue.front() {
+            Some(s) => {
+                let bt = self.cfg.kv_block_tokens;
+                let need = (s.prompt.len() + 1).div_ceil(bt);
+                let cached = if self.cfg.prefix_cache {
+                    let matched = self.prefix.peek_match_tokens(&s.prompt);
+                    self.usable_prefix(s.prompt.len(), matched) / bt
+                } else {
+                    0
+                };
+                (need, cached)
+            }
+            None => (0, 0),
+        }
+    }
+
     /// Run one scheduling iteration. Returns the action taken.
     pub fn step(&mut self) -> Result<Action> {
-        let next_blocks = self
-            .router
-            .queue
-            .front()
-            .map(|s| (s.prompt.len() + 1).div_ceil(self.cfg.kv_block_tokens))
-            .unwrap_or(0);
+        let (next_blocks, mut cached_blocks) = self.admission_outlook();
+        // Under admission pressure, reclaim cached (refcount-1) blocks
+        // before the policy sees the free count — but only when
+        // admission is actually possible (a full running set gets
+        // nothing from eviction), and only after refreshing the head
+        // request's matched path in the LRU so eviction prefers other
+        // entries over the prefix about to be reused.
+        let uncached = next_blocks.saturating_sub(cached_blocks);
+        let admission_possible = next_blocks > 0 && self.batcher.len() < self.cfg.max_running;
+        if admission_possible && self.kv.free_blocks() < uncached {
+            if let Some(prompt) = self.router.queue.front().map(|s| s.prompt.clone()) {
+                let _ = self.prefix.match_prefix(&prompt);
+            }
+            let want = uncached - self.kv.free_blocks();
+            let freed = self.prefix.evict(want, &mut self.kv);
+            self.metrics.prefix_blocks_evicted += freed as u64;
+            if freed > 0 {
+                // Eviction may still have trimmed blocks the peek
+                // counted as cached — re-peek so the policy decides on
+                // live state.
+                cached_blocks = self.admission_outlook().1;
+            }
+        }
         let action = decide(SchedState {
             queued: self.router.queued(),
             running: self.batcher.len(),
             max_running: self.cfg.max_running,
             free_blocks: self.kv.free_blocks(),
             next_prefill_blocks: next_blocks,
+            cached_prefill_blocks: cached_blocks,
         });
         match action {
             Action::Prefill => self.step_prefill()?,
@@ -199,15 +310,33 @@ impl Engine {
                 return Err(Error::Request(format!("prompt {len} exceeds prefill buckets")));
             }
         };
-        // KV admission control (+1 for the first generated token).
-        if let Err(e) = self.kv.alloc_seq(seq.id, len + 1) {
-            // No room: requeue and let decode drain.
-            self.router.requeue_front(seq);
-            if self.batcher.is_empty() {
-                return Err(e); // truly stuck — surface it
+        // Prefix-cache lookup + KV admission (+1 for the first generated
+        // token). (The fixed-shape prefill artifact still runs over the
+        // whole padded prompt — compute skipping needs suffix-shaped
+        // artifacts — but the matched blocks are shared, not
+        // re-allocated, and the accounting below drives the cache-aware
+        // scheduler.)
+        let matched = match self.admit_kv(seq.id, &seq.prompt) {
+            Ok(Some(m)) => m,
+            Ok(None) => {
+                // No room yet: requeue and let decode drain blocks.
+                self.router.requeue_front(seq);
+                return self.step_decode();
             }
-            return self.step_decode();
+            Err(e) => {
+                // Truly stuck — surface it.
+                self.router.requeue_front(seq);
+                return Err(e);
+            }
+        };
+        if self.cfg.prefix_cache {
+            self.metrics.prefix_lookups += 1;
+            if matched.tokens > 0 {
+                self.metrics.prefix_hits += 1;
+            }
         }
+        self.metrics.prefix_tokens_reused += matched.tokens as u64;
+        self.metrics.prefill_tokens_computed += (len - matched.tokens) as u64;
 
         // Pad prompt to the bucket.
         let mut toks: Vec<i32> = seq.prompt.iter().map(|&t| t as i32).collect();
@@ -222,10 +351,13 @@ impl Engine {
             .map_err(|_| Error::Artifact("prefill must return 3 outputs".into()))?;
 
         // Persist KV to the paged backing store (needed for rebuilds and
-        // preemption; off the per-decode-step path).
+        // preemption; off the per-decode-step path). Positions covered
+        // by the attached prefix are already resident and shared — only
+        // the uncached suffix is written.
         let k_host = to_vec_f32(&k)?;
         let v_host = to_vec_f32(&v)?;
-        self.kv.write_prefill(seq.id, &k_host, &v_host, bucket, len)?;
+        self.kv
+            .write_prefill_range(seq.id, &k_host, &v_host, bucket, matched.tokens, len)?;
         seq.kv_len = len;
 
         // First token from the logits row of the last real position.
@@ -291,8 +423,17 @@ impl Engine {
     fn step_decode(&mut self) -> Result<()> {
         let t0 = Instant::now();
         // KV headroom: each running sequence may need one fresh block.
-        while self.kv.free_blocks() < self.batcher.len() && self.batcher.len() > 1 {
-            self.preempt_youngest()?;
+        // Reclaim cached prefix blocks first (even for a lone sequence —
+        // tree-held blocks are reclaimable memory); preempt only as a
+        // last resort, which needs at least two running sequences.
+        while self.kv.free_blocks() < self.batcher.len() {
+            let want = self.batcher.len() - self.kv.free_blocks();
+            let freed = self.prefix.evict(want, &mut self.kv);
+            self.metrics.prefix_blocks_evicted += freed as u64;
+            if self.kv.free_blocks() >= self.batcher.len() || self.batcher.len() <= 1 {
+                break;
+            }
+            self.preempt_one()?;
         }
         let batch = self.batcher.assemble()?;
         let bucket = batch.bucket;
@@ -446,15 +587,51 @@ impl Engine {
         Ok(())
     }
 
-    /// Preempt the youngest running sequence (KV pressure): its lane is
-    /// freed and the request finishes with `Preempted`.
-    fn preempt_youngest(&mut self) -> Result<()> {
-        let ids = self.batcher.running_ids();
-        let victim_idx = preemption_victim(&ids)
+    /// Preempt one running sequence (KV pressure): the scheduler picks
+    /// the victim *by id* — preferring sequences whose blocks stay
+    /// reusable (shared with the prefix cache or other sequences), ties
+    /// to the youngest — and the engine resolves id -> lane.
+    fn preempt_one(&mut self) -> Result<()> {
+        let candidates: Vec<PreemptCandidate> = self
+            .batcher
+            .running_ids()
+            .into_iter()
+            .map(|id| {
+                let reusable = self
+                    .kv
+                    .seq_blocks(id)
+                    .map(|bs| {
+                        bs.iter()
+                            .filter(|&&b| self.kv.block_refcount(b) > 1)
+                            .count()
+                    })
+                    .unwrap_or(0);
+                PreemptCandidate {
+                    id,
+                    reusable_blocks: reusable,
+                }
+            })
+            .collect();
+        let id = preemption_victim(&candidates)
             .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
-        let id = ids[victim_idx];
         let mut seq = self.seqs.remove(&id).unwrap();
+        self.metrics.preemptions += 1;
         self.retire(&mut seq, FinishReason::Preempted)
+    }
+
+    /// Register a finished/preempted sequence's *prompt* KV in the
+    /// prefix cache. Only the prompt's full blocks are registered: they
+    /// were written at prefill and are valid in the paged store, while
+    /// generated-token KV may still be device-resident (scattered back
+    /// only on a dense rebuild) and must not be published.
+    fn register_prefix(&mut self, seq: &Sequence) {
+        if !self.cfg.prefix_cache || !self.kv.contains(seq.id) {
+            return;
+        }
+        let Some(blocks) = self.kv.seq_blocks(seq.id) else {
+            return;
+        };
+        self.prefix.insert(&seq.prompt, &blocks, &mut self.kv);
     }
 
     fn finish_seq(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
@@ -463,6 +640,7 @@ impl Engine {
             reason,
             n_generated: seq.generated.len(),
         });
+        self.register_prefix(seq);
         if self.kv.contains(seq.id) {
             self.kv.free_seq(seq.id)?;
         }

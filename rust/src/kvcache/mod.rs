@@ -1,8 +1,25 @@
-//! Paged KV-cache manager.
+//! Paged KV-cache manager with block sharing.
 //!
 //! Host-side paged storage of per-sequence K/V (vLLM-style block tables)
 //! plus gather/scatter between the paged store and the dense
 //! `[Lyr, B, H, Lmax, Dh]` batch tensors the decode artifacts consume.
+//!
+//! Blocks are *reference counted* so the prefix cache (`prefixcache`)
+//! and multiple sequences can share the KV of a common prompt prefix:
+//!
+//! - `alloc_seq` gives a sequence private blocks (refcount 1 each).
+//! - `alloc_seq_with_prefix` attaches already-filled shared blocks for
+//!   the matched prefix (incref) and allocates fresh blocks only for
+//!   the uncached tail.
+//! - A block returns to the free list exactly when its last reference
+//!   drops (`decref_block`), never before.
+//! - Writes go through `ensure_writable`: writing into a block whose
+//!   refcount is > 1 first copies it (copy-on-write), so shared data is
+//!   immutable. This is what makes a partially-filled shared tail block
+//!   safe to append into.
+//! - `scatter_dense` skips shared blocks entirely: the decode artifacts
+//!   only append at new positions, so a shared prefix block's contents
+//!   on device are identical to the paged copy.
 //!
 //! The engine keeps the dense tensor device-resident across decode steps
 //! and only syncs with the paged store when the batch composition
@@ -51,13 +68,15 @@ struct SeqEntry {
     len: usize,
 }
 
-/// Paged KV store with block allocator.
+/// Paged KV store with a reference-counted block allocator.
 pub struct KvCache {
     geo: KvGeometry,
     /// K and V slabs: total_blocks x block_elems each.
     k_data: Vec<f32>,
     v_data: Vec<f32>,
     free: Vec<usize>,
+    /// Per-block reference count; 0 iff the block is on the free list.
+    refcount: Vec<u32>,
     seqs: HashMap<SeqId, SeqEntry>,
     total_blocks: usize,
 }
@@ -70,6 +89,7 @@ impl KvCache {
             k_data: vec![0.0; total_blocks * be],
             v_data: vec![0.0; total_blocks * be],
             free: (0..total_blocks).rev().collect(),
+            refcount: vec![0; total_blocks],
             seqs: HashMap::new(),
             total_blocks,
         }
@@ -77,6 +97,10 @@ impl KvCache {
 
     pub fn geometry(&self) -> KvGeometry {
         self.geo
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
     }
 
     pub fn free_blocks(&self) -> usize {
@@ -91,16 +115,82 @@ impl KvCache {
         self.seqs.get(&id).map(|s| s.len)
     }
 
+    /// The sequence's block table (physical block ids in position order).
+    pub fn seq_blocks(&self, id: SeqId) -> Option<Vec<usize>> {
+        self.seqs.get(&id).map(|s| s.blocks.clone())
+    }
+
     pub fn contains(&self, id: SeqId) -> bool {
         self.seqs.contains_key(&id)
+    }
+
+    /// Current reference count of a physical block.
+    pub fn block_refcount(&self, block: usize) -> u32 {
+        self.refcount[block]
     }
 
     fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.geo.block_tokens)
     }
 
+    // -----------------------------------------------------------------
+    // Block-level reference counting
+    // -----------------------------------------------------------------
+
+    fn alloc_block(&mut self) -> Option<usize> {
+        let b = self.free.pop()?;
+        debug_assert_eq!(self.refcount[b], 0, "free block {b} had references");
+        self.refcount[b] = 1;
+        Some(b)
+    }
+
+    fn decref_block(&mut self, b: usize) {
+        debug_assert!(self.refcount[b] > 0, "decref of free block {b}");
+        self.refcount[b] -= 1;
+        if self.refcount[b] == 0 {
+            self.free.push(b);
+        }
+    }
+
+    /// Add one reference to each block (prefix-cache retention, shared
+    /// attach). The blocks must be live (refcount > 0).
+    pub fn incref_blocks(&mut self, blocks: &[usize]) {
+        for &b in blocks {
+            debug_assert!(self.refcount[b] > 0, "incref of free block {b}");
+            self.refcount[b] += 1;
+        }
+    }
+
+    /// Drop one reference from each block; blocks whose last reference
+    /// drops return to the free list.
+    pub fn decref_blocks(&mut self, blocks: &[usize]) {
+        for &b in blocks {
+            self.decref_block(b);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Sequence lifecycle
+    // -----------------------------------------------------------------
+
     /// Register a sequence with capacity for `tokens` tokens.
     pub fn alloc_seq(&mut self, id: SeqId, tokens: usize) -> Result<()> {
+        self.alloc_seq_with_prefix(id, tokens, &[], 0)
+    }
+
+    /// Register a sequence whose first `shared_tokens` tokens are served
+    /// from `shared` blocks (attached by incref, not copied); fresh
+    /// blocks are allocated only for the remaining capacity. The shared
+    /// blocks must exactly cover `shared_tokens`
+    /// (`shared.len() == ceil(shared_tokens / block_tokens)`) and the
+    /// sequence starts with `len = shared_tokens`.
+    pub fn alloc_seq_with_prefix(
+        &mut self,
+        id: SeqId,
+        tokens: usize,
+        shared: &[usize],
+        shared_tokens: usize,
+    ) -> Result<()> {
         if self.seqs.contains_key(&id) {
             return Err(Error::KvCache(format!("seq {id} already allocated")));
         }
@@ -110,30 +200,47 @@ impl KvCache {
                 self.geo.max_seq
             )));
         }
-        let need = self.blocks_for(tokens.max(1));
+        if shared_tokens > tokens {
+            return Err(Error::KvCache(format!(
+                "seq {id}: shared prefix {shared_tokens} exceeds capacity {tokens}"
+            )));
+        }
+        if shared.len() != self.blocks_for(shared_tokens) {
+            return Err(Error::KvCache(format!(
+                "seq {id}: {} shared blocks cannot cover {shared_tokens} tokens",
+                shared.len()
+            )));
+        }
+        let total_needed = self.blocks_for(tokens.max(1)).max(shared.len());
+        let need = total_needed - shared.len();
         if need > self.free.len() {
             return Err(Error::KvCache(format!(
                 "out of KV blocks: need {need}, free {}",
                 self.free.len()
             )));
         }
-        let blocks = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.incref_blocks(shared);
+        let mut blocks = shared.to_vec();
+        for _ in 0..need {
+            blocks.push(self.alloc_block().expect("checked free count"));
+        }
         self.seqs.insert(
             id,
             SeqEntry {
                 blocks,
-                len: 0,
+                len: shared_tokens,
             },
         );
         Ok(())
     }
 
     /// Grow a sequence's bookkeeping by one token (decode step),
-    /// allocating a new block when it crosses a block boundary.
+    /// allocating a new block when it crosses a block boundary and
+    /// copying a shared tail block before it is appended into.
     pub fn grow_one(&mut self, id: SeqId) -> Result<()> {
-        let geo_bt = self.geo.block_tokens;
+        let bt = self.geo.block_tokens;
         let max_seq = self.geo.max_seq;
-        let need_block = {
+        let (pos, n_blocks) = {
             let e = self
                 .seqs
                 .get(&id)
@@ -141,38 +248,103 @@ impl KvCache {
             if e.len + 1 > max_seq {
                 return Err(Error::KvCache(format!("seq {id} exceeds max_seq {max_seq}")));
             }
-            e.len + 1 > e.blocks.len() * geo_bt
+            (e.len, e.blocks.len())
         };
-        if need_block {
+        if pos / bt >= n_blocks {
             let b = self
-                .free
-                .pop()
+                .alloc_block()
                 .ok_or_else(|| Error::KvCache("out of KV blocks".into()))?;
             self.seqs.get_mut(&id).unwrap().blocks.push(b);
+        } else {
+            // The new token lands in an existing block; copy-on-write if
+            // that block is shared (partially-filled shared tail).
+            self.ensure_writable(id, pos)?;
         }
         self.seqs.get_mut(&id).unwrap().len += 1;
         Ok(())
     }
 
-    /// Release a sequence and all its blocks.
+    /// Release a sequence; each of its blocks loses one reference.
     pub fn free_seq(&mut self, id: SeqId) -> Result<()> {
         let e = self
             .seqs
             .remove(&id)
             .ok_or_else(|| Error::KvCache(format!("unknown seq {id}")))?;
-        self.free.extend(e.blocks);
+        for &b in &e.blocks {
+            self.decref_block(b);
+        }
         Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Writes (always through copy-on-write)
+    // -----------------------------------------------------------------
+
+    /// Make the block holding token `pos` privately owned by `id`,
+    /// copying it first when shared. Returns the physical block id.
+    fn ensure_writable(&mut self, id: SeqId, pos: usize) -> Result<usize> {
+        let bt = self.geo.block_tokens;
+        let idx = pos / bt;
+        let block = {
+            let e = self
+                .seqs
+                .get(&id)
+                .ok_or_else(|| Error::KvCache(format!("unknown seq {id}")))?;
+            *e.blocks.get(idx).ok_or_else(|| {
+                Error::KvCache(format!("seq {id}: pos {pos} beyond block table"))
+            })?
+        };
+        if self.refcount[block] <= 1 {
+            return Ok(block);
+        }
+        let fresh = self
+            .alloc_block()
+            .ok_or_else(|| Error::KvCache("out of KV blocks (copy-on-write)".into()))?;
+        let be = self.geo.block_elems();
+        self.k_data.copy_within(block * be..(block + 1) * be, fresh * be);
+        self.v_data.copy_within(block * be..(block + 1) * be, fresh * be);
+        self.decref_block(block); // still shared elsewhere: cannot hit 0
+        self.seqs.get_mut(&id).unwrap().blocks[idx] = fresh;
+        Ok(fresh)
     }
 
     /// Write prefill output K/V (layout [Lyr, 1, H, S, Dh]) for the first
     /// `len` tokens of a freshly allocated sequence.
-    pub fn write_prefill(&mut self, id: SeqId, k: &[f32], v: &[f32], s_padded: usize, len: usize) -> Result<()> {
+    pub fn write_prefill(
+        &mut self,
+        id: SeqId,
+        k: &[f32],
+        v: &[f32],
+        s_padded: usize,
+        len: usize,
+    ) -> Result<()> {
+        self.write_prefill_range(id, k, v, s_padded, 0, len)
+    }
+
+    /// Write prefill output K/V for token positions `start..len` only —
+    /// the prefix-reuse path: positions before `start` are already
+    /// served by attached shared blocks and must not be rewritten.
+    /// Sets the sequence length to `len`.
+    pub fn write_prefill_range(
+        &mut self,
+        id: SeqId,
+        k: &[f32],
+        v: &[f32],
+        s_padded: usize,
+        start: usize,
+        len: usize,
+    ) -> Result<()> {
         let g = self.geo;
         let expect = g.n_layers * g.n_heads * s_padded * g.head_dim;
         if k.len() != expect || v.len() != expect {
             return Err(Error::KvCache(format!(
                 "prefill kv size {} != expected {expect}",
                 k.len()
+            )));
+        }
+        if start > len {
+            return Err(Error::KvCache(format!(
+                "prefill range start {start} > len {len}"
             )));
         }
         {
@@ -185,10 +357,74 @@ impl KvCache {
                 return Err(Error::KvCache(format!("seq {id}: {len} tokens > capacity {cap}")));
             }
         }
-        for t in 0..len {
+        for t in start..len {
             self.copy_token_in(id, t, k, v, s_padded, t)?;
         }
         self.seqs.get_mut(&id).unwrap().len = len;
+        Ok(())
+    }
+
+    /// Write one token column (layouts [Lyr, H, Dh]) at position `pos`.
+    pub fn write_token(&mut self, id: SeqId, pos: usize, k: &[f32], v: &[f32]) -> Result<()> {
+        let g = self.geo;
+        let te = g.token_elems();
+        if k.len() != te || v.len() != te {
+            return Err(Error::KvCache(format!(
+                "token kv size {} != expected {te}",
+                k.len()
+            )));
+        }
+        let block = self.ensure_writable(id, pos)?;
+        let bt = pos % g.block_tokens;
+        let be = g.block_elems();
+        for l in 0..g.n_layers {
+            for h in 0..g.n_heads {
+                let src = (l * g.n_heads + h) * g.head_dim;
+                let dst = block * be + ((l * g.n_heads + h) * g.block_tokens + bt) * g.head_dim;
+                self.k_data[dst..dst + g.head_dim].copy_from_slice(&k[src..src + g.head_dim]);
+                self.v_data[dst..dst + g.head_dim].copy_from_slice(&v[src..src + g.head_dim]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Read one token column (layouts [Lyr, H, Dh]) at position `pos`.
+    pub fn read_token(
+        &self,
+        id: SeqId,
+        pos: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> Result<()> {
+        let g = self.geo;
+        let te = g.token_elems();
+        if k_out.len() != te || v_out.len() != te {
+            return Err(Error::KvCache(format!(
+                "token kv size {} != expected {te}",
+                k_out.len()
+            )));
+        }
+        let e = self
+            .seqs
+            .get(&id)
+            .ok_or_else(|| Error::KvCache(format!("unknown seq {id}")))?;
+        if pos >= e.len {
+            return Err(Error::KvCache(format!(
+                "seq {id}: read at {pos} beyond len {}",
+                e.len
+            )));
+        }
+        let block = e.blocks[pos / g.block_tokens];
+        let bt = pos % g.block_tokens;
+        let be = g.block_elems();
+        for l in 0..g.n_layers {
+            for h in 0..g.n_heads {
+                let dst = (l * g.n_heads + h) * g.head_dim;
+                let src = block * be + ((l * g.n_heads + h) * g.block_tokens + bt) * g.head_dim;
+                k_out[dst..dst + g.head_dim].copy_from_slice(&self.k_data[src..src + g.head_dim]);
+                v_out[dst..dst + g.head_dim].copy_from_slice(&self.v_data[src..src + g.head_dim]);
+            }
+        }
         Ok(())
     }
 
@@ -204,8 +440,7 @@ impl KvCache {
         src_t: usize,
     ) -> Result<()> {
         let g = self.geo;
-        let e = self.seqs.get(&id).unwrap();
-        let block = e.blocks[pos / g.block_tokens];
+        let block = self.ensure_writable(id, pos)?;
         let bt = pos % g.block_tokens;
         let be = g.block_elems();
         for l in 0..g.n_layers {
@@ -218,6 +453,10 @@ impl KvCache {
         }
         Ok(())
     }
+
+    // -----------------------------------------------------------------
+    // Dense gather/scatter
+    // -----------------------------------------------------------------
 
     /// Gather sequences into dense batch tensors [Lyr, B, H, Lmax, Dh]
     /// (lane i <- lanes[i]; None lanes stay zero).
@@ -270,7 +509,10 @@ impl KvCache {
 
     /// Scatter dense batch tensors back into the paged store (after the
     /// device-resident cache advanced by some decode steps). None lanes
-    /// are skipped.
+    /// are skipped, and so are *shared* blocks (refcount > 1): decode
+    /// only appends at fresh positions, so a shared prefix block's
+    /// device copy is bit-identical to the paged copy and rewriting it
+    /// would either waste work or (worse) mutate shared state.
     pub fn scatter_dense(
         &mut self,
         lanes: &[Option<SeqId>],
@@ -296,6 +538,9 @@ impl KvCache {
                 .clone();
             for t in 0..e.len {
                 let block = e.blocks[t / g.block_tokens];
+                if self.refcount[block] > 1 {
+                    continue; // shared: immutable, contents already correct
+                }
                 let bt = t % g.block_tokens;
                 for l in 0..g.n_layers {
                     for h in 0..g.n_heads {
@@ -331,6 +576,13 @@ mod tests {
 
     fn prefill_data(g: &KvGeometry, s: usize, seed: f32) -> (Vec<f32>, Vec<f32>) {
         let n = g.n_layers * g.n_heads * s * g.head_dim;
+        let k: Vec<f32> = (0..n).map(|i| seed + i as f32).collect();
+        let v: Vec<f32> = (0..n).map(|i| -seed - i as f32).collect();
+        (k, v)
+    }
+
+    fn token_col(g: &KvGeometry, seed: f32) -> (Vec<f32>, Vec<f32>) {
+        let n = g.token_elems();
         let k: Vec<f32> = (0..n).map(|i| seed + i as f32).collect();
         let v: Vec<f32> = (0..n).map(|i| -seed - i as f32).collect();
         (k, v)
@@ -405,5 +657,119 @@ mod tests {
         let (k, v) = prefill_data(&geo(), 32, 0.0);
         c.write_prefill(2, &k, &v, 32, 32).unwrap();
         assert!(c.grow_one(2).is_err());
+    }
+
+    #[test]
+    fn shared_prefix_attach_and_release() {
+        let g = geo();
+        let mut c = KvCache::new(g, 8);
+        // Donor fills two full blocks (16 tokens).
+        c.alloc_seq(1, 16).unwrap();
+        let (k, v) = prefill_data(&g, 16, 5.0);
+        c.write_prefill(1, &k, &v, 16, 16).unwrap();
+        let donor_blocks = c.seq_blocks(1).unwrap();
+        assert_eq!(donor_blocks.len(), 2);
+
+        // Second sequence shares the 16-token prefix, gets one fresh block.
+        c.alloc_seq_with_prefix(2, 20, &donor_blocks, 16).unwrap();
+        assert_eq!(c.seq_len(2), Some(16));
+        assert_eq!(c.used_blocks(), 3, "only one fresh block allocated");
+        for &b in &donor_blocks {
+            assert_eq!(c.block_refcount(b), 2);
+        }
+
+        // Shared data visible through the sharer.
+        let mut k0 = vec![0.0; g.token_elems()];
+        let mut v0 = vec![0.0; g.token_elems()];
+        c.read_token(2, 3, &mut k0, &mut v0).unwrap();
+        let mut k1 = vec![0.0; g.token_elems()];
+        let mut v1 = vec![0.0; g.token_elems()];
+        c.read_token(1, 3, &mut k1, &mut v1).unwrap();
+        assert_eq!(k0, k1);
+        assert_eq!(v0, v1);
+
+        // Freeing the donor keeps the shared blocks alive.
+        c.free_seq(1).unwrap();
+        for &b in &donor_blocks {
+            assert_eq!(c.block_refcount(b), 1);
+        }
+        assert_eq!(c.used_blocks(), 3);
+        // Last reference drops -> everything returns.
+        c.free_seq(2).unwrap();
+        assert_eq!(c.free_blocks(), 8);
+    }
+
+    #[test]
+    fn cow_on_shared_partial_tail() {
+        let g = geo();
+        let mut c = KvCache::new(g, 8);
+        // Donor with 12 tokens: block 0 full, block 1 half-filled.
+        c.alloc_seq(1, 12).unwrap();
+        let (k, v) = prefill_data(&g, 12, 9.0);
+        c.write_prefill(1, &k, &v, 12, 12).unwrap();
+        let donor_blocks = c.seq_blocks(1).unwrap();
+
+        // Sharer attaches all 12 tokens (partial tail block shared).
+        c.alloc_seq_with_prefix(2, 13, &donor_blocks, 12).unwrap();
+        assert_eq!(c.seq_blocks(2).unwrap(), donor_blocks);
+        assert_eq!(c.used_blocks(), 2, "partial tail covers capacity 13");
+
+        // Appending token 12 must copy the tail block, not mutate it.
+        c.grow_one(2).unwrap();
+        let sharer_blocks = c.seq_blocks(2).unwrap();
+        assert_eq!(sharer_blocks[0], donor_blocks[0], "full block still shared");
+        assert_ne!(sharer_blocks[1], donor_blocks[1], "tail must be copied");
+        assert_eq!(c.block_refcount(donor_blocks[1]), 1);
+        let (kc, vc) = token_col(&g, 777.0);
+        c.write_token(2, 12, &kc, &vc).unwrap();
+
+        // Donor's copy of token 8..11 unchanged; sharer sees the copied
+        // prefix tokens plus its new token.
+        let mut kd = vec![0.0; g.token_elems()];
+        let mut vd = vec![0.0; g.token_elems()];
+        c.read_token(1, 11, &mut kd, &mut vd).unwrap();
+        let mut ks = vec![0.0; g.token_elems()];
+        let mut vs = vec![0.0; g.token_elems()];
+        c.read_token(2, 11, &mut ks, &mut vs).unwrap();
+        assert_eq!(kd, ks, "COW must carry the prefix contents over");
+        c.read_token(2, 12, &mut ks, &mut vs).unwrap();
+        assert_eq!(ks, kc);
+
+        c.free_seq(1).unwrap();
+        c.free_seq(2).unwrap();
+        assert_eq!(c.free_blocks(), 8);
+    }
+
+    #[test]
+    fn scatter_skips_shared_blocks() {
+        let g = geo();
+        let mut c = KvCache::new(g, 8);
+        c.alloc_seq(1, 8).unwrap();
+        let (k, v) = prefill_data(&g, 8, 3.0);
+        c.write_prefill(1, &k, &v, 8, 8).unwrap();
+        let blocks = c.seq_blocks(1).unwrap();
+        c.alloc_seq_with_prefix(2, 8, &blocks, 8).unwrap();
+
+        // Scatter garbage through seq 2: the shared block must not change.
+        let batch = 1;
+        let kd = vec![42.0; g.dense_elems(batch)];
+        let vd = vec![42.0; g.dense_elems(batch)];
+        c.scatter_dense(&[Some(2)], batch, &kd, &vd).unwrap();
+        let mut k1 = vec![0.0; g.token_elems()];
+        let mut v1 = vec![0.0; g.token_elems()];
+        c.read_token(1, 0, &mut k1, &mut v1).unwrap();
+        assert_ne!(k1[0], 42.0, "shared block mutated by scatter");
+    }
+
+    #[test]
+    fn incref_decref_roundtrip() {
+        let mut c = KvCache::new(geo(), 4);
+        c.alloc_seq(1, 8).unwrap();
+        let blocks = c.seq_blocks(1).unwrap();
+        c.incref_blocks(&blocks); // e.g. the prefix cache retains them
+        c.free_seq(1).unwrap();
+        assert_eq!(c.used_blocks(), 1, "retained by the extra reference");
+        c.decref_blocks(&blocks);
+        assert_eq!(c.free_blocks(), 4);
     }
 }

@@ -13,6 +13,46 @@
 //!
 //! Python never runs at serving time; `make artifacts` is the only
 //! compile-path entry.
+//!
+//! # Prefix-sharing KV cache
+//!
+//! Production traffic repeats prompt prefixes (system prompts, few-shot
+//! templates). The `prefixcache` subsystem removes that redundancy:
+//!
+//! - [`kvcache`] blocks are reference counted; sequences and the prefix
+//!   cache share the blocks of a common prefix, with copy-on-write
+//!   protecting partially-filled shared tail blocks.
+//! - [`prefixcache`] keeps a radix tree keyed on token ids whose edges
+//!   carry KV block ids. `match_prefix` finds the longest cached prefix
+//!   for a new prompt; `insert` registers retired prefixes; LRU leaf
+//!   eviction returns refcount-0 blocks to the allocator under pressure.
+//! - [`scheduler`] is cache-aware: admission is charged only for the
+//!   blocks a prompt cannot reuse, and preemption prefers victims whose
+//!   blocks stay reusable in the cache.
+//! - [`engine`] attaches matched blocks at prefill instead of
+//!   re-storing them and registers prompts at retirement; [`simengine`]
+//!   is the PJRT-free twin that exercises the same block machinery with
+//!   a deterministic hash model (benches + tests on a bare checkout).
+//!
+//! Block lifecycle:
+//!
+//! ```text
+//!   free ──alloc_seq──────────▶ allocated (rc=1, private to one seq)
+//!     ▲                            │
+//!     │                            │ attach / prefixcache::insert
+//!     │                            ▼
+//!     │                         shared (rc>1: seqs + tree; immutable,
+//!     │                            │         writes trigger COW)
+//!     │                            │ owners release (free_seq / detach)
+//!     │                            ▼
+//!     │                         cached (rc=1, held only by the tree,
+//!     │                            │         reusable by match_prefix)
+//!     └────evict (LRU leaves)──────┘
+//! ```
+//!
+//! A block returns to the free list exactly when its last reference
+//! drops — `free_seq` on a private block, or LRU eviction on a cached
+//! one.
 
 pub mod baselines;
 pub mod batching;
@@ -26,11 +66,13 @@ pub mod hwmodel;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod prefixcache;
 pub mod router;
 pub mod runtime;
 pub mod sampling;
 pub mod scheduler;
 pub mod server;
+pub mod simengine;
 pub mod softmaxstats;
 pub mod tokenizer;
 pub mod util;

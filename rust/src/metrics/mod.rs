@@ -5,6 +5,8 @@
 
 use std::time::Duration;
 
+use crate::util::json::Json;
+
 /// Fixed-boundary log-scale latency histogram, microsecond resolution.
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
@@ -108,6 +110,18 @@ pub struct EngineMetrics {
     pub kv_rebuilds: u64,
     /// Device-side KV insertions (fast path; no host round trip).
     pub kv_inserts: u64,
+    /// Prefix-cache telemetry: prompts looked up in the radix tree.
+    pub prefix_lookups: u64,
+    /// Lookups that matched at least one cached block.
+    pub prefix_hits: u64,
+    /// Prompt tokens served from cached KV instead of prefill compute.
+    pub prefix_tokens_reused: u64,
+    /// Prompt tokens that went through prefill (uncached).
+    pub prefill_tokens_computed: u64,
+    /// Cached blocks reclaimed to satisfy allocation pressure.
+    pub prefix_blocks_evicted: u64,
+    /// Preemptions triggered by KV exhaustion.
+    pub preemptions: u64,
 }
 
 impl EngineMetrics {
@@ -126,6 +140,67 @@ impl EngineMetrics {
         } else {
             self.tokens_generated as f64 / wall.as_secs_f64()
         }
+    }
+
+    /// Fraction of prefix-cache lookups that hit.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
+    /// Fraction of prompt tokens served from the prefix cache.
+    pub fn prefill_token_savings(&self) -> f64 {
+        let total = self.prefix_tokens_reused + self.prefill_tokens_computed;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_tokens_reused as f64 / total as f64
+        }
+    }
+
+    /// Snapshot as JSON for the server stats path.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("prefill_steps", Json::Num(self.prefill_steps as f64)),
+            ("decode_steps", Json::Num(self.decode_steps as f64)),
+            ("tokens_generated", Json::Num(self.tokens_generated as f64)),
+            ("requests_admitted", Json::Num(self.requests_admitted as f64)),
+            ("requests_finished", Json::Num(self.requests_finished as f64)),
+            ("recompute_rate", Json::Num(self.recompute_rate())),
+            ("kv_rebuilds", Json::Num(self.kv_rebuilds as f64)),
+            ("kv_inserts", Json::Num(self.kv_inserts as f64)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+            ("prefix_lookups", Json::Num(self.prefix_lookups as f64)),
+            ("prefix_hits", Json::Num(self.prefix_hits as f64)),
+            ("prefix_hit_rate", Json::Num(self.prefix_hit_rate())),
+            (
+                "prefix_tokens_reused",
+                Json::Num(self.prefix_tokens_reused as f64),
+            ),
+            (
+                "prefill_tokens_computed",
+                Json::Num(self.prefill_tokens_computed as f64),
+            ),
+            (
+                "prefix_blocks_evicted",
+                Json::Num(self.prefix_blocks_evicted as f64),
+            ),
+            (
+                "step_mean_us",
+                Json::Num(self.step.mean().as_micros() as f64),
+            ),
+            (
+                "per_token_p50_us",
+                Json::Num(self.per_token.percentile(0.5).as_micros() as f64),
+            ),
+            (
+                "first_token_p50_us",
+                Json::Num(self.first_token.percentile(0.5).as_micros() as f64),
+            ),
+        ])
     }
 }
 
@@ -169,5 +244,28 @@ mod tests {
         m.decode_rows = 100;
         m.recompute_rows = 3;
         assert!((m.recompute_rate() - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_rates() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        assert_eq!(m.prefill_token_savings(), 0.0);
+        m.prefix_lookups = 10;
+        m.prefix_hits = 7;
+        m.prefix_tokens_reused = 60;
+        m.prefill_tokens_computed = 40;
+        assert!((m.prefix_hit_rate() - 0.7).abs() < 1e-12);
+        assert!((m.prefill_token_savings() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metrics_json_snapshot_parses() {
+        let mut m = EngineMetrics::default();
+        m.prefix_lookups = 3;
+        m.prefix_hits = 2;
+        let text = m.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("prefix_hits").and_then(|j| j.as_usize()), Some(2));
     }
 }

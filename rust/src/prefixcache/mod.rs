@@ -1,0 +1,511 @@
+//! Prefix cache: a token-level radix tree over KV blocks.
+//!
+//! New requests frequently share a prompt prefix (system prompts,
+//! few-shot templates). Re-prefilling that prefix recomputes and
+//! re-stores KV that is already resident. This module keeps a radix
+//! tree keyed on token ids whose edges carry the physical KV blocks of
+//! the tokens they spell (SGLang-RadixAttention-style, quantized to the
+//! paged-cache block size):
+//!
+//! - `match_prefix` walks the tree and returns the longest cached
+//!   prefix (in whole blocks) plus its block ids; the engine attaches
+//!   those blocks to the new sequence via
+//!   [`KvCache::alloc_seq_with_prefix`] instead of re-prefilling them.
+//! - `insert` registers a retired sequence's prompt+generation KV so
+//!   future requests can reuse it. Stored blocks get one extra
+//!   reference owned by the tree, so they outlive the sequence.
+//! - `evict` reclaims least-recently-used leaf blocks whose only
+//!   remaining reference is the tree's (no running sequence uses
+//!   them), pushing them back to the allocator's free list. Leaves are
+//!   trimmed from the tail so a partially-pinned leaf can still yield
+//!   its unpinned blocks.
+//!
+//! The tree stores only *full* blocks: a prefix is reusable at the
+//! granularity the paged allocator can share. Sub-block overlaps are
+//! handled by the KV cache's copy-on-write when a sequence appends into
+//! a shared partial tail.
+
+use std::collections::HashMap;
+
+use crate::kvcache::KvCache;
+
+/// Result of a prefix lookup.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PrefixMatch {
+    /// Physical blocks covering the matched prefix, in position order.
+    pub blocks: Vec<usize>,
+    /// Matched length in tokens (multiple of the block size).
+    pub tokens: usize,
+}
+
+#[derive(Debug)]
+struct Node {
+    /// Edge label from the parent (token ids); multiple of block_tokens.
+    key: Vec<u32>,
+    /// Physical blocks for `key`; blocks.len() * block_tokens == key.len().
+    blocks: Vec<usize>,
+    /// First token of each child's key -> arena index.
+    children: HashMap<u32, usize>,
+    parent: usize,
+    last_access: u64,
+    live: bool,
+}
+
+/// Token-level radix tree over KV blocks with LRU leaf eviction.
+pub struct PrefixCache {
+    block_tokens: usize,
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    clock: u64,
+    n_cached_blocks: usize,
+}
+
+const ROOT: usize = 0;
+
+fn common_prefix_len(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl PrefixCache {
+    pub fn new(block_tokens: usize) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        PrefixCache {
+            block_tokens,
+            nodes: vec![Node {
+                key: Vec::new(),
+                blocks: Vec::new(),
+                children: HashMap::new(),
+                parent: ROOT,
+                last_access: 0,
+                live: true,
+            }],
+            free_nodes: Vec::new(),
+            clock: 1,
+            n_cached_blocks: 0,
+        }
+    }
+
+    /// Blocks currently referenced (retained) by the tree.
+    pub fn cached_blocks(&self) -> usize {
+        self.n_cached_blocks
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn new_node(&mut self, node: Node) -> usize {
+        if let Some(idx) = self.free_nodes.pop() {
+            self.nodes[idx] = node;
+            idx
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Longest cached prefix of `tokens`, in whole blocks. Touches the
+    /// LRU clock of every node on the matched path.
+    pub fn match_prefix(&mut self, tokens: &[u32]) -> PrefixMatch {
+        let bt = self.block_tokens;
+        let mut out = PrefixMatch::default();
+        let mut node = ROOT;
+        let mut pos = 0usize;
+        let now = self.tick();
+        self.nodes[ROOT].last_access = now;
+        while pos < tokens.len() {
+            let Some(&child) = self.nodes[node].children.get(&tokens[pos]) else {
+                break;
+            };
+            let common = common_prefix_len(&self.nodes[child].key, &tokens[pos..]);
+            let common = (common / bt) * bt;
+            if common == 0 {
+                break;
+            }
+            self.nodes[child].last_access = now;
+            out.blocks
+                .extend_from_slice(&self.nodes[child].blocks[..common / bt]);
+            out.tokens += common;
+            pos += common;
+            if common < self.nodes[child].key.len() {
+                break; // diverged (or ran out) inside this edge
+            }
+            node = child;
+        }
+        out
+    }
+
+    /// Longest cached prefix length in tokens, without touching LRU
+    /// state — for scheduler admission-cost estimates.
+    pub fn peek_match_tokens(&self, tokens: &[u32]) -> usize {
+        let bt = self.block_tokens;
+        let mut node = ROOT;
+        let mut pos = 0usize;
+        while pos < tokens.len() {
+            let Some(&child) = self.nodes[node].children.get(&tokens[pos]) else {
+                break;
+            };
+            let common = common_prefix_len(&self.nodes[child].key, &tokens[pos..]);
+            let common = (common / bt) * bt;
+            if common == 0 {
+                break;
+            }
+            pos += common;
+            if common < self.nodes[child].key.len() {
+                break;
+            }
+            node = child;
+        }
+        pos
+    }
+
+    /// Register `tokens` (a retired sequence's prompt + generated ids)
+    /// backed by `blocks` (its block table, position order). Only the
+    /// full-block prefix is stored; blocks newly retained by the tree
+    /// get one extra reference in `kv`. Returns the number of blocks
+    /// newly cached.
+    pub fn insert(&mut self, tokens: &[u32], blocks: &[usize], kv: &mut KvCache) -> usize {
+        let bt = self.block_tokens;
+        let n_full = (tokens.len() / bt).min(blocks.len());
+        if n_full == 0 {
+            return 0;
+        }
+        let end = n_full * bt;
+        let mut node = ROOT;
+        let mut pos = 0usize;
+        let now = self.tick();
+        let mut added = 0usize;
+        self.nodes[ROOT].last_access = now;
+        while pos < end {
+            match self.nodes[node].children.get(&tokens[pos]).copied() {
+                None => {
+                    // New leaf carrying the uncovered tail.
+                    let key = tokens[pos..end].to_vec();
+                    let tail = blocks[pos / bt..n_full].to_vec();
+                    kv.incref_blocks(&tail);
+                    added += tail.len();
+                    self.n_cached_blocks += tail.len();
+                    let leaf = self.new_node(Node {
+                        key,
+                        blocks: tail,
+                        children: HashMap::new(),
+                        parent: node,
+                        last_access: now,
+                        live: true,
+                    });
+                    self.nodes[node].children.insert(tokens[pos], leaf);
+                    return added;
+                }
+                Some(child) => {
+                    let common = common_prefix_len(&self.nodes[child].key, &tokens[pos..end]);
+                    let common = (common / bt) * bt;
+                    if common == 0 {
+                        // Divergence inside the first block of the edge:
+                        // not representable at block granularity.
+                        return added;
+                    }
+                    self.nodes[child].last_access = now;
+                    if common < self.nodes[child].key.len() {
+                        // Split the edge at the block boundary `common`.
+                        let mid = self.split_edge(node, child, common, now);
+                        node = mid;
+                    } else {
+                        node = child;
+                    }
+                    pos += common;
+                }
+            }
+        }
+        added
+    }
+
+    /// Split `child`'s edge after `at` tokens (block-aligned), inserting
+    /// a mid node under `parent`. Returns the mid node's index.
+    fn split_edge(&mut self, parent: usize, child: usize, at: usize, now: u64) -> usize {
+        let bt = self.block_tokens;
+        debug_assert!(at % bt == 0 && at > 0 && at < self.nodes[child].key.len());
+        let head_key = self.nodes[child].key[..at].to_vec();
+        let head_blocks = self.nodes[child].blocks[..at / bt].to_vec();
+        let tail_key = self.nodes[child].key[at..].to_vec();
+        let tail_blocks = self.nodes[child].blocks[at / bt..].to_vec();
+        let first_head = head_key[0];
+        let first_tail = tail_key[0];
+        let mid = self.new_node(Node {
+            key: head_key,
+            blocks: head_blocks,
+            children: HashMap::new(),
+            parent,
+            last_access: now,
+            live: true,
+        });
+        let c = &mut self.nodes[child];
+        c.key = tail_key;
+        c.blocks = tail_blocks;
+        c.parent = mid;
+        self.nodes[mid].children.insert(first_tail, child);
+        self.nodes[parent].children.insert(first_head, mid);
+        mid
+    }
+
+    /// Evict least-recently-used leaf blocks until at least
+    /// `want_blocks` have been returned to `kv`'s free list, or nothing
+    /// evictable remains. Only blocks whose sole reference is the
+    /// tree's (refcount 1) are reclaimable; leaves are trimmed from the
+    /// tail so partially-pinned leaves still yield their unpinned tail.
+    /// Returns the number of blocks freed.
+    pub fn evict(&mut self, want_blocks: usize, kv: &mut KvCache) -> usize {
+        let mut freed = 0usize;
+        while freed < want_blocks {
+            // LRU live leaf with at least one reclaimable tail block.
+            let mut victim: Option<(usize, u64)> = None;
+            for (idx, n) in self.nodes.iter().enumerate() {
+                if idx == ROOT || !n.live || !n.children.is_empty() {
+                    continue;
+                }
+                let tail_free = n
+                    .blocks
+                    .last()
+                    .map(|&b| kv.block_refcount(b) == 1)
+                    .unwrap_or(false);
+                if !tail_free {
+                    continue;
+                }
+                if victim.map(|(_, t)| n.last_access < t).unwrap_or(true) {
+                    victim = Some((idx, n.last_access));
+                }
+            }
+            let Some((idx, _)) = victim else { break };
+            // Remember the edge's first token *before* trimming: if the
+            // whole leaf empties, the parent's child entry is keyed by it.
+            let first_token = self.nodes[idx].key.first().copied();
+            // Trim reclaimable blocks from the tail of this leaf.
+            while freed < want_blocks {
+                let Some(&b) = self.nodes[idx].blocks.last() else { break };
+                if kv.block_refcount(b) != 1 {
+                    break;
+                }
+                self.nodes[idx].blocks.pop();
+                let bt = self.block_tokens;
+                let keep = self.nodes[idx].blocks.len() * bt;
+                self.nodes[idx].key.truncate(keep);
+                kv.decref_blocks(&[b]);
+                self.n_cached_blocks -= 1;
+                freed += 1;
+            }
+            if self.nodes[idx].blocks.is_empty() {
+                self.remove_leaf(idx, first_token);
+            }
+        }
+        freed
+    }
+
+    /// Drop every cached block reference (shutdown / tests).
+    pub fn clear(&mut self, kv: &mut KvCache) {
+        for idx in 0..self.nodes.len() {
+            if idx == ROOT || !self.nodes[idx].live {
+                continue;
+            }
+            let blocks = std::mem::take(&mut self.nodes[idx].blocks);
+            kv.decref_blocks(&blocks);
+            self.nodes[idx].live = false;
+            self.free_nodes.push(idx);
+        }
+        self.nodes[ROOT].children.clear();
+        self.n_cached_blocks = 0;
+    }
+
+    /// Unlink and tombstone an emptied leaf. `first_token` is the first
+    /// token of the edge as it was keyed under the parent (captured
+    /// before any trimming emptied the key — without it the parent
+    /// would keep a dangling edge to a reusable arena slot).
+    fn remove_leaf(&mut self, idx: usize, first_token: Option<u32>) {
+        debug_assert!(self.nodes[idx].children.is_empty());
+        let parent = self.nodes[idx].parent;
+        if let Some(first) = first_token {
+            debug_assert_eq!(self.nodes[parent].children.get(&first), Some(&idx));
+            self.nodes[parent].children.remove(&first);
+        }
+        self.nodes[idx].live = false;
+        self.nodes[idx].key.clear();
+        self.nodes[idx].blocks.clear();
+        self.free_nodes.push(idx);
+        // A parent left childless with no other use will be evicted by
+        // LRU in a later round (it is now a leaf).
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvGeometry;
+
+    const BT: usize = 4;
+
+    fn kv(total: usize) -> KvCache {
+        KvCache::new(
+            KvGeometry {
+                n_layers: 1,
+                n_heads: 1,
+                head_dim: 2,
+                block_tokens: BT,
+                max_seq: 64,
+            },
+            total,
+        )
+    }
+
+    /// Allocate a sequence with `n_tokens` capacity, write deterministic
+    /// data into every position, and return its block table.
+    fn fill_seq(kv: &mut KvCache, id: u64, n_tokens: usize) -> Vec<usize> {
+        kv.alloc_seq(id, n_tokens).unwrap();
+        let te = kv.geometry().token_elems();
+        for pos in 0..n_tokens {
+            let col = vec![id as f32 * 100.0 + pos as f32; te];
+            kv.write_token(id, pos, &col, &col).unwrap();
+        }
+        kv.seq_blocks(id).unwrap()
+    }
+
+    #[test]
+    fn match_on_empty_tree_is_empty() {
+        let mut pc = PrefixCache::new(BT);
+        let m = pc.match_prefix(&[1, 2, 3, 4]);
+        assert_eq!(m.tokens, 0);
+        assert!(m.blocks.is_empty());
+    }
+
+    #[test]
+    fn insert_then_match_full_and_partial() {
+        let mut kv = kv(16);
+        let mut pc = PrefixCache::new(BT);
+        let toks: Vec<u32> = (0..12).collect(); // 3 full blocks
+        let blocks = fill_seq(&mut kv, 1, 12);
+        assert_eq!(pc.insert(&toks, &blocks, &mut kv), 3);
+        assert_eq!(pc.cached_blocks(), 3);
+
+        // Exact prefix reuse.
+        let m = pc.match_prefix(&toks);
+        assert_eq!(m.tokens, 12);
+        assert_eq!(m.blocks, blocks[..3].to_vec());
+
+        // Longer query matches the stored 12.
+        let longer: Vec<u32> = (0..20).collect();
+        assert_eq!(pc.match_prefix(&longer).tokens, 12);
+
+        // Query diverging after 8 tokens matches 2 blocks.
+        let mut div = toks.clone();
+        div[9] = 99;
+        let m = pc.match_prefix(&div);
+        assert_eq!(m.tokens, 8);
+        assert_eq!(m.blocks, blocks[..2].to_vec());
+
+        // Sub-block prefix (3 tokens) matches nothing.
+        assert_eq!(pc.match_prefix(&toks[..3]).tokens, 0);
+    }
+
+    #[test]
+    fn insert_dedups_shared_prefix() {
+        let mut kv = kv(16);
+        let mut pc = PrefixCache::new(BT);
+        let a: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let ba = fill_seq(&mut kv, 1, 8);
+        assert_eq!(pc.insert(&a, &ba, &mut kv), 2);
+
+        // Second sequence shares the first block, diverges in the second.
+        let b: Vec<u32> = vec![1, 2, 3, 4, 9, 9, 9, 9];
+        let bb = fill_seq(&mut kv, 2, 8);
+        let added = pc.insert(&b, &bb, &mut kv);
+        assert_eq!(added, 1, "only the diverging tail block is new");
+        assert_eq!(pc.cached_blocks(), 3);
+
+        // Both prefixes match fully, sharing the first physical block.
+        let ma = pc.match_prefix(&a);
+        let mb = pc.match_prefix(&b);
+        assert_eq!(ma.tokens, 8);
+        assert_eq!(mb.tokens, 8);
+        assert_eq!(ma.blocks[0], mb.blocks[0]);
+        assert_eq!(ma.blocks[0], ba[0]);
+        assert_ne!(ma.blocks[1], mb.blocks[1]);
+    }
+
+    #[test]
+    fn eviction_frees_lru_leaf_blocks_only_when_unreferenced() {
+        let mut kv = kv(8);
+        let mut pc = PrefixCache::new(BT);
+        let a: Vec<u32> = vec![1, 2, 3, 4];
+        let ba = fill_seq(&mut kv, 1, 4);
+        pc.insert(&a, &ba, &mut kv);
+        // Sequence 1 still holds its block: nothing evictable.
+        assert_eq!(pc.evict(1, &mut kv), 0);
+
+        kv.free_seq(1).unwrap();
+        assert_eq!(kv.used_blocks(), 1, "tree retains the block");
+        assert_eq!(pc.evict(1, &mut kv), 1);
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(pc.cached_blocks(), 0);
+        assert_eq!(pc.match_prefix(&a).tokens, 0, "evicted prefix gone");
+    }
+
+    #[test]
+    fn eviction_prefers_lru() {
+        let mut kv = kv(16);
+        let mut pc = PrefixCache::new(BT);
+        let a: Vec<u32> = vec![1, 1, 1, 1];
+        let b: Vec<u32> = vec![2, 2, 2, 2];
+        let ba = fill_seq(&mut kv, 1, 4);
+        let bb = fill_seq(&mut kv, 2, 4);
+        pc.insert(&a, &ba, &mut kv);
+        pc.insert(&b, &bb, &mut kv);
+        kv.free_seq(1).unwrap();
+        kv.free_seq(2).unwrap();
+        // Touch `a` so `b` becomes the LRU victim.
+        pc.match_prefix(&a);
+        assert_eq!(pc.evict(1, &mut kv), 1);
+        assert_eq!(pc.match_prefix(&a).tokens, 4, "recently used survives");
+        assert_eq!(pc.match_prefix(&b).tokens, 0, "LRU leaf evicted");
+    }
+
+    #[test]
+    fn evicted_edge_is_reinsertable_and_never_served_stale() {
+        // Regression: eviction used to leave a dangling parent edge
+        // (the leaf's key was truncated before unlinking), which both
+        // blocked re-caching of that prefix and could serve a reused
+        // arena node's blocks for the wrong tokens.
+        let mut kv = kv(32);
+        let mut pc = PrefixCache::new(BT);
+        let a: Vec<u32> = vec![1, 1, 1, 1];
+        let ba = fill_seq(&mut kv, 1, 4);
+        pc.insert(&a, &ba, &mut kv);
+        kv.free_seq(1).unwrap();
+        assert_eq!(pc.evict(1, &mut kv), 1);
+        assert_eq!(pc.match_prefix(&a).tokens, 0);
+
+        // Same prefix must be cacheable again with fresh blocks...
+        let ba2 = fill_seq(&mut kv, 2, 4);
+        assert_eq!(pc.insert(&a, &ba2, &mut kv), 1, "re-insert after evict");
+        let m = pc.match_prefix(&a);
+        assert_eq!((m.tokens, m.blocks), (4, ba2.clone()));
+
+        // ...and an unrelated prefix starting with the same token must
+        // not resolve through any recycled arena slot.
+        let b: Vec<u32> = vec![1, 9, 9, 9];
+        assert_eq!(pc.match_prefix(&b).tokens, 0);
+        kv.free_seq(2).unwrap();
+        pc.clear(&mut kv);
+        assert_eq!(kv.free_blocks(), 32);
+    }
+
+    #[test]
+    fn clear_releases_everything() {
+        let mut kv = kv(16);
+        let mut pc = PrefixCache::new(BT);
+        let toks: Vec<u32> = (0..8).collect();
+        let blocks = fill_seq(&mut kv, 1, 8);
+        pc.insert(&toks, &blocks, &mut kv);
+        kv.free_seq(1).unwrap();
+        pc.clear(&mut kv);
+        assert_eq!(kv.free_blocks(), 16);
+        assert_eq!(pc.cached_blocks(), 0);
+    }
+}

@@ -4,8 +4,16 @@
 //! queued request) or a decode step over the running batch. The policy
 //! is prefill-priority up to `max_running` lanes (keeps the decode batch
 //! full, which is where FlashDecoding++'s flat-GEMM wins live), with KV
-//! headroom checks and preemption of the *youngest* running sequence on
-//! KV exhaustion.
+//! headroom checks and preemption on KV exhaustion.
+//!
+//! The policy is *cache-aware*: admission cost is charged only for the
+//! blocks the next request cannot reuse from the prefix cache
+//! (`cached_prefill_blocks`), so a request whose prompt is largely
+//! cached can be admitted under KV pressure that would stall a cold
+//! request. Preemption prefers victims whose blocks stay reusable in
+//! the prefix cache — evicting them loses the least recomputation work.
+
+use crate::kvcache::SeqId;
 
 /// What the engine should do next.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,12 +36,25 @@ pub struct SchedState {
     /// would need.
     pub free_blocks: usize,
     pub next_prefill_blocks: usize,
+    /// Blocks of the next queued request already resident in the prefix
+    /// cache (attached by reference, not allocated): admission only has
+    /// to find room for `next_prefill_blocks - cached_prefill_blocks`.
+    pub cached_prefill_blocks: usize,
+}
+
+impl SchedState {
+    /// Fresh blocks the next prefill actually needs to allocate.
+    pub fn uncached_prefill_blocks(&self) -> usize {
+        self.next_prefill_blocks
+            .saturating_sub(self.cached_prefill_blocks)
+    }
 }
 
 /// The scheduling policy (pure function — proptest-able).
 pub fn decide(s: SchedState) -> Action {
-    let can_admit =
-        s.queued > 0 && s.running < s.max_running && s.free_blocks >= s.next_prefill_blocks;
+    let can_admit = s.queued > 0
+        && s.running < s.max_running
+        && s.free_blocks >= s.uncached_prefill_blocks();
     if can_admit {
         Action::Prefill
     } else if s.running > 0 {
@@ -48,17 +69,33 @@ pub fn decide(s: SchedState) -> Action {
     }
 }
 
-/// Pick the victim for preemption: the *youngest* running sequence
-/// (latest admission) loses its lane — it has the least sunk prefill
-/// work. Returns its index in `running_ids`.
-pub fn preemption_victim(running_ids: &[u64]) -> Option<usize> {
-    if running_ids.is_empty() {
-        None
-    } else {
-        // Admission order == lane order (Batcher preserves FIFO), so the
-        // youngest is the last lane.
-        Some(running_ids.len() - 1)
+/// One preemption candidate: a running sequence and how many of its
+/// blocks would *stay reusable* (shared with the prefix cache or other
+/// sequences) if it were evicted now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PreemptCandidate {
+    pub id: SeqId,
+    pub reusable_blocks: usize,
+}
+
+/// Pick the victim for preemption and return its *sequence id* (the
+/// engine resolves id -> lane; lane order is a batcher detail that
+/// preemption must not assume).
+///
+/// Preference: the candidate with the most reusable blocks loses its
+/// lane — its KV largely survives in the prefix cache, so preempting it
+/// destroys the least work. Ties go to the *youngest* candidate (latest
+/// in admission order, i.e. last in the slice), which has the least
+/// sunk decode progress.
+pub fn preemption_victim(candidates: &[PreemptCandidate]) -> Option<SeqId> {
+    let mut best: Option<PreemptCandidate> = None;
+    for c in candidates {
+        // `>=` so later (younger) candidates win ties.
+        if best.map(|b| c.reusable_blocks >= b.reusable_blocks).unwrap_or(true) {
+            best = Some(*c);
+        }
     }
+    best.map(|c| c.id)
 }
 
 #[cfg(test)]
@@ -72,6 +109,14 @@ mod tests {
             max_running: 4,
             free_blocks: free,
             next_prefill_blocks: need,
+            cached_prefill_blocks: 0,
+        }
+    }
+
+    fn cand(id: SeqId, reusable: usize) -> PreemptCandidate {
+        PreemptCandidate {
+            id,
+            reusable_blocks: reusable,
         }
     }
 
@@ -108,8 +153,30 @@ mod tests {
     }
 
     #[test]
-    fn victim_is_youngest() {
-        assert_eq!(preemption_victim(&[5, 9, 12]), Some(2));
+    fn cached_prefix_unlocks_admission_under_pressure() {
+        // 4 blocks needed, only 1 free: a cold request stalls...
+        assert_eq!(decide(st(1, 2, 1, 4)), Action::Decode);
+        // ...but with 3 of the 4 blocks cached, 1 free block suffices.
+        let s = SchedState {
+            cached_prefill_blocks: 3,
+            ..st(1, 2, 1, 4)
+        };
+        assert_eq!(s.uncached_prefill_blocks(), 1);
+        assert_eq!(decide(s), Action::Prefill);
+    }
+
+    #[test]
+    fn victim_is_youngest_on_ties() {
+        let c = [cand(5, 0), cand(9, 0), cand(12, 0)];
+        assert_eq!(preemption_victim(&c), Some(12));
         assert_eq!(preemption_victim(&[]), None);
+    }
+
+    #[test]
+    fn victim_prefers_most_reusable_blocks() {
+        // Sequence 9's KV survives in the prefix cache: preempt it even
+        // though 12 is younger.
+        let c = [cand(5, 1), cand(9, 3), cand(12, 0)];
+        assert_eq!(preemption_victim(&c), Some(9));
     }
 }

@@ -8,6 +8,10 @@
 //!   -> {"prompt": "...", "max_new_tokens": 32, "temperature": 0.0}
 //!   <- {"token": 104, "text": "h"}            (per generated token)
 //!   <- {"done": true, "reason": "eos", "n": 12}
+//!
+//! Stats (engine + prefix-cache counters, one JSON object back):
+//!   -> {"stats": true}
+//!   <- {"tokens_generated": 512, "prefix_hit_rate": 0.7, ...}
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -77,11 +81,15 @@ pub fn error_response(msg: &str) -> String {
 }
 
 /// A request as it travels to the engine thread.
-pub struct EngineJob {
-    pub prompt: String,
-    pub max_new_tokens: usize,
-    pub params: SamplingParams,
-    pub reply: mpsc::Sender<TokenEvent>,
+pub enum EngineJob {
+    Generate {
+        prompt: String,
+        max_new_tokens: usize,
+        params: SamplingParams,
+        reply: mpsc::Sender<TokenEvent>,
+    },
+    /// Metrics snapshot (serialized JSON) — the server stats path.
+    Stats { reply: mpsc::Sender<String> },
 }
 
 /// Handle to the engine thread.
@@ -143,15 +151,27 @@ fn engine_loop(engine: &mut Engine, rx: mpsc::Receiver<EngineJob>) {
                     }
                 }
             };
-            let toks = engine.tokenizer.encode(&job.prompt);
-            match engine.submit_tokens(toks, job.max_new_tokens, job.params) {
-                Ok((_, seq_rx)) => streams.push((seq_rx, job.reply)),
-                Err(e) => {
-                    let _ = job.reply.send(TokenEvent::Finished {
-                        reason: FinishReason::Error,
-                        n_generated: 0,
-                    });
-                    log_warn!("submit failed: {e}");
+            match job {
+                EngineJob::Stats { reply } => {
+                    let _ = reply.send(engine.metrics.to_json().to_string());
+                }
+                EngineJob::Generate {
+                    prompt,
+                    max_new_tokens,
+                    params,
+                    reply,
+                } => {
+                    let toks = engine.tokenizer.encode(&prompt);
+                    match engine.submit_tokens(toks, max_new_tokens, params) {
+                        Ok((_, seq_rx)) => streams.push((seq_rx, reply)),
+                        Err(e) => {
+                            let _ = reply.send(TokenEvent::Finished {
+                                reason: FinishReason::Error,
+                                n_generated: 0,
+                            });
+                            log_warn!("submit failed: {e}");
+                        }
+                    }
                 }
             }
         }
@@ -204,6 +224,12 @@ pub fn serve(addr: &str, artifacts_dir: &str, cfg: EngineConfig) -> Result<()> {
     Ok(())
 }
 
+/// `{"stats": true}` exactly, with no prompt — a generate request that
+/// happens to carry a stats field must not be hijacked.
+pub fn is_stats_request(j: &Json) -> bool {
+    j.get("stats").and_then(Json::as_bool) == Some(true) && j.get("prompt").is_none()
+}
+
 fn handle_conn(sock: TcpStream, engine_tx: mpsc::Sender<EngineJob>, vocab: usize) -> Result<()> {
     let mut w = sock.try_clone().map_err(Error::Io)?;
     let r = BufReader::new(sock);
@@ -212,6 +238,21 @@ fn handle_conn(sock: TcpStream, engine_tx: mpsc::Sender<EngineJob>, vocab: usize
         let line = line.map_err(Error::Io)?;
         if line.trim().is_empty() {
             continue;
+        }
+        // Stats request: one JSON object back, no generation.
+        if let Ok(j) = parse(&line) {
+            if is_stats_request(&j) {
+                let (reply_tx, reply_rx) = mpsc::channel::<String>();
+                engine_tx
+                    .send(EngineJob::Stats { reply: reply_tx })
+                    .map_err(|_| Error::Request("engine gone".into()))?;
+                match reply_rx.recv() {
+                    Ok(stats) => writeln!(w, "{stats}").map_err(Error::Io)?,
+                    Err(_) => writeln!(w, "{}", error_response("engine gone"))
+                        .map_err(Error::Io)?,
+                }
+                continue;
+            }
         }
         let req = match WireRequest::from_json_line(&line) {
             Ok(r) => r,
@@ -223,7 +264,7 @@ fn handle_conn(sock: TcpStream, engine_tx: mpsc::Sender<EngineJob>, vocab: usize
         };
         let (reply_tx, reply_rx) = mpsc::channel::<TokenEvent>();
         engine_tx
-            .send(EngineJob {
+            .send(EngineJob::Generate {
                 prompt: req.prompt,
                 max_new_tokens: req.max_new_tokens,
                 params: SamplingParams {
@@ -285,6 +326,20 @@ impl Client {
         }
         Ok(out)
     }
+
+    /// Fetch the engine's metrics snapshot (raw JSON line).
+    pub fn stats(&mut self) -> Result<String> {
+        writeln!(
+            self.sock,
+            "{}",
+            Json::obj(vec![("stats", Json::Bool(true))]).to_string()
+        )
+        .map_err(Error::Io)?;
+        let mut reader = BufReader::new(self.sock.try_clone().map_err(Error::Io)?);
+        let mut line = String::new();
+        reader.read_line(&mut line).map_err(Error::Io)?;
+        Ok(line.trim().to_string())
+    }
 }
 
 #[cfg(test)]
@@ -308,6 +363,19 @@ mod tests {
         assert_eq!(r.max_new_tokens, 8);
         assert!((r.temperature - 0.7).abs() < 1e-6);
         assert_eq!(r.top_k, 40);
+    }
+
+    #[test]
+    fn stats_detection_is_exact() {
+        assert!(is_stats_request(&parse(r#"{"stats":true}"#).unwrap()));
+        // Wrong value, wrong type, or a generate request carrying the
+        // field must all fall through to the generate path.
+        assert!(!is_stats_request(&parse(r#"{"stats":false}"#).unwrap()));
+        assert!(!is_stats_request(&parse(r#"{"stats":1}"#).unwrap()));
+        assert!(!is_stats_request(
+            &parse(r#"{"prompt":"hi","stats":true}"#).unwrap()
+        ));
+        assert!(!is_stats_request(&parse(r#"{"prompt":"hi"}"#).unwrap()));
     }
 
     #[test]

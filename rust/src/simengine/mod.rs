@@ -1,0 +1,676 @@
+//! Simulation engine: the PJRT-free twin of [`crate::engine::Engine`].
+//!
+//! Runs the *entire* serving stack — router, cache-aware scheduler,
+//! continuous batcher, paged KV cache with block sharing, radix-tree
+//! prefix cache, sampler, metrics — against a deterministic hash model
+//! instead of compiled artifacts. The hash model writes K/V columns that
+//! are pure functions of `(token, position)` and derives logits from a
+//! digest of the KV bytes *actually stored in the paged cache*, so any
+//! block-sharing bug (double free, COW miss, stale shared block)
+//! changes generated tokens instead of passing silently.
+//!
+//! This is what lets `benches/prefix_reuse.rs` and the tier-1 tests
+//! measure prefix-cache hit rates and verify cached-vs-cold output
+//! equality on a bare checkout, where the PJRT artifacts of the real
+//! engine are unavailable.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::batching::Batcher;
+use crate::config::EngineConfig;
+use crate::error::{Error, Result};
+use crate::kvcache::{KvCache, KvGeometry, SeqId};
+use crate::metrics::EngineMetrics;
+use crate::prefixcache::{PrefixCache, PrefixMatch};
+use crate::router::{FinishReason, Request, Router, SeqState, Sequence, TokenEvent};
+use crate::sampling::{Sampler, SamplingParams};
+use crate::scheduler::{decide, preemption_victim, Action, PreemptCandidate, SchedState};
+use crate::tokenizer::{ByteTokenizer, EOS, TOKENIZER_VOCAB};
+
+/// Hash-model geometry (kept tiny: the point is block accounting, not
+/// FLOPs).
+#[derive(Debug, Clone, Copy)]
+pub struct SimSpec {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        SimSpec {
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            vocab: TOKENIZER_VOCAB + 61, // a little headroom over specials
+            max_seq: 256,
+        }
+    }
+}
+
+/// splitmix64 finalizer — the model's only "weights".
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Deterministic f32 in [-1, 1) from a hash.
+fn hash_f32(x: u64) -> f32 {
+    ((mix(x) >> 40) as f32) / (1u64 << 24) as f32 * 2.0 - 1.0
+}
+
+/// The simulation engine. Same single-owner discipline as `Engine`.
+pub struct SimEngine {
+    pub cfg: EngineConfig,
+    spec: SimSpec,
+    kv: KvCache,
+    prefix: PrefixCache,
+    batcher: Batcher,
+    router: Router,
+    sampler: Sampler,
+    seqs: HashMap<SeqId, Sequence>,
+    pub metrics: EngineMetrics,
+    pub tokenizer: ByteTokenizer,
+}
+
+impl SimEngine {
+    pub fn new(cfg: EngineConfig, spec: SimSpec) -> Result<Self> {
+        cfg.validate()?;
+        let geo = KvGeometry {
+            n_layers: spec.n_layers,
+            n_heads: spec.n_heads,
+            head_dim: spec.head_dim,
+            block_tokens: cfg.kv_block_tokens,
+            max_seq: spec.max_seq,
+        };
+        Ok(SimEngine {
+            kv: KvCache::new(geo, cfg.kv_total_blocks),
+            prefix: PrefixCache::new(cfg.kv_block_tokens),
+            batcher: Batcher::new(cfg.decode_buckets.clone()),
+            router: Router::new(),
+            sampler: Sampler::new(cfg.seed),
+            seqs: HashMap::new(),
+            metrics: EngineMetrics::default(),
+            tokenizer: ByteTokenizer::new(spec.vocab),
+            spec,
+            cfg,
+        })
+    }
+
+    pub fn geometry(&self) -> KvGeometry {
+        self.kv.geometry()
+    }
+
+    pub fn kv_free_blocks(&self) -> usize {
+        self.kv.free_blocks()
+    }
+
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.prefix.cached_blocks()
+    }
+
+    /// Submit a text prompt; returns (seq id, token stream).
+    pub fn submit_text(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        params: SamplingParams,
+    ) -> Result<(SeqId, mpsc::Receiver<TokenEvent>)> {
+        let toks = self.tokenizer.encode(prompt);
+        self.submit_tokens(toks, max_new_tokens, params)
+    }
+
+    /// Submit pre-tokenized input.
+    pub fn submit_tokens(
+        &mut self,
+        prompt_tokens: Vec<u32>,
+        max_new_tokens: usize,
+        params: SamplingParams,
+    ) -> Result<(SeqId, mpsc::Receiver<TokenEvent>)> {
+        if prompt_tokens.is_empty() {
+            return Err(Error::Request("empty prompt".into()));
+        }
+        if prompt_tokens.len() + 1 > self.spec.max_seq {
+            return Err(Error::Request(format!(
+                "prompt of {} tokens exceeds sim max_seq {}",
+                prompt_tokens.len(),
+                self.spec.max_seq
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        let id = self.router.submit(Request {
+            prompt_tokens,
+            max_new_tokens: max_new_tokens.min(self.cfg.max_new_tokens),
+            params,
+            stream: tx,
+            arrived: Instant::now(),
+        });
+        Ok((id, rx))
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.router.queued() == 0 && self.batcher.is_empty()
+    }
+
+    pub fn running(&self) -> usize {
+        self.batcher.len()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.router.queued()
+    }
+
+    fn usable_prefix(&self, prompt_len: usize, matched: usize) -> usize {
+        let bt = self.cfg.kv_block_tokens;
+        (matched.min(prompt_len.saturating_sub(1)) / bt) * bt
+    }
+
+    /// Radix-tree lookup for a prompt, truncated to the usable range.
+    fn lookup_prefix(&mut self, prompt: &[u32]) -> PrefixMatch {
+        if !self.cfg.prefix_cache {
+            return PrefixMatch::default();
+        }
+        let m = self.prefix.match_prefix(prompt);
+        let usable = self.usable_prefix(prompt.len(), m.tokens);
+        if usable == 0 {
+            return PrefixMatch::default();
+        }
+        PrefixMatch {
+            blocks: m.blocks[..usable / self.cfg.kv_block_tokens].to_vec(),
+            tokens: usable,
+        }
+    }
+
+    /// Admit a sequence's KV: prefix attach, then eviction of the
+    /// uncached shortfall + retry, then a cold fallback when nothing is
+    /// running (mirror of `Engine::admit_kv` — attach-before-evict,
+    /// fresh match after every eviction).
+    fn admit_kv(&mut self, id: SeqId, prompt: &[u32]) -> Result<Option<PrefixMatch>> {
+        let len = prompt.len();
+        let need = (len + 1).div_ceil(self.cfg.kv_block_tokens);
+        let matched = self.lookup_prefix(prompt);
+        if self
+            .kv
+            .alloc_seq_with_prefix(id, len + 1, &matched.blocks, matched.tokens)
+            .is_ok()
+        {
+            return Ok(Some(matched));
+        }
+        let want = need
+            .saturating_sub(matched.blocks.len())
+            .saturating_sub(self.kv.free_blocks());
+        let freed = self.prefix.evict(want, &mut self.kv);
+        self.metrics.prefix_blocks_evicted += freed as u64;
+        let matched = self.lookup_prefix(prompt);
+        if self
+            .kv
+            .alloc_seq_with_prefix(id, len + 1, &matched.blocks, matched.tokens)
+            .is_ok()
+        {
+            return Ok(Some(matched));
+        }
+        if !self.batcher.is_empty() {
+            return Ok(None);
+        }
+        let freed = self.prefix.evict(need, &mut self.kv);
+        self.metrics.prefix_blocks_evicted += freed as u64;
+        self.kv.alloc_seq(id, len + 1)?;
+        Ok(Some(PrefixMatch::default()))
+    }
+
+    /// Blocks the next queued prefill needs and how many are cached
+    /// (a peek: no LRU touch, no attach).
+    fn admission_outlook(&self) -> (usize, usize) {
+        match self.router.queue.front() {
+            Some(s) => {
+                let bt = self.cfg.kv_block_tokens;
+                let need = (s.prompt.len() + 1).div_ceil(bt);
+                let cached = if self.cfg.prefix_cache {
+                    let matched = self.prefix.peek_match_tokens(&s.prompt);
+                    self.usable_prefix(s.prompt.len(), matched) / bt
+                } else {
+                    0
+                };
+                (need, cached)
+            }
+            None => (0, 0),
+        }
+    }
+
+    /// Run one scheduling iteration (same policy as the real engine).
+    pub fn step(&mut self) -> Result<Action> {
+        let (next_blocks, mut cached_blocks) = self.admission_outlook();
+        // Pressure-evict only when admission is possible, after touching
+        // the head request's matched path so LRU spares it (same
+        // discipline as the real engine).
+        let uncached = next_blocks.saturating_sub(cached_blocks);
+        let admission_possible = next_blocks > 0 && self.batcher.len() < self.cfg.max_running;
+        if admission_possible && self.kv.free_blocks() < uncached {
+            if let Some(prompt) = self.router.queue.front().map(|s| s.prompt.clone()) {
+                let _ = self.prefix.match_prefix(&prompt);
+            }
+            let want = uncached - self.kv.free_blocks();
+            let freed = self.prefix.evict(want, &mut self.kv);
+            self.metrics.prefix_blocks_evicted += freed as u64;
+            if freed > 0 {
+                // Re-peek: eviction may have trimmed blocks the first
+                // peek counted as cached.
+                cached_blocks = self.admission_outlook().1;
+            }
+        }
+        let action = decide(SchedState {
+            queued: self.router.queued(),
+            running: self.batcher.len(),
+            max_running: self.cfg.max_running,
+            free_blocks: self.kv.free_blocks(),
+            next_prefill_blocks: next_blocks,
+            cached_prefill_blocks: cached_blocks,
+        });
+        match action {
+            Action::Prefill => self.step_prefill()?,
+            Action::Decode => self.step_decode()?,
+            Action::Idle => {}
+        }
+        Ok(action)
+    }
+
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Offline helper: generate for one prompt, blocking.
+    pub fn generate_text(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        params: SamplingParams,
+    ) -> Result<String> {
+        let (_, rx) = self.submit_text(prompt, max_new_tokens, params)?;
+        self.run_to_completion()?;
+        let mut out = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            if let TokenEvent::Token(t) = ev {
+                out.push(t);
+            }
+        }
+        Ok(self.tokenizer.decode(&out))
+    }
+
+    // -----------------------------------------------------------------
+    // Hash model
+    // -----------------------------------------------------------------
+
+    /// K/V column for `(token, pos)` in [Lyr, H, Dh] layout.
+    fn token_cols(&self, token: u32, pos: usize) -> (Vec<f32>, Vec<f32>) {
+        let g = self.kv.geometry();
+        let te = g.token_elems();
+        let mut k = Vec::with_capacity(te);
+        let mut v = Vec::with_capacity(te);
+        let base = ((token as u64) << 32) ^ ((pos as u64) << 8);
+        for e in 0..te {
+            k.push(hash_f32(base ^ ((e as u64) << 1)));
+            v.push(hash_f32(base ^ ((e as u64) << 1) ^ 1));
+        }
+        (k, v)
+    }
+
+    /// Prefill K/V for a whole prompt in [Lyr, 1, H, S, Dh] layout
+    /// (S = prompt length, unpadded).
+    fn prefill_kv(&self, tokens: &[u32]) -> (Vec<f32>, Vec<f32>) {
+        let g = self.kv.geometry();
+        let s = tokens.len();
+        let n = g.n_layers * g.n_heads * s * g.head_dim;
+        let mut k = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let (kc, vc) = self.token_cols(tok, t);
+            for l in 0..g.n_layers {
+                for h in 0..g.n_heads {
+                    let src = (l * g.n_heads + h) * g.head_dim;
+                    let dst = ((l * g.n_heads + h) * s + t) * g.head_dim;
+                    k[dst..dst + g.head_dim].copy_from_slice(&kc[src..src + g.head_dim]);
+                    v[dst..dst + g.head_dim].copy_from_slice(&vc[src..src + g.head_dim]);
+                }
+            }
+        }
+        (k, v)
+    }
+
+    /// Logits for a sequence: a digest over the KV bytes *stored in the
+    /// paged cache* (so shared-block corruption is observable), mixed
+    /// with the current input token.
+    fn logits_for(&self, id: SeqId, cur_tok: u32) -> Result<Vec<f32>> {
+        let g = self.kv.geometry();
+        let te = g.token_elems();
+        let len = self
+            .kv
+            .seq_len(id)
+            .ok_or_else(|| Error::KvCache(format!("unknown seq {id}")))?;
+        let mut kcol = vec![0.0f32; te];
+        let mut vcol = vec![0.0f32; te];
+        let mut digest: u64 = 0x5EED_CAFE;
+        for pos in 0..len {
+            self.kv.read_token(id, pos, &mut kcol, &mut vcol)?;
+            for f in kcol.iter().chain(vcol.iter()) {
+                digest = mix(digest ^ f.to_bits() as u64);
+            }
+        }
+        digest = mix(digest ^ ((cur_tok as u64) << 32));
+        let logits = (0..self.spec.vocab)
+            .map(|c| hash_f32(digest ^ c as u64))
+            .collect();
+        Ok(logits)
+    }
+
+    // -----------------------------------------------------------------
+    // Prefill
+    // -----------------------------------------------------------------
+
+    fn step_prefill(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let mut seq = match self.router.pop_next() {
+            Some(s) => s,
+            None => return Ok(()),
+        };
+        let len = seq.prompt.len();
+
+        // Prefix lookup + KV admission (same discipline as the real
+        // engine; see `Engine::admit_kv`).
+        let matched = match self.admit_kv(seq.id, &seq.prompt) {
+            Ok(Some(m)) => m,
+            Ok(None) => {
+                self.router.requeue_front(seq);
+                return self.step_decode();
+            }
+            Err(e) => {
+                self.router.requeue_front(seq);
+                return Err(e);
+            }
+        };
+        if self.cfg.prefix_cache {
+            self.metrics.prefix_lookups += 1;
+            if matched.tokens > 0 {
+                self.metrics.prefix_hits += 1;
+            }
+        }
+        self.metrics.prefix_tokens_reused += matched.tokens as u64;
+        self.metrics.prefill_tokens_computed += (len - matched.tokens) as u64;
+
+        // "Compute" and store the uncached suffix only.
+        let (k, v) = self.prefill_kv(&seq.prompt);
+        self.kv
+            .write_prefill_range(seq.id, &k, &v, len, matched.tokens, len)?;
+        seq.kv_len = len;
+
+        // First generated token.
+        let logits = self.logits_for(seq.id, *seq.prompt.last().unwrap())?;
+        let tok = self.sampler.sample(&logits, seq.params);
+        seq.generated.push(tok);
+        seq.first_token_at = Some(Instant::now());
+        self.metrics.first_token.record(seq.arrived.elapsed());
+        seq.emit(TokenEvent::Token(tok));
+        self.metrics.tokens_generated += 1;
+        self.metrics.requests_admitted += 1;
+
+        if tok == EOS || seq.max_new_tokens <= 1 {
+            let reason = if tok == EOS {
+                FinishReason::Eos
+            } else {
+                FinishReason::MaxTokens
+            };
+            self.finish_seq(&mut seq, reason)?;
+        } else {
+            seq.state = SeqState::Decoding;
+            self.batcher.admit(seq.id)?;
+            self.seqs.insert(seq.id, seq);
+        }
+        self.metrics.prefill_steps += 1;
+        self.metrics.step.record(t0.elapsed());
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Decode
+    // -----------------------------------------------------------------
+
+    fn step_decode(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        // KV headroom: reclaim cached blocks first (even for a lone
+        // sequence), preempt last (needs >= 2 running).
+        while self.kv.free_blocks() < self.batcher.len() {
+            let want = self.batcher.len() - self.kv.free_blocks();
+            let freed = self.prefix.evict(want, &mut self.kv);
+            self.metrics.prefix_blocks_evicted += freed as u64;
+            if self.kv.free_blocks() >= self.batcher.len() || self.batcher.len() <= 1 {
+                break;
+            }
+            self.preempt_one()?;
+        }
+        let batch = self.batcher.assemble()?;
+        let max_seq = self.spec.max_seq;
+        let mut finished: Vec<SeqId> = Vec::new();
+        for slot in batch.lanes.iter() {
+            let Some(id) = slot else { continue };
+            let (tok, pos) = {
+                let s = &self.seqs[id];
+                (s.last_token(), s.kv_len)
+            };
+            // Append the input token's KV (COW protects shared tails),
+            // then read logits over the stored sequence.
+            self.kv.grow_one(*id)?;
+            let (kc, vc) = self.token_cols(tok, pos);
+            self.kv.write_token(*id, pos, &kc, &vc)?;
+            let logits = self.logits_for(*id, tok)?;
+            let seq = self.seqs.get_mut(id).unwrap();
+            seq.kv_len += 1;
+            let new_tok = self.sampler.sample(&logits, seq.params);
+            seq.generated.push(new_tok);
+            seq.emit(TokenEvent::Token(new_tok));
+            self.metrics.tokens_generated += 1;
+            self.metrics.decode_rows += 1;
+            let done_eos = new_tok == EOS;
+            let done_len =
+                seq.generated.len() >= seq.max_new_tokens || seq.kv_len + 1 >= max_seq;
+            if done_eos || done_len {
+                finished.push(*id);
+            }
+        }
+        for id in finished {
+            let mut seq = self.seqs.remove(&id).unwrap();
+            let reason = if seq.generated.last() == Some(&EOS) {
+                FinishReason::Eos
+            } else {
+                FinishReason::MaxTokens
+            };
+            self.batcher.remove(id)?;
+            self.finish_seq(&mut seq, reason)?;
+        }
+        self.metrics.decode_steps += 1;
+        let dt = t0.elapsed();
+        self.metrics.step.record(dt);
+        let lanes = batch.occupancy().max(1) as u32;
+        self.metrics.per_token.record(dt / lanes);
+        Ok(())
+    }
+
+    fn preempt_one(&mut self) -> Result<()> {
+        let candidates: Vec<PreemptCandidate> = self
+            .batcher
+            .running_ids()
+            .into_iter()
+            .map(|id| {
+                let reusable = self
+                    .kv
+                    .seq_blocks(id)
+                    .map(|bs| {
+                        bs.iter()
+                            .filter(|&&b| self.kv.block_refcount(b) > 1)
+                            .count()
+                    })
+                    .unwrap_or(0);
+                PreemptCandidate {
+                    id,
+                    reusable_blocks: reusable,
+                }
+            })
+            .collect();
+        let id = preemption_victim(&candidates)
+            .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
+        let mut seq = self.seqs.remove(&id).unwrap();
+        self.metrics.preemptions += 1;
+        self.batcher.remove(id)?;
+        self.finish_seq(&mut seq, FinishReason::Preempted)
+    }
+
+    /// Register the retired sequence's stored tokens in the prefix
+    /// cache. Unlike the real engine (whose generated KV may still be
+    /// device-resident), the sim writes synchronously into the paged
+    /// store, so prompt *and* generated tokens are publishable.
+    fn register_prefix(&mut self, seq: &Sequence) {
+        if !self.cfg.prefix_cache || !self.kv.contains(seq.id) {
+            return;
+        }
+        let Some(kv_len) = self.kv.seq_len(seq.id) else {
+            return;
+        };
+        let Some(blocks) = self.kv.seq_blocks(seq.id) else {
+            return;
+        };
+        let mut toks: Vec<u32> = Vec::with_capacity(kv_len);
+        toks.extend_from_slice(&seq.prompt);
+        for &g in &seq.generated {
+            if toks.len() >= kv_len {
+                break;
+            }
+            toks.push(g);
+        }
+        toks.truncate(kv_len);
+        self.prefix.insert(&toks, &blocks, &mut self.kv);
+    }
+
+    fn finish_seq(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
+        seq.state = SeqState::Finished(reason);
+        seq.emit(TokenEvent::Finished {
+            reason,
+            n_generated: seq.generated.len(),
+        });
+        self.register_prefix(seq);
+        if self.kv.contains(seq.id) {
+            self.kv.free_seq(seq.id)?;
+        }
+        self.metrics.requests_finished += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(prefix_cache: bool) -> EngineConfig {
+        EngineConfig {
+            kv_block_tokens: 8,
+            kv_total_blocks: 128,
+            max_new_tokens: 16,
+            prefix_cache,
+            ..EngineConfig::default()
+        }
+    }
+
+    fn collect(rx: &mpsc::Receiver<TokenEvent>) -> (Vec<u32>, Option<FinishReason>) {
+        let mut toks = vec![];
+        let mut fin = None;
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                TokenEvent::Token(t) => toks.push(t),
+                TokenEvent::Finished { reason, .. } => fin = Some(reason),
+            }
+        }
+        (toks, fin)
+    }
+
+    #[test]
+    fn greedy_generation_is_deterministic() {
+        let mut a = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
+        let mut b = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
+        let pa = a.generate_text("determinism probe", 12, SamplingParams::default()).unwrap();
+        let pb = b.generate_text("determinism probe", 12, SamplingParams::default()).unwrap();
+        assert_eq!(pa, pb);
+        assert!(a.metrics.tokens_generated >= 1);
+        assert_eq!(a.metrics.tokens_generated, b.metrics.tokens_generated);
+    }
+
+    #[test]
+    fn concurrent_requests_all_finish() {
+        let mut e = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
+        let mut rxs = vec![];
+        for p in ["alpha", "beta prompt", "gamma gamma gamma"] {
+            let (_, rx) = e.submit_text(p, 10, SamplingParams::default()).unwrap();
+            rxs.push(rx);
+        }
+        e.run_to_completion().unwrap();
+        for rx in &rxs {
+            let (toks, fin) = collect(rx);
+            assert!(!toks.is_empty());
+            assert!(fin.is_some());
+        }
+        assert_eq!(e.metrics.requests_finished, 3);
+        assert_eq!(e.kv_free_blocks() + e.prefix_cached_blocks(), 128);
+    }
+
+    #[test]
+    fn repeated_prompt_hits_prefix_cache_with_identical_output() {
+        // 32-char prompt -> 33 tokens with BOS -> 4 full blocks of 8.
+        let prompt = "system: you are a helpful tool"; // 30 chars + BOS = 31
+        let prompt = format!("{prompt}!!"); // 33 tokens with BOS
+
+        let mut warm = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
+        let first = warm.generate_text(&prompt, 8, SamplingParams::default()).unwrap();
+        assert_eq!(warm.metrics.prefix_hits, 0, "cold first request");
+        let second = warm.generate_text(&prompt, 8, SamplingParams::default()).unwrap();
+        assert_eq!(warm.metrics.prefix_hits, 1, "second request must hit");
+        assert!(warm.metrics.prefix_tokens_reused >= 32);
+        assert_eq!(first, second, "cache hit must not change output");
+
+        // And identical to a cache-disabled engine.
+        let mut cold = SimEngine::new(cfg(false), SimSpec::default()).unwrap();
+        let base = cold.generate_text(&prompt, 8, SamplingParams::default()).unwrap();
+        let base2 = cold.generate_text(&prompt, 8, SamplingParams::default()).unwrap();
+        assert_eq!(first, base);
+        assert_eq!(second, base2);
+        assert_eq!(cold.metrics.prefix_lookups, 0);
+    }
+
+    #[test]
+    fn eviction_reclaims_cached_blocks_under_pressure() {
+        // Tiny pool: the cache must give blocks back for new prompts.
+        let cfg = EngineConfig {
+            kv_block_tokens: 8,
+            kv_total_blocks: 10,
+            max_new_tokens: 4,
+            prefix_cache: true,
+            ..EngineConfig::default()
+        };
+        let mut e = SimEngine::new(cfg, SimSpec::default()).unwrap();
+        for i in 0..6 {
+            let prompt = format!("tenant-{i} prompt padded to some length....");
+            let (_, _rx) = e.submit_text(&prompt, 3, SamplingParams::default()).unwrap();
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.requests_finished, 6);
+        assert!(
+            e.metrics.prefix_blocks_evicted > 0,
+            "pool of 10 blocks cannot cache 6 distinct prompts without evicting"
+        );
+        assert_eq!(e.kv_free_blocks() + e.prefix_cached_blocks(), 10);
+    }
+}

@@ -52,18 +52,111 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TraceRequest> {
         // Exponential inter-arrival (Poisson process).
         t += rng.gen_exp(spec.rate);
         let target = rng.gen_range(spec.prompt_len.0, spec.prompt_len.1);
-        let mut prompt = String::new();
-        while prompt.len() < target {
-            if !prompt.is_empty() {
-                prompt.push(' ');
-            }
-            prompt.push_str(WORDS[rng.gen_range(0, WORDS.len() - 1)]);
-        }
-        prompt.truncate(target.max(1));
+        let prompt = word_soup(&mut rng, target);
         let max_new = rng.gen_range(spec.max_new_tokens.0, spec.max_new_tokens.1);
         out.push(TraceRequest {
             arrival_s: t,
             prompt,
+            max_new_tokens: max_new,
+        });
+    }
+    out
+}
+
+/// Shared-prefix workload: N tenants, each with a fixed system prompt,
+/// reused across requests with a Zipf-distributed tenant popularity —
+/// the traffic shape the prefix cache is built for (multi-tenant
+/// serving where a few hot system prompts dominate).
+#[derive(Debug, Clone)]
+pub struct SharedPrefixSpec {
+    /// Distinct tenants (system prompts).
+    pub n_tenants: usize,
+    /// Zipf exponent for tenant popularity (1.0 = classic Zipf).
+    pub zipf_s: f64,
+    /// System prompt length in characters (byte tokenizer: ~= tokens).
+    pub system_prompt_len: usize,
+    /// Per-request unique suffix length range in characters.
+    pub suffix_len: (usize, usize),
+    pub n_requests: usize,
+    pub max_new_tokens: (usize, usize),
+    /// Mean arrival rate, requests/second (Poisson process).
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl Default for SharedPrefixSpec {
+    fn default() -> Self {
+        SharedPrefixSpec {
+            n_tenants: 8,
+            zipf_s: 1.0,
+            system_prompt_len: 128,
+            suffix_len: (4, 12),
+            n_requests: 96,
+            max_new_tokens: (4, 12),
+            rate: 1e9, // offline by default: everything arrives at t=0
+            seed: 0,
+        }
+    }
+}
+
+/// Deterministic word soup of exactly `len` characters.
+fn word_soup(rng: &mut Rng, len: usize) -> String {
+    let mut s = String::new();
+    while s.len() < len {
+        if !s.is_empty() {
+            s.push(' ');
+        }
+        s.push_str(WORDS[rng.gen_range(0, WORDS.len() - 1)]);
+    }
+    s.truncate(len.max(1));
+    s
+}
+
+/// The tenant system prompts a spec generates (exposed so benches can
+/// report per-tenant stats).
+pub fn tenant_prompts(spec: &SharedPrefixSpec) -> Vec<String> {
+    (0..spec.n_tenants)
+        .map(|i| {
+            let mut rng = Rng::seed_from_u64(spec.seed ^ 0x7E9A97 ^ ((i as u64) << 17));
+            // Distinct leading marker so tenants never share a prefix by
+            // accident; the shared part within a tenant stays maximal.
+            let head = format!("[tenant {i}] ");
+            let body_len = spec.system_prompt_len.saturating_sub(head.len()).max(1);
+            format!("{head}{}", word_soup(&mut rng, body_len))
+        })
+        .collect()
+}
+
+/// Generate a shared-prefix trace: each request is one tenant's system
+/// prompt plus a short unique suffix, tenants drawn Zipf(s).
+pub fn shared_prefix_trace(spec: &SharedPrefixSpec) -> Vec<TraceRequest> {
+    assert!(spec.n_tenants > 0, "need at least one tenant");
+    let prompts = tenant_prompts(spec);
+    // Zipf CDF over tenant ranks 1..=n.
+    let weights: Vec<f64> = (1..=spec.n_tenants)
+        .map(|k| 1.0 / (k as f64).powf(spec.zipf_s))
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut rng = Rng::seed_from_u64(spec.seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(spec.n_requests);
+    for _ in 0..spec.n_requests {
+        t += rng.gen_exp(spec.rate);
+        let mut u = rng.next_f64() * total;
+        let mut tenant = spec.n_tenants - 1;
+        for (k, w) in weights.iter().enumerate() {
+            if u < *w {
+                tenant = k;
+                break;
+            }
+            u -= w;
+        }
+        let suffix_len = rng.gen_range(spec.suffix_len.0, spec.suffix_len.1);
+        let suffix = word_soup(&mut rng, suffix_len);
+        let max_new = rng.gen_range(spec.max_new_tokens.0, spec.max_new_tokens.1);
+        out.push(TraceRequest {
+            arrival_s: t,
+            prompt: format!("{} {suffix}", prompts[tenant]),
             max_new_tokens: max_new,
         });
     }
@@ -123,6 +216,38 @@ mod tests {
             assert!(r.max_new_tokens >= spec.max_new_tokens.0);
             assert!(r.max_new_tokens <= spec.max_new_tokens.1);
         }
+    }
+
+    #[test]
+    fn shared_prefix_trace_deterministic_and_tenant_shaped() {
+        let spec = SharedPrefixSpec::default();
+        let a = shared_prefix_trace(&spec);
+        let b = shared_prefix_trace(&spec);
+        assert_eq!(a, b, "trace must be deterministic per seed");
+        assert_eq!(a.len(), spec.n_requests);
+
+        let prompts = tenant_prompts(&spec);
+        assert_eq!(prompts.len(), spec.n_tenants);
+        for (i, p) in prompts.iter().enumerate() {
+            assert!(p.starts_with(&format!("[tenant {i}] ")));
+            assert_eq!(p.len(), spec.system_prompt_len);
+        }
+
+        // Every request extends exactly one tenant's system prompt.
+        let mut counts = vec![0usize; spec.n_tenants];
+        for r in &a {
+            let tenant = prompts
+                .iter()
+                .position(|p| r.prompt.starts_with(p.as_str()))
+                .expect("request must carry a tenant prefix");
+            counts[tenant] += 1;
+            assert!(r.prompt.len() > prompts[tenant].len(), "suffix present");
+        }
+        // Zipf(1.0): rank 1 must dominate rank n (weights 1 vs 1/8).
+        assert!(
+            counts[0] > counts[spec.n_tenants - 1],
+            "Zipf head should outweigh tail: {counts:?}"
+        );
     }
 
     #[test]

@@ -179,12 +179,14 @@ fn prop_dispatch_total_and_monotone() {
 fn prop_scheduler_no_lost_work() {
     let mut rng = Rng::seed_from_u64(0x5EED);
     for _ in 0..CASES * 5 {
+        let next_prefill_blocks = rng.gen_range(0, 8);
         let s = SchedState {
             queued: rng.gen_range(0, 5),
             running: rng.gen_range(0, 8),
             max_running: 8,
             free_blocks: rng.gen_range(0, 16),
-            next_prefill_blocks: rng.gen_range(0, 8),
+            next_prefill_blocks,
+            cached_prefill_blocks: rng.gen_range(0, next_prefill_blocks.max(1)),
         };
         let a = decide(s);
         match a {

@@ -1,0 +1,247 @@
+//! API-compatible stub of the `xla-rs` PJRT bindings.
+//!
+//! The fdpp crate talks to PJRT through a narrow surface: literals,
+//! a CPU client, HLO-text compilation, and executable dispatch. This
+//! stub reproduces that surface so the whole workspace builds and the
+//! non-PJRT layers (KV cache, prefix cache, scheduler, batcher, server
+//! plumbing, analytic models, simulation engine) run and test on a bare
+//! checkout with no xla_extension install.
+//!
+//! Host-side literal operations (construction, reshape, readback) are
+//! real. Anything that would need the PJRT runtime — client creation,
+//! compilation, execution, .npy weight loading — returns `Error` with a
+//! "stub" message; callers already treat runtime-load failure as "skip
+//! the artifact path". Swapping this path dependency for a real xla-rs
+//! checkout restores the PJRT path without source changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries only a message.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err(what: &str) -> Error {
+    Error::new(format!(
+        "{what} unavailable: fdpp was built against the in-repo xla stub \
+         (no PJRT). Point Cargo at a real xla-rs checkout and run \
+         `make artifacts` to enable the runtime path."
+    ))
+}
+
+/// Element types the fdpp hot path moves across the boundary.
+/// Public only because `NativeType` mentions it; not part of the API.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host-side literal: typed buffer + dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    buf: Buf,
+    dims: Vec<i64>,
+}
+
+/// Sealed-ish conversion trait for native element types.
+pub trait NativeType: Copy {
+    fn wrap(data: &[Self]) -> Buf;
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[Self]) -> Buf {
+        Buf::F32(data.to_vec())
+    }
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>> {
+        match buf {
+            Buf::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[Self]) -> Buf {
+        Buf::I32(data.to_vec())
+    }
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>> {
+        match buf {
+            Buf::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            buf: T::wrap(data),
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.buf {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+        }
+    }
+
+    /// Reshape (element count must be preserved).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape: {} elements into shape {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal {
+            buf: self.buf.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Read the buffer back as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.buf).ok_or_else(|| Error::new("to_vec: element type mismatch"))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (no
+    /// execution), so reaching this is a stub-path bug.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(stub_err("tuple decomposition"))
+    }
+}
+
+/// Raw-bytes loading (xla-rs exposes .npy reading through this trait).
+pub trait FromRawBytes: Sized {
+    fn read_npy<P: AsRef<Path>>(path: P, ctx: &()) -> Result<Self>;
+}
+
+impl FromRawBytes for Literal {
+    fn read_npy<P: AsRef<Path>>(path: P, _ctx: &()) -> Result<Self> {
+        Err(Error::new(format!(
+            "read_npy {}: weight loading requires the real xla-rs build",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        Err(Error::new(format!(
+            "HLO parse {path}: requires the real xla-rs build"
+        )))
+    }
+}
+
+/// Computation wrapper (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Device-side buffer handle. Never constructed by the stub.
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("device readback"))
+    }
+}
+
+/// Compiled executable handle. Never constructed by the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("PJRT execution"))
+    }
+}
+
+/// PJRT client. `cpu()` fails in the stub, which makes `Runtime::load`
+/// fail with a clear message; everything artifact-dependent skips.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(stub_err("PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("PJRT compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn literal_type_mismatch() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn runtime_paths_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
