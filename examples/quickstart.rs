@@ -7,6 +7,7 @@
 //! continuous-batched decode on the asynchronized-softmax kernels ->
 //! sampling -> streaming, all from Rust with Python long gone.
 
+use fdpp::api::InferenceEngine;
 use fdpp::config::EngineConfig;
 use fdpp::engine::Engine;
 use fdpp::runtime::Runtime;

@@ -8,11 +8,10 @@
 
 use std::time::{Duration, Instant};
 
+use fdpp::api::{GenEvent, GenRequest, InferenceEngine};
 use fdpp::config::EngineConfig;
 use fdpp::engine::Engine;
-use fdpp::router::TokenEvent;
 use fdpp::runtime::Runtime;
-use fdpp::sampling::SamplingParams;
 use fdpp::workload::{generate, WorkloadSpec};
 
 struct RunReport {
@@ -62,9 +61,10 @@ fn run(label: &str, async_softmax: bool, n: usize, rate: f64) -> fdpp::Result<Ru
         while let Some(req) = pending.peek() {
             if req.arrival_s <= now {
                 let req = pending.next().unwrap();
-                let (_, rx) =
-                    engine.submit_text(&req.prompt, req.max_new_tokens, SamplingParams::default())?;
-                receivers.push(rx);
+                let gen = GenRequest::text(req.prompt.as_str())
+                    .tenant(req.tenant.as_str())
+                    .max_new_tokens(req.max_new_tokens);
+                receivers.push(engine.submit(gen)?);
             } else {
                 break;
             }
@@ -79,9 +79,9 @@ fn run(label: &str, async_softmax: bool, n: usize, rate: f64) -> fdpp::Result<Ru
 
     // Drain streams (all finished).
     let mut total_events = 0u64;
-    for rx in &receivers {
-        while let Ok(ev) = rx.try_recv() {
-            if matches!(ev, TokenEvent::Token(_)) {
+    for h in &receivers {
+        while let Ok(ev) = h.events.try_recv() {
+            if matches!(ev, GenEvent::Token(_)) {
                 total_events += 1;
             }
         }

@@ -5,11 +5,11 @@
 
 use std::time::Instant;
 
+use fdpp::api::{GenRequest, InferenceEngine};
 use fdpp::bench_support::banner;
 use fdpp::config::EngineConfig;
 use fdpp::engine::Engine;
 use fdpp::runtime::Runtime;
-use fdpp::sampling::SamplingParams;
 use fdpp::workload::{generate, WorkloadSpec};
 
 fn run(label: &str, cfg: EngineConfig, n_requests: usize) -> fdpp::Result<()> {
@@ -24,10 +24,10 @@ fn run(label: &str, cfg: EngineConfig, n_requests: usize) -> fdpp::Result<()> {
         seed: 7,
     });
     let t0 = Instant::now();
-    let mut rxs = vec![];
+    let mut handles = vec![];
     for r in &trace {
-        let (_, rx) = engine.submit_text(&r.prompt, r.max_new_tokens, SamplingParams::default())?;
-        rxs.push(rx);
+        let req = GenRequest::text(r.prompt.as_str()).max_new_tokens(r.max_new_tokens);
+        handles.push(engine.submit(req)?);
     }
     engine.run_to_completion()?;
     let wall = t0.elapsed();

@@ -24,8 +24,8 @@ fn main() {
             print!("{:<18}", kind.as_str());
             let e = EngineModel::new(kind);
             for &&(b, l) in &g {
-                let sp =
-                    hf.decode_token_time(&model, &gpu, b, l) / e.decode_token_time(&model, &gpu, b, l);
+                let sp = hf.decode_token_time(&model, &gpu, b, l)
+                    / e.decode_token_time(&model, &gpu, b, l);
                 print!("{sp:>11.2}x");
                 if kind == EngineKind::FlashDecodingPP {
                     pp.push(sp);

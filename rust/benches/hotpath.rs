@@ -79,7 +79,10 @@ fn main() -> fdpp::Result<()> {
         bench("logits_readback+sample", 3, 200, || {
             let l = to_vec_f32(&outs[0]).unwrap();
             for i in 0..b {
-                black_box(sampler.sample(&l[i * vocab..(i + 1) * vocab], SamplingParams::default()));
+                black_box(sampler.sample(
+                    &l[i * vocab..(i + 1) * vocab],
+                    SamplingParams::default(),
+                ));
             }
         });
         black_box(argmax(&logits[..vocab]));

@@ -4,16 +4,19 @@
 //! request's output is byte-identical to the no-cache run on the same
 //! seed — reuse must be a pure optimization.
 //!
+//! The driver is generic over [`InferenceEngine`]: the exact same loop
+//! serves the sim twin here and the real engine elsewhere, and requests
+//! flow through the typed `GenRequest` surface (tenant ids included, so
+//! the per-tenant counters below come from the engine, not the bench).
+//!
 //! Acceptance target (ISSUE 1): >= 50% prefill-token reduction at
 //! 8 tenants with Zipf(1.0) reuse.
 
-use std::sync::mpsc;
 use std::time::Instant;
 
+use fdpp::api::{GenRequest, InferenceEngine, SubmissionHandle};
 use fdpp::bench_support::banner;
 use fdpp::config::EngineConfig;
-use fdpp::router::TokenEvent;
-use fdpp::sampling::SamplingParams;
 use fdpp::simengine::{SimEngine, SimSpec};
 use fdpp::workload::{shared_prefix_trace, SharedPrefixSpec, TraceRequest};
 
@@ -33,41 +36,45 @@ struct RunResult {
     tokens_reused: u64,
     hit_rate: f64,
     evicted: u64,
+    tenant_cached: Vec<(String, u64)>,
     wall_s: f64,
 }
 
-fn run(trace: &[TraceRequest], prefix_cache: bool) -> fdpp::Result<RunResult> {
-    let mut engine = SimEngine::new(cfg(prefix_cache), SimSpec::default())?;
+/// Drive a full trace through any engine via the unified API.
+fn run_engine<E: InferenceEngine>(
+    engine: &mut E,
+    trace: &[TraceRequest],
+) -> fdpp::Result<RunResult> {
     let t0 = Instant::now();
-    let mut rxs: Vec<mpsc::Receiver<TokenEvent>> = Vec::with_capacity(trace.len());
+    let mut handles: Vec<SubmissionHandle> = Vec::with_capacity(trace.len());
     for r in trace {
-        let (_, rx) =
-            engine.submit_text(&r.prompt, r.max_new_tokens, SamplingParams::default())?;
-        rxs.push(rx);
+        let req = GenRequest::text(r.prompt.as_str())
+            .tenant(r.tenant.as_str())
+            .max_new_tokens(r.max_new_tokens);
+        handles.push(engine.submit(req)?);
     }
     engine.run_to_completion()?;
     let wall_s = t0.elapsed().as_secs_f64();
-    let outputs = rxs
-        .iter()
-        .map(|rx| {
-            let mut toks = vec![];
-            while let Ok(ev) = rx.try_recv() {
-                if let TokenEvent::Token(t) = ev {
-                    toks.push(t);
-                }
-            }
-            toks
-        })
-        .collect();
-    let m = &engine.metrics;
+    let outputs = handles.iter().map(|h| h.drain().0).collect();
+    let m = engine.metrics();
     Ok(RunResult {
         outputs,
         prefill_computed: m.prefill_tokens_computed,
         tokens_reused: m.prefix_tokens_reused,
         hit_rate: m.prefix_hit_rate(),
         evicted: m.prefix_blocks_evicted,
+        tenant_cached: m
+            .tenants
+            .iter()
+            .map(|(k, t)| (k.clone(), t.cached_prompt_tokens))
+            .collect(),
         wall_s,
     })
+}
+
+fn run(trace: &[TraceRequest], prefix_cache: bool) -> fdpp::Result<RunResult> {
+    let mut engine = SimEngine::new(cfg(prefix_cache), SimSpec::default())?;
+    run_engine(&mut engine, trace)
 }
 
 fn main() -> fdpp::Result<()> {
@@ -112,10 +119,7 @@ fn main() -> fdpp::Result<()> {
     let total_prompt_tokens = cold.prefill_computed as f64;
     let reduction = 1.0 - warm.prefill_computed as f64 / total_prompt_tokens;
     println!();
-    println!(
-        "{:<34} {:>12} {:>12}",
-        "", "cache off", "cache on"
-    );
+    println!("{:<34} {:>12} {:>12}", "", "cache off", "cache on");
     println!(
         "{:<34} {:>12} {:>12}",
         "prefill tokens computed", cold.prefill_computed, warm.prefill_computed
@@ -138,6 +142,10 @@ fn main() -> fdpp::Result<()> {
         "{:<34} {:>11.2}s {:>11.2}s",
         "wall time", cold.wall_s, warm.wall_s
     );
+    println!("\nper-tenant cached prompt tokens (cache on):");
+    for (tenant, cached) in &warm.tenant_cached {
+        println!("  {tenant:<16} {cached:>8}");
+    }
     println!();
     println!(
         "prefill-token reduction: {:.1}% (target >= 50%)",

@@ -1,0 +1,305 @@
+//! The public serving API: typed requests, streamed events, and the
+//! [`InferenceEngine`] trait implemented by both the PJRT-backed
+//! [`crate::engine::Engine`] and the deterministic
+//! [`crate::simengine::SimEngine`] twin.
+//!
+//! One abstraction serves every front-end: the JSON-lines TCP server,
+//! the benches, the property tests, and the offline batch drivers all
+//! drive a generic `InferenceEngine`, so the sim twin cannot drift from
+//! the real engine's surface. The scheduling *policy* shared by both
+//! implementations lives in [`crate::policy`]; this module owns the
+//! request/response model:
+//!
+//! - [`GenRequest`]: client id, tenant, priority, stop sequences,
+//!   sampling params, token budget (builder-style constructors).
+//! - [`SubmissionHandle`]: the engine-assigned [`RequestId`] plus the
+//!   [`GenEvent`] stream for that request.
+//! - [`GenEvent`]: streamed tokens, then exactly one `Finished`
+//!   carrying the [`FinishReason`] and a per-request [`Usage`] record
+//!   (prefill / cached / generated token counts).
+
+use std::sync::mpsc;
+
+use crate::error::Result;
+use crate::metrics::EngineMetrics;
+use crate::sampling::SamplingParams;
+use crate::scheduler::Action;
+
+/// Engine-assigned request identifier (monotone per engine; doubles as
+/// the KV-cache sequence id).
+pub type RequestId = u64;
+
+/// What the client wants generated.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Prompt {
+    /// Raw text, encoded by the engine's tokenizer at submit time.
+    Text(String),
+    /// Pre-tokenized ids (must be non-empty).
+    Tokens(Vec<u32>),
+}
+
+/// A typed generation request — the only submission surface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenRequest {
+    /// Optional client correlation id: front-ends (the JSON-lines
+    /// server, docs/PROTOCOL.md) tag every response for this request
+    /// with it. Engines never interpret it — they identify requests by
+    /// the [`RequestId`] they assign at submit.
+    pub client_id: Option<String>,
+    pub prompt: Prompt,
+    /// Multi-tenant accounting key; empty means `"default"`.
+    pub tenant: String,
+    /// Admission priority: higher is admitted first, FIFO within a
+    /// level.
+    pub priority: i32,
+    /// Generation finishes with [`FinishReason::Stop`] when the
+    /// generated token stream ends with the encoding of any of these
+    /// strings.
+    pub stop: Vec<String>,
+    pub params: SamplingParams,
+    /// Requested budget; engines clamp it to their configured cap.
+    pub max_new_tokens: usize,
+}
+
+impl GenRequest {
+    /// A request for a text prompt, with default fields.
+    pub fn text(prompt: impl Into<String>) -> Self {
+        GenRequest::new(Prompt::Text(prompt.into()))
+    }
+
+    /// A request for a pre-tokenized prompt, with default fields.
+    pub fn tokens(prompt_tokens: Vec<u32>) -> Self {
+        GenRequest::new(Prompt::Tokens(prompt_tokens))
+    }
+
+    fn new(prompt: Prompt) -> Self {
+        GenRequest {
+            client_id: None,
+            prompt,
+            tenant: String::new(),
+            priority: 0,
+            stop: Vec::new(),
+            params: SamplingParams::default(),
+            max_new_tokens: usize::MAX,
+        }
+    }
+
+    pub fn client_id(mut self, id: impl Into<String>) -> Self {
+        self.client_id = Some(id.into());
+        self
+    }
+
+    pub fn tenant(mut self, tenant: impl Into<String>) -> Self {
+        self.tenant = tenant.into();
+        self
+    }
+
+    pub fn priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn stop(mut self, stop: Vec<String>) -> Self {
+        self.stop = stop;
+        self
+    }
+
+    pub fn params(mut self, params: SamplingParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn max_new_tokens(mut self, max_new_tokens: usize) -> Self {
+        self.max_new_tokens = max_new_tokens;
+        self
+    }
+}
+
+/// Why a request stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    /// A client stop sequence matched the generated tail.
+    Stop,
+    /// Cancelled via [`InferenceEngine::cancel`].
+    Cancelled,
+    /// KV capacity forced us to stop early.
+    Preempted,
+    Error,
+}
+
+impl FinishReason {
+    /// Stable wire-protocol name (docs/PROTOCOL.md).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Preempted => "preempted",
+            FinishReason::Error => "error",
+        }
+    }
+}
+
+/// Per-request token accounting, reported with the final [`GenEvent`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Usage {
+    /// Prompt length in tokens (cached + prefilled).
+    pub prompt_tokens: usize,
+    /// Prompt tokens served from the prefix cache (no prefill compute).
+    pub cached_prompt_tokens: usize,
+    /// Prompt tokens that went through prefill compute.
+    pub prefill_tokens: usize,
+    pub generated_tokens: usize,
+}
+
+/// Streamed events a client receives for one request.
+#[derive(Debug, Clone)]
+pub enum GenEvent {
+    Token(u32),
+    Finished { reason: FinishReason, usage: Usage },
+}
+
+/// What [`InferenceEngine::submit`] hands back: the assigned id (usable
+/// with `cancel`) and the per-request event stream.
+#[derive(Debug)]
+pub struct SubmissionHandle {
+    pub id: RequestId,
+    pub events: mpsc::Receiver<GenEvent>,
+}
+
+impl SubmissionHandle {
+    /// Drain every buffered event: generated tokens plus, once the
+    /// request is over, its finish reason and usage record.
+    pub fn drain(&self) -> (Vec<u32>, Option<(FinishReason, Usage)>) {
+        let mut toks = Vec::new();
+        let mut fin = None;
+        while let Ok(ev) = self.events.try_recv() {
+            match ev {
+                GenEvent::Token(t) => toks.push(t),
+                GenEvent::Finished { reason, usage } => fin = Some((reason, usage)),
+            }
+        }
+        (toks, fin)
+    }
+}
+
+/// The serving-engine abstraction. [`crate::engine::Engine`] (PJRT) and
+/// [`crate::simengine::SimEngine`] (deterministic hash model) both
+/// implement it over the same router / scheduler / KV-cache / policy
+/// stack, so anything written against this trait — server, benches,
+/// property tests — runs unchanged on either.
+pub trait InferenceEngine {
+    /// Queue a request; returns the assigned id and event stream.
+    fn submit(&mut self, req: GenRequest) -> Result<SubmissionHandle>;
+
+    /// Run one scheduling iteration (prefill, decode, or idle).
+    fn step(&mut self) -> Result<Action>;
+
+    /// Cancel a queued or running request: its stream receives one
+    /// final `Finished { reason: Cancelled, .. }` and every KV block it
+    /// held is released. Returns `false` for unknown (or already
+    /// finished) ids.
+    fn cancel(&mut self, id: RequestId) -> Result<bool>;
+
+    /// Cumulative engine metrics (counters, latency histograms,
+    /// per-tenant usage).
+    fn metrics(&self) -> &EngineMetrics;
+
+    /// True when no work remains (queue empty, nothing running).
+    fn is_idle(&self) -> bool;
+
+    fn queued(&self) -> usize;
+
+    fn running(&self) -> usize;
+
+    /// Tokenize prompt text exactly the way `submit` would.
+    fn encode(&self, text: &str) -> Vec<u32>;
+
+    /// Decode generated ids to text.
+    fn decode(&self, tokens: &[u32]) -> String;
+
+    /// Drive until all submitted work is finished (offline mode).
+    fn run_to_completion(&mut self) -> Result<()> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Offline helper: one blocking generation, decoded to text.
+    fn generate_text(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        params: SamplingParams,
+    ) -> Result<String> {
+        let req = GenRequest::text(prompt)
+            .params(params)
+            .max_new_tokens(max_new_tokens);
+        let handle = self.submit(req)?;
+        self.run_to_completion()?;
+        let (toks, _) = handle.drain();
+        Ok(self.decode(&toks))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_fields() {
+        let r = GenRequest::text("hi")
+            .client_id("abc")
+            .tenant("acme")
+            .priority(3)
+            .stop(vec!["\n".into()])
+            .max_new_tokens(7);
+        assert_eq!(r.client_id.as_deref(), Some("abc"));
+        assert_eq!(r.tenant, "acme");
+        assert_eq!(r.priority, 3);
+        assert_eq!(r.stop, vec!["\n".to_string()]);
+        assert_eq!(r.max_new_tokens, 7);
+        assert_eq!(r.prompt, Prompt::Text("hi".into()));
+    }
+
+    #[test]
+    fn finish_reason_wire_names_are_stable() {
+        for (r, s) in [
+            (FinishReason::Eos, "eos"),
+            (FinishReason::MaxTokens, "max_tokens"),
+            (FinishReason::Stop, "stop"),
+            (FinishReason::Cancelled, "cancelled"),
+            (FinishReason::Preempted, "preempted"),
+            (FinishReason::Error, "error"),
+        ] {
+            assert_eq!(r.as_str(), s);
+        }
+    }
+
+    #[test]
+    fn drain_collects_tokens_and_finish() {
+        let (tx, rx) = mpsc::channel();
+        let h = SubmissionHandle { id: 1, events: rx };
+        tx.send(GenEvent::Token(10)).unwrap();
+        tx.send(GenEvent::Token(11)).unwrap();
+        tx.send(GenEvent::Finished {
+            reason: FinishReason::Eos,
+            usage: Usage {
+                prompt_tokens: 4,
+                cached_prompt_tokens: 0,
+                prefill_tokens: 4,
+                generated_tokens: 2,
+            },
+        })
+        .unwrap();
+        let (toks, fin) = h.drain();
+        assert_eq!(toks, vec![10, 11]);
+        let (reason, usage) = fin.unwrap();
+        assert_eq!(reason, FinishReason::Eos);
+        assert_eq!(usage.generated_tokens, 2);
+    }
+}

@@ -219,6 +219,9 @@ impl EngineConfig {
         if self.kv_block_tokens == 0 || self.kv_total_blocks == 0 {
             return Err(Error::Config("kv cache must be non-empty".into()));
         }
+        if self.max_new_tokens == 0 {
+            return Err(Error::Config("max_new_tokens cap must be at least 1".into()));
+        }
         if self.max_running > *self.decode_buckets.last().unwrap() {
             return Err(Error::Config(
                 "max_running exceeds largest decode bucket".into(),

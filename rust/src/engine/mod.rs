@@ -7,6 +7,11 @@
 //! one step for every running sequence, samples, streams tokens, and
 //! retires finished sequences.
 //!
+//! The public surface is [`crate::api::InferenceEngine`] — typed
+//! [`GenRequest`] in, [`GenEvent`] stream out — and the admission /
+//! eviction / preemption logic is the shared [`crate::policy`] module,
+//! both of which [`crate::simengine::SimEngine`] mirrors exactly.
+//!
 //! KV residency (perf pass, EXPERIMENTS.md §Perf): the dense KV tensors
 //! persist on device across decode steps. Lanes are sticky, so a newly
 //! prefilled sequence is spliced into the running batch *on device* via
@@ -14,19 +19,20 @@
 //! growth/shrink forces a host-side rebuild through the paged store.
 
 use std::collections::HashMap;
-use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::api::{FinishReason, GenEvent, GenRequest, InferenceEngine, RequestId, SubmissionHandle};
 use crate::batching::{pick_prefill_bucket, Batcher};
 use crate::config::EngineConfig;
 use crate::error::{Error, Result};
 use crate::kvcache::{KvCache, KvGeometry, SeqId};
 use crate::metrics::EngineMetrics;
-use crate::prefixcache::{PrefixCache, PrefixMatch};
-use crate::router::{FinishReason, Request, Router, SeqState, Sequence, TokenEvent};
+use crate::policy;
+use crate::prefixcache::PrefixCache;
+use crate::router::{self, Router, SeqState, Sequence};
 use crate::runtime::{literal_f32, literal_i32, to_vec_f32, Manifest, Runtime};
-use crate::sampling::{Sampler, SamplingParams};
-use crate::scheduler::{decide, preemption_victim, Action, PreemptCandidate, SchedState};
+use crate::sampling::Sampler;
+use crate::scheduler::{decide, preemption_victim, Action};
 use crate::tokenizer::{ByteTokenizer, EOS};
 
 /// Device-resident dense KV state for the current batch composition.
@@ -38,8 +44,9 @@ struct DenseState {
     v: xla::Literal,
 }
 
-/// The engine. Owns all sequence state; not Send — run it on a dedicated
-/// thread and talk to it via `Request` channels.
+/// The engine. Owns all sequence state; not Send — run it on a
+/// dedicated thread and talk to it via [`crate::server::EngineJob`]
+/// channels.
 pub struct Engine {
     pub rt: Runtime,
     pub cfg: EngineConfig,
@@ -98,197 +105,6 @@ impl Engine {
         Ok(())
     }
 
-    /// Submit a text prompt; returns (seq id, token stream).
-    pub fn submit_text(
-        &mut self,
-        prompt: &str,
-        max_new_tokens: usize,
-        params: SamplingParams,
-    ) -> Result<(SeqId, mpsc::Receiver<TokenEvent>)> {
-        let toks = self.tokenizer.encode(prompt);
-        self.submit_tokens(toks, max_new_tokens, params)
-    }
-
-    /// Submit pre-tokenized input.
-    pub fn submit_tokens(
-        &mut self,
-        prompt_tokens: Vec<u32>,
-        max_new_tokens: usize,
-        params: SamplingParams,
-    ) -> Result<(SeqId, mpsc::Receiver<TokenEvent>)> {
-        let max_prefill = *self.cfg.prefill_buckets.last().unwrap();
-        if prompt_tokens.is_empty() {
-            return Err(Error::Request("empty prompt".into()));
-        }
-        if prompt_tokens.len() > max_prefill {
-            return Err(Error::Request(format!(
-                "prompt of {} tokens exceeds the largest prefill bucket {max_prefill}",
-                prompt_tokens.len()
-            )));
-        }
-        let (tx, rx) = mpsc::channel();
-        let id = self.router.submit(Request {
-            prompt_tokens,
-            max_new_tokens: max_new_tokens.min(self.cfg.max_new_tokens),
-            params,
-            stream: tx,
-            arrived: Instant::now(),
-        });
-        Ok((id, rx))
-    }
-
-    /// True when no work remains.
-    pub fn is_idle(&self) -> bool {
-        self.router.queued() == 0 && self.batcher.is_empty()
-    }
-
-    pub fn running(&self) -> usize {
-        self.batcher.len()
-    }
-
-    pub fn queued(&self) -> usize {
-        self.router.queued()
-    }
-
-    /// Matched prefix usable for reuse: capped so at least the prompt's
-    /// last token still runs through prefill (its logits row seeds the
-    /// first generated token), floored to whole blocks.
-    fn usable_prefix(&self, prompt_len: usize, matched: usize) -> usize {
-        let bt = self.cfg.kv_block_tokens;
-        (matched.min(prompt_len.saturating_sub(1)) / bt) * bt
-    }
-
-    /// Radix-tree lookup for a prompt, truncated to the usable range.
-    fn lookup_prefix(&mut self, prompt: &[u32]) -> PrefixMatch {
-        if !self.cfg.prefix_cache {
-            return PrefixMatch::default();
-        }
-        let m = self.prefix.match_prefix(prompt);
-        let usable = self.usable_prefix(prompt.len(), m.tokens);
-        if usable == 0 {
-            return PrefixMatch::default();
-        }
-        PrefixMatch {
-            blocks: m.blocks[..usable / self.cfg.kv_block_tokens].to_vec(),
-            tokens: usable,
-        }
-    }
-
-    /// Admit a sequence's KV: prefix attach first, then eviction of the
-    /// uncached shortfall + retry, then — with nothing running to wait
-    /// for — a cold allocation with the cache fully evictable. Returns
-    /// the attached match, `Ok(None)` when admission should wait for
-    /// decode to free blocks, or `Err` when truly stuck.
-    ///
-    /// Attach-before-evict ordering matters throughout: matched blocks
-    /// are refcount-1 (tree-only) until the alloc increfs them, so
-    /// eviction must never run between a successful match and its
-    /// attach; every eviction below is followed by a *fresh* match.
-    fn admit_kv(&mut self, id: SeqId, prompt: &[u32]) -> Result<Option<PrefixMatch>> {
-        let len = prompt.len();
-        let need = (len + 1).div_ceil(self.cfg.kv_block_tokens);
-        let matched = self.lookup_prefix(prompt);
-        if self
-            .kv
-            .alloc_seq_with_prefix(id, len + 1, &matched.blocks, matched.tokens)
-            .is_ok()
-        {
-            return Ok(Some(matched));
-        }
-        // Only the *uncached* shortfall needs reclaiming: matched blocks
-        // attach by incref, they are not allocated.
-        let want = need
-            .saturating_sub(matched.blocks.len())
-            .saturating_sub(self.kv.free_blocks());
-        let freed = self.prefix.evict(want, &mut self.kv);
-        self.metrics.prefix_blocks_evicted += freed as u64;
-        let matched = self.lookup_prefix(prompt);
-        if self
-            .kv
-            .alloc_seq_with_prefix(id, len + 1, &matched.blocks, matched.tokens)
-            .is_ok()
-        {
-            return Ok(Some(matched));
-        }
-        if !self.batcher.is_empty() {
-            return Ok(None);
-        }
-        // Nothing running will ever free blocks: drop every cache claim
-        // and admit cold (or surface the allocator's error).
-        let freed = self.prefix.evict(need, &mut self.kv);
-        self.metrics.prefix_blocks_evicted += freed as u64;
-        self.kv.alloc_seq(id, len + 1)?;
-        Ok(Some(PrefixMatch::default()))
-    }
-
-    /// Blocks the next queued prefill needs and how many are cached
-    /// (a peek: no LRU touch, no attach).
-    fn admission_outlook(&self) -> (usize, usize) {
-        match self.router.queue.front() {
-            Some(s) => {
-                let bt = self.cfg.kv_block_tokens;
-                let need = (s.prompt.len() + 1).div_ceil(bt);
-                let cached = if self.cfg.prefix_cache {
-                    let matched = self.prefix.peek_match_tokens(&s.prompt);
-                    self.usable_prefix(s.prompt.len(), matched) / bt
-                } else {
-                    0
-                };
-                (need, cached)
-            }
-            None => (0, 0),
-        }
-    }
-
-    /// Run one scheduling iteration. Returns the action taken.
-    pub fn step(&mut self) -> Result<Action> {
-        let (next_blocks, mut cached_blocks) = self.admission_outlook();
-        // Under admission pressure, reclaim cached (refcount-1) blocks
-        // before the policy sees the free count — but only when
-        // admission is actually possible (a full running set gets
-        // nothing from eviction), and only after refreshing the head
-        // request's matched path in the LRU so eviction prefers other
-        // entries over the prefix about to be reused.
-        let uncached = next_blocks.saturating_sub(cached_blocks);
-        let admission_possible = next_blocks > 0 && self.batcher.len() < self.cfg.max_running;
-        if admission_possible && self.kv.free_blocks() < uncached {
-            if let Some(prompt) = self.router.queue.front().map(|s| s.prompt.clone()) {
-                let _ = self.prefix.match_prefix(&prompt);
-            }
-            let want = uncached - self.kv.free_blocks();
-            let freed = self.prefix.evict(want, &mut self.kv);
-            self.metrics.prefix_blocks_evicted += freed as u64;
-            if freed > 0 {
-                // Eviction may still have trimmed blocks the peek
-                // counted as cached — re-peek so the policy decides on
-                // live state.
-                cached_blocks = self.admission_outlook().1;
-            }
-        }
-        let action = decide(SchedState {
-            queued: self.router.queued(),
-            running: self.batcher.len(),
-            max_running: self.cfg.max_running,
-            free_blocks: self.kv.free_blocks(),
-            next_prefill_blocks: next_blocks,
-            cached_prefill_blocks: cached_blocks,
-        });
-        match action {
-            Action::Prefill => self.step_prefill()?,
-            Action::Decode => self.step_decode()?,
-            Action::Idle => {}
-        }
-        Ok(action)
-    }
-
-    /// Run until all submitted work is finished (batch/offline mode).
-    pub fn run_to_completion(&mut self) -> Result<()> {
-        while !self.is_idle() {
-            self.step()?;
-        }
-        Ok(())
-    }
-
     // -----------------------------------------------------------------
     // Prefill
     // -----------------------------------------------------------------
@@ -303,9 +119,9 @@ impl Engine {
         let bucket = match pick_prefill_bucket(&self.cfg.prefill_buckets, len) {
             Some(b) => b,
             None => {
-                seq.emit(TokenEvent::Finished {
+                seq.emit(GenEvent::Finished {
                     reason: FinishReason::Error,
-                    n_generated: 0,
+                    usage: seq.usage(),
                 });
                 return Err(Error::Request(format!("prompt {len} exceeds prefill buckets")));
             }
@@ -316,27 +132,31 @@ impl Engine {
         // artifacts — but the matched blocks are shared, not
         // re-allocated, and the accounting below drives the cache-aware
         // scheduler.)
-        let matched = match self.admit_kv(seq.id, &seq.prompt) {
+        let matched = match policy::admit_kv(
+            &self.cfg,
+            &mut self.kv,
+            &mut self.prefix,
+            &mut self.metrics,
+            self.batcher.is_empty(),
+            seq.id,
+            &seq.prompt,
+        ) {
             Ok(Some(m)) => m,
             Ok(None) => {
                 // No room yet: requeue and let decode drain blocks.
                 self.router.requeue_front(seq);
                 return self.step_decode();
             }
-            Err(e) => {
-                // Truly stuck — surface it.
-                self.router.requeue_front(seq);
-                return Err(e);
+            Err(_) => {
+                // Truly stuck: nothing is running and eviction is
+                // exhausted, so this request can never be admitted.
+                // Fail it (surfaced on its stream) instead of wedging
+                // the queue head forever.
+                self.finish_seq(&mut seq, FinishReason::Error)?;
+                return Ok(());
             }
         };
-        if self.cfg.prefix_cache {
-            self.metrics.prefix_lookups += 1;
-            if matched.tokens > 0 {
-                self.metrics.prefix_hits += 1;
-            }
-        }
-        self.metrics.prefix_tokens_reused += matched.tokens as u64;
-        self.metrics.prefill_tokens_computed += (len - matched.tokens) as u64;
+        policy::note_admission(&self.cfg, &mut self.metrics, &mut seq, matched.tokens);
 
         // Pad prompt to the bucket.
         let mut toks: Vec<i32> = seq.prompt.iter().map(|&t| t as i32).collect();
@@ -367,13 +187,17 @@ impl Engine {
         seq.generated.push(tok);
         seq.first_token_at = Some(Instant::now());
         self.metrics.first_token.record(seq.arrived.elapsed());
-        seq.emit(TokenEvent::Token(tok));
+        seq.emit(GenEvent::Token(tok));
         self.metrics.tokens_generated += 1;
         self.metrics.requests_admitted += 1;
 
-        if self.tokenizer.is_eos(tok) || seq.max_new_tokens <= 1 {
-            let reason = if self.tokenizer.is_eos(tok) {
+        let done_eos = self.tokenizer.is_eos(tok);
+        let done_stop = seq.hit_stop();
+        if done_eos || done_stop || seq.max_new_tokens <= 1 {
+            let reason = if done_eos {
                 FinishReason::Eos
+            } else if done_stop {
+                FinishReason::Stop
             } else {
                 FinishReason::MaxTokens
             };
@@ -423,16 +247,14 @@ impl Engine {
     fn step_decode(&mut self) -> Result<()> {
         let t0 = Instant::now();
         // KV headroom: each running sequence may need one fresh block.
-        // Reclaim cached prefix blocks first (even for a lone sequence —
-        // tree-held blocks are reclaimable memory); preempt only as a
-        // last resort, which needs at least two running sequences.
-        while self.kv.free_blocks() < self.batcher.len() {
-            let want = self.batcher.len() - self.kv.free_blocks();
-            let freed = self.prefix.evict(want, &mut self.kv);
-            self.metrics.prefix_blocks_evicted += freed as u64;
-            if self.kv.free_blocks() >= self.batcher.len() || self.batcher.len() <= 1 {
-                break;
-            }
+        // The shared policy reclaims cached prefix blocks first;
+        // preemption is the last resort (needs >= 2 running).
+        while policy::reclaim_decode_headroom(
+            &mut self.kv,
+            &mut self.prefix,
+            &mut self.metrics,
+            self.batcher.len(),
+        ) {
             self.preempt_one()?;
         }
         let batch = self.batcher.assemble()?;
@@ -492,7 +314,7 @@ impl Engine {
 
         let logits_host = to_vec_f32(&logits)?;
         let flags_host = to_vec_f32(&flags)?;
-        let mut finished: Vec<SeqId> = Vec::new();
+        let mut finished: Vec<(SeqId, FinishReason)> = Vec::new();
         for (i, slot) in batch.lanes.iter().enumerate() {
             let Some(id) = slot else { continue };
             let seq = self.seqs.get_mut(id).unwrap();
@@ -501,28 +323,31 @@ impl Engine {
             self.kv.grow_one(*id)?;
             seq.kv_len += 1;
             seq.generated.push(tok);
-            seq.emit(TokenEvent::Token(tok));
+            seq.emit(GenEvent::Token(tok));
             self.metrics.tokens_generated += 1;
             self.metrics.decode_rows += 1;
             if flags_host[i] > 0.5 {
                 self.metrics.recompute_rows += 1;
             }
             let done_eos = tok == EOS;
+            let done_stop = seq.hit_stop();
             let done_len =
                 seq.generated.len() >= seq.max_new_tokens || seq.kv_len + 1 >= geo.max_seq;
-            if done_eos || done_len {
-                finished.push(*id);
+            if done_eos || done_stop || done_len {
+                let reason = if done_eos {
+                    FinishReason::Eos
+                } else if done_stop {
+                    FinishReason::Stop
+                } else {
+                    FinishReason::MaxTokens
+                };
+                finished.push((*id, reason));
             }
         }
         // Retire finished sequences (their lanes become holes; the dense
         // tensor stays valid — holes are masked by pos/kv_len).
-        for id in finished {
+        for (id, reason) in finished {
             let mut seq = self.seqs.remove(&id).unwrap();
-            let reason = if seq.generated.last() == Some(&EOS) {
-                FinishReason::Eos
-            } else {
-                FinishReason::MaxTokens
-            };
             self.retire(&mut seq, reason)?;
         }
         self.metrics.decode_steps += 1;
@@ -588,30 +413,10 @@ impl Engine {
     }
 
     /// Preempt one running sequence (KV pressure): the scheduler picks
-    /// the victim *by id* — preferring sequences whose blocks stay
-    /// reusable (shared with the prefix cache or other sequences), ties
-    /// to the youngest — and the engine resolves id -> lane.
+    /// the victim *by id* over the shared policy's reusable-block
+    /// census, and the engine resolves id -> lane.
     fn preempt_one(&mut self) -> Result<()> {
-        let candidates: Vec<PreemptCandidate> = self
-            .batcher
-            .running_ids()
-            .into_iter()
-            .map(|id| {
-                let reusable = self
-                    .kv
-                    .seq_blocks(id)
-                    .map(|bs| {
-                        bs.iter()
-                            .filter(|&&b| self.kv.block_refcount(b) > 1)
-                            .count()
-                    })
-                    .unwrap_or(0);
-                PreemptCandidate {
-                    id,
-                    reusable_blocks: reusable,
-                }
-            })
-            .collect();
+        let candidates = policy::preempt_candidates(&self.kv, &self.batcher.running_ids());
         let id = preemption_victim(&candidates)
             .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
         let mut seq = self.seqs.remove(&id).unwrap();
@@ -636,10 +441,9 @@ impl Engine {
 
     fn finish_seq(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
         seq.state = SeqState::Finished(reason);
-        seq.emit(TokenEvent::Finished {
-            reason,
-            n_generated: seq.generated.len(),
-        });
+        let usage = seq.usage();
+        seq.emit(GenEvent::Finished { reason, usage });
+        self.metrics.record_finish(&seq.tenant, usage);
         self.register_prefix(seq);
         if self.kv.contains(seq.id) {
             self.kv.free_seq(seq.id)?;
@@ -647,22 +451,95 @@ impl Engine {
         self.metrics.requests_finished += 1;
         Ok(())
     }
+}
 
-    /// Offline helper: generate `max_new_tokens` for one prompt, blocking.
-    pub fn generate_text(
-        &mut self,
-        prompt: &str,
-        max_new_tokens: usize,
-        params: SamplingParams,
-    ) -> Result<String> {
-        let (_, rx) = self.submit_text(prompt, max_new_tokens, params)?;
-        self.run_to_completion()?;
-        let mut out = Vec::new();
-        while let Ok(ev) = rx.try_recv() {
-            if let TokenEvent::Token(t) = ev {
-                out.push(t);
-            }
+impl InferenceEngine for Engine {
+    /// Queue a typed request; the prompt must fit the largest prefill
+    /// bucket and the KV pool.
+    fn submit(&mut self, req: GenRequest) -> Result<SubmissionHandle> {
+        let prompt_tokens = router::encode_prompt(&self.tokenizer, &req.prompt)?;
+        let max_prefill = *self.cfg.prefill_buckets.last().unwrap();
+        if prompt_tokens.len() > max_prefill {
+            return Err(Error::Request(format!(
+                "prompt of {} tokens exceeds the largest prefill bucket {max_prefill}",
+                prompt_tokens.len()
+            )));
         }
-        Ok(self.tokenizer.decode(&out))
+        let need = (prompt_tokens.len() + 1).div_ceil(self.cfg.kv_block_tokens);
+        if need > self.cfg.kv_total_blocks {
+            return Err(Error::Request(format!(
+                "prompt needs {need} KV blocks, pool has {}",
+                self.cfg.kv_total_blocks
+            )));
+        }
+        router::enqueue_request(
+            &mut self.router,
+            &self.tokenizer,
+            &req,
+            prompt_tokens,
+            self.cfg.max_new_tokens,
+        )
+    }
+
+    /// Run one scheduling iteration. Returns the action taken.
+    fn step(&mut self) -> Result<Action> {
+        let state = policy::plan_admission(
+            &self.cfg,
+            &mut self.kv,
+            &mut self.prefix,
+            &mut self.metrics,
+            self.router.peek_next(),
+            self.router.queued(),
+            self.batcher.len(),
+        );
+        let action = decide(state);
+        match action {
+            Action::Prefill => self.step_prefill()?,
+            Action::Decode => self.step_decode()?,
+            Action::Idle => {}
+        }
+        Ok(action)
+    }
+
+    /// Cancel a queued or running request; its KV blocks are released
+    /// (prompt blocks may survive in the prefix cache, refcounted by the
+    /// tree alone).
+    fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        if let Some(mut seq) = self.router.take(id) {
+            self.metrics.cancellations += 1;
+            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+            return Ok(true);
+        }
+        if let Some(mut seq) = self.seqs.remove(&id) {
+            self.metrics.cancellations += 1;
+            self.retire(&mut seq, FinishReason::Cancelled)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+
+    /// True when no work remains.
+    fn is_idle(&self) -> bool {
+        self.router.queued() == 0 && self.batcher.is_empty()
+    }
+
+    fn queued(&self) -> usize {
+        self.router.queued()
+    }
+
+    fn running(&self) -> usize {
+        self.batcher.len()
+    }
+
+    fn encode(&self, text: &str) -> Vec<u32> {
+        self.tokenizer.encode(text)
+    }
+
+    fn decode(&self, tokens: &[u32]) -> String {
+        self.tokenizer.decode(tokens)
     }
 }

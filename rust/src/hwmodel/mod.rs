@@ -121,7 +121,14 @@ mod cal {
 
 /// Time (s) of one x[M,K] @ w[K,N] with implementation `impl_kind`.
 /// `elt` is the element size in bytes (2 for fp16/bf16).
-pub fn gemm_time(gpu: &GpuProfile, impl_kind: ImplKind, m: usize, n: usize, k: usize, elt: usize) -> f64 {
+pub fn gemm_time(
+    gpu: &GpuProfile,
+    impl_kind: ImplKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    elt: usize,
+) -> f64 {
     let (mf, nf, kf) = (m as f64, n as f64, k as f64);
     match impl_kind {
         ImplKind::A => {
@@ -168,7 +175,14 @@ pub fn gemm_time(gpu: &GpuProfile, impl_kind: ImplKind, m: usize, n: usize, k: u
 
 /// Figure 7 model: normalized flat-GEMM performance at a forced N-tile
 /// size `b_n` (instead of the heuristic choice). M is padded to 8.
-pub fn flat_gemm_time_forced_bn(gpu: &GpuProfile, m: usize, n: usize, k: usize, b_n: usize, elt: usize) -> f64 {
+pub fn flat_gemm_time_forced_bn(
+    gpu: &GpuProfile,
+    m: usize,
+    n: usize,
+    k: usize,
+    b_n: usize,
+    elt: usize,
+) -> f64 {
     let mp = m.div_ceil(8) * 8;
     let (mf, nf, kf) = (mp as f64, n as f64, k as f64);
     let blocks = gemm::parallelism(n, b_n);

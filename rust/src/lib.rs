@@ -53,7 +53,22 @@
 //! A block returns to the free list exactly when its last reference
 //! drops — `free_seq` on a private block, or LRU eviction on a cached
 //! one.
+//!
+//! # Unified serving API
+//!
+//! Every front-end — the JSON-lines TCP server ([`server`], protocol in
+//! `docs/PROTOCOL.md`), benches, property tests, offline drivers —
+//! talks to a generic [`api::InferenceEngine`]: `submit(GenRequest) ->
+//! SubmissionHandle`, `step`, `cancel`, `metrics`. [`engine::Engine`]
+//! (PJRT) and [`simengine::SimEngine`] (deterministic hash model) both
+//! implement it, and share their admission / eviction / preemption
+//! logic through [`policy`], so the sim twin can neither drift from the
+//! real engine's policy nor from its surface. Requests carry tenant,
+//! priority, and stop sequences; finish events carry a per-request
+//! usage record (prefill / cached / generated token counts), and
+//! metrics aggregate per-tenant counters.
 
+pub mod api;
 pub mod baselines;
 pub mod batching;
 pub mod bench_support;
@@ -66,6 +81,7 @@ pub mod hwmodel;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod policy;
 pub mod prefixcache;
 pub mod router;
 pub mod runtime;

@@ -7,6 +7,7 @@
 //!   simulate          analytic GPU engine comparison (hwmodel)
 //!   inspect           list artifacts + model metadata
 
+use fdpp::api::InferenceEngine;
 use fdpp::baselines::{EngineKind, EngineModel};
 use fdpp::bench_support::{banner, fmt_speedup, fmt_time, row};
 use fdpp::config::{paper_model, paper_models, EngineConfig};

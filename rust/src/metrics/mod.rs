@@ -3,8 +3,10 @@
 //! Everything is plain data (no atomics on the hot path — the engine step
 //! loop is single-owner and hands out snapshots).
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::api::Usage;
 use crate::util::json::Json;
 
 /// Fixed-boundary log-scale latency histogram, microsecond resolution.
@@ -87,7 +89,38 @@ impl LatencyHistogram {
     }
 }
 
-/// Aggregated serving metrics, snapshotted by `Engine::metrics()`.
+/// Distinct tenants tracked individually before new ones fold into the
+/// [`OTHER_TENANTS`] bucket (tenant ids come off the wire, so the map
+/// must stay bounded against adversarial cardinality).
+pub const MAX_TRACKED_TENANTS: usize = 64;
+/// Aggregate bucket for tenants beyond [`MAX_TRACKED_TENANTS`].
+pub const OTHER_TENANTS: &str = "(other)";
+
+/// Per-tenant usage counters, keyed by the request's tenant id.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    pub requests_finished: u64,
+    /// Tokens generated for this tenant's requests.
+    pub generated_tokens: u64,
+    /// Prompt tokens this tenant served from the prefix cache.
+    pub cached_prompt_tokens: u64,
+}
+
+impl TenantCounters {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests_finished", Json::Num(self.requests_finished as f64)),
+            ("generated_tokens", Json::Num(self.generated_tokens as f64)),
+            (
+                "cached_prompt_tokens",
+                Json::Num(self.cached_prompt_tokens as f64),
+            ),
+        ])
+    }
+}
+
+/// Aggregated serving metrics, snapshotted by
+/// [`crate::api::InferenceEngine::metrics`].
 #[derive(Debug, Clone, Default)]
 pub struct EngineMetrics {
     /// Time from request arrival to first generated token.
@@ -122,6 +155,11 @@ pub struct EngineMetrics {
     pub prefix_blocks_evicted: u64,
     /// Preemptions triggered by KV exhaustion.
     pub preemptions: u64,
+    /// Requests cancelled via `InferenceEngine::cancel`.
+    pub cancellations: u64,
+    /// Per-tenant generated/cached token counters (recorded at request
+    /// finish, exposed in the `{"stats": true}` snapshot).
+    pub tenants: BTreeMap<String, TenantCounters>,
 }
 
 impl EngineMetrics {
@@ -140,6 +178,24 @@ impl EngineMetrics {
         } else {
             self.tokens_generated as f64 / wall.as_secs_f64()
         }
+    }
+
+    /// Fold one finished request's usage into the per-tenant counters.
+    /// Tenant ids are client-supplied strings, so cardinality is capped:
+    /// once [`MAX_TRACKED_TENANTS`] distinct tenants exist, further ones
+    /// aggregate under `"(other)"` (bounded memory, bounded stats size).
+    pub fn record_finish(&mut self, tenant: &str, usage: Usage) {
+        let key = if self.tenants.contains_key(tenant)
+            || self.tenants.len() < MAX_TRACKED_TENANTS
+        {
+            tenant
+        } else {
+            OTHER_TENANTS
+        };
+        let t = self.tenants.entry(key.to_string()).or_default();
+        t.requests_finished += 1;
+        t.generated_tokens += usage.generated_tokens as u64;
+        t.cached_prompt_tokens += usage.cached_prompt_tokens as u64;
     }
 
     /// Fraction of prefix-cache lookups that hit.
@@ -173,6 +229,16 @@ impl EngineMetrics {
             ("kv_rebuilds", Json::Num(self.kv_rebuilds as f64)),
             ("kv_inserts", Json::Num(self.kv_inserts as f64)),
             ("preemptions", Json::Num(self.preemptions as f64)),
+            ("cancellations", Json::Num(self.cancellations as f64)),
+            (
+                "tenants",
+                Json::Obj(
+                    self.tenants
+                        .iter()
+                        .map(|(k, t)| (k.clone(), t.to_json()))
+                        .collect(),
+                ),
+            ),
             ("prefix_lookups", Json::Num(self.prefix_lookups as f64)),
             ("prefix_hits", Json::Num(self.prefix_hits as f64)),
             ("prefix_hit_rate", Json::Num(self.prefix_hit_rate())),
@@ -261,11 +327,74 @@ mod tests {
 
     #[test]
     fn metrics_json_snapshot_parses() {
-        let mut m = EngineMetrics::default();
-        m.prefix_lookups = 3;
-        m.prefix_hits = 2;
+        let m = EngineMetrics {
+            prefix_lookups: 3,
+            prefix_hits: 2,
+            ..EngineMetrics::default()
+        };
         let text = m.to_json().to_string();
         let back = crate::util::json::parse(&text).unwrap();
         assert_eq!(back.get("prefix_hits").and_then(|j| j.as_usize()), Some(2));
+    }
+
+    #[test]
+    fn per_tenant_counters_accumulate_and_serialize() {
+        let mut m = EngineMetrics::default();
+        let usage = |cached: usize, generated: usize| Usage {
+            prompt_tokens: cached + 2,
+            cached_prompt_tokens: cached,
+            prefill_tokens: 2,
+            generated_tokens: generated,
+        };
+        m.record_finish("acme", usage(8, 4));
+        m.record_finish("acme", usage(0, 6));
+        m.record_finish("globex", usage(16, 1));
+        let acme = &m.tenants["acme"];
+        assert_eq!(acme.requests_finished, 2);
+        assert_eq!(acme.generated_tokens, 10);
+        assert_eq!(acme.cached_prompt_tokens, 8);
+
+        let back = crate::util::json::parse(&m.to_json().to_string()).unwrap();
+        let tenants = back.field("tenants").unwrap();
+        assert_eq!(
+            tenants
+                .field("acme")
+                .unwrap()
+                .get("generated_tokens")
+                .and_then(|j| j.as_usize()),
+            Some(10)
+        );
+        assert_eq!(
+            tenants
+                .field("globex")
+                .unwrap()
+                .get("cached_prompt_tokens")
+                .and_then(|j| j.as_usize()),
+            Some(16)
+        );
+    }
+
+    #[test]
+    fn tenant_cardinality_is_bounded() {
+        let mut m = EngineMetrics::default();
+        let u = Usage {
+            prompt_tokens: 2,
+            cached_prompt_tokens: 0,
+            prefill_tokens: 2,
+            generated_tokens: 1,
+        };
+        for i in 0..(MAX_TRACKED_TENANTS + 40) {
+            m.record_finish(&format!("tenant-{i}"), u);
+        }
+        assert!(
+            m.tenants.len() <= MAX_TRACKED_TENANTS + 1,
+            "map must stay bounded, got {}",
+            m.tenants.len()
+        );
+        let other = &m.tenants[OTHER_TENANTS];
+        assert!(other.requests_finished >= 39, "overflow aggregates");
+        // Known tenants keep accumulating individually.
+        m.record_finish("tenant-0", u);
+        assert_eq!(m.tenants["tenant-0"].requests_finished, 2);
     }
 }

@@ -1,0 +1,401 @@
+//! Shared admission / eviction / preemption policy.
+//!
+//! [`crate::engine::Engine`] and [`crate::simengine::SimEngine`] used
+//! to carry verbatim copies of this logic; any fix applied to one could
+//! silently miss the other (the drift hazard ROADMAP flagged). Both now
+//! call these free functions over the same cache/scheduler state, so
+//! the sim twin *cannot* drift from the real engine:
+//!
+//! - [`admit_kv`]: prefix attach first, then eviction of the uncached
+//!   shortfall + retry, then — with nothing running to wait for — a
+//!   cold allocation with the cache fully evictable.
+//! - [`plan_admission`]: the pre-decision pressure-eviction pass that
+//!   feeds [`crate::scheduler::decide`] a [`SchedState`].
+//! - [`reclaim_decode_headroom`] + [`preempt_candidates`]: decode-time
+//!   block reclamation, preferring cached-block eviction over
+//!   preemption, and the reusable-block census the preemption victim
+//!   choice ([`crate::scheduler::preemption_victim`]) runs on.
+//!
+//! The pure decision functions (`decide`, `preemption_victim`) stay in
+//! [`crate::scheduler`]; this module owns the stateful glue between
+//! them and the KV / prefix caches.
+
+use crate::config::EngineConfig;
+use crate::error::Result;
+use crate::kvcache::{KvCache, SeqId};
+use crate::metrics::EngineMetrics;
+use crate::prefixcache::{PrefixCache, PrefixMatch};
+use crate::router::Sequence;
+use crate::scheduler::{PreemptCandidate, SchedState};
+
+/// Matched prefix usable for reuse: capped so at least the prompt's
+/// last token still runs through prefill (its logits row seeds the
+/// first generated token), floored to whole blocks.
+pub fn usable_prefix(block_tokens: usize, prompt_len: usize, matched: usize) -> usize {
+    (matched.min(prompt_len.saturating_sub(1)) / block_tokens) * block_tokens
+}
+
+/// Radix-tree lookup for a prompt, truncated to the usable range.
+pub fn lookup_prefix(cfg: &EngineConfig, prefix: &mut PrefixCache, prompt: &[u32]) -> PrefixMatch {
+    if !cfg.prefix_cache {
+        return PrefixMatch::default();
+    }
+    let m = prefix.match_prefix(prompt);
+    let usable = usable_prefix(cfg.kv_block_tokens, prompt.len(), m.tokens);
+    if usable == 0 {
+        return PrefixMatch::default();
+    }
+    PrefixMatch {
+        blocks: m.blocks[..usable / cfg.kv_block_tokens].to_vec(),
+        tokens: usable,
+    }
+}
+
+/// Admit a sequence's KV: prefix attach first, then eviction of the
+/// uncached shortfall + retry, then — with nothing running to wait
+/// for — a cold allocation with the cache fully evictable. Returns the
+/// attached match, `Ok(None)` when admission should wait for decode to
+/// free blocks, or `Err` when truly stuck.
+///
+/// Attach-before-evict ordering matters throughout: matched blocks are
+/// refcount-1 (tree-only) until the alloc increfs them, so eviction
+/// must never run between a successful match and its attach; every
+/// eviction below is followed by a *fresh* match.
+pub fn admit_kv(
+    cfg: &EngineConfig,
+    kv: &mut KvCache,
+    prefix: &mut PrefixCache,
+    metrics: &mut EngineMetrics,
+    running_empty: bool,
+    id: SeqId,
+    prompt: &[u32],
+) -> Result<Option<PrefixMatch>> {
+    let len = prompt.len();
+    let need = (len + 1).div_ceil(cfg.kv_block_tokens);
+    let matched = lookup_prefix(cfg, prefix, prompt);
+    if kv
+        .alloc_seq_with_prefix(id, len + 1, &matched.blocks, matched.tokens)
+        .is_ok()
+    {
+        return Ok(Some(matched));
+    }
+    // Only the *uncached* shortfall needs reclaiming: matched blocks
+    // attach by incref, they are not allocated.
+    let want = need
+        .saturating_sub(matched.blocks.len())
+        .saturating_sub(kv.free_blocks());
+    let freed = prefix.evict(want, kv);
+    metrics.prefix_blocks_evicted += freed as u64;
+    let matched = lookup_prefix(cfg, prefix, prompt);
+    if kv
+        .alloc_seq_with_prefix(id, len + 1, &matched.blocks, matched.tokens)
+        .is_ok()
+    {
+        return Ok(Some(matched));
+    }
+    if !running_empty {
+        return Ok(None);
+    }
+    // Nothing running will ever free blocks: drop every cache claim and
+    // admit cold (or surface the allocator's error).
+    let freed = prefix.evict(need, kv);
+    metrics.prefix_blocks_evicted += freed as u64;
+    kv.alloc_seq(id, len + 1)?;
+    Ok(Some(PrefixMatch::default()))
+}
+
+/// Record one admission's prefix-cache accounting (lookup, hit, reused
+/// vs computed prompt tokens) and the sequence's own usage split.
+pub fn note_admission(
+    cfg: &EngineConfig,
+    metrics: &mut EngineMetrics,
+    seq: &mut Sequence,
+    matched_tokens: usize,
+) {
+    if cfg.prefix_cache {
+        metrics.prefix_lookups += 1;
+        if matched_tokens > 0 {
+            metrics.prefix_hits += 1;
+        }
+    }
+    metrics.prefix_tokens_reused += matched_tokens as u64;
+    metrics.prefill_tokens_computed += (seq.prompt.len() - matched_tokens) as u64;
+    seq.cached_prompt_tokens = matched_tokens;
+    seq.admitted = true;
+}
+
+/// Blocks the next queued prefill needs and how many are cached (a
+/// peek: no LRU touch, no attach).
+pub fn admission_outlook(
+    cfg: &EngineConfig,
+    prefix: &PrefixCache,
+    next: Option<&Sequence>,
+) -> (usize, usize) {
+    match next {
+        Some(s) => {
+            let bt = cfg.kv_block_tokens;
+            let need = (s.prompt.len() + 1).div_ceil(bt);
+            let cached = if cfg.prefix_cache {
+                usable_prefix(bt, s.prompt.len(), prefix.peek_match_tokens(&s.prompt)) / bt
+            } else {
+                0
+            };
+            (need, cached)
+        }
+        None => (0, 0),
+    }
+}
+
+/// Build the scheduler's input for one decision, first reclaiming
+/// cached (refcount-1) blocks under admission pressure — but only when
+/// admission is actually possible (a full running set gets nothing from
+/// eviction), and only after refreshing the head request's matched path
+/// in the LRU so eviction prefers other entries over the prefix about
+/// to be reused.
+pub fn plan_admission(
+    cfg: &EngineConfig,
+    kv: &mut KvCache,
+    prefix: &mut PrefixCache,
+    metrics: &mut EngineMetrics,
+    next: Option<&Sequence>,
+    queued: usize,
+    running: usize,
+) -> SchedState {
+    let (next_blocks, mut cached_blocks) = admission_outlook(cfg, prefix, next);
+    let uncached = next_blocks.saturating_sub(cached_blocks);
+    let admission_possible = next_blocks > 0 && running < cfg.max_running;
+    if admission_possible && kv.free_blocks() < uncached {
+        if let Some(s) = next {
+            let _ = prefix.match_prefix(&s.prompt);
+        }
+        let want = uncached - kv.free_blocks();
+        let freed = prefix.evict(want, kv);
+        metrics.prefix_blocks_evicted += freed as u64;
+        if freed > 0 {
+            // Eviction may still have trimmed blocks the peek counted
+            // as cached — re-peek so the policy decides on live state.
+            cached_blocks = admission_outlook(cfg, prefix, next).1;
+        }
+    }
+    SchedState {
+        queued,
+        running,
+        max_running: cfg.max_running,
+        free_blocks: kv.free_blocks(),
+        next_prefill_blocks: next_blocks,
+        cached_prefill_blocks: cached_blocks,
+    }
+}
+
+/// Decode-time KV headroom: each running sequence may need one fresh
+/// block this step. Reclaim cached prefix blocks first (even for a lone
+/// sequence — tree-held blocks are reclaimable memory). Returns `true`
+/// when the caller must preempt a running sequence (still short, and at
+/// least two running) and call again.
+pub fn reclaim_decode_headroom(
+    kv: &mut KvCache,
+    prefix: &mut PrefixCache,
+    metrics: &mut EngineMetrics,
+    running: usize,
+) -> bool {
+    if kv.free_blocks() >= running {
+        return false;
+    }
+    let want = running - kv.free_blocks();
+    let freed = prefix.evict(want, kv);
+    metrics.prefix_blocks_evicted += freed as u64;
+    kv.free_blocks() < running && running > 1
+}
+
+/// The reusable-block census preemption runs on: for every running
+/// sequence, how many of its blocks would *stay reusable* (shared with
+/// the prefix cache or other sequences) if it were evicted now.
+pub fn preempt_candidates(kv: &KvCache, running_ids: &[SeqId]) -> Vec<PreemptCandidate> {
+    running_ids
+        .iter()
+        .map(|&id| {
+            let reusable = kv
+                .seq_blocks(id)
+                .map(|bs| bs.iter().filter(|&&b| kv.block_refcount(b) > 1).count())
+                .unwrap_or(0);
+            PreemptCandidate {
+                id,
+                reusable_blocks: reusable,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::InferenceEngine;
+    use crate::kvcache::KvGeometry;
+    use crate::scheduler::{decide, Action};
+
+    /// Compile-time proof that both engines expose the one shared
+    /// surface this policy is written for (the trait bound fails to
+    /// resolve if either implementation drifts off it).
+    #[test]
+    fn both_engines_implement_inference_engine() {
+        fn requires_engine<E: InferenceEngine>() {}
+        let _real = requires_engine::<crate::engine::Engine>;
+        let _sim = requires_engine::<crate::simengine::SimEngine>;
+    }
+
+    fn cfg(bt: usize, blocks: usize) -> EngineConfig {
+        EngineConfig {
+            kv_block_tokens: bt,
+            kv_total_blocks: blocks,
+            ..EngineConfig::default()
+        }
+    }
+
+    fn kv(bt: usize, blocks: usize) -> KvCache {
+        KvCache::new(
+            KvGeometry {
+                n_layers: 1,
+                n_heads: 1,
+                head_dim: 2,
+                block_tokens: bt,
+                max_seq: 256,
+            },
+            blocks,
+        )
+    }
+
+    #[test]
+    fn usable_prefix_reserves_last_token_and_floors_to_blocks() {
+        // Full-prompt match: last token must still prefill.
+        assert_eq!(usable_prefix(4, 8, 8), 4);
+        assert_eq!(usable_prefix(4, 9, 8), 8);
+        assert_eq!(usable_prefix(4, 9, 3), 0, "sub-block match unusable");
+        assert_eq!(usable_prefix(4, 0, 0), 0);
+    }
+
+    #[test]
+    fn admit_kv_attaches_cached_prefix() {
+        let c = cfg(4, 16);
+        let mut kv = kv(4, 16);
+        let mut pc = PrefixCache::new(4);
+        let mut m = EngineMetrics::default();
+        // Seed the cache with a donor's prompt blocks.
+        let prompt: Vec<u32> = (0..12).collect();
+        kv.alloc_seq(1, 12).unwrap();
+        let blocks = kv.seq_blocks(1).unwrap();
+        pc.insert(&prompt, &blocks, &mut kv);
+        kv.free_seq(1).unwrap();
+
+        let got = admit_kv(&c, &mut kv, &mut pc, &mut m, true, 2, &prompt)
+            .unwrap()
+            .expect("admission must succeed");
+        // 12-token prompt: 2 full blocks usable (last token reserved).
+        assert_eq!(got.tokens, 8);
+        assert_eq!(got.blocks.len(), 2);
+        assert!(kv.contains(2));
+    }
+
+    #[test]
+    fn admit_kv_evicts_cache_for_cold_prompt_when_nothing_runs() {
+        let c = cfg(4, 4);
+        let mut kv = kv(4, 4);
+        let mut pc = PrefixCache::new(4);
+        let mut m = EngineMetrics::default();
+        // Fill the whole pool with a cached prompt.
+        let cached_prompt: Vec<u32> = (100..116).collect();
+        kv.alloc_seq(1, 16).unwrap();
+        pc.insert(&cached_prompt, &kv.seq_blocks(1).unwrap(), &mut kv);
+        kv.free_seq(1).unwrap();
+        assert_eq!(kv.free_blocks(), 0);
+
+        // A disjoint cold prompt must still admit: the cache gives its
+        // blocks back.
+        let cold: Vec<u32> = (200..212).collect();
+        let got = admit_kv(&c, &mut kv, &mut pc, &mut m, true, 2, &cold)
+            .unwrap()
+            .expect("cold admission must evict and succeed");
+        assert_eq!(got.tokens, 0);
+        assert!(m.prefix_blocks_evicted > 0);
+        assert!(kv.contains(2));
+    }
+
+    #[test]
+    fn admit_kv_waits_when_decode_can_free_blocks() {
+        let c = cfg(4, 4);
+        let mut kv = kv(4, 4);
+        let mut pc = PrefixCache::new(4);
+        let mut m = EngineMetrics::default();
+        // A running sequence owns the whole pool (nothing cached).
+        kv.alloc_seq(1, 16).unwrap();
+        let cold: Vec<u32> = (0..12).collect();
+        let got = admit_kv(&c, &mut kv, &mut pc, &mut m, false, 2, &cold).unwrap();
+        assert!(got.is_none(), "must wait for running work, not error");
+        assert!(!kv.contains(2));
+    }
+
+    #[test]
+    fn plan_admission_reclaims_cached_blocks_under_pressure() {
+        let c = cfg(4, 4);
+        let mut kv = kv(4, 4);
+        let mut pc = PrefixCache::new(4);
+        let mut m = EngineMetrics::default();
+        let cached_prompt: Vec<u32> = (0..16).collect();
+        kv.alloc_seq(1, 16).unwrap();
+        pc.insert(&cached_prompt, &kv.seq_blocks(1).unwrap(), &mut kv);
+        kv.free_seq(1).unwrap();
+        assert_eq!(kv.free_blocks(), 0);
+
+        // Next up: a disjoint 8-token prompt (3 blocks with the +1).
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let req = crate::api::GenRequest::tokens((50..58).collect());
+        let seq = Sequence::queued(7, &req, (50..58).collect(), Vec::new(), 4, tx);
+        let state = plan_admission(&c, &mut kv, &mut pc, &mut m, Some(&seq), 1, 0);
+        assert!(m.prefix_blocks_evicted > 0, "pressure must evict");
+        assert!(state.free_blocks >= state.uncached_prefill_blocks());
+        assert_eq!(decide(state), Action::Prefill);
+    }
+
+    #[test]
+    fn reclaim_decode_headroom_prefers_eviction_over_preemption() {
+        let mut kv = kv(4, 4);
+        let mut pc = PrefixCache::new(4);
+        let mut m = EngineMetrics::default();
+        let prompt: Vec<u32> = (0..8).collect();
+        kv.alloc_seq(1, 8).unwrap();
+        pc.insert(&prompt, &kv.seq_blocks(1).unwrap(), &mut kv);
+        kv.free_seq(1).unwrap();
+        kv.alloc_seq(2, 8).unwrap();
+        assert_eq!(kv.free_blocks(), 0);
+        // One running sequence, two cached blocks: eviction suffices.
+        assert!(!reclaim_decode_headroom(&mut kv, &mut pc, &mut m, 1));
+        assert!(kv.free_blocks() >= 1);
+        assert!(m.prefix_blocks_evicted >= 1);
+    }
+
+    #[test]
+    fn reclaim_decode_headroom_requests_preemption_when_dry() {
+        let mut kv = kv(4, 4);
+        let mut pc = PrefixCache::new(4);
+        let mut m = EngineMetrics::default();
+        kv.alloc_seq(1, 8).unwrap();
+        kv.alloc_seq(2, 8).unwrap();
+        assert_eq!(kv.free_blocks(), 0);
+        // Nothing cached, two running: the caller must preempt.
+        assert!(reclaim_decode_headroom(&mut kv, &mut pc, &mut m, 2));
+        // ... but a lone sequence must never self-preempt.
+        assert!(!reclaim_decode_headroom(&mut kv, &mut pc, &mut m, 1));
+    }
+
+    #[test]
+    fn preempt_candidates_count_shared_blocks() {
+        let mut kv = kv(4, 8);
+        kv.alloc_seq(1, 8).unwrap();
+        let donor_blocks = kv.seq_blocks(1).unwrap();
+        // Sharer attaches the donor's first block.
+        kv.alloc_seq_with_prefix(2, 8, &donor_blocks[..1], 4).unwrap();
+        let cands = preempt_candidates(&kv, &[1, 2]);
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[0].reusable_blocks, 1, "donor shares one block");
+        assert_eq!(cands[1].reusable_blocks, 1, "sharer shares one block");
+    }
+}

@@ -1,48 +1,24 @@
 //! Request intake and sequence lifecycle.
 //!
-//! A `Request` enters through the router, becomes a `Sequence` with a
-//! state machine (Queued -> Prefilling -> Decoding -> Finished), and
-//! streams generated tokens back over a channel. The engine thread is
-//! the single owner of sequence state; the async server side only holds
-//! the sender/receiver endpoints.
+//! A [`crate::api::GenRequest`] enters through an engine's `submit`,
+//! becomes a `Sequence` with a state machine (Queued -> Decoding ->
+//! Finished), and streams [`GenEvent`]s back over a channel. The engine
+//! thread is the single owner of sequence state; the async server side
+//! only holds the sender/receiver endpoints.
+//!
+//! The router's queue is priority-aware: `peek_next`/`pop_next` select
+//! the highest-priority sequence, FIFO within a priority level, so both
+//! engines admit in the same order the scheduler's admission outlook
+//! was computed for.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::kvcache::SeqId;
+use crate::api::{FinishReason, GenEvent, GenRequest, Prompt, RequestId, SubmissionHandle, Usage};
+use crate::error::{Error, Result};
 use crate::sampling::SamplingParams;
-
-/// Why a sequence stopped.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum FinishReason {
-    Eos,
-    MaxTokens,
-    /// KV capacity forced us to stop early.
-    Preempted,
-    Error,
-}
-
-/// Streamed events a client receives.
-#[derive(Debug, Clone)]
-pub enum TokenEvent {
-    Token(u32),
-    Finished {
-        reason: FinishReason,
-        /// Total generated tokens.
-        n_generated: usize,
-    },
-}
-
-/// An incoming generation request.
-#[derive(Debug)]
-pub struct Request {
-    pub prompt_tokens: Vec<u32>,
-    pub max_new_tokens: usize,
-    pub params: SamplingParams,
-    pub stream: mpsc::Sender<TokenEvent>,
-    pub arrived: Instant,
-}
+use crate::tokenizer::ByteTokenizer;
 
 /// Sequence lifecycle states.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,20 +31,64 @@ pub enum SeqState {
 /// Engine-side sequence record.
 #[derive(Debug)]
 pub struct Sequence {
-    pub id: SeqId,
+    pub id: RequestId,
+    pub tenant: String,
+    pub priority: i32,
     pub state: SeqState,
     pub prompt: Vec<u32>,
     pub generated: Vec<u32>,
     pub max_new_tokens: usize,
     pub params: SamplingParams,
-    pub stream: mpsc::Sender<TokenEvent>,
+    /// Stop sequences as token ids (no BOS); generation finishes with
+    /// `FinishReason::Stop` when `generated` ends with any of them.
+    pub stop: Vec<Vec<u32>>,
+    pub stream: mpsc::Sender<GenEvent>,
     pub arrived: Instant,
     pub first_token_at: Option<Instant>,
     /// Current context length (prompt + generated) stored in KV.
     pub kv_len: usize,
+    /// Prompt tokens attached from the prefix cache at admission.
+    pub cached_prompt_tokens: usize,
+    /// Whether the sequence was ever admitted (prefill ran). Cancelled
+    /// while queued => false, and its usage reports zero prefill work.
+    pub admitted: bool,
 }
 
 impl Sequence {
+    /// Build a queued sequence from a typed request (shared by both
+    /// engine implementations; `stop` is pre-encoded by the caller's
+    /// tokenizer and `max_new_tokens` pre-clamped to the engine cap).
+    pub fn queued(
+        id: RequestId,
+        req: &GenRequest,
+        prompt_tokens: Vec<u32>,
+        stop: Vec<Vec<u32>>,
+        max_new_tokens: usize,
+        stream: mpsc::Sender<GenEvent>,
+    ) -> Self {
+        Sequence {
+            id,
+            tenant: if req.tenant.is_empty() {
+                "default".to_string()
+            } else {
+                req.tenant.clone()
+            },
+            priority: req.priority,
+            state: SeqState::Queued,
+            prompt: prompt_tokens,
+            generated: Vec::new(),
+            max_new_tokens,
+            params: req.params,
+            stop,
+            stream,
+            arrived: Instant::now(),
+            first_token_at: None,
+            kv_len: 0,
+            cached_prompt_tokens: 0,
+            admitted: false,
+        }
+    }
+
     pub fn last_token(&self) -> u32 {
         *self
             .generated
@@ -80,17 +100,75 @@ impl Sequence {
         matches!(self.state, SeqState::Finished(_))
     }
 
-    /// Push a token to the client; ignore a hung-up receiver.
-    pub fn emit(&mut self, ev: TokenEvent) {
+    /// True when the generated tail matches any stop sequence.
+    pub fn hit_stop(&self) -> bool {
+        self.stop
+            .iter()
+            .any(|s| !s.is_empty() && self.generated.ends_with(s))
+    }
+
+    /// Per-request token accounting (reported on finish). Until the
+    /// sequence is admitted no prefill work has happened, so both
+    /// cached and prefilled counts stay zero; after admission they
+    /// partition `prompt_tokens`.
+    pub fn usage(&self) -> Usage {
+        Usage {
+            prompt_tokens: self.prompt.len(),
+            cached_prompt_tokens: self.cached_prompt_tokens,
+            prefill_tokens: if self.admitted {
+                self.prompt.len() - self.cached_prompt_tokens
+            } else {
+                0
+            },
+            generated_tokens: self.generated.len(),
+        }
+    }
+
+    /// Push an event to the client; ignore a hung-up receiver.
+    pub fn emit(&mut self, ev: GenEvent) {
         let _ = self.stream.send(ev);
     }
 }
 
-/// FIFO intake queue owned by the engine.
+/// Tokenize a request's prompt (shared submit front half; both engines
+/// run their own capacity checks on the result before enqueueing).
+pub fn encode_prompt(tokenizer: &ByteTokenizer, prompt: &Prompt) -> Result<Vec<u32>> {
+    let toks = match prompt {
+        Prompt::Text(t) => tokenizer.encode(t),
+        Prompt::Tokens(t) => t.clone(),
+    };
+    if toks.is_empty() {
+        return Err(Error::Request("empty prompt".into()));
+    }
+    Ok(toks)
+}
+
+/// Shared submit back half: validate the budget, encode stop sequences,
+/// clamp to the engine cap, and enqueue — identical for every engine so
+/// the sim twin cannot drift from the real one.
+pub fn enqueue_request(
+    router: &mut Router,
+    tokenizer: &ByteTokenizer,
+    req: &GenRequest,
+    prompt_tokens: Vec<u32>,
+    max_new_cap: usize,
+) -> Result<SubmissionHandle> {
+    if req.max_new_tokens == 0 {
+        return Err(Error::Request("max_new_tokens must be at least 1".into()));
+    }
+    let stop: Vec<Vec<u32>> = req.stop.iter().map(|s| tokenizer.encode_raw(s)).collect();
+    let (tx, rx) = mpsc::channel();
+    let id = router.allocate_id();
+    let max_new = req.max_new_tokens.min(max_new_cap);
+    router.enqueue(Sequence::queued(id, req, prompt_tokens, stop, max_new, tx));
+    Ok(SubmissionHandle { id, events: rx })
+}
+
+/// Priority-aware intake queue owned by the engine.
 #[derive(Debug, Default)]
 pub struct Router {
-    next_id: SeqId,
-    pub queue: VecDeque<Sequence>,
+    next_id: RequestId,
+    queue: VecDeque<Sequence>,
 }
 
 impl Router {
@@ -101,32 +179,49 @@ impl Router {
         }
     }
 
-    /// Convert a request into a queued sequence.
-    pub fn submit(&mut self, req: Request) -> SeqId {
+    /// Allocate the next request id (monotone).
+    pub fn allocate_id(&mut self) -> RequestId {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back(Sequence {
-            id,
-            state: SeqState::Queued,
-            prompt: req.prompt_tokens,
-            generated: Vec::new(),
-            max_new_tokens: req.max_new_tokens,
-            params: req.params,
-            stream: req.stream,
-            arrived: req.arrived,
-            first_token_at: None,
-            kv_len: 0,
-        });
         id
     }
 
-    pub fn pop_next(&mut self) -> Option<Sequence> {
-        self.queue.pop_front()
+    /// Add a queued sequence to the intake queue.
+    pub fn enqueue(&mut self, seq: Sequence) {
+        self.queue.push_back(seq);
     }
 
-    /// Requeue at the front (preemption).
+    /// Index of the sequence `pop_next` would take: highest priority,
+    /// earliest arrival within a level.
+    fn next_index(&self) -> Option<usize> {
+        let mut best: Option<(usize, i32)> = None;
+        for (i, s) in self.queue.iter().enumerate() {
+            if best.map(|(_, p)| s.priority > p).unwrap_or(true) {
+                best = Some((i, s.priority));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// The sequence the next prefill would admit (admission outlook must
+    /// peek the same sequence `pop_next` will return).
+    pub fn peek_next(&self) -> Option<&Sequence> {
+        self.next_index().and_then(|i| self.queue.get(i))
+    }
+
+    pub fn pop_next(&mut self) -> Option<Sequence> {
+        self.next_index().and_then(|i| self.queue.remove(i))
+    }
+
+    /// Requeue at the front (admission backoff under KV pressure).
     pub fn requeue_front(&mut self, seq: Sequence) {
         self.queue.push_front(seq);
+    }
+
+    /// Remove a queued sequence by id (cancellation before admission).
+    pub fn take(&mut self, id: RequestId) -> Option<Sequence> {
+        let idx = self.queue.iter().position(|s| s.id == id)?;
+        self.queue.remove(idx)
     }
 
     pub fn queued(&self) -> usize {
@@ -138,63 +233,128 @@ impl Router {
 mod tests {
     use super::*;
 
-    fn mk_request(prompt: Vec<u32>) -> (Request, mpsc::Receiver<TokenEvent>) {
+    fn mk_seq(
+        r: &mut Router,
+        prompt: Vec<u32>,
+        priority: i32,
+    ) -> (RequestId, mpsc::Receiver<GenEvent>) {
         let (tx, rx) = mpsc::channel();
-        (
-            Request {
-                prompt_tokens: prompt,
-                max_new_tokens: 4,
-                params: SamplingParams::default(),
-                stream: tx,
-                arrived: Instant::now(),
-            },
-            rx,
-        )
+        let req = GenRequest::tokens(prompt.clone()).priority(priority);
+        let id = r.allocate_id();
+        r.enqueue(Sequence::queued(id, &req, prompt, Vec::new(), 4, tx));
+        (id, rx)
     }
 
     #[test]
-    fn submit_assigns_monotone_ids() {
+    fn submit_assigns_monotone_ids_fifo_within_priority() {
         let mut r = Router::new();
-        let (q1, _rx1) = mk_request(vec![1]);
-        let (q2, _rx2) = mk_request(vec![2]);
-        let a = r.submit(q1);
-        let b = r.submit(q2);
+        let (a, _rx1) = mk_seq(&mut r, vec![1], 0);
+        let (b, _rx2) = mk_seq(&mut r, vec![2], 0);
         assert!(b > a);
         assert_eq!(r.queued(), 2);
+        assert_eq!(r.peek_next().unwrap().id, a);
         assert_eq!(r.pop_next().unwrap().id, a, "FIFO");
     }
 
     #[test]
-    fn sequence_last_token_logic() {
+    fn higher_priority_pops_first() {
         let mut r = Router::new();
-        let (q, _rx) = mk_request(vec![5, 6, 7]);
-        r.submit(q);
+        let (low, _r1) = mk_seq(&mut r, vec![1], 0);
+        let (high, _r2) = mk_seq(&mut r, vec![2], 5);
+        let (low2, _r3) = mk_seq(&mut r, vec![3], 0);
+        assert_eq!(r.peek_next().unwrap().id, high);
+        assert_eq!(r.pop_next().unwrap().id, high);
+        assert_eq!(r.pop_next().unwrap().id, low, "FIFO among equals");
+        assert_eq!(r.pop_next().unwrap().id, low2);
+        assert!(r.pop_next().is_none());
+    }
+
+    #[test]
+    fn take_removes_by_id() {
+        let mut r = Router::new();
+        let (a, _r1) = mk_seq(&mut r, vec![1], 0);
+        let (b, _r2) = mk_seq(&mut r, vec![2], 0);
+        assert_eq!(r.take(b).unwrap().id, b);
+        assert!(r.take(b).is_none(), "already taken");
+        assert_eq!(r.queued(), 1);
+        assert_eq!(r.pop_next().unwrap().id, a);
+    }
+
+    #[test]
+    fn sequence_last_token_and_stop_logic() {
+        let mut r = Router::new();
+        let (_, _rx) = mk_seq(&mut r, vec![5, 6, 7], 0);
         let mut s = r.pop_next().unwrap();
         assert_eq!(s.last_token(), 7);
         s.generated.push(42);
         assert_eq!(s.last_token(), 42);
+        s.stop = vec![vec![41, 42], vec![9]];
+        assert!(!s.hit_stop());
+        s.generated.push(9);
+        assert!(s.hit_stop(), "single-token stop must match the tail");
+        s.generated.truncate(1);
+        s.generated.insert(0, 41);
+        assert!(s.hit_stop(), "multi-token stop must match the tail");
+    }
+
+    #[test]
+    fn usage_accounts_cached_and_generated() {
+        let mut r = Router::new();
+        let (_, _rx) = mk_seq(&mut r, vec![1, 2, 3, 4], 0);
+        let mut s = r.pop_next().unwrap();
+        // Never admitted: no prefill work happened, whatever the cache
+        // might have matched.
+        assert_eq!(s.usage().prefill_tokens, 0);
+        s.admitted = true;
+        s.cached_prompt_tokens = 3;
+        s.generated.push(8);
+        let u = s.usage();
+        assert_eq!(u.prompt_tokens, 4);
+        assert_eq!(u.cached_prompt_tokens, 3);
+        assert_eq!(u.prefill_tokens, 1);
+        assert_eq!(u.generated_tokens, 1);
     }
 
     #[test]
     fn emit_survives_dropped_receiver() {
         let mut r = Router::new();
-        let (q, rx) = mk_request(vec![1]);
-        r.submit(q);
+        let (_, rx) = mk_seq(&mut r, vec![1], 0);
         let mut s = r.pop_next().unwrap();
         drop(rx);
-        s.emit(TokenEvent::Token(9)); // must not panic
+        s.emit(GenEvent::Token(9)); // must not panic
+    }
+
+    #[test]
+    fn enqueue_request_encodes_stops_and_clamps() {
+        let mut r = Router::new();
+        let tok = ByteTokenizer::new(512);
+        let req = GenRequest::text("hi")
+            .stop(vec!["ab".into()])
+            .max_new_tokens(100);
+        let prompt = encode_prompt(&tok, &req.prompt).unwrap();
+        assert_eq!(prompt[0], crate::tokenizer::BOS);
+        let h = enqueue_request(&mut r, &tok, &req, prompt, 8).unwrap();
+        assert_eq!(r.queued(), 1);
+        let s = r.pop_next().unwrap();
+        assert_eq!(s.id, h.id);
+        assert_eq!(s.max_new_tokens, 8, "clamped to the engine cap");
+        assert_eq!(s.stop, vec![vec![b'a' as u32, b'b' as u32]]);
+        // Invalid submissions are rejected before anything is queued.
+        assert!(encode_prompt(&tok, &Prompt::Tokens(vec![])).is_err());
+        let zero = GenRequest::text("x").max_new_tokens(0);
+        let p = encode_prompt(&tok, &zero.prompt).unwrap();
+        assert!(enqueue_request(&mut r, &tok, &zero, p, 8).is_err());
+        assert_eq!(r.queued(), 0);
     }
 
     #[test]
     fn requeue_front_puts_sequence_first() {
         let mut r = Router::new();
-        let (q1, _r1) = mk_request(vec![1]);
-        let (q2, _r2) = mk_request(vec![2]);
-        r.submit(q1);
-        r.submit(q2);
+        let (a, _r1) = mk_seq(&mut r, vec![1], 0);
+        let (_b, _r2) = mk_seq(&mut r, vec![2], 0);
         let first = r.pop_next().unwrap();
-        let first_id = first.id;
+        assert_eq!(first.id, a);
         r.requeue_front(first);
-        assert_eq!(r.pop_next().unwrap().id, first_id);
+        assert_eq!(r.pop_next().unwrap().id, a);
     }
 }

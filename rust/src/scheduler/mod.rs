@@ -12,6 +12,11 @@
 //! cached can be admitted under KV pressure that would stall a cold
 //! request. Preemption prefers victims whose blocks stay reusable in
 //! the prefix cache — evicting them loses the least recomputation work.
+//!
+//! This module holds the *pure* decision functions ([`decide`],
+//! [`preemption_victim`]); the stateful glue that computes their inputs
+//! from the KV/prefix caches — admission, eviction, preemption census —
+//! is shared by both engine implementations via [`crate::policy`].
 
 use crate::kvcache::SeqId;
 

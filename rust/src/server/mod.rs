@@ -1,95 +1,260 @@
 //! JSON-lines TCP serving front-end (std::net + threads; offline build).
 //!
-//! The engine is single-owner and not Send, so it runs on a dedicated
-//! OS thread; connection handlers forward requests over an mpsc channel
-//! and stream `TokenEvent`s back per request.
+//! Engines are single-owner (the PJRT one is not even Send), so the
+//! [`crate::api::InferenceEngine`] runs on a dedicated OS thread;
+//! connection handlers forward [`EngineJob`]s over an mpsc channel and
+//! stream id-tagged [`GenEvent`]s back per request. [`spawn_engine`]
+//! backs the loop with the real [`crate::engine::Engine`];
+//! [`spawn_sim_engine`] backs it with the deterministic
+//! [`crate::simengine::SimEngine`] twin (loopback tests, artifact-free
+//! serving demos) — the loop itself is generic and identical for both.
 //!
-//! Protocol (one JSON object per line):
-//!   -> {"prompt": "...", "max_new_tokens": 32, "temperature": 0.0}
-//!   <- {"token": 104, "text": "h"}            (per generated token)
-//!   <- {"done": true, "reason": "eos", "n": 12}
+//! The full wire protocol — request/response/stats/cancel schemas,
+//! defaults, and error shapes — is documented in `docs/PROTOCOL.md`.
+//! In short (one JSON object per line):
 //!
-//! Stats (engine + prefix-cache counters, one JSON object back):
+//!   -> {"id": "a", "prompt": "...", "max_new_tokens": 32,
+//!       "tenant": "acme", "stop": ["\n"], "temperature": 0.0}
+//!   <- {"id": "a", "token": 104, "text": "h"}     (per generated token)
+//!   <- {"id": "a", "done": true, "reason": "eos", "n": 12,
+//!       "usage": {"prompt_tokens": 5, "cached_tokens": 0,
+//!                 "prefill_tokens": 5, "generated_tokens": 12}}
+//!
+//!   -> {"cancel": "a"}                 (in-flight generation above)
+//!   <- {"ok": true, "id": "a"}         (ack; the stream ends with a
+//!                                       done line, reason "cancelled")
+//!
 //!   -> {"stats": true}
-//!   <- {"tokens_generated": 512, "prefix_hit_rate": 0.7, ...}
+//!   <- {"tokens_generated": 512, "prefix_hit_rate": 0.7,
+//!       "tenants": {"acme": {...}}, ...}
+//!
+//! Malformed input never kills a connection: the server answers
+//! `{"error": "...", "code": "..."}` and keeps reading.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
+use crate::api::{
+    FinishReason, GenEvent, GenRequest, InferenceEngine, RequestId, SubmissionHandle, Usage,
+};
 use crate::config::EngineConfig;
 use crate::engine::Engine;
 use crate::error::{Error, Result};
-use crate::router::{FinishReason, TokenEvent};
 use crate::runtime::Runtime;
 use crate::sampling::SamplingParams;
+use crate::simengine::{SimEngine, SimSpec};
 use crate::tokenizer::ByteTokenizer;
 use crate::util::json::{parse, Json};
 use crate::{log_info, log_warn};
 
-/// A parsed wire request.
+/// A parsed and validated wire request (docs/PROTOCOL.md).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireRequest {
+    /// Client correlation id; echoed on every response line for this
+    /// request and usable with `{"cancel": id}`.
+    pub id: Option<String>,
     pub prompt: String,
+    pub tenant: String,
+    pub priority: i32,
     pub max_new_tokens: usize,
     pub temperature: f32,
     pub top_k: usize,
+    pub stop: Vec<String>,
 }
 
-impl WireRequest {
-    pub fn from_json_line(line: &str) -> Result<Self> {
-        let j = parse(line)?;
-        Ok(WireRequest {
-            prompt: j.req_str("prompt")?,
-            max_new_tokens: j
-                .get("max_new_tokens")
-                .and_then(Json::as_usize)
-                .unwrap_or(32),
-            temperature: j.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32,
-            top_k: j.get("top_k").and_then(Json::as_usize).unwrap_or(0),
-        })
+/// Render a JSON number as a wire id string (integers lose the ".0").
+fn num_id(n: f64) -> String {
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
     }
 }
 
-/// Wire responses.
-pub fn token_response(token: u32, text: &str) -> String {
+fn bad(field: &str, want: &str) -> Error {
+    Error::Request(format!("field '{field}' must be {want}"))
+}
+
+impl WireRequest {
+    /// Strict parse: absent fields take documented defaults, but a
+    /// present field with the wrong type or an invalid value (non-finite
+    /// temperature, fractional counts, empty stop entries) is an error —
+    /// never a silent default.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let prompt = j.req_str("prompt")?;
+        let id = match j.get("id") {
+            None => None,
+            Some(Json::Str(s)) => Some(s.clone()),
+            Some(Json::Num(n)) => Some(num_id(*n)),
+            Some(_) => return Err(bad("id", "a string or number")),
+        };
+        let tenant = match j.get("tenant") {
+            None => String::new(),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| bad("tenant", "a string"))?
+                .to_string(),
+        };
+        let priority = match j.get("priority") {
+            None => 0,
+            Some(v) => {
+                let p = v.as_f64().ok_or_else(|| bad("priority", "an integer"))?;
+                if !p.is_finite() || p.fract() != 0.0 {
+                    return Err(bad("priority", "an integer"));
+                }
+                p as i32
+            }
+        };
+        let max_new_tokens = match j.get("max_new_tokens") {
+            None => 32,
+            Some(v) => non_negative_int(v)
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| bad("max_new_tokens", "a positive integer"))?,
+        };
+        let temperature = match j.get("temperature") {
+            None => 0.0,
+            Some(v) => {
+                let t = v.as_f64().ok_or_else(|| bad("temperature", "a finite number"))?;
+                if !t.is_finite() {
+                    return Err(bad("temperature", "a finite number"));
+                }
+                t as f32
+            }
+        };
+        let top_k = match j.get("top_k") {
+            None => 0,
+            Some(v) => non_negative_int(v).ok_or_else(|| bad("top_k", "a non-negative integer"))?,
+        };
+        let stop = match j.get("stop") {
+            None => Vec::new(),
+            Some(v) => {
+                let arr = v.as_arr().ok_or_else(|| bad("stop", "an array of strings"))?;
+                let mut out = Vec::with_capacity(arr.len());
+                for s in arr {
+                    let s = s.as_str().ok_or_else(|| bad("stop", "an array of strings"))?;
+                    if s.is_empty() {
+                        return Err(bad("stop", "an array of non-empty strings"));
+                    }
+                    out.push(s.to_string());
+                }
+                out
+            }
+        };
+        Ok(WireRequest {
+            id,
+            prompt,
+            tenant,
+            priority,
+            max_new_tokens,
+            temperature,
+            top_k,
+            stop,
+        })
+    }
+
+    /// Convenience for tests and single-line parsing.
+    pub fn from_json_line(line: &str) -> Result<Self> {
+        Self::from_json(&parse(line)?)
+    }
+
+    /// Lower to the typed engine request, clamping the token budget to
+    /// the engine's configured cap.
+    pub fn into_gen_request(self, max_new_cap: usize) -> GenRequest {
+        let mut req = GenRequest::text(self.prompt)
+            .tenant(self.tenant)
+            .priority(self.priority)
+            .stop(self.stop)
+            .params(SamplingParams {
+                temperature: self.temperature,
+                top_k: self.top_k,
+            })
+            .max_new_tokens(self.max_new_tokens.min(max_new_cap));
+        if let Some(id) = self.id {
+            req = req.client_id(id);
+        }
+        req
+    }
+}
+
+fn non_negative_int(v: &Json) -> Option<usize> {
+    let n = v.as_f64()?;
+    if n.is_finite() && n >= 0.0 && n.fract() == 0.0 {
+        Some(n as usize)
+    } else {
+        None
+    }
+}
+
+/// Wire responses (docs/PROTOCOL.md).
+pub fn token_response(id: &str, token: u32, text: &str) -> String {
     Json::obj(vec![
+        ("id", Json::Str(id.to_string())),
         ("token", Json::Num(token as f64)),
         ("text", Json::Str(text.to_string())),
     ])
     .to_string()
 }
 
-pub fn done_response(reason: FinishReason, n: usize) -> String {
-    let reason = match reason {
-        FinishReason::Eos => "eos",
-        FinishReason::MaxTokens => "max_tokens",
-        FinishReason::Preempted => "preempted",
-        FinishReason::Error => "error",
-    };
+pub fn done_response(id: &str, reason: FinishReason, usage: &Usage) -> String {
     Json::obj(vec![
+        ("id", Json::Str(id.to_string())),
         ("done", Json::Bool(true)),
-        ("reason", Json::Str(reason.to_string())),
-        ("n", Json::Num(n as f64)),
+        ("reason", Json::Str(reason.as_str().to_string())),
+        ("n", Json::Num(usage.generated_tokens as f64)),
+        (
+            "usage",
+            Json::obj(vec![
+                ("prompt_tokens", Json::Num(usage.prompt_tokens as f64)),
+                (
+                    "cached_tokens",
+                    Json::Num(usage.cached_prompt_tokens as f64),
+                ),
+                ("prefill_tokens", Json::Num(usage.prefill_tokens as f64)),
+                (
+                    "generated_tokens",
+                    Json::Num(usage.generated_tokens as f64),
+                ),
+            ]),
+        ),
     ])
     .to_string()
 }
 
-pub fn error_response(msg: &str) -> String {
-    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+pub fn error_response(code: &str, msg: &str) -> String {
+    Json::obj(vec![
+        ("error", Json::Str(msg.to_string())),
+        ("code", Json::Str(code.to_string())),
+    ])
+    .to_string()
+}
+
+pub fn cancel_ack(id: &str) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::Str(id.to_string())),
+    ])
+    .to_string()
 }
 
 /// A request as it travels to the engine thread.
 pub enum EngineJob {
-    Generate {
-        prompt: String,
-        max_new_tokens: usize,
-        params: SamplingParams,
-        reply: mpsc::Sender<TokenEvent>,
+    Submit {
+        req: GenRequest,
+        /// Submission outcome: the engine's handle (id + event stream,
+        /// consumed directly by the connection's pump thread — no
+        /// per-token re-send), or the rejection message.
+        submitted: mpsc::Sender<std::result::Result<SubmissionHandle, String>>,
+    },
+    Cancel {
+        id: RequestId,
     },
     /// Metrics snapshot (serialized JSON) — the server stats path.
-    Stats { reply: mpsc::Sender<String> },
+    Stats {
+        reply: mpsc::Sender<String>,
+    },
 }
 
 /// Handle to the engine thread.
@@ -98,18 +263,19 @@ pub struct EngineHandle {
     pub join: thread::JoinHandle<()>,
 }
 
-/// Spawn the engine loop on its own thread. The engine (PJRT handles are
-/// not Send) is constructed *inside* the thread; startup errors are
-/// reported back synchronously before this function returns.
-pub fn spawn_engine(artifacts_dir: &str, cfg: EngineConfig) -> Result<EngineHandle> {
+/// Spawn any engine behind the serving loop on a dedicated thread. The
+/// engine is constructed *inside* the thread (PJRT handles are not
+/// Send); startup errors are reported back synchronously before this
+/// function returns.
+fn spawn_engine_thread<E, F>(build: F) -> Result<EngineHandle>
+where
+    E: InferenceEngine,
+    F: FnOnce() -> Result<E> + Send + 'static,
+{
     let (tx, rx) = mpsc::channel::<EngineJob>();
     let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
-    let dir = artifacts_dir.to_string();
     let join = thread::spawn(move || {
-        let mut engine = match Runtime::load(&dir)
-            .and_then(|rt| Engine::new(rt, cfg))
-            .and_then(|mut e| e.warmup().map(|_| e))
-        {
+        let mut engine = match build() {
             Ok(e) => {
                 let _ = ready_tx.send(Ok(()));
                 e
@@ -128,13 +294,32 @@ pub fn spawn_engine(artifacts_dir: &str, cfg: EngineConfig) -> Result<EngineHand
     }
 }
 
-/// The engine thread: drain incoming jobs, then step until idle.
-fn engine_loop(engine: &mut Engine, rx: mpsc::Receiver<EngineJob>) {
-    let mut streams: Vec<(mpsc::Receiver<TokenEvent>, mpsc::Sender<TokenEvent>)> = Vec::new();
+/// Spawn the real PJRT engine loop (loads artifacts, warms up buckets).
+pub fn spawn_engine(artifacts_dir: &str, cfg: EngineConfig) -> Result<EngineHandle> {
+    let dir = artifacts_dir.to_string();
+    spawn_engine_thread(move || {
+        Runtime::load(&dir)
+            .and_then(|rt| Engine::new(rt, cfg))
+            .and_then(|mut e| e.warmup().map(|_| e))
+    })
+}
+
+/// Spawn the deterministic sim engine behind the same serving loop —
+/// the loopback-test and artifact-free demo path.
+pub fn spawn_sim_engine(cfg: EngineConfig, spec: SimSpec) -> Result<EngineHandle> {
+    spawn_engine_thread(move || SimEngine::new(cfg, spec))
+}
+
+/// The engine thread: drain incoming jobs, then step until idle. Works
+/// for any [`InferenceEngine`] — this is the piece the sim twin shares
+/// with production serving. Event streams flow straight from the
+/// engine's [`SubmissionHandle`] to the connection's pump thread; the
+/// loop itself only schedules.
+fn engine_loop<E: InferenceEngine>(engine: &mut E, rx: mpsc::Receiver<EngineJob>) {
     loop {
         // Accept new jobs (block only when idle).
         loop {
-            let job = if engine.is_idle() && streams.is_empty() {
+            let job = if engine.is_idle() {
                 match rx.recv() {
                     Ok(j) => j,
                     Err(_) => return,
@@ -144,7 +329,7 @@ fn engine_loop(engine: &mut Engine, rx: mpsc::Receiver<EngineJob>) {
                     Ok(j) => j,
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
-                        if engine.is_idle() && streams.is_empty() {
+                        if engine.is_idle() {
                             return;
                         }
                         break;
@@ -153,25 +338,15 @@ fn engine_loop(engine: &mut Engine, rx: mpsc::Receiver<EngineJob>) {
             };
             match job {
                 EngineJob::Stats { reply } => {
-                    let _ = reply.send(engine.metrics.to_json().to_string());
+                    let _ = reply.send(engine.metrics().to_json().to_string());
                 }
-                EngineJob::Generate {
-                    prompt,
-                    max_new_tokens,
-                    params,
-                    reply,
-                } => {
-                    let toks = engine.tokenizer.encode(&prompt);
-                    match engine.submit_tokens(toks, max_new_tokens, params) {
-                        Ok((_, seq_rx)) => streams.push((seq_rx, reply)),
-                        Err(e) => {
-                            let _ = reply.send(TokenEvent::Finished {
-                                reason: FinishReason::Error,
-                                n_generated: 0,
-                            });
-                            log_warn!("submit failed: {e}");
-                        }
+                EngineJob::Cancel { id } => {
+                    if let Err(e) = engine.cancel(id) {
+                        log_warn!("cancel {id}: {e}");
                     }
+                }
+                EngineJob::Submit { req, submitted } => {
+                    let _ = submitted.send(engine.submit(req).map_err(|e| e.to_string()));
                 }
             }
         }
@@ -180,32 +355,34 @@ fn engine_loop(engine: &mut Engine, rx: mpsc::Receiver<EngineJob>) {
                 log_warn!("engine step failed: {e}");
             }
         }
-        // Pump generated tokens out to the per-request reply channels.
-        streams.retain(|(seq_rx, reply)| loop {
-            match seq_rx.try_recv() {
-                Ok(ev) => {
-                    let done = matches!(ev, TokenEvent::Finished { .. });
-                    if reply.send(ev).is_err() || done {
-                        return false;
-                    }
-                }
-                Err(mpsc::TryRecvError::Empty) => return true,
-                Err(mpsc::TryRecvError::Disconnected) => return false,
-            }
-        });
     }
 }
 
-/// Run the TCP server (blocks forever).
+/// Run the TCP server on the real engine (blocks forever).
 pub fn serve(addr: &str, artifacts_dir: &str, cfg: EngineConfig) -> Result<()> {
     let vocab = {
         let manifest = crate::runtime::Manifest::load(std::path::Path::new(artifacts_dir))?;
         manifest.model.vocab_size
     };
+    let max_new_cap = cfg.max_new_tokens;
     let handle = spawn_engine(artifacts_dir, cfg)?;
     let listener =
         TcpListener::bind(addr).map_err(|e| Error::Request(format!("bind {addr}: {e}")))?;
-    log_info!("serving on {addr}");
+    serve_on(listener, handle, vocab, max_new_cap)
+}
+
+/// Accept loop over an already-bound listener and a running engine
+/// thread (any backend). Tests bind port 0 and drive a sim-backed
+/// engine through the exact production plumbing.
+pub fn serve_on(
+    listener: TcpListener,
+    handle: EngineHandle,
+    vocab: usize,
+    max_new_cap: usize,
+) -> Result<()> {
+    if let Ok(addr) = listener.local_addr() {
+        log_info!("serving on {addr}");
+    }
     for sock in listener.incoming() {
         let sock = match sock {
             Ok(s) => s,
@@ -216,7 +393,7 @@ pub fn serve(addr: &str, artifacts_dir: &str, cfg: EngineConfig) -> Result<()> {
         };
         let tx = handle.tx.clone();
         thread::spawn(move || {
-            if let Err(e) = handle_conn(sock, tx, vocab) {
+            if let Err(e) = handle_conn(sock, tx, vocab, max_new_cap) {
                 log_warn!("conn: {e}");
             }
         });
@@ -230,115 +407,247 @@ pub fn is_stats_request(j: &Json) -> bool {
     j.get("stats").and_then(Json::as_bool) == Some(true) && j.get("prompt").is_none()
 }
 
-fn handle_conn(sock: TcpStream, engine_tx: mpsc::Sender<EngineJob>, vocab: usize) -> Result<()> {
-    let mut w = sock.try_clone().map_err(Error::Io)?;
+/// `{"cancel": id}` with no prompt (same hijack rule as stats).
+pub fn cancel_request_id(j: &Json) -> Option<String> {
+    if j.get("prompt").is_some() {
+        return None;
+    }
+    match j.get("cancel") {
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(Json::Num(n)) => Some(num_id(*n)),
+        _ => None,
+    }
+}
+
+type SharedWriter = Arc<Mutex<TcpStream>>;
+/// Wire id -> engine id for one connection's in-flight requests; shared
+/// with the per-request pump threads, which prune their entry when the
+/// done line goes out (so a finished id cancels as `unknown_id`, and
+/// the map cannot grow without bound on long-lived connections).
+type InflightIds = Arc<Mutex<HashMap<String, RequestId>>>;
+
+fn write_line(w: &SharedWriter, line: &str) -> Result<()> {
+    let mut g = w.lock().unwrap();
+    writeln!(g, "{line}").map_err(Error::Io)
+}
+
+/// Forward one request's events to the socket, tagged with its wire id.
+fn pump_events(
+    wire_id: String,
+    events: mpsc::Receiver<GenEvent>,
+    w: SharedWriter,
+    ids: InflightIds,
+    tokenizer: ByteTokenizer,
+) {
+    while let Ok(ev) = events.recv() {
+        let line = match ev {
+            GenEvent::Token(t) => token_response(&wire_id, t, &tokenizer.decode(&[t])),
+            GenEvent::Finished { reason, usage } => {
+                // Write the done line and prune the id while holding the
+                // map lock, so a client reusing the id is either
+                // rejected as duplicate (strictly before this) or its
+                // stream starts strictly after our done line — never
+                // interleaved under one id. (Lock order everywhere is
+                // ids, then writer.)
+                let line = done_response(&wire_id, reason, &usage);
+                let mut in_flight = ids.lock().unwrap();
+                let _ = write_line(&w, &line);
+                in_flight.remove(&wire_id);
+                return;
+            }
+        };
+        if write_line(&w, &line).is_err() {
+            return; // client hung up; the engine stream drops with us
+        }
+    }
+    ids.lock().unwrap().remove(&wire_id);
+}
+
+fn handle_conn(
+    sock: TcpStream,
+    engine_tx: mpsc::Sender<EngineJob>,
+    vocab: usize,
+    max_new_cap: usize,
+) -> Result<()> {
+    let w: SharedWriter = Arc::new(Mutex::new(sock.try_clone().map_err(Error::Io)?));
     let r = BufReader::new(sock);
-    let tokenizer = ByteTokenizer::new(vocab);
+    let ids: InflightIds = Arc::new(Mutex::new(HashMap::new()));
+    let mut next_local = 0u64;
     for line in r.lines() {
         let line = line.map_err(Error::Io)?;
         if line.trim().is_empty() {
             continue;
         }
-        // Stats request: one JSON object back, no generation.
-        if let Ok(j) = parse(&line) {
-            if is_stats_request(&j) {
-                let (reply_tx, reply_rx) = mpsc::channel::<String>();
-                engine_tx
-                    .send(EngineJob::Stats { reply: reply_tx })
-                    .map_err(|_| Error::Request("engine gone".into()))?;
-                match reply_rx.recv() {
-                    Ok(stats) => writeln!(w, "{stats}").map_err(Error::Io)?,
-                    Err(_) => writeln!(w, "{}", error_response("engine gone"))
-                        .map_err(Error::Io)?,
-                }
-                continue;
-            }
-        }
-        let req = match WireRequest::from_json_line(&line) {
-            Ok(r) => r,
+        let j = match parse(&line) {
+            Ok(j) => j,
             Err(e) => {
-                writeln!(w, "{}", error_response(&format!("bad request: {e}")))
-                    .map_err(Error::Io)?;
+                write_line(&w, &error_response("bad_json", &e.to_string()))?;
                 continue;
             }
         };
-        let (reply_tx, reply_rx) = mpsc::channel::<TokenEvent>();
-        engine_tx
-            .send(EngineJob::Generate {
-                prompt: req.prompt,
-                max_new_tokens: req.max_new_tokens,
-                params: SamplingParams {
-                    temperature: req.temperature,
-                    top_k: req.top_k,
-                },
-                reply: reply_tx,
-            })
-            .map_err(|_| Error::Request("engine gone".into()))?;
-        while let Ok(ev) = reply_rx.recv() {
-            match ev {
-                TokenEvent::Token(t) => {
-                    writeln!(w, "{}", token_response(t, &tokenizer.decode(&[t])))
-                        .map_err(Error::Io)?;
+        // Stats request: one JSON object back, no generation.
+        if is_stats_request(&j) {
+            let (reply_tx, reply_rx) = mpsc::channel::<String>();
+            if engine_tx.send(EngineJob::Stats { reply: reply_tx }).is_err() {
+                return engine_gone(&w);
+            }
+            match reply_rx.recv() {
+                Ok(stats) => write_line(&w, &stats)?,
+                Err(_) => return engine_gone(&w),
+            }
+            continue;
+        }
+        // Cancel request: resolve the wire id submitted on this
+        // connection and ack; the generation stream itself ends with a
+        // done line, reason "cancelled".
+        if let Some(wire_id) = cancel_request_id(&j) {
+            let rid = ids.lock().unwrap().get(&wire_id).copied();
+            match rid {
+                Some(rid) => {
+                    if engine_tx.send(EngineJob::Cancel { id: rid }).is_err() {
+                        return engine_gone(&w);
+                    }
+                    write_line(&w, &cancel_ack(&wire_id))?;
                 }
-                TokenEvent::Finished { reason, n_generated } => {
-                    writeln!(w, "{}", done_response(reason, n_generated)).map_err(Error::Io)?;
-                    break;
+                None => {
+                    let msg = format!("no in-flight request with id {wire_id:?} here");
+                    write_line(&w, &error_response("unknown_id", &msg))?;
                 }
             }
+            continue;
+        }
+        let req = match WireRequest::from_json(&j) {
+            Ok(r) => r,
+            Err(e) => {
+                write_line(&w, &error_response("bad_request", &e.to_string()))?;
+                continue;
+            }
+        };
+        let gen = req.into_gen_request(max_new_cap);
+        let wire_id = match gen.client_id.clone() {
+            Some(id) => {
+                if ids.lock().unwrap().contains_key(&id) {
+                    let msg = format!("id {id:?} is already in flight on this connection");
+                    write_line(&w, &error_response("duplicate_id", &msg))?;
+                    continue;
+                }
+                id
+            }
+            None => loop {
+                next_local += 1;
+                let candidate = format!("r{next_local}");
+                if !ids.lock().unwrap().contains_key(&candidate) {
+                    break candidate;
+                }
+            },
+        };
+        let (sub_tx, sub_rx) = mpsc::channel();
+        let job = EngineJob::Submit {
+            req: gen,
+            submitted: sub_tx,
+        };
+        if engine_tx.send(job).is_err() {
+            return engine_gone(&w);
+        }
+        match sub_rx.recv() {
+            Ok(Ok(handle)) => {
+                ids.lock().unwrap().insert(wire_id.clone(), handle.id);
+                let w2 = Arc::clone(&w);
+                let ids2 = Arc::clone(&ids);
+                let tokenizer = ByteTokenizer::new(vocab);
+                thread::spawn(move || pump_events(wire_id, handle.events, w2, ids2, tokenizer));
+            }
+            Ok(Err(msg)) => {
+                write_line(&w, &error_response("rejected", &msg))?;
+            }
+            Err(_) => return engine_gone(&w),
         }
     }
     Ok(())
 }
 
-/// Minimal blocking client for tests/examples.
+/// Tell the client the engine thread is gone, then end the connection
+/// (there is nothing left to serve).
+fn engine_gone(w: &SharedWriter) -> Result<()> {
+    write_line(w, &error_response("engine_gone", "engine thread exited"))
+}
+
+/// Minimal blocking client for tests/examples. One reader is held for
+/// the whole connection, so buffered lines are never lost between
+/// calls.
 pub struct Client {
-    sock: TcpStream,
+    w: TcpStream,
+    r: BufReader<TcpStream>,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Self> {
-        Ok(Client {
-            sock: TcpStream::connect(addr).map_err(Error::Io)?,
-        })
+        let sock = TcpStream::connect(addr).map_err(Error::Io)?;
+        let r = BufReader::new(sock.try_clone().map_err(Error::Io)?);
+        Ok(Client { w: sock, r })
+    }
+
+    /// Send one raw JSON line.
+    pub fn send(&mut self, j: &Json) -> Result<()> {
+        writeln!(self.w, "{}", j.to_string()).map_err(Error::Io)
+    }
+
+    /// Send one raw line verbatim (exercises the error path).
+    pub fn send_raw(&mut self, line: &str) -> Result<()> {
+        writeln!(self.w, "{line}").map_err(Error::Io)
+    }
+
+    /// Bound every subsequent `recv` (tests use this to fail loudly
+    /// instead of hanging when an expected line never arrives).
+    pub fn set_read_timeout(&mut self, d: Option<std::time::Duration>) -> Result<()> {
+        self.w.set_read_timeout(d).map_err(Error::Io)
+    }
+
+    /// Read the next non-empty response line as JSON.
+    pub fn recv(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self.r.read_line(&mut line).map_err(Error::Io)?;
+            if n == 0 {
+                return Err(Error::Request("connection closed".into()));
+            }
+            if !line.trim().is_empty() {
+                return parse(line.trim());
+            }
+        }
     }
 
     /// Send one request and collect the full generation.
     pub fn generate(&mut self, prompt: &str, max_new_tokens: usize) -> Result<String> {
-        let req = Json::obj(vec![
+        self.send(&Json::obj(vec![
             ("prompt", Json::Str(prompt.to_string())),
             ("max_new_tokens", Json::Num(max_new_tokens as f64)),
-        ]);
-        writeln!(self.sock, "{}", req.to_string()).map_err(Error::Io)?;
+        ]))?;
         let mut out = String::new();
-        let reader = BufReader::new(self.sock.try_clone().map_err(Error::Io)?);
-        for line in reader.lines() {
-            let line = line.map_err(Error::Io)?;
-            let j = parse(&line)?;
+        loop {
+            let j = self.recv()?;
+            if j.get("error").is_some() {
+                return Err(Error::Request(j.req_str("error")?));
+            }
             if j.get("done").is_some() {
-                break;
+                return Ok(out);
             }
             if let Ok(text) = j.req_str("text") {
                 out.push_str(&text);
             }
-            if j.get("error").is_some() {
-                return Err(Error::Request(j.req_str("error")?));
-            }
         }
-        Ok(out)
+    }
+
+    /// Request cancellation of an in-flight wire id.
+    pub fn cancel(&mut self, id: &str) -> Result<()> {
+        self.send(&Json::obj(vec![("cancel", Json::Str(id.to_string()))]))
     }
 
     /// Fetch the engine's metrics snapshot (raw JSON line).
     pub fn stats(&mut self) -> Result<String> {
-        writeln!(
-            self.sock,
-            "{}",
-            Json::obj(vec![("stats", Json::Bool(true))]).to_string()
-        )
-        .map_err(Error::Io)?;
-        let mut reader = BufReader::new(self.sock.try_clone().map_err(Error::Io)?);
-        let mut line = String::new();
-        reader.read_line(&mut line).map_err(Error::Io)?;
-        Ok(line.trim().to_string())
+        self.send(&Json::obj(vec![("stats", Json::Bool(true))]))?;
+        Ok(self.recv()?.to_string())
     }
 }
 
@@ -349,20 +658,65 @@ mod tests {
     #[test]
     fn wire_request_defaults() {
         let r = WireRequest::from_json_line(r#"{"prompt":"hi"}"#).unwrap();
+        assert_eq!(r.id, None);
+        assert_eq!(r.tenant, "");
+        assert_eq!(r.priority, 0);
         assert_eq!(r.max_new_tokens, 32);
         assert_eq!(r.temperature, 0.0);
         assert_eq!(r.top_k, 0);
+        assert!(r.stop.is_empty());
     }
 
     #[test]
     fn wire_request_full() {
         let r = WireRequest::from_json_line(
-            r#"{"prompt":"p","max_new_tokens":8,"temperature":0.7,"top_k":40}"#,
+            r#"{"id":7,"prompt":"p","tenant":"acme","priority":2,"max_new_tokens":8,
+               "temperature":0.7,"top_k":40,"stop":["\n\n","END"]}"#,
         )
         .unwrap();
+        assert_eq!(r.id.as_deref(), Some("7"));
+        assert_eq!(r.tenant, "acme");
+        assert_eq!(r.priority, 2);
         assert_eq!(r.max_new_tokens, 8);
         assert!((r.temperature - 0.7).abs() < 1e-6);
         assert_eq!(r.top_k, 40);
+        assert_eq!(r.stop, vec!["\n\n".to_string(), "END".to_string()]);
+    }
+
+    #[test]
+    fn wire_request_rejects_invalid_fields() {
+        // Present-but-wrong fields must error, not silently default.
+        for line in [
+            r#"{"max_new_tokens":4}"#,                   // missing prompt
+            r#"{"prompt":"p","temperature":1e999}"#,     // non-finite
+            r#"{"prompt":"p","temperature":"hot"}"#,     // wrong type
+            r#"{"prompt":"p","max_new_tokens":-3}"#,     // negative
+            r#"{"prompt":"p","max_new_tokens":0}"#,      // zero budget
+            r#"{"prompt":"p","max_new_tokens":1.5}"#,    // fractional
+            r#"{"prompt":"p","max_new_tokens":"many"}"#, // wrong type
+            r#"{"prompt":"p","top_k":-1}"#,              // negative
+            r#"{"prompt":"p","priority":0.5}"#,          // fractional
+            r#"{"prompt":"p","tenant":3}"#,              // wrong type
+            r#"{"prompt":"p","stop":"x"}"#,              // not an array
+            r#"{"prompt":"p","stop":[1]}"#,              // not strings
+            r#"{"prompt":"p","stop":[""]}"#,             // empty entry
+            r#"{"prompt":"p","id":true}"#,               // bad id type
+        ] {
+            assert!(
+                WireRequest::from_json_line(line).is_err(),
+                "must reject: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn into_gen_request_clamps_budget() {
+        let r = WireRequest::from_json_line(r#"{"prompt":"p","max_new_tokens":10000}"#).unwrap();
+        let g = r.into_gen_request(64);
+        assert_eq!(g.max_new_tokens, 64);
+        assert_eq!(g.tenant, "");
+        let r = WireRequest::from_json_line(r#"{"prompt":"p","max_new_tokens":3}"#).unwrap();
+        assert_eq!(r.into_gen_request(64).max_new_tokens, 3);
     }
 
     #[test]
@@ -379,15 +733,45 @@ mod tests {
     }
 
     #[test]
+    fn cancel_detection_is_exact() {
+        assert_eq!(
+            cancel_request_id(&parse(r#"{"cancel":"abc"}"#).unwrap()),
+            Some("abc".to_string())
+        );
+        assert_eq!(
+            cancel_request_id(&parse(r#"{"cancel":12}"#).unwrap()),
+            Some("12".to_string())
+        );
+        assert_eq!(cancel_request_id(&parse(r#"{"cancel":true}"#).unwrap()), None);
+        assert_eq!(
+            cancel_request_id(&parse(r#"{"prompt":"p","cancel":"abc"}"#).unwrap()),
+            None,
+            "generate requests are never hijacked"
+        );
+    }
+
+    #[test]
     fn responses_are_valid_json() {
+        let usage = Usage {
+            prompt_tokens: 5,
+            cached_prompt_tokens: 2,
+            prefill_tokens: 3,
+            generated_tokens: 4,
+        };
         for s in [
-            token_response(104, "h"),
-            done_response(FinishReason::Eos, 3),
-            error_response("nope"),
+            token_response("a", 104, "h"),
+            done_response("a", FinishReason::Eos, &usage),
+            error_response("bad_request", "nope"),
+            cancel_ack("a"),
         ] {
             parse(&s).unwrap();
         }
-        assert!(token_response(104, "h").contains("\"token\":104"));
-        assert!(done_response(FinishReason::MaxTokens, 2).contains("max_tokens"));
+        assert!(token_response("a", 104, "h").contains("\"token\":104"));
+        let done = done_response("a", FinishReason::MaxTokens, &usage);
+        assert!(done.contains("max_tokens"));
+        assert!(done.contains("\"cached_tokens\":2"));
+        assert!(done.contains("\"n\":4"));
+        let cancelled = done_response("a", FinishReason::Cancelled, &usage);
+        assert!(cancelled.contains("cancelled"));
     }
 }

@@ -9,24 +9,28 @@
 //! block-sharing bug (double free, COW miss, stale shared block)
 //! changes generated tokens instead of passing silently.
 //!
-//! This is what lets `benches/prefix_reuse.rs` and the tier-1 tests
-//! measure prefix-cache hit rates and verify cached-vs-cold output
-//! equality on a bare checkout, where the PJRT artifacts of the real
-//! engine are unavailable.
+//! The twin implements the same [`crate::api::InferenceEngine`] trait
+//! as the real engine and shares its admission / eviction / preemption
+//! logic through [`crate::policy`], so neither the policy nor the API
+//! surface can drift. This is what lets `benches/prefix_reuse.rs`, the
+//! loopback server test, and the tier-1 tests measure prefix-cache hit
+//! rates and verify cached-vs-cold output equality on a bare checkout,
+//! where the PJRT artifacts of the real engine are unavailable.
 
 use std::collections::HashMap;
-use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::api::{FinishReason, GenEvent, GenRequest, InferenceEngine, RequestId, SubmissionHandle};
 use crate::batching::Batcher;
 use crate::config::EngineConfig;
 use crate::error::{Error, Result};
 use crate::kvcache::{KvCache, KvGeometry, SeqId};
 use crate::metrics::EngineMetrics;
-use crate::prefixcache::{PrefixCache, PrefixMatch};
-use crate::router::{FinishReason, Request, Router, SeqState, Sequence, TokenEvent};
-use crate::sampling::{Sampler, SamplingParams};
-use crate::scheduler::{decide, preemption_victim, Action, PreemptCandidate, SchedState};
+use crate::policy;
+use crate::prefixcache::PrefixCache;
+use crate::router::{self, Router, SeqState, Sequence};
+use crate::sampling::Sampler;
+use crate::scheduler::{decide, preemption_victim, Action};
 use crate::tokenizer::{ByteTokenizer, EOS, TOKENIZER_VOCAB};
 
 /// Hash-model geometry (kept tiny: the point is block accounting, not
@@ -115,196 +119,6 @@ impl SimEngine {
         self.prefix.cached_blocks()
     }
 
-    /// Submit a text prompt; returns (seq id, token stream).
-    pub fn submit_text(
-        &mut self,
-        prompt: &str,
-        max_new_tokens: usize,
-        params: SamplingParams,
-    ) -> Result<(SeqId, mpsc::Receiver<TokenEvent>)> {
-        let toks = self.tokenizer.encode(prompt);
-        self.submit_tokens(toks, max_new_tokens, params)
-    }
-
-    /// Submit pre-tokenized input.
-    pub fn submit_tokens(
-        &mut self,
-        prompt_tokens: Vec<u32>,
-        max_new_tokens: usize,
-        params: SamplingParams,
-    ) -> Result<(SeqId, mpsc::Receiver<TokenEvent>)> {
-        if prompt_tokens.is_empty() {
-            return Err(Error::Request("empty prompt".into()));
-        }
-        if prompt_tokens.len() + 1 > self.spec.max_seq {
-            return Err(Error::Request(format!(
-                "prompt of {} tokens exceeds sim max_seq {}",
-                prompt_tokens.len(),
-                self.spec.max_seq
-            )));
-        }
-        let (tx, rx) = mpsc::channel();
-        let id = self.router.submit(Request {
-            prompt_tokens,
-            max_new_tokens: max_new_tokens.min(self.cfg.max_new_tokens),
-            params,
-            stream: tx,
-            arrived: Instant::now(),
-        });
-        Ok((id, rx))
-    }
-
-    pub fn is_idle(&self) -> bool {
-        self.router.queued() == 0 && self.batcher.is_empty()
-    }
-
-    pub fn running(&self) -> usize {
-        self.batcher.len()
-    }
-
-    pub fn queued(&self) -> usize {
-        self.router.queued()
-    }
-
-    fn usable_prefix(&self, prompt_len: usize, matched: usize) -> usize {
-        let bt = self.cfg.kv_block_tokens;
-        (matched.min(prompt_len.saturating_sub(1)) / bt) * bt
-    }
-
-    /// Radix-tree lookup for a prompt, truncated to the usable range.
-    fn lookup_prefix(&mut self, prompt: &[u32]) -> PrefixMatch {
-        if !self.cfg.prefix_cache {
-            return PrefixMatch::default();
-        }
-        let m = self.prefix.match_prefix(prompt);
-        let usable = self.usable_prefix(prompt.len(), m.tokens);
-        if usable == 0 {
-            return PrefixMatch::default();
-        }
-        PrefixMatch {
-            blocks: m.blocks[..usable / self.cfg.kv_block_tokens].to_vec(),
-            tokens: usable,
-        }
-    }
-
-    /// Admit a sequence's KV: prefix attach, then eviction of the
-    /// uncached shortfall + retry, then a cold fallback when nothing is
-    /// running (mirror of `Engine::admit_kv` — attach-before-evict,
-    /// fresh match after every eviction).
-    fn admit_kv(&mut self, id: SeqId, prompt: &[u32]) -> Result<Option<PrefixMatch>> {
-        let len = prompt.len();
-        let need = (len + 1).div_ceil(self.cfg.kv_block_tokens);
-        let matched = self.lookup_prefix(prompt);
-        if self
-            .kv
-            .alloc_seq_with_prefix(id, len + 1, &matched.blocks, matched.tokens)
-            .is_ok()
-        {
-            return Ok(Some(matched));
-        }
-        let want = need
-            .saturating_sub(matched.blocks.len())
-            .saturating_sub(self.kv.free_blocks());
-        let freed = self.prefix.evict(want, &mut self.kv);
-        self.metrics.prefix_blocks_evicted += freed as u64;
-        let matched = self.lookup_prefix(prompt);
-        if self
-            .kv
-            .alloc_seq_with_prefix(id, len + 1, &matched.blocks, matched.tokens)
-            .is_ok()
-        {
-            return Ok(Some(matched));
-        }
-        if !self.batcher.is_empty() {
-            return Ok(None);
-        }
-        let freed = self.prefix.evict(need, &mut self.kv);
-        self.metrics.prefix_blocks_evicted += freed as u64;
-        self.kv.alloc_seq(id, len + 1)?;
-        Ok(Some(PrefixMatch::default()))
-    }
-
-    /// Blocks the next queued prefill needs and how many are cached
-    /// (a peek: no LRU touch, no attach).
-    fn admission_outlook(&self) -> (usize, usize) {
-        match self.router.queue.front() {
-            Some(s) => {
-                let bt = self.cfg.kv_block_tokens;
-                let need = (s.prompt.len() + 1).div_ceil(bt);
-                let cached = if self.cfg.prefix_cache {
-                    let matched = self.prefix.peek_match_tokens(&s.prompt);
-                    self.usable_prefix(s.prompt.len(), matched) / bt
-                } else {
-                    0
-                };
-                (need, cached)
-            }
-            None => (0, 0),
-        }
-    }
-
-    /// Run one scheduling iteration (same policy as the real engine).
-    pub fn step(&mut self) -> Result<Action> {
-        let (next_blocks, mut cached_blocks) = self.admission_outlook();
-        // Pressure-evict only when admission is possible, after touching
-        // the head request's matched path so LRU spares it (same
-        // discipline as the real engine).
-        let uncached = next_blocks.saturating_sub(cached_blocks);
-        let admission_possible = next_blocks > 0 && self.batcher.len() < self.cfg.max_running;
-        if admission_possible && self.kv.free_blocks() < uncached {
-            if let Some(prompt) = self.router.queue.front().map(|s| s.prompt.clone()) {
-                let _ = self.prefix.match_prefix(&prompt);
-            }
-            let want = uncached - self.kv.free_blocks();
-            let freed = self.prefix.evict(want, &mut self.kv);
-            self.metrics.prefix_blocks_evicted += freed as u64;
-            if freed > 0 {
-                // Re-peek: eviction may have trimmed blocks the first
-                // peek counted as cached.
-                cached_blocks = self.admission_outlook().1;
-            }
-        }
-        let action = decide(SchedState {
-            queued: self.router.queued(),
-            running: self.batcher.len(),
-            max_running: self.cfg.max_running,
-            free_blocks: self.kv.free_blocks(),
-            next_prefill_blocks: next_blocks,
-            cached_prefill_blocks: cached_blocks,
-        });
-        match action {
-            Action::Prefill => self.step_prefill()?,
-            Action::Decode => self.step_decode()?,
-            Action::Idle => {}
-        }
-        Ok(action)
-    }
-
-    pub fn run_to_completion(&mut self) -> Result<()> {
-        while !self.is_idle() {
-            self.step()?;
-        }
-        Ok(())
-    }
-
-    /// Offline helper: generate for one prompt, blocking.
-    pub fn generate_text(
-        &mut self,
-        prompt: &str,
-        max_new_tokens: usize,
-        params: SamplingParams,
-    ) -> Result<String> {
-        let (_, rx) = self.submit_text(prompt, max_new_tokens, params)?;
-        self.run_to_completion()?;
-        let mut out = Vec::new();
-        while let Ok(ev) = rx.try_recv() {
-            if let TokenEvent::Token(t) = ev {
-                out.push(t);
-            }
-        }
-        Ok(self.tokenizer.decode(&out))
-    }
-
     // -----------------------------------------------------------------
     // Hash model
     // -----------------------------------------------------------------
@@ -383,27 +197,30 @@ impl SimEngine {
         };
         let len = seq.prompt.len();
 
-        // Prefix lookup + KV admission (same discipline as the real
-        // engine; see `Engine::admit_kv`).
-        let matched = match self.admit_kv(seq.id, &seq.prompt) {
+        // Prefix lookup + KV admission (shared policy; see
+        // `policy::admit_kv`).
+        let matched = match policy::admit_kv(
+            &self.cfg,
+            &mut self.kv,
+            &mut self.prefix,
+            &mut self.metrics,
+            self.batcher.is_empty(),
+            seq.id,
+            &seq.prompt,
+        ) {
             Ok(Some(m)) => m,
             Ok(None) => {
                 self.router.requeue_front(seq);
                 return self.step_decode();
             }
-            Err(e) => {
-                self.router.requeue_front(seq);
-                return Err(e);
+            Err(_) => {
+                // Truly stuck (see `Engine::step_prefill`): fail the
+                // request rather than wedge the queue head forever.
+                self.finish_seq(&mut seq, FinishReason::Error)?;
+                return Ok(());
             }
         };
-        if self.cfg.prefix_cache {
-            self.metrics.prefix_lookups += 1;
-            if matched.tokens > 0 {
-                self.metrics.prefix_hits += 1;
-            }
-        }
-        self.metrics.prefix_tokens_reused += matched.tokens as u64;
-        self.metrics.prefill_tokens_computed += (len - matched.tokens) as u64;
+        policy::note_admission(&self.cfg, &mut self.metrics, &mut seq, matched.tokens);
 
         // "Compute" and store the uncached suffix only.
         let (k, v) = self.prefill_kv(&seq.prompt);
@@ -417,13 +234,17 @@ impl SimEngine {
         seq.generated.push(tok);
         seq.first_token_at = Some(Instant::now());
         self.metrics.first_token.record(seq.arrived.elapsed());
-        seq.emit(TokenEvent::Token(tok));
+        seq.emit(GenEvent::Token(tok));
         self.metrics.tokens_generated += 1;
         self.metrics.requests_admitted += 1;
 
-        if tok == EOS || seq.max_new_tokens <= 1 {
-            let reason = if tok == EOS {
+        let done_eos = tok == EOS;
+        let done_stop = seq.hit_stop();
+        if done_eos || done_stop || seq.max_new_tokens <= 1 {
+            let reason = if done_eos {
                 FinishReason::Eos
+            } else if done_stop {
+                FinishReason::Stop
             } else {
                 FinishReason::MaxTokens
             };
@@ -444,20 +265,19 @@ impl SimEngine {
 
     fn step_decode(&mut self) -> Result<()> {
         let t0 = Instant::now();
-        // KV headroom: reclaim cached blocks first (even for a lone
-        // sequence), preempt last (needs >= 2 running).
-        while self.kv.free_blocks() < self.batcher.len() {
-            let want = self.batcher.len() - self.kv.free_blocks();
-            let freed = self.prefix.evict(want, &mut self.kv);
-            self.metrics.prefix_blocks_evicted += freed as u64;
-            if self.kv.free_blocks() >= self.batcher.len() || self.batcher.len() <= 1 {
-                break;
-            }
+        // KV headroom via the shared policy: reclaim cached blocks
+        // first, preempt last (needs >= 2 running).
+        while policy::reclaim_decode_headroom(
+            &mut self.kv,
+            &mut self.prefix,
+            &mut self.metrics,
+            self.batcher.len(),
+        ) {
             self.preempt_one()?;
         }
         let batch = self.batcher.assemble()?;
         let max_seq = self.spec.max_seq;
-        let mut finished: Vec<SeqId> = Vec::new();
+        let mut finished: Vec<(SeqId, FinishReason)> = Vec::new();
         for slot in batch.lanes.iter() {
             let Some(id) = slot else { continue };
             let (tok, pos) = {
@@ -474,23 +294,25 @@ impl SimEngine {
             seq.kv_len += 1;
             let new_tok = self.sampler.sample(&logits, seq.params);
             seq.generated.push(new_tok);
-            seq.emit(TokenEvent::Token(new_tok));
+            seq.emit(GenEvent::Token(new_tok));
             self.metrics.tokens_generated += 1;
             self.metrics.decode_rows += 1;
             let done_eos = new_tok == EOS;
-            let done_len =
-                seq.generated.len() >= seq.max_new_tokens || seq.kv_len + 1 >= max_seq;
-            if done_eos || done_len {
-                finished.push(*id);
+            let done_stop = seq.hit_stop();
+            let done_len = seq.generated.len() >= seq.max_new_tokens || seq.kv_len + 1 >= max_seq;
+            if done_eos || done_stop || done_len {
+                let reason = if done_eos {
+                    FinishReason::Eos
+                } else if done_stop {
+                    FinishReason::Stop
+                } else {
+                    FinishReason::MaxTokens
+                };
+                finished.push((*id, reason));
             }
         }
-        for id in finished {
+        for (id, reason) in finished {
             let mut seq = self.seqs.remove(&id).unwrap();
-            let reason = if seq.generated.last() == Some(&EOS) {
-                FinishReason::Eos
-            } else {
-                FinishReason::MaxTokens
-            };
             self.batcher.remove(id)?;
             self.finish_seq(&mut seq, reason)?;
         }
@@ -503,26 +325,7 @@ impl SimEngine {
     }
 
     fn preempt_one(&mut self) -> Result<()> {
-        let candidates: Vec<PreemptCandidate> = self
-            .batcher
-            .running_ids()
-            .into_iter()
-            .map(|id| {
-                let reusable = self
-                    .kv
-                    .seq_blocks(id)
-                    .map(|bs| {
-                        bs.iter()
-                            .filter(|&&b| self.kv.block_refcount(b) > 1)
-                            .count()
-                    })
-                    .unwrap_or(0);
-                PreemptCandidate {
-                    id,
-                    reusable_blocks: reusable,
-                }
-            })
-            .collect();
+        let candidates = policy::preempt_candidates(&self.kv, &self.batcher.running_ids());
         let id = preemption_victim(&candidates)
             .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
         let mut seq = self.seqs.remove(&id).unwrap();
@@ -559,10 +362,9 @@ impl SimEngine {
 
     fn finish_seq(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
         seq.state = SeqState::Finished(reason);
-        seq.emit(TokenEvent::Finished {
-            reason,
-            n_generated: seq.generated.len(),
-        });
+        let usage = seq.usage();
+        seq.emit(GenEvent::Finished { reason, usage });
+        self.metrics.record_finish(&seq.tenant, usage);
         self.register_prefix(seq);
         if self.kv.contains(seq.id) {
             self.kv.free_seq(seq.id)?;
@@ -572,9 +374,101 @@ impl SimEngine {
     }
 }
 
+impl InferenceEngine for SimEngine {
+    /// Queue a typed request; the prompt (+1 generated token) must fit
+    /// the sim's `max_seq` and the KV pool.
+    fn submit(&mut self, req: GenRequest) -> Result<SubmissionHandle> {
+        let prompt_tokens = router::encode_prompt(&self.tokenizer, &req.prompt)?;
+        if prompt_tokens.len() + 1 > self.spec.max_seq {
+            return Err(Error::Request(format!(
+                "prompt of {} tokens exceeds sim max_seq {}",
+                prompt_tokens.len(),
+                self.spec.max_seq
+            )));
+        }
+        let need = (prompt_tokens.len() + 1).div_ceil(self.cfg.kv_block_tokens);
+        if need > self.cfg.kv_total_blocks {
+            return Err(Error::Request(format!(
+                "prompt needs {need} KV blocks, pool has {}",
+                self.cfg.kv_total_blocks
+            )));
+        }
+        router::enqueue_request(
+            &mut self.router,
+            &self.tokenizer,
+            &req,
+            prompt_tokens,
+            self.cfg.max_new_tokens,
+        )
+    }
+
+    /// Run one scheduling iteration (same policy as the real engine).
+    fn step(&mut self) -> Result<Action> {
+        let state = policy::plan_admission(
+            &self.cfg,
+            &mut self.kv,
+            &mut self.prefix,
+            &mut self.metrics,
+            self.router.peek_next(),
+            self.router.queued(),
+            self.batcher.len(),
+        );
+        let action = decide(state);
+        match action {
+            Action::Prefill => self.step_prefill()?,
+            Action::Decode => self.step_decode()?,
+            Action::Idle => {}
+        }
+        Ok(action)
+    }
+
+    /// Cancel a queued or running request; its KV blocks are released
+    /// (stored tokens may survive in the prefix cache, held by the tree
+    /// alone).
+    fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        if let Some(mut seq) = self.router.take(id) {
+            self.metrics.cancellations += 1;
+            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+            return Ok(true);
+        }
+        if let Some(mut seq) = self.seqs.remove(&id) {
+            self.metrics.cancellations += 1;
+            self.batcher.remove(id)?;
+            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+
+    fn is_idle(&self) -> bool {
+        self.router.queued() == 0 && self.batcher.is_empty()
+    }
+
+    fn queued(&self) -> usize {
+        self.router.queued()
+    }
+
+    fn running(&self) -> usize {
+        self.batcher.len()
+    }
+
+    fn encode(&self, text: &str) -> Vec<u32> {
+        self.tokenizer.encode(text)
+    }
+
+    fn decode(&self, tokens: &[u32]) -> String {
+        self.tokenizer.decode(tokens)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sampling::SamplingParams;
 
     fn cfg(prefix_cache: bool) -> EngineConfig {
         EngineConfig {
@@ -586,42 +480,41 @@ mod tests {
         }
     }
 
-    fn collect(rx: &mpsc::Receiver<TokenEvent>) -> (Vec<u32>, Option<FinishReason>) {
-        let mut toks = vec![];
-        let mut fin = None;
-        while let Ok(ev) = rx.try_recv() {
-            match ev {
-                TokenEvent::Token(t) => toks.push(t),
-                TokenEvent::Finished { reason, .. } => fin = Some(reason),
-            }
-        }
-        (toks, fin)
-    }
-
     #[test]
     fn greedy_generation_is_deterministic() {
         let mut a = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
         let mut b = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
-        let pa = a.generate_text("determinism probe", 12, SamplingParams::default()).unwrap();
-        let pb = b.generate_text("determinism probe", 12, SamplingParams::default()).unwrap();
+        let pa = a
+            .generate_text("determinism probe", 12, SamplingParams::default())
+            .unwrap();
+        let pb = b
+            .generate_text("determinism probe", 12, SamplingParams::default())
+            .unwrap();
         assert_eq!(pa, pb);
         assert!(a.metrics.tokens_generated >= 1);
         assert_eq!(a.metrics.tokens_generated, b.metrics.tokens_generated);
     }
 
     #[test]
-    fn concurrent_requests_all_finish() {
+    fn concurrent_requests_all_finish_with_usage() {
         let mut e = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
-        let mut rxs = vec![];
+        let mut handles = vec![];
         for p in ["alpha", "beta prompt", "gamma gamma gamma"] {
-            let (_, rx) = e.submit_text(p, 10, SamplingParams::default()).unwrap();
-            rxs.push(rx);
+            let h = e.submit(GenRequest::text(p).max_new_tokens(10)).unwrap();
+            handles.push((p, h));
         }
         e.run_to_completion().unwrap();
-        for rx in &rxs {
-            let (toks, fin) = collect(rx);
+        for (p, h) in &handles {
+            let (toks, fin) = h.drain();
             assert!(!toks.is_empty());
-            assert!(fin.is_some());
+            let (_, usage) = fin.expect("finish event");
+            assert_eq!(usage.generated_tokens, toks.len());
+            // BOS + one id per byte.
+            assert_eq!(usage.prompt_tokens, p.len() + 1);
+            assert_eq!(
+                usage.cached_prompt_tokens + usage.prefill_tokens,
+                usage.prompt_tokens
+            );
         }
         assert_eq!(e.metrics.requests_finished, 3);
         assert_eq!(e.kv_free_blocks() + e.prefix_cached_blocks(), 128);
@@ -634,17 +527,25 @@ mod tests {
         let prompt = format!("{prompt}!!"); // 33 tokens with BOS
 
         let mut warm = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
-        let first = warm.generate_text(&prompt, 8, SamplingParams::default()).unwrap();
+        let first = warm
+            .generate_text(&prompt, 8, SamplingParams::default())
+            .unwrap();
         assert_eq!(warm.metrics.prefix_hits, 0, "cold first request");
-        let second = warm.generate_text(&prompt, 8, SamplingParams::default()).unwrap();
+        let second = warm
+            .generate_text(&prompt, 8, SamplingParams::default())
+            .unwrap();
         assert_eq!(warm.metrics.prefix_hits, 1, "second request must hit");
         assert!(warm.metrics.prefix_tokens_reused >= 32);
         assert_eq!(first, second, "cache hit must not change output");
 
         // And identical to a cache-disabled engine.
         let mut cold = SimEngine::new(cfg(false), SimSpec::default()).unwrap();
-        let base = cold.generate_text(&prompt, 8, SamplingParams::default()).unwrap();
-        let base2 = cold.generate_text(&prompt, 8, SamplingParams::default()).unwrap();
+        let base = cold
+            .generate_text(&prompt, 8, SamplingParams::default())
+            .unwrap();
+        let base2 = cold
+            .generate_text(&prompt, 8, SamplingParams::default())
+            .unwrap();
         assert_eq!(first, base);
         assert_eq!(second, base2);
         assert_eq!(cold.metrics.prefix_lookups, 0);
@@ -663,7 +564,7 @@ mod tests {
         let mut e = SimEngine::new(cfg, SimSpec::default()).unwrap();
         for i in 0..6 {
             let prompt = format!("tenant-{i} prompt padded to some length....");
-            let (_, _rx) = e.submit_text(&prompt, 3, SamplingParams::default()).unwrap();
+            let _h = e.submit(GenRequest::text(&prompt).max_new_tokens(3)).unwrap();
         }
         e.run_to_completion().unwrap();
         assert_eq!(e.metrics.requests_finished, 6);
@@ -672,5 +573,188 @@ mod tests {
             "pool of 10 blocks cannot cache 6 distinct prompts without evicting"
         );
         assert_eq!(e.kv_free_blocks() + e.prefix_cached_blocks(), 10);
+    }
+
+    /// Find a prompt whose greedy generation runs at least `min_tokens`
+    /// under the given budget — optionally requiring a printable-ASCII
+    /// token in the output — and return it with that output. The hash
+    /// model is deterministic, so this is a stable selection, not a
+    /// retry loop.
+    fn probe_prompt(min_tokens: usize, budget: usize, need_ascii: bool) -> (String, Vec<u32>) {
+        for salt in 0..64u32 {
+            let prompt = format!("generation probe {salt}");
+            let mut e = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
+            let h = e
+                .submit(GenRequest::text(&prompt).max_new_tokens(budget))
+                .unwrap();
+            e.run_to_completion().unwrap();
+            let (toks, _) = h.drain();
+            let ascii_ok = !need_ascii || toks.iter().any(|t| (32..127).contains(t));
+            if toks.len() >= min_tokens && ascii_ok {
+                return (prompt, toks);
+            }
+        }
+        panic!("no candidate prompt generated {min_tokens}+ tokens");
+    }
+
+    #[test]
+    fn cancel_mid_decode_returns_kv_blocks_and_reports_cancelled() {
+        // Prefix cache off so every block must return to the free list.
+        let total = 128;
+        let (prompt, _) = probe_prompt(6, 64, false);
+        let mut e = SimEngine::new(cfg(false), SimSpec::default()).unwrap();
+        let h = e.submit(GenRequest::text(&prompt).max_new_tokens(64)).unwrap();
+        // Step until the request is decoding with a few tokens out.
+        let mut tokens_seen = 0;
+        let mut events = Vec::new();
+        while tokens_seen < 4 {
+            assert!(!e.is_idle(), "request finished before cancellation");
+            e.step().unwrap();
+            while let Ok(ev) = h.events.try_recv() {
+                if matches!(ev, GenEvent::Token(_)) {
+                    tokens_seen += 1;
+                }
+                events.push(ev);
+            }
+        }
+        assert_eq!(e.running(), 1, "must be mid-decode");
+        assert!(e.cancel(h.id).unwrap(), "known id cancels");
+        assert!(!e.cancel(h.id).unwrap(), "second cancel is a no-op");
+        assert!(e.is_idle(), "cancelled request leaves no work behind");
+        while let Ok(ev) = h.events.try_recv() {
+            events.push(ev);
+        }
+        let fin = events
+            .iter()
+            .find_map(|ev| match ev {
+                GenEvent::Finished { reason, usage } => Some((*reason, *usage)),
+                _ => None,
+            })
+            .expect("cancel must emit a finish event");
+        assert_eq!(fin.0, FinishReason::Cancelled);
+        assert_eq!(fin.1.generated_tokens, tokens_seen);
+        assert_eq!(e.metrics.cancellations, 1);
+        assert_eq!(
+            e.kv_free_blocks(),
+            total,
+            "every KV block must return on cancel (cache off)"
+        );
+    }
+
+    #[test]
+    fn impossible_requests_rejected_at_submit() {
+        let cfg = EngineConfig {
+            kv_block_tokens: 8,
+            kv_total_blocks: 4, // 32-token pool
+            max_new_tokens: 4,
+            prefix_cache: true,
+            ..EngineConfig::default()
+        };
+        let mut e = SimEngine::new(cfg, SimSpec::default()).unwrap();
+        let long = "x".repeat(40); // 41 tokens with BOS: exceeds the pool
+        assert!(e.submit(GenRequest::text(long).max_new_tokens(4)).is_err());
+        assert!(
+            e.submit(GenRequest::text("ok").max_new_tokens(0)).is_err(),
+            "zero budget must be rejected"
+        );
+        assert!(e.is_idle(), "rejected requests leave no queued work");
+    }
+
+    #[test]
+    fn cancel_queued_request_before_admission() {
+        let mut e = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
+        let h = e.submit(GenRequest::text("never admitted").max_new_tokens(8)).unwrap();
+        assert_eq!(e.queued(), 1);
+        assert!(e.cancel(h.id).unwrap());
+        assert_eq!(e.queued(), 0);
+        let (toks, fin) = h.drain();
+        assert!(toks.is_empty());
+        assert_eq!(fin.unwrap().0, FinishReason::Cancelled);
+        assert_eq!(e.kv_free_blocks() + e.prefix_cached_blocks(), 128);
+    }
+
+    #[test]
+    fn stop_sequence_halts_generation() {
+        // Self-selecting stop: take an unconstrained run, pick a
+        // generated ASCII byte, and require a fresh engine to stop on
+        // exactly that byte with a byte-identical prefix.
+        let (prompt, full) = probe_prompt(2, 16, true);
+        let (idx, stop_tok) = full
+            .iter()
+            .enumerate()
+            .find(|(_, &t)| (32..127).contains(&t))
+            .expect("hash model must emit some printable ASCII byte");
+        let stop_str = String::from_utf8(vec![*stop_tok as u8]).unwrap();
+
+        let mut e = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
+        let req = GenRequest::text(&prompt)
+            .max_new_tokens(16)
+            .stop(vec![stop_str]);
+        let h = e.submit(req).unwrap();
+        e.run_to_completion().unwrap();
+        let (toks, fin) = h.drain();
+        let (reason, usage) = fin.unwrap();
+        assert_eq!(reason, FinishReason::Stop);
+        assert_eq!(toks.len(), idx + 1, "stops right at the matched token");
+        assert_eq!(toks[..], full[..idx + 1], "prefix must be byte-identical");
+        assert_eq!(usage.generated_tokens, idx + 1);
+    }
+
+    #[test]
+    fn higher_priority_request_admitted_first() {
+        let cfg = EngineConfig {
+            kv_block_tokens: 8,
+            kv_total_blocks: 128,
+            max_new_tokens: 16,
+            max_running: 1,
+            decode_buckets: vec![1],
+            ..EngineConfig::default()
+        };
+        let mut e = SimEngine::new(cfg, SimSpec::default()).unwrap();
+        let low = e
+            .submit(GenRequest::text("low priority waits").max_new_tokens(4))
+            .unwrap();
+        let high = e
+            .submit(
+                GenRequest::text("high priority runs")
+                    .priority(5)
+                    .max_new_tokens(4),
+            )
+            .unwrap();
+        e.step().unwrap(); // one prefill: must pick the high-priority one
+        let (high_toks, _) = high.drain();
+        let (low_toks, _) = low.drain();
+        assert_eq!(high_toks.len(), 1, "high-priority got the first prefill");
+        assert!(low_toks.is_empty(), "low-priority still queued");
+        assert_eq!(e.queued(), 1);
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.requests_finished, 2);
+    }
+
+    #[test]
+    fn per_tenant_usage_recorded() {
+        let mut e = SimEngine::new(cfg(true), SimSpec::default()).unwrap();
+        let shared = "tenant system prompt shared across requests!";
+        for i in 0..2 {
+            let req = GenRequest::text(format!("{shared} {i}"))
+                .tenant("acme")
+                .max_new_tokens(4);
+            let _h = e.submit(req).unwrap();
+            e.run_to_completion().unwrap();
+        }
+        let _h = e
+            .submit(GenRequest::text("unrelated").max_new_tokens(4))
+            .unwrap();
+        e.run_to_completion().unwrap();
+        let acme = e.metrics.tenants.get("acme").expect("tenant recorded");
+        assert_eq!(acme.requests_finished, 2);
+        assert!(acme.generated_tokens >= 2);
+        assert!(
+            acme.cached_prompt_tokens >= 8,
+            "second acme request reuses the shared prefix: {acme:?}"
+        );
+        let default = e.metrics.tenants.get("default").expect("default tenant");
+        assert_eq!(default.requests_finished, 1);
+        assert_eq!(default.cached_prompt_tokens, 0);
     }
 }

@@ -40,6 +40,12 @@ impl ByteTokenizer {
         out
     }
 
+    /// Encode raw text as byte ids *without* the BOS marker — the form
+    /// stop sequences take so they can match against generated ids.
+    pub fn encode_raw(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(|b| b as u32).collect()
+    }
+
     /// Decode generated ids back to text (specials and out-of-range ids
     /// are dropped; invalid utf-8 is replaced).
     pub fn decode(&self, ids: &[u32]) -> String {
@@ -73,6 +79,14 @@ mod tests {
         let t = ByteTokenizer::new(512);
         let s = "héllo → 世界";
         assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn encode_raw_has_no_bos() {
+        let t = ByteTokenizer::new(512);
+        assert_eq!(t.encode_raw("hi"), vec![b'h' as u32, b'i' as u32]);
+        assert_eq!(t.encode("hi")[1..], t.encode_raw("hi")[..]);
+        assert!(t.encode_raw("").is_empty());
     }
 
     #[test]

@@ -11,6 +11,8 @@ pub struct TraceRequest {
     pub arrival_s: f64,
     pub prompt: String,
     pub max_new_tokens: usize,
+    /// Tenant id for multi-tenant accounting ("" = default tenant).
+    pub tenant: String,
 }
 
 /// Generator parameters.
@@ -58,6 +60,7 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TraceRequest> {
             arrival_s: t,
             prompt,
             max_new_tokens: max_new,
+            tenant: String::new(),
         });
     }
     out
@@ -158,6 +161,7 @@ pub fn shared_prefix_trace(spec: &SharedPrefixSpec) -> Vec<TraceRequest> {
             arrival_s: t,
             prompt: format!("{} {suffix}", prompts[tenant]),
             max_new_tokens: max_new,
+            tenant: format!("tenant-{tenant}"),
         });
     }
     out
@@ -170,16 +174,19 @@ pub fn fixed_smoke_trace() -> Vec<TraceRequest> {
             arrival_s: 0.0,
             prompt: "What is the largest ocean?".into(),
             max_new_tokens: 16,
+            tenant: String::new(),
         },
         TraceRequest {
             arrival_s: 0.0,
             prompt: "fast decode".into(),
             max_new_tokens: 8,
+            tenant: String::new(),
         },
         TraceRequest {
             arrival_s: 0.01,
             prompt: "unified max value softmax".into(),
             max_new_tokens: 12,
+            tenant: String::new(),
         },
     ]
 }
@@ -242,6 +249,7 @@ mod tests {
                 .expect("request must carry a tenant prefix");
             counts[tenant] += 1;
             assert!(r.prompt.len() > prompts[tenant].len(), "suffix present");
+            assert_eq!(r.tenant, format!("tenant-{tenant}"), "tenant id labeled");
         }
         // Zipf(1.0): rank 1 must dominate rank n (weights 1 vs 1/8).
         assert!(

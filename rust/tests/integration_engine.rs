@@ -1,10 +1,11 @@
 //! Integration: the serving engine end-to-end on real artifacts —
 //! continuous batching, determinism, preemption, async/sync parity,
-//! and the TCP server round trip.
+//! cancellation, and the TCP server round trip — all through the
+//! unified [`InferenceEngine`] surface.
 
+use fdpp::api::{FinishReason, GenRequest, InferenceEngine, SubmissionHandle, Usage};
 use fdpp::config::EngineConfig;
 use fdpp::engine::Engine;
-use fdpp::router::{FinishReason, TokenEvent};
 use fdpp::runtime::Runtime;
 use fdpp::sampling::SamplingParams;
 
@@ -18,26 +19,22 @@ fn engine_with(cfg: EngineConfig) -> Option<Engine> {
     }
 }
 
-fn collect(rx: &std::sync::mpsc::Receiver<TokenEvent>) -> (Vec<u32>, Option<FinishReason>) {
-    let mut toks = vec![];
-    let mut fin = None;
-    while let Ok(ev) = rx.try_recv() {
-        match ev {
-            TokenEvent::Token(t) => toks.push(t),
-            TokenEvent::Finished { reason, .. } => fin = Some(reason),
-        }
-    }
-    (toks, fin)
+fn finish_of(h: &SubmissionHandle) -> (Vec<u32>, Option<(FinishReason, Usage)>) {
+    h.drain()
 }
 
 #[test]
 #[ignore = "requires make artifacts (PJRT + Pallas)"]
 fn greedy_generation_is_deterministic() {
-    let Some(mut e1) = engine_with(EngineConfig::default()) else { return };
+    let Some(mut e1) = engine_with(EngineConfig::default()) else {
+        return;
+    };
     let a = e1
         .generate_text("determinism", 12, SamplingParams::default())
         .unwrap();
-    let Some(mut e2) = engine_with(EngineConfig::default()) else { return };
+    let Some(mut e2) = engine_with(EngineConfig::default()) else {
+        return;
+    };
     let b = e2
         .generate_text("determinism", 12, SamplingParams::default())
         .unwrap();
@@ -47,17 +44,20 @@ fn greedy_generation_is_deterministic() {
 #[test]
 #[ignore = "requires make artifacts (PJRT + Pallas)"]
 fn continuous_batching_serves_concurrent_requests() {
-    let Some(mut engine) = engine_with(EngineConfig::default()) else { return };
-    let mut rxs = vec![];
+    let Some(mut engine) = engine_with(EngineConfig::default()) else {
+        return;
+    };
+    let mut handles = vec![];
     for p in ["alpha", "beta prompt", "gamma gamma gamma"] {
-        let (_, rx) = engine.submit_text(p, 10, SamplingParams::default()).unwrap();
-        rxs.push(rx);
+        handles.push(engine.submit(GenRequest::text(p).max_new_tokens(10)).unwrap());
     }
     engine.run_to_completion().unwrap();
-    for rx in &rxs {
-        let (toks, fin) = collect(rx);
+    for h in &handles {
+        let (toks, fin) = finish_of(h);
         assert_eq!(toks.len(), 10);
-        assert_eq!(fin, Some(FinishReason::MaxTokens));
+        let (reason, usage) = fin.unwrap();
+        assert_eq!(reason, FinishReason::MaxTokens);
+        assert_eq!(usage.generated_tokens, 10);
     }
     // Batched decode actually happened (3 lanes -> bucket 4).
     assert!(engine.metrics.kv_rebuilds >= 1);
@@ -70,20 +70,24 @@ fn continuous_batching_serves_concurrent_requests() {
 fn batched_output_matches_solo_output() {
     // A request decoded inside a batch must produce the same tokens as
     // the same request decoded alone (lane isolation, greedy sampling).
-    let Some(mut solo) = engine_with(EngineConfig::default()) else { return };
+    let Some(mut solo) = engine_with(EngineConfig::default()) else {
+        return;
+    };
     let want = solo
         .generate_text("isolation check", 8, SamplingParams::default())
         .unwrap();
 
-    let Some(mut batched) = engine_with(EngineConfig::default()) else { return };
-    let (_, rx_main) = batched
-        .submit_text("isolation check", 8, SamplingParams::default())
+    let Some(mut batched) = engine_with(EngineConfig::default()) else {
+        return;
+    };
+    let h_main = batched
+        .submit(GenRequest::text("isolation check").max_new_tokens(8))
         .unwrap();
-    let (_, _rx_other) = batched
-        .submit_text("other request padding the batch", 8, SamplingParams::default())
+    let _h_other = batched
+        .submit(GenRequest::text("other request padding the batch").max_new_tokens(8))
         .unwrap();
     batched.run_to_completion().unwrap();
-    let (toks, _) = collect(&rx_main);
+    let (toks, _) = finish_of(&h_main);
     let got = batched.tokenizer.decode(&toks);
     assert_eq!(got, want);
 }
@@ -105,8 +109,12 @@ fn sync_engine_produces_same_tokens_as_async() {
     }) else {
         return;
     };
-    let pa = a.generate_text("parity", 10, SamplingParams::default()).unwrap();
-    let ps = s.generate_text("parity", 10, SamplingParams::default()).unwrap();
+    let pa = a
+        .generate_text("parity", 10, SamplingParams::default())
+        .unwrap();
+    let ps = s
+        .generate_text("parity", 10, SamplingParams::default())
+        .unwrap();
     assert_eq!(pa, ps, "C1 must not change greedy outputs");
 }
 
@@ -123,21 +131,26 @@ fn preemption_under_kv_pressure() {
     }) else {
         return;
     };
-    let mut rxs = vec![];
-    for p in ["first request with a long prompt padding",
-              "second request also has a long prompt!!",
-              "third"] {
-        let (_, rx) = engine.submit_text(p, 60, SamplingParams::default()).unwrap();
-        rxs.push(rx);
+    let mut handles = vec![];
+    for p in [
+        "first request with a long prompt padding",
+        "second request also has a long prompt!!",
+        "third",
+    ] {
+        handles.push(engine.submit(GenRequest::text(p).max_new_tokens(60)).unwrap());
     }
     engine.run_to_completion().unwrap();
-    let reasons: Vec<_> = rxs.iter().map(|rx| collect(rx).1.unwrap()).collect();
+    let reasons: Vec<_> = handles.iter().map(|h| finish_of(h).1.unwrap().0).collect();
     assert!(
         reasons.iter().any(|r| *r == FinishReason::Preempted),
         "expected at least one preemption, got {reasons:?}"
     );
     assert!(
-        reasons.iter().filter(|r| **r != FinishReason::Preempted).count() >= 1,
+        reasons
+            .iter()
+            .filter(|r| **r != FinishReason::Preempted)
+            .count()
+            >= 1,
         "someone must finish normally: {reasons:?}"
     );
     // All KV blocks returned.
@@ -146,22 +159,47 @@ fn preemption_under_kv_pressure() {
 
 #[test]
 #[ignore = "requires make artifacts (PJRT + Pallas)"]
+fn cancel_mid_decode_on_real_engine() {
+    let Some(mut engine) = engine_with(EngineConfig::default()) else {
+        return;
+    };
+    let h = engine
+        .submit(GenRequest::text("cancel this generation").max_new_tokens(32))
+        .unwrap();
+    // Step until a couple of tokens streamed, then cancel mid-decode.
+    let mut seen = 0;
+    while seen < 2 && !engine.is_idle() {
+        engine.step().unwrap();
+        seen += h.drain().0.len();
+    }
+    if engine.is_idle() {
+        return; // tiny model finished before we could cancel
+    }
+    assert!(engine.cancel(h.id).unwrap());
+    assert!(engine.is_idle());
+    let (_, fin) = finish_of(&h);
+    assert_eq!(fin.unwrap().0, FinishReason::Cancelled);
+    assert_eq!(engine.metrics.cancellations, 1);
+}
+
+#[test]
+#[ignore = "requires make artifacts (PJRT + Pallas)"]
 fn oversized_prompt_rejected() {
-    let Some(mut engine) = engine_with(EngineConfig::default()) else { return };
+    let Some(mut engine) = engine_with(EngineConfig::default()) else {
+        return;
+    };
     let long = "x".repeat(100); // > largest prefill bucket (64)
-    assert!(engine
-        .submit_text(&long, 4, SamplingParams::default())
-        .is_err());
+    assert!(engine.submit(GenRequest::text(long).max_new_tokens(4)).is_err());
     // token-less submission rejected too (text prompts always carry BOS)
-    assert!(engine
-        .submit_tokens(vec![], 4, SamplingParams::default())
-        .is_err());
+    assert!(engine.submit(GenRequest::tokens(vec![]).max_new_tokens(4)).is_err());
 }
 
 #[test]
 #[ignore = "requires make artifacts (PJRT + Pallas)"]
 fn recompute_rate_accounted_and_small() {
-    let Some(mut engine) = engine_with(EngineConfig::default()) else { return };
+    let Some(mut engine) = engine_with(EngineConfig::default()) else {
+        return;
+    };
     engine
         .generate_text("rate accounting", 16, SamplingParams::default())
         .unwrap();

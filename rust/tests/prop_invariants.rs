@@ -259,7 +259,9 @@ fn prop_json_roundtrip_fuzz() {
             0 => json::Json::Null,
             1 => json::Json::Bool(rng.next_u64() % 2 == 0),
             2 => json::Json::Num((rng.next_f64() * 2e6) - 1e6),
-            3 => json::Json::Arr((0..rng.gen_range(0, 4)).map(|_| gen_value(rng, depth - 1)).collect()),
+            3 => json::Json::Arr(
+                (0..rng.gen_range(0, 4)).map(|_| gen_value(rng, depth - 1)).collect(),
+            ),
             _ => {
                 let mut m = std::collections::BTreeMap::new();
                 for i in 0..rng.gen_range(0, 4) {

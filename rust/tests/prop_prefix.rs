@@ -15,11 +15,10 @@
 
 use std::collections::HashMap;
 
+use fdpp::api::{GenRequest, InferenceEngine};
 use fdpp::config::EngineConfig;
 use fdpp::kvcache::{KvCache, KvGeometry};
 use fdpp::prefixcache::PrefixCache;
-use fdpp::router::TokenEvent;
-use fdpp::sampling::SamplingParams;
 use fdpp::simengine::{SimEngine, SimSpec};
 use fdpp::util::rng::Rng;
 use fdpp::workload::{shared_prefix_trace, SharedPrefixSpec};
@@ -354,6 +353,25 @@ fn shared_prefix_workload_halves_prefill_with_identical_outputs() {
     };
     let trace = shared_prefix_trace(&spec);
 
+    // Drive the whole trace through the unified `InferenceEngine`
+    // surface (same generic loop as `benches/prefix_reuse.rs`).
+    fn drive<E: InferenceEngine>(
+        engine: &mut E,
+        trace: &[fdpp::workload::TraceRequest],
+    ) -> (Vec<Vec<u32>>, u64, f64) {
+        let mut handles = vec![];
+        for r in trace {
+            let req = GenRequest::text(r.prompt.as_str())
+                .tenant(r.tenant.as_str())
+                .max_new_tokens(r.max_new_tokens);
+            handles.push(engine.submit(req).unwrap());
+        }
+        engine.run_to_completion().unwrap();
+        let outs: Vec<Vec<u32>> = handles.iter().map(|h| h.drain().0).collect();
+        let m = engine.metrics();
+        (outs, m.prefill_tokens_computed, m.prefix_hit_rate())
+    }
+
     let run = |prefix_cache: bool| {
         let cfg = EngineConfig {
             kv_block_tokens: 16,
@@ -363,27 +381,7 @@ fn shared_prefix_workload_halves_prefill_with_identical_outputs() {
             ..EngineConfig::default()
         };
         let mut engine = SimEngine::new(cfg, SimSpec::default()).unwrap();
-        let mut rxs = vec![];
-        for r in &trace {
-            let (_, rx) = engine
-                .submit_text(&r.prompt, r.max_new_tokens, SamplingParams::default())
-                .unwrap();
-            rxs.push(rx);
-        }
-        engine.run_to_completion().unwrap();
-        let outs: Vec<Vec<u32>> = rxs
-            .iter()
-            .map(|rx| {
-                let mut toks = vec![];
-                while let Ok(ev) = rx.try_recv() {
-                    if let TokenEvent::Token(t) = ev {
-                        toks.push(t);
-                    }
-                }
-                toks
-            })
-            .collect();
-        (outs, engine.metrics.prefill_tokens_computed, engine.metrics.prefix_hit_rate())
+        drive(&mut engine, &trace)
     };
 
     let (cold_outs, cold_prefill, _) = run(false);
