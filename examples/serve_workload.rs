@@ -1,17 +1,25 @@
-//! END-TO-END driver (EXPERIMENTS.md §E2E): serve a Poisson-arrival
-//! workload of batched requests on the real tiny model and report
-//! latency/throughput — the serving-paper validation required by
-//! DESIGN.md. Compares the asynchronized-softmax engine (C1 on) against
-//! the synchronized baseline (C1 off) on the same trace.
+//! END-TO-END driver (EXPERIMENTS.md §E2E), two acts:
+//!
+//! 1. **Flow-control demo** (sim engine, runs on a bare checkout):
+//!    mixed-priority traffic with one deliberately slow consumer,
+//!    under both backpressure policies, printing the new
+//!    backpressure / preemption / per-priority metrics.
+//! 2. **PJRT workload** (needs `make artifacts`): serve a
+//!    Poisson-arrival workload of batched requests on the real tiny
+//!    model and report latency/throughput, comparing the
+//!    asynchronized-softmax engine (C1 on) against the synchronized
+//!    baseline (C1 off) on the same trace. Skipped with a note when
+//!    artifacts are unavailable.
 //!
 //!     cargo run --release --example serve_workload [n_requests] [rate]
 
 use std::time::{Duration, Instant};
 
-use fdpp::api::{GenEvent, GenRequest, InferenceEngine};
-use fdpp::config::EngineConfig;
+use fdpp::api::{GenEvent, GenRequest, InferenceEngine, SubmissionHandle};
+use fdpp::config::{BackpressurePolicy, EngineConfig};
 use fdpp::engine::Engine;
 use fdpp::runtime::Runtime;
+use fdpp::simengine::{SimEngine, SimSpec};
 use fdpp::workload::{generate, WorkloadSpec};
 
 struct RunReport {
@@ -120,6 +128,92 @@ fn print_report(r: &RunReport) {
     println!("mean host overhead    {:.2?} per step", r.mean_overhead);
 }
 
+/// Flow-control demo on the sim twin: mixed-priority traffic with one
+/// deliberately slow consumer (drains one event every `SLOW_EVERY`
+/// engine steps), small per-request stream buffers so backpressure
+/// actually engages, and a tiny KV pool so preemption is
+/// priority-ordered under pressure.
+fn flow_control_demo(policy: BackpressurePolicy) -> fdpp::Result<()> {
+    const SLOW_EVERY: usize = 24;
+    let cfg = EngineConfig {
+        kv_block_tokens: 8,
+        // Slightly under the workload's aggregate demand, so preemption
+        // engages and is visibly priority-ordered.
+        kv_total_blocks: 48,
+        max_new_tokens: 48,
+        stream_capacity: 4,
+        backpressure: policy,
+        ..EngineConfig::default()
+    };
+    let mut engine = SimEngine::new(cfg, SimSpec::default())?;
+
+    // One slow consumer (priority 0), plus a mix of high/low priority
+    // fast consumers.
+    let slow = engine.submit(
+        GenRequest::text("slow consumer with a long generation budget")
+            .priority(0)
+            .max_new_tokens(48),
+    )?;
+    let mut fast: Vec<(i32, SubmissionHandle)> = Vec::new();
+    for i in 0..6 {
+        let priority = if i % 2 == 0 { 5 } else { -1 };
+        let h = engine.submit(
+            GenRequest::text(format!("fast consumer {i} at priority {priority}"))
+                .priority(priority)
+                .max_new_tokens(16),
+        )?;
+        fast.push((priority, h));
+    }
+    println!(
+        "  queue depths by priority at admission: {:?}",
+        engine.queue_depths()
+    );
+
+    let mut slow_tokens = 0usize;
+    let mut slow_fin = None;
+    let mut steps = 0usize;
+    let mut max_buffered = 0usize;
+    while !engine.is_idle() && steps < 20_000 {
+        engine.step()?;
+        steps += 1;
+        max_buffered = max_buffered.max(slow.events.buffered());
+        // Fast consumers drain every step; the slow one only rarely.
+        for (_, h) in &fast {
+            while let Ok(_ev) = h.events.try_recv() {}
+        }
+        if steps % SLOW_EVERY == 0 {
+            if let Ok(ev) = slow.events.try_recv() {
+                match ev {
+                    GenEvent::Token(_) => slow_tokens += 1,
+                    GenEvent::Finished { reason, .. } => slow_fin = Some(reason),
+                }
+            }
+        }
+    }
+    // Final drain of the slow stream.
+    let (rest, fin) = slow.drain();
+    slow_tokens += rest.len();
+    if let Some((reason, _)) = fin {
+        slow_fin = Some(reason);
+    }
+
+    let m = &engine.metrics;
+    println!("  engine steps           {steps}");
+    println!(
+        "  slow stream            {} tokens delivered, finish {:?}, peak buffer {} (capacity 4)",
+        slow_tokens, slow_fin, max_buffered
+    );
+    println!(
+        "  backpressure           pauses {} / resumes {} / drops {}",
+        m.backpressure_pauses, m.backpressure_resumes, m.backpressure_drops
+    );
+    println!(
+        "  preemptions {} | finished {} | generated {} tokens",
+        m.preemptions, m.requests_finished, m.tokens_generated
+    );
+    Ok(())
+}
+
 fn main() -> fdpp::Result<()> {
     let n: usize = std::env::args()
         .nth(1)
@@ -129,9 +223,22 @@ fn main() -> fdpp::Result<()> {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(20.0);
-    println!("serving {n} requests at ~{rate}/s on the tiny model (CPU PJRT)");
 
-    let a = run("FlashDecoding++ (asynchronized softmax, C1 on)", true, n, rate)?;
+    println!("== flow control demo (sim engine, artifact-free) ==");
+    for policy in [BackpressurePolicy::PauseDecode, BackpressurePolicy::DropSlow] {
+        println!("\npolicy {policy:?}:");
+        flow_control_demo(policy)?;
+    }
+
+    println!("\n== PJRT workload (requires make artifacts) ==");
+    println!("serving {n} requests at ~{rate}/s on the tiny model (CPU PJRT)");
+    let a = match run("FlashDecoding++ (asynchronized softmax, C1 on)", true, n, rate) {
+        Ok(r) => r,
+        Err(e) => {
+            println!("skipping PJRT workload (artifacts unavailable): {e}");
+            return Ok(());
+        }
+    };
     print_report(&a);
     let b = run("baseline (synchronized partial softmax, C1 off)", false, n, rate)?;
     print_report(&b);

@@ -1,5 +1,5 @@
-//! The public serving API: typed requests, streamed events, and the
-//! [`InferenceEngine`] trait implemented by both the PJRT-backed
+//! The public serving API: typed requests, bounded streamed events, and
+//! the [`InferenceEngine`] trait implemented by both the PJRT-backed
 //! [`crate::engine::Engine`] and the deterministic
 //! [`crate::simengine::SimEngine`] twin.
 //!
@@ -13,17 +13,37 @@
 //! - [`GenRequest`]: client id, tenant, priority, stop sequences,
 //!   sampling params, token budget (builder-style constructors).
 //! - [`SubmissionHandle`]: the engine-assigned [`RequestId`] plus the
-//!   [`GenEvent`] stream for that request.
+//!   bounded [`GenEvent`] stream for that request.
 //! - [`GenEvent`]: streamed tokens, then exactly one `Finished`
 //!   carrying the [`FinishReason`] and a per-request [`Usage`] record
 //!   (prefill / cached / generated token counts).
+//!
+//! # Bounded event streams (flow control)
+//!
+//! Event streams are credit-based, not unbounded queues: each stream
+//! created by [`event_channel`] holds at most `capacity` undelivered
+//! tokens (the [`crate::config::EngineConfig::stream_capacity`] knob).
+//! The engine never blocks on a slow client — [`EventSender::try_token`]
+//! fails with [`EmitResult::Full`] and the engine applies its configured
+//! [`crate::config::BackpressurePolicy`] (pause the sequence's decode,
+//! or finish it with [`FinishReason::Overrun`]). The terminal `Finished`
+//! event lives in a dedicated slot outside the token budget, so a
+//! request's outcome is always deliverable even when its token buffer is
+//! full. Engines check stream credit *before* decoding a sequence, so a
+//! generated token is never dropped: generation halts instead.
+//!
+//! The full architecture (request lifecycle, backpressure state
+//! machine) is documented in `docs/ARCHITECTURE.md`; the wire surface in
+//! `docs/PROTOCOL.md`.
 
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::error::Result;
 use crate::metrics::EngineMetrics;
 use crate::sampling::SamplingParams;
 use crate::scheduler::Action;
+use crate::util::json::Json;
 
 /// Engine-assigned request identifier (monotone per engine; doubles as
 /// the KV-cache sequence id).
@@ -50,7 +70,10 @@ pub struct GenRequest {
     /// Multi-tenant accounting key; empty means `"default"`.
     pub tenant: String,
     /// Admission priority: higher is admitted first, FIFO within a
-    /// level.
+    /// level. Preemption victims — drawn from running *and*
+    /// backpressure-paused requests — are chosen lowest-priority-first,
+    /// so a high-priority request is never preempted while a
+    /// lower-priority victim exists.
     pub priority: i32,
     /// Generation finishes with [`FinishReason::Stop`] when the
     /// generated token stream ends with the encoding of any of these
@@ -122,10 +145,18 @@ pub enum FinishReason {
     MaxTokens,
     /// A client stop sequence matched the generated tail.
     Stop,
-    /// Cancelled via [`InferenceEngine::cancel`].
+    /// Cancelled via [`InferenceEngine::cancel`], or the client went
+    /// away (its event stream was dropped) and the engine reclaimed the
+    /// request.
     Cancelled,
     /// KV capacity forced us to stop early.
     Preempted,
+    /// The client consumed tokens slower than the engine produced them,
+    /// its bounded stream filled, and the engine's backpressure policy
+    /// is [`crate::config::BackpressurePolicy::DropSlow`]: the request
+    /// is finished early and its KV reclaimed. Every token generated
+    /// before the overrun is still in the stream buffer.
+    Overrun,
     Error,
 }
 
@@ -138,6 +169,7 @@ impl FinishReason {
             FinishReason::Stop => "stop",
             FinishReason::Cancelled => "cancelled",
             FinishReason::Preempted => "preempted",
+            FinishReason::Overrun => "overrun",
             FinishReason::Error => "error",
         }
     }
@@ -162,15 +194,227 @@ pub enum GenEvent {
     Finished { reason: FinishReason, usage: Usage },
 }
 
+// ---------------------------------------------------------------------
+// Bounded event stream
+// ---------------------------------------------------------------------
+
+/// Outcome of a non-blocking token emit ([`EventSender::try_token`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EmitResult {
+    Sent,
+    /// The stream holds `capacity` undelivered tokens; the engine must
+    /// apply its backpressure policy instead of generating more.
+    Full,
+    /// The receiver was dropped (client gone); the engine should
+    /// reclaim the request.
+    Closed,
+}
+
+/// Sender-side view of a stream's credit, sampled by the engines before
+/// each decode step ([`EventSender::status`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamStatus {
+    /// At least one token slot is free.
+    Ready,
+    /// No free token slots: the next emit would fail.
+    Full,
+    /// The receiver was dropped.
+    Closed,
+}
+
+/// `try_recv` failure: nothing buffered right now, or the stream ended
+/// (terminal event already delivered, or the sender is gone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TryRecvError {
+    Empty,
+    Closed,
+}
+
+/// Blocking `recv` failure: the stream ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvError;
+
+#[derive(Debug)]
+struct StreamState {
+    tokens: VecDeque<u32>,
+    finished: Option<(FinishReason, Usage)>,
+    finish_delivered: bool,
+    tx_alive: bool,
+    rx_alive: bool,
+}
+
+#[derive(Debug)]
+struct StreamShared {
+    state: Mutex<StreamState>,
+    readable: Condvar,
+    capacity: usize,
+}
+
+/// Engine-side endpoint of a bounded event stream. Held by the
+/// sequence; every operation is non-blocking (the engine hot loop must
+/// never wait on a client).
+#[derive(Debug)]
+pub struct EventSender {
+    ch: Arc<StreamShared>,
+}
+
+/// Client-side endpoint of a bounded event stream; the `events` field
+/// of a [`SubmissionHandle`]. Dropping it signals the engine that the
+/// client is gone.
+#[derive(Debug)]
+pub struct EventReceiver {
+    ch: Arc<StreamShared>,
+}
+
+/// Create a bounded event stream holding at most `capacity` undelivered
+/// tokens (floored to 1). The terminal `Finished` event has its own
+/// slot and is always deliverable.
+pub fn event_channel(capacity: usize) -> (EventSender, EventReceiver) {
+    let ch = Arc::new(StreamShared {
+        state: Mutex::new(StreamState {
+            tokens: VecDeque::new(),
+            finished: None,
+            finish_delivered: false,
+            tx_alive: true,
+            rx_alive: true,
+        }),
+        readable: Condvar::new(),
+        capacity: capacity.max(1),
+    });
+    (
+        EventSender {
+            ch: Arc::clone(&ch),
+        },
+        EventReceiver { ch },
+    )
+}
+
+impl EventSender {
+    /// Enqueue one generated token if a slot is free. Never blocks.
+    pub fn try_token(&self, token: u32) -> EmitResult {
+        let mut g = self.ch.state.lock().unwrap();
+        if !g.rx_alive {
+            return EmitResult::Closed;
+        }
+        if g.tokens.len() >= self.ch.capacity {
+            return EmitResult::Full;
+        }
+        g.tokens.push_back(token);
+        drop(g);
+        self.ch.readable.notify_one();
+        EmitResult::Sent
+    }
+
+    /// Record the terminal event. Always succeeds (dedicated slot, not
+    /// subject to the token capacity); the first finish wins.
+    pub fn finish(&self, reason: FinishReason, usage: Usage) {
+        let mut g = self.ch.state.lock().unwrap();
+        if g.finished.is_none() && !g.finish_delivered {
+            g.finished = Some((reason, usage));
+        }
+        drop(g);
+        self.ch.readable.notify_one();
+    }
+
+    /// Current credit state, sampled by the engines before decoding.
+    pub fn status(&self) -> StreamStatus {
+        let g = self.ch.state.lock().unwrap();
+        if !g.rx_alive {
+            StreamStatus::Closed
+        } else if g.tokens.len() >= self.ch.capacity {
+            StreamStatus::Full
+        } else {
+            StreamStatus::Ready
+        }
+    }
+
+    /// Undelivered tokens currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.ch.state.lock().unwrap().tokens.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ch.capacity
+    }
+}
+
+impl Drop for EventSender {
+    fn drop(&mut self) {
+        let mut g = self.ch.state.lock().unwrap();
+        g.tx_alive = false;
+        drop(g);
+        self.ch.readable.notify_one();
+    }
+}
+
+impl EventReceiver {
+    /// Next buffered event: tokens in order, then the terminal event.
+    pub fn try_recv(&self) -> std::result::Result<GenEvent, TryRecvError> {
+        let mut g = self.ch.state.lock().unwrap();
+        if let Some(t) = g.tokens.pop_front() {
+            return Ok(GenEvent::Token(t));
+        }
+        if let Some((reason, usage)) = g.finished.take() {
+            g.finish_delivered = true;
+            return Ok(GenEvent::Finished { reason, usage });
+        }
+        if g.finish_delivered || !g.tx_alive {
+            Err(TryRecvError::Closed)
+        } else {
+            Err(TryRecvError::Empty)
+        }
+    }
+
+    /// Block until the next event; `Err` when the stream is over (the
+    /// terminal event was already delivered, or the sender vanished
+    /// without one).
+    pub fn recv(&self) -> std::result::Result<GenEvent, RecvError> {
+        let mut g = self.ch.state.lock().unwrap();
+        loop {
+            if let Some(t) = g.tokens.pop_front() {
+                return Ok(GenEvent::Token(t));
+            }
+            if let Some((reason, usage)) = g.finished.take() {
+                g.finish_delivered = true;
+                return Ok(GenEvent::Finished { reason, usage });
+            }
+            if g.finish_delivered || !g.tx_alive {
+                return Err(RecvError);
+            }
+            g = self.ch.readable.wait(g).unwrap();
+        }
+    }
+
+    /// Undelivered tokens currently buffered (== the engine-side view).
+    pub fn buffered(&self) -> usize {
+        self.ch.state.lock().unwrap().tokens.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ch.capacity
+    }
+}
+
+impl Drop for EventReceiver {
+    fn drop(&mut self) {
+        self.ch.state.lock().unwrap().rx_alive = false;
+    }
+}
+
 /// What [`InferenceEngine::submit`] hands back: the assigned id (usable
-/// with `cancel`) and the per-request event stream.
+/// with `cancel`) and the per-request bounded event stream.
 #[derive(Debug)]
 pub struct SubmissionHandle {
     pub id: RequestId,
-    pub events: mpsc::Receiver<GenEvent>,
+    pub events: EventReceiver,
 }
 
 impl SubmissionHandle {
+    /// Token-buffer capacity of this request's stream.
+    pub fn capacity(&self) -> usize {
+        self.events.capacity()
+    }
+
     /// Drain every buffered event: generated tokens plus, once the
     /// request is over, its finish reason and usage record.
     pub fn drain(&self) -> (Vec<u32>, Option<(FinishReason, Usage)>) {
@@ -198,22 +442,55 @@ pub trait InferenceEngine {
     /// Run one scheduling iteration (prefill, decode, or idle).
     fn step(&mut self) -> Result<Action>;
 
-    /// Cancel a queued or running request: its stream receives one
-    /// final `Finished { reason: Cancelled, .. }` and every KV block it
-    /// held is released. Returns `false` for unknown (or already
-    /// finished) ids.
+    /// Cancel a queued, running, or backpressure-paused request: its
+    /// stream receives one final `Finished { reason: Cancelled, .. }`
+    /// and every KV block it held is released. Returns `false` for
+    /// unknown (or already finished) ids.
     fn cancel(&mut self, id: RequestId) -> Result<bool>;
 
     /// Cumulative engine metrics (counters, latency histograms,
     /// per-tenant usage).
     fn metrics(&self) -> &EngineMetrics;
 
-    /// True when no work remains (queue empty, nothing running).
+    /// True when no work remains (queue empty, nothing running, nothing
+    /// paused on backpressure).
     fn is_idle(&self) -> bool;
 
     fn queued(&self) -> usize;
 
     fn running(&self) -> usize;
+
+    /// Sequences parked by stream backpressure (they hold KV but no
+    /// decode lane). Zero for engines without flow control.
+    fn paused(&self) -> usize {
+        0
+    }
+
+    /// Instantaneous intake-queue depth per priority level, ascending
+    /// by priority. Empty for engines without a priority queue.
+    fn queue_depths(&self) -> Vec<(i32, usize)> {
+        Vec::new()
+    }
+
+    /// The `{"stats": true}` snapshot: cumulative metrics plus the
+    /// instantaneous queue/running/paused gauges and per-priority
+    /// depths. Front-ends may merge their own fields (the server adds
+    /// the request-registry depth) before serializing.
+    fn stats_json(&self) -> Json {
+        let mut j = self.metrics().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("queued".to_string(), Json::Num(self.queued() as f64));
+            map.insert("running".to_string(), Json::Num(self.running() as f64));
+            map.insert("paused".to_string(), Json::Num(self.paused() as f64));
+            let depths = self
+                .queue_depths()
+                .into_iter()
+                .map(|(p, n)| (p.to_string(), Json::Num(n as f64)))
+                .collect();
+            map.insert("queue_depths".to_string(), Json::Obj(depths));
+        }
+        j
+    }
 
     /// Tokenize prompt text exactly the way `submit` would.
     fn encode(&self, text: &str) -> Vec<u32>;
@@ -222,6 +499,12 @@ pub trait InferenceEngine {
     fn decode(&self, tokens: &[u32]) -> String;
 
     /// Drive until all submitted work is finished (offline mode).
+    ///
+    /// Note: with `BackpressurePolicy::PauseDecode`, a request whose
+    /// handle is never drained parks once its stream fills and this
+    /// loop will not terminate — offline callers must drain handles
+    /// while stepping (as [`InferenceEngine::generate_text`] does) or
+    /// size `stream_capacity` above their token budget.
     fn run_to_completion(&mut self) -> Result<()> {
         while !self.is_idle() {
             self.step()?;
@@ -229,7 +512,11 @@ pub trait InferenceEngine {
         Ok(())
     }
 
-    /// Offline helper: one blocking generation, decoded to text.
+    /// Offline helper: one blocking generation, decoded to text. Drains
+    /// the stream while stepping and returns when *this* request's
+    /// terminal event arrives, so it terminates for any
+    /// `stream_capacity` and regardless of other submitted-but-undrained
+    /// requests (which may be parked on backpressure indefinitely).
     fn generate_text(
         &mut self,
         prompt: &str,
@@ -240,8 +527,15 @@ pub trait InferenceEngine {
             .params(params)
             .max_new_tokens(max_new_tokens);
         let handle = self.submit(req)?;
-        self.run_to_completion()?;
-        let (toks, _) = handle.drain();
+        let mut toks = Vec::new();
+        loop {
+            let (mut t, fin) = handle.drain();
+            toks.append(&mut t);
+            if fin.is_some() {
+                break;
+            }
+            self.step()?;
+        }
         Ok(self.decode(&toks))
     }
 }
@@ -274,6 +568,7 @@ mod tests {
             (FinishReason::Stop, "stop"),
             (FinishReason::Cancelled, "cancelled"),
             (FinishReason::Preempted, "preempted"),
+            (FinishReason::Overrun, "overrun"),
             (FinishReason::Error, "error"),
         ] {
             assert_eq!(r.as_str(), s);
@@ -282,24 +577,81 @@ mod tests {
 
     #[test]
     fn drain_collects_tokens_and_finish() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = event_channel(8);
         let h = SubmissionHandle { id: 1, events: rx };
-        tx.send(GenEvent::Token(10)).unwrap();
-        tx.send(GenEvent::Token(11)).unwrap();
-        tx.send(GenEvent::Finished {
-            reason: FinishReason::Eos,
-            usage: Usage {
+        assert_eq!(tx.try_token(10), EmitResult::Sent);
+        assert_eq!(tx.try_token(11), EmitResult::Sent);
+        tx.finish(
+            FinishReason::Eos,
+            Usage {
                 prompt_tokens: 4,
                 cached_prompt_tokens: 0,
                 prefill_tokens: 4,
                 generated_tokens: 2,
             },
-        })
-        .unwrap();
+        );
         let (toks, fin) = h.drain();
         assert_eq!(toks, vec![10, 11]);
         let (reason, usage) = fin.unwrap();
         assert_eq!(reason, FinishReason::Eos);
         assert_eq!(usage.generated_tokens, 2);
+        // The stream is over: further receives report Closed.
+        assert!(matches!(h.events.try_recv(), Err(TryRecvError::Closed)));
+    }
+
+    #[test]
+    fn stream_is_bounded_at_capacity() {
+        let (tx, rx) = event_channel(2);
+        assert_eq!(rx.capacity(), 2);
+        assert_eq!(tx.try_token(1), EmitResult::Sent);
+        assert_eq!(tx.try_token(2), EmitResult::Sent);
+        assert_eq!(tx.status(), StreamStatus::Full);
+        assert_eq!(tx.try_token(3), EmitResult::Full, "third token must not fit");
+        assert_eq!(tx.buffered(), 2);
+        // Draining one restores credit.
+        assert!(matches!(rx.try_recv(), Ok(GenEvent::Token(1))));
+        assert_eq!(tx.status(), StreamStatus::Ready);
+        assert_eq!(tx.try_token(3), EmitResult::Sent);
+    }
+
+    #[test]
+    fn finish_lands_even_when_token_buffer_is_full() {
+        let (tx, rx) = event_channel(1);
+        assert_eq!(tx.try_token(7), EmitResult::Sent);
+        assert_eq!(tx.try_token(8), EmitResult::Full);
+        tx.finish(FinishReason::Overrun, Usage::default());
+        let h = SubmissionHandle { id: 1, events: rx };
+        let (toks, fin) = h.drain();
+        assert_eq!(toks, vec![7], "buffered token survives");
+        assert_eq!(fin.unwrap().0, FinishReason::Overrun);
+    }
+
+    #[test]
+    fn dropped_receiver_reports_closed() {
+        let (tx, rx) = event_channel(4);
+        drop(rx);
+        assert_eq!(tx.status(), StreamStatus::Closed);
+        assert_eq!(tx.try_token(1), EmitResult::Closed);
+    }
+
+    #[test]
+    fn dropped_sender_unblocks_receiver() {
+        let (tx, rx) = event_channel(4);
+        assert_eq!(tx.try_token(5), EmitResult::Sent);
+        drop(tx);
+        assert!(matches!(rx.recv(), Ok(GenEvent::Token(5))));
+        assert!(
+            matches!(rx.recv(), Err(RecvError)),
+            "no terminal event: stream ends"
+        );
+        assert!(matches!(rx.try_recv(), Err(TryRecvError::Closed)));
+    }
+
+    #[test]
+    fn zero_capacity_is_floored_to_one() {
+        let (tx, _rx) = event_channel(0);
+        assert_eq!(tx.capacity(), 1);
+        assert_eq!(tx.try_token(1), EmitResult::Sent);
+        assert_eq!(tx.try_token(2), EmitResult::Full);
     }
 }

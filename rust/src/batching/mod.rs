@@ -27,7 +27,7 @@ pub fn pick_prefill_bucket(buckets: &[usize], len: usize) -> Option<usize> {
 /// The decode batch the engine will execute this step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DecodeBatch {
-    /// lanes[i] holds the sequence in lane i; None = padding hole.
+    /// `lanes[i]` holds the sequence in lane i; None = padding hole.
     pub lanes: Vec<Option<SeqId>>,
     pub bucket: usize,
 }

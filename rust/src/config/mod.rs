@@ -116,6 +116,41 @@ pub fn paper_model(name: &str) -> Result<ModelConfig> {
         .ok_or_else(|| Error::Config(format!("unknown paper model {name}")))
 }
 
+/// What an engine does when a request's bounded event stream is full
+/// (the client consumes slower than the engine generates). See
+/// `docs/ARCHITECTURE.md` for the full backpressure state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackpressurePolicy {
+    /// Park the sequence: it keeps its KV blocks but releases its
+    /// decode lane until the client drains below half capacity, then
+    /// rejoins the batch. Memory stays bounded; no token is lost.
+    PauseDecode,
+    /// Finish the sequence early with
+    /// [`crate::api::FinishReason::Overrun`] and reclaim its KV. The
+    /// tokens already buffered remain deliverable.
+    DropSlow,
+}
+
+impl BackpressurePolicy {
+    /// Stable config-file name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackpressurePolicy::PauseDecode => "pause_decode",
+            BackpressurePolicy::DropSlow => "drop_slow",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pause_decode" => Ok(BackpressurePolicy::PauseDecode),
+            "drop_slow" => Ok(BackpressurePolicy::DropSlow),
+            other => Err(Error::Config(format!(
+                "backpressure must be \"pause_decode\" or \"drop_slow\", got {other:?}"
+            ))),
+        }
+    }
+}
+
 /// Serving-engine knobs.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -142,6 +177,12 @@ pub struct EngineConfig {
     pub temperature: f32,
     pub top_k: usize,
     pub seed: u64,
+    /// Token capacity of each request's bounded event stream: at most
+    /// this many undelivered tokens buffer per request (the terminal
+    /// finish event has its own slot). Must be >= 1.
+    pub stream_capacity: usize,
+    /// What to do when a request's stream is full.
+    pub backpressure: BackpressurePolicy,
 }
 
 impl Default for EngineConfig {
@@ -159,6 +200,8 @@ impl Default for EngineConfig {
             temperature: 0.0,
             top_k: 0,
             seed: 0,
+            stream_capacity: 256,
+            backpressure: BackpressurePolicy::PauseDecode,
         }
     }
 }
@@ -204,6 +247,11 @@ impl EngineConfig {
                 .unwrap_or(d.temperature as f64) as f32,
             top_k: usizes("top_k", d.top_k),
             seed: j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            stream_capacity: usizes("stream_capacity", d.stream_capacity),
+            backpressure: match j.get("backpressure").and_then(Json::as_str) {
+                Some(s) => BackpressurePolicy::parse(s)?,
+                None => d.backpressure,
+            },
         })
     }
 
@@ -225,6 +273,11 @@ impl EngineConfig {
         if self.max_running > *self.decode_buckets.last().unwrap() {
             return Err(Error::Config(
                 "max_running exceeds largest decode bucket".into(),
+            ));
+        }
+        if self.stream_capacity == 0 {
+            return Err(Error::Config(
+                "stream_capacity must be at least 1".into(),
             ));
         }
         Ok(())
@@ -275,5 +328,16 @@ mod tests {
         c.decode_buckets = vec![1, 4];
         c.max_running = 100;
         assert!(c.validate().is_err());
+        c.max_running = 4;
+        c.stream_capacity = 0;
+        assert!(c.validate().is_err(), "zero stream capacity rejected");
+    }
+
+    #[test]
+    fn backpressure_policy_names_round_trip() {
+        for p in [BackpressurePolicy::PauseDecode, BackpressurePolicy::DropSlow] {
+            assert_eq!(BackpressurePolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(BackpressurePolicy::parse("block_forever").is_err());
     }
 }

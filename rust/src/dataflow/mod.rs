@@ -188,7 +188,7 @@ pub fn find_inflections(
     })
 }
 
-/// Smallest ms[i] from which `wins` stays true; `usize::MAX`-like
+/// Smallest `ms[i]` from which `wins` stays true; `usize::MAX`-like
 /// sentinel (beyond the last M) when the challenger never stabilizes.
 fn first_stable_win(ms: &[usize], wins: &[bool]) -> usize {
     let mut idx = ms.len();

@@ -21,13 +21,13 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::api::{FinishReason, GenEvent, GenRequest, InferenceEngine, RequestId, SubmissionHandle};
+use crate::api::{FinishReason, GenRequest, InferenceEngine, RequestId, SubmissionHandle};
 use crate::batching::{pick_prefill_bucket, Batcher};
 use crate::config::EngineConfig;
 use crate::error::{Error, Result};
 use crate::kvcache::{KvCache, KvGeometry, SeqId};
 use crate::metrics::EngineMetrics;
-use crate::policy;
+use crate::policy::{self, StreamOp};
 use crate::prefixcache::PrefixCache;
 use crate::router::{self, Router, SeqState, Sequence};
 use crate::runtime::{literal_f32, literal_i32, to_vec_f32, Manifest, Runtime};
@@ -56,6 +56,10 @@ pub struct Engine {
     router: Router,
     sampler: Sampler,
     seqs: HashMap<SeqId, Sequence>,
+    /// Sequences parked by stream backpressure: they stay in `seqs`
+    /// (state `Paused`) and keep their KV in the paged store, but hold
+    /// no decode lane (their device-resident KV is persisted on pause).
+    paused: Vec<SeqId>,
     dense: Option<DenseState>,
     pub metrics: EngineMetrics,
     pub tokenizer: ByteTokenizer,
@@ -82,6 +86,7 @@ impl Engine {
             sampler: Sampler::new(cfg.seed),
             router: Router::new(),
             seqs: HashMap::new(),
+            paused: Vec::new(),
             dense: None,
             metrics: EngineMetrics::default(),
             kv,
@@ -119,10 +124,7 @@ impl Engine {
         let bucket = match pick_prefill_bucket(&self.cfg.prefill_buckets, len) {
             Some(b) => b,
             None => {
-                seq.emit(GenEvent::Finished {
-                    reason: FinishReason::Error,
-                    usage: seq.usage(),
-                });
+                seq.emit_finish(FinishReason::Error, seq.usage());
                 return Err(Error::Request(format!("prompt {len} exceeds prefill buckets")));
             }
         };
@@ -132,18 +134,39 @@ impl Engine {
         // artifacts — but the matched blocks are shared, not
         // re-allocated, and the accounting below drives the cache-aware
         // scheduler.)
+        // Paused sequences count as pending work: their blocks return
+        // when they resume or finish, so admission must wait for them
+        // rather than fail the request.
         let matched = match policy::admit_kv(
             &self.cfg,
             &mut self.kv,
             &mut self.prefix,
             &mut self.metrics,
-            self.batcher.is_empty(),
+            self.batcher.is_empty() && self.paused.is_empty(),
             seq.id,
             &seq.prompt,
         ) {
             Ok(Some(m)) => m,
             Ok(None) => {
-                // No room yet: requeue and let decode drain blocks.
+                // No room yet: requeue and let decode drain blocks. If
+                // nothing is decoding, the holders are parked on
+                // backpressure and decode will never free blocks —
+                // preempt a strictly lower-priority parked victim so a
+                // high-priority waiter is not starved by a stalled
+                // client.
+                if self.batcher.is_empty() {
+                    if let Some(victim) = policy::admission_relief_victim(
+                        &self.kv,
+                        &self.seqs,
+                        &self.paused,
+                        seq.priority,
+                    ) {
+                        self.paused.retain(|&p| p != victim);
+                        let mut vseq = self.seqs.remove(&victim).unwrap();
+                        self.metrics.preemptions += 1;
+                        self.finish_seq(&mut vseq, FinishReason::Preempted)?;
+                    }
+                }
                 self.router.requeue_front(seq);
                 return self.step_decode();
             }
@@ -187,7 +210,9 @@ impl Engine {
         seq.generated.push(tok);
         seq.first_token_at = Some(Instant::now());
         self.metrics.first_token.record(seq.arrived.elapsed());
-        seq.emit(GenEvent::Token(tok));
+        // A fresh stream always has credit (capacity >= 1); a client
+        // that already hung up is reaped by the next step's stream scan.
+        let _ = seq.emit_token(tok);
         self.metrics.tokens_generated += 1;
         self.metrics.requests_admitted += 1;
 
@@ -246,16 +271,27 @@ impl Engine {
 
     fn step_decode(&mut self) -> Result<()> {
         let t0 = Instant::now();
+        // The stream scan may have paused or dropped every running
+        // sequence; there is nothing to decode then.
+        if self.batcher.is_empty() {
+            return Ok(());
+        }
         // KV headroom: each running sequence may need one fresh block.
         // The shared policy reclaims cached prefix blocks first;
-        // preemption is the last resort (needs >= 2 running).
+        // preemption is the last resort, drawing victims from running
+        // *and* backpressure-paused sequences (parked work holds KV
+        // too).
         while policy::reclaim_decode_headroom(
             &mut self.kv,
             &mut self.prefix,
             &mut self.metrics,
             self.batcher.len(),
+            self.batcher.len() + self.paused.len(),
         ) {
             self.preempt_one()?;
+        }
+        if self.batcher.is_empty() {
+            return Ok(()); // preemption may have taken the last runner
         }
         let batch = self.batcher.assemble()?;
         let bucket = batch.bucket;
@@ -323,7 +359,10 @@ impl Engine {
             self.kv.grow_one(*id)?;
             seq.kv_len += 1;
             seq.generated.push(tok);
-            seq.emit(GenEvent::Token(tok));
+            // Cannot be Full: the pre-decode stream scan guaranteed at
+            // least one credit and this is the step's only token. A
+            // mid-step disconnect is reaped by the next scan.
+            let _ = seq.emit_token(tok);
             self.metrics.tokens_generated += 1;
             self.metrics.decode_rows += 1;
             if flags_host[i] > 0.5 {
@@ -412,16 +451,94 @@ impl Engine {
         Ok(())
     }
 
-    /// Preempt one running sequence (KV pressure): the scheduler picks
-    /// the victim *by id* over the shared policy's reusable-block
-    /// census, and the engine resolves id -> lane.
+    /// Preempt one victim under KV pressure: the scheduler picks it
+    /// *by id* over the shared policy's priority-aware census, which
+    /// spans running *and* backpressure-paused sequences (a parked slow
+    /// client's KV is reclaimable like any other). Running victims go
+    /// through `retire` (lane + dense bookkeeping); paused victims hold
+    /// no lane and finish directly.
     fn preempt_one(&mut self) -> Result<()> {
-        let candidates = policy::preempt_candidates(&self.kv, &self.batcher.running_ids());
+        let mut pool = self.batcher.running_ids();
+        pool.extend(self.paused.iter().copied());
+        let candidates = policy::preempt_candidates(&self.kv, &self.seqs, &pool);
         let id = preemption_victim(&candidates)
             .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
         let mut seq = self.seqs.remove(&id).unwrap();
         self.metrics.preemptions += 1;
-        self.retire(&mut seq, FinishReason::Preempted)
+        if self.paused.contains(&id) {
+            self.paused.retain(|&p| p != id);
+            self.finish_seq(&mut seq, FinishReason::Preempted)
+        } else {
+            self.retire(&mut seq, FinishReason::Preempted)
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Stream flow control
+    // -----------------------------------------------------------------
+
+    /// Park a running sequence whose client stream is out of credit.
+    /// Its device-resident KV is persisted into the paged store first
+    /// (the sequence will continue later, unlike a retirement), then
+    /// its lane is released; the next decode step rebuilds the dense
+    /// cache for the smaller batch.
+    fn pause_seq(&mut self, id: SeqId) -> Result<()> {
+        self.invalidate_dense()?;
+        self.batcher.remove(id)?;
+        self.seqs.get_mut(&id).unwrap().state = SeqState::Paused;
+        self.paused.push(id);
+        self.metrics.backpressure_pauses += 1;
+        Ok(())
+    }
+
+    /// Apply backpressure at the top of every step. The *decisions*
+    /// (resume order, hysteresis, policy) are the shared
+    /// [`policy::plan_stream_ops`]; this method supplies only the PJRT
+    /// engine's mechanics: a resumed sequence's KV lives in the paged
+    /// store (persisted at pause), so the lane mismatch makes the next
+    /// decode step rebuild the dense cache. Checking credit *before*
+    /// decode means a generated token always has a slot — backpressure
+    /// halts generation, never loses data.
+    fn service_streams(&mut self) -> Result<()> {
+        let free_lanes = self.cfg.max_running.saturating_sub(self.batcher.len());
+        let ops = policy::plan_stream_ops(
+            &self.seqs,
+            &self.paused,
+            &self.batcher.running_ids(),
+            self.cfg.backpressure,
+            free_lanes,
+        );
+        for op in ops {
+            match op {
+                StreamOp::Resume(id) => {
+                    let admission = self.batcher.admit(id)?;
+                    if admission.bucket_grew {
+                        self.invalidate_dense()?;
+                    }
+                    self.paused.retain(|&p| p != id);
+                    self.seqs.get_mut(&id).unwrap().state = SeqState::Decoding;
+                    self.metrics.backpressure_resumes += 1;
+                }
+                StreamOp::ReapPaused(id) => {
+                    self.paused.retain(|&p| p != id);
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.metrics.client_disconnects += 1;
+                    self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+                }
+                StreamOp::ReapRunning(id) => {
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.metrics.client_disconnects += 1;
+                    self.retire(&mut seq, FinishReason::Cancelled)?;
+                }
+                StreamOp::Pause(id) => self.pause_seq(id)?,
+                StreamOp::DropOverrun(id) => {
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.metrics.backpressure_drops += 1;
+                    self.retire(&mut seq, FinishReason::Overrun)?;
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Register a finished/preempted sequence's *prompt* KV in the
@@ -442,7 +559,7 @@ impl Engine {
     fn finish_seq(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
         seq.state = SeqState::Finished(reason);
         let usage = seq.usage();
-        seq.emit(GenEvent::Finished { reason, usage });
+        seq.emit_finish(reason, usage);
         self.metrics.record_finish(&seq.tenant, usage);
         self.register_prefix(seq);
         if self.kv.contains(seq.id) {
@@ -478,11 +595,14 @@ impl InferenceEngine for Engine {
             &req,
             prompt_tokens,
             self.cfg.max_new_tokens,
+            self.cfg.stream_capacity,
         )
     }
 
-    /// Run one scheduling iteration. Returns the action taken.
+    /// Run one scheduling iteration: service stream flow control, then
+    /// prefill/decode/idle. Returns the action taken.
     fn step(&mut self) -> Result<Action> {
+        self.service_streams()?;
         let state = policy::plan_admission(
             &self.cfg,
             &mut self.kv,
@@ -501,12 +621,21 @@ impl InferenceEngine for Engine {
         Ok(action)
     }
 
-    /// Cancel a queued or running request; its KV blocks are released
-    /// (prompt blocks may survive in the prefix cache, refcounted by the
-    /// tree alone).
+    /// Cancel a queued, running, or paused request; its KV blocks are
+    /// released (prompt blocks may survive in the prefix cache,
+    /// refcounted by the tree alone).
     fn cancel(&mut self, id: RequestId) -> Result<bool> {
         if let Some(mut seq) = self.router.take(id) {
             self.metrics.cancellations += 1;
+            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+            return Ok(true);
+        }
+        if self.paused.contains(&id) {
+            self.paused.retain(|&p| p != id);
+            let mut seq = self.seqs.remove(&id).unwrap();
+            self.metrics.cancellations += 1;
+            // Paused sequences hold no lane and no dense-cache slot:
+            // finish directly, no retire bookkeeping.
             self.finish_seq(&mut seq, FinishReason::Cancelled)?;
             return Ok(true);
         }
@@ -524,7 +653,7 @@ impl InferenceEngine for Engine {
 
     /// True when no work remains.
     fn is_idle(&self) -> bool {
-        self.router.queued() == 0 && self.batcher.is_empty()
+        self.router.queued() == 0 && self.batcher.is_empty() && self.paused.is_empty()
     }
 
     fn queued(&self) -> usize {
@@ -533,6 +662,14 @@ impl InferenceEngine for Engine {
 
     fn running(&self) -> usize {
         self.batcher.len()
+    }
+
+    fn paused(&self) -> usize {
+        self.paused.len()
+    }
+
+    fn queue_depths(&self) -> Vec<(i32, usize)> {
+        self.router.depths_by_priority()
     }
 
     fn encode(&self, text: &str) -> Vec<u32> {

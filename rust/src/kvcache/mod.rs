@@ -459,7 +459,7 @@ impl KvCache {
     // -----------------------------------------------------------------
 
     /// Gather sequences into dense batch tensors [Lyr, B, H, Lmax, Dh]
-    /// (lane i <- lanes[i]; None lanes stay zero).
+    /// (lane i <- `lanes[i]`; None lanes stay zero).
     pub fn gather_dense(
         &self,
         lanes: &[Option<SeqId>],

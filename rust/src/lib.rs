@@ -67,6 +67,44 @@
 //! priority, and stop sequences; finish events carry a per-request
 //! usage record (prefill / cached / generated token counts), and
 //! metrics aggregate per-tenant counters.
+//!
+//! # End-to-end flow control
+//!
+//! The serving path is flow-controlled end to end, so memory stays
+//! bounded under any client behavior:
+//!
+//! - Every request streams its events over a *bounded* channel
+//!   ([`api::event_channel`], capacity =
+//!   [`config::EngineConfig::stream_capacity`]). Engines check stream
+//!   credit *before* decoding a sequence, so backpressure halts
+//!   generation instead of dropping tokens.
+//! - When a slow client's buffer fills, the configured
+//!   [`config::BackpressurePolicy`] applies: `PauseDecode` parks the
+//!   sequence (keeps KV, releases its decode lane, resumes losslessly
+//!   once the client drains below half capacity) and `DropSlow`
+//!   finishes it with `FinishReason::Overrun` and reclaims its KV.
+//!   Dropped receivers (client hang-ups) are detected the same way and
+//!   reclaimed.
+//! - Preemption under KV pressure is *priority-aware* and its victim
+//!   pool spans running and backpressure-paused sequences (parked work
+//!   holds KV too): victims are ordered by (priority asc,
+//!   reusable-blocks desc, recency), so a request is never preempted
+//!   while a strictly lower-priority victim exists
+//!   ([`scheduler::preemption_victim`] over
+//!   [`policy::preempt_candidates`]).
+//! - The server keeps a cross-connection [`router::RequestRegistry`]:
+//!   every accepted submission gets a server-global id, `{"cancel": id}`
+//!   works from any connection, and the admin
+//!   `{"admin": {"cancel_tenant": ...}}` verb bulk-cancels a tenant.
+//!
+//! # Documentation map
+//!
+//! - `docs/ARCHITECTURE.md` — module map, KV block lifecycle, request
+//!   lifecycle (including the backpressure states), and the
+//!   paper-technique-to-module table.
+//! - `docs/PROTOCOL.md` — the JSON-lines wire protocol (v2.1): stream
+//!   credit semantics, global ids, admin verbs, error codes.
+//! - `ROADMAP.md` / `PAPER.md` — project north star and source paper.
 
 pub mod api;
 pub mod baselines;

@@ -157,6 +157,18 @@ pub struct EngineMetrics {
     pub preemptions: u64,
     /// Requests cancelled via `InferenceEngine::cancel`.
     pub cancellations: u64,
+    /// Flow control: sequences parked because their bounded client
+    /// stream ran out of credit (`BackpressurePolicy::PauseDecode`).
+    pub backpressure_pauses: u64,
+    /// Paused sequences that rejoined the decode batch after their
+    /// client drained.
+    pub backpressure_resumes: u64,
+    /// Requests finished early with `FinishReason::Overrun`
+    /// (`BackpressurePolicy::DropSlow`).
+    pub backpressure_drops: u64,
+    /// Requests reclaimed because the client dropped its event stream
+    /// (hang-up detected mid-generation).
+    pub client_disconnects: u64,
     /// Per-tenant generated/cached token counters (recorded at request
     /// finish, exposed in the `{"stats": true}` snapshot).
     pub tenants: BTreeMap<String, TenantCounters>,
@@ -230,6 +242,22 @@ impl EngineMetrics {
             ("kv_inserts", Json::Num(self.kv_inserts as f64)),
             ("preemptions", Json::Num(self.preemptions as f64)),
             ("cancellations", Json::Num(self.cancellations as f64)),
+            (
+                "backpressure_pauses",
+                Json::Num(self.backpressure_pauses as f64),
+            ),
+            (
+                "backpressure_resumes",
+                Json::Num(self.backpressure_resumes as f64),
+            ),
+            (
+                "backpressure_drops",
+                Json::Num(self.backpressure_drops as f64),
+            ),
+            (
+                "client_disconnects",
+                Json::Num(self.client_disconnects as f64),
+            ),
             (
                 "tenants",
                 Json::Obj(

@@ -16,11 +16,23 @@
 //!   preemption, and the reusable-block census the preemption victim
 //!   choice ([`crate::scheduler::preemption_victim`]) runs on.
 //!
+//! The module also owns the *flow-control* decisions shared by both
+//! engines ([`stream_verdict`], [`ready_to_resume`], [`resume_order`]):
+//! when a running sequence must be paused or dropped because its
+//! bounded client stream is out of credit, when a paused sequence may
+//! rejoin the batch, and in which order paused sequences resume
+//! (priority first). The engine-specific mechanics (lane detach, dense
+//! KV invalidation) stay in the engines; the *semantics* live here so
+//! the sim twin cannot drift.
+//!
 //! The pure decision functions (`decide`, `preemption_victim`) stay in
 //! [`crate::scheduler`]; this module owns the stateful glue between
 //! them and the KV / prefix caches.
 
-use crate::config::EngineConfig;
+use std::collections::HashMap;
+
+use crate::api::StreamStatus;
+use crate::config::{BackpressurePolicy, EngineConfig};
 use crate::error::Result;
 use crate::kvcache::{KvCache, SeqId};
 use crate::metrics::EngineMetrics;
@@ -190,13 +202,19 @@ pub fn plan_admission(
 /// Decode-time KV headroom: each running sequence may need one fresh
 /// block this step. Reclaim cached prefix blocks first (even for a lone
 /// sequence — tree-held blocks are reclaimable memory). Returns `true`
-/// when the caller must preempt a running sequence (still short, and at
-/// least two running) and call again.
+/// when the caller must preempt a victim (still short, and at least two
+/// in the victim pool) and call again.
+///
+/// `victims` is the preemptable population: running sequences *plus*
+/// backpressure-paused ones (parked sequences hold KV too, and must be
+/// takeable — otherwise one stalled client could starve live work). A
+/// lone victim is never preempted to feed itself.
 pub fn reclaim_decode_headroom(
     kv: &mut KvCache,
     prefix: &mut PrefixCache,
     metrics: &mut EngineMetrics,
     running: usize,
+    victims: usize,
 ) -> bool {
     if kv.free_blocks() >= running {
         return false;
@@ -204,13 +222,20 @@ pub fn reclaim_decode_headroom(
     let want = running - kv.free_blocks();
     let freed = prefix.evict(want, kv);
     metrics.prefix_blocks_evicted += freed as u64;
-    kv.free_blocks() < running && running > 1
+    kv.free_blocks() < running && victims > 1
 }
 
-/// The reusable-block census preemption runs on: for every running
-/// sequence, how many of its blocks would *stay reusable* (shared with
-/// the prefix cache or other sequences) if it were evicted now.
-pub fn preempt_candidates(kv: &KvCache, running_ids: &[SeqId]) -> Vec<PreemptCandidate> {
+/// The census preemption runs on: for every running sequence, its
+/// request priority and how many of its blocks would *stay reusable*
+/// (shared with the prefix cache or other sequences) if it were evicted
+/// now. [`crate::scheduler::preemption_victim`] orders victims by
+/// `(priority asc, reusable desc, recency)`, so a request is never
+/// preempted while a strictly lower-priority victim exists.
+pub fn preempt_candidates(
+    kv: &KvCache,
+    seqs: &HashMap<SeqId, Sequence>,
+    running_ids: &[SeqId],
+) -> Vec<PreemptCandidate> {
     running_ids
         .iter()
         .map(|&id| {
@@ -220,10 +245,148 @@ pub fn preempt_candidates(kv: &KvCache, running_ids: &[SeqId]) -> Vec<PreemptCan
                 .unwrap_or(0);
             PreemptCandidate {
                 id,
+                priority: seqs.get(&id).map(|s| s.priority).unwrap_or(0),
                 reusable_blocks: reusable,
             }
         })
         .collect()
+}
+
+/// Admission-path relief: when a queued request cannot admit and no
+/// decode is running to free blocks, the only KV holders may be
+/// sequences parked on backpressure. Pick a parked victim to preempt —
+/// the usual (priority asc, reusable desc, recency) choice — but only
+/// when it has *strictly lower* priority than the waiting request:
+/// parked work keeps its KV against equal-or-lower-priority arrivals
+/// (it was admitted first), while a higher-priority waiter is never
+/// starved by a stalled lower-priority client.
+pub fn admission_relief_victim(
+    kv: &KvCache,
+    seqs: &HashMap<SeqId, Sequence>,
+    paused: &[SeqId],
+    waiter_priority: i32,
+) -> Option<SeqId> {
+    let candidates = preempt_candidates(kv, seqs, paused);
+    let victim = crate::scheduler::preemption_victim(&candidates)?;
+    let victim_priority = seqs.get(&victim).map(|s| s.priority).unwrap_or(0);
+    (victim_priority < waiter_priority).then_some(victim)
+}
+
+// ---------------------------------------------------------------------
+// Stream flow control (shared backpressure semantics)
+// ---------------------------------------------------------------------
+
+/// What the engine must do about one running sequence's stream before
+/// decoding it this step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamVerdict {
+    /// Credit available: decode normally.
+    Flowing,
+    /// Token buffer full: apply the configured policy (pause or drop).
+    Stalled,
+    /// The client dropped its receiver: reclaim the request.
+    Disconnected,
+}
+
+/// Sample a sequence's stream credit (run *before* decoding it, so a
+/// generated token always has a slot and is never dropped).
+pub fn stream_verdict(seq: &Sequence) -> StreamVerdict {
+    match seq.stream.status() {
+        StreamStatus::Ready => StreamVerdict::Flowing,
+        StreamStatus::Full => StreamVerdict::Stalled,
+        StreamStatus::Closed => StreamVerdict::Disconnected,
+    }
+}
+
+/// Hysteresis for un-pausing: a paused sequence rejoins the batch only
+/// once its client drained to at most half the stream capacity, so a
+/// client draining one token at a time does not thrash pause/resume
+/// (each resume costs a dense-KV rebuild on the real engine).
+pub fn ready_to_resume(seq: &Sequence) -> bool {
+    seq.stream.status() != StreamStatus::Closed
+        && seq.stream.buffered() * 2 <= seq.stream.capacity()
+}
+
+/// The order paused sequences should attempt to resume in: highest
+/// priority first, oldest (smallest id) within a level — mirroring the
+/// admission queue's ordering.
+pub fn resume_order(seqs: &HashMap<SeqId, Sequence>, paused: &[SeqId]) -> Vec<SeqId> {
+    let mut order: Vec<SeqId> = paused.to_vec();
+    order.sort_by_key(|id| {
+        let priority = seqs.get(id).map(|s| s.priority).unwrap_or(0);
+        (std::cmp::Reverse(priority), *id)
+    });
+    order
+}
+
+/// Resolve one stalled sequence against the configured policy.
+pub fn stalled_action(policy: BackpressurePolicy) -> StalledAction {
+    match policy {
+        BackpressurePolicy::PauseDecode => StalledAction::Pause,
+        BackpressurePolicy::DropSlow => StalledAction::DropOverrun,
+    }
+}
+
+/// Engine-agnostic resolution of a stalled stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StalledAction {
+    Pause,
+    DropOverrun,
+}
+
+/// One flow-control transition an engine must execute this step.
+/// Planned by [`plan_stream_ops`]; the engines supply only the
+/// mechanics (lane attach/detach, dense-KV bookkeeping, metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamOp {
+    /// Re-admit a drained paused sequence into the decode batch.
+    Resume(SeqId),
+    /// A paused sequence's client vanished: finish `Cancelled`,
+    /// reclaim its KV.
+    ReapPaused(SeqId),
+    /// A running sequence's client vanished: retire it `Cancelled`.
+    ReapRunning(SeqId),
+    /// Park a stalled running sequence
+    /// ([`BackpressurePolicy::PauseDecode`]).
+    Pause(SeqId),
+    /// Finish a stalled running sequence with `Overrun`
+    /// ([`BackpressurePolicy::DropSlow`]).
+    DropOverrun(SeqId),
+}
+
+/// The per-step flow-control plan, shared verbatim by both engines so
+/// the sim twin cannot drift: resume drained paused sequences (highest
+/// priority first, bounded by `free_lanes`), reap disconnected clients
+/// on both sides, and pause or drop stalled running streams per the
+/// configured policy. Pure: computes transitions from a snapshot; the
+/// caller executes them in order.
+pub fn plan_stream_ops(
+    seqs: &HashMap<SeqId, Sequence>,
+    paused: &[SeqId],
+    running_ids: &[SeqId],
+    policy: BackpressurePolicy,
+    mut free_lanes: usize,
+) -> Vec<StreamOp> {
+    let mut ops = Vec::new();
+    for id in resume_order(seqs, paused) {
+        if stream_verdict(&seqs[&id]) == StreamVerdict::Disconnected {
+            ops.push(StreamOp::ReapPaused(id));
+        } else if ready_to_resume(&seqs[&id]) && free_lanes > 0 {
+            free_lanes -= 1;
+            ops.push(StreamOp::Resume(id));
+        }
+    }
+    for &id in running_ids {
+        match stream_verdict(&seqs[&id]) {
+            StreamVerdict::Flowing => {}
+            StreamVerdict::Disconnected => ops.push(StreamOp::ReapRunning(id)),
+            StreamVerdict::Stalled => match stalled_action(policy) {
+                StalledAction::Pause => ops.push(StreamOp::Pause(id)),
+                StalledAction::DropOverrun => ops.push(StreamOp::DropOverrun(id)),
+            },
+        }
+    }
+    ops
 }
 
 #[cfg(test)]
@@ -346,7 +509,7 @@ mod tests {
         assert_eq!(kv.free_blocks(), 0);
 
         // Next up: a disjoint 8-token prompt (3 blocks with the +1).
-        let (tx, _rx) = std::sync::mpsc::channel();
+        let (tx, _rx) = crate::api::event_channel(16);
         let req = crate::api::GenRequest::tokens((50..58).collect());
         let seq = Sequence::queued(7, &req, (50..58).collect(), Vec::new(), 4, tx);
         let state = plan_admission(&c, &mut kv, &mut pc, &mut m, Some(&seq), 1, 0);
@@ -367,7 +530,7 @@ mod tests {
         kv.alloc_seq(2, 8).unwrap();
         assert_eq!(kv.free_blocks(), 0);
         // One running sequence, two cached blocks: eviction suffices.
-        assert!(!reclaim_decode_headroom(&mut kv, &mut pc, &mut m, 1));
+        assert!(!reclaim_decode_headroom(&mut kv, &mut pc, &mut m, 1, 1));
         assert!(kv.free_blocks() >= 1);
         assert!(m.prefix_blocks_evicted >= 1);
     }
@@ -381,21 +544,112 @@ mod tests {
         kv.alloc_seq(2, 8).unwrap();
         assert_eq!(kv.free_blocks(), 0);
         // Nothing cached, two running: the caller must preempt.
-        assert!(reclaim_decode_headroom(&mut kv, &mut pc, &mut m, 2));
-        // ... but a lone sequence must never self-preempt.
-        assert!(!reclaim_decode_headroom(&mut kv, &mut pc, &mut m, 1));
+        assert!(reclaim_decode_headroom(&mut kv, &mut pc, &mut m, 2, 2));
+        // ... but a lone victim must never self-preempt...
+        assert!(!reclaim_decode_headroom(&mut kv, &mut pc, &mut m, 1, 1));
+        // ... while a lone *runner* with a paused victim available may
+        // preempt the parked one.
+        assert!(reclaim_decode_headroom(&mut kv, &mut pc, &mut m, 1, 2));
+    }
+
+    /// A minimal sequence map for census tests.
+    fn seq_map(entries: &[(SeqId, i32)]) -> HashMap<SeqId, Sequence> {
+        let mut m = HashMap::new();
+        for &(id, priority) in entries {
+            let (tx, rx) = crate::api::event_channel(4);
+            std::mem::forget(rx); // keep the stream open for the test
+            let req = crate::api::GenRequest::tokens(vec![1, 2]).priority(priority);
+            m.insert(id, Sequence::queued(id, &req, vec![1, 2], Vec::new(), 4, tx));
+        }
+        m
     }
 
     #[test]
-    fn preempt_candidates_count_shared_blocks() {
+    fn preempt_candidates_count_shared_blocks_and_carry_priority() {
         let mut kv = kv(4, 8);
         kv.alloc_seq(1, 8).unwrap();
         let donor_blocks = kv.seq_blocks(1).unwrap();
         // Sharer attaches the donor's first block.
         kv.alloc_seq_with_prefix(2, 8, &donor_blocks[..1], 4).unwrap();
-        let cands = preempt_candidates(&kv, &[1, 2]);
+        let seqs = seq_map(&[(1, 5), (2, -3)]);
+        let cands = preempt_candidates(&kv, &seqs, &[1, 2]);
         assert_eq!(cands.len(), 2);
         assert_eq!(cands[0].reusable_blocks, 1, "donor shares one block");
         assert_eq!(cands[1].reusable_blocks, 1, "sharer shares one block");
+        assert_eq!(cands[0].priority, 5);
+        assert_eq!(cands[1].priority, -3);
+    }
+
+    #[test]
+    fn stream_verdicts_track_credit_and_disconnect() {
+        let seqs = seq_map(&[(1, 0)]);
+        let seq = &seqs[&1];
+        assert_eq!(stream_verdict(seq), StreamVerdict::Flowing);
+        // Fill the 4-slot stream: stalled.
+        for t in 0..4 {
+            assert_eq!(seq.emit_token(t), crate::api::EmitResult::Sent);
+        }
+        assert_eq!(stream_verdict(seq), StreamVerdict::Stalled);
+        assert!(!ready_to_resume(seq), "full stream cannot resume");
+    }
+
+    #[test]
+    fn resume_order_is_priority_then_age() {
+        let seqs = seq_map(&[(1, 0), (2, 5), (3, 5), (4, -1)]);
+        assert_eq!(resume_order(&seqs, &[4, 3, 1, 2]), vec![2, 3, 1, 4]);
+    }
+
+    #[test]
+    fn stalled_action_follows_policy() {
+        assert_eq!(
+            stalled_action(BackpressurePolicy::PauseDecode),
+            StalledAction::Pause
+        );
+        assert_eq!(
+            stalled_action(BackpressurePolicy::DropSlow),
+            StalledAction::DropOverrun
+        );
+    }
+
+    #[test]
+    fn plan_stream_ops_resumes_pauses_and_reaps() {
+        // Seq 1: paused, drained (empty stream) -> Resume.
+        // Seq 2: paused, higher priority, drained -> Resume first.
+        // Seq 3: running, stalled (full stream)  -> Pause / DropOverrun.
+        // Seq 4: running, flowing               -> untouched.
+        let seqs = seq_map(&[(1, 0), (2, 5), (3, 0), (4, 0)]);
+        for t in 0..4 {
+            assert_eq!(seqs[&3].emit_token(t), crate::api::EmitResult::Sent);
+        }
+        let ops = plan_stream_ops(
+            &seqs,
+            &[1, 2],
+            &[3, 4],
+            BackpressurePolicy::PauseDecode,
+            8,
+        );
+        assert_eq!(
+            ops,
+            vec![
+                StreamOp::Resume(2),
+                StreamOp::Resume(1),
+                StreamOp::Pause(3)
+            ]
+        );
+        let ops = plan_stream_ops(&seqs, &[1, 2], &[3, 4], BackpressurePolicy::DropSlow, 8);
+        assert_eq!(
+            ops,
+            vec![
+                StreamOp::Resume(2),
+                StreamOp::Resume(1),
+                StreamOp::DropOverrun(3)
+            ]
+        );
+        // No free lanes: nothing resumes, stalls still handled.
+        let ops = plan_stream_ops(&seqs, &[1, 2], &[3, 4], BackpressurePolicy::PauseDecode, 0);
+        assert_eq!(ops, vec![StreamOp::Pause(3)]);
+        // One lane: only the highest-priority paused sequence resumes.
+        let ops = plan_stream_ops(&seqs, &[1, 2], &[3, 4], BackpressurePolicy::PauseDecode, 1);
+        assert_eq!(ops, vec![StreamOp::Resume(2), StreamOp::Pause(3)]);
     }
 }

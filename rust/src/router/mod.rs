@@ -1,30 +1,47 @@
 //! Request intake and sequence lifecycle.
 //!
 //! A [`crate::api::GenRequest`] enters through an engine's `submit`,
-//! becomes a `Sequence` with a state machine (Queued -> Decoding ->
-//! Finished), and streams [`GenEvent`]s back over a channel. The engine
-//! thread is the single owner of sequence state; the async server side
-//! only holds the sender/receiver endpoints.
+//! becomes a [`Sequence`] with a state machine (Queued -> Decoding ->
+//! Paused -> Finished), and streams [`crate::api::GenEvent`]s back over
+//! a *bounded* [`crate::api::EventSender`] channel. The engine thread is the single
+//! owner of sequence state; the async server side only holds the
+//! receiver endpoints.
 //!
 //! The router's queue is priority-aware: `peek_next`/`pop_next` select
 //! the highest-priority sequence, FIFO within a priority level, so both
 //! engines admit in the same order the scheduler's admission outlook
-//! was computed for.
+//! was computed for. [`Router::depths_by_priority`] exposes the
+//! instantaneous per-priority queue depths for the stats snapshot.
+//!
+//! This module also owns the [`RequestRegistry`]: the *cross-connection*
+//! index of in-flight requests. The engine-side [`Router`] is
+//! single-owner state on the engine thread, while the registry is
+//! shared (thread-safe) across every server connection, mapping the
+//! global ids minted at submit to engine request ids — the mechanism
+//! behind cancel-from-any-connection and the admin
+//! `{"admin": {"cancel_tenant": ...}}` verb (docs/PROTOCOL.md).
 
-use std::collections::VecDeque;
-use std::sync::mpsc;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::api::{FinishReason, GenEvent, GenRequest, Prompt, RequestId, SubmissionHandle, Usage};
+use crate::api::{
+    event_channel, EmitResult, EventSender, FinishReason, GenRequest, Prompt, RequestId,
+    SubmissionHandle, Usage,
+};
 use crate::error::{Error, Result};
 use crate::sampling::SamplingParams;
 use crate::tokenizer::ByteTokenizer;
+use crate::util::rng::Rng;
 
 /// Sequence lifecycle states.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SeqState {
     Queued,
     Decoding,
+    /// Parked by stream backpressure: the sequence holds its KV blocks
+    /// but no decode lane; it rejoins the batch when its client drains.
+    Paused,
     Finished(FinishReason),
 }
 
@@ -42,7 +59,9 @@ pub struct Sequence {
     /// Stop sequences as token ids (no BOS); generation finishes with
     /// `FinishReason::Stop` when `generated` ends with any of them.
     pub stop: Vec<Vec<u32>>,
-    pub stream: mpsc::Sender<GenEvent>,
+    /// Bounded event stream to the client (see [`crate::api`] flow
+    /// control).
+    pub stream: EventSender,
     pub arrived: Instant,
     pub first_token_at: Option<Instant>,
     /// Current context length (prompt + generated) stored in KV.
@@ -64,7 +83,7 @@ impl Sequence {
         prompt_tokens: Vec<u32>,
         stop: Vec<Vec<u32>>,
         max_new_tokens: usize,
-        stream: mpsc::Sender<GenEvent>,
+        stream: EventSender,
     ) -> Self {
         Sequence {
             id,
@@ -124,9 +143,17 @@ impl Sequence {
         }
     }
 
-    /// Push an event to the client; ignore a hung-up receiver.
-    pub fn emit(&mut self, ev: GenEvent) {
-        let _ = self.stream.send(ev);
+    /// Push one generated token to the client's bounded stream. Never
+    /// blocks: callers decode only sequences whose stream had credit at
+    /// the start of the step, so `Full` cannot occur mid-step; `Closed`
+    /// means the client hung up and the engine should reclaim.
+    pub fn emit_token(&self, token: u32) -> EmitResult {
+        self.stream.try_token(token)
+    }
+
+    /// Record the terminal event (always deliverable; dedicated slot).
+    pub fn emit_finish(&self, reason: FinishReason, usage: Usage) {
+        self.stream.finish(reason, usage);
     }
 }
 
@@ -144,20 +171,22 @@ pub fn encode_prompt(tokenizer: &ByteTokenizer, prompt: &Prompt) -> Result<Vec<u
 }
 
 /// Shared submit back half: validate the budget, encode stop sequences,
-/// clamp to the engine cap, and enqueue — identical for every engine so
-/// the sim twin cannot drift from the real one.
+/// clamp to the engine cap, create the bounded event stream, and
+/// enqueue — identical for every engine so the sim twin cannot drift
+/// from the real one.
 pub fn enqueue_request(
     router: &mut Router,
     tokenizer: &ByteTokenizer,
     req: &GenRequest,
     prompt_tokens: Vec<u32>,
     max_new_cap: usize,
+    stream_capacity: usize,
 ) -> Result<SubmissionHandle> {
     if req.max_new_tokens == 0 {
         return Err(Error::Request("max_new_tokens must be at least 1".into()));
     }
     let stop: Vec<Vec<u32>> = req.stop.iter().map(|s| tokenizer.encode_raw(s)).collect();
-    let (tx, rx) = mpsc::channel();
+    let (tx, rx) = event_channel(stream_capacity);
     let id = router.allocate_id();
     let max_new = req.max_new_tokens.min(max_new_cap);
     router.enqueue(Sequence::queued(id, req, prompt_tokens, stop, max_new, tx));
@@ -227,18 +256,142 @@ impl Router {
     pub fn queued(&self) -> usize {
         self.queue.len()
     }
+
+    /// Instantaneous queue depth per priority level, ascending by
+    /// priority (the stats snapshot's `queue_depths`).
+    pub fn depths_by_priority(&self) -> Vec<(i32, usize)> {
+        let mut depths: BTreeMap<i32, usize> = BTreeMap::new();
+        for s in &self.queue {
+            *depths.entry(s.priority).or_default() += 1;
+        }
+        depths.into_iter().collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cross-connection request registry
+// ---------------------------------------------------------------------
+
+/// One registered in-flight request.
+#[derive(Debug, Clone)]
+pub struct RegisteredRequest {
+    pub engine_id: RequestId,
+    pub tenant: String,
+    pub priority: i32,
+}
+
+/// Thread-safe index of every in-flight request a server front-end has
+/// submitted, keyed by the *global id* minted at submit. Connection
+/// handlers share one registry, so a request can be cancelled from any
+/// connection — including in bulk, per tenant, via the admin verb — not
+/// just the one that submitted it. Entries are removed when the
+/// request's terminal event is delivered, so `depth` is the number of
+/// requests currently in flight server-wide.
+///
+/// Global ids look like `"g7-3f9c2a1d08b4e657"`: a monotone counter
+/// plus a 64-bit suffix from a per-process randomly seeded stream, so
+/// ids are not enumerable — one client cannot cancel another's request
+/// by guessing (not cryptographic; the admin verb itself still belongs
+/// on a trusted network, like the rest of the unauthenticated
+/// protocol).
+#[derive(Debug, Default)]
+pub struct RequestRegistry {
+    inner: Mutex<RegistryInner>,
+}
+
+#[derive(Debug)]
+struct RegistryInner {
+    next: u64,
+    ids: Rng,
+    entries: HashMap<String, RegisteredRequest>,
+}
+
+impl Default for RegistryInner {
+    fn default() -> Self {
+        RegistryInner {
+            next: 0,
+            ids: Rng::seed_from_u64(registry_seed()),
+            entries: HashMap::new(),
+        }
+    }
+}
+
+/// Per-process unpredictable seed for global-id suffixes, derived from
+/// std's randomly keyed SipHash state (OS entropy, no extra deps).
+fn registry_seed() -> u64 {
+    use std::hash::{BuildHasher, Hasher};
+    let mut h = std::collections::hash_map::RandomState::new().build_hasher();
+    h.write_u64(std::process::id() as u64);
+    h.finish()
+}
+
+impl RequestRegistry {
+    pub fn new() -> Self {
+        RequestRegistry::default()
+    }
+
+    /// Mint a global id for a freshly submitted request. The empty
+    /// tenant normalizes to `"default"`, matching [`Sequence::queued`].
+    pub fn register(&self, engine_id: RequestId, tenant: &str, priority: i32) -> String {
+        let mut g = self.inner.lock().unwrap();
+        g.next += 1;
+        let gid = format!("g{}-{:016x}", g.next, g.ids.next_u64());
+        let tenant = if tenant.is_empty() { "default" } else { tenant };
+        g.entries.insert(
+            gid.clone(),
+            RegisteredRequest {
+                engine_id,
+                tenant: tenant.to_string(),
+                priority,
+            },
+        );
+        gid
+    }
+
+    /// Engine id for a live global id (from any connection).
+    pub fn resolve(&self, global_id: &str) -> Option<RequestId> {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .get(global_id)
+            .map(|e| e.engine_id)
+    }
+
+    /// Drop a finished request's entry; `false` if it was already gone.
+    pub fn remove(&self, global_id: &str) -> bool {
+        self.inner.lock().unwrap().entries.remove(global_id).is_some()
+    }
+
+    /// Engine ids of every live request for a tenant (the admin
+    /// bulk-cancel set). Entries stay registered until their terminal
+    /// event flows, exactly like single cancels.
+    pub fn tenant_ids(&self, tenant: &str) -> Vec<RequestId> {
+        let tenant = if tenant.is_empty() { "default" } else { tenant };
+        let g = self.inner.lock().unwrap();
+        let mut ids: Vec<RequestId> = g
+            .entries
+            .values()
+            .filter(|e| e.tenant == tenant)
+            .map(|e| e.engine_id)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Requests currently in flight server-wide.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::EventReceiver;
 
-    fn mk_seq(
-        r: &mut Router,
-        prompt: Vec<u32>,
-        priority: i32,
-    ) -> (RequestId, mpsc::Receiver<GenEvent>) {
-        let (tx, rx) = mpsc::channel();
+    fn mk_seq(r: &mut Router, prompt: Vec<u32>, priority: i32) -> (RequestId, EventReceiver) {
+        let (tx, rx) = event_channel(16);
         let req = GenRequest::tokens(prompt.clone()).priority(priority);
         let id = r.allocate_id();
         r.enqueue(Sequence::queued(id, &req, prompt, Vec::new(), 4, tx));
@@ -267,6 +420,17 @@ mod tests {
         assert_eq!(r.pop_next().unwrap().id, low, "FIFO among equals");
         assert_eq!(r.pop_next().unwrap().id, low2);
         assert!(r.pop_next().is_none());
+    }
+
+    #[test]
+    fn depths_by_priority_counts_levels() {
+        let mut r = Router::new();
+        let (_a, _r1) = mk_seq(&mut r, vec![1], 0);
+        let (_b, _r2) = mk_seq(&mut r, vec![2], 5);
+        let (_c, _r3) = mk_seq(&mut r, vec![3], 0);
+        assert_eq!(r.depths_by_priority(), vec![(0, 2), (5, 1)]);
+        r.pop_next().unwrap(); // takes the priority-5 one
+        assert_eq!(r.depths_by_priority(), vec![(0, 2)]);
     }
 
     #[test]
@@ -319,9 +483,10 @@ mod tests {
     fn emit_survives_dropped_receiver() {
         let mut r = Router::new();
         let (_, rx) = mk_seq(&mut r, vec![1], 0);
-        let mut s = r.pop_next().unwrap();
+        let s = r.pop_next().unwrap();
         drop(rx);
-        s.emit(GenEvent::Token(9)); // must not panic
+        assert_eq!(s.emit_token(9), EmitResult::Closed, "reported, not a panic");
+        s.emit_finish(FinishReason::Cancelled, s.usage()); // must not panic
     }
 
     #[test]
@@ -333,7 +498,8 @@ mod tests {
             .max_new_tokens(100);
         let prompt = encode_prompt(&tok, &req.prompt).unwrap();
         assert_eq!(prompt[0], crate::tokenizer::BOS);
-        let h = enqueue_request(&mut r, &tok, &req, prompt, 8).unwrap();
+        let h = enqueue_request(&mut r, &tok, &req, prompt, 8, 32).unwrap();
+        assert_eq!(h.capacity(), 32, "handle carries the stream capacity");
         assert_eq!(r.queued(), 1);
         let s = r.pop_next().unwrap();
         assert_eq!(s.id, h.id);
@@ -343,7 +509,7 @@ mod tests {
         assert!(encode_prompt(&tok, &Prompt::Tokens(vec![])).is_err());
         let zero = GenRequest::text("x").max_new_tokens(0);
         let p = encode_prompt(&tok, &zero.prompt).unwrap();
-        assert!(enqueue_request(&mut r, &tok, &zero, p, 8).is_err());
+        assert!(enqueue_request(&mut r, &tok, &zero, p, 8, 32).is_err());
         assert_eq!(r.queued(), 0);
     }
 
@@ -356,5 +522,39 @@ mod tests {
         assert_eq!(first.id, a);
         r.requeue_front(first);
         assert_eq!(r.pop_next().unwrap().id, a);
+    }
+
+    #[test]
+    fn registry_registers_resolves_and_prunes() {
+        let reg = RequestRegistry::new();
+        let g1 = reg.register(11, "acme", 0);
+        let g2 = reg.register(12, "", 3);
+        assert_ne!(g1, g2, "global ids are unique");
+        assert!(g1.starts_with("g1-") && g1.len() > 10, "unguessable suffix: {g1}");
+        // Two registries must not mint the same id streams (unpredictable
+        // suffixes; counters alone would collide).
+        let other = RequestRegistry::new();
+        assert_ne!(other.register(11, "acme", 0), g1);
+        assert_eq!(reg.depth(), 2);
+        assert_eq!(reg.resolve(&g1), Some(11));
+        assert_eq!(reg.resolve("nope"), None);
+        // Empty tenant normalizes like Sequence::queued does.
+        assert_eq!(reg.tenant_ids("default"), vec![12]);
+        assert_eq!(reg.tenant_ids("acme"), vec![11]);
+        assert!(reg.remove(&g1));
+        assert!(!reg.remove(&g1), "second remove is a no-op");
+        assert_eq!(reg.depth(), 1);
+        assert_eq!(reg.resolve(&g1), None);
+    }
+
+    #[test]
+    fn registry_tenant_ids_are_scoped() {
+        let reg = RequestRegistry::new();
+        reg.register(1, "a", 0);
+        reg.register(2, "b", 0);
+        reg.register(3, "a", 1);
+        assert_eq!(reg.tenant_ids("a"), vec![1, 3]);
+        assert_eq!(reg.tenant_ids("b"), vec![2]);
+        assert!(reg.tenant_ids("c").is_empty());
     }
 }

@@ -74,12 +74,14 @@ pub fn decide(s: SchedState) -> Action {
     }
 }
 
-/// One preemption candidate: a running sequence and how many of its
-/// blocks would *stay reusable* (shared with the prefix cache or other
-/// sequences) if it were evicted now.
+/// One preemption candidate: a running sequence, its request priority,
+/// and how many of its blocks would *stay reusable* (shared with the
+/// prefix cache or other sequences) if it were evicted now.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PreemptCandidate {
     pub id: SeqId,
+    /// Request priority (higher = more important = preempted last).
+    pub priority: i32,
     pub reusable_blocks: usize,
 }
 
@@ -87,20 +89,20 @@ pub struct PreemptCandidate {
 /// engine resolves id -> lane; lane order is a batcher detail that
 /// preemption must not assume).
 ///
-/// Preference: the candidate with the most reusable blocks loses its
-/// lane — its KV largely survives in the prefix cache, so preempting it
-/// destroys the least work. Ties go to the *youngest* candidate (latest
-/// in admission order, i.e. last in the slice), which has the least
-/// sunk decode progress.
+/// Victims are ordered by `(priority asc, reusable_blocks desc,
+/// recency)`: the lowest-priority candidate always loses first — a
+/// request is never preempted while a strictly lower-priority victim
+/// exists. Within a priority level, the candidate with the most
+/// reusable blocks goes first (its KV largely survives in the prefix
+/// cache, so preempting it destroys the least work), and remaining ties
+/// go to the *youngest* candidate (largest id — ids are assigned in
+/// submit order), which has the least sunk decode progress.
 pub fn preemption_victim(candidates: &[PreemptCandidate]) -> Option<SeqId> {
-    let mut best: Option<PreemptCandidate> = None;
-    for c in candidates {
-        // `>=` so later (younger) candidates win ties.
-        if best.map(|b| c.reusable_blocks >= b.reusable_blocks).unwrap_or(true) {
-            best = Some(*c);
-        }
-    }
-    best.map(|c| c.id)
+    use std::cmp::Reverse;
+    candidates
+        .iter()
+        .min_by_key(|c| (c.priority, Reverse(c.reusable_blocks), Reverse(c.id)))
+        .map(|c| c.id)
 }
 
 #[cfg(test)]
@@ -121,6 +123,7 @@ mod tests {
     fn cand(id: SeqId, reusable: usize) -> PreemptCandidate {
         PreemptCandidate {
             id,
+            priority: 0,
             reusable_blocks: reusable,
         }
     }
@@ -182,6 +185,45 @@ mod tests {
         // Sequence 9's KV survives in the prefix cache: preempt it even
         // though 12 is younger.
         let c = [cand(5, 1), cand(9, 3), cand(12, 0)];
+        assert_eq!(preemption_victim(&c), Some(9));
+    }
+
+    #[test]
+    fn victim_priority_dominates_reusable_blocks() {
+        // Sequence 5 has the most reusable blocks, but sequence 9 has
+        // strictly lower priority: priority always decides first.
+        let c = [
+            PreemptCandidate {
+                id: 5,
+                priority: 2,
+                reusable_blocks: 7,
+            },
+            PreemptCandidate {
+                id: 9,
+                priority: -1,
+                reusable_blocks: 0,
+            },
+            PreemptCandidate {
+                id: 12,
+                priority: 0,
+                reusable_blocks: 3,
+            },
+        ];
+        assert_eq!(preemption_victim(&c), Some(9));
+    }
+
+    #[test]
+    fn victim_within_priority_level_uses_reusable_then_recency() {
+        let mk = |id, priority, reusable| PreemptCandidate {
+            id,
+            priority,
+            reusable_blocks: reusable,
+        };
+        // Same priority: most reusable blocks loses.
+        let c = [mk(5, 1, 1), mk(9, 1, 3), mk(12, 5, 9)];
+        assert_eq!(preemption_victim(&c), Some(9));
+        // Same priority and reusable count: youngest (largest id) loses.
+        let c = [mk(5, 1, 2), mk(9, 1, 2), mk(12, 5, 9)];
         assert_eq!(preemption_victim(&c), Some(9));
     }
 }

@@ -9,24 +9,40 @@
 //! [`crate::simengine::SimEngine`] twin (loopback tests, artifact-free
 //! serving demos) — the loop itself is generic and identical for both.
 //!
-//! The full wire protocol — request/response/stats/cancel schemas,
-//! defaults, and error shapes — is documented in `docs/PROTOCOL.md`.
-//! In short (one JSON object per line):
+//! The full wire protocol (v2.1) — request/response/stats/cancel/admin
+//! schemas, defaults, and error shapes — is documented in
+//! `docs/PROTOCOL.md`. In short (one JSON object per line):
 //!
 //!   -> {"id": "a", "prompt": "...", "max_new_tokens": 32,
 //!       "tenant": "acme", "stop": ["\n"], "temperature": 0.0}
+//!   <- {"id": "a", "accepted": true, "global": "g7"}   (submission ack)
 //!   <- {"id": "a", "token": 104, "text": "h"}     (per generated token)
 //!   <- {"id": "a", "done": true, "reason": "eos", "n": 12,
 //!       "usage": {"prompt_tokens": 5, "cached_tokens": 0,
 //!                 "prefill_tokens": 5, "generated_tokens": 12}}
 //!
-//!   -> {"cancel": "a"}                 (in-flight generation above)
+//!   -> {"cancel": "a"}      (wire id on this connection, or a global
+//!                            "g7" id from *any* connection)
 //!   <- {"ok": true, "id": "a"}         (ack; the stream ends with a
 //!                                       done line, reason "cancelled")
 //!
+//!   -> {"admin": {"cancel_tenant": "acme"}}
+//!   <- {"ok": true, "cancelled": 3}    (bulk cancel across connections)
+//!
 //!   -> {"stats": true}
 //!   <- {"tokens_generated": 512, "prefix_hit_rate": 0.7,
-//!       "tenants": {"acme": {...}}, ...}
+//!       "registry_depth": 2, "queue_depths": {"0": 1},
+//!       "backpressure_pauses": 4, "tenants": {"acme": {...}}, ...}
+//!
+//! Cross-connection cancellation works through the shared
+//! [`RequestRegistry`]: every accepted submission is registered under a
+//! server-global id (echoed in the `accepted` line) and pruned when its
+//! done line goes out.
+//!
+//! Per-request streams are *bounded* ([`crate::api::event_channel`]):
+//! a client that stops reading causes the engine to pause or drop that
+//! request (its configured [`crate::config::BackpressurePolicy`]), never
+//! to buffer unboundedly; other connections' streams are unaffected.
 //!
 //! Malformed input never kills a connection: the server answers
 //! `{"error": "...", "code": "..."}` and keeps reading.
@@ -36,15 +52,19 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
+use std::time::Duration;
 
 use crate::api::{
-    FinishReason, GenEvent, GenRequest, InferenceEngine, RequestId, SubmissionHandle, Usage,
+    EventReceiver, FinishReason, GenEvent, GenRequest, InferenceEngine, RequestId,
+    SubmissionHandle, Usage,
 };
 use crate::config::EngineConfig;
 use crate::engine::Engine;
 use crate::error::{Error, Result};
+use crate::router::RequestRegistry;
 use crate::runtime::Runtime;
 use crate::sampling::SamplingParams;
+use crate::scheduler::Action;
 use crate::simengine::{SimEngine, SimSpec};
 use crate::tokenizer::ByteTokenizer;
 use crate::util::json::{parse, Json};
@@ -239,6 +259,26 @@ pub fn cancel_ack(id: &str) -> String {
     .to_string()
 }
 
+/// Submission ack: echoes the wire id and carries the server-global id
+/// usable with `{"cancel": ...}` from any connection.
+pub fn accepted_response(id: &str, global: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::Str(id.to_string())),
+        ("accepted", Json::Bool(true)),
+        ("global", Json::Str(global.to_string())),
+    ])
+    .to_string()
+}
+
+/// Admin bulk-cancel ack.
+pub fn admin_ack(cancelled: usize) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("cancelled", Json::Num(cancelled as f64)),
+    ])
+    .to_string()
+}
+
 /// A request as it travels to the engine thread.
 pub enum EngineJob {
     Submit {
@@ -250,10 +290,16 @@ pub enum EngineJob {
     },
     Cancel {
         id: RequestId,
+        /// When present, receives whether the engine actually cancelled
+        /// a live request (`false` for unknown/finished ids) — used by
+        /// the admin bulk-cancel path to report a truthful count.
+        reply: Option<mpsc::Sender<bool>>,
     },
-    /// Metrics snapshot (serialized JSON) — the server stats path.
+    /// Metrics snapshot — the server stats path. The engine replies
+    /// with the structured [`Json`] value so the connection thread can
+    /// merge server-side fields (registry depth) without re-parsing.
     Stats {
-        reply: mpsc::Sender<String>,
+        reply: mpsc::Sender<Json>,
     },
 }
 
@@ -315,6 +361,11 @@ pub fn spawn_sim_engine(cfg: EngineConfig, spec: SimSpec) -> Result<EngineHandle
 /// with production serving. Event streams flow straight from the
 /// engine's [`SubmissionHandle`] to the connection's pump thread; the
 /// loop itself only schedules.
+///
+/// A step that takes no action while work is still pending means every
+/// live request is parked on backpressure (waiting for its client to
+/// drain); the loop naps briefly instead of spinning, and wakes fully
+/// on the next job or once streams drain.
 fn engine_loop<E: InferenceEngine>(engine: &mut E, rx: mpsc::Receiver<EngineJob>) {
     loop {
         // Accept new jobs (block only when idle).
@@ -338,11 +389,15 @@ fn engine_loop<E: InferenceEngine>(engine: &mut E, rx: mpsc::Receiver<EngineJob>
             };
             match job {
                 EngineJob::Stats { reply } => {
-                    let _ = reply.send(engine.metrics().to_json().to_string());
+                    let _ = reply.send(engine.stats_json());
                 }
-                EngineJob::Cancel { id } => {
-                    if let Err(e) = engine.cancel(id) {
+                EngineJob::Cancel { id, reply } => {
+                    let r = engine.cancel(id);
+                    if let Err(e) = &r {
                         log_warn!("cancel {id}: {e}");
+                    }
+                    if let Some(tx) = reply {
+                        let _ = tx.send(matches!(r, Ok(true)));
                     }
                 }
                 EngineJob::Submit { req, submitted } => {
@@ -351,8 +406,17 @@ fn engine_loop<E: InferenceEngine>(engine: &mut E, rx: mpsc::Receiver<EngineJob>
             }
         }
         if !engine.is_idle() {
-            if let Err(e) = engine.step() {
-                log_warn!("engine step failed: {e}");
+            match engine.step() {
+                Ok(Action::Idle) => thread::sleep(Duration::from_micros(200)),
+                Ok(_) => {
+                    // Everything live is parked on backpressure (an
+                    // admission may be waiting on parked KV): nap
+                    // instead of spinning until clients drain.
+                    if engine.running() == 0 && engine.paused() > 0 {
+                        thread::sleep(Duration::from_micros(200));
+                    }
+                }
+                Err(e) => log_warn!("engine step failed: {e}"),
             }
         }
     }
@@ -373,7 +437,8 @@ pub fn serve(addr: &str, artifacts_dir: &str, cfg: EngineConfig) -> Result<()> {
 
 /// Accept loop over an already-bound listener and a running engine
 /// thread (any backend). Tests bind port 0 and drive a sim-backed
-/// engine through the exact production plumbing.
+/// engine through the exact production plumbing. All connections share
+/// one [`RequestRegistry`], so cancellation works across connections.
 pub fn serve_on(
     listener: TcpListener,
     handle: EngineHandle,
@@ -383,6 +448,7 @@ pub fn serve_on(
     if let Ok(addr) = listener.local_addr() {
         log_info!("serving on {addr}");
     }
+    let registry = Arc::new(RequestRegistry::new());
     for sock in listener.incoming() {
         let sock = match sock {
             Ok(s) => s,
@@ -392,8 +458,9 @@ pub fn serve_on(
             }
         };
         let tx = handle.tx.clone();
+        let registry = Arc::clone(&registry);
         thread::spawn(move || {
-            if let Err(e) = handle_conn(sock, tx, vocab, max_new_cap) {
+            if let Err(e) = handle_conn(sock, tx, registry, vocab, max_new_cap) {
                 log_warn!("conn: {e}");
             }
         });
@@ -419,6 +486,14 @@ pub fn cancel_request_id(j: &Json) -> Option<String> {
     }
 }
 
+/// `{"admin": {...}}` with no prompt (same hijack rule as stats).
+pub fn admin_request(j: &Json) -> Option<&Json> {
+    if j.get("prompt").is_some() {
+        return None;
+    }
+    j.get("admin")
+}
+
 type SharedWriter = Arc<Mutex<TcpStream>>;
 /// Wire id -> engine id for one connection's in-flight requests; shared
 /// with the per-request pump threads, which prune their entry when the
@@ -432,23 +507,34 @@ fn write_line(w: &SharedWriter, line: &str) -> Result<()> {
 }
 
 /// Forward one request's events to the socket, tagged with its wire id.
+/// This thread is the consumer of the request's *bounded* event stream:
+/// when the socket write stalls (client stopped reading), the stream
+/// fills and the engine applies backpressure to just this request. On
+/// every exit path the request's registry entry is pruned, so the
+/// registry depth tracks requests actually in flight.
 fn pump_events(
     wire_id: String,
-    events: mpsc::Receiver<GenEvent>,
+    global_id: String,
+    events: EventReceiver,
     w: SharedWriter,
     ids: InflightIds,
+    registry: Arc<RequestRegistry>,
     tokenizer: ByteTokenizer,
 ) {
     while let Ok(ev) = events.recv() {
         let line = match ev {
             GenEvent::Token(t) => token_response(&wire_id, t, &tokenizer.decode(&[t])),
             GenEvent::Finished { reason, usage } => {
-                // Write the done line and prune the id while holding the
-                // map lock, so a client reusing the id is either
-                // rejected as duplicate (strictly before this) or its
-                // stream starts strictly after our done line — never
-                // interleaved under one id. (Lock order everywhere is
-                // ids, then writer.)
+                // Prune the registry entry *before* the done line goes
+                // out, so a client that reads `done` and immediately
+                // queries stats (or cancels the global id) sees the
+                // request fully retired. Then write the done line and
+                // prune the wire id while holding the map lock, so a
+                // client reusing the id is either rejected as duplicate
+                // (strictly before this) or its stream starts strictly
+                // after our done line — never interleaved under one id.
+                // (Lock order everywhere is ids, then writer.)
+                registry.remove(&global_id);
                 let line = done_response(&wire_id, reason, &usage);
                 let mut in_flight = ids.lock().unwrap();
                 let _ = write_line(&w, &line);
@@ -457,15 +543,19 @@ fn pump_events(
             }
         };
         if write_line(&w, &line).is_err() {
-            return; // client hung up; the engine stream drops with us
+            // Client hung up: dropping `events` closes the stream and
+            // the engine reclaims the request on its next scan.
+            break;
         }
     }
     ids.lock().unwrap().remove(&wire_id);
+    registry.remove(&global_id);
 }
 
 fn handle_conn(
     sock: TcpStream,
     engine_tx: mpsc::Sender<EngineJob>,
+    registry: Arc<RequestRegistry>,
     vocab: usize,
     max_new_cap: usize,
 ) -> Result<()> {
@@ -485,32 +575,83 @@ fn handle_conn(
                 continue;
             }
         };
-        // Stats request: one JSON object back, no generation.
+        // Stats request: one JSON object back, no generation. The
+        // engine snapshot is augmented with the server-side registry
+        // depth (requests in flight across all connections).
         if is_stats_request(&j) {
-            let (reply_tx, reply_rx) = mpsc::channel::<String>();
+            let (reply_tx, reply_rx) = mpsc::channel::<Json>();
             if engine_tx.send(EngineJob::Stats { reply: reply_tx }).is_err() {
                 return engine_gone(&w);
             }
             match reply_rx.recv() {
-                Ok(stats) => write_line(&w, &stats)?,
+                Ok(mut stats) => {
+                    if let Json::Obj(m) = &mut stats {
+                        m.insert(
+                            "registry_depth".to_string(),
+                            Json::Num(registry.depth() as f64),
+                        );
+                    }
+                    write_line(&w, &stats.to_string())?;
+                }
                 Err(_) => return engine_gone(&w),
             }
             continue;
         }
+        // Admin request: currently one verb, bulk cancel by tenant —
+        // cancels that tenant's in-flight requests on *every*
+        // connection; each affected stream ends with its own done line,
+        // reason "cancelled". The ack reports how many live requests
+        // were actually cancelled (a request racing to completion is
+        // not counted).
+        if let Some(admin) = admin_request(&j) {
+            match admin.get("cancel_tenant").and_then(Json::as_str) {
+                Some(tenant) => {
+                    let rids = registry.tenant_ids(tenant);
+                    let (ack_tx, ack_rx) = mpsc::channel::<bool>();
+                    for rid in rids {
+                        let job = EngineJob::Cancel {
+                            id: rid,
+                            reply: Some(ack_tx.clone()),
+                        };
+                        if engine_tx.send(job).is_err() {
+                            return engine_gone(&w);
+                        }
+                    }
+                    drop(ack_tx);
+                    let n = ack_rx.iter().filter(|&cancelled| cancelled).count();
+                    write_line(&w, &admin_ack(n))?;
+                }
+                None => {
+                    let msg = "admin supports {\"cancel_tenant\": \"<tenant>\"}";
+                    write_line(&w, &error_response("bad_admin", msg))?;
+                }
+            }
+            continue;
+        }
         // Cancel request: resolve the wire id submitted on this
-        // connection and ack; the generation stream itself ends with a
-        // done line, reason "cancelled".
+        // connection, falling back to the cross-connection registry's
+        // global ids; the generation stream itself ends with a done
+        // line, reason "cancelled".
         if let Some(wire_id) = cancel_request_id(&j) {
-            let rid = ids.lock().unwrap().get(&wire_id).copied();
+            let rid = ids
+                .lock()
+                .unwrap()
+                .get(&wire_id)
+                .copied()
+                .or_else(|| registry.resolve(&wire_id));
             match rid {
                 Some(rid) => {
-                    if engine_tx.send(EngineJob::Cancel { id: rid }).is_err() {
+                    let job = EngineJob::Cancel {
+                        id: rid,
+                        reply: None,
+                    };
+                    if engine_tx.send(job).is_err() {
                         return engine_gone(&w);
                     }
                     write_line(&w, &cancel_ack(&wire_id))?;
                 }
                 None => {
-                    let msg = format!("no in-flight request with id {wire_id:?} here");
+                    let msg = format!("no in-flight request with id {wire_id:?}");
                     write_line(&w, &error_response("unknown_id", &msg))?;
                 }
             }
@@ -541,6 +682,8 @@ fn handle_conn(
                 }
             },
         };
+        let tenant = gen.tenant.clone();
+        let priority = gen.priority;
         let (sub_tx, sub_rx) = mpsc::channel();
         let job = EngineJob::Submit {
             req: gen,
@@ -551,11 +694,24 @@ fn handle_conn(
         }
         match sub_rx.recv() {
             Ok(Ok(handle)) => {
+                // Ack before any token can flow (the pump thread is not
+                // spawned yet): the accepted line is always the first
+                // line of the stream. On a dead socket, bail before
+                // registering — dropping `handle` closes the stream and
+                // the engine reclaims the request.
+                let gid = registry.register(handle.id, &tenant, priority);
+                if let Err(e) = write_line(&w, &accepted_response(&wire_id, &gid)) {
+                    registry.remove(&gid);
+                    return Err(e);
+                }
                 ids.lock().unwrap().insert(wire_id.clone(), handle.id);
                 let w2 = Arc::clone(&w);
                 let ids2 = Arc::clone(&ids);
+                let reg2 = Arc::clone(&registry);
                 let tokenizer = ByteTokenizer::new(vocab);
-                thread::spawn(move || pump_events(wire_id, handle.events, w2, ids2, tokenizer));
+                thread::spawn(move || {
+                    pump_events(wire_id, gid, handle.events, w2, ids2, reg2, tokenizer)
+                });
             }
             Ok(Err(msg)) => {
                 write_line(&w, &error_response("rejected", &msg))?;
@@ -618,7 +774,8 @@ impl Client {
         }
     }
 
-    /// Send one request and collect the full generation.
+    /// Send one request and collect the full generation (skipping the
+    /// `accepted` ack line).
     pub fn generate(&mut self, prompt: &str, max_new_tokens: usize) -> Result<String> {
         self.send(&Json::obj(vec![
             ("prompt", Json::Str(prompt.to_string())),
@@ -630,6 +787,9 @@ impl Client {
             if j.get("error").is_some() {
                 return Err(Error::Request(j.req_str("error")?));
             }
+            if j.get("accepted").is_some() {
+                continue;
+            }
             if j.get("done").is_some() {
                 return Ok(out);
             }
@@ -639,9 +799,18 @@ impl Client {
         }
     }
 
-    /// Request cancellation of an in-flight wire id.
+    /// Request cancellation of an in-flight id: a wire id submitted on
+    /// this connection, or a global `"g<N>"` id from any connection.
     pub fn cancel(&mut self, id: &str) -> Result<()> {
         self.send(&Json::obj(vec![("cancel", Json::Str(id.to_string()))]))
+    }
+
+    /// Bulk-cancel every in-flight request of a tenant, server-wide.
+    pub fn admin_cancel_tenant(&mut self, tenant: &str) -> Result<()> {
+        self.send(&Json::obj(vec![(
+            "admin",
+            Json::obj(vec![("cancel_tenant", Json::Str(tenant.to_string()))]),
+        )]))
     }
 
     /// Fetch the engine's metrics snapshot (raw JSON line).
@@ -751,6 +920,18 @@ mod tests {
     }
 
     #[test]
+    fn admin_detection_is_exact() {
+        let j = parse(r#"{"admin":{"cancel_tenant":"acme"}}"#).unwrap();
+        let a = admin_request(&j).expect("admin object detected");
+        assert_eq!(a.get("cancel_tenant").and_then(Json::as_str), Some("acme"));
+        assert!(
+            admin_request(&parse(r#"{"prompt":"p","admin":{}}"#).unwrap()).is_none(),
+            "generate requests are never hijacked"
+        );
+        assert!(admin_request(&parse(r#"{"stats":true}"#).unwrap()).is_none());
+    }
+
+    #[test]
     fn responses_are_valid_json() {
         let usage = Usage {
             prompt_tokens: 5,
@@ -763,6 +944,8 @@ mod tests {
             done_response("a", FinishReason::Eos, &usage),
             error_response("bad_request", "nope"),
             cancel_ack("a"),
+            accepted_response("a", "g1"),
+            admin_ack(3),
         ] {
             parse(&s).unwrap();
         }
@@ -773,5 +956,11 @@ mod tests {
         assert!(done.contains("\"n\":4"));
         let cancelled = done_response("a", FinishReason::Cancelled, &usage);
         assert!(cancelled.contains("cancelled"));
+        let overrun = done_response("a", FinishReason::Overrun, &usage);
+        assert!(overrun.contains("overrun"));
+        let accepted = accepted_response("a", "g7");
+        assert!(accepted.contains("\"accepted\":true"));
+        assert!(accepted.contains("\"global\":\"g7\""));
+        assert!(admin_ack(3).contains("\"cancelled\":3"));
     }
 }

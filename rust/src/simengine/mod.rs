@@ -20,13 +20,13 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::api::{FinishReason, GenEvent, GenRequest, InferenceEngine, RequestId, SubmissionHandle};
+use crate::api::{FinishReason, GenRequest, InferenceEngine, RequestId, SubmissionHandle};
 use crate::batching::Batcher;
 use crate::config::EngineConfig;
 use crate::error::{Error, Result};
 use crate::kvcache::{KvCache, KvGeometry, SeqId};
 use crate::metrics::EngineMetrics;
-use crate::policy;
+use crate::policy::{self, StreamOp};
 use crate::prefixcache::PrefixCache;
 use crate::router::{self, Router, SeqState, Sequence};
 use crate::sampling::Sampler;
@@ -79,6 +79,9 @@ pub struct SimEngine {
     router: Router,
     sampler: Sampler,
     seqs: HashMap<SeqId, Sequence>,
+    /// Sequences parked by stream backpressure: they stay in `seqs`
+    /// (state `Paused`) and keep their KV, but hold no decode lane.
+    paused: Vec<SeqId>,
     pub metrics: EngineMetrics,
     pub tokenizer: ByteTokenizer,
 }
@@ -100,6 +103,7 @@ impl SimEngine {
             router: Router::new(),
             sampler: Sampler::new(cfg.seed),
             seqs: HashMap::new(),
+            paused: Vec::new(),
             metrics: EngineMetrics::default(),
             tokenizer: ByteTokenizer::new(spec.vocab),
             spec,
@@ -198,18 +202,38 @@ impl SimEngine {
         let len = seq.prompt.len();
 
         // Prefix lookup + KV admission (shared policy; see
-        // `policy::admit_kv`).
+        // `policy::admit_kv`). Paused sequences count as pending work:
+        // their blocks return when they resume or finish, so admission
+        // must wait for them rather than fail the request.
         let matched = match policy::admit_kv(
             &self.cfg,
             &mut self.kv,
             &mut self.prefix,
             &mut self.metrics,
-            self.batcher.is_empty(),
+            self.batcher.is_empty() && self.paused.is_empty(),
             seq.id,
             &seq.prompt,
         ) {
             Ok(Some(m)) => m,
             Ok(None) => {
+                // Admission must wait for KV. If nothing is decoding,
+                // the holders are parked on backpressure and decode
+                // will never free blocks — preempt a strictly
+                // lower-priority parked victim so a high-priority
+                // waiter is not starved by a stalled client.
+                if self.batcher.is_empty() {
+                    if let Some(victim) = policy::admission_relief_victim(
+                        &self.kv,
+                        &self.seqs,
+                        &self.paused,
+                        seq.priority,
+                    ) {
+                        self.paused.retain(|&p| p != victim);
+                        let mut vseq = self.seqs.remove(&victim).unwrap();
+                        self.metrics.preemptions += 1;
+                        self.finish_seq(&mut vseq, FinishReason::Preempted)?;
+                    }
+                }
                 self.router.requeue_front(seq);
                 return self.step_decode();
             }
@@ -228,13 +252,15 @@ impl SimEngine {
             .write_prefill_range(seq.id, &k, &v, len, matched.tokens, len)?;
         seq.kv_len = len;
 
-        // First generated token.
+        // First generated token. A fresh stream always has credit
+        // (capacity >= 1); a client that already hung up is reaped by
+        // the next step's stream scan.
         let logits = self.logits_for(seq.id, *seq.prompt.last().unwrap())?;
         let tok = self.sampler.sample(&logits, seq.params);
         seq.generated.push(tok);
         seq.first_token_at = Some(Instant::now());
         self.metrics.first_token.record(seq.arrived.elapsed());
-        seq.emit(GenEvent::Token(tok));
+        let _ = seq.emit_token(tok);
         self.metrics.tokens_generated += 1;
         self.metrics.requests_admitted += 1;
 
@@ -265,15 +291,25 @@ impl SimEngine {
 
     fn step_decode(&mut self) -> Result<()> {
         let t0 = Instant::now();
+        // The stream scan may have paused or dropped every running
+        // sequence; there is nothing to decode then.
+        if self.batcher.is_empty() {
+            return Ok(());
+        }
         // KV headroom via the shared policy: reclaim cached blocks
-        // first, preempt last (needs >= 2 running).
+        // first, preempt last. The victim pool spans running *and*
+        // backpressure-paused sequences (parked work holds KV too).
         while policy::reclaim_decode_headroom(
             &mut self.kv,
             &mut self.prefix,
             &mut self.metrics,
             self.batcher.len(),
+            self.batcher.len() + self.paused.len(),
         ) {
             self.preempt_one()?;
+        }
+        if self.batcher.is_empty() {
+            return Ok(()); // preemption may have taken the last runner
         }
         let batch = self.batcher.assemble()?;
         let max_seq = self.spec.max_seq;
@@ -294,7 +330,10 @@ impl SimEngine {
             seq.kv_len += 1;
             let new_tok = self.sampler.sample(&logits, seq.params);
             seq.generated.push(new_tok);
-            seq.emit(GenEvent::Token(new_tok));
+            // Cannot be Full: the pre-decode stream scan guaranteed at
+            // least one credit and this is the step's only token. A
+            // mid-step disconnect is reaped by the next scan.
+            let _ = seq.emit_token(new_tok);
             self.metrics.tokens_generated += 1;
             self.metrics.decode_rows += 1;
             let done_eos = new_tok == EOS;
@@ -324,14 +363,81 @@ impl SimEngine {
         Ok(())
     }
 
+    /// Preempt one victim under KV pressure: the shared census spans
+    /// running *and* paused sequences (a parked slow client's KV is
+    /// reclaimable like any other), ordered by the scheduler's
+    /// (priority asc, reusable desc, recency) rule.
     fn preempt_one(&mut self) -> Result<()> {
-        let candidates = policy::preempt_candidates(&self.kv, &self.batcher.running_ids());
+        let mut pool = self.batcher.running_ids();
+        pool.extend(self.paused.iter().copied());
+        let candidates = policy::preempt_candidates(&self.kv, &self.seqs, &pool);
         let id = preemption_victim(&candidates)
             .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
         let mut seq = self.seqs.remove(&id).unwrap();
         self.metrics.preemptions += 1;
-        self.batcher.remove(id)?;
+        if self.paused.contains(&id) {
+            self.paused.retain(|&p| p != id);
+        } else {
+            self.batcher.remove(id)?;
+        }
         self.finish_seq(&mut seq, FinishReason::Preempted)
+    }
+
+    // -----------------------------------------------------------------
+    // Stream flow control
+    // -----------------------------------------------------------------
+
+    /// Apply backpressure at the top of every step. The *decisions*
+    /// (resume order, hysteresis, policy) are the shared
+    /// [`policy::plan_stream_ops`]; this method supplies only the sim's
+    /// mechanics for each transition. Running *before* the scheduling
+    /// decision keeps the scheduler's view of the running set accurate,
+    /// and checking credit before decode means a generated token always
+    /// has a slot — backpressure halts generation, it never loses data.
+    fn service_streams(&mut self) -> Result<()> {
+        let free_lanes = self.cfg.max_running.saturating_sub(self.batcher.len());
+        let ops = policy::plan_stream_ops(
+            &self.seqs,
+            &self.paused,
+            &self.batcher.running_ids(),
+            self.cfg.backpressure,
+            free_lanes,
+        );
+        for op in ops {
+            match op {
+                StreamOp::Resume(id) => {
+                    self.batcher.admit(id)?;
+                    self.paused.retain(|&p| p != id);
+                    self.seqs.get_mut(&id).unwrap().state = SeqState::Decoding;
+                    self.metrics.backpressure_resumes += 1;
+                }
+                StreamOp::ReapPaused(id) => {
+                    self.paused.retain(|&p| p != id);
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.metrics.client_disconnects += 1;
+                    self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+                }
+                StreamOp::ReapRunning(id) => {
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.batcher.remove(id)?;
+                    self.metrics.client_disconnects += 1;
+                    self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+                }
+                StreamOp::Pause(id) => {
+                    self.batcher.remove(id)?;
+                    self.seqs.get_mut(&id).unwrap().state = SeqState::Paused;
+                    self.paused.push(id);
+                    self.metrics.backpressure_pauses += 1;
+                }
+                StreamOp::DropOverrun(id) => {
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.batcher.remove(id)?;
+                    self.metrics.backpressure_drops += 1;
+                    self.finish_seq(&mut seq, FinishReason::Overrun)?;
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Register the retired sequence's stored tokens in the prefix
@@ -363,7 +469,7 @@ impl SimEngine {
     fn finish_seq(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
         seq.state = SeqState::Finished(reason);
         let usage = seq.usage();
-        seq.emit(GenEvent::Finished { reason, usage });
+        seq.emit_finish(reason, usage);
         self.metrics.record_finish(&seq.tenant, usage);
         self.register_prefix(seq);
         if self.kv.contains(seq.id) {
@@ -399,11 +505,14 @@ impl InferenceEngine for SimEngine {
             &req,
             prompt_tokens,
             self.cfg.max_new_tokens,
+            self.cfg.stream_capacity,
         )
     }
 
-    /// Run one scheduling iteration (same policy as the real engine).
+    /// Run one scheduling iteration (same policy as the real engine):
+    /// service stream flow control, then prefill/decode/idle.
     fn step(&mut self) -> Result<Action> {
+        self.service_streams()?;
         let state = policy::plan_admission(
             &self.cfg,
             &mut self.kv,
@@ -422,11 +531,18 @@ impl InferenceEngine for SimEngine {
         Ok(action)
     }
 
-    /// Cancel a queued or running request; its KV blocks are released
-    /// (stored tokens may survive in the prefix cache, held by the tree
-    /// alone).
+    /// Cancel a queued, running, or paused request; its KV blocks are
+    /// released (stored tokens may survive in the prefix cache, held by
+    /// the tree alone).
     fn cancel(&mut self, id: RequestId) -> Result<bool> {
         if let Some(mut seq) = self.router.take(id) {
+            self.metrics.cancellations += 1;
+            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+            return Ok(true);
+        }
+        if self.paused.contains(&id) {
+            self.paused.retain(|&p| p != id);
+            let mut seq = self.seqs.remove(&id).unwrap();
             self.metrics.cancellations += 1;
             self.finish_seq(&mut seq, FinishReason::Cancelled)?;
             return Ok(true);
@@ -445,7 +561,7 @@ impl InferenceEngine for SimEngine {
     }
 
     fn is_idle(&self) -> bool {
-        self.router.queued() == 0 && self.batcher.is_empty()
+        self.router.queued() == 0 && self.batcher.is_empty() && self.paused.is_empty()
     }
 
     fn queued(&self) -> usize {
@@ -454,6 +570,14 @@ impl InferenceEngine for SimEngine {
 
     fn running(&self) -> usize {
         self.batcher.len()
+    }
+
+    fn paused(&self) -> usize {
+        self.paused.len()
+    }
+
+    fn queue_depths(&self) -> Vec<(i32, usize)> {
+        self.router.depths_by_priority()
     }
 
     fn encode(&self, text: &str) -> Vec<u32> {
@@ -468,6 +592,7 @@ impl InferenceEngine for SimEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::GenEvent;
     use crate::sampling::SamplingParams;
 
     fn cfg(prefix_cache: bool) -> EngineConfig {
@@ -729,6 +854,295 @@ mod tests {
         assert_eq!(e.queued(), 1);
         e.run_to_completion().unwrap();
         assert_eq!(e.metrics.requests_finished, 2);
+    }
+
+    #[test]
+    fn pause_decode_parks_slow_consumer_and_resumes_losslessly() {
+        // Reference: same prompt, roomy stream (no backpressure).
+        let (prompt, want) = probe_prompt(10, 16, false);
+
+        let mut e = SimEngine::new(
+            EngineConfig {
+                stream_capacity: 3,
+                backpressure: crate::config::BackpressurePolicy::PauseDecode,
+                ..cfg(true)
+            },
+            SimSpec::default(),
+        )
+        .unwrap();
+        let h = e.submit(GenRequest::text(&prompt).max_new_tokens(16)).unwrap();
+        assert_eq!(h.capacity(), 3);
+        // Never drain: the stream fills at exactly the capacity and the
+        // sequence parks instead of buffering more.
+        for _ in 0..20 {
+            e.step().unwrap();
+        }
+        assert_eq!(e.paused(), 1, "slow consumer must be parked");
+        assert_eq!(e.running(), 0);
+        assert!(e.metrics.backpressure_pauses >= 1);
+        assert_eq!(h.events.buffered(), 3, "bounded at the configured capacity");
+        assert!(!e.is_idle(), "a paused request is still pending work");
+
+        // Drain while stepping: the sequence resumes and completes with
+        // the exact token stream of the unpressured run (greedy = no
+        // sampler-order sensitivity; backpressure must be lossless).
+        let mut got = Vec::new();
+        let mut fin = None;
+        let mut steps = 0;
+        while fin.is_none() {
+            e.step().unwrap();
+            let (mut t, f) = h.drain();
+            got.append(&mut t);
+            if f.is_some() {
+                fin = f;
+            }
+            steps += 1;
+            assert!(steps < 10_000, "must terminate once the client drains");
+        }
+        assert!(e.metrics.backpressure_resumes >= 1);
+        assert_eq!(got, want, "pause/resume must not lose or reorder tokens");
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn drop_slow_finishes_with_overrun_and_reclaims_kv() {
+        let (prompt, _) = probe_prompt(6, 16, false);
+        let total = 128;
+        let mut e = SimEngine::new(
+            EngineConfig {
+                stream_capacity: 2,
+                backpressure: crate::config::BackpressurePolicy::DropSlow,
+                ..cfg(false)
+            },
+            SimSpec::default(),
+        )
+        .unwrap();
+        let h = e.submit(GenRequest::text(&prompt).max_new_tokens(16)).unwrap();
+        // Never drain; DropSlow terminates the request, so completion
+        // does not need the client's cooperation.
+        e.run_to_completion().unwrap();
+        let (toks, fin) = h.drain();
+        let (reason, usage) = fin.expect("overrun still delivers the finish event");
+        assert_eq!(reason, FinishReason::Overrun);
+        assert_eq!(toks.len(), 2, "exactly the buffered tokens survive");
+        assert_eq!(usage.generated_tokens, 2, "generation halted at the overrun");
+        assert_eq!(e.metrics.backpressure_drops, 1);
+        assert_eq!(e.kv_free_blocks(), total, "overrun reclaims KV (cache off)");
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn dropped_handle_reclaims_request() {
+        let (prompt, _) = probe_prompt(6, 16, false);
+        let mut e = SimEngine::new(cfg(false), SimSpec::default()).unwrap();
+        let h = e.submit(GenRequest::text(&prompt).max_new_tokens(16)).unwrap();
+        e.step().unwrap(); // prefill
+        assert_eq!(e.running(), 1);
+        drop(h); // client goes away without cancelling
+        e.step().unwrap(); // stream scan reaps the disconnect
+        assert!(e.is_idle(), "disconnected client's work is reclaimed");
+        assert_eq!(e.metrics.client_disconnects, 1);
+        assert_eq!(e.kv_free_blocks(), 128);
+    }
+
+    #[test]
+    fn stalled_stream_never_delays_other_requests() {
+        let (slow_prompt, _) = probe_prompt(10, 16, false);
+        let mut e = SimEngine::new(
+            EngineConfig {
+                stream_capacity: 2,
+                backpressure: crate::config::BackpressurePolicy::PauseDecode,
+                ..cfg(true)
+            },
+            SimSpec::default(),
+        )
+        .unwrap();
+        let slow = e
+            .submit(GenRequest::text(&slow_prompt).max_new_tokens(16))
+            .unwrap();
+        let fast = e
+            .submit(GenRequest::text("fast concurrent stream").max_new_tokens(12))
+            .unwrap();
+        // Drain only the fast handle each step.
+        let mut fast_tokens = Vec::new();
+        let mut fast_fin = None;
+        let mut steps = 0;
+        while fast_fin.is_none() {
+            e.step().unwrap();
+            let (mut t, f) = fast.drain();
+            fast_tokens.append(&mut t);
+            if f.is_some() {
+                fast_fin = f;
+            }
+            steps += 1;
+            assert!(
+                steps < 200,
+                "fast stream must finish promptly while the slow one stalls"
+            );
+        }
+        assert!(!fast_tokens.is_empty());
+        // The slow request parks once its 2-slot buffer fills (it may
+        // still be mid-fill if the fast stream finished very early).
+        let mut extra = 0;
+        while e.paused() == 0 && extra < 50 {
+            e.step().unwrap();
+            extra += 1;
+        }
+        assert_eq!(e.paused(), 1, "slow request parked, not finished");
+        assert!(slow.events.buffered() <= 2, "slow buffer stays bounded");
+        // Admin-style cleanup: cancelling the paused request works.
+        assert!(e.cancel(slow.id).unwrap());
+        assert!(e.is_idle());
+        let (_, fin) = slow.drain();
+        assert_eq!(fin.unwrap().0, FinishReason::Cancelled);
+    }
+
+    /// Serving knobs for the tiny-pool preemption tests: 6 KV blocks of
+    /// 4 tokens, 2-token stream buffers, PauseDecode.
+    fn tiny_pool_cfg() -> EngineConfig {
+        EngineConfig {
+            kv_block_tokens: 4,
+            kv_total_blocks: 6,
+            max_new_tokens: 12,
+            max_running: 4,
+            decode_buckets: vec![1, 2, 4],
+            prefix_cache: false,
+            stream_capacity: 2,
+            backpressure: crate::config::BackpressurePolicy::PauseDecode,
+            ..EngineConfig::default()
+        }
+    }
+
+    /// A 7-char prompt (8 tokens with BOS = 3 blocks of 4) whose first
+    /// generated tokens don't hit EOS (deterministic probe on a roomy
+    /// pool), so a request over it reliably survives to parking.
+    fn probe7(tag: u32) -> String {
+        for salt in 0..512u32 {
+            let p = format!("p{tag}x{salt:04}");
+            assert_eq!(p.len(), 7);
+            let mut e = SimEngine::new(
+                EngineConfig {
+                    kv_total_blocks: 64,
+                    stream_capacity: 64,
+                    ..tiny_pool_cfg()
+                },
+                SimSpec::default(),
+            )
+            .unwrap();
+            let h = e.submit(GenRequest::text(&p).max_new_tokens(4)).unwrap();
+            e.run_to_completion().unwrap();
+            if h.drain().0.len() == 4 {
+                return p;
+            }
+        }
+        panic!("no probe prompt survives 4 tokens");
+    }
+
+    /// Submit a low-priority request over a probed prompt and step until
+    /// its 2-slot stream fills and it parks (holding 3 KV blocks).
+    fn park_slow(e: &mut SimEngine) -> SubmissionHandle {
+        let h = e
+            .submit(GenRequest::text(probe7(0)).priority(0).max_new_tokens(12))
+            .unwrap();
+        for _ in 0..6 {
+            e.step().unwrap();
+        }
+        assert_eq!(e.paused(), 1, "slow request parked");
+        h
+    }
+
+    #[test]
+    fn paused_victim_preempted_under_kv_pressure() {
+        // A parked slow client must not be able to wedge live work: its
+        // KV is part of the preemption victim pool.
+        let mut e = SimEngine::new(tiny_pool_cfg(), SimSpec::default()).unwrap();
+        // Slow, low-priority request: admit, then park (never drained;
+        // 2-token stream fills after one decode step). Holds 3 blocks.
+        let slow = park_slow(&mut e);
+        // High-priority request: admission takes the 3 free blocks, and
+        // its first decode step needs headroom the parked request
+        // holds — the parked, lower-priority sequence is the victim.
+        let fast = e
+            .submit(GenRequest::text(probe7(1)).priority(3).max_new_tokens(12))
+            .unwrap();
+        let mut fast_fin = None;
+        let mut steps = 0;
+        while fast_fin.is_none() {
+            if !e.is_idle() {
+                e.step().unwrap();
+            }
+            let (_, f) = fast.drain();
+            if f.is_some() {
+                fast_fin = f;
+            }
+            steps += 1;
+            assert!(steps < 1_000, "fast request must complete");
+        }
+        assert_ne!(
+            fast_fin.unwrap().0,
+            FinishReason::Preempted,
+            "high-priority request survives"
+        );
+        assert!(e.metrics.preemptions >= 1, "pressure forced a preemption");
+        let (_, slow_fin) = slow.drain();
+        assert_eq!(
+            slow_fin.unwrap().0,
+            FinishReason::Preempted,
+            "the parked lower-priority request is the victim"
+        );
+        assert!(e.is_idle());
+        assert_eq!(e.kv_free_blocks(), 6, "all blocks return (cache off)");
+    }
+
+    #[test]
+    fn admission_blocked_by_parked_kv_preempts_strictly_lower_priority() {
+        // Pool of 6 blocks (4 tokens each). A parked priority-0 request
+        // holds 3; a priority-3 submission needs 4 (15 tokens + 1), so
+        // admission is blocked with nothing decoding. The admission
+        // path must preempt the parked victim rather than starve the
+        // higher-priority waiter.
+        let mut e = SimEngine::new(tiny_pool_cfg(), SimSpec::default()).unwrap();
+        let slow = park_slow(&mut e);
+        let big = e
+            .submit(
+                GenRequest::text("waiting-high!!") // 15 tokens w/ BOS
+                    .priority(3)
+                    .max_new_tokens(4),
+            )
+            .unwrap();
+        let mut fin = None;
+        let mut steps = 0;
+        while fin.is_none() {
+            if !e.is_idle() {
+                e.step().unwrap();
+            }
+            let (_, f) = big.drain();
+            if f.is_some() {
+                fin = f;
+            }
+            steps += 1;
+            assert!(steps < 1_000, "waiter must not starve behind parked KV");
+        }
+        assert_ne!(fin.unwrap().0, FinishReason::Preempted);
+        assert_eq!(e.metrics.preemptions, 1, "parked victim preempted");
+        assert_eq!(slow.drain().1.unwrap().0, FinishReason::Preempted);
+
+        // Equal priority: parked work keeps its KV; the waiter queues.
+        let mut e = SimEngine::new(tiny_pool_cfg(), SimSpec::default()).unwrap();
+        let _slow = park_slow(&mut e);
+        let _big = e
+            .submit(
+                GenRequest::text("waiting-same!!")
+                    .priority(0)
+                    .max_new_tokens(4),
+            )
+            .unwrap();
+        for _ in 0..30 {
+            e.step().unwrap();
+        }
+        assert_eq!(e.paused(), 1, "equal-priority parked work survives");
+        assert_eq!(e.queued(), 1, "waiter stays queued");
+        assert_eq!(e.metrics.preemptions, 0);
     }
 
     #[test]

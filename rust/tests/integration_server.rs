@@ -3,13 +3,17 @@
 //! against a [`SimEngine`]-backed [`InferenceEngine`] on 127.0.0.1, so
 //! the whole request path runs on a bare checkout (no PJRT artifacts).
 //!
-//! Covers generate (with id echo and usage accounting), stats
-//! (including per-tenant counters), cancel (ack + `cancelled` done
-//! line), stop sequences over the wire, budget clamping, and the
-//! structured-error validation path.
+//! Covers generate (with the `accepted` ack, id echo and usage
+//! accounting), stats (per-tenant counters, registry depth, queue
+//! depths, backpressure counters), cancel (ack + `cancelled` done line,
+//! including *cross-connection* cancellation by global id and the admin
+//! bulk-cancel verb), stop sequences over the wire, budget clamping,
+//! the structured-error validation path, and slow-client isolation (a
+//! stalled reader never delays other connections' streams).
 
 use std::net::TcpListener;
 use std::thread;
+use std::time::{Duration, Instant};
 
 use fdpp::api::{GenRequest, InferenceEngine};
 use fdpp::config::EngineConfig;
@@ -29,8 +33,7 @@ fn test_cfg() -> EngineConfig {
 
 /// Bind port 0, spawn the sim-backed engine thread, run the production
 /// accept loop on it, and return the dialable address.
-fn start_server(cfg: EngineConfig) -> String {
-    let spec = SimSpec::default();
+fn start_server_with(cfg: EngineConfig, spec: SimSpec) -> String {
     let vocab = spec.vocab;
     let max_new_cap = cfg.max_new_tokens;
     let handle = spawn_sim_engine(cfg, spec).expect("sim engine starts");
@@ -40,6 +43,10 @@ fn start_server(cfg: EngineConfig) -> String {
         let _ = serve_on(listener, handle, vocab, max_new_cap);
     });
     addr
+}
+
+fn start_server(cfg: EngineConfig) -> String {
+    start_server_with(cfg, SimSpec::default())
 }
 
 /// The deterministic full generation for a prompt, straight from a
@@ -67,6 +74,48 @@ fn long_running_prompt(min_tokens: usize, budget: usize) -> (String, Vec<u32>) {
     panic!("no prompt survived {min_tokens} tokens");
 }
 
+/// A long-budget config + prompt pair guaranteed (by a deterministic
+/// local probe) to run its full budget, so a cancel always lands
+/// mid-generation over the wire.
+fn cancelable_workload(budget: usize) -> (EngineConfig, SimSpec, String) {
+    let spec = SimSpec {
+        vocab: 32000,
+        max_seq: 1024,
+        ..SimSpec::default()
+    };
+    let cfg = EngineConfig {
+        max_new_tokens: budget,
+        kv_total_blocks: 256,
+        stream_capacity: budget + 8,
+        ..test_cfg()
+    };
+    let prompt = (0..16u32)
+        .map(|salt| format!("cancel probe {salt}"))
+        .find(|p| {
+            let mut e = SimEngine::new(cfg.clone(), spec).unwrap();
+            let h = e
+                .submit(GenRequest::text(p.as_str()).max_new_tokens(budget))
+                .unwrap();
+            e.run_to_completion().unwrap();
+            h.drain().0.len() == budget
+        })
+        .expect("some probe must run its full budget without EOS");
+    (cfg, spec, prompt)
+}
+
+/// Read lines until the `accepted` ack, returning the global id.
+fn read_accepted(c: &mut Client, wire_id: &str) -> String {
+    let j = c.recv().unwrap();
+    assert_eq!(
+        j.get("accepted").and_then(Json::as_bool),
+        Some(true),
+        "first line must be the accepted ack, got {}",
+        j.to_string()
+    );
+    assert_eq!(j.req_str("id").unwrap(), wire_id);
+    j.req_str("global").unwrap()
+}
+
 #[test]
 fn generate_echoes_id_and_reports_usage() {
     let addr = start_server(test_cfg());
@@ -77,6 +126,8 @@ fn generate_echoes_id_and_reports_usage() {
         ("max_new_tokens", Json::Num(6.0)),
     ]))
     .unwrap();
+    let global = read_accepted(&mut c, "req-1");
+    assert!(global.starts_with('g'), "global ids look like g<N>: {global}");
     let mut tokens = Vec::new();
     let done = loop {
         let j = c.recv().unwrap();
@@ -105,7 +156,7 @@ fn generate_echoes_id_and_reports_usage() {
 }
 
 #[test]
-fn stats_exposes_per_tenant_counters() {
+fn stats_exposes_per_tenant_counters_and_flow_control_fields() {
     let addr = start_server(test_cfg());
     let mut c = Client::connect(&addr).unwrap();
     c.send(&Json::obj(vec![
@@ -114,7 +165,7 @@ fn stats_exposes_per_tenant_counters() {
         ("max_new_tokens", Json::Num(4.0)),
     ]))
     .unwrap();
-    // Drain the generation.
+    // Drain the generation (accepted line, tokens, done).
     loop {
         let j = c.recv().unwrap();
         if j.get("done").is_some() {
@@ -127,58 +178,40 @@ fn stats_exposes_per_tenant_counters() {
     let acme = j.field("tenants").unwrap().field("acme").unwrap();
     assert_eq!(acme.req_usize("requests_finished").unwrap(), 1);
     assert!(acme.req_usize("generated_tokens").unwrap() >= 1);
+    // v2.1 snapshot fields: registry depth, engine gauges, per-priority
+    // queue depths, backpressure counters.
+    assert_eq!(j.req_usize("registry_depth").unwrap(), 0, "nothing in flight");
+    assert_eq!(j.req_usize("queued").unwrap(), 0);
+    assert_eq!(j.req_usize("running").unwrap(), 0);
+    assert_eq!(j.req_usize("paused").unwrap(), 0);
+    assert!(j.field("queue_depths").is_ok());
+    assert_eq!(j.req_usize("backpressure_pauses").unwrap(), 0);
+    assert_eq!(j.req_usize("backpressure_drops").unwrap(), 0);
 }
 
 #[test]
 fn cancel_mid_generation_reports_cancelled() {
     // Determinism plan: a huge sim vocab makes EOS very unlikely per
-    // step, and the probe below *verifies* (the hash model is
-    // deterministic per prompt) that the chosen prompt runs its full
-    // budget uncancelled. Over the wire, those several hundred decode
-    // steps take orders of magnitude longer than the cancel round trip,
-    // so the cancel always lands mid-decode.
-    let spec = SimSpec {
-        vocab: 32000,
-        max_seq: 1024,
-        ..SimSpec::default()
-    };
-    let cfg = EngineConfig {
-        max_new_tokens: 600,
-        kv_total_blocks: 256,
-        ..test_cfg()
-    };
+    // step, and the probe verifies (the hash model is deterministic per
+    // prompt) that the chosen prompt runs its full budget uncancelled.
+    // Over the wire, those several hundred decode steps take orders of
+    // magnitude longer than the cancel round trip, so the cancel always
+    // lands mid-decode.
     let budget = 600;
-    let prompt = (0..16u32)
-        .map(|salt| format!("cancel probe {salt}"))
-        .find(|p| {
-            let mut e = SimEngine::new(cfg.clone(), spec).unwrap();
-            let h = e
-                .submit(GenRequest::text(p.as_str()).max_new_tokens(budget))
-                .unwrap();
-            e.run_to_completion().unwrap();
-            h.drain().0.len() == budget
-        })
-        .expect("some probe must run its full budget without EOS");
-
-    let vocab = spec.vocab;
-    let cap = cfg.max_new_tokens;
-    let handle = spawn_sim_engine(cfg, spec).expect("sim engine starts");
-    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
-    let addr = listener.local_addr().unwrap().to_string();
-    thread::spawn(move || {
-        let _ = serve_on(listener, handle, vocab, cap);
-    });
+    let (cfg, spec, prompt) = cancelable_workload(budget);
+    let addr = start_server_with(cfg, spec);
 
     let mut c = Client::connect(&addr).unwrap();
     // Fail loudly (recv error) rather than hanging if a timing
     // assumption is ever violated on a pathological machine.
-    c.set_read_timeout(Some(std::time::Duration::from_secs(60))).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
     c.send(&Json::obj(vec![
         ("id", Json::Str("c1".into())),
         ("prompt", Json::Str(prompt)),
         ("max_new_tokens", Json::Num(budget as f64)),
     ]))
     .unwrap();
+    let _global = read_accepted(&mut c, "c1");
     // Wait for the first streamed token (the request is in-flight), then
     // poke the duplicate-id guard and cancel.
     let first = c.recv().unwrap();
@@ -199,7 +232,9 @@ fn cancel_mid_generation_reports_cancelled() {
     let mut streamed = 1usize;
     while reason.is_none() || !saw_ack || !saw_duplicate {
         let j = c.recv().unwrap();
-        if j.get("ok").is_some() {
+        if j.get("accepted").is_some() {
+            continue;
+        } else if j.get("ok").is_some() {
             saw_ack = true;
         } else if j.get("error").is_some() {
             assert_eq!(j.req_str("code").unwrap(), "duplicate_id");
@@ -226,6 +261,170 @@ fn cancel_mid_generation_reports_cancelled() {
     // The engine is idle again and serves new work on the same socket.
     let out = c.generate("after cancel", 3);
     assert!(out.is_ok());
+}
+
+#[test]
+fn cancel_from_another_connection_by_global_id() {
+    let budget = 600;
+    let (cfg, spec, prompt) = cancelable_workload(budget);
+    let addr = start_server_with(cfg, spec);
+
+    // Connection A submits and reads its global id from the ack.
+    let mut a = Client::connect(&addr).unwrap();
+    a.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    a.send(&Json::obj(vec![
+        ("id", Json::Str("mine".into())),
+        ("prompt", Json::Str(prompt)),
+        ("max_new_tokens", Json::Num(budget as f64)),
+    ]))
+    .unwrap();
+    let global = read_accepted(&mut a, "mine");
+    let first = a.recv().unwrap();
+    assert!(first.get("token").is_some(), "request is streaming");
+
+    // Connection B — which never submitted anything — cancels it by the
+    // global id.
+    let mut b = Client::connect(&addr).unwrap();
+    b.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    b.cancel(&global).unwrap();
+    let ack = b.recv().unwrap();
+    assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(ack.req_str("id").unwrap(), global);
+
+    // Connection A's stream terminates with reason "cancelled".
+    let mut streamed = 1usize;
+    let reason = loop {
+        let j = a.recv().unwrap();
+        if j.get("done").is_some() {
+            break j.req_str("reason").unwrap();
+        }
+        streamed += 1;
+    };
+    assert_eq!(reason, "cancelled");
+    assert!(streamed < budget, "cancel landed mid-generation");
+
+    // KV fully reclaimed: the engine serves new work and reports the
+    // cancellation; the registry entry is pruned.
+    let stats = fdpp::util::json::parse(&b.stats().unwrap()).unwrap();
+    assert!(stats.req_usize("cancellations").unwrap() >= 1);
+    assert_eq!(stats.req_usize("registry_depth").unwrap(), 0);
+    // A cancel for the now-dead global id is unknown.
+    b.cancel(&global).unwrap();
+    let j = b.recv().unwrap();
+    assert_eq!(j.req_str("code").unwrap(), "unknown_id");
+}
+
+#[test]
+fn admin_cancel_tenant_bulk_cancels_across_connections() {
+    let budget = 600;
+    let (cfg, spec, prompt) = cancelable_workload(budget);
+    let addr = start_server_with(cfg, spec);
+
+    let mut a = Client::connect(&addr).unwrap();
+    a.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    for id in ["t1", "t2"] {
+        a.send(&Json::obj(vec![
+            ("id", Json::Str(id.into())),
+            ("prompt", Json::Str(prompt.clone())),
+            ("tenant", Json::Str("acme".into())),
+            ("max_new_tokens", Json::Num(budget as f64)),
+        ]))
+        .unwrap();
+    }
+    // Both accepted; wait until both stream (order of lines across the
+    // two pump threads is arbitrary, so classify by id).
+    let mut accepted = 0;
+    let mut streaming = std::collections::HashSet::new();
+    while accepted < 2 || streaming.len() < 2 {
+        let j = a.recv().unwrap();
+        if j.get("accepted").is_some() {
+            accepted += 1;
+        } else if j.get("token").is_some() {
+            streaming.insert(j.req_str("id").unwrap());
+        }
+    }
+
+    // Admin bulk-cancel from a different connection.
+    let mut admin = Client::connect(&addr).unwrap();
+    admin.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    admin.admin_cancel_tenant("acme").unwrap();
+    let ack = admin.recv().unwrap();
+    assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(ack.req_usize("cancelled").unwrap(), 2);
+
+    // Both of A's streams end with reason "cancelled".
+    let mut reasons = std::collections::HashMap::new();
+    while reasons.len() < 2 {
+        let j = a.recv().unwrap();
+        if j.get("done").is_some() {
+            reasons.insert(j.req_str("id").unwrap(), j.req_str("reason").unwrap());
+        }
+    }
+    assert_eq!(reasons.get("t1").map(String::as_str), Some("cancelled"));
+    assert_eq!(reasons.get("t2").map(String::as_str), Some("cancelled"));
+
+    // Unknown tenants cancel nothing; malformed admin is a structured
+    // error.
+    admin.admin_cancel_tenant("nobody").unwrap();
+    assert_eq!(admin.recv().unwrap().req_usize("cancelled").unwrap(), 0);
+    admin
+        .send(&Json::obj(vec![("admin", Json::obj(vec![("reboot", Json::Bool(true))]))]))
+        .unwrap();
+    assert_eq!(admin.recv().unwrap().req_str("code").unwrap(), "bad_admin");
+}
+
+#[test]
+fn stalled_reader_never_delays_other_connections() {
+    // A slow client submits a long generation and then stops reading its
+    // socket entirely; a fast client on another connection must still
+    // stream all of its own work promptly. (The engine-side bounded
+    // buffering itself — channel at configured capacity — is asserted
+    // deterministically in the sim and property tests; over TCP the OS
+    // socket buffers add slack ahead of the bounded channel.)
+    let budget = 600;
+    let (cfg, spec, prompt) = cancelable_workload(budget);
+    let cfg = EngineConfig {
+        stream_capacity: 8,
+        ..cfg
+    };
+    for policy in [
+        fdpp::config::BackpressurePolicy::PauseDecode,
+        fdpp::config::BackpressurePolicy::DropSlow,
+    ] {
+        let addr = start_server_with(
+            EngineConfig {
+                backpressure: policy,
+                ..cfg.clone()
+            },
+            spec,
+        );
+        let mut slow = Client::connect(&addr).unwrap();
+        slow.send(&Json::obj(vec![
+            ("id", Json::Str("slow".into())),
+            ("prompt", Json::Str(prompt.clone())),
+            ("max_new_tokens", Json::Num(budget as f64)),
+        ]))
+        .unwrap();
+        // `slow` now never reads again (its lines pile into OS buffers,
+        // then into the bounded channel, then backpressure applies).
+
+        let mut fast = Client::connect(&addr).unwrap();
+        fast.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let t0 = Instant::now();
+        for i in 0..5 {
+            let out = fast.generate(&format!("fast stream {i}"), 8);
+            assert!(out.is_ok(), "fast stream must keep flowing: {out:?}");
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "fast client stalled behind a slow reader ({policy:?})"
+        );
+        // The engine still answers stats (liveness) and the fast work
+        // all finished.
+        let stats = fdpp::util::json::parse(&fast.stats().unwrap()).unwrap();
+        assert!(stats.req_usize("requests_finished").unwrap() >= 5);
+        drop(slow);
+    }
 }
 
 #[test]
@@ -270,6 +469,7 @@ fn stop_sequence_over_the_wire() {
         ("stop", Json::Arr(vec![Json::Str(stop_str)])),
     ]))
     .unwrap();
+    let _global = read_accepted(&mut c, "s1");
     let mut tokens = Vec::new();
     let done = loop {
         let j = c.recv().unwrap();
@@ -320,6 +520,7 @@ fn invalid_requests_get_structured_errors_and_connection_survives() {
         (r#"{"max_new_tokens":4}"#, "bad_request"),
         (r#"{"prompt":"p","stop":[""]}"#, "bad_request"),
         ("this is not json", "bad_json"),
+        (r#"{"admin":"reboot"}"#, "bad_admin"),
     ] {
         c.send_raw(line).unwrap();
         let j = c.recv().unwrap();
