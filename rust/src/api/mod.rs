@@ -38,12 +38,76 @@
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::error::Result;
 use crate::metrics::EngineMetrics;
 use crate::sampling::SamplingParams;
 use crate::scheduler::Action;
 use crate::util::json::Json;
+
+// ---------------------------------------------------------------------
+// Wakeup: drain-path notification for the engine loop
+// ---------------------------------------------------------------------
+
+/// Edge-triggered notification channel between client-side stream
+/// drains and the engine thread.
+///
+/// When every live request is parked on backpressure, the engine loop
+/// has nothing to do until some client drains its bounded stream (or
+/// hangs up, or a new job arrives). It used to poll with a fixed nap;
+/// now it blocks on a `Wakeup` that is notified from exactly those
+/// three places, so resume latency is event-driven instead of
+/// poll-quantized. The epoch counter closes the check-then-wait race:
+/// capture [`Wakeup::epoch`] *before* inspecting engine state, then
+/// [`Wakeup::wait_from`] returns immediately if anything notified in
+/// between.
+#[derive(Debug, Clone, Default)]
+pub struct Wakeup {
+    inner: Arc<WakeupInner>,
+}
+
+#[derive(Debug, Default)]
+struct WakeupInner {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Wakeup {
+    pub fn new() -> Self {
+        Wakeup::default()
+    }
+
+    /// Current notification epoch; pass to [`Wakeup::wait_from`].
+    pub fn epoch(&self) -> u64 {
+        *self.inner.epoch.lock().unwrap()
+    }
+
+    /// Record one notification and wake every waiter.
+    pub fn notify(&self) {
+        let mut g = self.inner.epoch.lock().unwrap();
+        *g = g.wrapping_add(1);
+        drop(g);
+        self.inner.cv.notify_all();
+    }
+
+    /// Block until the epoch advances past `seen` or `timeout` elapses
+    /// (a safety net, not the expected wake path). Returns `true` when
+    /// a notification arrived.
+    pub fn wait_from(&self, seen: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.epoch.lock().unwrap();
+        while *g == seen {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            let (guard, _) = self.inner.cv.wait_timeout(g, left).unwrap();
+            g = guard;
+        }
+        true
+    }
+}
 
 /// Engine-assigned request identifier (monotone per engine; doubles as
 /// the KV-cache sequence id).
@@ -248,6 +312,11 @@ struct StreamShared {
     state: Mutex<StreamState>,
     readable: Condvar,
     capacity: usize,
+    /// Notified when the receiver drains across the resume threshold
+    /// (half capacity — the transition `policy::ready_to_resume` acts
+    /// on) or goes away: the engine loop may be blocked waiting for
+    /// exactly that.
+    drain: Option<Wakeup>,
 }
 
 /// Engine-side endpoint of a bounded event stream. Held by the
@@ -270,6 +339,17 @@ pub struct EventReceiver {
 /// tokens (floored to 1). The terminal `Finished` event has its own
 /// slot and is always deliverable.
 pub fn event_channel(capacity: usize) -> (EventSender, EventReceiver) {
+    event_channel_with_wakeup(capacity, None)
+}
+
+/// [`event_channel`] plus a drain-path [`Wakeup`]: the engine loop is
+/// notified when the receiver drains across the resume threshold or is
+/// dropped, so a parked sequence's resume is event-driven rather than
+/// polled — without serializing every token pop on the shared wakeup.
+pub fn event_channel_with_wakeup(
+    capacity: usize,
+    drain: Option<Wakeup>,
+) -> (EventSender, EventReceiver) {
     let ch = Arc::new(StreamShared {
         state: Mutex::new(StreamState {
             tokens: VecDeque::new(),
@@ -280,6 +360,7 @@ pub fn event_channel(capacity: usize) -> (EventSender, EventReceiver) {
         }),
         readable: Condvar::new(),
         capacity: capacity.max(1),
+        drain,
     });
     (
         EventSender {
@@ -348,10 +429,32 @@ impl Drop for EventSender {
 }
 
 impl EventReceiver {
+    /// Tell the engine loop stream credit came back (a parked sequence
+    /// may be resumable).
+    fn notify_drain(&self) {
+        if let Some(w) = &self.ch.drain {
+            w.notify();
+        }
+    }
+
+    /// True when popping one token just crossed the resume threshold
+    /// (`policy::ready_to_resume`: buffered at most half capacity) —
+    /// the only drain transition the engine ever acts on, so it is the
+    /// only one worth the shared-wakeup notify (a per-token notify
+    /// would serialize every fast-draining connection on one mutex).
+    fn crossed_resume_threshold(&self, remaining: usize) -> bool {
+        (remaining + 1) * 2 > self.ch.capacity && remaining * 2 <= self.ch.capacity
+    }
+
     /// Next buffered event: tokens in order, then the terminal event.
     pub fn try_recv(&self) -> std::result::Result<GenEvent, TryRecvError> {
         let mut g = self.ch.state.lock().unwrap();
         if let Some(t) = g.tokens.pop_front() {
+            let crossed = self.crossed_resume_threshold(g.tokens.len());
+            drop(g);
+            if crossed {
+                self.notify_drain();
+            }
             return Ok(GenEvent::Token(t));
         }
         if let Some((reason, usage)) = g.finished.take() {
@@ -372,6 +475,11 @@ impl EventReceiver {
         let mut g = self.ch.state.lock().unwrap();
         loop {
             if let Some(t) = g.tokens.pop_front() {
+                let crossed = self.crossed_resume_threshold(g.tokens.len());
+                drop(g);
+                if crossed {
+                    self.notify_drain();
+                }
                 return Ok(GenEvent::Token(t));
             }
             if let Some((reason, usage)) = g.finished.take() {
@@ -398,6 +506,8 @@ impl EventReceiver {
 impl Drop for EventReceiver {
     fn drop(&mut self) {
         self.ch.state.lock().unwrap().rx_alive = false;
+        // A disconnect is a wake condition too: the engine must reap.
+        self.notify_drain();
     }
 }
 
@@ -438,6 +548,13 @@ impl SubmissionHandle {
 pub trait InferenceEngine {
     /// Queue a request; returns the assigned id and event stream.
     fn submit(&mut self, req: GenRequest) -> Result<SubmissionHandle>;
+
+    /// Attach the engine-loop [`Wakeup`]: every stream the engine
+    /// creates from now on notifies it when the client drains back
+    /// across the resume threshold or disconnects, so a loop blocked on
+    /// parked work wakes immediately instead of polling. Engines
+    /// without flow control may ignore it (default no-op).
+    fn set_wakeup(&mut self, _wakeup: Wakeup) {}
 
     /// Run one scheduling iteration (prefill, decode, or idle).
     fn step(&mut self) -> Result<Action>;
@@ -653,5 +770,69 @@ mod tests {
         assert_eq!(tx.capacity(), 1);
         assert_eq!(tx.try_token(1), EmitResult::Sent);
         assert_eq!(tx.try_token(2), EmitResult::Full);
+    }
+
+    #[test]
+    fn wakeup_epoch_closes_the_check_then_wait_race() {
+        let w = Wakeup::new();
+        let seen = w.epoch();
+        // A notification *between* the epoch capture and the wait must
+        // make the wait return immediately (no timeout sleep).
+        w.notify();
+        let t0 = std::time::Instant::now();
+        assert!(w.wait_from(seen, Duration::from_secs(5)));
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not block");
+        // Nothing new: the wait times out.
+        assert!(!w.wait_from(w.epoch(), Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn wakeup_crosses_threads() {
+        let w = Wakeup::new();
+        let seen = w.epoch();
+        let w2 = w.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            w2.notify();
+        });
+        assert!(w.wait_from(seen, Duration::from_secs(10)), "notified");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn stream_drain_notifies_exactly_at_the_resume_threshold() {
+        let w = Wakeup::new();
+        let (tx, rx) = event_channel_with_wakeup(4, Some(w.clone()));
+        for t in 0..4 {
+            assert_eq!(tx.try_token(t), EmitResult::Sent);
+        }
+        // 4 -> 3 buffered: still above half capacity, engine would not
+        // resume, so no notify (fast clients must not hammer the lock).
+        let seen = w.epoch();
+        assert!(matches!(rx.try_recv(), Ok(GenEvent::Token(0))));
+        assert_eq!(w.epoch(), seen, "above-threshold drain stays silent");
+        // 3 -> 2 buffered: crosses `buffered*2 <= capacity` — exactly
+        // the `ready_to_resume` transition — and must notify.
+        assert!(matches!(rx.try_recv(), Ok(GenEvent::Token(1))));
+        assert_ne!(w.epoch(), seen, "threshold crossing must notify");
+        // Further drains below the threshold stay silent again.
+        let seen = w.epoch();
+        assert!(matches!(rx.try_recv(), Ok(GenEvent::Token(2))));
+        assert_eq!(w.epoch(), seen, "below-threshold drain stays silent");
+        // Disconnect always notifies (the engine must reap).
+        drop(rx);
+        assert_ne!(w.epoch(), seen, "disconnect must notify");
+    }
+
+    #[test]
+    fn capacity_one_stream_notifies_on_every_pop_to_empty() {
+        // With capacity 1 the resume threshold is an empty buffer, so
+        // each pop-to-empty is a crossing and must wake the engine.
+        let w = Wakeup::new();
+        let (tx, rx) = event_channel_with_wakeup(1, Some(w.clone()));
+        assert_eq!(tx.try_token(9), EmitResult::Sent);
+        let seen = w.epoch();
+        assert!(matches!(rx.try_recv(), Ok(GenEvent::Token(9))));
+        assert_ne!(w.epoch(), seen, "pop to empty is the resume crossing");
     }
 }

@@ -183,6 +183,13 @@ pub struct EngineConfig {
     pub stream_capacity: usize,
     /// What to do when a request's stream is full.
     pub backpressure: BackpressurePolicy,
+    /// How long a `pause_decode`-parked request may sit idle (client
+    /// neither draining below the resume threshold nor disconnecting)
+    /// before it is demoted to `overrun` and its KV reclaimed, in
+    /// engine-clock milliseconds. 0 disables the timeout: parked work
+    /// then holds KV until pressure preempts it. Bounds quiet-time KV
+    /// occupancy even when nothing else wants the blocks.
+    pub stream_idle_timeout_ms: u64,
 }
 
 impl Default for EngineConfig {
@@ -202,6 +209,7 @@ impl Default for EngineConfig {
             seed: 0,
             stream_capacity: 256,
             backpressure: BackpressurePolicy::PauseDecode,
+            stream_idle_timeout_ms: 0,
         }
     }
 }
@@ -252,7 +260,18 @@ impl EngineConfig {
                 Some(s) => BackpressurePolicy::parse(s)?,
                 None => d.backpressure,
             },
+            stream_idle_timeout_ms: usizes(
+                "stream_idle_timeout_ms",
+                d.stream_idle_timeout_ms as usize,
+            ) as u64,
         })
+    }
+
+    /// The parked-request idle timeout as a duration; `None` when
+    /// disabled (`stream_idle_timeout_ms == 0`).
+    pub fn stream_idle_timeout(&self) -> Option<std::time::Duration> {
+        (self.stream_idle_timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.stream_idle_timeout_ms))
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -331,6 +350,19 @@ mod tests {
         c.max_running = 4;
         c.stream_capacity = 0;
         assert!(c.validate().is_err(), "zero stream capacity rejected");
+    }
+
+    #[test]
+    fn stream_idle_timeout_zero_means_disabled() {
+        let mut c = EngineConfig::default();
+        assert_eq!(c.stream_idle_timeout_ms, 0);
+        assert_eq!(c.stream_idle_timeout(), None);
+        c.stream_idle_timeout_ms = 250;
+        assert_eq!(
+            c.stream_idle_timeout(),
+            Some(std::time::Duration::from_millis(250))
+        );
+        c.validate().unwrap();
     }
 
     #[test]

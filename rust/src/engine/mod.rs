@@ -19,9 +19,8 @@
 //! growth/shrink forces a host-side rebuild through the paged store.
 
 use std::collections::HashMap;
-use std::time::Instant;
 
-use crate::api::{FinishReason, GenRequest, InferenceEngine, RequestId, SubmissionHandle};
+use crate::api::{FinishReason, GenRequest, InferenceEngine, RequestId, SubmissionHandle, Wakeup};
 use crate::batching::{pick_prefill_bucket, Batcher};
 use crate::config::EngineConfig;
 use crate::error::{Error, Result};
@@ -29,11 +28,12 @@ use crate::kvcache::{KvCache, KvGeometry, SeqId};
 use crate::metrics::EngineMetrics;
 use crate::policy::{self, StreamOp};
 use crate::prefixcache::PrefixCache;
-use crate::router::{self, Router, SeqState, Sequence};
+use crate::router::{self, Router, SeqState, Sequence, SubmitContext};
 use crate::runtime::{literal_f32, literal_i32, to_vec_f32, Manifest, Runtime};
 use crate::sampling::Sampler;
 use crate::scheduler::{decide, preemption_victim, Action};
 use crate::tokenizer::{ByteTokenizer, EOS};
+use crate::util::clock::Clock;
 
 /// Device-resident dense KV state for the current batch composition.
 struct DenseState {
@@ -61,6 +61,11 @@ pub struct Engine {
     /// no decode lane (their device-resident KV is persisted on pause).
     paused: Vec<SeqId>,
     dense: Option<DenseState>,
+    /// Engine time source (system clock in production; everything on
+    /// the request path reads time through it, never `Instant::now()`).
+    clock: Clock,
+    /// Engine-loop wakeup each new stream notifies on client drains.
+    wakeup: Option<Wakeup>,
     pub metrics: EngineMetrics,
     pub tokenizer: ByteTokenizer,
     vocab: usize,
@@ -88,6 +93,8 @@ impl Engine {
             seqs: HashMap::new(),
             paused: Vec::new(),
             dense: None,
+            clock: Clock::system(),
+            wakeup: None,
             metrics: EngineMetrics::default(),
             kv,
             rt,
@@ -115,7 +122,7 @@ impl Engine {
     // -----------------------------------------------------------------
 
     fn step_prefill(&mut self) -> Result<()> {
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let mut seq = match self.router.pop_next() {
             Some(s) => s,
             None => return Ok(()),
@@ -186,9 +193,9 @@ impl Engine {
         toks.resize(bucket, 0);
         let tokens_lit = literal_i32(&toks, &[1, bucket])?;
         let entry = Manifest::prefill_entry_name(bucket);
-        let exec_t0 = Instant::now();
+        let exec_t0 = self.clock.now();
         let outs = self.rt.execute(&entry, &[&tokens_lit])?;
-        let mut exec_dt = exec_t0.elapsed();
+        let mut exec_dt = self.clock.now().saturating_sub(exec_t0);
         let [logits, k, v]: [xla::Literal; 3] = outs
             .try_into()
             .map_err(|_| Error::Artifact("prefill must return 3 outputs".into()))?;
@@ -208,8 +215,9 @@ impl Engine {
         let row = &logits_host[(len - 1) * self.vocab..len * self.vocab];
         let tok = self.sampler.sample(row, seq.params);
         seq.generated.push(tok);
-        seq.first_token_at = Some(Instant::now());
-        self.metrics.first_token.record(seq.arrived.elapsed());
+        let now = self.clock.now();
+        seq.first_token_at = Some(now);
+        self.metrics.first_token.record(now.saturating_sub(seq.arrived));
         // A fresh stream always has credit (capacity >= 1); a client
         // that already hung up is reaped by the next step's stream scan.
         let _ = seq.emit_token(tok);
@@ -239,11 +247,11 @@ impl Engine {
                 // dense cache on device (no host round trip).
                 let ins_entry = format!("insert_b{}_s{}", dense.bucket, bucket);
                 let lane_lit = literal_i32(&[admission.lane as i32], &[1])?;
-                let ins_t0 = Instant::now();
+                let ins_t0 = self.clock.now();
                 let mut outs = self
                     .rt
                     .execute(&ins_entry, &[&dense.k, &dense.v, &k, &v, &lane_lit])?;
-                exec_dt += ins_t0.elapsed();
+                exec_dt += self.clock.now().saturating_sub(ins_t0);
                 if outs.len() != 2 {
                     return Err(Error::Artifact(format!(
                         "{ins_entry}: expected 2 outputs, got {}",
@@ -259,7 +267,7 @@ impl Engine {
             self.seqs.insert(seq.id, seq);
         }
         self.metrics.prefill_steps += 1;
-        let dt = t0.elapsed();
+        let dt = self.clock.now().saturating_sub(t0);
         self.metrics.step.record(dt);
         self.metrics.step_overhead.record(dt.saturating_sub(exec_dt));
         Ok(())
@@ -270,7 +278,7 @@ impl Engine {
     // -----------------------------------------------------------------
 
     fn step_decode(&mut self) -> Result<()> {
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         // The stream scan may have paused or dropped every running
         // sequence; there is nothing to decode then.
         if self.batcher.is_empty() {
@@ -320,14 +328,14 @@ impl Engine {
         let pos_lit = literal_i32(&pos, &[bucket])?;
 
         let entry = Manifest::decode_entry_name(bucket, !self.cfg.async_softmax);
-        let exec_t0 = Instant::now();
+        let exec_t0 = self.clock.now();
         let outs = {
             let d = self.dense.take().expect("dense state after rebuild");
             let r = self.rt.execute(&entry, &[&toks_lit, &pos_lit, &d.k, &d.v]);
             self.dense = Some(d);
             r?
         };
-        let exec_dt = exec_t0.elapsed();
+        let exec_dt = self.clock.now().saturating_sub(exec_t0);
         let mut outs = outs;
         if outs.len() != 4 {
             return Err(Error::Artifact(format!(
@@ -390,7 +398,7 @@ impl Engine {
             self.retire(&mut seq, reason)?;
         }
         self.metrics.decode_steps += 1;
-        let dt = t0.elapsed();
+        let dt = self.clock.now().saturating_sub(t0);
         self.metrics.step.record(dt);
         self.metrics.step_overhead.record(dt.saturating_sub(exec_dt));
         let lanes = batch.occupancy().max(1) as u32;
@@ -454,9 +462,10 @@ impl Engine {
     /// Preempt one victim under KV pressure: the scheduler picks it
     /// *by id* over the shared policy's priority-aware census, which
     /// spans running *and* backpressure-paused sequences (a parked slow
-    /// client's KV is reclaimable like any other). Running victims go
-    /// through `retire` (lane + dense bookkeeping); paused victims hold
-    /// no lane and finish directly.
+    /// client's KV is reclaimable like any other; within a priority
+    /// level parked victims lose first). Running victims go through
+    /// `retire` (lane + dense bookkeeping); paused victims hold no lane
+    /// and finish directly.
     fn preempt_one(&mut self) -> Result<()> {
         let mut pool = self.batcher.running_ids();
         pool.extend(self.paused.iter().copied());
@@ -485,7 +494,10 @@ impl Engine {
     fn pause_seq(&mut self, id: SeqId) -> Result<()> {
         self.invalidate_dense()?;
         self.batcher.remove(id)?;
-        self.seqs.get_mut(&id).unwrap().state = SeqState::Paused;
+        let now = self.clock.now();
+        let seq = self.seqs.get_mut(&id).unwrap();
+        seq.state = SeqState::Paused;
+        seq.paused_at = Some(now);
         self.paused.push(id);
         self.metrics.backpressure_pauses += 1;
         Ok(())
@@ -507,6 +519,8 @@ impl Engine {
             &self.batcher.running_ids(),
             self.cfg.backpressure,
             free_lanes,
+            self.clock.now(),
+            self.cfg.stream_idle_timeout(),
         );
         for op in ops {
             match op {
@@ -516,7 +530,9 @@ impl Engine {
                         self.invalidate_dense()?;
                     }
                     self.paused.retain(|&p| p != id);
-                    self.seqs.get_mut(&id).unwrap().state = SeqState::Decoding;
+                    let seq = self.seqs.get_mut(&id).unwrap();
+                    seq.state = SeqState::Decoding;
+                    seq.paused_at = None;
                     self.metrics.backpressure_resumes += 1;
                 }
                 StreamOp::ReapPaused(id) => {
@@ -535,6 +551,15 @@ impl Engine {
                     let mut seq = self.seqs.remove(&id).unwrap();
                     self.metrics.backpressure_drops += 1;
                     self.retire(&mut seq, FinishReason::Overrun)?;
+                }
+                StreamOp::ExpireIdle(id) => {
+                    // A long-parked client: demote to overrun so its KV
+                    // is bounded even with no allocation pressure.
+                    // Paused sequences hold no lane and no dense slot.
+                    self.paused.retain(|&p| p != id);
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.metrics.stream_idle_drops += 1;
+                    self.finish_seq(&mut seq, FinishReason::Overrun)?;
                 }
             }
         }
@@ -594,9 +619,17 @@ impl InferenceEngine for Engine {
             &self.tokenizer,
             &req,
             prompt_tokens,
-            self.cfg.max_new_tokens,
-            self.cfg.stream_capacity,
+            &SubmitContext {
+                max_new_cap: self.cfg.max_new_tokens,
+                stream_capacity: self.cfg.stream_capacity,
+                now: self.clock.now(),
+                wakeup: self.wakeup.as_ref(),
+            },
         )
+    }
+
+    fn set_wakeup(&mut self, wakeup: Wakeup) {
+        self.wakeup = Some(wakeup);
     }
 
     /// Run one scheduling iteration: service stream flow control, then

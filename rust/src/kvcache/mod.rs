@@ -68,6 +68,20 @@ struct SeqEntry {
     len: usize,
 }
 
+/// Allocator accounting snapshot ([`KvCache::audit`]), consumed by the
+/// simulation-test oracles: refcount conservation requires that every
+/// block's refcount equal the number of owners visible here (sequence
+/// tables) plus the prefix tree's retained references, and that a block
+/// be on the free list exactly when its refcount is zero.
+#[derive(Debug, Clone)]
+pub struct KvAudit {
+    pub total_blocks: usize,
+    pub free_list: Vec<usize>,
+    pub refcounts: Vec<u32>,
+    /// Every live sequence's block table, ascending by sequence id.
+    pub seq_blocks: Vec<(SeqId, Vec<usize>)>,
+}
+
 /// Paged KV store with a reference-counted block allocator.
 pub struct KvCache {
     geo: KvGeometry,
@@ -127,6 +141,37 @@ impl KvCache {
     /// Current reference count of a physical block.
     pub fn block_refcount(&self, block: usize) -> u32 {
         self.refcount[block]
+    }
+
+    /// Full allocator snapshot for invariant auditing (the
+    /// simulation-test refcount-conservation oracle): the free list,
+    /// every block's refcount, and every sequence's block table.
+    pub fn audit(&self) -> KvAudit {
+        let mut seq_blocks: Vec<(SeqId, Vec<usize>)> = self
+            .seqs
+            .iter()
+            .map(|(&id, e)| (id, e.blocks.clone()))
+            .collect();
+        seq_blocks.sort_by_key(|(id, _)| *id);
+        KvAudit {
+            total_blocks: self.total_blocks,
+            free_list: self.free.clone(),
+            refcounts: self.refcount.clone(),
+            seq_blocks,
+        }
+    }
+
+    /// Test-only fault hook: force one reference off a block, bypassing
+    /// ownership — the double-free bug class. Exists so the simulation
+    /// tests can prove their refcount oracle actually catches it.
+    #[cfg(test)]
+    pub fn debug_force_decref(&mut self, block: usize) {
+        if self.refcount[block] > 0 {
+            self.refcount[block] -= 1;
+        }
+        if self.refcount[block] == 0 {
+            self.free.push(block);
+        }
     }
 
     fn blocks_for(&self, tokens: usize) -> usize {

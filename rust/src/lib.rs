@@ -97,11 +97,27 @@
 //!   works from any connection, and the admin
 //!   `{"admin": {"cancel_tenant": ...}}` verb bulk-cancels a tenant.
 //!
+//! # Testing & determinism
+//!
+//! The stack is tier-1-testable without artifacts because the sim path
+//! is *deterministic by construction*: [`simengine::SimEngine`] runs on
+//! a manual [`util::clock::Clock`] (one quantum per step), and the
+//! [`simtest`] harness expands a single seed into a scripted world —
+//! adversarial clients, KV-pressure spikes, credit starvation — then
+//! checks four global oracles (KV refcount conservation, stream-credit
+//! bounds/losslessness, priority monotonicity, usage conservation)
+//! after every step. A failing seed prints a replay command and
+//! reproduces byte-identically. The paper kernels are pinned by
+//! `tests/conformance_softmax.rs` (unified-max vs two-pass softmax,
+//! §3) and `tests/conformance_dataflow.rs` (inflection-table dispatch,
+//! §5). See `docs/ARCHITECTURE.md` § "Testing & determinism".
+//!
 //! # Documentation map
 //!
 //! - `docs/ARCHITECTURE.md` — module map, KV block lifecycle, request
-//!   lifecycle (including the backpressure states), and the
-//!   paper-technique-to-module table.
+//!   lifecycle (including the backpressure states), the
+//!   paper-technique-to-module table, and the testing & determinism
+//!   guide (oracles, seed replay, adding scenarios).
 //! - `docs/PROTOCOL.md` — the JSON-lines wire protocol (v2.1): stream
 //!   credit semantics, global ids, admin verbs, error codes.
 //! - `ROADMAP.md` / `PAPER.md` — project north star and source paper.
@@ -127,6 +143,7 @@ pub mod sampling;
 pub mod scheduler;
 pub mod server;
 pub mod simengine;
+pub mod simtest;
 pub mod softmaxstats;
 pub mod tokenizer;
 pub mod util;

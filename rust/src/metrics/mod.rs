@@ -166,6 +166,9 @@ pub struct EngineMetrics {
     /// Requests finished early with `FinishReason::Overrun`
     /// (`BackpressurePolicy::DropSlow`).
     pub backpressure_drops: u64,
+    /// Parked (`pause_decode`) requests demoted to `FinishReason::Overrun`
+    /// because their client stayed idle past `stream_idle_timeout`.
+    pub stream_idle_drops: u64,
     /// Requests reclaimed because the client dropped its event stream
     /// (hang-up detected mid-generation).
     pub client_disconnects: u64,
@@ -253,6 +256,10 @@ impl EngineMetrics {
             (
                 "backpressure_drops",
                 Json::Num(self.backpressure_drops as f64),
+            ),
+            (
+                "stream_idle_drops",
+                Json::Num(self.stream_idle_drops as f64),
             ),
             (
                 "client_disconnects",

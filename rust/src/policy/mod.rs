@@ -30,6 +30,7 @@
 //! them and the KV / prefix caches.
 
 use std::collections::HashMap;
+use std::time::Duration;
 
 use crate::api::StreamStatus;
 use crate::config::{BackpressurePolicy, EngineConfig};
@@ -37,7 +38,7 @@ use crate::error::Result;
 use crate::kvcache::{KvCache, SeqId};
 use crate::metrics::EngineMetrics;
 use crate::prefixcache::{PrefixCache, PrefixMatch};
-use crate::router::Sequence;
+use crate::router::{SeqState, Sequence};
 use crate::scheduler::{PreemptCandidate, SchedState};
 
 /// Matched prefix usable for reuse: capped so at least the prompt's
@@ -225,27 +226,32 @@ pub fn reclaim_decode_headroom(
     kv.free_blocks() < running && victims > 1
 }
 
-/// The census preemption runs on: for every running sequence, its
-/// request priority and how many of its blocks would *stay reusable*
-/// (shared with the prefix cache or other sequences) if it were evicted
-/// now. [`crate::scheduler::preemption_victim`] orders victims by
-/// `(priority asc, reusable desc, recency)`, so a request is never
-/// preempted while a strictly lower-priority victim exists.
+/// The census preemption runs on: for every running or parked sequence,
+/// its request priority, whether it is backpressure-paused, and how
+/// many of its blocks would *stay reusable* (shared with the prefix
+/// cache or other sequences) if it were evicted now.
+/// [`crate::scheduler::preemption_victim`] orders victims by
+/// `(priority asc, paused first, reusable desc, recency)`, so a request
+/// is never preempted while a strictly lower-priority victim exists,
+/// and within a level a stalled client's parked work is sacrificed
+/// before live decode progress.
 pub fn preempt_candidates(
     kv: &KvCache,
     seqs: &HashMap<SeqId, Sequence>,
-    running_ids: &[SeqId],
+    pool_ids: &[SeqId],
 ) -> Vec<PreemptCandidate> {
-    running_ids
+    pool_ids
         .iter()
         .map(|&id| {
             let reusable = kv
                 .seq_blocks(id)
                 .map(|bs| bs.iter().filter(|&&b| kv.block_refcount(b) > 1).count())
                 .unwrap_or(0);
+            let seq = seqs.get(&id);
             PreemptCandidate {
                 id,
-                priority: seqs.get(&id).map(|s| s.priority).unwrap_or(0),
+                priority: seq.map(|s| s.priority).unwrap_or(0),
+                paused: seq.map(|s| s.state == SeqState::Paused).unwrap_or(false),
                 reusable_blocks: reusable,
             }
         })
@@ -352,28 +358,48 @@ pub enum StreamOp {
     /// Finish a stalled running sequence with `Overrun`
     /// ([`BackpressurePolicy::DropSlow`]).
     DropOverrun(SeqId),
+    /// A parked sequence sat idle past the configured
+    /// `stream_idle_timeout` without draining toward resume: demote it
+    /// to `Overrun` and reclaim its KV, so parked occupancy is bounded
+    /// even with no allocation pressure.
+    ExpireIdle(SeqId),
 }
 
 /// The per-step flow-control plan, shared verbatim by both engines so
 /// the sim twin cannot drift: resume drained paused sequences (highest
 /// priority first, bounded by `free_lanes`), reap disconnected clients
-/// on both sides, and pause or drop stalled running streams per the
-/// configured policy. Pure: computes transitions from a snapshot; the
-/// caller executes them in order.
+/// on both sides, expire parked sequences idle past `idle_timeout`
+/// (engine-clock `now` vs the sequence's `paused_at`), and pause or
+/// drop stalled running streams per the configured policy. Pure:
+/// computes transitions from a snapshot; the caller executes them in
+/// order.
+///
+/// A parked sequence that *has* drained below the resume threshold is
+/// never expired, even with no free lane — the client is cooperating;
+/// the wait is the engine's.
 pub fn plan_stream_ops(
     seqs: &HashMap<SeqId, Sequence>,
     paused: &[SeqId],
     running_ids: &[SeqId],
     policy: BackpressurePolicy,
     mut free_lanes: usize,
+    now: Duration,
+    idle_timeout: Option<Duration>,
 ) -> Vec<StreamOp> {
     let mut ops = Vec::new();
     for id in resume_order(seqs, paused) {
-        if stream_verdict(&seqs[&id]) == StreamVerdict::Disconnected {
+        let seq = &seqs[&id];
+        if stream_verdict(seq) == StreamVerdict::Disconnected {
             ops.push(StreamOp::ReapPaused(id));
-        } else if ready_to_resume(&seqs[&id]) && free_lanes > 0 {
-            free_lanes -= 1;
-            ops.push(StreamOp::Resume(id));
+        } else if ready_to_resume(seq) {
+            if free_lanes > 0 {
+                free_lanes -= 1;
+                ops.push(StreamOp::Resume(id));
+            }
+        } else if let (Some(timeout), Some(at)) = (idle_timeout, seq.paused_at) {
+            if now.saturating_sub(at) >= timeout {
+                ops.push(StreamOp::ExpireIdle(id));
+            }
         }
     }
     for &id in running_ids {
@@ -627,6 +653,8 @@ mod tests {
             &[3, 4],
             BackpressurePolicy::PauseDecode,
             8,
+            Duration::ZERO,
+            None,
         );
         assert_eq!(
             ops,
@@ -636,7 +664,15 @@ mod tests {
                 StreamOp::Pause(3)
             ]
         );
-        let ops = plan_stream_ops(&seqs, &[1, 2], &[3, 4], BackpressurePolicy::DropSlow, 8);
+        let ops = plan_stream_ops(
+            &seqs,
+            &[1, 2],
+            &[3, 4],
+            BackpressurePolicy::DropSlow,
+            8,
+            Duration::ZERO,
+            None,
+        );
         assert_eq!(
             ops,
             vec![
@@ -646,10 +682,73 @@ mod tests {
             ]
         );
         // No free lanes: nothing resumes, stalls still handled.
-        let ops = plan_stream_ops(&seqs, &[1, 2], &[3, 4], BackpressurePolicy::PauseDecode, 0);
+        let ops = plan_stream_ops(
+            &seqs,
+            &[1, 2],
+            &[3, 4],
+            BackpressurePolicy::PauseDecode,
+            0,
+            Duration::ZERO,
+            None,
+        );
         assert_eq!(ops, vec![StreamOp::Pause(3)]);
         // One lane: only the highest-priority paused sequence resumes.
-        let ops = plan_stream_ops(&seqs, &[1, 2], &[3, 4], BackpressurePolicy::PauseDecode, 1);
+        let ops = plan_stream_ops(
+            &seqs,
+            &[1, 2],
+            &[3, 4],
+            BackpressurePolicy::PauseDecode,
+            1,
+            Duration::ZERO,
+            None,
+        );
         assert_eq!(ops, vec![StreamOp::Resume(2), StreamOp::Pause(3)]);
+    }
+
+    #[test]
+    fn plan_stream_ops_expires_long_parked_sequences() {
+        // Seq 1: paused at t=0, stream still full -> expires once the
+        // timeout elapses. Seq 2: paused but drained (resumable) ->
+        // never expired, even with zero free lanes.
+        let mut seqs = seq_map(&[(1, 0), (2, 0)]);
+        for t in 0..4 {
+            assert_eq!(seqs[&1].emit_token(t), crate::api::EmitResult::Sent);
+        }
+        seqs.get_mut(&1).unwrap().paused_at = Some(Duration::ZERO);
+        seqs.get_mut(&2).unwrap().paused_at = Some(Duration::ZERO);
+        let timeout = Some(Duration::from_millis(10));
+        // Before the deadline: nothing expires (no lanes -> no resume).
+        let ops = plan_stream_ops(
+            &seqs,
+            &[1, 2],
+            &[],
+            BackpressurePolicy::PauseDecode,
+            0,
+            Duration::from_millis(9),
+            timeout,
+        );
+        assert_eq!(ops, vec![]);
+        // At the deadline: only the stalled one expires.
+        let ops = plan_stream_ops(
+            &seqs,
+            &[1, 2],
+            &[],
+            BackpressurePolicy::PauseDecode,
+            0,
+            Duration::from_millis(10),
+            timeout,
+        );
+        assert_eq!(ops, vec![StreamOp::ExpireIdle(1)]);
+        // No timeout configured: parked work is never expired.
+        let ops = plan_stream_ops(
+            &seqs,
+            &[1, 2],
+            &[],
+            BackpressurePolicy::PauseDecode,
+            0,
+            Duration::from_secs(3600),
+            None,
+        );
+        assert_eq!(ops, vec![]);
     }
 }

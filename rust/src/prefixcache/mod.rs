@@ -90,6 +90,21 @@ impl PrefixCache {
         self.n_cached_blocks
     }
 
+    /// Every physical block the tree holds a reference on, one entry
+    /// per tree-held reference, sorted — the prefix cache's side of the
+    /// simulation-test refcount-conservation oracle.
+    pub fn tree_block_refs(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.n_cached_blocks);
+        for (idx, n) in self.nodes.iter().enumerate() {
+            if idx == ROOT || !n.live {
+                continue;
+            }
+            out.extend_from_slice(&n.blocks);
+        }
+        out.sort_unstable();
+        out
+    }
+
     fn tick(&mut self) -> u64 {
         self.clock += 1;
         self.clock

@@ -23,11 +23,11 @@
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::Duration;
 
 use crate::api::{
-    event_channel, EmitResult, EventSender, FinishReason, GenRequest, Prompt, RequestId,
-    SubmissionHandle, Usage,
+    event_channel_with_wakeup, EmitResult, EventSender, FinishReason, GenRequest, Prompt,
+    RequestId, SubmissionHandle, Usage, Wakeup,
 };
 use crate::error::{Error, Result};
 use crate::sampling::SamplingParams;
@@ -62,8 +62,15 @@ pub struct Sequence {
     /// Bounded event stream to the client (see [`crate::api`] flow
     /// control).
     pub stream: EventSender,
-    pub arrived: Instant,
-    pub first_token_at: Option<Instant>,
+    /// Engine-clock timestamps ([`crate::util::clock::Clock`]): plain
+    /// `Duration`s since the engine clock's epoch, so the sim path is
+    /// fully deterministic under a manual clock.
+    pub arrived: Duration,
+    pub first_token_at: Option<Duration>,
+    /// When the sequence was last parked by stream backpressure
+    /// (engine-clock time); `None` while not paused. Drives the
+    /// `stream_idle_timeout` demotion of long-parked requests.
+    pub paused_at: Option<Duration>,
     /// Current context length (prompt + generated) stored in KV.
     pub kv_len: usize,
     /// Prompt tokens attached from the prefix cache at admission.
@@ -100,8 +107,9 @@ impl Sequence {
             params: req.params,
             stop,
             stream,
-            arrived: Instant::now(),
+            arrived: Duration::ZERO,
             first_token_at: None,
+            paused_at: None,
             kv_len: 0,
             cached_prompt_tokens: 0,
             admitted: false,
@@ -170,6 +178,18 @@ pub fn encode_prompt(tokenizer: &ByteTokenizer, prompt: &Prompt) -> Result<Vec<u
     Ok(toks)
 }
 
+/// Engine-side submit parameters shared by every implementation: the
+/// configured budget cap and stream capacity, the engine clock's
+/// current time (stamped as the sequence's arrival), and the optional
+/// engine-loop [`Wakeup`] each new stream notifies on drain.
+#[derive(Debug)]
+pub struct SubmitContext<'a> {
+    pub max_new_cap: usize,
+    pub stream_capacity: usize,
+    pub now: Duration,
+    pub wakeup: Option<&'a Wakeup>,
+}
+
 /// Shared submit back half: validate the budget, encode stop sequences,
 /// clamp to the engine cap, create the bounded event stream, and
 /// enqueue — identical for every engine so the sim twin cannot drift
@@ -179,17 +199,18 @@ pub fn enqueue_request(
     tokenizer: &ByteTokenizer,
     req: &GenRequest,
     prompt_tokens: Vec<u32>,
-    max_new_cap: usize,
-    stream_capacity: usize,
+    ctx: &SubmitContext,
 ) -> Result<SubmissionHandle> {
     if req.max_new_tokens == 0 {
         return Err(Error::Request("max_new_tokens must be at least 1".into()));
     }
     let stop: Vec<Vec<u32>> = req.stop.iter().map(|s| tokenizer.encode_raw(s)).collect();
-    let (tx, rx) = event_channel(stream_capacity);
+    let (tx, rx) = event_channel_with_wakeup(ctx.stream_capacity, ctx.wakeup.cloned());
     let id = router.allocate_id();
-    let max_new = req.max_new_tokens.min(max_new_cap);
-    router.enqueue(Sequence::queued(id, req, prompt_tokens, stop, max_new, tx));
+    let max_new = req.max_new_tokens.min(ctx.max_new_cap);
+    let mut seq = Sequence::queued(id, req, prompt_tokens, stop, max_new, tx);
+    seq.arrived = ctx.now;
+    router.enqueue(seq);
     Ok(SubmissionHandle { id, events: rx })
 }
 
@@ -388,7 +409,7 @@ impl RequestRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::EventReceiver;
+    use crate::api::{event_channel, EventReceiver};
 
     fn mk_seq(r: &mut Router, prompt: Vec<u32>, priority: i32) -> (RequestId, EventReceiver) {
         let (tx, rx) = event_channel(16);
@@ -498,18 +519,25 @@ mod tests {
             .max_new_tokens(100);
         let prompt = encode_prompt(&tok, &req.prompt).unwrap();
         assert_eq!(prompt[0], crate::tokenizer::BOS);
-        let h = enqueue_request(&mut r, &tok, &req, prompt, 8, 32).unwrap();
+        let ctx = SubmitContext {
+            max_new_cap: 8,
+            stream_capacity: 32,
+            now: Duration::from_millis(5),
+            wakeup: None,
+        };
+        let h = enqueue_request(&mut r, &tok, &req, prompt, &ctx).unwrap();
         assert_eq!(h.capacity(), 32, "handle carries the stream capacity");
         assert_eq!(r.queued(), 1);
         let s = r.pop_next().unwrap();
         assert_eq!(s.id, h.id);
         assert_eq!(s.max_new_tokens, 8, "clamped to the engine cap");
+        assert_eq!(s.arrived, Duration::from_millis(5), "arrival stamped");
         assert_eq!(s.stop, vec![vec![b'a' as u32, b'b' as u32]]);
         // Invalid submissions are rejected before anything is queued.
         assert!(encode_prompt(&tok, &Prompt::Tokens(vec![])).is_err());
         let zero = GenRequest::text("x").max_new_tokens(0);
         let p = encode_prompt(&tok, &zero.prompt).unwrap();
-        assert!(enqueue_request(&mut r, &tok, &zero, p, 8, 32).is_err());
+        assert!(enqueue_request(&mut r, &tok, &zero, p, &ctx).is_err());
         assert_eq!(r.queued(), 0);
     }
 

@@ -74,14 +74,19 @@ pub fn decide(s: SchedState) -> Action {
     }
 }
 
-/// One preemption candidate: a running sequence, its request priority,
-/// and how many of its blocks would *stay reusable* (shared with the
-/// prefix cache or other sequences) if it were evicted now.
+/// One preemption candidate: a running or backpressure-paused sequence,
+/// its request priority, whether it is currently parked, and how many
+/// of its blocks would *stay reusable* (shared with the prefix cache or
+/// other sequences) if it were evicted now.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PreemptCandidate {
     pub id: SeqId,
     /// Request priority (higher = more important = preempted last).
     pub priority: i32,
+    /// Parked by stream backpressure (holds KV but no decode lane).
+    /// Within a priority level, parked victims lose before running
+    /// ones: a stalled client's work is the cheapest to sacrifice.
+    pub paused: bool,
     pub reusable_blocks: usize,
 }
 
@@ -89,19 +94,29 @@ pub struct PreemptCandidate {
 /// engine resolves id -> lane; lane order is a batcher detail that
 /// preemption must not assume).
 ///
-/// Victims are ordered by `(priority asc, reusable_blocks desc,
-/// recency)`: the lowest-priority candidate always loses first — a
-/// request is never preempted while a strictly lower-priority victim
-/// exists. Within a priority level, the candidate with the most
-/// reusable blocks goes first (its KV largely survives in the prefix
-/// cache, so preempting it destroys the least work), and remaining ties
-/// go to the *youngest* candidate (largest id — ids are assigned in
-/// submit order), which has the least sunk decode progress.
+/// Victims are ordered by `(priority asc, paused first,
+/// reusable_blocks desc, recency)`: the lowest-priority candidate
+/// always loses first — a request is never preempted while a strictly
+/// lower-priority victim exists. Within a priority level, parked
+/// (backpressure-paused) sequences lose before running ones — live
+/// decode progress is worth more than work a stalled client is not
+/// consuming. Then the candidate with the most reusable blocks goes
+/// first (its KV largely survives in the prefix cache, so preempting
+/// it destroys the least work), and remaining ties go to the
+/// *youngest* candidate (largest id — ids are assigned in submit
+/// order), which has the least sunk decode progress.
 pub fn preemption_victim(candidates: &[PreemptCandidate]) -> Option<SeqId> {
     use std::cmp::Reverse;
     candidates
         .iter()
-        .min_by_key(|c| (c.priority, Reverse(c.reusable_blocks), Reverse(c.id)))
+        .min_by_key(|c| {
+            (
+                c.priority,
+                !c.paused,
+                Reverse(c.reusable_blocks),
+                Reverse(c.id),
+            )
+        })
         .map(|c| c.id)
 }
 
@@ -124,6 +139,7 @@ mod tests {
         PreemptCandidate {
             id,
             priority: 0,
+            paused: false,
             reusable_blocks: reusable,
         }
     }
@@ -196,34 +212,58 @@ mod tests {
             PreemptCandidate {
                 id: 5,
                 priority: 2,
+                paused: false,
                 reusable_blocks: 7,
             },
             PreemptCandidate {
                 id: 9,
                 priority: -1,
+                paused: false,
                 reusable_blocks: 0,
             },
             PreemptCandidate {
                 id: 12,
                 priority: 0,
+                paused: false,
                 reusable_blocks: 3,
             },
         ];
         assert_eq!(preemption_victim(&c), Some(9));
     }
 
-    #[test]
-    fn victim_within_priority_level_uses_reusable_then_recency() {
-        let mk = |id, priority, reusable| PreemptCandidate {
+    fn mk(id: SeqId, priority: i32, paused: bool, reusable: usize) -> PreemptCandidate {
+        PreemptCandidate {
             id,
             priority,
+            paused,
             reusable_blocks: reusable,
-        };
+        }
+    }
+
+    #[test]
+    fn victim_within_priority_level_uses_reusable_then_recency() {
         // Same priority: most reusable blocks loses.
-        let c = [mk(5, 1, 1), mk(9, 1, 3), mk(12, 5, 9)];
+        let c = [mk(5, 1, false, 1), mk(9, 1, false, 3), mk(12, 5, false, 9)];
         assert_eq!(preemption_victim(&c), Some(9));
         // Same priority and reusable count: youngest (largest id) loses.
-        let c = [mk(5, 1, 2), mk(9, 1, 2), mk(12, 5, 9)];
+        let c = [mk(5, 1, false, 2), mk(9, 1, false, 2), mk(12, 5, false, 9)];
         assert_eq!(preemption_victim(&c), Some(9));
+    }
+
+    #[test]
+    fn victim_prefers_parked_over_running_within_a_level() {
+        // Same priority: the parked candidate loses first, even when the
+        // running one has more reusable blocks or is younger.
+        let c = [mk(5, 1, true, 0), mk(9, 1, false, 4)];
+        assert_eq!(preemption_victim(&c), Some(5));
+        let c = [mk(5, 1, false, 0), mk(9, 1, true, 0)];
+        assert_eq!(preemption_victim(&c), Some(9));
+        // But priority still dominates: a running lower-priority victim
+        // loses before a parked higher-priority one.
+        let c = [mk(5, 0, false, 0), mk(9, 1, true, 0)];
+        assert_eq!(preemption_victim(&c), Some(5));
+        // Among parked candidates, the usual reusable/recency order.
+        let c = [mk(5, 1, true, 3), mk(9, 1, true, 1), mk(12, 1, true, 3)];
+        assert_eq!(preemption_victim(&c), Some(12));
     }
 }

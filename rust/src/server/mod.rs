@@ -56,7 +56,7 @@ use std::time::Duration;
 
 use crate::api::{
     EventReceiver, FinishReason, GenEvent, GenRequest, InferenceEngine, RequestId,
-    SubmissionHandle, Usage,
+    SubmissionHandle, Usage, Wakeup,
 };
 use crate::config::EngineConfig;
 use crate::engine::Engine;
@@ -303,16 +303,37 @@ pub enum EngineJob {
     },
 }
 
+/// The connection side's channel to the engine thread: an
+/// [`EngineJob`] sender that also rings the engine loop's [`Wakeup`],
+/// so a loop blocked on parked work processes a new job immediately
+/// instead of waiting out its fallback timeout.
+#[derive(Clone)]
+pub struct JobSender {
+    tx: mpsc::Sender<EngineJob>,
+    wakeup: Wakeup,
+}
+
+impl JobSender {
+    pub fn send(&self, job: EngineJob) -> std::result::Result<(), mpsc::SendError<EngineJob>> {
+        let r = self.tx.send(job);
+        self.wakeup.notify();
+        r
+    }
+}
+
 /// Handle to the engine thread.
 pub struct EngineHandle {
-    pub tx: mpsc::Sender<EngineJob>,
+    pub tx: JobSender,
     pub join: thread::JoinHandle<()>,
 }
 
 /// Spawn any engine behind the serving loop on a dedicated thread. The
 /// engine is constructed *inside* the thread (PJRT handles are not
 /// Send); startup errors are reported back synchronously before this
-/// function returns.
+/// function returns. The thread owns a [`Wakeup`] notified by job
+/// submission and by every client-side stream drain (the engine
+/// attaches it to new streams via
+/// [`InferenceEngine::set_wakeup`]), replacing the old polling nap.
 fn spawn_engine_thread<E, F>(build: F) -> Result<EngineHandle>
 where
     E: InferenceEngine,
@@ -320,6 +341,8 @@ where
 {
     let (tx, rx) = mpsc::channel::<EngineJob>();
     let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+    let wakeup = Wakeup::new();
+    let loop_wakeup = wakeup.clone();
     let join = thread::spawn(move || {
         let mut engine = match build() {
             Ok(e) => {
@@ -331,10 +354,14 @@ where
                 return;
             }
         };
-        engine_loop(&mut engine, rx);
+        engine.set_wakeup(loop_wakeup.clone());
+        engine_loop(&mut engine, rx, loop_wakeup);
     });
     match ready_rx.recv() {
-        Ok(Ok(())) => Ok(EngineHandle { tx, join }),
+        Ok(Ok(())) => Ok(EngineHandle {
+            tx: JobSender { tx, wakeup },
+            join,
+        }),
         Ok(Err(msg)) => Err(Error::Request(format!("engine startup failed: {msg}"))),
         Err(_) => Err(Error::Request("engine thread died during startup".into())),
     }
@@ -362,12 +389,22 @@ pub fn spawn_sim_engine(cfg: EngineConfig, spec: SimSpec) -> Result<EngineHandle
 /// engine's [`SubmissionHandle`] to the connection's pump thread; the
 /// loop itself only schedules.
 ///
-/// A step that takes no action while work is still pending means every
-/// live request is parked on backpressure (waiting for its client to
-/// drain); the loop naps briefly instead of spinning, and wakes fully
-/// on the next job or once streams drain.
-fn engine_loop<E: InferenceEngine>(engine: &mut E, rx: mpsc::Receiver<EngineJob>) {
+/// When work is pending but nothing is runnable (every live request is
+/// parked on backpressure), the loop blocks on `wakeup` instead of
+/// polling: client drains, disconnects, and new jobs all notify it, so
+/// resume latency is event-driven. The epoch is captured at the top of
+/// each iteration — before the job drain and the step — closing the
+/// race where a job arrives or a client drains while either runs. The
+/// timeout is only a safety net against a lost notification.
+fn engine_loop<E: InferenceEngine>(engine: &mut E, rx: mpsc::Receiver<EngineJob>, wakeup: Wakeup) {
+    /// Fallback wait when parked; the expected wake path is a notify.
+    const PARKED_WAIT: Duration = Duration::from_millis(2);
     loop {
+        // Capture the epoch *before* draining jobs: a job or client
+        // drain landing anywhere after this point bumps it, so a
+        // subsequent wait_from returns immediately instead of sleeping
+        // the fallback with work pending.
+        let epoch = wakeup.epoch();
         // Accept new jobs (block only when idle).
         loop {
             let job = if engine.is_idle() {
@@ -407,13 +444,16 @@ fn engine_loop<E: InferenceEngine>(engine: &mut E, rx: mpsc::Receiver<EngineJob>
         }
         if !engine.is_idle() {
             match engine.step() {
-                Ok(Action::Idle) => thread::sleep(Duration::from_micros(200)),
+                Ok(Action::Idle) => {
+                    wakeup.wait_from(epoch, PARKED_WAIT);
+                }
                 Ok(_) => {
                     // Everything live is parked on backpressure (an
-                    // admission may be waiting on parked KV): nap
-                    // instead of spinning until clients drain.
+                    // admission may be waiting on parked KV): block on
+                    // the wakeup until a client drains, disconnects, or
+                    // a job arrives — no spinning, no polling quantum.
                     if engine.running() == 0 && engine.paused() > 0 {
-                        thread::sleep(Duration::from_micros(200));
+                        wakeup.wait_from(epoch, PARKED_WAIT);
                     }
                 }
                 Err(e) => log_warn!("engine step failed: {e}"),
@@ -554,7 +594,7 @@ fn pump_events(
 
 fn handle_conn(
     sock: TcpStream,
-    engine_tx: mpsc::Sender<EngineJob>,
+    engine_tx: JobSender,
     registry: Arc<RequestRegistry>,
     vocab: usize,
     max_new_cap: usize,

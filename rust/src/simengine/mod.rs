@@ -18,20 +18,92 @@
 //! where the PJRT artifacts of the real engine are unavailable.
 
 use std::collections::HashMap;
-use std::time::Instant;
+use std::time::Duration;
 
-use crate::api::{FinishReason, GenRequest, InferenceEngine, RequestId, SubmissionHandle};
+use crate::api::{
+    FinishReason, GenRequest, InferenceEngine, RequestId, SubmissionHandle, Usage, Wakeup,
+};
 use crate::batching::Batcher;
 use crate::config::EngineConfig;
 use crate::error::{Error, Result};
-use crate::kvcache::{KvCache, KvGeometry, SeqId};
+use crate::kvcache::{KvAudit, KvCache, KvGeometry, SeqId};
 use crate::metrics::EngineMetrics;
 use crate::policy::{self, StreamOp};
 use crate::prefixcache::PrefixCache;
-use crate::router::{self, Router, SeqState, Sequence};
+use crate::router::{self, Router, SeqState, Sequence, SubmitContext};
 use crate::sampling::Sampler;
 use crate::scheduler::{decide, preemption_victim, Action};
 use crate::tokenizer::{ByteTokenizer, EOS, TOKENIZER_VOCAB};
+use crate::util::clock::Clock;
+
+/// Virtual time one engine step costs on the sim's manual clock. Every
+/// latency the sim reports (and every idle-timeout decision) is a
+/// deterministic multiple of this quantum.
+pub const SIM_STEP: Duration = Duration::from_millis(1);
+
+/// One observable scheduling event, recorded when tracing is enabled
+/// ([`SimEngine::enable_trace`]). The simulation-test harness replays
+/// scenarios and checks its oracles against this stream; it is also
+/// what makes two runs comparably *byte-identical* (equal traces).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A request was admitted (prefill ran); `cached` prompt tokens
+    /// were served from the prefix cache.
+    Admitted { id: SeqId, cached: usize },
+    /// One generated token was emitted to the request's stream.
+    Token { id: SeqId, token: u32 },
+    /// The sequence was parked by stream backpressure.
+    Paused { id: SeqId },
+    /// A parked sequence rejoined the decode batch.
+    Resumed { id: SeqId },
+    /// A parked sequence sat idle past `stream_idle_timeout` and was
+    /// demoted to `Overrun`.
+    Expired { id: SeqId },
+    /// Decode-pressure preemption: the chosen victim, its priority, and
+    /// the full candidate pool `(id, priority)` the choice ran over —
+    /// recorded so an external oracle can verify priority monotonicity
+    /// without trusting the policy it is checking.
+    Preempted {
+        id: SeqId,
+        priority: i32,
+        pool: Vec<(SeqId, i32)>,
+    },
+    /// Admission-relief preemption of a parked victim on behalf of a
+    /// blocked higher-priority waiter.
+    AdmissionRelief {
+        id: SeqId,
+        priority: i32,
+        waiter_priority: i32,
+    },
+    /// The request finished; exactly one per request.
+    Finished {
+        id: SeqId,
+        reason: FinishReason,
+        usage: Usage,
+    },
+}
+
+/// One live sequence in an [`EngineAudit`] snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiveSeq {
+    pub id: SeqId,
+    pub priority: i32,
+    pub paused: bool,
+}
+
+/// A full accounting snapshot of the sim engine's shared state, taken
+/// between steps by the simulation-test oracles: the KV allocator's
+/// books, the prefix tree's retained block references, and the live
+/// sequence set.
+#[derive(Debug, Clone)]
+pub struct EngineAudit {
+    pub kv: KvAudit,
+    /// Blocks retained by the prefix tree, one entry per tree-held
+    /// reference.
+    pub tree_blocks: Vec<usize>,
+    pub live: Vec<LiveSeq>,
+    pub queued: usize,
+}
 
 /// Hash-model geometry (kept tiny: the point is block accounting, not
 /// FLOPs).
@@ -82,12 +154,27 @@ pub struct SimEngine {
     /// Sequences parked by stream backpressure: they stay in `seqs`
     /// (state `Paused`) and keep their KV, but hold no decode lane.
     paused: Vec<SeqId>,
+    /// Virtual time: a manual [`Clock`] advanced [`SIM_STEP`] per step,
+    /// so every latency and timeout decision is deterministic.
+    clock: Clock,
+    /// Engine-loop wakeup each new stream notifies on client drains.
+    wakeup: Option<Wakeup>,
+    /// Scheduling-event trace (None until [`SimEngine::enable_trace`]).
+    trace: Option<Vec<TraceEvent>>,
     pub metrics: EngineMetrics,
     pub tokenizer: ByteTokenizer,
 }
 
 impl SimEngine {
+    /// Build a sim engine on its own fresh virtual clock.
     pub fn new(cfg: EngineConfig, spec: SimSpec) -> Result<Self> {
+        Self::with_clock(cfg, spec, Clock::manual())
+    }
+
+    /// Build a sim engine sharing an externally owned clock (the
+    /// simulation-test harness uses this to observe and steer virtual
+    /// time).
+    pub fn with_clock(cfg: EngineConfig, spec: SimSpec, clock: Clock) -> Result<Self> {
         cfg.validate()?;
         let geo = KvGeometry {
             n_layers: spec.n_layers,
@@ -104,6 +191,9 @@ impl SimEngine {
             sampler: Sampler::new(cfg.seed),
             seqs: HashMap::new(),
             paused: Vec::new(),
+            clock,
+            wakeup: None,
+            trace: None,
             metrics: EngineMetrics::default(),
             tokenizer: ByteTokenizer::new(spec.vocab),
             spec,
@@ -113,6 +203,66 @@ impl SimEngine {
 
     pub fn geometry(&self) -> KvGeometry {
         self.kv.geometry()
+    }
+
+    /// A handle onto the engine's (virtual) clock.
+    pub fn clock(&self) -> Clock {
+        self.clock.clone()
+    }
+
+    /// Start recording [`TraceEvent`]s (drained with
+    /// [`SimEngine::take_trace`]).
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Drain the recorded trace (empty when tracing is disabled).
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        self.trace.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    fn push_trace(&mut self, ev: TraceEvent) {
+        if let Some(t) = self.trace.as_mut() {
+            t.push(ev);
+        }
+    }
+
+    /// Accounting snapshot for the simulation-test oracles.
+    pub fn audit(&self) -> EngineAudit {
+        let mut live: Vec<LiveSeq> = self
+            .seqs
+            .values()
+            .map(|s| LiveSeq {
+                id: s.id,
+                priority: s.priority,
+                paused: s.state == SeqState::Paused,
+            })
+            .collect();
+        live.sort_by_key(|l| l.id);
+        EngineAudit {
+            kv: self.kv.audit(),
+            tree_blocks: self.prefix.tree_block_refs(),
+            live,
+            queued: self.router.queued(),
+        }
+    }
+
+    /// Test-only fault hook: double-free the first KV block of the
+    /// oldest live sequence, exactly the class of bug the refcount
+    /// oracle exists to catch. Returns `false` when nothing is live.
+    #[cfg(test)]
+    pub fn inject_double_free(&mut self) -> bool {
+        let Some(id) = self.audit().live.first().map(|l| l.id) else {
+            return false;
+        };
+        let Some(blocks) = self.kv.seq_blocks(id) else {
+            return false;
+        };
+        let Some(&b) = blocks.first() else {
+            return false;
+        };
+        self.kv.debug_force_decref(b);
+        true
     }
 
     pub fn kv_free_blocks(&self) -> usize {
@@ -194,7 +344,7 @@ impl SimEngine {
     // -----------------------------------------------------------------
 
     fn step_prefill(&mut self) -> Result<()> {
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let mut seq = match self.router.pop_next() {
             Some(s) => s,
             None => return Ok(()),
@@ -231,6 +381,11 @@ impl SimEngine {
                         self.paused.retain(|&p| p != victim);
                         let mut vseq = self.seqs.remove(&victim).unwrap();
                         self.metrics.preemptions += 1;
+                        self.push_trace(TraceEvent::AdmissionRelief {
+                            id: vseq.id,
+                            priority: vseq.priority,
+                            waiter_priority: seq.priority,
+                        });
                         self.finish_seq(&mut vseq, FinishReason::Preempted)?;
                     }
                 }
@@ -245,6 +400,10 @@ impl SimEngine {
             }
         };
         policy::note_admission(&self.cfg, &mut self.metrics, &mut seq, matched.tokens);
+        self.push_trace(TraceEvent::Admitted {
+            id: seq.id,
+            cached: matched.tokens,
+        });
 
         // "Compute" and store the uncached suffix only.
         let (k, v) = self.prefill_kv(&seq.prompt);
@@ -258,9 +417,11 @@ impl SimEngine {
         let logits = self.logits_for(seq.id, *seq.prompt.last().unwrap())?;
         let tok = self.sampler.sample(&logits, seq.params);
         seq.generated.push(tok);
-        seq.first_token_at = Some(Instant::now());
-        self.metrics.first_token.record(seq.arrived.elapsed());
+        let now = self.clock.now();
+        seq.first_token_at = Some(now);
+        self.metrics.first_token.record(now.saturating_sub(seq.arrived));
         let _ = seq.emit_token(tok);
+        self.push_trace(TraceEvent::Token { id: seq.id, token: tok });
         self.metrics.tokens_generated += 1;
         self.metrics.requests_admitted += 1;
 
@@ -281,7 +442,7 @@ impl SimEngine {
             self.seqs.insert(seq.id, seq);
         }
         self.metrics.prefill_steps += 1;
-        self.metrics.step.record(t0.elapsed());
+        self.metrics.step.record(self.clock.now().saturating_sub(t0));
         Ok(())
     }
 
@@ -290,7 +451,7 @@ impl SimEngine {
     // -----------------------------------------------------------------
 
     fn step_decode(&mut self) -> Result<()> {
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         // The stream scan may have paused or dropped every running
         // sequence; there is nothing to decode then.
         if self.batcher.is_empty() {
@@ -314,6 +475,7 @@ impl SimEngine {
         let batch = self.batcher.assemble()?;
         let max_seq = self.spec.max_seq;
         let mut finished: Vec<(SeqId, FinishReason)> = Vec::new();
+        let mut emitted: Vec<(SeqId, u32)> = Vec::new();
         for slot in batch.lanes.iter() {
             let Some(id) = slot else { continue };
             let (tok, pos) = {
@@ -334,6 +496,7 @@ impl SimEngine {
             // least one credit and this is the step's only token. A
             // mid-step disconnect is reaped by the next scan.
             let _ = seq.emit_token(new_tok);
+            emitted.push((*id, new_tok));
             self.metrics.tokens_generated += 1;
             self.metrics.decode_rows += 1;
             let done_eos = new_tok == EOS;
@@ -350,13 +513,16 @@ impl SimEngine {
                 finished.push((*id, reason));
             }
         }
+        for (id, token) in emitted {
+            self.push_trace(TraceEvent::Token { id, token });
+        }
         for (id, reason) in finished {
             let mut seq = self.seqs.remove(&id).unwrap();
             self.batcher.remove(id)?;
             self.finish_seq(&mut seq, reason)?;
         }
         self.metrics.decode_steps += 1;
-        let dt = t0.elapsed();
+        let dt = self.clock.now().saturating_sub(t0);
         self.metrics.step.record(dt);
         let lanes = batch.occupancy().max(1) as u32;
         self.metrics.per_token.record(dt / lanes);
@@ -366,7 +532,7 @@ impl SimEngine {
     /// Preempt one victim under KV pressure: the shared census spans
     /// running *and* paused sequences (a parked slow client's KV is
     /// reclaimable like any other), ordered by the scheduler's
-    /// (priority asc, reusable desc, recency) rule.
+    /// (priority asc, parked first, reusable desc, recency) rule.
     fn preempt_one(&mut self) -> Result<()> {
         let mut pool = self.batcher.running_ids();
         pool.extend(self.paused.iter().copied());
@@ -375,6 +541,11 @@ impl SimEngine {
             .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
         let mut seq = self.seqs.remove(&id).unwrap();
         self.metrics.preemptions += 1;
+        self.push_trace(TraceEvent::Preempted {
+            id,
+            priority: seq.priority,
+            pool: candidates.iter().map(|c| (c.id, c.priority)).collect(),
+        });
         if self.paused.contains(&id) {
             self.paused.retain(|&p| p != id);
         } else {
@@ -396,20 +567,26 @@ impl SimEngine {
     /// has a slot — backpressure halts generation, it never loses data.
     fn service_streams(&mut self) -> Result<()> {
         let free_lanes = self.cfg.max_running.saturating_sub(self.batcher.len());
+        let now = self.clock.now();
         let ops = policy::plan_stream_ops(
             &self.seqs,
             &self.paused,
             &self.batcher.running_ids(),
             self.cfg.backpressure,
             free_lanes,
+            now,
+            self.cfg.stream_idle_timeout(),
         );
         for op in ops {
             match op {
                 StreamOp::Resume(id) => {
                     self.batcher.admit(id)?;
                     self.paused.retain(|&p| p != id);
-                    self.seqs.get_mut(&id).unwrap().state = SeqState::Decoding;
+                    let seq = self.seqs.get_mut(&id).unwrap();
+                    seq.state = SeqState::Decoding;
+                    seq.paused_at = None;
                     self.metrics.backpressure_resumes += 1;
+                    self.push_trace(TraceEvent::Resumed { id });
                 }
                 StreamOp::ReapPaused(id) => {
                     self.paused.retain(|&p| p != id);
@@ -425,14 +602,24 @@ impl SimEngine {
                 }
                 StreamOp::Pause(id) => {
                     self.batcher.remove(id)?;
-                    self.seqs.get_mut(&id).unwrap().state = SeqState::Paused;
+                    let seq = self.seqs.get_mut(&id).unwrap();
+                    seq.state = SeqState::Paused;
+                    seq.paused_at = Some(now);
                     self.paused.push(id);
                     self.metrics.backpressure_pauses += 1;
+                    self.push_trace(TraceEvent::Paused { id });
                 }
                 StreamOp::DropOverrun(id) => {
                     let mut seq = self.seqs.remove(&id).unwrap();
                     self.batcher.remove(id)?;
                     self.metrics.backpressure_drops += 1;
+                    self.finish_seq(&mut seq, FinishReason::Overrun)?;
+                }
+                StreamOp::ExpireIdle(id) => {
+                    self.paused.retain(|&p| p != id);
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.metrics.stream_idle_drops += 1;
+                    self.push_trace(TraceEvent::Expired { id });
                     self.finish_seq(&mut seq, FinishReason::Overrun)?;
                 }
             }
@@ -470,6 +657,11 @@ impl SimEngine {
         seq.state = SeqState::Finished(reason);
         let usage = seq.usage();
         seq.emit_finish(reason, usage);
+        self.push_trace(TraceEvent::Finished {
+            id: seq.id,
+            reason,
+            usage,
+        });
         self.metrics.record_finish(&seq.tenant, usage);
         self.register_prefix(seq);
         if self.kv.contains(seq.id) {
@@ -504,14 +696,25 @@ impl InferenceEngine for SimEngine {
             &self.tokenizer,
             &req,
             prompt_tokens,
-            self.cfg.max_new_tokens,
-            self.cfg.stream_capacity,
+            &SubmitContext {
+                max_new_cap: self.cfg.max_new_tokens,
+                stream_capacity: self.cfg.stream_capacity,
+                now: self.clock.now(),
+                wakeup: self.wakeup.as_ref(),
+            },
         )
     }
 
+    fn set_wakeup(&mut self, wakeup: Wakeup) {
+        self.wakeup = Some(wakeup);
+    }
+
     /// Run one scheduling iteration (same policy as the real engine):
-    /// service stream flow control, then prefill/decode/idle.
+    /// service stream flow control, then prefill/decode/idle. Virtual
+    /// time advances one [`SIM_STEP`] per call, whatever the action —
+    /// idle time is time too (it is what the idle timeout measures).
     fn step(&mut self) -> Result<Action> {
+        self.clock.advance(SIM_STEP);
         self.service_streams()?;
         let state = policy::plan_admission(
             &self.cfg,

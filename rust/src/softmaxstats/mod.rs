@@ -112,6 +112,80 @@ pub fn derive_policy(stats: &SoftmaxInputStats) -> UnifiedMaxPolicy {
     }
 }
 
+// ---------------------------------------------------------------------
+// Reference kernels (conformance surface)
+// ---------------------------------------------------------------------
+
+/// Synchronized two-pass softmax: find the row max, then normalize.
+/// This is the baseline every asynchronized result must match; it is
+/// numerically safe for any finite input.
+pub fn softmax_reference(xs: &[f32]) -> Vec<f64> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let m = xs.iter().fold(f64::NEG_INFINITY, |a, &x| a.max(x as f64));
+    let exps: Vec<f64> = xs.iter().map(|&x| ((x as f64) - m).exp()).collect();
+    let s: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / s).collect()
+}
+
+/// Result of the asynchronized (unified-max) softmax.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnifiedSoftmax {
+    pub probs: Vec<f64>,
+    /// The row forced the synchronized fallback: the policy disabled
+    /// the asynchronized path outright (OPT rule), or an element landed
+    /// above the safe window `phi + b` (partial sums would overflow)
+    /// and the row was recomputed two-pass — the paper's §3 recompute.
+    pub fell_back: bool,
+}
+
+/// The paper's asynchronized softmax (§3): a *single* pass accumulating
+/// `e^(x - phi)` with the per-model unified scaling factor instead of
+/// the row max, so partial softmax results can be computed and reduced
+/// without synchronizing on a shared max.
+///
+/// Window semantics, matching the kernel: an exponent below `a` is
+/// flushed to zero (denormal-range contribution, harmless); an exponent
+/// above `b` would overflow the f32 accumulator in the real kernel, so
+/// the row falls back to the synchronized two-pass (`fell_back`). A
+/// policy with `enabled == false` (the OPT-6.7B rule) short-circuits to
+/// the reference for every row.
+pub fn softmax_unified(xs: &[f32], policy: &UnifiedMaxPolicy) -> UnifiedSoftmax {
+    if !policy.enabled {
+        return UnifiedSoftmax {
+            probs: softmax_reference(xs),
+            fell_back: true,
+        };
+    }
+    let mut exps = Vec::with_capacity(xs.len());
+    let mut sum = 0.0f64;
+    for &x in xs {
+        let d = (x as f64) - policy.phi;
+        if d > policy.b {
+            // Out the top of the safe window: recompute synchronized.
+            return UnifiedSoftmax {
+                probs: softmax_reference(xs),
+                fell_back: true,
+            };
+        }
+        let e = if d < policy.a { 0.0 } else { d.exp() };
+        sum += e;
+        exps.push(e);
+    }
+    if sum == 0.0 {
+        // Every element underflowed the window: nothing to normalize.
+        return UnifiedSoftmax {
+            probs: softmax_reference(xs),
+            fell_back: true,
+        };
+    }
+    UnifiedSoftmax {
+        probs: exps.into_iter().map(|e| e / sum).collect(),
+        fell_back: false,
+    }
+}
+
 /// Figure 5 as published: per-model softmax-input ranges the paper reports
 /// (approximate extents read off the figure). Used by the fig05 bench to
 /// reproduce the enable/disable decision per model.
@@ -178,5 +252,98 @@ mod tests {
     fn empty_stats_safe_default() {
         let p = derive_policy(&SoftmaxInputStats::new());
         assert!(!p.enabled);
+    }
+
+    #[test]
+    fn range_and_std_edge_cases_are_nan_free() {
+        // count == 0: both summaries are defined (zero), not NaN/inf.
+        let s = SoftmaxInputStats::new();
+        assert_eq!(s.range(), 0.0);
+        assert_eq!(s.std(), 0.0);
+        assert!(s.range().is_finite() && s.std().is_finite());
+
+        // count == 1: a single observation has no spread.
+        let mut s = SoftmaxInputStats::new();
+        s.push(-3.25);
+        assert_eq!(s.count, 1);
+        assert_eq!(s.range(), 0.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!((s.min, s.max), (-3.25, -3.25));
+        assert!(s.mean.is_finite());
+
+        // The derived policy is NaN-free in both degenerate cases.
+        let p = derive_policy(&s);
+        assert!(p.phi.is_finite());
+        assert!(p.expected_recompute_rate.is_finite());
+        let p0 = derive_policy(&SoftmaxInputStats::new());
+        assert!(p0.phi.is_finite());
+        assert!(p0.expected_recompute_rate.is_finite());
+
+        // Identical observations: zero variance, still finite.
+        let mut s = SoftmaxInputStats::new();
+        for _ in 0..10 {
+            s.push(2.5);
+        }
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.range(), 0.0);
+        assert!(derive_policy(&s).expected_recompute_rate.is_finite());
+    }
+
+    #[test]
+    fn wide_range_stats_flip_unified_softmax_to_synchronized() {
+        // The satellite acceptance: a wide-range input distribution
+        // must flip the SoftmaxInputStats-driven policy into
+        // synchronized mode, and the unified kernel must then report
+        // the fallback and agree with the reference bit-for-bit.
+        let narrow = derive_policy(&stats_from(-16.8, 6.5, 512));
+        assert!(narrow.enabled);
+        let wide = derive_policy(&stats_from(-60.0, 30.0, 512));
+        assert!(!wide.enabled, "OPT-style width must disable the path");
+
+        let xs: Vec<f32> = (0..64).map(|i| -60.0 + 90.0 * i as f32 / 63.0).collect();
+        let got = softmax_unified(&xs, &wide);
+        assert!(got.fell_back);
+        assert_eq!(got.probs, softmax_reference(&xs));
+    }
+
+    #[test]
+    fn unified_softmax_matches_reference_in_window() {
+        let policy = derive_policy(&stats_from(-16.8, 6.5, 512));
+        let xs: Vec<f32> = (0..256).map(|i| -16.8 + 23.3 * i as f32 / 255.0).collect();
+        let got = softmax_unified(&xs, &policy);
+        assert!(!got.fell_back, "in-range row must stay asynchronized");
+        let want = softmax_reference(&xs);
+        let sum: f64 = got.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "probabilities normalize");
+        for (u, r) in got.probs.iter().zip(&want) {
+            assert!((u - r).abs() <= 1e-9 + 1e-9 * r, "{u} vs {r}");
+        }
+    }
+
+    #[test]
+    fn unified_softmax_window_edges_are_exact() {
+        // Hand-built policy with exact window bounds, so the edge
+        // arithmetic has no float slack.
+        let policy = UnifiedMaxPolicy {
+            enabled: true,
+            phi: 0.0,
+            a: SAFE_A,
+            b: SAFE_B,
+            expected_recompute_rate: 0.0,
+        };
+        // Exactly at phi + b: still inside the window.
+        let xs = vec![0.0f32, SAFE_B as f32];
+        assert!(!softmax_unified(&xs, &policy).fell_back);
+        // Just past it: must recompute synchronized.
+        let xs = vec![0.0f32, SAFE_B as f32 + 1.0];
+        let got = softmax_unified(&xs, &policy);
+        assert!(got.fell_back, "overflow edge must trigger the fallback");
+        assert_eq!(got.probs, softmax_reference(&xs));
+        // Below phi + a: flushed to zero, no fallback, negligible mass.
+        let xs = vec![0.0f32, SAFE_A as f32 - 10.0];
+        let got = softmax_unified(&xs, &policy);
+        assert!(!got.fell_back, "underflow is harmless, not a fallback");
+        assert_eq!(got.probs[1], 0.0);
+        assert!((got.probs[0] - 1.0).abs() < 1e-9);
     }
 }

@@ -1,0 +1,107 @@
+//! Engine time source: a monotone clock that is either the system's
+//! `Instant` (production) or a manually advanced virtual clock (the
+//! deterministic simulation path).
+//!
+//! The serving stack never reads `Instant::now()` directly on the
+//! request path; everything flows through a [`Clock`] owned by the
+//! engine. The real [`crate::engine::Engine`] uses [`Clock::system`];
+//! [`crate::simengine::SimEngine`] uses [`Clock::manual`], advancing a
+//! fixed quantum per step, so every latency, idle timeout, and
+//! pause/resume decision in a simulation is a pure function of the
+//! scenario — byte-identical across runs. The simulation-test harness
+//! re-exports this type as `simtest::SimClock`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Monotone time source; timestamps are [`Duration`]s since the clock's
+/// creation (epoch zero), so they are plain data and order naturally.
+#[derive(Debug, Clone)]
+pub struct Clock {
+    inner: ClockInner,
+}
+
+#[derive(Debug, Clone)]
+enum ClockInner {
+    /// Wall time relative to the creation instant.
+    System(Instant),
+    /// Virtual nanoseconds, advanced explicitly. Shared: clones observe
+    /// (and may advance) the same timeline.
+    Manual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// A real-time clock backed by `Instant` (production engines).
+    pub fn system() -> Self {
+        Clock {
+            inner: ClockInner::System(Instant::now()),
+        }
+    }
+
+    /// A virtual clock starting at zero that only moves when
+    /// [`Clock::advance`] is called (simulation engines and tests).
+    pub fn manual() -> Self {
+        Clock {
+            inner: ClockInner::Manual(Arc::new(AtomicU64::new(0))),
+        }
+    }
+
+    /// True for manually advanced (virtual) clocks.
+    pub fn is_manual(&self) -> bool {
+        matches!(self.inner, ClockInner::Manual(_))
+    }
+
+    /// Time elapsed since the clock's epoch.
+    pub fn now(&self) -> Duration {
+        match &self.inner {
+            ClockInner::System(base) => base.elapsed(),
+            ClockInner::Manual(ns) => Duration::from_nanos(ns.load(Ordering::Acquire)),
+        }
+    }
+
+    /// Advance a manual clock by `d`. No-op on a system clock (real
+    /// time cannot be steered).
+    pub fn advance(&self, d: Duration) {
+        if let ClockInner::Manual(ns) = &self.inner {
+            ns.fetch_add(d.as_nanos() as u64, Ordering::AcqRel);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_moves_only_on_advance() {
+        let c = Clock::manual();
+        assert!(c.is_manual());
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_millis(3));
+        assert_eq!(c.now(), Duration::from_millis(3));
+        c.advance(Duration::from_micros(500));
+        assert_eq!(c.now(), Duration::from_micros(3500));
+    }
+
+    #[test]
+    fn manual_clones_share_the_timeline() {
+        let a = Clock::manual();
+        let b = a.clone();
+        a.advance(Duration::from_millis(7));
+        assert_eq!(b.now(), Duration::from_millis(7));
+        b.advance(Duration::from_millis(1));
+        assert_eq!(a.now(), Duration::from_millis(8));
+    }
+
+    #[test]
+    fn system_clock_is_monotone_and_ignores_advance() {
+        let c = Clock::system();
+        assert!(!c.is_manual());
+        let t0 = c.now();
+        c.advance(Duration::from_secs(3600)); // must not jump
+        let t1 = c.now();
+        assert!(t1 >= t0);
+        assert!(t1 < Duration::from_secs(600), "advance must be a no-op");
+    }
+}

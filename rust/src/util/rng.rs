@@ -2,6 +2,17 @@
 //! seeded via splitmix64. Used by the sampler, the workload generator and
 //! the property-test harness.
 
+/// One splitmix64 step: add the golden-ratio increment and finalize.
+/// The single authoritative copy of the constants — the RNG seeding,
+/// the simulation-test fingerprint, and the simtest CLI's entropy mix
+/// all call this instead of re-implementing it.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256++ generator.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -13,11 +24,9 @@ impl Rng {
         // splitmix64 expansion (reference initialization).
         let mut x = seed;
         let mut next = || {
+            let out = splitmix64(x);
             x = x.wrapping_add(0x9E3779B97F4A7C15);
-            let mut z = x;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-            z ^ (z >> 31)
+            out
         };
         Rng {
             s: [next(), next(), next(), next()],

@@ -1,0 +1,173 @@
+//! Conformance suite for the §3 asynchronized softmax with a unified
+//! max value: `softmax_unified` under a `SoftmaxInputStats`-derived
+//! policy must match the synchronized two-pass reference within 1e-6
+//! relative error across adversarial input ranges; an OPT-6.7B-style
+//! wide-range distribution must flip the policy to the synchronized
+//! path; and the window edges at `phi + a` / `phi + b` behave exactly
+//! as the kernel's recompute rule specifies.
+//!
+//! Error metric: per element, `|unified - reference|` must be within
+//! `1e-6 * max_j(reference_j)` (row-max-relative, the standard kernel
+//! conformance metric), and elements carrying non-negligible mass
+//! (>= 1e-3 of the row max) must also match to 1e-6 *elementwise*
+//! relative error.
+
+use fdpp::softmaxstats::{
+    derive_policy, paper_figure5_ranges, softmax_reference, softmax_unified, SoftmaxInputStats,
+    UnifiedMaxPolicy, SAFE_A, SAFE_B,
+};
+use fdpp::util::rng::Rng;
+
+const REL_TOL: f64 = 1e-6;
+
+fn stats_from_values(xs: &[f32]) -> SoftmaxInputStats {
+    let mut s = SoftmaxInputStats::new();
+    s.extend(xs);
+    s
+}
+
+/// Assert the conformance error metric between a unified row and the
+/// two-pass reference.
+fn assert_conformant(xs: &[f32], policy: &UnifiedMaxPolicy, ctx: &str) -> bool {
+    let got = softmax_unified(xs, policy);
+    let want = softmax_reference(xs);
+    assert_eq!(got.probs.len(), want.len(), "{ctx}: length");
+    let sum: f64 = got.probs.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-9, "{ctx}: sum {sum} != 1");
+    let row_max = want.iter().cloned().fold(0.0f64, f64::max);
+    for (i, (u, r)) in got.probs.iter().zip(&want).enumerate() {
+        assert!(
+            (u - r).abs() <= REL_TOL * row_max,
+            "{ctx}: element {i}: unified {u} vs reference {r} (row max {row_max})"
+        );
+        if *r >= 1e-3 * row_max {
+            assert!(
+                (u - r).abs() <= REL_TOL * r,
+                "{ctx}: element {i} carries mass: relative error {} > {REL_TOL}",
+                (u - r).abs() / r
+            );
+        }
+    }
+    got.fell_back
+}
+
+/// Uniform row sampled inside [lo, hi].
+fn sample_row(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_f32(lo, hi)).collect()
+}
+
+#[test]
+fn unified_matches_reference_across_adversarial_ranges() {
+    // Per-range rows: Llama-style, narrow, shifted-far-negative,
+    // shifted-positive, near-degenerate. The policy is derived from
+    // the same distribution the rows are drawn from (the paper's
+    // offline-statistics flow).
+    let ranges: [(f32, f32); 5] = [
+        (-16.8, 6.5),  // Llama2-7B (Figure 5)
+        (-1.0, 1.0),   // narrow
+        (-80.0, -60.0), // far negative: phi re-centers
+        (40.0, 55.0),  // large positive: phi re-centers
+        (3.14, 3.14),  // degenerate constant row
+    ];
+    let mut rng = Rng::seed_from_u64(0x50F7_3A81);
+    for (lo, hi) in ranges {
+        let calib = sample_row(&mut rng, 4096, lo, hi);
+        let policy = derive_policy(&stats_from_values(&calib));
+        assert!(policy.enabled, "range [{lo}, {hi}] must enable the path");
+        let mut fallbacks = 0usize;
+        let rows = 50;
+        for r in 0..rows {
+            let n = 16 + 61 * r % 1024;
+            let xs = sample_row(&mut rng, n.max(2), lo, hi);
+            if assert_conformant(&xs, &policy, &format!("range [{lo},{hi}] row {r}")) {
+                fallbacks += 1;
+            }
+        }
+        // In-distribution rows stay on the asynchronized path: the
+        // paper's point is that recompute is rare.
+        assert!(
+            fallbacks * 100 <= rows,
+            "range [{lo}, {hi}]: {fallbacks}/{rows} rows fell back"
+        );
+    }
+}
+
+#[test]
+fn wide_range_distribution_forces_synchronized_mode() {
+    // OPT-6.7B rule: the observed range cannot fit the safe window, so
+    // the stats-driven policy disables the asynchronized path and every
+    // row goes two-pass — bit-identical to the reference.
+    let mut rng = Rng::seed_from_u64(0x0B7_6B);
+    let calib = sample_row(&mut rng, 4096, -60.0, 30.0);
+    let policy = derive_policy(&stats_from_values(&calib));
+    assert!(!policy.enabled, "wide range must disable unified max");
+    for r in 0..20 {
+        let xs = sample_row(&mut rng, 512, -60.0, 30.0);
+        let got = softmax_unified(&xs, &policy);
+        assert!(got.fell_back, "row {r}: disabled policy must fall back");
+        assert_eq!(got.probs, softmax_reference(&xs), "row {r}: exact match");
+    }
+    // And the published Figure 5 ranges reproduce the paper's
+    // per-model enable/disable decisions.
+    for (name, lo, hi) in paper_figure5_ranges() {
+        let calib = sample_row(&mut rng, 2048, lo as f32, hi as f32);
+        let p = derive_policy(&stats_from_values(&calib));
+        assert_eq!(p.enabled, name != "opt-6.7b", "{name}");
+    }
+}
+
+#[test]
+fn outlier_above_window_triggers_recompute_and_stays_conformant() {
+    // An enabled policy fed a row with one element past phi + b: the
+    // kernel must take the synchronized recompute and still match the
+    // reference (which it *is* in that branch).
+    let mut rng = Rng::seed_from_u64(0xE0_17);
+    let calib = sample_row(&mut rng, 4096, -16.8, 6.5);
+    let policy = derive_policy(&stats_from_values(&calib));
+    assert!(policy.enabled);
+    let mut xs = sample_row(&mut rng, 256, -16.8, 6.5);
+    xs[137] = (policy.phi + policy.b) as f32 + 5.0;
+    let fell_back = assert_conformant(&xs, &policy, "outlier row");
+    assert!(fell_back, "outlier past phi+b must force the fallback");
+}
+
+#[test]
+fn window_edges_at_phi_plus_a_and_phi_plus_b() {
+    // Exact-window policy (phi = 0) so the edge arithmetic is exact.
+    let policy = UnifiedMaxPolicy {
+        enabled: true,
+        phi: 0.0,
+        a: SAFE_A,
+        b: SAFE_B,
+        expected_recompute_rate: 0.0,
+    };
+    // At the top edge: included, asynchronized, conformant.
+    let xs = vec![0.0f32, 1.0, SAFE_B as f32];
+    assert!(!assert_conformant(&xs, &policy, "top edge"));
+    // Past the top edge: recompute.
+    let xs = vec![0.0f32, SAFE_B as f32 + f32::EPSILON + 1.0];
+    assert!(softmax_unified(&xs, &policy).fell_back);
+    // At the bottom edge: included (e^a, denormal-adjacent but exact).
+    let xs = vec![0.0f32, SAFE_A as f32];
+    assert!(!assert_conformant(&xs, &policy, "bottom edge"));
+    // Below the bottom edge: flushed to zero — conformant under the
+    // row-max-relative metric because the true mass is ~e^a ~ 1e-11.
+    let xs = vec![0.0f32, SAFE_A as f32 - 20.0];
+    let got = softmax_unified(&xs, &policy);
+    assert!(!got.fell_back, "underflow must not force a recompute");
+    assert_eq!(got.probs[1], 0.0);
+    assert!(!assert_conformant(&xs, &policy, "below bottom edge"));
+}
+
+#[test]
+fn unified_softmax_is_deterministic() {
+    // Same inputs, same policy, byte-identical outputs — the property
+    // the simulation harness relies on for seed replay.
+    let mut rng = Rng::seed_from_u64(7);
+    let calib = sample_row(&mut rng, 1024, -10.0, 5.0);
+    let policy = derive_policy(&stats_from_values(&calib));
+    let xs = sample_row(&mut rng, 333, -10.0, 5.0);
+    let a = softmax_unified(&xs, &policy);
+    let b = softmax_unified(&xs, &policy);
+    assert_eq!(a, b);
+}

@@ -35,6 +35,7 @@ fn prop_preemption_victim_orders_by_priority_reusable_recency() {
             cands.push(PreemptCandidate {
                 id: (i as u64 + 1) * 3, // distinct, increasing = age order
                 priority: rng.gen_range(0, 6) as i32 - 3,
+                paused: false, // all running: the classic ordering
                 reusable_blocks: rng.gen_range(0, 4),
             });
         }
@@ -61,6 +62,52 @@ fn prop_preemption_victim_orders_by_priority_reusable_recency() {
             .max()
             .unwrap();
         assert_eq!(victim, youngest, "remaining ties go to the youngest: {cands:?}");
+    }
+}
+
+#[test]
+fn prop_parked_victim_preferred_within_priority_level() {
+    // ISSUE 4 satellite: within a priority level, parked
+    // (backpressure-paused) victims lose before running ones; priority
+    // still dominates, and the reusable/recency order applies among
+    // candidates of the same parked-ness.
+    let mut rng = Rng::seed_from_u64(0xAA_4D1D3);
+    for _ in 0..CASES {
+        let n = rng.gen_range(1, 8);
+        let mut cands = Vec::with_capacity(n);
+        for i in 0..n {
+            cands.push(PreemptCandidate {
+                id: (i as u64 + 1) * 3,
+                priority: rng.gen_range(0, 4) as i32 - 2,
+                paused: rng.gen_range(0, 1) == 1,
+                reusable_blocks: rng.gen_range(0, 4),
+            });
+        }
+        let victim = preemption_victim(&cands).expect("non-empty candidate set");
+        let v = *cands.iter().find(|c| c.id == victim).unwrap();
+        let min_priority = cands.iter().map(|c| c.priority).min().unwrap();
+        assert_eq!(v.priority, min_priority, "priority dominates: {cands:?}");
+        let level: Vec<_> = cands
+            .iter()
+            .filter(|c| c.priority == min_priority)
+            .collect();
+        if level.iter().any(|c| c.paused) {
+            assert!(
+                v.paused,
+                "a parked victim existed at the level but a running one \
+                 was preempted: {cands:?}"
+            );
+        }
+        let peers: Vec<_> = level.iter().filter(|c| c.paused == v.paused).collect();
+        let max_reusable = peers.iter().map(|c| c.reusable_blocks).max().unwrap();
+        assert_eq!(v.reusable_blocks, max_reusable, "{cands:?}");
+        let youngest = peers
+            .iter()
+            .filter(|c| c.reusable_blocks == max_reusable)
+            .map(|c| c.id)
+            .max()
+            .unwrap();
+        assert_eq!(victim, youngest, "{cands:?}");
     }
 }
 
@@ -165,6 +212,82 @@ fn prop_lower_priority_always_preempted_first() {
     let (fa, fb) = run_preemption_duel(0, 0);
     assert_ne!(fa, FinishReason::Preempted);
     assert_eq!(fb, FinishReason::Preempted);
+}
+
+/// A 7-char prompt (8 tokens with BOS = 3 KV blocks of 4 with the +1
+/// slot) whose generation survives at least 4 tokens on a roomy pool.
+fn park_prompt(tag: u32) -> String {
+    for salt in 0..512u32 {
+        let p = format!("k{tag}x{salt:04}");
+        assert_eq!(p.len(), 7);
+        let mut e = SimEngine::new(
+            EngineConfig {
+                kv_total_blocks: 64,
+                stream_capacity: 64,
+                ..duel_cfg()
+            },
+            SimSpec::default(),
+        )
+        .unwrap();
+        let h = e.submit(GenRequest::text(&p).max_new_tokens(4)).unwrap();
+        e.run_to_completion().unwrap();
+        if h.drain().0.len() == 4 {
+            return p;
+        }
+    }
+    panic!("no prompt survives 4 tokens");
+}
+
+#[test]
+fn parked_victim_preempted_before_running_at_equal_priority() {
+    // End-to-end corollary of the property above: two equal-priority
+    // requests on a 6-block pool; one client stalls (its request
+    // parks), the other keeps draining. Decode growth exhausts the
+    // pool; the *parked* request must be the victim even though it is
+    // older (the old recency rule would have preempted the live one).
+    let cfg = EngineConfig {
+        stream_capacity: 2,
+        backpressure: BackpressurePolicy::PauseDecode,
+        ..duel_cfg()
+    };
+    let mut e = SimEngine::new(cfg, SimSpec::default()).unwrap();
+    let stalled = e
+        .submit(GenRequest::text(park_prompt(0)).priority(1).max_new_tokens(DUEL_BUDGET))
+        .unwrap();
+    // Park the stalled client: its 2-slot stream fills, PauseDecode
+    // takes its lane.
+    for _ in 0..6 {
+        e.step().unwrap();
+    }
+    assert_eq!(e.paused(), 1, "stalled request parked");
+    let live = e
+        .submit(GenRequest::text(park_prompt(1)).priority(1).max_new_tokens(DUEL_BUDGET))
+        .unwrap();
+    let mut live_fin = None;
+    let mut steps = 0;
+    while live_fin.is_none() {
+        if !e.is_idle() {
+            e.step().unwrap();
+        }
+        let (_, f) = live.drain();
+        if f.is_some() {
+            live_fin = f;
+        }
+        steps += 1;
+        assert!(steps < 10_000, "duel must terminate");
+    }
+    assert!(e.metrics.preemptions >= 1, "6-block pool must preempt");
+    assert_ne!(
+        live_fin.unwrap().0,
+        FinishReason::Preempted,
+        "the draining client survives"
+    );
+    let (_, stalled_fin) = stalled.drain();
+    assert_eq!(
+        stalled_fin.unwrap().0,
+        FinishReason::Preempted,
+        "the parked equal-priority request is the victim"
+    );
 }
 
 #[test]
