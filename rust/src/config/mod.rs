@@ -190,6 +190,11 @@ pub struct EngineConfig {
     /// then holds KV until pressure preempts it. Bounds quiet-time KV
     /// occupancy even when nothing else wants the blocks.
     pub stream_idle_timeout_ms: u64,
+    /// Per-tenant concurrency quota: at most this many of one tenant's
+    /// requests may be in flight (queued + running + paused) at once;
+    /// further submissions are rejected with a structured
+    /// `quota_exceeded` error. 0 disables the quota.
+    pub tenant_max_inflight: usize,
 }
 
 impl Default for EngineConfig {
@@ -210,6 +215,7 @@ impl Default for EngineConfig {
             stream_capacity: 256,
             backpressure: BackpressurePolicy::PauseDecode,
             stream_idle_timeout_ms: 0,
+            tenant_max_inflight: 0,
         }
     }
 }
@@ -264,6 +270,7 @@ impl EngineConfig {
                 "stream_idle_timeout_ms",
                 d.stream_idle_timeout_ms as usize,
             ) as u64,
+            tenant_max_inflight: usizes("tenant_max_inflight", d.tenant_max_inflight),
         })
     }
 

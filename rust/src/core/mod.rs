@@ -1,0 +1,1216 @@
+//! The generic serving core: one orchestration loop, many backends.
+//!
+//! [`EngineCore<B>`] owns everything FlashDecoding++ calls the
+//! *dataflow* side of serving — admission (via
+//! [`crate::policy::plan_admission`]), prefill/decode stepping, stream
+//! flow control ([`crate::policy::plan_stream_ops`]), preemption and
+//! admission relief, idle expiry, cross-request dedup, per-tenant
+//! quotas, finish/usage accounting, [`TraceEvent`] emission, and the
+//! [`EngineCore::audit`] snapshot the simulation-test oracles run on.
+//! A [`Backend`] supplies only the *compute* side: how prompt and token
+//! KV is materialized, where logits come from, and any device-resident
+//! state that must track batch composition.
+//!
+//! Before this module existed, `engine` (PJRT) and `simengine` (the
+//! deterministic hash model) each carried a full copy of the step loop;
+//! only `policy` was shared, and surfaces like tracing and `audit()`
+//! existed on the sim twin alone. Now both are thin [`Backend`] impls —
+//! [`crate::engine::Engine`] and [`crate::simengine::SimEngine`] are
+//! type aliases over this core — so every orchestration feature lands
+//! once and the production path exposes the same trace/audit surface
+//! the simulation tests rely on.
+//!
+//! # Invariant ownership
+//!
+//! The core, not the backend, is responsible for:
+//!
+//! - **KV block accounting**: every sequence the core retires goes
+//!   through [`EngineCore::finish_seq`]; blocks are freed exactly once
+//!   and the prefix cache's retained references are the only other
+//!   owners ([`check_kv_conservation`]).
+//! - **Stream losslessness**: stream credit is checked *before* a
+//!   sequence decodes, so a generated token always has a slot.
+//! - **Priority monotonicity**: preemption victims come from the shared
+//!   policy census; the trace records the candidate pool so oracles can
+//!   verify the choice without trusting it.
+//! - **Usage conservation**: per-request cached + prefill partitions
+//!   the prompt; finish events carry the record.
+//!
+//! A backend must uphold only its local contract (see [`Backend`]):
+//! write the KV it is asked to write, return one logits row per
+//! occupied lane, and keep any device-side state consistent through the
+//! batch-membership hooks. It must not touch sequence lifecycle,
+//! metrics counters the core owns, or the prefix cache.
+
+pub mod stub;
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::api::{
+    FinishReason, GenRequest, InferenceEngine, RequestId, SubmissionHandle, Usage, Wakeup,
+};
+use crate::batching::{Admission, Batcher, DecodeBatch};
+use crate::config::EngineConfig;
+use crate::error::{Error, Result};
+use crate::kvcache::{KvAudit, KvCache, KvGeometry, SeqId};
+use crate::metrics::EngineMetrics;
+use crate::policy::{self, StreamOp};
+use crate::prefixcache::PrefixCache;
+use crate::router::{self, Router, SeqState, Sequence, SubmitContext};
+use crate::sampling::Sampler;
+use crate::scheduler::{decide, preemption_victim, Action};
+use crate::tokenizer::{ByteTokenizer, EOS};
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+
+pub use stub::{StubBackend, StubEngine};
+
+// ---------------------------------------------------------------------
+// Trace and audit surface (production and simulation alike)
+// ---------------------------------------------------------------------
+
+/// One observable scheduling event, recorded when tracing is enabled
+/// ([`EngineCore::enable_trace`]). The simulation-test harness replays
+/// scenarios and checks its oracles against this stream; it is also
+/// what makes two runs comparably *byte-identical* (equal traces). The
+/// real PJRT engine records the same events, so production debugging
+/// sees exactly what simtest sees.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A request was admitted (prefill ran); `cached` prompt tokens
+    /// were served from the prefix cache.
+    Admitted { id: SeqId, cached: usize },
+    /// One generated token was emitted to the request's stream.
+    Token { id: SeqId, token: u32 },
+    /// The sequence was parked by stream backpressure.
+    Paused { id: SeqId },
+    /// A parked sequence rejoined the decode batch.
+    Resumed { id: SeqId },
+    /// A parked sequence sat idle past `stream_idle_timeout` and was
+    /// demoted to `Overrun`.
+    Expired { id: SeqId },
+    /// Decode-pressure preemption: the chosen victim, its priority, and
+    /// the full candidate pool `(id, priority)` the choice ran over —
+    /// recorded so an external oracle can verify priority monotonicity
+    /// without trusting the policy it is checking.
+    Preempted {
+        id: SeqId,
+        priority: i32,
+        pool: Vec<(SeqId, i32)>,
+    },
+    /// Admission-relief preemption of a parked victim on behalf of a
+    /// blocked higher-priority waiter.
+    AdmissionRelief {
+        id: SeqId,
+        priority: i32,
+        waiter_priority: i32,
+    },
+    /// The request finished; exactly one per request.
+    Finished {
+        id: SeqId,
+        reason: FinishReason,
+        usage: Usage,
+    },
+}
+
+/// One live sequence in an [`EngineAudit`] snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiveSeq {
+    pub id: SeqId,
+    pub priority: i32,
+    pub paused: bool,
+}
+
+/// A full accounting snapshot of an engine's shared state, taken
+/// between steps by the simulation-test oracles (and, summarized, by
+/// the production `{"stats": true}` reply): the KV allocator's books,
+/// the prefix tree's retained block references, and the live sequence
+/// set.
+#[derive(Debug, Clone)]
+pub struct EngineAudit {
+    pub kv: KvAudit,
+    /// Blocks retained by the prefix tree, one entry per tree-held
+    /// reference.
+    pub tree_blocks: Vec<usize>,
+    pub live: Vec<LiveSeq>,
+    pub queued: usize,
+}
+
+/// One walk of the allocator's books: the first violation found (the
+/// oracle's error) and the count of blocks whose refcount disagrees
+/// with their visible owners (the stats gauge). Shared by the oracle
+/// entry point and the stats summary so neither walks the pool twice.
+fn audit_accounting(audit: &EngineAudit) -> (Option<String>, usize) {
+    let total = audit.kv.total_blocks;
+    if audit.kv.refcounts.len() != total {
+        return (Some("audit refcount table does not cover the pool".into()), 0);
+    }
+    fn note(e: String, error: &mut Option<String>) {
+        if error.is_none() {
+            *error = Some(e);
+        }
+    }
+    let mut error: Option<String> = None;
+    let mut owners = vec![0u32; total];
+    for (id, blocks) in &audit.kv.seq_blocks {
+        for &b in blocks {
+            if b >= total {
+                note(format!("seq {id} references out-of-pool block {b}"), &mut error);
+            } else {
+                owners[b] += 1;
+            }
+        }
+    }
+    for &b in &audit.tree_blocks {
+        if b >= total {
+            note(format!("prefix tree references out-of-pool block {b}"), &mut error);
+        } else {
+            owners[b] += 1;
+        }
+    }
+    let mut in_free = vec![false; total];
+    for &b in &audit.kv.free_list {
+        if b >= total {
+            note(format!("free list holds out-of-pool block {b}"), &mut error);
+        } else if in_free[b] {
+            note(
+                format!("block {b} is on the free list twice (double free)"),
+                &mut error,
+            );
+        } else {
+            in_free[b] = true;
+        }
+    }
+    let mut allocated = 0usize;
+    let mut leaked = 0usize;
+    for b in 0..total {
+        let rc = audit.kv.refcounts[b];
+        if rc != owners[b] {
+            leaked += 1;
+            note(
+                format!(
+                    "block {b}: refcount {rc} != {} visible owners (leak or double free)",
+                    owners[b]
+                ),
+                &mut error,
+            );
+        }
+        if (rc == 0) != in_free[b] {
+            note(
+                format!("block {b}: refcount {rc} but on-free-list={}", in_free[b]),
+                &mut error,
+            );
+        }
+        if rc > 0 {
+            allocated += 1;
+        }
+    }
+    if allocated + audit.kv.free_list.len() != total {
+        note(
+            format!(
+                "allocated {allocated} + free {} != total {total}",
+                audit.kv.free_list.len()
+            ),
+            &mut error,
+        );
+    }
+    (error, leaked)
+}
+
+/// KV refcount conservation over a full audit snapshot: every block's
+/// refcount equals the owners visible in the audit (sequence block
+/// tables + prefix-tree references); a block is on the free list
+/// exactly when its refcount is zero; the free list holds no
+/// duplicates. This is the simulation harness's oracle 1, shared here
+/// so the production stats path can run the same check.
+pub fn check_kv_conservation(audit: &EngineAudit) -> std::result::Result<(), String> {
+    match audit_accounting(audit).0 {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Condensed audit verdict for the stats snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AuditSummary {
+    /// The full refcount-conservation check passed.
+    pub refcount_ok: bool,
+    /// Blocks whose refcount disagrees with their visible owners.
+    pub blocks_leaked: usize,
+}
+
+/// Summarize an audit for `{"stats": true}`: whether conservation
+/// holds, and how many blocks have a refcount/owner mismatch — one
+/// pool walk, shared with [`check_kv_conservation`].
+pub fn audit_block_accounting(audit: &EngineAudit) -> AuditSummary {
+    let (error, leaked) = audit_accounting(audit);
+    AuditSummary {
+        refcount_ok: error.is_none(),
+        blocks_leaked: leaked,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The backend contract
+// ---------------------------------------------------------------------
+
+/// Outcome of a backend prefill: the logits row for the prompt's last
+/// real position, accelerator time spent (0 for host-only backends),
+/// and an opaque artifact forwarded to [`Backend::on_batch_join`] when
+/// the sequence enters the decode batch (the PJRT backend carries the
+/// device K/V literals for the sticky-lane splice).
+pub struct PrefillRun<A> {
+    pub last_logits: Vec<f32>,
+    pub exec_time: Duration,
+    pub artifact: A,
+}
+
+/// Outcome of a backend decode step: one logits row per occupied lane,
+/// in the order of the `inputs` slice, plus accelerator time spent.
+///
+/// Rows are views into one flat backing buffer so the PJRT backend can
+/// hand its host logits tensor over without a per-lane copy on the
+/// decode hot path; `offsets[i]` locates input i's row of `row_len`
+/// elements.
+pub struct DecodeRun {
+    pub logits: Vec<f32>,
+    pub offsets: Vec<usize>,
+    pub row_len: usize,
+    pub exec_time: Duration,
+}
+
+impl DecodeRun {
+    /// Input `i`'s logits row.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.logits[self.offsets[i]..self.offsets[i] + self.row_len]
+    }
+}
+
+/// One occupied decode lane's input for this step.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneInput {
+    pub lane: usize,
+    pub id: SeqId,
+    /// The input token (last generated token, or the prompt's last
+    /// token right after prefill).
+    pub token: u32,
+    /// Its position: the sequence's current stored KV length.
+    pub pos: usize,
+}
+
+/// The compute half of an engine. Implementations supply KV
+/// materialization and logits; the [`EngineCore`] supplies everything
+/// else (scheduling, flow control, lifecycle, accounting, tracing).
+///
+/// # Contract
+///
+/// - [`Backend::prefill`] must write the uncached prompt suffix
+///   `[matched_tokens, prompt.len())` into the paged store and leave
+///   the sequence's stored length at `prompt.len()`.
+/// - [`Backend::decode`] must, for each input **in slice order**,
+///   append the input token's KV (`grow_one` + store) and produce that
+///   sequence's next-token logits. Lane order matters: the sim backend
+///   derives logits from stored KV bytes, so reorderings are
+///   observable.
+/// - The batch-membership hooks ([`Backend::on_batch_join`],
+///   [`Backend::on_batch_leave`], [`Backend::on_pause`],
+///   [`Backend::on_resume`]) exist for backends with device-resident
+///   state keyed on batch composition; stateless backends take the
+///   no-op defaults.
+/// - Backends never free sequences, never touch the prefix cache, and
+///   never emit stream events — those invariants belong to the core.
+pub trait Backend {
+    /// Opaque value carried from [`Backend::prefill`] to
+    /// [`Backend::on_batch_join`] for the same sequence.
+    type PrefillArtifact;
+
+    /// KV geometry the core's paged cache is built with.
+    fn geometry(&self, cfg: &EngineConfig) -> KvGeometry;
+
+    /// Model vocab size (also the tokenizer range).
+    fn vocab(&self) -> usize;
+
+    /// Validate a submission's prompt length against backend limits
+    /// (prefill buckets for PJRT, `max_seq` for the sims).
+    fn validate_prompt(&self, cfg: &EngineConfig, prompt_len: usize) -> Result<()>;
+
+    /// Called at the top of every engine step. Simulation backends
+    /// advance their manual clock one quantum here; real-time backends
+    /// do nothing.
+    fn on_step_start(&mut self, _clock: &Clock) {}
+
+    /// Run prefill compute for `seq` (admission already holds its KV):
+    /// write the uncached suffix into the paged store and return the
+    /// logits row of the prompt's last position.
+    fn prefill(
+        &mut self,
+        cfg: &EngineConfig,
+        kv: &mut KvCache,
+        seq: &Sequence,
+        matched_tokens: usize,
+        clock: &Clock,
+    ) -> Result<PrefillRun<Self::PrefillArtifact>>;
+
+    /// A freshly prefilled sequence joined the decode batch at
+    /// `admission.lane`. Returns any extra accelerator time spent
+    /// (device-side KV splice on the PJRT path).
+    fn on_batch_join(
+        &mut self,
+        _kv: &mut KvCache,
+        _metrics: &mut EngineMetrics,
+        _id: SeqId,
+        _admission: Admission,
+        _artifact: Self::PrefillArtifact,
+        _clock: &Clock,
+    ) -> Result<Duration> {
+        Ok(Duration::ZERO)
+    }
+
+    /// One decode step over the assembled batch: append each input
+    /// token's KV and return one logits row per input, in input order.
+    #[allow(clippy::too_many_arguments)]
+    fn decode(
+        &mut self,
+        cfg: &EngineConfig,
+        kv: &mut KvCache,
+        seqs: &HashMap<SeqId, Sequence>,
+        batch: &DecodeBatch,
+        inputs: &[LaneInput],
+        metrics: &mut EngineMetrics,
+        clock: &Clock,
+    ) -> Result<DecodeRun>;
+
+    /// A sequence left the decode batch (finished, preempted, dropped,
+    /// or disconnected); `shrank` reports bucket compaction.
+    fn on_batch_leave(&mut self, _kv: &mut KvCache, _id: SeqId, _shrank: bool) -> Result<()> {
+        Ok(())
+    }
+
+    /// A running sequence is about to be parked by backpressure (the
+    /// PJRT backend persists its device-resident KV first).
+    fn on_pause(&mut self, _kv: &mut KvCache) -> Result<()> {
+        Ok(())
+    }
+
+    /// A parked sequence rejoined the batch at `admission.lane`.
+    fn on_resume(&mut self, _kv: &mut KvCache, _admission: &Admission) -> Result<()> {
+        Ok(())
+    }
+
+    /// The retired sequence's tokens whose KV is valid in the paged
+    /// store and may be published to the prefix cache (prompt only on
+    /// the PJRT path — generated KV may still be device-resident;
+    /// prompt + generated on the sim paths, which write synchronously).
+    fn publishable_tokens(&self, kv: &KvCache, seq: &Sequence) -> Vec<u32>;
+}
+
+// ---------------------------------------------------------------------
+// The core
+// ---------------------------------------------------------------------
+
+/// The serving engine, generic over its compute [`Backend`]. Owns all
+/// sequence state; not `Send` for PJRT backends — run it on a dedicated
+/// thread and talk to it via [`crate::server::EngineJob`] channels.
+///
+/// `Engine = EngineCore<PjrtBackend>` and
+/// `SimEngine = EngineCore<SimBackend>` are the two production aliases;
+/// [`StubEngine`] is the differential-testing third.
+pub struct EngineCore<B: Backend> {
+    pub cfg: EngineConfig,
+    pub(crate) backend: B,
+    kv: KvCache,
+    prefix: PrefixCache,
+    batcher: Batcher,
+    router: Router,
+    sampler: Sampler,
+    seqs: HashMap<SeqId, Sequence>,
+    /// Sequences parked by stream backpressure: they stay in `seqs`
+    /// (state `Paused`) and keep their KV, but hold no decode lane.
+    paused: Vec<SeqId>,
+    /// Engine time source: system clock in production, manual virtual
+    /// clock on the sim paths. Everything on the request path reads
+    /// time through it, never `Instant::now()`.
+    clock: Clock,
+    /// Engine-loop wakeup each new stream notifies on client drains.
+    wakeup: Option<Wakeup>,
+    /// Scheduling-event trace (None until [`EngineCore::enable_trace`]).
+    trace: Option<Vec<TraceEvent>>,
+    /// In-flight prefix table (cross-request dedup): full prompt → the
+    /// admitted, still-decoding sequence computing its KV. A second
+    /// admission of an identical uncached prompt waits for the holder's
+    /// retirement and shares its blocks instead of racing it.
+    inflight_prompts: HashMap<Vec<u32>, SeqId>,
+    /// Per-tenant in-flight request counts (queued + running + paused),
+    /// enforced against [`EngineConfig::tenant_max_inflight`] at
+    /// submit.
+    tenant_inflight: HashMap<String, usize>,
+    pub metrics: EngineMetrics,
+    pub tokenizer: ByteTokenizer,
+}
+
+impl<B: Backend> EngineCore<B> {
+    /// Build a core around a backend, on the given clock.
+    pub fn with_backend(backend: B, cfg: EngineConfig, clock: Clock) -> Result<Self> {
+        cfg.validate()?;
+        let geo = backend.geometry(&cfg);
+        let tokenizer = ByteTokenizer::new(backend.vocab());
+        Ok(EngineCore {
+            kv: KvCache::new(geo, cfg.kv_total_blocks),
+            prefix: PrefixCache::new(cfg.kv_block_tokens),
+            batcher: Batcher::new(cfg.decode_buckets.clone()),
+            router: Router::new(),
+            sampler: Sampler::new(cfg.seed),
+            seqs: HashMap::new(),
+            paused: Vec::new(),
+            clock,
+            wakeup: None,
+            trace: None,
+            inflight_prompts: HashMap::new(),
+            tenant_inflight: HashMap::new(),
+            metrics: EngineMetrics::default(),
+            tokenizer,
+            backend,
+            cfg,
+        })
+    }
+
+    pub fn geometry(&self) -> KvGeometry {
+        self.kv.geometry()
+    }
+
+    /// A handle onto the engine's clock (virtual on the sim paths).
+    pub fn clock(&self) -> Clock {
+        self.clock.clone()
+    }
+
+    /// The compute backend (read-only; lifecycle stays with the core).
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// Start recording [`TraceEvent`]s (drained with
+    /// [`EngineCore::take_trace`]). Available on every backend,
+    /// including the production PJRT engine.
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Drain the recorded trace (empty when tracing is disabled).
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        self.trace.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    /// True between [`EngineCore::enable_trace`] and any future
+    /// disable; surfaced in the stats snapshot.
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    fn push_trace(&mut self, ev: TraceEvent) {
+        if let Some(t) = self.trace.as_mut() {
+            t.push(ev);
+        }
+    }
+
+    /// Accounting snapshot for the simulation-test oracles and the
+    /// stats path.
+    pub fn audit(&self) -> EngineAudit {
+        let mut live: Vec<LiveSeq> = self
+            .seqs
+            .values()
+            .map(|s| LiveSeq {
+                id: s.id,
+                priority: s.priority,
+                paused: s.state == SeqState::Paused,
+            })
+            .collect();
+        live.sort_by_key(|l| l.id);
+        EngineAudit {
+            kv: self.kv.audit(),
+            tree_blocks: self.prefix.tree_block_refs(),
+            live,
+            queued: self.router.queued(),
+        }
+    }
+
+    /// Test-only fault hook: double-free the first KV block of the
+    /// oldest live sequence, exactly the class of bug the refcount
+    /// oracle exists to catch. Returns `false` when nothing is live.
+    #[cfg(test)]
+    pub fn inject_double_free(&mut self) -> bool {
+        let Some(id) = self.audit().live.first().map(|l| l.id) else {
+            return false;
+        };
+        let Some(blocks) = self.kv.seq_blocks(id) else {
+            return false;
+        };
+        let Some(&b) = blocks.first() else {
+            return false;
+        };
+        self.kv.debug_force_decref(b);
+        true
+    }
+
+    pub fn kv_free_blocks(&self) -> usize {
+        self.kv.free_blocks()
+    }
+
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.prefix.cached_blocks()
+    }
+
+    // -----------------------------------------------------------------
+    // Prefill
+    // -----------------------------------------------------------------
+
+    fn step_prefill(&mut self) -> Result<()> {
+        let t0 = self.clock.now();
+        let mut seq = match self.router.pop_next() {
+            Some(s) => s,
+            None => return Ok(()),
+        };
+        let len = seq.prompt.len();
+
+        // Cross-request dedup: if an identical prompt is mid-flight on
+        // a live, still-decoding sequence and the cache cannot yet
+        // serve this prompt's reusable prefix, wait for the holder's
+        // retirement (which registers its blocks) instead of racing it
+        // with duplicate cold prefill compute. A parked holder is not
+        // waited on — it may never retire, and racing beats starving.
+        // The waiter yields its queue slot (back, not front): it is
+        // deferring voluntarily, so same-priority requests with other
+        // prompts must keep admitting ahead of it.
+        if self.cfg.prefix_cache {
+            let holder = self.inflight_prompts.get(&seq.prompt).copied();
+            if let Some(holder) = holder {
+                let holder_running = self
+                    .seqs
+                    .get(&holder)
+                    .map(|s| s.state == SeqState::Decoding)
+                    .unwrap_or(false);
+                let bt = self.cfg.kv_block_tokens;
+                let best = policy::usable_prefix(bt, len, len);
+                let have =
+                    policy::usable_prefix(bt, len, self.prefix.peek_match_tokens(&seq.prompt));
+                if holder_running && have < best {
+                    if !seq.dedup_waited {
+                        seq.dedup_waited = true;
+                        self.metrics.dedup_hits += 1;
+                    }
+                    self.router.enqueue(seq);
+                    return self.step_decode();
+                }
+            }
+        }
+
+        // Prefix lookup + KV admission (shared policy; see
+        // `policy::admit_kv`). Paused sequences count as pending work:
+        // their blocks return when they resume or finish, so admission
+        // must wait for them rather than fail the request.
+        let matched = match policy::admit_kv(
+            &self.cfg,
+            &mut self.kv,
+            &mut self.prefix,
+            &mut self.metrics,
+            self.batcher.is_empty() && self.paused.is_empty(),
+            seq.id,
+            &seq.prompt,
+        ) {
+            Ok(Some(m)) => m,
+            Ok(None) => {
+                // Admission must wait for KV. If nothing is decoding,
+                // the holders are parked on backpressure and decode
+                // will never free blocks — preempt a strictly
+                // lower-priority parked victim so a high-priority
+                // waiter is not starved by a stalled client.
+                if self.batcher.is_empty() {
+                    if let Some(victim) = policy::admission_relief_victim(
+                        &self.kv,
+                        &self.seqs,
+                        &self.paused,
+                        seq.priority,
+                    ) {
+                        self.paused.retain(|&p| p != victim);
+                        let mut vseq = self.seqs.remove(&victim).unwrap();
+                        self.metrics.preemptions += 1;
+                        self.push_trace(TraceEvent::AdmissionRelief {
+                            id: vseq.id,
+                            priority: vseq.priority,
+                            waiter_priority: seq.priority,
+                        });
+                        self.finish_seq(&mut vseq, FinishReason::Preempted)?;
+                    }
+                }
+                self.router.requeue_front(seq);
+                return self.step_decode();
+            }
+            Err(_) => {
+                // Truly stuck: nothing is running and eviction is
+                // exhausted, so this request can never be admitted.
+                // Fail it (surfaced on its stream) instead of wedging
+                // the queue head forever.
+                self.finish_seq(&mut seq, FinishReason::Error)?;
+                return Ok(());
+            }
+        };
+        let cached = matched.tokens;
+        policy::note_admission(&self.cfg, &mut self.metrics, &mut seq, cached);
+        self.push_trace(TraceEvent::Admitted { id: seq.id, cached });
+
+        // Backend compute: write the uncached suffix's KV and return
+        // the logits row of the prompt's last real position. The
+        // sequence already holds admitted KV, so a backend failure must
+        // go through the one finish path — releasing its blocks, quota
+        // slot, and the client's terminal event — before the error
+        // surfaces to the step loop.
+        let run = match self.backend.prefill(&self.cfg, &mut self.kv, &seq, cached, &self.clock)
+        {
+            Ok(run) => run,
+            Err(e) => {
+                self.finish_seq(&mut seq, FinishReason::Error)?;
+                return Err(e);
+            }
+        };
+        let mut exec_dt = run.exec_time;
+        seq.kv_len = len;
+
+        // First generated token. A fresh stream always has credit
+        // (capacity >= 1); a client that already hung up is reaped by
+        // the next step's stream scan.
+        let tok = self.sampler.sample(&run.last_logits, seq.params);
+        seq.generated.push(tok);
+        let now = self.clock.now();
+        seq.first_token_at = Some(now);
+        self.metrics.first_token.record(now.saturating_sub(seq.arrived));
+        let _ = seq.emit_token(tok);
+        self.push_trace(TraceEvent::Token { id: seq.id, token: tok });
+        self.metrics.tokens_generated += 1;
+        self.metrics.requests_admitted += 1;
+
+        let done_eos = tok == EOS;
+        let done_stop = seq.hit_stop();
+        if done_eos || done_stop || seq.max_new_tokens <= 1 {
+            let reason = if done_eos {
+                FinishReason::Eos
+            } else if done_stop {
+                FinishReason::Stop
+            } else {
+                FinishReason::MaxTokens
+            };
+            self.finish_seq(&mut seq, reason)?;
+        } else {
+            seq.state = SeqState::Decoding;
+            let admission = self.batcher.admit(seq.id)?;
+            let join = self.backend.on_batch_join(
+                &mut self.kv,
+                &mut self.metrics,
+                seq.id,
+                admission,
+                run.artifact,
+                &self.clock,
+            );
+            exec_dt += match join {
+                Ok(d) => d,
+                Err(e) => {
+                    // Same cleanup rule as a prefill failure: release
+                    // the lane and the sequence's books, then surface.
+                    self.batcher.remove(seq.id)?;
+                    self.finish_seq(&mut seq, FinishReason::Error)?;
+                    return Err(e);
+                }
+            };
+            // The dedup table is only ever read under prefix_cache, so
+            // don't pay the prompt clone without it.
+            if self.cfg.prefix_cache {
+                self.inflight_prompts.insert(seq.prompt.clone(), seq.id);
+            }
+            self.seqs.insert(seq.id, seq);
+        }
+        self.metrics.prefill_steps += 1;
+        let dt = self.clock.now().saturating_sub(t0);
+        self.metrics.step.record(dt);
+        self.metrics.step_overhead.record(dt.saturating_sub(exec_dt));
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Decode
+    // -----------------------------------------------------------------
+
+    fn step_decode(&mut self) -> Result<()> {
+        let t0 = self.clock.now();
+        // The stream scan may have paused or dropped every running
+        // sequence; there is nothing to decode then.
+        if self.batcher.is_empty() {
+            return Ok(());
+        }
+        // KV headroom via the shared policy: reclaim cached blocks
+        // first, preempt last. The victim pool spans running *and*
+        // backpressure-paused sequences (parked work holds KV too).
+        while policy::reclaim_decode_headroom(
+            &mut self.kv,
+            &mut self.prefix,
+            &mut self.metrics,
+            self.batcher.len(),
+            self.batcher.len() + self.paused.len(),
+        ) {
+            self.preempt_one()?;
+        }
+        if self.batcher.is_empty() {
+            return Ok(()); // preemption may have taken the last runner
+        }
+        let batch = self.batcher.assemble()?;
+        let max_seq = self.kv.geometry().max_seq;
+        let mut inputs = Vec::with_capacity(batch.occupancy());
+        for (lane, slot) in batch.lanes.iter().enumerate() {
+            let Some(id) = slot else { continue };
+            let s = &self.seqs[id];
+            inputs.push(LaneInput {
+                lane,
+                id: *id,
+                token: s.last_token(),
+                pos: s.kv_len,
+            });
+        }
+        let run = self.backend.decode(
+            &self.cfg,
+            &mut self.kv,
+            &self.seqs,
+            &batch,
+            &inputs,
+            &mut self.metrics,
+            &self.clock,
+        )?;
+        if run.offsets.len() != inputs.len() {
+            return Err(Error::Schedule(format!(
+                "backend returned {} logits rows for {} lanes",
+                run.offsets.len(),
+                inputs.len()
+            )));
+        }
+        let mut finished: Vec<(SeqId, FinishReason)> = Vec::new();
+        let mut emitted: Vec<(SeqId, u32)> = Vec::new();
+        for (i, inp) in inputs.iter().enumerate() {
+            let logits = run.row(i);
+            let seq = self.seqs.get_mut(&inp.id).unwrap();
+            seq.kv_len += 1;
+            let new_tok = self.sampler.sample(logits, seq.params);
+            seq.generated.push(new_tok);
+            // Cannot be Full: the pre-decode stream scan guaranteed at
+            // least one credit and this is the step's only token. A
+            // mid-step disconnect is reaped by the next scan.
+            let _ = seq.emit_token(new_tok);
+            emitted.push((inp.id, new_tok));
+            self.metrics.tokens_generated += 1;
+            self.metrics.decode_rows += 1;
+            let done_eos = new_tok == EOS;
+            let done_stop = seq.hit_stop();
+            let done_len =
+                seq.generated.len() >= seq.max_new_tokens || seq.kv_len + 1 >= max_seq;
+            if done_eos || done_stop || done_len {
+                let reason = if done_eos {
+                    FinishReason::Eos
+                } else if done_stop {
+                    FinishReason::Stop
+                } else {
+                    FinishReason::MaxTokens
+                };
+                finished.push((inp.id, reason));
+            }
+        }
+        for (id, token) in emitted {
+            self.push_trace(TraceEvent::Token { id, token });
+        }
+        for (id, reason) in finished {
+            let mut seq = self.seqs.remove(&id).unwrap();
+            self.remove_from_batch(id)?;
+            self.finish_seq(&mut seq, reason)?;
+        }
+        self.metrics.decode_steps += 1;
+        let dt = self.clock.now().saturating_sub(t0);
+        self.metrics.step.record(dt);
+        self.metrics.step_overhead.record(dt.saturating_sub(run.exec_time));
+        let lanes = batch.occupancy().max(1) as u32;
+        self.metrics.per_token.record(dt / lanes);
+        Ok(())
+    }
+
+    /// Remove a sequence from the decode batch, keeping any
+    /// backend-side batch state consistent.
+    fn remove_from_batch(&mut self, id: SeqId) -> Result<()> {
+        let shrank = self.batcher.remove(id)?;
+        self.backend.on_batch_leave(&mut self.kv, id, shrank)
+    }
+
+    /// Preempt one victim under KV pressure: the shared census spans
+    /// running *and* paused sequences (a parked slow client's KV is
+    /// reclaimable like any other), ordered by the scheduler's
+    /// (priority asc, parked first, reusable desc, recency) rule.
+    fn preempt_one(&mut self) -> Result<()> {
+        let mut pool = self.batcher.running_ids();
+        pool.extend(self.paused.iter().copied());
+        let candidates = policy::preempt_candidates(&self.kv, &self.seqs, &pool);
+        let id = preemption_victim(&candidates)
+            .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
+        let mut seq = self.seqs.remove(&id).unwrap();
+        self.metrics.preemptions += 1;
+        self.push_trace(TraceEvent::Preempted {
+            id,
+            priority: seq.priority,
+            pool: candidates.iter().map(|c| (c.id, c.priority)).collect(),
+        });
+        if self.paused.contains(&id) {
+            // Paused sequences hold no lane and no backend batch slot.
+            self.paused.retain(|&p| p != id);
+        } else {
+            self.remove_from_batch(id)?;
+        }
+        self.finish_seq(&mut seq, FinishReason::Preempted)
+    }
+
+    // -----------------------------------------------------------------
+    // Stream flow control
+    // -----------------------------------------------------------------
+
+    /// Apply backpressure at the top of every step. The *decisions*
+    /// (resume order, hysteresis, policy) are the shared
+    /// [`policy::plan_stream_ops`]; this method supplies the mechanics
+    /// for each transition, delegating backend-specific bookkeeping
+    /// (dense KV persistence on the PJRT path) to the batch hooks.
+    /// Running *before* the scheduling decision keeps the scheduler's
+    /// view of the running set accurate, and checking credit before
+    /// decode means a generated token always has a slot — backpressure
+    /// halts generation, it never loses data.
+    fn service_streams(&mut self) -> Result<()> {
+        let free_lanes = self.cfg.max_running.saturating_sub(self.batcher.len());
+        let now = self.clock.now();
+        let ops = policy::plan_stream_ops(
+            &self.seqs,
+            &self.paused,
+            &self.batcher.running_ids(),
+            self.cfg.backpressure,
+            free_lanes,
+            now,
+            self.cfg.stream_idle_timeout(),
+        );
+        for op in ops {
+            match op {
+                StreamOp::Resume(id) => {
+                    let admission = self.batcher.admit(id)?;
+                    self.backend.on_resume(&mut self.kv, &admission)?;
+                    self.paused.retain(|&p| p != id);
+                    let seq = self.seqs.get_mut(&id).unwrap();
+                    seq.state = SeqState::Decoding;
+                    seq.paused_at = None;
+                    self.metrics.backpressure_resumes += 1;
+                    self.push_trace(TraceEvent::Resumed { id });
+                }
+                StreamOp::ReapPaused(id) => {
+                    self.paused.retain(|&p| p != id);
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.metrics.client_disconnects += 1;
+                    self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+                }
+                StreamOp::ReapRunning(id) => {
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.remove_from_batch(id)?;
+                    self.metrics.client_disconnects += 1;
+                    self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+                }
+                StreamOp::Pause(id) => {
+                    // Backend first: the PJRT path persists the parked
+                    // sequence's device-resident KV before the lane is
+                    // released.
+                    self.backend.on_pause(&mut self.kv)?;
+                    self.batcher.remove(id)?;
+                    let seq = self.seqs.get_mut(&id).unwrap();
+                    seq.state = SeqState::Paused;
+                    seq.paused_at = Some(now);
+                    self.paused.push(id);
+                    self.metrics.backpressure_pauses += 1;
+                    self.push_trace(TraceEvent::Paused { id });
+                }
+                StreamOp::DropOverrun(id) => {
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.remove_from_batch(id)?;
+                    self.metrics.backpressure_drops += 1;
+                    self.finish_seq(&mut seq, FinishReason::Overrun)?;
+                }
+                StreamOp::ExpireIdle(id) => {
+                    // A long-parked client: demote to overrun so its KV
+                    // is bounded even with no allocation pressure.
+                    // Paused sequences hold no lane and no batch slot.
+                    self.paused.retain(|&p| p != id);
+                    let mut seq = self.seqs.remove(&id).unwrap();
+                    self.metrics.stream_idle_drops += 1;
+                    self.push_trace(TraceEvent::Expired { id });
+                    self.finish_seq(&mut seq, FinishReason::Overrun)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Register the retired sequence's publishable KV in the prefix
+    /// cache. Which tokens are publishable is the backend's call: the
+    /// sims write synchronously, so prompt *and* generated tokens
+    /// publish; the PJRT path publishes the prompt only (generated KV
+    /// may still be device-resident).
+    fn register_prefix(&mut self, seq: &Sequence) {
+        if !self.cfg.prefix_cache || !self.kv.contains(seq.id) {
+            return;
+        }
+        let Some(blocks) = self.kv.seq_blocks(seq.id) else {
+            return;
+        };
+        let toks = self.backend.publishable_tokens(&self.kv, seq);
+        if toks.is_empty() {
+            return;
+        }
+        self.prefix.insert(&toks, &blocks, &mut self.kv);
+    }
+
+    fn finish_seq(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
+        seq.state = SeqState::Finished(reason);
+        let usage = seq.usage();
+        seq.emit_finish(reason, usage);
+        self.push_trace(TraceEvent::Finished {
+            id: seq.id,
+            reason,
+            usage,
+        });
+        self.metrics.record_finish(&seq.tenant, usage);
+        self.register_prefix(seq);
+        if self.kv.contains(seq.id) {
+            self.kv.free_seq(seq.id)?;
+        }
+        if self.inflight_prompts.get(&seq.prompt) == Some(&seq.id) {
+            self.inflight_prompts.remove(&seq.prompt);
+        }
+        let tenant_drained = match self.tenant_inflight.get_mut(&seq.tenant) {
+            Some(n) => {
+                *n = n.saturating_sub(1);
+                *n == 0
+            }
+            None => false,
+        };
+        if tenant_drained {
+            self.tenant_inflight.remove(&seq.tenant);
+        }
+        self.metrics.requests_finished += 1;
+        Ok(())
+    }
+}
+
+impl<B: Backend> InferenceEngine for EngineCore<B> {
+    /// Queue a typed request; the prompt must fit the backend's limits
+    /// and the KV pool, and the tenant must be under its concurrency
+    /// quota (when one is configured).
+    fn submit(&mut self, req: GenRequest) -> Result<SubmissionHandle> {
+        let prompt_tokens = router::encode_prompt(&self.tokenizer, &req.prompt)?;
+        self.backend.validate_prompt(&self.cfg, prompt_tokens.len())?;
+        let need = (prompt_tokens.len() + 1).div_ceil(self.cfg.kv_block_tokens);
+        if need > self.cfg.kv_total_blocks {
+            return Err(Error::Request(format!(
+                "prompt needs {need} KV blocks, pool has {}",
+                self.cfg.kv_total_blocks
+            )));
+        }
+        let tenant = if req.tenant.is_empty() {
+            "default"
+        } else {
+            req.tenant.as_str()
+        };
+        if self.cfg.tenant_max_inflight > 0 {
+            let inflight = self.tenant_inflight.get(tenant).copied().unwrap_or(0);
+            if inflight >= self.cfg.tenant_max_inflight {
+                self.metrics.quota_rejections += 1;
+                return Err(Error::Quota(format!(
+                    "tenant {tenant:?} already has {inflight} requests in flight \
+                     (limit {})",
+                    self.cfg.tenant_max_inflight
+                )));
+            }
+        }
+        let tenant = tenant.to_string();
+        let handle = router::enqueue_request(
+            &mut self.router,
+            &self.tokenizer,
+            &req,
+            prompt_tokens,
+            &SubmitContext {
+                max_new_cap: self.cfg.max_new_tokens,
+                stream_capacity: self.cfg.stream_capacity,
+                now: self.clock.now(),
+                wakeup: self.wakeup.as_ref(),
+            },
+        )?;
+        *self.tenant_inflight.entry(tenant).or_default() += 1;
+        Ok(handle)
+    }
+
+    fn set_wakeup(&mut self, wakeup: Wakeup) {
+        self.wakeup = Some(wakeup);
+    }
+
+    /// Run one scheduling iteration: let the backend observe the step
+    /// start (sims advance virtual time), service stream flow control,
+    /// then prefill/decode/idle. Returns the action taken.
+    fn step(&mut self) -> Result<Action> {
+        self.backend.on_step_start(&self.clock);
+        self.service_streams()?;
+        let state = policy::plan_admission(
+            &self.cfg,
+            &mut self.kv,
+            &mut self.prefix,
+            &mut self.metrics,
+            self.router.peek_next(),
+            self.router.queued(),
+            self.batcher.len(),
+        );
+        let action = decide(state);
+        match action {
+            Action::Prefill => self.step_prefill()?,
+            Action::Decode => self.step_decode()?,
+            Action::Idle => {}
+        }
+        Ok(action)
+    }
+
+    /// Cancel a queued, running, or paused request; its KV blocks are
+    /// released (publishable tokens may survive in the prefix cache,
+    /// held by the tree alone).
+    fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        if let Some(mut seq) = self.router.take(id) {
+            self.metrics.cancellations += 1;
+            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+            return Ok(true);
+        }
+        if self.paused.contains(&id) {
+            self.paused.retain(|&p| p != id);
+            let mut seq = self.seqs.remove(&id).unwrap();
+            self.metrics.cancellations += 1;
+            // Paused sequences hold no lane and no backend batch slot:
+            // finish directly, no batch bookkeeping.
+            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+            return Ok(true);
+        }
+        if let Some(mut seq) = self.seqs.remove(&id) {
+            self.metrics.cancellations += 1;
+            self.remove_from_batch(id)?;
+            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+
+    /// True when no work remains.
+    fn is_idle(&self) -> bool {
+        self.router.queued() == 0 && self.batcher.is_empty() && self.paused.is_empty()
+    }
+
+    fn queued(&self) -> usize {
+        self.router.queued()
+    }
+
+    fn running(&self) -> usize {
+        self.batcher.len()
+    }
+
+    fn paused(&self) -> usize {
+        self.paused.len()
+    }
+
+    fn queue_depths(&self) -> Vec<(i32, usize)> {
+        self.router.depths_by_priority()
+    }
+
+    /// The `{"stats": true}` snapshot: cumulative metrics, gauges, and
+    /// — on every backend, real engine included — the audit verdict the
+    /// simulation oracles check (`kv_refcount_ok`, `blocks_leaked`) and
+    /// whether tracing is armed, so production debugging sees what
+    /// simtest sees.
+    fn stats_json(&self) -> Json {
+        let mut j = self.metrics.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("queued".to_string(), Json::Num(self.queued() as f64));
+            map.insert("running".to_string(), Json::Num(self.running() as f64));
+            map.insert("paused".to_string(), Json::Num(self.paused() as f64));
+            let depths = self
+                .queue_depths()
+                .into_iter()
+                .map(|(p, n)| (p.to_string(), Json::Num(n as f64)))
+                .collect();
+            map.insert("queue_depths".to_string(), Json::Obj(depths));
+            let summary = audit_block_accounting(&self.audit());
+            map.insert(
+                "kv_refcount_ok".to_string(),
+                Json::Bool(summary.refcount_ok),
+            );
+            map.insert(
+                "blocks_leaked".to_string(),
+                Json::Num(summary.blocks_leaked as f64),
+            );
+            map.insert(
+                "trace_enabled".to_string(),
+                Json::Bool(self.trace_enabled()),
+            );
+        }
+        j
+    }
+
+    fn encode(&self, text: &str) -> Vec<u32> {
+        self.tokenizer.encode(text)
+    }
+
+    fn decode(&self, tokens: &[u32]) -> String {
+        self.tokenizer.decode(tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conservation_check_and_summary_agree() {
+        // Consistent audit: one allocated block, one free.
+        let audit = EngineAudit {
+            kv: KvAudit {
+                total_blocks: 2,
+                free_list: vec![1],
+                refcounts: vec![1, 0],
+                seq_blocks: vec![(1, vec![0])],
+            },
+            tree_blocks: vec![],
+            live: vec![],
+            queued: 0,
+        };
+        assert!(check_kv_conservation(&audit).is_ok());
+        let s = audit_block_accounting(&audit);
+        assert!(s.refcount_ok);
+        assert_eq!(s.blocks_leaked, 0);
+
+        // A leak: refcount without a visible owner.
+        let audit = EngineAudit {
+            kv: KvAudit {
+                total_blocks: 2,
+                free_list: vec![1],
+                refcounts: vec![1, 0],
+                seq_blocks: vec![],
+            },
+            tree_blocks: vec![],
+            live: vec![],
+            queued: 0,
+        };
+        assert!(check_kv_conservation(&audit).is_err());
+        let s = audit_block_accounting(&audit);
+        assert!(!s.refcount_ok);
+        assert_eq!(s.blocks_leaked, 1);
+    }
+}

@@ -1,0 +1,189 @@
+//! A deterministic no-PJRT compute stub for differential testing of
+//! the serving core.
+//!
+//! [`StubBackend`] serves the *same* hash model as
+//! [`crate::simengine::SimBackend`] — identical K/V values, identical
+//! logits — through deliberately different mechanics:
+//!
+//! - **Prefill** materializes the uncached prompt suffix token by token
+//!   (`grow_one` + `write_token`) instead of the sim's bulk
+//!   `write_prefill_range`, exercising the incremental allocation and
+//!   copy-on-write path during admission.
+//! - **Logits** are recomputed analytically from the sequence's token
+//!   history instead of being digested from the paged store's bytes.
+//!   The values agree exactly *iff* the paged store faithfully holds
+//!   what was written, so a lockstep run against the sim backend is a
+//!   real differential: any store corruption, mis-sized write, or
+//!   read-path bug makes the two engines' token streams — and therefore
+//!   their [`crate::core::TraceEvent`] fingerprints — diverge.
+//!
+//! `tests/differential_backends.rs` drives the same seeded scenarios
+//! through `EngineCore<SimBackend>` and `EngineCore<StubBackend>` and
+//! asserts byte-identical scenario reports.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::batching::DecodeBatch;
+use crate::config::EngineConfig;
+use crate::core::{Backend, DecodeRun, EngineCore, LaneInput, PrefillRun};
+use crate::error::{Error, Result};
+use crate::kvcache::{KvCache, KvGeometry, SeqId};
+use crate::metrics::EngineMetrics;
+use crate::router::Sequence;
+use crate::simengine::{
+    hash_f32, mix, sim_publishable_tokens, sim_token_cols, LOGITS_DIGEST_SEED, SIM_STEP, SimSpec,
+};
+use crate::util::clock::Clock;
+
+/// Logits from first principles: fold the hash-model K/V values for
+/// `tokens[pos]` at each position — the exact bytes the sim backend
+/// reads back out of the paged store — then mix in the current input
+/// token. Bit-for-bit equal to the sim's cache digest when the store
+/// is healthy.
+fn logits_analytic(geo: &KvGeometry, vocab: usize, tokens: &[u32], cur_tok: u32) -> Vec<f32> {
+    let mut digest: u64 = LOGITS_DIGEST_SEED;
+    for (pos, &tok) in tokens.iter().enumerate() {
+        let (kc, vc) = sim_token_cols(geo, tok, pos);
+        for f in kc.iter().chain(vc.iter()) {
+            digest = mix(digest ^ f.to_bits() as u64);
+        }
+    }
+    digest = mix(digest ^ ((cur_tok as u64) << 32));
+    (0..vocab).map(|c| hash_f32(digest ^ c as u64)).collect()
+}
+
+/// The stub compute backend (see module docs).
+pub struct StubBackend {
+    spec: SimSpec,
+}
+
+impl StubBackend {
+    pub fn new(spec: SimSpec) -> Self {
+        StubBackend { spec }
+    }
+}
+
+impl Backend for StubBackend {
+    type PrefillArtifact = ();
+
+    fn geometry(&self, cfg: &EngineConfig) -> KvGeometry {
+        KvGeometry {
+            n_layers: self.spec.n_layers,
+            n_heads: self.spec.n_heads,
+            head_dim: self.spec.head_dim,
+            block_tokens: cfg.kv_block_tokens,
+            max_seq: self.spec.max_seq,
+        }
+    }
+
+    fn vocab(&self) -> usize {
+        self.spec.vocab
+    }
+
+    fn validate_prompt(&self, _cfg: &EngineConfig, prompt_len: usize) -> Result<()> {
+        if prompt_len + 1 > self.spec.max_seq {
+            return Err(Error::Request(format!(
+                "prompt of {prompt_len} tokens exceeds stub max_seq {}",
+                self.spec.max_seq
+            )));
+        }
+        Ok(())
+    }
+
+    /// Same virtual-time quantum as the sim backend, so timeout and
+    /// latency decisions line up step for step in lockstep runs.
+    fn on_step_start(&mut self, clock: &Clock) {
+        clock.advance(SIM_STEP);
+    }
+
+    /// Token-by-token materialization of the uncached suffix. The
+    /// matched prefix is block-aligned and the fresh blocks were
+    /// allocated at admission, so each `grow_one` lands in an owned
+    /// block and the final stored length equals the prompt length —
+    /// the same post-state the sim's bulk range write produces.
+    fn prefill(
+        &mut self,
+        _cfg: &EngineConfig,
+        kv: &mut KvCache,
+        seq: &Sequence,
+        matched_tokens: usize,
+        _clock: &Clock,
+    ) -> Result<PrefillRun<()>> {
+        let geo = kv.geometry();
+        for (t, &tok) in seq.prompt.iter().enumerate().skip(matched_tokens) {
+            kv.grow_one(seq.id)?;
+            let (kc, vc) = sim_token_cols(&geo, tok, t);
+            kv.write_token(seq.id, t, &kc, &vc)?;
+        }
+        let last = *seq.prompt.last().unwrap();
+        let logits = logits_analytic(&geo, self.spec.vocab, &seq.prompt, last);
+        Ok(PrefillRun {
+            last_logits: logits,
+            exec_time: Duration::ZERO,
+            artifact: (),
+        })
+    }
+
+    /// Same KV mechanics as the sim (grow + write, preserving COW
+    /// behavior and block accounting); only the logits source differs.
+    #[allow(clippy::too_many_arguments)]
+    fn decode(
+        &mut self,
+        _cfg: &EngineConfig,
+        kv: &mut KvCache,
+        seqs: &HashMap<SeqId, Sequence>,
+        _batch: &DecodeBatch,
+        inputs: &[LaneInput],
+        _metrics: &mut EngineMetrics,
+        _clock: &Clock,
+    ) -> Result<DecodeRun> {
+        let geo = kv.geometry();
+        let mut logits = Vec::with_capacity(inputs.len() * self.spec.vocab);
+        let mut offsets = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            kv.grow_one(inp.id)?;
+            let (kc, vc) = sim_token_cols(&geo, inp.token, inp.pos);
+            kv.write_token(inp.id, inp.pos, &kc, &vc)?;
+            let seq = seqs
+                .get(&inp.id)
+                .ok_or_else(|| Error::Schedule(format!("unknown decoding seq {}", inp.id)))?;
+            let stored = kv
+                .seq_len(inp.id)
+                .ok_or_else(|| Error::KvCache(format!("unknown seq {}", inp.id)))?;
+            let tokens: Vec<u32> = seq
+                .prompt
+                .iter()
+                .chain(seq.generated.iter())
+                .copied()
+                .take(stored)
+                .collect();
+            offsets.push(logits.len());
+            logits.extend(logits_analytic(&geo, self.spec.vocab, &tokens, inp.token));
+        }
+        Ok(DecodeRun {
+            logits,
+            offsets,
+            row_len: self.spec.vocab,
+            exec_time: Duration::ZERO,
+        })
+    }
+
+    /// Identical publication rule to the sim backend (one shared
+    /// definition): the prefix-cache contents must match for lockstep
+    /// traces to stay equal.
+    fn publishable_tokens(&self, kv: &KvCache, seq: &Sequence) -> Vec<u32> {
+        sim_publishable_tokens(kv, seq)
+    }
+}
+
+/// The differential-testing engine: the shared serving core over the
+/// stub backend.
+pub type StubEngine = EngineCore<StubBackend>;
+
+impl EngineCore<StubBackend> {
+    /// Build a stub engine on a fresh virtual clock.
+    pub fn new(cfg: EngineConfig, spec: SimSpec) -> Result<Self> {
+        EngineCore::with_backend(StubBackend::new(spec), cfg, Clock::manual())
+    }
+}

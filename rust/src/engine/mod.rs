@@ -1,16 +1,16 @@
-//! The serving engine: single-owner hot loop tying together the PJRT
-//! runtime, paged KV cache, continuous batcher, scheduler and sampler.
+//! The PJRT compute backend behind the production serving engine.
 //!
-//! Per iteration: the scheduler picks prefill-vs-decode; prefill runs a
-//! single sequence through a bucketed prefill executable and admits it
-//! into the running set; decode assembles the bucketed batch, executes
-//! one step for every running sequence, samples, streams tokens, and
-//! retires finished sequences.
+//! [`Engine`] is [`crate::core::EngineCore`] over [`PjrtBackend`]: the
+//! entire serving loop — scheduling, admission, flow control,
+//! preemption, tracing, audit — lives in the shared core, and this
+//! module supplies only what is PJRT-specific: executing the compiled
+//! prefill/decode artifacts, and keeping the device-resident dense KV
+//! tensors consistent with the batch composition.
 //!
-//! The public surface is [`crate::api::InferenceEngine`] — typed
-//! [`GenRequest`] in, [`GenEvent`] stream out — and the admission /
-//! eviction / preemption logic is the shared [`crate::policy`] module,
-//! both of which [`crate::simengine::SimEngine`] mirrors exactly.
+//! Because the orchestration is the shared core, the real engine now
+//! exposes the same `enable_trace` / `take_trace` / `audit()` surface
+//! as the deterministic sim twin — production debugging sees exactly
+//! what the simulation-test oracles see.
 //!
 //! KV residency (perf pass, EXPERIMENTS.md §Perf): the dense KV tensors
 //! persist on device across decode steps. Lanes are sticky, so a newly
@@ -19,20 +19,16 @@
 //! growth/shrink forces a host-side rebuild through the paged store.
 
 use std::collections::HashMap;
+use std::time::Duration;
 
-use crate::api::{FinishReason, GenRequest, InferenceEngine, RequestId, SubmissionHandle, Wakeup};
-use crate::batching::{pick_prefill_bucket, Batcher};
+use crate::batching::{pick_prefill_bucket, Admission, DecodeBatch};
 use crate::config::EngineConfig;
+use crate::core::{Backend, DecodeRun, EngineCore, LaneInput, PrefillRun};
 use crate::error::{Error, Result};
 use crate::kvcache::{KvCache, KvGeometry, SeqId};
 use crate::metrics::EngineMetrics;
-use crate::policy::{self, StreamOp};
-use crate::prefixcache::PrefixCache;
-use crate::router::{self, Router, SeqState, Sequence, SubmitContext};
+use crate::router::Sequence;
 use crate::runtime::{literal_f32, literal_i32, to_vec_f32, Manifest, Runtime};
-use crate::sampling::Sampler;
-use crate::scheduler::{decide, preemption_victim, Action};
-use crate::tokenizer::{ByteTokenizer, EOS};
 use crate::util::clock::Clock;
 
 /// Device-resident dense KV state for the current batch composition.
@@ -44,298 +40,234 @@ struct DenseState {
     v: xla::Literal,
 }
 
-/// The engine. Owns all sequence state; not Send — run it on a
-/// dedicated thread and talk to it via [`crate::server::EngineJob`]
-/// channels.
-pub struct Engine {
+/// The PJRT compute backend: compiled artifacts in, logits out, with a
+/// device-resident dense KV cache synchronized against the paged store
+/// through the core's batch-membership hooks.
+pub struct PjrtBackend {
     pub rt: Runtime,
-    pub cfg: EngineConfig,
-    kv: KvCache,
-    prefix: PrefixCache,
-    batcher: Batcher,
-    router: Router,
-    sampler: Sampler,
-    seqs: HashMap<SeqId, Sequence>,
-    /// Sequences parked by stream backpressure: they stay in `seqs`
-    /// (state `Paused`) and keep their KV in the paged store, but hold
-    /// no decode lane (their device-resident KV is persisted on pause).
-    paused: Vec<SeqId>,
     dense: Option<DenseState>,
-    /// Engine time source (system clock in production; everything on
-    /// the request path reads time through it, never `Instant::now()`).
-    clock: Clock,
-    /// Engine-loop wakeup each new stream notifies on client drains.
-    wakeup: Option<Wakeup>,
-    pub metrics: EngineMetrics,
-    pub tokenizer: ByteTokenizer,
     vocab: usize,
 }
 
-impl Engine {
-    pub fn new(rt: Runtime, cfg: EngineConfig) -> Result<Self> {
-        cfg.validate()?;
-        let m = &rt.manifest.model;
-        let geo = KvGeometry {
+impl PjrtBackend {
+    pub fn new(rt: Runtime) -> Self {
+        let vocab = rt.manifest.model.vocab_size;
+        PjrtBackend {
+            rt,
+            dense: None,
+            vocab,
+        }
+    }
+
+    /// Persist the device cache into the paged store and drop it.
+    fn invalidate_dense(&mut self, kv: &mut KvCache) -> Result<()> {
+        if let Some(prev) = self.dense.take() {
+            // Only still-allocated lanes are written back.
+            let lanes: Vec<Option<SeqId>> = prev
+                .lanes
+                .iter()
+                .map(|slot| slot.filter(|id| kv.contains(*id)))
+                .collect();
+            if lanes.iter().any(Option::is_some) {
+                let k_host = to_vec_f32(&prev.k)?;
+                let v_host = to_vec_f32(&prev.v)?;
+                kv.scatter_dense(&lanes, prev.bucket, &k_host, &v_host)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild the dense device KV from the paged store for a new batch
+    /// composition, first persisting the previous composition's state.
+    fn rebuild_dense(
+        &mut self,
+        kv: &mut KvCache,
+        lanes: &[Option<SeqId>],
+        bucket: usize,
+    ) -> Result<()> {
+        self.invalidate_dense(kv)?;
+        let geo = kv.geometry();
+        let n = geo.dense_elems(bucket);
+        let mut k_host = vec![0.0f32; n];
+        let mut v_host = vec![0.0f32; n];
+        kv.gather_dense(lanes, bucket, &mut k_host, &mut v_host)?;
+        let shape = [geo.n_layers, bucket, geo.n_heads, geo.max_seq, geo.head_dim];
+        self.dense = Some(DenseState {
+            bucket,
+            lanes: lanes.to_vec(),
+            k: literal_f32(&k_host, &shape)?,
+            v: literal_f32(&v_host, &shape)?,
+        });
+        Ok(())
+    }
+}
+
+impl Backend for PjrtBackend {
+    /// Device K/V literals from prefill plus the prefill bucket, carried
+    /// to the sticky-lane splice when the sequence joins the batch.
+    type PrefillArtifact = (xla::Literal, xla::Literal, usize);
+
+    fn geometry(&self, cfg: &EngineConfig) -> KvGeometry {
+        let m = &self.rt.manifest.model;
+        KvGeometry {
             n_layers: m.n_layers,
             n_heads: m.n_heads,
             head_dim: m.head_dim,
             block_tokens: cfg.kv_block_tokens,
             max_seq: m.max_seq,
-        };
-        let kv = KvCache::new(geo, cfg.kv_total_blocks);
-        let tokenizer = ByteTokenizer::new(m.vocab_size);
-        let vocab = m.vocab_size;
-        Ok(Engine {
-            prefix: PrefixCache::new(cfg.kv_block_tokens),
-            batcher: Batcher::new(cfg.decode_buckets.clone()),
-            sampler: Sampler::new(cfg.seed),
-            router: Router::new(),
-            seqs: HashMap::new(),
-            paused: Vec::new(),
-            dense: None,
-            clock: Clock::system(),
-            wakeup: None,
-            metrics: EngineMetrics::default(),
-            kv,
-            rt,
-            cfg,
-            tokenizer,
-            vocab,
-        })
+        }
     }
 
-    /// Pre-compile the executables the serving loop will need (moves the
-    /// compile cost out of the first request's latency).
-    pub fn warmup(&mut self) -> Result<()> {
-        for &b in &self.cfg.decode_buckets.clone() {
-            self.rt
-                .ensure_compiled(&Manifest::decode_entry_name(b, !self.cfg.async_softmax))?;
-        }
-        for &s in &self.cfg.prefill_buckets.clone() {
-            self.rt.ensure_compiled(&Manifest::prefill_entry_name(s))?;
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// The prompt must fit the largest compiled prefill bucket.
+    fn validate_prompt(&self, cfg: &EngineConfig, prompt_len: usize) -> Result<()> {
+        let max_prefill = *cfg.prefill_buckets.last().unwrap();
+        if prompt_len > max_prefill {
+            return Err(Error::Request(format!(
+                "prompt of {prompt_len} tokens exceeds the largest prefill bucket {max_prefill}"
+            )));
         }
         Ok(())
     }
 
-    // -----------------------------------------------------------------
-    // Prefill
-    // -----------------------------------------------------------------
-
-    fn step_prefill(&mut self) -> Result<()> {
-        let t0 = self.clock.now();
-        let mut seq = match self.router.pop_next() {
-            Some(s) => s,
-            None => return Ok(()),
-        };
+    /// Run the bucketed prefill executable and persist KV to the paged
+    /// backing store (needed for rebuilds and preemption; off the
+    /// per-decode-step path). Positions covered by the attached prefix
+    /// are already resident and shared — only the uncached suffix is
+    /// written. (The fixed-shape prefill artifact still runs over the
+    /// whole padded prompt — compute skipping needs suffix-shaped
+    /// artifacts — but the matched blocks are shared, not re-allocated.)
+    fn prefill(
+        &mut self,
+        cfg: &EngineConfig,
+        kv: &mut KvCache,
+        seq: &Sequence,
+        matched_tokens: usize,
+        clock: &Clock,
+    ) -> Result<PrefillRun<Self::PrefillArtifact>> {
         let len = seq.prompt.len();
-        let bucket = match pick_prefill_bucket(&self.cfg.prefill_buckets, len) {
-            Some(b) => b,
-            None => {
-                seq.emit_finish(FinishReason::Error, seq.usage());
-                return Err(Error::Request(format!("prompt {len} exceeds prefill buckets")));
-            }
-        };
-        // Prefix-cache lookup + KV admission (+1 for the first generated
-        // token). (The fixed-shape prefill artifact still runs over the
-        // whole padded prompt — compute skipping needs suffix-shaped
-        // artifacts — but the matched blocks are shared, not
-        // re-allocated, and the accounting below drives the cache-aware
-        // scheduler.)
-        // Paused sequences count as pending work: their blocks return
-        // when they resume or finish, so admission must wait for them
-        // rather than fail the request.
-        let matched = match policy::admit_kv(
-            &self.cfg,
-            &mut self.kv,
-            &mut self.prefix,
-            &mut self.metrics,
-            self.batcher.is_empty() && self.paused.is_empty(),
-            seq.id,
-            &seq.prompt,
-        ) {
-            Ok(Some(m)) => m,
-            Ok(None) => {
-                // No room yet: requeue and let decode drain blocks. If
-                // nothing is decoding, the holders are parked on
-                // backpressure and decode will never free blocks —
-                // preempt a strictly lower-priority parked victim so a
-                // high-priority waiter is not starved by a stalled
-                // client.
-                if self.batcher.is_empty() {
-                    if let Some(victim) = policy::admission_relief_victim(
-                        &self.kv,
-                        &self.seqs,
-                        &self.paused,
-                        seq.priority,
-                    ) {
-                        self.paused.retain(|&p| p != victim);
-                        let mut vseq = self.seqs.remove(&victim).unwrap();
-                        self.metrics.preemptions += 1;
-                        self.finish_seq(&mut vseq, FinishReason::Preempted)?;
-                    }
-                }
-                self.router.requeue_front(seq);
-                return self.step_decode();
-            }
-            Err(_) => {
-                // Truly stuck: nothing is running and eviction is
-                // exhausted, so this request can never be admitted.
-                // Fail it (surfaced on its stream) instead of wedging
-                // the queue head forever.
-                self.finish_seq(&mut seq, FinishReason::Error)?;
-                return Ok(());
-            }
-        };
-        policy::note_admission(&self.cfg, &mut self.metrics, &mut seq, matched.tokens);
-
+        // Unreachable for requests that passed submit validation
+        // (validate_prompt caps at the largest bucket); on a miss the
+        // returned error makes the core fail the request through its
+        // finish path — backends never emit stream events themselves.
+        let bucket = pick_prefill_bucket(&cfg.prefill_buckets, len)
+            .ok_or_else(|| Error::Request(format!("prompt {len} exceeds prefill buckets")))?;
         // Pad prompt to the bucket.
         let mut toks: Vec<i32> = seq.prompt.iter().map(|&t| t as i32).collect();
         toks.resize(bucket, 0);
         let tokens_lit = literal_i32(&toks, &[1, bucket])?;
         let entry = Manifest::prefill_entry_name(bucket);
-        let exec_t0 = self.clock.now();
+        let exec_t0 = clock.now();
         let outs = self.rt.execute(&entry, &[&tokens_lit])?;
-        let mut exec_dt = self.clock.now().saturating_sub(exec_t0);
+        let exec_time = clock.now().saturating_sub(exec_t0);
         let [logits, k, v]: [xla::Literal; 3] = outs
             .try_into()
             .map_err(|_| Error::Artifact("prefill must return 3 outputs".into()))?;
 
-        // Persist KV to the paged backing store (needed for rebuilds and
-        // preemption; off the per-decode-step path). Positions covered
-        // by the attached prefix are already resident and shared — only
-        // the uncached suffix is written.
         let k_host = to_vec_f32(&k)?;
         let v_host = to_vec_f32(&v)?;
-        self.kv
-            .write_prefill_range(seq.id, &k_host, &v_host, bucket, matched.tokens, len)?;
-        seq.kv_len = len;
+        kv.write_prefill_range(seq.id, &k_host, &v_host, bucket, matched_tokens, len)?;
 
-        // First token from the logits row of the last real position.
+        // The logits row of the last real position seeds the first
+        // generated token.
         let logits_host = to_vec_f32(&logits)?;
-        let row = &logits_host[(len - 1) * self.vocab..len * self.vocab];
-        let tok = self.sampler.sample(row, seq.params);
-        seq.generated.push(tok);
-        let now = self.clock.now();
-        seq.first_token_at = Some(now);
-        self.metrics.first_token.record(now.saturating_sub(seq.arrived));
-        // A fresh stream always has credit (capacity >= 1); a client
-        // that already hung up is reaped by the next step's stream scan.
-        let _ = seq.emit_token(tok);
-        self.metrics.tokens_generated += 1;
-        self.metrics.requests_admitted += 1;
-
-        let done_eos = self.tokenizer.is_eos(tok);
-        let done_stop = seq.hit_stop();
-        if done_eos || done_stop || seq.max_new_tokens <= 1 {
-            let reason = if done_eos {
-                FinishReason::Eos
-            } else if done_stop {
-                FinishReason::Stop
-            } else {
-                FinishReason::MaxTokens
-            };
-            self.finish_seq(&mut seq, reason)?;
-        } else {
-            seq.state = SeqState::Decoding;
-            let admission = self.batcher.admit(seq.id)?;
-            if admission.bucket_grew {
-                // Bucket changed: the dense tensor shape no longer fits.
-                // Persist and drop; the next decode step rebuilds.
-                self.invalidate_dense()?;
-            } else if let Some(mut dense) = self.dense.take() {
-                // Fast path: splice this sequence's KV into the running
-                // dense cache on device (no host round trip).
-                let ins_entry = format!("insert_b{}_s{}", dense.bucket, bucket);
-                let lane_lit = literal_i32(&[admission.lane as i32], &[1])?;
-                let ins_t0 = self.clock.now();
-                let mut outs = self
-                    .rt
-                    .execute(&ins_entry, &[&dense.k, &dense.v, &k, &v, &lane_lit])?;
-                exec_dt += self.clock.now().saturating_sub(ins_t0);
-                if outs.len() != 2 {
-                    return Err(Error::Artifact(format!(
-                        "{ins_entry}: expected 2 outputs, got {}",
-                        outs.len()
-                    )));
-                }
-                dense.v = outs.pop().unwrap();
-                dense.k = outs.pop().unwrap();
-                dense.lanes[admission.lane] = Some(seq.id);
-                self.dense = Some(dense);
-                self.metrics.kv_inserts += 1;
-            }
-            self.seqs.insert(seq.id, seq);
-        }
-        self.metrics.prefill_steps += 1;
-        let dt = self.clock.now().saturating_sub(t0);
-        self.metrics.step.record(dt);
-        self.metrics.step_overhead.record(dt.saturating_sub(exec_dt));
-        Ok(())
+        let last_logits = logits_host[(len - 1) * self.vocab..len * self.vocab].to_vec();
+        Ok(PrefillRun {
+            last_logits,
+            exec_time,
+            artifact: (k, v, bucket),
+        })
     }
 
-    // -----------------------------------------------------------------
-    // Decode
-    // -----------------------------------------------------------------
+    /// Fast path: splice the new sequence's KV into the running dense
+    /// cache on device (no host round trip). Bucket growth invalidates
+    /// the dense state instead; the next decode step rebuilds it.
+    fn on_batch_join(
+        &mut self,
+        kv: &mut KvCache,
+        metrics: &mut EngineMetrics,
+        id: SeqId,
+        admission: Admission,
+        artifact: Self::PrefillArtifact,
+        clock: &Clock,
+    ) -> Result<Duration> {
+        let (k, v, bucket) = artifact;
+        if admission.bucket_grew {
+            // Bucket changed: the dense tensor shape no longer fits.
+            // Persist and drop; the next decode step rebuilds.
+            self.invalidate_dense(kv)?;
+            return Ok(Duration::ZERO);
+        }
+        if let Some(mut dense) = self.dense.take() {
+            let ins_entry = format!("insert_b{}_s{}", dense.bucket, bucket);
+            let lane_lit = literal_i32(&[admission.lane as i32], &[1])?;
+            let ins_t0 = clock.now();
+            let mut outs = self
+                .rt
+                .execute(&ins_entry, &[&dense.k, &dense.v, &k, &v, &lane_lit])?;
+            let ins_dt = clock.now().saturating_sub(ins_t0);
+            if outs.len() != 2 {
+                return Err(Error::Artifact(format!(
+                    "{ins_entry}: expected 2 outputs, got {}",
+                    outs.len()
+                )));
+            }
+            dense.v = outs.pop().unwrap();
+            dense.k = outs.pop().unwrap();
+            dense.lanes[admission.lane] = Some(id);
+            self.dense = Some(dense);
+            metrics.kv_inserts += 1;
+            return Ok(ins_dt);
+        }
+        Ok(Duration::ZERO)
+    }
 
-    fn step_decode(&mut self) -> Result<()> {
-        let t0 = self.clock.now();
-        // The stream scan may have paused or dropped every running
-        // sequence; there is nothing to decode then.
-        if self.batcher.is_empty() {
-            return Ok(());
-        }
-        // KV headroom: each running sequence may need one fresh block.
-        // The shared policy reclaims cached prefix blocks first;
-        // preemption is the last resort, drawing victims from running
-        // *and* backpressure-paused sequences (parked work holds KV
-        // too).
-        while policy::reclaim_decode_headroom(
-            &mut self.kv,
-            &mut self.prefix,
-            &mut self.metrics,
-            self.batcher.len(),
-            self.batcher.len() + self.paused.len(),
-        ) {
-            self.preempt_one()?;
-        }
-        if self.batcher.is_empty() {
-            return Ok(()); // preemption may have taken the last runner
-        }
-        let batch = self.batcher.assemble()?;
+    /// One bucketed decode step: rebuild the dense cache if the batch
+    /// composition changed, execute, adopt the updated device caches,
+    /// and grow each occupied lane's paged bookkeeping by one token.
+    #[allow(clippy::too_many_arguments)]
+    fn decode(
+        &mut self,
+        cfg: &EngineConfig,
+        kv: &mut KvCache,
+        _seqs: &HashMap<SeqId, Sequence>,
+        batch: &DecodeBatch,
+        inputs: &[LaneInput],
+        metrics: &mut EngineMetrics,
+        clock: &Clock,
+    ) -> Result<DecodeRun> {
         let bucket = batch.bucket;
-        let geo = self.kv.geometry();
-
         let stale = match &self.dense {
             None => true,
             Some(d) => d.bucket != bucket || d.lanes != batch.lanes,
         };
         if stale {
-            self.rebuild_dense(&batch.lanes, bucket)?;
-            self.metrics.kv_rebuilds += 1;
+            self.rebuild_dense(kv, &batch.lanes, bucket)?;
+            metrics.kv_rebuilds += 1;
         }
 
         // Assemble token/pos lanes (holes: token 0, pos 0).
         let mut toks = vec![0i32; bucket];
         let mut pos = vec![0i32; bucket];
-        for (i, slot) in batch.lanes.iter().enumerate() {
-            if let Some(id) = slot {
-                let s = &self.seqs[id];
-                toks[i] = s.last_token() as i32;
-                pos[i] = s.kv_len as i32;
-            }
+        for inp in inputs {
+            toks[inp.lane] = inp.token as i32;
+            pos[inp.lane] = inp.pos as i32;
         }
         let toks_lit = literal_i32(&toks, &[bucket])?;
         let pos_lit = literal_i32(&pos, &[bucket])?;
 
-        let entry = Manifest::decode_entry_name(bucket, !self.cfg.async_softmax);
-        let exec_t0 = self.clock.now();
+        let entry = Manifest::decode_entry_name(bucket, !cfg.async_softmax);
+        let exec_t0 = clock.now();
         let outs = {
             let d = self.dense.take().expect("dense state after rebuild");
             let r = self.rt.execute(&entry, &[&toks_lit, &pos_lit, &d.k, &d.v]);
             self.dense = Some(d);
             r?
         };
-        let exec_dt = self.clock.now().saturating_sub(exec_t0);
+        let exec_time = clock.now().saturating_sub(exec_t0);
         let mut outs = outs;
         if outs.len() != 4 {
             return Err(Error::Artifact(format!(
@@ -358,358 +290,90 @@ impl Engine {
 
         let logits_host = to_vec_f32(&logits)?;
         let flags_host = to_vec_f32(&flags)?;
-        let mut finished: Vec<(SeqId, FinishReason)> = Vec::new();
-        for (i, slot) in batch.lanes.iter().enumerate() {
-            let Some(id) = slot else { continue };
-            let seq = self.seqs.get_mut(id).unwrap();
-            let row = &logits_host[i * self.vocab..(i + 1) * self.vocab];
-            let tok = self.sampler.sample(row, seq.params);
-            self.kv.grow_one(*id)?;
-            seq.kv_len += 1;
-            seq.generated.push(tok);
-            // Cannot be Full: the pre-decode stream scan guaranteed at
-            // least one credit and this is the step's only token. A
-            // mid-step disconnect is reaped by the next scan.
-            let _ = seq.emit_token(tok);
-            self.metrics.tokens_generated += 1;
-            self.metrics.decode_rows += 1;
-            if flags_host[i] > 0.5 {
-                self.metrics.recompute_rows += 1;
-            }
-            let done_eos = tok == EOS;
-            let done_stop = seq.hit_stop();
-            let done_len =
-                seq.generated.len() >= seq.max_new_tokens || seq.kv_len + 1 >= geo.max_seq;
-            if done_eos || done_stop || done_len {
-                let reason = if done_eos {
-                    FinishReason::Eos
-                } else if done_stop {
-                    FinishReason::Stop
-                } else {
-                    FinishReason::MaxTokens
-                };
-                finished.push((*id, reason));
+        let mut offsets = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            kv.grow_one(inp.id)?;
+            offsets.push(inp.lane * self.vocab);
+            if flags_host[inp.lane] > 0.5 {
+                metrics.recompute_rows += 1;
             }
         }
-        // Retire finished sequences (their lanes become holes; the dense
-        // tensor stays valid — holes are masked by pos/kv_len).
-        for (id, reason) in finished {
-            let mut seq = self.seqs.remove(&id).unwrap();
-            self.retire(&mut seq, reason)?;
-        }
-        self.metrics.decode_steps += 1;
-        let dt = self.clock.now().saturating_sub(t0);
-        self.metrics.step.record(dt);
-        self.metrics.step_overhead.record(dt.saturating_sub(exec_dt));
-        let lanes = batch.occupancy().max(1) as u32;
-        self.metrics.per_token.record(dt / lanes);
-        Ok(())
+        // The host logits tensor is handed over whole: each lane's row
+        // is a view, no per-lane copy on the decode hot path.
+        Ok(DecodeRun {
+            logits: logits_host,
+            offsets,
+            row_len: self.vocab,
+            exec_time,
+        })
     }
 
-    /// Remove a sequence from the running set, keeping the dense state
-    /// consistent (hole without shrink; invalidate on shrink).
-    fn retire(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
-        let shrank = self.batcher.remove(seq.id)?;
+    /// A retired lane becomes a hole (dense tensor stays valid — holes
+    /// are masked by pos/kv_len); a bucket shrink invalidates.
+    fn on_batch_leave(&mut self, kv: &mut KvCache, id: SeqId, shrank: bool) -> Result<()> {
         if shrank {
-            self.invalidate_dense()?;
-        } else if let Some(d) = self.dense.as_mut() {
+            return self.invalidate_dense(kv);
+        }
+        if let Some(d) = self.dense.as_mut() {
             for slot in d.lanes.iter_mut() {
-                if *slot == Some(seq.id) {
+                if *slot == Some(id) {
                     *slot = None;
                 }
             }
         }
-        self.finish_seq(seq, reason)
-    }
-
-    /// Persist the device cache into the paged store and drop it.
-    fn invalidate_dense(&mut self) -> Result<()> {
-        if let Some(prev) = self.dense.take() {
-            // Only still-allocated lanes are written back.
-            let lanes: Vec<Option<SeqId>> = prev
-                .lanes
-                .iter()
-                .map(|slot| slot.filter(|id| self.kv.contains(*id)))
-                .collect();
-            if lanes.iter().any(Option::is_some) {
-                let k_host = to_vec_f32(&prev.k)?;
-                let v_host = to_vec_f32(&prev.v)?;
-                self.kv.scatter_dense(&lanes, prev.bucket, &k_host, &v_host)?;
-            }
-        }
         Ok(())
     }
 
-    /// Rebuild the dense device KV from the paged store for a new batch
-    /// composition, first persisting the previous composition's state.
-    fn rebuild_dense(&mut self, lanes: &[Option<SeqId>], bucket: usize) -> Result<()> {
-        self.invalidate_dense()?;
-        let geo = self.kv.geometry();
-        let n = geo.dense_elems(bucket);
-        let mut k_host = vec![0.0f32; n];
-        let mut v_host = vec![0.0f32; n];
-        self.kv.gather_dense(lanes, bucket, &mut k_host, &mut v_host)?;
-        let shape = [geo.n_layers, bucket, geo.n_heads, geo.max_seq, geo.head_dim];
-        self.dense = Some(DenseState {
-            bucket,
-            lanes: lanes.to_vec(),
-            k: literal_f32(&k_host, &shape)?,
-            v: literal_f32(&v_host, &shape)?,
-        });
-        Ok(())
-    }
-
-    /// Preempt one victim under KV pressure: the scheduler picks it
-    /// *by id* over the shared policy's priority-aware census, which
-    /// spans running *and* backpressure-paused sequences (a parked slow
-    /// client's KV is reclaimable like any other; within a priority
-    /// level parked victims lose first). Running victims go through
-    /// `retire` (lane + dense bookkeeping); paused victims hold no lane
-    /// and finish directly.
-    fn preempt_one(&mut self) -> Result<()> {
-        let mut pool = self.batcher.running_ids();
-        pool.extend(self.paused.iter().copied());
-        let candidates = policy::preempt_candidates(&self.kv, &self.seqs, &pool);
-        let id = preemption_victim(&candidates)
-            .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
-        let mut seq = self.seqs.remove(&id).unwrap();
-        self.metrics.preemptions += 1;
-        if self.paused.contains(&id) {
-            self.paused.retain(|&p| p != id);
-            self.finish_seq(&mut seq, FinishReason::Preempted)
-        } else {
-            self.retire(&mut seq, FinishReason::Preempted)
-        }
-    }
-
-    // -----------------------------------------------------------------
-    // Stream flow control
-    // -----------------------------------------------------------------
-
-    /// Park a running sequence whose client stream is out of credit.
-    /// Its device-resident KV is persisted into the paged store first
-    /// (the sequence will continue later, unlike a retirement), then
+    /// A parked sequence will continue later (unlike a retirement), so
+    /// its device-resident KV is persisted into the paged store before
     /// its lane is released; the next decode step rebuilds the dense
     /// cache for the smaller batch.
-    fn pause_seq(&mut self, id: SeqId) -> Result<()> {
-        self.invalidate_dense()?;
-        self.batcher.remove(id)?;
-        let now = self.clock.now();
-        let seq = self.seqs.get_mut(&id).unwrap();
-        seq.state = SeqState::Paused;
-        seq.paused_at = Some(now);
-        self.paused.push(id);
-        self.metrics.backpressure_pauses += 1;
-        Ok(())
+    fn on_pause(&mut self, kv: &mut KvCache) -> Result<()> {
+        self.invalidate_dense(kv)
     }
 
-    /// Apply backpressure at the top of every step. The *decisions*
-    /// (resume order, hysteresis, policy) are the shared
-    /// [`policy::plan_stream_ops`]; this method supplies only the PJRT
-    /// engine's mechanics: a resumed sequence's KV lives in the paged
-    /// store (persisted at pause), so the lane mismatch makes the next
-    /// decode step rebuild the dense cache. Checking credit *before*
-    /// decode means a generated token always has a slot — backpressure
-    /// halts generation, never loses data.
-    fn service_streams(&mut self) -> Result<()> {
-        let free_lanes = self.cfg.max_running.saturating_sub(self.batcher.len());
-        let ops = policy::plan_stream_ops(
-            &self.seqs,
-            &self.paused,
-            &self.batcher.running_ids(),
-            self.cfg.backpressure,
-            free_lanes,
-            self.clock.now(),
-            self.cfg.stream_idle_timeout(),
-        );
-        for op in ops {
-            match op {
-                StreamOp::Resume(id) => {
-                    let admission = self.batcher.admit(id)?;
-                    if admission.bucket_grew {
-                        self.invalidate_dense()?;
-                    }
-                    self.paused.retain(|&p| p != id);
-                    let seq = self.seqs.get_mut(&id).unwrap();
-                    seq.state = SeqState::Decoding;
-                    seq.paused_at = None;
-                    self.metrics.backpressure_resumes += 1;
-                }
-                StreamOp::ReapPaused(id) => {
-                    self.paused.retain(|&p| p != id);
-                    let mut seq = self.seqs.remove(&id).unwrap();
-                    self.metrics.client_disconnects += 1;
-                    self.finish_seq(&mut seq, FinishReason::Cancelled)?;
-                }
-                StreamOp::ReapRunning(id) => {
-                    let mut seq = self.seqs.remove(&id).unwrap();
-                    self.metrics.client_disconnects += 1;
-                    self.retire(&mut seq, FinishReason::Cancelled)?;
-                }
-                StreamOp::Pause(id) => self.pause_seq(id)?,
-                StreamOp::DropOverrun(id) => {
-                    let mut seq = self.seqs.remove(&id).unwrap();
-                    self.metrics.backpressure_drops += 1;
-                    self.retire(&mut seq, FinishReason::Overrun)?;
-                }
-                StreamOp::ExpireIdle(id) => {
-                    // A long-parked client: demote to overrun so its KV
-                    // is bounded even with no allocation pressure.
-                    // Paused sequences hold no lane and no dense slot.
-                    self.paused.retain(|&p| p != id);
-                    let mut seq = self.seqs.remove(&id).unwrap();
-                    self.metrics.stream_idle_drops += 1;
-                    self.finish_seq(&mut seq, FinishReason::Overrun)?;
-                }
-            }
+    /// A resumed sequence's KV lives in the paged store (persisted at
+    /// pause); bucket growth invalidates the dense state, and otherwise
+    /// the lane mismatch makes the next decode step rebuild it.
+    fn on_resume(&mut self, kv: &mut KvCache, admission: &Admission) -> Result<()> {
+        if admission.bucket_grew {
+            self.invalidate_dense(kv)?;
         }
         Ok(())
     }
 
-    /// Register a finished/preempted sequence's *prompt* KV in the
-    /// prefix cache. Only the prompt's full blocks are registered: they
-    /// were written at prefill and are valid in the paged store, while
-    /// generated-token KV may still be device-resident (scattered back
-    /// only on a dense rebuild) and must not be published.
-    fn register_prefix(&mut self, seq: &Sequence) {
-        if !self.cfg.prefix_cache || !self.kv.contains(seq.id) {
-            return;
-        }
-        let Some(blocks) = self.kv.seq_blocks(seq.id) else {
-            return;
-        };
-        self.prefix.insert(&seq.prompt, &blocks, &mut self.kv);
-    }
-
-    fn finish_seq(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
-        seq.state = SeqState::Finished(reason);
-        let usage = seq.usage();
-        seq.emit_finish(reason, usage);
-        self.metrics.record_finish(&seq.tenant, usage);
-        self.register_prefix(seq);
-        if self.kv.contains(seq.id) {
-            self.kv.free_seq(seq.id)?;
-        }
-        self.metrics.requests_finished += 1;
-        Ok(())
+    /// Only the prompt's blocks are publishable: they were written at
+    /// prefill and are valid in the paged store, while generated-token
+    /// KV may still be device-resident (scattered back only on a dense
+    /// rebuild) and must not be published.
+    fn publishable_tokens(&self, _kv: &KvCache, seq: &Sequence) -> Vec<u32> {
+        seq.prompt.clone()
     }
 }
 
-impl InferenceEngine for Engine {
-    /// Queue a typed request; the prompt must fit the largest prefill
-    /// bucket and the KV pool.
-    fn submit(&mut self, req: GenRequest) -> Result<SubmissionHandle> {
-        let prompt_tokens = router::encode_prompt(&self.tokenizer, &req.prompt)?;
-        let max_prefill = *self.cfg.prefill_buckets.last().unwrap();
-        if prompt_tokens.len() > max_prefill {
-            return Err(Error::Request(format!(
-                "prompt of {} tokens exceeds the largest prefill bucket {max_prefill}",
-                prompt_tokens.len()
-            )));
+/// The production engine: the shared serving core over the PJRT
+/// backend. Owns all sequence state; not Send — run it on a dedicated
+/// thread and talk to it via [`crate::server::EngineJob`] channels.
+pub type Engine = EngineCore<PjrtBackend>;
+
+impl EngineCore<PjrtBackend> {
+    pub fn new(rt: Runtime, cfg: EngineConfig) -> Result<Self> {
+        EngineCore::with_backend(PjrtBackend::new(rt), cfg, Clock::system())
+    }
+
+    /// Pre-compile the executables the serving loop will need (moves the
+    /// compile cost out of the first request's latency).
+    pub fn warmup(&mut self) -> Result<()> {
+        for &b in &self.cfg.decode_buckets.clone() {
+            self.backend
+                .rt
+                .ensure_compiled(&Manifest::decode_entry_name(b, !self.cfg.async_softmax))?;
         }
-        let need = (prompt_tokens.len() + 1).div_ceil(self.cfg.kv_block_tokens);
-        if need > self.cfg.kv_total_blocks {
-            return Err(Error::Request(format!(
-                "prompt needs {need} KV blocks, pool has {}",
-                self.cfg.kv_total_blocks
-            )));
+        for &s in &self.cfg.prefill_buckets.clone() {
+            self.backend
+                .rt
+                .ensure_compiled(&Manifest::prefill_entry_name(s))?;
         }
-        router::enqueue_request(
-            &mut self.router,
-            &self.tokenizer,
-            &req,
-            prompt_tokens,
-            &SubmitContext {
-                max_new_cap: self.cfg.max_new_tokens,
-                stream_capacity: self.cfg.stream_capacity,
-                now: self.clock.now(),
-                wakeup: self.wakeup.as_ref(),
-            },
-        )
-    }
-
-    fn set_wakeup(&mut self, wakeup: Wakeup) {
-        self.wakeup = Some(wakeup);
-    }
-
-    /// Run one scheduling iteration: service stream flow control, then
-    /// prefill/decode/idle. Returns the action taken.
-    fn step(&mut self) -> Result<Action> {
-        self.service_streams()?;
-        let state = policy::plan_admission(
-            &self.cfg,
-            &mut self.kv,
-            &mut self.prefix,
-            &mut self.metrics,
-            self.router.peek_next(),
-            self.router.queued(),
-            self.batcher.len(),
-        );
-        let action = decide(state);
-        match action {
-            Action::Prefill => self.step_prefill()?,
-            Action::Decode => self.step_decode()?,
-            Action::Idle => {}
-        }
-        Ok(action)
-    }
-
-    /// Cancel a queued, running, or paused request; its KV blocks are
-    /// released (prompt blocks may survive in the prefix cache,
-    /// refcounted by the tree alone).
-    fn cancel(&mut self, id: RequestId) -> Result<bool> {
-        if let Some(mut seq) = self.router.take(id) {
-            self.metrics.cancellations += 1;
-            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
-            return Ok(true);
-        }
-        if self.paused.contains(&id) {
-            self.paused.retain(|&p| p != id);
-            let mut seq = self.seqs.remove(&id).unwrap();
-            self.metrics.cancellations += 1;
-            // Paused sequences hold no lane and no dense-cache slot:
-            // finish directly, no retire bookkeeping.
-            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
-            return Ok(true);
-        }
-        if let Some(mut seq) = self.seqs.remove(&id) {
-            self.metrics.cancellations += 1;
-            self.retire(&mut seq, FinishReason::Cancelled)?;
-            return Ok(true);
-        }
-        Ok(false)
-    }
-
-    fn metrics(&self) -> &EngineMetrics {
-        &self.metrics
-    }
-
-    /// True when no work remains.
-    fn is_idle(&self) -> bool {
-        self.router.queued() == 0 && self.batcher.is_empty() && self.paused.is_empty()
-    }
-
-    fn queued(&self) -> usize {
-        self.router.queued()
-    }
-
-    fn running(&self) -> usize {
-        self.batcher.len()
-    }
-
-    fn paused(&self) -> usize {
-        self.paused.len()
-    }
-
-    fn queue_depths(&self) -> Vec<(i32, usize)> {
-        self.router.depths_by_priority()
-    }
-
-    fn encode(&self, text: &str) -> Vec<u32> {
-        self.tokenizer.encode(text)
-    }
-
-    fn decode(&self, tokens: &[u32]) -> String {
-        self.tokenizer.decode(tokens)
+        Ok(())
     }
 }

@@ -20,6 +20,10 @@ pub enum Error {
     Config(String),
     /// Request-level errors (bad input, closed stream, ...).
     Request(String),
+    /// A per-tenant concurrency quota rejected the submission
+    /// (`EngineConfig::tenant_max_inflight`); surfaced on the wire as
+    /// the `quota_exceeded` error code.
+    Quota(String),
     /// I/O.
     Io(std::io::Error),
     /// JSON (manifest, lookup tables).
@@ -35,8 +39,21 @@ impl fmt::Display for Error {
             Error::Schedule(m) => write!(f, "schedule: {m}"),
             Error::Config(m) => write!(f, "config: {m}"),
             Error::Request(m) => write!(f, "request: {m}"),
+            Error::Quota(m) => write!(f, "quota: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
             Error::Json(e) => write!(f, "json: {e}"),
+        }
+    }
+}
+
+impl Error {
+    /// Stable wire-protocol error code for a rejected submission
+    /// (docs/PROTOCOL.md § Errors): quota rejections are
+    /// distinguishable so clients can back off instead of retrying.
+    pub fn wire_code(&self) -> &'static str {
+        match self {
+            Error::Quota(_) => "quota_exceeded",
+            _ => "rejected",
         }
     }
 }

@@ -54,19 +54,33 @@
 //! drops — `free_seq` on a private block, or LRU eviction on a cached
 //! one.
 //!
+//! # One engine core, many backends
+//!
+//! The entire serving loop lives once, in [`core::EngineCore`]: a
+//! generic orchestrator owning admission, prefill/decode stepping,
+//! stream flow control, preemption, cross-request dedup, per-tenant
+//! quotas, finish accounting, [`core::TraceEvent`] emission, and the
+//! [`core::EngineCore::audit`] snapshot. A [`core::Backend`] supplies
+//! only compute: [`engine::Engine`] is `EngineCore<PjrtBackend>`
+//! (compiled artifacts, device-resident dense KV),
+//! [`simengine::SimEngine`] is `EngineCore<SimBackend>` (deterministic
+//! hash model), and [`core::StubEngine`] is the differential-testing
+//! third backend. Orchestration therefore *cannot* drift between the
+//! real and simulated paths — it is the same code — and the production
+//! engine exposes the same trace/audit surface the simulation oracles
+//! check.
+//!
 //! # Unified serving API
 //!
 //! Every front-end — the JSON-lines TCP server ([`server`], protocol in
 //! `docs/PROTOCOL.md`), benches, property tests, offline drivers —
 //! talks to a generic [`api::InferenceEngine`]: `submit(GenRequest) ->
-//! SubmissionHandle`, `step`, `cancel`, `metrics`. [`engine::Engine`]
-//! (PJRT) and [`simengine::SimEngine`] (deterministic hash model) both
-//! implement it, and share their admission / eviction / preemption
-//! logic through [`policy`], so the sim twin can neither drift from the
-//! real engine's policy nor from its surface. Requests carry tenant,
-//! priority, and stop sequences; finish events carry a per-request
-//! usage record (prefill / cached / generated token counts), and
-//! metrics aggregate per-tenant counters.
+//! SubmissionHandle`, `step`, `cancel`, `metrics`, implemented once by
+//! [`core::EngineCore`] for every backend. The shared admission /
+//! eviction / preemption decisions live in [`policy`]. Requests carry
+//! tenant, priority, and stop sequences; finish events carry a
+//! per-request usage record (prefill / cached / generated token
+//! counts), and metrics aggregate per-tenant counters.
 //!
 //! # End-to-end flow control
 //!
@@ -118,8 +132,9 @@
 //!   lifecycle (including the backpressure states), the
 //!   paper-technique-to-module table, and the testing & determinism
 //!   guide (oracles, seed replay, adding scenarios).
-//! - `docs/PROTOCOL.md` — the JSON-lines wire protocol (v2.1): stream
-//!   credit semantics, global ids, admin verbs, error codes.
+//! - `docs/PROTOCOL.md` — the JSON-lines wire protocol (v2.2): stream
+//!   credit semantics, global ids, admin verbs, per-tenant quotas,
+//!   error codes.
 //! - `ROADMAP.md` / `PAPER.md` — project north star and source paper.
 
 pub mod api;
@@ -127,6 +142,7 @@ pub mod baselines;
 pub mod batching;
 pub mod bench_support;
 pub mod config;
+pub mod core;
 pub mod dataflow;
 pub mod engine;
 pub mod error;

@@ -157,6 +157,13 @@ pub struct EngineMetrics {
     pub preemptions: u64,
     /// Requests cancelled via `InferenceEngine::cancel`.
     pub cancellations: u64,
+    /// Requests whose admission waited for an identical in-flight
+    /// prompt to retire (cross-request dedup) instead of racing it with
+    /// duplicate cold prefill compute.
+    pub dedup_hits: u64,
+    /// Submissions rejected by the per-tenant concurrency quota
+    /// (`EngineConfig::tenant_max_inflight`).
+    pub quota_rejections: u64,
     /// Flow control: sequences parked because their bounded client
     /// stream ran out of credit (`BackpressurePolicy::PauseDecode`).
     pub backpressure_pauses: u64,
@@ -245,6 +252,11 @@ impl EngineMetrics {
             ("kv_inserts", Json::Num(self.kv_inserts as f64)),
             ("preemptions", Json::Num(self.preemptions as f64)),
             ("cancellations", Json::Num(self.cancellations as f64)),
+            ("dedup_hits", Json::Num(self.dedup_hits as f64)),
+            (
+                "quota_rejections",
+                Json::Num(self.quota_rejections as f64),
+            ),
             (
                 "backpressure_pauses",
                 Json::Num(self.backpressure_pauses as f64),

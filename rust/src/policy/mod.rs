@@ -2,9 +2,10 @@
 //!
 //! [`crate::engine::Engine`] and [`crate::simengine::SimEngine`] used
 //! to carry verbatim copies of this logic; any fix applied to one could
-//! silently miss the other (the drift hazard ROADMAP flagged). Both now
-//! call these free functions over the same cache/scheduler state, so
-//! the sim twin *cannot* drift from the real engine:
+//! silently miss the other (the drift hazard ROADMAP flagged). Today a
+//! single orchestrator — [`crate::core::EngineCore`] — calls these free
+//! functions over the same cache/scheduler state for every backend, so
+//! drift is impossible by construction:
 //!
 //! - [`admit_kv`]: prefix attach first, then eviction of the uncached
 //!   shortfall + retry, then — with nothing running to wait for — a
@@ -422,14 +423,15 @@ mod tests {
     use crate::kvcache::KvGeometry;
     use crate::scheduler::{decide, Action};
 
-    /// Compile-time proof that both engines expose the one shared
-    /// surface this policy is written for (the trait bound fails to
-    /// resolve if either implementation drifts off it).
+    /// Compile-time proof that every engine alias exposes the one
+    /// shared surface this policy is written for (the trait bound fails
+    /// to resolve if the core drifts off it).
     #[test]
     fn both_engines_implement_inference_engine() {
         fn requires_engine<E: InferenceEngine>() {}
         let _real = requires_engine::<crate::engine::Engine>;
         let _sim = requires_engine::<crate::simengine::SimEngine>;
+        let _stub = requires_engine::<crate::core::StubEngine>;
     }
 
     fn cfg(bt: usize, blocks: usize) -> EngineConfig {

@@ -78,6 +78,10 @@ pub struct Sequence {
     /// Whether the sequence was ever admitted (prefill ran). Cancelled
     /// while queued => false, and its usage reports zero prefill work.
     pub admitted: bool,
+    /// Whether this request has already been counted as a dedup hit
+    /// (its admission deferred at least once behind an identical
+    /// in-flight prompt), so the metric counts requests, not retries.
+    pub dedup_waited: bool,
 }
 
 impl Sequence {
@@ -113,6 +117,7 @@ impl Sequence {
             kv_len: 0,
             cached_prompt_tokens: 0,
             admitted: false,
+            dedup_waited: false,
         }
     }
 

@@ -9,7 +9,7 @@
 //! [`crate::simengine::SimEngine`] twin (loopback tests, artifact-free
 //! serving demos) — the loop itself is generic and identical for both.
 //!
-//! The full wire protocol (v2.1) — request/response/stats/cancel/admin
+//! The full wire protocol (v2.2) — request/response/stats/cancel/admin
 //! schemas, defaults, and error shapes — is documented in
 //! `docs/PROTOCOL.md`. In short (one JSON object per line):
 //!
@@ -285,8 +285,10 @@ pub enum EngineJob {
         req: GenRequest,
         /// Submission outcome: the engine's handle (id + event stream,
         /// consumed directly by the connection's pump thread — no
-        /// per-token re-send), or the rejection message.
-        submitted: mpsc::Sender<std::result::Result<SubmissionHandle, String>>,
+        /// per-token re-send), or the rejection as a `(code, message)`
+        /// pair (`"rejected"`, or `"quota_exceeded"` for per-tenant
+        /// quota rejections — docs/PROTOCOL.md § Errors).
+        submitted: mpsc::Sender<std::result::Result<SubmissionHandle, (String, String)>>,
     },
     Cancel {
         id: RequestId,
@@ -438,7 +440,11 @@ fn engine_loop<E: InferenceEngine>(engine: &mut E, rx: mpsc::Receiver<EngineJob>
                     }
                 }
                 EngineJob::Submit { req, submitted } => {
-                    let _ = submitted.send(engine.submit(req).map_err(|e| e.to_string()));
+                    let _ = submitted.send(
+                        engine
+                            .submit(req)
+                            .map_err(|e| (e.wire_code().to_string(), e.to_string())),
+                    );
                 }
             }
         }
@@ -753,8 +759,8 @@ fn handle_conn(
                     pump_events(wire_id, gid, handle.events, w2, ids2, reg2, tokenizer)
                 });
             }
-            Ok(Err(msg)) => {
-                write_line(&w, &error_response("rejected", &msg))?;
+            Ok(Err((code, msg))) => {
+                write_line(&w, &error_response(&code, &msg))?;
             }
             Err(_) => return engine_gone(&w),
         }

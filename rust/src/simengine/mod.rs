@@ -1,109 +1,44 @@
-//! Simulation engine: the PJRT-free twin of [`crate::engine::Engine`].
+//! Simulation backend: the PJRT-free twin of [`crate::engine::Engine`].
 //!
-//! Runs the *entire* serving stack — router, cache-aware scheduler,
-//! continuous batcher, paged KV cache with block sharing, radix-tree
-//! prefix cache, sampler, metrics — against a deterministic hash model
-//! instead of compiled artifacts. The hash model writes K/V columns that
-//! are pure functions of `(token, position)` and derives logits from a
-//! digest of the KV bytes *actually stored in the paged cache*, so any
+//! [`SimEngine`] is [`crate::core::EngineCore`] over [`SimBackend`] — a
+//! deterministic hash model instead of compiled artifacts. The entire
+//! serving loop (router, cache-aware scheduler, continuous batcher,
+//! flow control, preemption, tracing, audit) is the shared core; this
+//! module supplies only the compute: K/V columns that are pure
+//! functions of `(token, position)`, and logits derived from a digest
+//! of the KV bytes *actually stored in the paged cache*, so any
 //! block-sharing bug (double free, COW miss, stale shared block)
 //! changes generated tokens instead of passing silently.
 //!
-//! The twin implements the same [`crate::api::InferenceEngine`] trait
-//! as the real engine and shares its admission / eviction / preemption
-//! logic through [`crate::policy`], so neither the policy nor the API
-//! surface can drift. This is what lets `benches/prefix_reuse.rs`, the
-//! loopback server test, and the tier-1 tests measure prefix-cache hit
-//! rates and verify cached-vs-cold output equality on a bare checkout,
-//! where the PJRT artifacts of the real engine are unavailable.
+//! Because orchestration lives in the core, the sim twin *cannot* drift
+//! from the real engine — the same struct runs both. This is what lets
+//! `benches/prefix_reuse.rs`, the loopback server test, and the tier-1
+//! tests measure prefix-cache hit rates and verify cached-vs-cold
+//! output equality on a bare checkout, where the PJRT artifacts of the
+//! real engine are unavailable.
+//!
+//! The sim runs on a manual [`Clock`], advancing [`SIM_STEP`] of
+//! virtual time per engine step, so every latency and timeout decision
+//! is a deterministic function of the scenario.
 
-use std::collections::HashMap;
 use std::time::Duration;
 
-use crate::api::{
-    FinishReason, GenRequest, InferenceEngine, RequestId, SubmissionHandle, Usage, Wakeup,
-};
-use crate::batching::Batcher;
 use crate::config::EngineConfig;
+use crate::core::{Backend, DecodeRun, EngineCore, LaneInput, PrefillRun};
 use crate::error::{Error, Result};
-use crate::kvcache::{KvAudit, KvCache, KvGeometry, SeqId};
-use crate::metrics::EngineMetrics;
-use crate::policy::{self, StreamOp};
-use crate::prefixcache::PrefixCache;
-use crate::router::{self, Router, SeqState, Sequence, SubmitContext};
-use crate::sampling::Sampler;
-use crate::scheduler::{decide, preemption_victim, Action};
-use crate::tokenizer::{ByteTokenizer, EOS, TOKENIZER_VOCAB};
+use crate::kvcache::{KvCache, KvGeometry, SeqId};
+use crate::router::Sequence;
+use crate::tokenizer::TOKENIZER_VOCAB;
 use crate::util::clock::Clock;
+
+// Re-exported for compatibility: these types moved to the shared core
+// (the real engine records the same trace and audit surface now).
+pub use crate::core::{EngineAudit, LiveSeq, TraceEvent};
 
 /// Virtual time one engine step costs on the sim's manual clock. Every
 /// latency the sim reports (and every idle-timeout decision) is a
 /// deterministic multiple of this quantum.
 pub const SIM_STEP: Duration = Duration::from_millis(1);
-
-/// One observable scheduling event, recorded when tracing is enabled
-/// ([`SimEngine::enable_trace`]). The simulation-test harness replays
-/// scenarios and checks its oracles against this stream; it is also
-/// what makes two runs comparably *byte-identical* (equal traces).
-#[derive(Debug, Clone, PartialEq)]
-pub enum TraceEvent {
-    /// A request was admitted (prefill ran); `cached` prompt tokens
-    /// were served from the prefix cache.
-    Admitted { id: SeqId, cached: usize },
-    /// One generated token was emitted to the request's stream.
-    Token { id: SeqId, token: u32 },
-    /// The sequence was parked by stream backpressure.
-    Paused { id: SeqId },
-    /// A parked sequence rejoined the decode batch.
-    Resumed { id: SeqId },
-    /// A parked sequence sat idle past `stream_idle_timeout` and was
-    /// demoted to `Overrun`.
-    Expired { id: SeqId },
-    /// Decode-pressure preemption: the chosen victim, its priority, and
-    /// the full candidate pool `(id, priority)` the choice ran over —
-    /// recorded so an external oracle can verify priority monotonicity
-    /// without trusting the policy it is checking.
-    Preempted {
-        id: SeqId,
-        priority: i32,
-        pool: Vec<(SeqId, i32)>,
-    },
-    /// Admission-relief preemption of a parked victim on behalf of a
-    /// blocked higher-priority waiter.
-    AdmissionRelief {
-        id: SeqId,
-        priority: i32,
-        waiter_priority: i32,
-    },
-    /// The request finished; exactly one per request.
-    Finished {
-        id: SeqId,
-        reason: FinishReason,
-        usage: Usage,
-    },
-}
-
-/// One live sequence in an [`EngineAudit`] snapshot.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct LiveSeq {
-    pub id: SeqId,
-    pub priority: i32,
-    pub paused: bool,
-}
-
-/// A full accounting snapshot of the sim engine's shared state, taken
-/// between steps by the simulation-test oracles: the KV allocator's
-/// books, the prefix tree's retained block references, and the live
-/// sequence set.
-#[derive(Debug, Clone)]
-pub struct EngineAudit {
-    pub kv: KvAudit,
-    /// Blocks retained by the prefix tree, one entry per tree-held
-    /// reference.
-    pub tree_blocks: Vec<usize>,
-    pub live: Vec<LiveSeq>,
-    pub queued: usize,
-}
 
 /// Hash-model geometry (kept tiny: the point is block accounting, not
 /// FLOPs).
@@ -128,8 +63,12 @@ impl Default for SimSpec {
     }
 }
 
+// ---------------------------------------------------------------------
+// Hash model (shared with the differential-testing stub backend)
+// ---------------------------------------------------------------------
+
 /// splitmix64 finalizer — the model's only "weights".
-fn mix(mut x: u64) -> u64 {
+pub(crate) fn mix(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9E3779B97F4A7C15);
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
@@ -137,35 +76,210 @@ fn mix(mut x: u64) -> u64 {
 }
 
 /// Deterministic f32 in [-1, 1) from a hash.
-fn hash_f32(x: u64) -> f32 {
+pub(crate) fn hash_f32(x: u64) -> f32 {
     ((mix(x) >> 40) as f32) / (1u64 << 24) as f32 * 2.0 - 1.0
 }
 
-/// The simulation engine. Same single-owner discipline as `Engine`.
-pub struct SimEngine {
-    pub cfg: EngineConfig,
-    spec: SimSpec,
-    kv: KvCache,
-    prefix: PrefixCache,
-    batcher: Batcher,
-    router: Router,
-    sampler: Sampler,
-    seqs: HashMap<SeqId, Sequence>,
-    /// Sequences parked by stream backpressure: they stay in `seqs`
-    /// (state `Paused`) and keep their KV, but hold no decode lane.
-    paused: Vec<SeqId>,
-    /// Virtual time: a manual [`Clock`] advanced [`SIM_STEP`] per step,
-    /// so every latency and timeout decision is deterministic.
-    clock: Clock,
-    /// Engine-loop wakeup each new stream notifies on client drains.
-    wakeup: Option<Wakeup>,
-    /// Scheduling-event trace (None until [`SimEngine::enable_trace`]).
-    trace: Option<Vec<TraceEvent>>,
-    pub metrics: EngineMetrics,
-    pub tokenizer: ByteTokenizer,
+/// Seed of the logits digest.
+pub(crate) const LOGITS_DIGEST_SEED: u64 = 0x5EED_CAFE;
+
+/// K/V column for `(token, pos)` in [Lyr, H, Dh] layout.
+pub(crate) fn sim_token_cols(geo: &KvGeometry, token: u32, pos: usize) -> (Vec<f32>, Vec<f32>) {
+    let te = geo.token_elems();
+    let mut k = Vec::with_capacity(te);
+    let mut v = Vec::with_capacity(te);
+    let base = ((token as u64) << 32) ^ ((pos as u64) << 8);
+    for e in 0..te {
+        k.push(hash_f32(base ^ ((e as u64) << 1)));
+        v.push(hash_f32(base ^ ((e as u64) << 1) ^ 1));
+    }
+    (k, v)
 }
 
-impl SimEngine {
+/// Prefill K/V for a whole prompt in [Lyr, 1, H, S, Dh] layout
+/// (S = prompt length, unpadded).
+pub(crate) fn sim_prefill_kv(geo: &KvGeometry, tokens: &[u32]) -> (Vec<f32>, Vec<f32>) {
+    let s = tokens.len();
+    let n = geo.n_layers * geo.n_heads * s * geo.head_dim;
+    let mut k = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    for (t, &tok) in tokens.iter().enumerate() {
+        let (kc, vc) = sim_token_cols(geo, tok, t);
+        for l in 0..geo.n_layers {
+            for h in 0..geo.n_heads {
+                let src = (l * geo.n_heads + h) * geo.head_dim;
+                let dst = ((l * geo.n_heads + h) * s + t) * geo.head_dim;
+                k[dst..dst + geo.head_dim].copy_from_slice(&kc[src..src + geo.head_dim]);
+                v[dst..dst + geo.head_dim].copy_from_slice(&vc[src..src + geo.head_dim]);
+            }
+        }
+    }
+    (k, v)
+}
+
+/// The tokens a retired sim-path sequence may publish to the prefix
+/// cache: prompt + generated, truncated to what is actually stored.
+/// Shared by [`SimBackend`] and the differential-testing stub — the
+/// publication rule must be one definition, or the lockstep-equality
+/// invariant could be broken by editing a single copy.
+pub(crate) fn sim_publishable_tokens(kv: &KvCache, seq: &Sequence) -> Vec<u32> {
+    let Some(kv_len) = kv.seq_len(seq.id) else {
+        return Vec::new();
+    };
+    let mut toks: Vec<u32> = Vec::with_capacity(kv_len);
+    toks.extend_from_slice(&seq.prompt);
+    for &g in &seq.generated {
+        if toks.len() >= kv_len {
+            break;
+        }
+        toks.push(g);
+    }
+    toks.truncate(kv_len);
+    toks
+}
+
+/// Logits for a sequence: a digest over the KV bytes *stored in the
+/// paged cache* (so shared-block corruption is observable), mixed with
+/// the current input token.
+fn logits_from_cache(kv: &KvCache, vocab: usize, id: SeqId, cur_tok: u32) -> Result<Vec<f32>> {
+    let geo = kv.geometry();
+    let te = geo.token_elems();
+    let len = kv
+        .seq_len(id)
+        .ok_or_else(|| Error::KvCache(format!("unknown seq {id}")))?;
+    let mut kcol = vec![0.0f32; te];
+    let mut vcol = vec![0.0f32; te];
+    let mut digest: u64 = LOGITS_DIGEST_SEED;
+    for pos in 0..len {
+        kv.read_token(id, pos, &mut kcol, &mut vcol)?;
+        for f in kcol.iter().chain(vcol.iter()) {
+            digest = mix(digest ^ f.to_bits() as u64);
+        }
+    }
+    digest = mix(digest ^ ((cur_tok as u64) << 32));
+    Ok((0..vocab).map(|c| hash_f32(digest ^ c as u64)).collect())
+}
+
+// ---------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------
+
+/// The deterministic hash-model compute backend.
+pub struct SimBackend {
+    spec: SimSpec,
+}
+
+impl SimBackend {
+    pub fn new(spec: SimSpec) -> Self {
+        SimBackend { spec }
+    }
+
+    pub fn spec(&self) -> SimSpec {
+        self.spec
+    }
+}
+
+impl Backend for SimBackend {
+    type PrefillArtifact = ();
+
+    fn geometry(&self, cfg: &EngineConfig) -> KvGeometry {
+        KvGeometry {
+            n_layers: self.spec.n_layers,
+            n_heads: self.spec.n_heads,
+            head_dim: self.spec.head_dim,
+            block_tokens: cfg.kv_block_tokens,
+            max_seq: self.spec.max_seq,
+        }
+    }
+
+    fn vocab(&self) -> usize {
+        self.spec.vocab
+    }
+
+    /// The prompt (+1 generated token) must fit the sim's `max_seq`.
+    fn validate_prompt(&self, _cfg: &EngineConfig, prompt_len: usize) -> Result<()> {
+        if prompt_len + 1 > self.spec.max_seq {
+            return Err(Error::Request(format!(
+                "prompt of {prompt_len} tokens exceeds sim max_seq {}",
+                self.spec.max_seq
+            )));
+        }
+        Ok(())
+    }
+
+    /// Virtual time advances one [`SIM_STEP`] per step, whatever the
+    /// action — idle time is time too (it is what the idle timeout
+    /// measures).
+    fn on_step_start(&mut self, clock: &Clock) {
+        clock.advance(SIM_STEP);
+    }
+
+    /// "Compute" and store the uncached prompt suffix, then derive the
+    /// last position's logits from the stored bytes.
+    fn prefill(
+        &mut self,
+        _cfg: &EngineConfig,
+        kv: &mut KvCache,
+        seq: &Sequence,
+        matched_tokens: usize,
+        _clock: &Clock,
+    ) -> Result<PrefillRun<()>> {
+        let len = seq.prompt.len();
+        let geo = kv.geometry();
+        let (k, v) = sim_prefill_kv(&geo, &seq.prompt);
+        kv.write_prefill_range(seq.id, &k, &v, len, matched_tokens, len)?;
+        let logits = logits_from_cache(kv, self.spec.vocab, seq.id, *seq.prompt.last().unwrap())?;
+        Ok(PrefillRun {
+            last_logits: logits,
+            exec_time: Duration::ZERO,
+            artifact: (),
+        })
+    }
+
+    /// Per lane: append the input token's KV (COW protects shared
+    /// tails), then read logits over the stored sequence.
+    #[allow(clippy::too_many_arguments)]
+    fn decode(
+        &mut self,
+        _cfg: &EngineConfig,
+        kv: &mut KvCache,
+        _seqs: &std::collections::HashMap<SeqId, Sequence>,
+        _batch: &crate::batching::DecodeBatch,
+        inputs: &[LaneInput],
+        _metrics: &mut crate::metrics::EngineMetrics,
+        _clock: &Clock,
+    ) -> Result<DecodeRun> {
+        let geo = kv.geometry();
+        let mut logits = Vec::with_capacity(inputs.len() * self.spec.vocab);
+        let mut offsets = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            kv.grow_one(inp.id)?;
+            let (kc, vc) = sim_token_cols(&geo, inp.token, inp.pos);
+            kv.write_token(inp.id, inp.pos, &kc, &vc)?;
+            offsets.push(logits.len());
+            logits.extend(logits_from_cache(kv, self.spec.vocab, inp.id, inp.token)?);
+        }
+        Ok(DecodeRun {
+            logits,
+            offsets,
+            row_len: self.spec.vocab,
+            exec_time: Duration::ZERO,
+        })
+    }
+
+    /// Unlike the real engine (whose generated KV may still be
+    /// device-resident), the sim writes synchronously into the paged
+    /// store, so prompt *and* generated tokens are publishable.
+    fn publishable_tokens(&self, kv: &KvCache, seq: &Sequence) -> Vec<u32> {
+        sim_publishable_tokens(kv, seq)
+    }
+}
+
+/// The simulation engine: the shared serving core over the hash-model
+/// backend.
+pub type SimEngine = EngineCore<SimBackend>;
+
+impl EngineCore<SimBackend> {
     /// Build a sim engine on its own fresh virtual clock.
     pub fn new(cfg: EngineConfig, spec: SimSpec) -> Result<Self> {
         Self::with_clock(cfg, spec, Clock::manual())
@@ -175,627 +289,14 @@ impl SimEngine {
     /// simulation-test harness uses this to observe and steer virtual
     /// time).
     pub fn with_clock(cfg: EngineConfig, spec: SimSpec, clock: Clock) -> Result<Self> {
-        cfg.validate()?;
-        let geo = KvGeometry {
-            n_layers: spec.n_layers,
-            n_heads: spec.n_heads,
-            head_dim: spec.head_dim,
-            block_tokens: cfg.kv_block_tokens,
-            max_seq: spec.max_seq,
-        };
-        Ok(SimEngine {
-            kv: KvCache::new(geo, cfg.kv_total_blocks),
-            prefix: PrefixCache::new(cfg.kv_block_tokens),
-            batcher: Batcher::new(cfg.decode_buckets.clone()),
-            router: Router::new(),
-            sampler: Sampler::new(cfg.seed),
-            seqs: HashMap::new(),
-            paused: Vec::new(),
-            clock,
-            wakeup: None,
-            trace: None,
-            metrics: EngineMetrics::default(),
-            tokenizer: ByteTokenizer::new(spec.vocab),
-            spec,
-            cfg,
-        })
-    }
-
-    pub fn geometry(&self) -> KvGeometry {
-        self.kv.geometry()
-    }
-
-    /// A handle onto the engine's (virtual) clock.
-    pub fn clock(&self) -> Clock {
-        self.clock.clone()
-    }
-
-    /// Start recording [`TraceEvent`]s (drained with
-    /// [`SimEngine::take_trace`]).
-    pub fn enable_trace(&mut self) {
-        self.trace = Some(Vec::new());
-    }
-
-    /// Drain the recorded trace (empty when tracing is disabled).
-    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
-        self.trace.as_mut().map(std::mem::take).unwrap_or_default()
-    }
-
-    fn push_trace(&mut self, ev: TraceEvent) {
-        if let Some(t) = self.trace.as_mut() {
-            t.push(ev);
-        }
-    }
-
-    /// Accounting snapshot for the simulation-test oracles.
-    pub fn audit(&self) -> EngineAudit {
-        let mut live: Vec<LiveSeq> = self
-            .seqs
-            .values()
-            .map(|s| LiveSeq {
-                id: s.id,
-                priority: s.priority,
-                paused: s.state == SeqState::Paused,
-            })
-            .collect();
-        live.sort_by_key(|l| l.id);
-        EngineAudit {
-            kv: self.kv.audit(),
-            tree_blocks: self.prefix.tree_block_refs(),
-            live,
-            queued: self.router.queued(),
-        }
-    }
-
-    /// Test-only fault hook: double-free the first KV block of the
-    /// oldest live sequence, exactly the class of bug the refcount
-    /// oracle exists to catch. Returns `false` when nothing is live.
-    #[cfg(test)]
-    pub fn inject_double_free(&mut self) -> bool {
-        let Some(id) = self.audit().live.first().map(|l| l.id) else {
-            return false;
-        };
-        let Some(blocks) = self.kv.seq_blocks(id) else {
-            return false;
-        };
-        let Some(&b) = blocks.first() else {
-            return false;
-        };
-        self.kv.debug_force_decref(b);
-        true
-    }
-
-    pub fn kv_free_blocks(&self) -> usize {
-        self.kv.free_blocks()
-    }
-
-    pub fn prefix_cached_blocks(&self) -> usize {
-        self.prefix.cached_blocks()
-    }
-
-    // -----------------------------------------------------------------
-    // Hash model
-    // -----------------------------------------------------------------
-
-    /// K/V column for `(token, pos)` in [Lyr, H, Dh] layout.
-    fn token_cols(&self, token: u32, pos: usize) -> (Vec<f32>, Vec<f32>) {
-        let g = self.kv.geometry();
-        let te = g.token_elems();
-        let mut k = Vec::with_capacity(te);
-        let mut v = Vec::with_capacity(te);
-        let base = ((token as u64) << 32) ^ ((pos as u64) << 8);
-        for e in 0..te {
-            k.push(hash_f32(base ^ ((e as u64) << 1)));
-            v.push(hash_f32(base ^ ((e as u64) << 1) ^ 1));
-        }
-        (k, v)
-    }
-
-    /// Prefill K/V for a whole prompt in [Lyr, 1, H, S, Dh] layout
-    /// (S = prompt length, unpadded).
-    fn prefill_kv(&self, tokens: &[u32]) -> (Vec<f32>, Vec<f32>) {
-        let g = self.kv.geometry();
-        let s = tokens.len();
-        let n = g.n_layers * g.n_heads * s * g.head_dim;
-        let mut k = vec![0.0f32; n];
-        let mut v = vec![0.0f32; n];
-        for (t, &tok) in tokens.iter().enumerate() {
-            let (kc, vc) = self.token_cols(tok, t);
-            for l in 0..g.n_layers {
-                for h in 0..g.n_heads {
-                    let src = (l * g.n_heads + h) * g.head_dim;
-                    let dst = ((l * g.n_heads + h) * s + t) * g.head_dim;
-                    k[dst..dst + g.head_dim].copy_from_slice(&kc[src..src + g.head_dim]);
-                    v[dst..dst + g.head_dim].copy_from_slice(&vc[src..src + g.head_dim]);
-                }
-            }
-        }
-        (k, v)
-    }
-
-    /// Logits for a sequence: a digest over the KV bytes *stored in the
-    /// paged cache* (so shared-block corruption is observable), mixed
-    /// with the current input token.
-    fn logits_for(&self, id: SeqId, cur_tok: u32) -> Result<Vec<f32>> {
-        let g = self.kv.geometry();
-        let te = g.token_elems();
-        let len = self
-            .kv
-            .seq_len(id)
-            .ok_or_else(|| Error::KvCache(format!("unknown seq {id}")))?;
-        let mut kcol = vec![0.0f32; te];
-        let mut vcol = vec![0.0f32; te];
-        let mut digest: u64 = 0x5EED_CAFE;
-        for pos in 0..len {
-            self.kv.read_token(id, pos, &mut kcol, &mut vcol)?;
-            for f in kcol.iter().chain(vcol.iter()) {
-                digest = mix(digest ^ f.to_bits() as u64);
-            }
-        }
-        digest = mix(digest ^ ((cur_tok as u64) << 32));
-        let logits = (0..self.spec.vocab)
-            .map(|c| hash_f32(digest ^ c as u64))
-            .collect();
-        Ok(logits)
-    }
-
-    // -----------------------------------------------------------------
-    // Prefill
-    // -----------------------------------------------------------------
-
-    fn step_prefill(&mut self) -> Result<()> {
-        let t0 = self.clock.now();
-        let mut seq = match self.router.pop_next() {
-            Some(s) => s,
-            None => return Ok(()),
-        };
-        let len = seq.prompt.len();
-
-        // Prefix lookup + KV admission (shared policy; see
-        // `policy::admit_kv`). Paused sequences count as pending work:
-        // their blocks return when they resume or finish, so admission
-        // must wait for them rather than fail the request.
-        let matched = match policy::admit_kv(
-            &self.cfg,
-            &mut self.kv,
-            &mut self.prefix,
-            &mut self.metrics,
-            self.batcher.is_empty() && self.paused.is_empty(),
-            seq.id,
-            &seq.prompt,
-        ) {
-            Ok(Some(m)) => m,
-            Ok(None) => {
-                // Admission must wait for KV. If nothing is decoding,
-                // the holders are parked on backpressure and decode
-                // will never free blocks — preempt a strictly
-                // lower-priority parked victim so a high-priority
-                // waiter is not starved by a stalled client.
-                if self.batcher.is_empty() {
-                    if let Some(victim) = policy::admission_relief_victim(
-                        &self.kv,
-                        &self.seqs,
-                        &self.paused,
-                        seq.priority,
-                    ) {
-                        self.paused.retain(|&p| p != victim);
-                        let mut vseq = self.seqs.remove(&victim).unwrap();
-                        self.metrics.preemptions += 1;
-                        self.push_trace(TraceEvent::AdmissionRelief {
-                            id: vseq.id,
-                            priority: vseq.priority,
-                            waiter_priority: seq.priority,
-                        });
-                        self.finish_seq(&mut vseq, FinishReason::Preempted)?;
-                    }
-                }
-                self.router.requeue_front(seq);
-                return self.step_decode();
-            }
-            Err(_) => {
-                // Truly stuck (see `Engine::step_prefill`): fail the
-                // request rather than wedge the queue head forever.
-                self.finish_seq(&mut seq, FinishReason::Error)?;
-                return Ok(());
-            }
-        };
-        policy::note_admission(&self.cfg, &mut self.metrics, &mut seq, matched.tokens);
-        self.push_trace(TraceEvent::Admitted {
-            id: seq.id,
-            cached: matched.tokens,
-        });
-
-        // "Compute" and store the uncached suffix only.
-        let (k, v) = self.prefill_kv(&seq.prompt);
-        self.kv
-            .write_prefill_range(seq.id, &k, &v, len, matched.tokens, len)?;
-        seq.kv_len = len;
-
-        // First generated token. A fresh stream always has credit
-        // (capacity >= 1); a client that already hung up is reaped by
-        // the next step's stream scan.
-        let logits = self.logits_for(seq.id, *seq.prompt.last().unwrap())?;
-        let tok = self.sampler.sample(&logits, seq.params);
-        seq.generated.push(tok);
-        let now = self.clock.now();
-        seq.first_token_at = Some(now);
-        self.metrics.first_token.record(now.saturating_sub(seq.arrived));
-        let _ = seq.emit_token(tok);
-        self.push_trace(TraceEvent::Token { id: seq.id, token: tok });
-        self.metrics.tokens_generated += 1;
-        self.metrics.requests_admitted += 1;
-
-        let done_eos = tok == EOS;
-        let done_stop = seq.hit_stop();
-        if done_eos || done_stop || seq.max_new_tokens <= 1 {
-            let reason = if done_eos {
-                FinishReason::Eos
-            } else if done_stop {
-                FinishReason::Stop
-            } else {
-                FinishReason::MaxTokens
-            };
-            self.finish_seq(&mut seq, reason)?;
-        } else {
-            seq.state = SeqState::Decoding;
-            self.batcher.admit(seq.id)?;
-            self.seqs.insert(seq.id, seq);
-        }
-        self.metrics.prefill_steps += 1;
-        self.metrics.step.record(self.clock.now().saturating_sub(t0));
-        Ok(())
-    }
-
-    // -----------------------------------------------------------------
-    // Decode
-    // -----------------------------------------------------------------
-
-    fn step_decode(&mut self) -> Result<()> {
-        let t0 = self.clock.now();
-        // The stream scan may have paused or dropped every running
-        // sequence; there is nothing to decode then.
-        if self.batcher.is_empty() {
-            return Ok(());
-        }
-        // KV headroom via the shared policy: reclaim cached blocks
-        // first, preempt last. The victim pool spans running *and*
-        // backpressure-paused sequences (parked work holds KV too).
-        while policy::reclaim_decode_headroom(
-            &mut self.kv,
-            &mut self.prefix,
-            &mut self.metrics,
-            self.batcher.len(),
-            self.batcher.len() + self.paused.len(),
-        ) {
-            self.preempt_one()?;
-        }
-        if self.batcher.is_empty() {
-            return Ok(()); // preemption may have taken the last runner
-        }
-        let batch = self.batcher.assemble()?;
-        let max_seq = self.spec.max_seq;
-        let mut finished: Vec<(SeqId, FinishReason)> = Vec::new();
-        let mut emitted: Vec<(SeqId, u32)> = Vec::new();
-        for slot in batch.lanes.iter() {
-            let Some(id) = slot else { continue };
-            let (tok, pos) = {
-                let s = &self.seqs[id];
-                (s.last_token(), s.kv_len)
-            };
-            // Append the input token's KV (COW protects shared tails),
-            // then read logits over the stored sequence.
-            self.kv.grow_one(*id)?;
-            let (kc, vc) = self.token_cols(tok, pos);
-            self.kv.write_token(*id, pos, &kc, &vc)?;
-            let logits = self.logits_for(*id, tok)?;
-            let seq = self.seqs.get_mut(id).unwrap();
-            seq.kv_len += 1;
-            let new_tok = self.sampler.sample(&logits, seq.params);
-            seq.generated.push(new_tok);
-            // Cannot be Full: the pre-decode stream scan guaranteed at
-            // least one credit and this is the step's only token. A
-            // mid-step disconnect is reaped by the next scan.
-            let _ = seq.emit_token(new_tok);
-            emitted.push((*id, new_tok));
-            self.metrics.tokens_generated += 1;
-            self.metrics.decode_rows += 1;
-            let done_eos = new_tok == EOS;
-            let done_stop = seq.hit_stop();
-            let done_len = seq.generated.len() >= seq.max_new_tokens || seq.kv_len + 1 >= max_seq;
-            if done_eos || done_stop || done_len {
-                let reason = if done_eos {
-                    FinishReason::Eos
-                } else if done_stop {
-                    FinishReason::Stop
-                } else {
-                    FinishReason::MaxTokens
-                };
-                finished.push((*id, reason));
-            }
-        }
-        for (id, token) in emitted {
-            self.push_trace(TraceEvent::Token { id, token });
-        }
-        for (id, reason) in finished {
-            let mut seq = self.seqs.remove(&id).unwrap();
-            self.batcher.remove(id)?;
-            self.finish_seq(&mut seq, reason)?;
-        }
-        self.metrics.decode_steps += 1;
-        let dt = self.clock.now().saturating_sub(t0);
-        self.metrics.step.record(dt);
-        let lanes = batch.occupancy().max(1) as u32;
-        self.metrics.per_token.record(dt / lanes);
-        Ok(())
-    }
-
-    /// Preempt one victim under KV pressure: the shared census spans
-    /// running *and* paused sequences (a parked slow client's KV is
-    /// reclaimable like any other), ordered by the scheduler's
-    /// (priority asc, parked first, reusable desc, recency) rule.
-    fn preempt_one(&mut self) -> Result<()> {
-        let mut pool = self.batcher.running_ids();
-        pool.extend(self.paused.iter().copied());
-        let candidates = policy::preempt_candidates(&self.kv, &self.seqs, &pool);
-        let id = preemption_victim(&candidates)
-            .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
-        let mut seq = self.seqs.remove(&id).unwrap();
-        self.metrics.preemptions += 1;
-        self.push_trace(TraceEvent::Preempted {
-            id,
-            priority: seq.priority,
-            pool: candidates.iter().map(|c| (c.id, c.priority)).collect(),
-        });
-        if self.paused.contains(&id) {
-            self.paused.retain(|&p| p != id);
-        } else {
-            self.batcher.remove(id)?;
-        }
-        self.finish_seq(&mut seq, FinishReason::Preempted)
-    }
-
-    // -----------------------------------------------------------------
-    // Stream flow control
-    // -----------------------------------------------------------------
-
-    /// Apply backpressure at the top of every step. The *decisions*
-    /// (resume order, hysteresis, policy) are the shared
-    /// [`policy::plan_stream_ops`]; this method supplies only the sim's
-    /// mechanics for each transition. Running *before* the scheduling
-    /// decision keeps the scheduler's view of the running set accurate,
-    /// and checking credit before decode means a generated token always
-    /// has a slot — backpressure halts generation, it never loses data.
-    fn service_streams(&mut self) -> Result<()> {
-        let free_lanes = self.cfg.max_running.saturating_sub(self.batcher.len());
-        let now = self.clock.now();
-        let ops = policy::plan_stream_ops(
-            &self.seqs,
-            &self.paused,
-            &self.batcher.running_ids(),
-            self.cfg.backpressure,
-            free_lanes,
-            now,
-            self.cfg.stream_idle_timeout(),
-        );
-        for op in ops {
-            match op {
-                StreamOp::Resume(id) => {
-                    self.batcher.admit(id)?;
-                    self.paused.retain(|&p| p != id);
-                    let seq = self.seqs.get_mut(&id).unwrap();
-                    seq.state = SeqState::Decoding;
-                    seq.paused_at = None;
-                    self.metrics.backpressure_resumes += 1;
-                    self.push_trace(TraceEvent::Resumed { id });
-                }
-                StreamOp::ReapPaused(id) => {
-                    self.paused.retain(|&p| p != id);
-                    let mut seq = self.seqs.remove(&id).unwrap();
-                    self.metrics.client_disconnects += 1;
-                    self.finish_seq(&mut seq, FinishReason::Cancelled)?;
-                }
-                StreamOp::ReapRunning(id) => {
-                    let mut seq = self.seqs.remove(&id).unwrap();
-                    self.batcher.remove(id)?;
-                    self.metrics.client_disconnects += 1;
-                    self.finish_seq(&mut seq, FinishReason::Cancelled)?;
-                }
-                StreamOp::Pause(id) => {
-                    self.batcher.remove(id)?;
-                    let seq = self.seqs.get_mut(&id).unwrap();
-                    seq.state = SeqState::Paused;
-                    seq.paused_at = Some(now);
-                    self.paused.push(id);
-                    self.metrics.backpressure_pauses += 1;
-                    self.push_trace(TraceEvent::Paused { id });
-                }
-                StreamOp::DropOverrun(id) => {
-                    let mut seq = self.seqs.remove(&id).unwrap();
-                    self.batcher.remove(id)?;
-                    self.metrics.backpressure_drops += 1;
-                    self.finish_seq(&mut seq, FinishReason::Overrun)?;
-                }
-                StreamOp::ExpireIdle(id) => {
-                    self.paused.retain(|&p| p != id);
-                    let mut seq = self.seqs.remove(&id).unwrap();
-                    self.metrics.stream_idle_drops += 1;
-                    self.push_trace(TraceEvent::Expired { id });
-                    self.finish_seq(&mut seq, FinishReason::Overrun)?;
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Register the retired sequence's stored tokens in the prefix
-    /// cache. Unlike the real engine (whose generated KV may still be
-    /// device-resident), the sim writes synchronously into the paged
-    /// store, so prompt *and* generated tokens are publishable.
-    fn register_prefix(&mut self, seq: &Sequence) {
-        if !self.cfg.prefix_cache || !self.kv.contains(seq.id) {
-            return;
-        }
-        let Some(kv_len) = self.kv.seq_len(seq.id) else {
-            return;
-        };
-        let Some(blocks) = self.kv.seq_blocks(seq.id) else {
-            return;
-        };
-        let mut toks: Vec<u32> = Vec::with_capacity(kv_len);
-        toks.extend_from_slice(&seq.prompt);
-        for &g in &seq.generated {
-            if toks.len() >= kv_len {
-                break;
-            }
-            toks.push(g);
-        }
-        toks.truncate(kv_len);
-        self.prefix.insert(&toks, &blocks, &mut self.kv);
-    }
-
-    fn finish_seq(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
-        seq.state = SeqState::Finished(reason);
-        let usage = seq.usage();
-        seq.emit_finish(reason, usage);
-        self.push_trace(TraceEvent::Finished {
-            id: seq.id,
-            reason,
-            usage,
-        });
-        self.metrics.record_finish(&seq.tenant, usage);
-        self.register_prefix(seq);
-        if self.kv.contains(seq.id) {
-            self.kv.free_seq(seq.id)?;
-        }
-        self.metrics.requests_finished += 1;
-        Ok(())
-    }
-}
-
-impl InferenceEngine for SimEngine {
-    /// Queue a typed request; the prompt (+1 generated token) must fit
-    /// the sim's `max_seq` and the KV pool.
-    fn submit(&mut self, req: GenRequest) -> Result<SubmissionHandle> {
-        let prompt_tokens = router::encode_prompt(&self.tokenizer, &req.prompt)?;
-        if prompt_tokens.len() + 1 > self.spec.max_seq {
-            return Err(Error::Request(format!(
-                "prompt of {} tokens exceeds sim max_seq {}",
-                prompt_tokens.len(),
-                self.spec.max_seq
-            )));
-        }
-        let need = (prompt_tokens.len() + 1).div_ceil(self.cfg.kv_block_tokens);
-        if need > self.cfg.kv_total_blocks {
-            return Err(Error::Request(format!(
-                "prompt needs {need} KV blocks, pool has {}",
-                self.cfg.kv_total_blocks
-            )));
-        }
-        router::enqueue_request(
-            &mut self.router,
-            &self.tokenizer,
-            &req,
-            prompt_tokens,
-            &SubmitContext {
-                max_new_cap: self.cfg.max_new_tokens,
-                stream_capacity: self.cfg.stream_capacity,
-                now: self.clock.now(),
-                wakeup: self.wakeup.as_ref(),
-            },
-        )
-    }
-
-    fn set_wakeup(&mut self, wakeup: Wakeup) {
-        self.wakeup = Some(wakeup);
-    }
-
-    /// Run one scheduling iteration (same policy as the real engine):
-    /// service stream flow control, then prefill/decode/idle. Virtual
-    /// time advances one [`SIM_STEP`] per call, whatever the action —
-    /// idle time is time too (it is what the idle timeout measures).
-    fn step(&mut self) -> Result<Action> {
-        self.clock.advance(SIM_STEP);
-        self.service_streams()?;
-        let state = policy::plan_admission(
-            &self.cfg,
-            &mut self.kv,
-            &mut self.prefix,
-            &mut self.metrics,
-            self.router.peek_next(),
-            self.router.queued(),
-            self.batcher.len(),
-        );
-        let action = decide(state);
-        match action {
-            Action::Prefill => self.step_prefill()?,
-            Action::Decode => self.step_decode()?,
-            Action::Idle => {}
-        }
-        Ok(action)
-    }
-
-    /// Cancel a queued, running, or paused request; its KV blocks are
-    /// released (stored tokens may survive in the prefix cache, held by
-    /// the tree alone).
-    fn cancel(&mut self, id: RequestId) -> Result<bool> {
-        if let Some(mut seq) = self.router.take(id) {
-            self.metrics.cancellations += 1;
-            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
-            return Ok(true);
-        }
-        if self.paused.contains(&id) {
-            self.paused.retain(|&p| p != id);
-            let mut seq = self.seqs.remove(&id).unwrap();
-            self.metrics.cancellations += 1;
-            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
-            return Ok(true);
-        }
-        if let Some(mut seq) = self.seqs.remove(&id) {
-            self.metrics.cancellations += 1;
-            self.batcher.remove(id)?;
-            self.finish_seq(&mut seq, FinishReason::Cancelled)?;
-            return Ok(true);
-        }
-        Ok(false)
-    }
-
-    fn metrics(&self) -> &EngineMetrics {
-        &self.metrics
-    }
-
-    fn is_idle(&self) -> bool {
-        self.router.queued() == 0 && self.batcher.is_empty() && self.paused.is_empty()
-    }
-
-    fn queued(&self) -> usize {
-        self.router.queued()
-    }
-
-    fn running(&self) -> usize {
-        self.batcher.len()
-    }
-
-    fn paused(&self) -> usize {
-        self.paused.len()
-    }
-
-    fn queue_depths(&self) -> Vec<(i32, usize)> {
-        self.router.depths_by_priority()
-    }
-
-    fn encode(&self, text: &str) -> Vec<u32> {
-        self.tokenizer.encode(text)
-    }
-
-    fn decode(&self, tokens: &[u32]) -> String {
-        self.tokenizer.decode(tokens)
+        EngineCore::with_backend(SimBackend::new(spec), cfg, clock)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::GenEvent;
+    use crate::api::{FinishReason, GenEvent, GenRequest, InferenceEngine, SubmissionHandle};
     use crate::sampling::SamplingParams;
 
     fn cfg(prefix_cache: bool) -> EngineConfig {

@@ -9,11 +9,18 @@
 //! readers, readers that stall forever, readers that disconnect,
 //! cancels, admin bulk-cancels, stop sequences, tight token budgets).
 //! The harness drives the *entire* stack — router → policy → scheduler
-//! → batcher → kvcache/prefixcache → [`SimEngine`] → api streams —
-//! under a virtual clock ([`SimClock`]; the sim advances
+//! → batcher → kvcache/prefixcache → [`crate::core::EngineCore`] → api
+//! streams — under a virtual clock ([`SimClock`]; the sim advances
 //! [`crate::simengine::SIM_STEP`] per step), applying the scripted
 //! client actions in a seed-derived (deliberately reordered) order each
 //! step.
+//!
+//! The harness is generic over the engine's compute [`Backend`]:
+//! [`run_scenario`] drives the hash-model [`SimEngine`], and
+//! [`run_scenario_on`] drives the same scripted world through any
+//! other backend — `tests/differential_backends.rs` uses it to run
+//! `EngineCore<StubBackend>` in lockstep and assert byte-identical
+//! reports, proving the orchestration core treats backends uniformly.
 //!
 //! After every simulated step four global oracles run:
 //!
@@ -38,7 +45,14 @@
 //!    counter.
 //!
 //! A violation reports the seed, the step, and a replay command; the
-//! same seed reproduces the run byte-identically (equal [`ScenarioReport::fingerprint`]).
+//! same seed reproduces the run byte-identically (equal
+//! [`ScenarioReport::fingerprint`]).
+//!
+//! [`run_crash_recovery`] additionally scripts a mid-run engine crash:
+//! the core is dropped at a seed-derived step, a fresh core is built,
+//! and the unfinished requests are resubmitted from the server-side
+//! [`RequestRegistry`] — the refcount oracle holds on every step of
+//! both lives and everything resubmitted still finishes.
 //!
 //! See `docs/ARCHITECTURE.md` § "Testing & determinism" for the
 //! workflow (seed matrix, replay, adding scenarios).
@@ -48,10 +62,13 @@ use std::fmt;
 
 use crate::api::{FinishReason, GenEvent, GenRequest, InferenceEngine, SubmissionHandle, Usage};
 use crate::config::{BackpressurePolicy, EngineConfig};
+use crate::core::{Backend, EngineCore, TraceEvent};
 use crate::kvcache::SeqId;
-use crate::simengine::{EngineAudit, SimEngine, SimSpec, TraceEvent};
+use crate::router::RequestRegistry;
+use crate::simengine::{SimEngine, SimSpec};
 use crate::util::rng::{splitmix64, Rng};
 
+pub use crate::core::check_kv_conservation;
 pub use crate::simengine::SIM_STEP;
 /// The virtual clock the sim path runs on (re-export; see
 /// [`crate::util::clock::Clock`]).
@@ -93,6 +110,20 @@ pub struct ClientScript {
     pub reader: Reader,
     /// Harness step at which the client cancels its own request.
     pub cancel_at: Option<usize>,
+}
+
+impl ClientScript {
+    /// The typed request this script submits.
+    fn request(&self) -> GenRequest {
+        let mut req = GenRequest::text(&self.prompt)
+            .tenant(&self.tenant)
+            .priority(self.priority)
+            .max_new_tokens(self.max_new_tokens);
+        if !self.stop.is_empty() {
+            req = req.stop(self.stop.clone());
+        }
+        req
+    }
 }
 
 /// A fully expanded scenario: everything [`run_scenario`] needs,
@@ -299,68 +330,15 @@ fn fold_event(acc: u64, ev: &TraceEvent) -> u64 {
     }
 }
 
+/// Fingerprint of a trace slice on its own (no seed folding): the
+/// backend-equivalence lockstep test compares these across engines.
+pub fn trace_fingerprint(events: &[TraceEvent]) -> u64 {
+    events.iter().fold(0x5EEDu64, fold_event)
+}
+
 // ---------------------------------------------------------------------
 // Oracles
 // ---------------------------------------------------------------------
-
-/// Oracle 1: KV refcount conservation over a full audit snapshot.
-pub fn check_kv_conservation(audit: &EngineAudit) -> Result<(), String> {
-    let total = audit.kv.total_blocks;
-    if audit.kv.refcounts.len() != total {
-        return Err("audit refcount table does not cover the pool".into());
-    }
-    let mut owners = vec![0u32; total];
-    for (id, blocks) in &audit.kv.seq_blocks {
-        for &b in blocks {
-            if b >= total {
-                return Err(format!("seq {id} references out-of-pool block {b}"));
-            }
-            owners[b] += 1;
-        }
-    }
-    for &b in &audit.tree_blocks {
-        if b >= total {
-            return Err(format!("prefix tree references out-of-pool block {b}"));
-        }
-        owners[b] += 1;
-    }
-    let mut in_free = vec![false; total];
-    for &b in &audit.kv.free_list {
-        if b >= total {
-            return Err(format!("free list holds out-of-pool block {b}"));
-        }
-        if in_free[b] {
-            return Err(format!("block {b} is on the free list twice (double free)"));
-        }
-        in_free[b] = true;
-    }
-    let mut allocated = 0usize;
-    for b in 0..total {
-        let rc = audit.kv.refcounts[b];
-        if rc != owners[b] {
-            return Err(format!(
-                "block {b}: refcount {rc} != {} visible owners (leak or double free)",
-                owners[b]
-            ));
-        }
-        if (rc == 0) != in_free[b] {
-            return Err(format!(
-                "block {b}: refcount {rc} but on-free-list={}",
-                in_free[b]
-            ));
-        }
-        if rc > 0 {
-            allocated += 1;
-        }
-    }
-    if allocated + audit.kv.free_list.len() != total {
-        return Err(format!(
-            "allocated {allocated} + free {} != total {total}",
-            audit.kv.free_list.len()
-        ));
-    }
-    Ok(())
-}
 
 /// Oracle 3 (one event): the preemption victim's priority must be
 /// minimal over its candidate pool.
@@ -434,19 +412,62 @@ impl ClientState {
             limit -= 1;
         }
     }
+
+    /// Apply one step of the scripted reader behavior.
+    fn read_scripted(&mut self, reader: Reader, step: usize) {
+        match reader {
+            Reader::Eager => self.receive(usize::MAX),
+            Reader::EveryK { period, burst } => {
+                if step % period.max(1) == 0 {
+                    self.receive(burst);
+                }
+            }
+            Reader::StallAfter { tokens } => {
+                let left = tokens.saturating_sub(self.drained.len());
+                self.receive(left);
+            }
+            Reader::DisconnectAfter { tokens } => {
+                let left = tokens.saturating_sub(self.drained.len());
+                self.receive(left);
+                if self.drained.len() >= tokens {
+                    self.handle = None; // drop: client vanishes
+                    self.dropped = true;
+                }
+            }
+        }
+    }
 }
 
-/// Run one seeded scenario end to end with all four oracles armed.
+/// Run one seeded scenario end to end on the hash-model sim engine with
+/// all four oracles armed.
 pub fn run_scenario(seed: u64) -> Result<ScenarioReport, Violation> {
-    run_with_hook(&generate_scenario(seed), &mut |_, _| {})
+    let scenario = generate_scenario(seed);
+    let engine = SimEngine::new(scenario.cfg.clone(), SimSpec::default()).map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("engine construction failed: {e}"),
+    })?;
+    run_with_hook(&scenario, engine, &mut |_, _| {})
 }
 
-/// Like [`run_scenario`], with a per-step hook called right after the
-/// engine step and *before* the oracles — the fault-injection port the
-/// `#[cfg(test)]` double-free test uses.
-fn run_with_hook(
+/// Run a scenario on any [`Backend`] (the engine must have been built
+/// from `scenario.cfg`). The differential lockstep test drives the sim
+/// and stub backends through the same scenario and asserts equal
+/// reports.
+pub fn run_scenario_on<B: Backend>(
     scenario: &Scenario,
-    hook: &mut dyn FnMut(&mut SimEngine, usize),
+    engine: EngineCore<B>,
+) -> Result<ScenarioReport, Violation> {
+    run_with_hook(scenario, engine, &mut |_, _| {})
+}
+
+/// Like [`run_scenario_on`], with a per-step hook called right after
+/// the engine step and *before* the oracles — the fault-injection port
+/// the `#[cfg(test)]` double-free test uses.
+fn run_with_hook<B: Backend>(
+    scenario: &Scenario,
+    mut engine: EngineCore<B>,
+    hook: &mut dyn FnMut(&mut EngineCore<B>, usize),
 ) -> Result<ScenarioReport, Violation> {
     let seed = scenario.seed;
     let violation = |step: usize, message: String| Violation {
@@ -454,8 +475,6 @@ fn run_with_hook(
         step,
         message,
     };
-    let mut engine = SimEngine::new(scenario.cfg.clone(), SimSpec::default())
-        .map_err(|e| violation(0, format!("engine construction failed: {e}")))?;
     engine.enable_trace();
     // The action-reorder stream is independent of the scenario stream,
     // but equally seed-determined.
@@ -480,15 +499,8 @@ fn run_with_hook(
         // Arrivals due this step.
         for (i, c) in scenario.clients.iter().enumerate() {
             if c.arrive_step == step && !states[i].submitted {
-                let mut req = GenRequest::text(&c.prompt)
-                    .tenant(&c.tenant)
-                    .priority(c.priority)
-                    .max_new_tokens(c.max_new_tokens);
-                if !c.stop.is_empty() {
-                    req = req.stop(c.stop.clone());
-                }
                 let h = engine
-                    .submit(req)
+                    .submit(c.request())
                     .map_err(|e| violation(step, format!("submit rejected: {e}")))?;
                 states[i].engine_id = Some(h.id);
                 states[i].handle = Some(h);
@@ -513,26 +525,7 @@ fn run_with_hook(
                 continue;
             }
             let reader = if cleanup { Reader::Eager } else { c.reader };
-            match reader {
-                Reader::Eager => states[i].receive(usize::MAX),
-                Reader::EveryK { period, burst } => {
-                    if step % period.max(1) == 0 {
-                        states[i].receive(burst);
-                    }
-                }
-                Reader::StallAfter { tokens } => {
-                    let left = tokens.saturating_sub(states[i].drained.len());
-                    states[i].receive(left);
-                }
-                Reader::DisconnectAfter { tokens } => {
-                    let left = tokens.saturating_sub(states[i].drained.len());
-                    states[i].receive(left);
-                    if states[i].drained.len() >= tokens {
-                        states[i].handle = None; // drop: client vanishes
-                        states[i].dropped = true;
-                    }
-                }
-            }
+            states[i].read_scripted(reader, step);
         }
 
         // Admin bulk-cancel of one tenant, across "connections".
@@ -695,13 +688,186 @@ fn run_with_hook(
     })
 }
 
+// ---------------------------------------------------------------------
+// Crash recovery
+// ---------------------------------------------------------------------
+
+/// Outcome of one crash-recovery run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CrashRecoveryReport {
+    pub seed: u64,
+    pub crash_step: usize,
+    /// Requests whose terminal event was delivered before the crash.
+    pub finished_before_crash: usize,
+    /// Requests resubmitted to the rebuilt core from the registry.
+    pub resubmitted: usize,
+    /// Requests the rebuilt core finished (includes resubmissions and
+    /// post-crash arrivals).
+    pub finished_after_recovery: u64,
+}
+
+/// Script a mid-run engine crash: drive a seeded scenario while
+/// mirroring every submission in a server-side [`RequestRegistry`],
+/// drop the whole core at a seed-derived step, rebuild a fresh one, and
+/// resubmit everything the registry still lists as in flight. The KV
+/// refcount oracle runs on every step of both engine lives; every
+/// client retained after recovery must still receive a terminal event,
+/// and the rebuilt core must drain to a clean audit.
+pub fn run_crash_recovery(seed: u64) -> Result<CrashRecoveryReport, Violation> {
+    let scenario = generate_scenario(seed);
+    let violation = |step: usize, message: String| Violation {
+        seed,
+        step,
+        message,
+    };
+    let build = |step: usize| {
+        SimEngine::new(scenario.cfg.clone(), SimSpec::default())
+            .map_err(|e| violation(step, format!("engine construction failed: {e}")))
+    };
+    let mut engine = build(0)?;
+    let registry = RequestRegistry::new();
+    let n = scenario.clients.len();
+    let mut states: Vec<ClientState> = (0..n).map(|_| ClientState::new()).collect();
+    let mut gids: Vec<Option<String>> = vec![None; n];
+    // Crash while the scenario is still busy: after the first arrivals,
+    // well before the cleanup horizon.
+    let crash_step = 8 + (seed as usize % 24);
+
+    // Phase A: the scripted world, up to the crash.
+    for step in 0..crash_step {
+        for (i, c) in scenario.clients.iter().enumerate() {
+            if c.arrive_step == step && !states[i].submitted {
+                let h = engine
+                    .submit(c.request())
+                    .map_err(|e| violation(step, format!("submit rejected: {e}")))?;
+                gids[i] = Some(registry.register(h.id, &c.tenant, c.priority));
+                states[i].engine_id = Some(h.id);
+                states[i].handle = Some(h);
+                states[i].submitted = true;
+            }
+        }
+        for i in 0..n {
+            if states[i].dropped || states[i].handle.is_none() {
+                continue;
+            }
+            states[i].read_scripted(scenario.clients[i].reader, step);
+            if states[i].finished.is_some() {
+                // The terminal event was delivered: the server prunes
+                // the registry entry (same rule as `pump_events`).
+                if let Some(gid) = &gids[i] {
+                    registry.remove(gid);
+                }
+            }
+        }
+        if !engine.is_idle() {
+            engine
+                .step()
+                .map_err(|e| violation(step, format!("engine step failed: {e}")))?;
+        }
+        check_kv_conservation(&engine.audit()).map_err(|m| violation(step, m))?;
+    }
+    let finished_before_crash = states.iter().filter(|s| s.finished.is_some()).count();
+
+    // The crash: the core is gone, along with every in-flight stream.
+    drop(engine);
+    for s in states.iter_mut() {
+        s.handle = None;
+    }
+
+    // Recovery: a fresh core; the registry tells the server side which
+    // requests never delivered a terminal event — those are resubmitted
+    // (a request that finished before the crash stays finished). Late
+    // arrivals that never reached the old core are submitted too.
+    let mut engine = build(crash_step)?;
+    let mut resubmitted = 0usize;
+    for (i, c) in scenario.clients.iter().enumerate() {
+        let lost_inflight = gids[i]
+            .as_ref()
+            .map(|g| registry.resolve(g).is_some())
+            .unwrap_or(false);
+        if states[i].dropped || states[i].finished.is_some() {
+            continue;
+        }
+        if lost_inflight || !states[i].submitted {
+            let h = engine
+                .submit(c.request())
+                .map_err(|e| violation(crash_step, format!("resubmit rejected: {e}")))?;
+            if let Some(gid) = gids[i].take() {
+                registry.remove(&gid);
+                resubmitted += 1;
+            }
+            gids[i] = Some(registry.register(h.id, &c.tenant, c.priority));
+            states[i].engine_id = Some(h.id);
+            states[i].handle = Some(h);
+            states[i].submitted = true;
+        }
+    }
+
+    // Phase B: drain the rebuilt core with eager readers; the oracles
+    // must hold exactly as on a clean run.
+    let mut step = crash_step;
+    while !engine.is_idle() {
+        if step > MAX_STEPS {
+            return Err(violation(
+                step,
+                "recovered scenario did not terminate (liveness wedge)".into(),
+            ));
+        }
+        engine
+            .step()
+            .map_err(|e| violation(step, format!("engine step failed: {e}")))?;
+        for s in states.iter_mut() {
+            s.receive(usize::MAX);
+        }
+        check_kv_conservation(&engine.audit()).map_err(|m| violation(step, m))?;
+        step += 1;
+    }
+    for s in states.iter_mut() {
+        s.receive(usize::MAX);
+    }
+
+    // End-state oracles: clean audit, every retained client finished.
+    let audit = engine.audit();
+    if !audit.live.is_empty() || audit.queued != 0 {
+        return Err(violation(step, "idle engine still holds sequences".into()));
+    }
+    for (i, s) in states.iter().enumerate() {
+        if s.dropped {
+            continue;
+        }
+        if s.finished.is_none() {
+            return Err(violation(
+                step,
+                format!("client {i} never received a finish event after recovery"),
+            ));
+        }
+        if let Some(gid) = &gids[i] {
+            registry.remove(gid);
+        }
+    }
+
+    Ok(CrashRecoveryReport {
+        seed,
+        crash_step,
+        finished_before_crash,
+        resubmitted,
+        finished_after_recovery: engine.metrics.requests_finished,
+    })
+}
+
 /// Run a scenario with a double-free injected through the KV cache's
 /// `#[cfg(test)]` fault hook at the first step where live KV exists.
 /// The refcount oracle must catch it on that very step.
 #[cfg(test)]
 pub fn run_scenario_with_double_free(seed: u64) -> Result<ScenarioReport, Violation> {
+    let scenario = generate_scenario(seed);
+    let engine = SimEngine::new(scenario.cfg.clone(), SimSpec::default()).map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("engine construction failed: {e}"),
+    })?;
     let mut injected = false;
-    run_with_hook(&generate_scenario(seed), &mut |engine, _step| {
+    run_with_hook(&scenario, engine, &mut |engine, _step| {
         if !injected {
             injected = engine.inject_double_free();
         }
@@ -779,6 +945,7 @@ mod tests {
 
     #[test]
     fn kv_conservation_oracle_rejects_leaks() {
+        use crate::core::EngineAudit;
         use crate::kvcache::KvAudit;
         // A block referenced by a sequence but with refcount 0 and on
         // the free list: the double-free shape.
@@ -807,5 +974,14 @@ mod tests {
             queued: 0,
         };
         assert!(check_kv_conservation(&audit).is_ok());
+    }
+
+    #[test]
+    fn crash_recovery_reproduces_byte_identically() {
+        for seed in [2u64, 5] {
+            let a = run_crash_recovery(seed).expect("crash recovery passes oracles");
+            let b = run_crash_recovery(seed).expect("crash recovery passes oracles");
+            assert_eq!(a, b, "seed {seed} must reproduce exactly");
+        }
     }
 }

@@ -1,0 +1,296 @@
+//! Targeted scenarios for the serving core's own features: the
+//! cross-request dedup of concurrent identical cold prompts, the
+//! per-tenant concurrency quota, and the production trace/audit surface
+//! in the stats snapshot.
+
+use fdpp::api::{FinishReason, GenRequest, InferenceEngine};
+use fdpp::config::EngineConfig;
+use fdpp::simengine::{SimEngine, SimSpec, TraceEvent};
+use fdpp::util::json::Json;
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        kv_block_tokens: 8,
+        kv_total_blocks: 128,
+        max_new_tokens: 16,
+        prefix_cache: true,
+        stream_capacity: 64,
+        ..EngineConfig::default()
+    }
+}
+
+/// A prompt long enough that its reusable prefix spans whole 8-token
+/// blocks, whose greedy generation runs at least `min_tokens` (the hash
+/// model is deterministic, so this is a stable selection).
+fn probe_prompt(tag: &str, min_tokens: usize) -> String {
+    for salt in 0..64u32 {
+        let p = format!("{tag} shared prompt probe {salt:02}!!");
+        let mut e = SimEngine::new(cfg(), SimSpec::default()).unwrap();
+        let h = e.submit(GenRequest::text(&p).max_new_tokens(12)).unwrap();
+        e.run_to_completion().unwrap();
+        if h.drain().0.len() >= min_tokens {
+            return p;
+        }
+    }
+    panic!("no probe prompt generates {min_tokens}+ tokens");
+}
+
+// ---------------------------------------------------------------------
+// Cross-request dedup
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_identical_cold_prompts_dedup_instead_of_racing() {
+    let prompt = probe_prompt("cold", 4);
+    let mut e = SimEngine::new(cfg(), SimSpec::default()).unwrap();
+    e.enable_trace();
+    let a = e.submit(GenRequest::text(&prompt).max_new_tokens(6)).unwrap();
+    let b = e.submit(GenRequest::text(&prompt).max_new_tokens(6)).unwrap();
+    e.run_to_completion().unwrap();
+
+    assert_eq!(
+        e.metrics.dedup_hits, 1,
+        "the second admission must wait for the in-flight twin, once"
+    );
+    let (ta, fa) = a.drain();
+    let (tb, fb) = b.drain();
+    assert_eq!(ta, tb, "identical prompts generate identical tokens");
+    let ua = fa.expect("first request finishes").1;
+    let ub = fb.expect("second request finishes").1;
+    assert_eq!(ua.cached_prompt_tokens, 0, "the holder prefills cold");
+    assert!(
+        ub.cached_prompt_tokens >= 8,
+        "the waiter shares the holder's registered blocks: {ub:?}"
+    );
+    assert_eq!(e.metrics.prefix_hits, 1, "one cache hit: the waiter");
+    // The trace shows the waiter admitted *after* the holder finished.
+    let trace = e.take_trace();
+    let holder_finish = trace
+        .iter()
+        .position(|ev| matches!(ev, TraceEvent::Finished { id, .. } if *id == a.id))
+        .expect("holder finish in trace");
+    let waiter_admit = trace
+        .iter()
+        .position(|ev| matches!(ev, TraceEvent::Admitted { id, .. } if *id == b.id))
+        .expect("waiter admission in trace");
+    assert!(
+        holder_finish < waiter_admit,
+        "waiter admission must come after the holder's retirement"
+    );
+}
+
+#[test]
+fn dedup_wait_does_not_starve_other_queued_requests() {
+    // A (holder, long budget), B (identical prompt, defers), C (distinct
+    // prompt). B yields its queue slot while waiting, so C must admit
+    // while A is still decoding — well before A's retirement unblocks B.
+    let prompt = probe_prompt("hol", 8);
+    let mut e = SimEngine::new(cfg(), SimSpec::default()).unwrap();
+    e.enable_trace();
+    let a = e.submit(GenRequest::text(&prompt).max_new_tokens(12)).unwrap();
+    let b = e.submit(GenRequest::text(&prompt).max_new_tokens(4)).unwrap();
+    let c = e.submit(GenRequest::text("a distinct prompt!").max_new_tokens(4)).unwrap();
+    e.run_to_completion().unwrap();
+    let trace = e.take_trace();
+    let admit_of = |id| {
+        trace
+            .iter()
+            .position(|ev| matches!(ev, TraceEvent::Admitted { id: x, .. } if *x == id))
+            .expect("admission in trace")
+    };
+    let a_finish = trace
+        .iter()
+        .position(|ev| matches!(ev, TraceEvent::Finished { id, .. } if *id == a.id))
+        .expect("holder finish in trace");
+    assert!(
+        admit_of(c.id) < a_finish,
+        "the distinct prompt must admit while the waiter defers"
+    );
+    assert!(a_finish < admit_of(b.id), "the waiter still waits for the holder");
+    assert_eq!(e.metrics.dedup_hits, 1);
+}
+
+#[test]
+fn dedup_does_not_delay_distinct_or_cached_prompts() {
+    // Distinct prompts: no dedup interaction.
+    let mut e = SimEngine::new(cfg(), SimSpec::default()).unwrap();
+    let one = GenRequest::text("prompt one, long enough!!").max_new_tokens(4);
+    let two = GenRequest::text("prompt two, long enough!!").max_new_tokens(4);
+    let _a = e.submit(one).unwrap();
+    let _b = e.submit(two).unwrap();
+    e.run_to_completion().unwrap();
+    assert_eq!(e.metrics.dedup_hits, 0);
+
+    // A prompt already served by the cache admits immediately even with
+    // an identical request in flight (nothing left to dedup).
+    let prompt = probe_prompt("warm", 4);
+    let mut e = SimEngine::new(cfg(), SimSpec::default()).unwrap();
+    let _warm = e.submit(GenRequest::text(&prompt).max_new_tokens(4)).unwrap();
+    e.run_to_completion().unwrap();
+    let _c = e.submit(GenRequest::text(&prompt).max_new_tokens(4)).unwrap();
+    let _d = e.submit(GenRequest::text(&prompt).max_new_tokens(4)).unwrap();
+    e.run_to_completion().unwrap();
+    assert_eq!(
+        e.metrics.dedup_hits, 0,
+        "cached prompts never wait on the in-flight table"
+    );
+    assert!(e.metrics.prefix_hits >= 2);
+}
+
+#[test]
+fn dedup_is_disabled_without_the_prefix_cache() {
+    // With no cache there is nothing to share, so identical prompts
+    // race (the pre-dedup behavior) rather than serialize.
+    let prompt = probe_prompt("race", 4);
+    let mut e = SimEngine::new(
+        EngineConfig {
+            prefix_cache: false,
+            ..cfg()
+        },
+        SimSpec::default(),
+    )
+    .unwrap();
+    let a = e.submit(GenRequest::text(&prompt).max_new_tokens(4)).unwrap();
+    let b = e.submit(GenRequest::text(&prompt).max_new_tokens(4)).unwrap();
+    e.run_to_completion().unwrap();
+    assert_eq!(e.metrics.dedup_hits, 0);
+    assert_eq!(a.drain().0, b.drain().0, "outputs still identical");
+}
+
+// ---------------------------------------------------------------------
+// Per-tenant concurrency quota
+// ---------------------------------------------------------------------
+
+#[test]
+fn tenant_quota_rejects_structured_and_releases_on_finish() {
+    let mut e = SimEngine::new(
+        EngineConfig {
+            tenant_max_inflight: 1,
+            ..cfg()
+        },
+        SimSpec::default(),
+    )
+    .unwrap();
+    let first = GenRequest::text("acme request one").tenant("acme").max_new_tokens(4);
+    let _a = e.submit(first).unwrap();
+    let second = GenRequest::text("acme request two").tenant("acme").max_new_tokens(4);
+    let err = e.submit(second).expect_err("second acme request exceeds the quota");
+    assert_eq!(err.wire_code(), "quota_exceeded");
+    assert!(err.to_string().contains("acme"), "names the tenant: {err}");
+    assert_eq!(e.metrics.quota_rejections, 1);
+
+    // Other tenants are unaffected.
+    let globex = GenRequest::text("globex request").tenant("globex").max_new_tokens(4);
+    let _b = e.submit(globex).unwrap();
+    // The empty tenant normalizes to "default" and has its own budget.
+    let _c = e.submit(GenRequest::text("anonymous request").max_new_tokens(4)).unwrap();
+    let err = e
+        .submit(GenRequest::text("anonymous request two").max_new_tokens(4))
+        .expect_err("default tenant is quota'd too");
+    assert_eq!(err.wire_code(), "quota_exceeded");
+
+    // Finishing releases the slot.
+    e.run_to_completion().unwrap();
+    let third = GenRequest::text("acme request three").tenant("acme").max_new_tokens(4);
+    let _d = e.submit(third).unwrap();
+    e.run_to_completion().unwrap();
+    assert_eq!(e.metrics.quota_rejections, 2);
+    assert!(e.is_idle());
+}
+
+#[test]
+fn tenant_quota_counts_queued_running_and_paused() {
+    // Quota 2: one parked (undrained, 1-slot stream) + one queued fills
+    // it; a third submission is rejected until a slot frees.
+    let prompt = probe_prompt("park", 4);
+    let mut e = SimEngine::new(
+        EngineConfig {
+            tenant_max_inflight: 2,
+            stream_capacity: 1,
+            ..cfg()
+        },
+        SimSpec::default(),
+    )
+    .unwrap();
+    let parked = e
+        .submit(GenRequest::text(&prompt).tenant("t").max_new_tokens(12))
+        .unwrap();
+    for _ in 0..6 {
+        e.step().unwrap();
+    }
+    assert_eq!(e.paused(), 1, "undrained 1-slot stream parks its request");
+    let queued = e
+        .submit(GenRequest::text("waits in the queue").tenant("t").max_new_tokens(4))
+        .unwrap();
+    let err = e
+        .submit(GenRequest::text("over quota").tenant("t").max_new_tokens(4))
+        .expect_err("paused + queued fill the quota");
+    assert_eq!(err.wire_code(), "quota_exceeded");
+    // Cancel the parked request: the slot frees immediately.
+    assert!(e.cancel(parked.id).unwrap());
+    let ok = e
+        .submit(GenRequest::text("fits again").tenant("t").max_new_tokens(4))
+        .unwrap();
+    // Drain while stepping (1-slot streams park undrained requests).
+    let mut steps = 0;
+    while !e.is_idle() {
+        e.step().unwrap();
+        queued.drain();
+        ok.drain();
+        steps += 1;
+        assert!(steps < 1_000, "remaining requests must finish");
+    }
+    assert_eq!(e.metrics.quota_rejections, 1);
+}
+
+#[test]
+fn zero_quota_means_unlimited() {
+    let mut e = SimEngine::new(cfg(), SimSpec::default()).unwrap();
+    for i in 0..8 {
+        let req = GenRequest::text(format!("req {i}")).tenant("t").max_new_tokens(2);
+        e.submit(req).unwrap();
+    }
+    e.run_to_completion().unwrap();
+    assert_eq!(e.metrics.quota_rejections, 0);
+    assert_eq!(e.metrics.requests_finished, 8);
+}
+
+// ---------------------------------------------------------------------
+// Stats expose the audit surface (production sees what simtest sees)
+// ---------------------------------------------------------------------
+
+#[test]
+fn stats_surface_audit_verdict_and_trace_enablement() {
+    let mut e = SimEngine::new(cfg(), SimSpec::default()).unwrap();
+    let stats = e.stats_json();
+    assert_eq!(stats.get("kv_refcount_ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(stats.get("blocks_leaked").and_then(Json::as_usize), Some(0));
+    assert_eq!(
+        stats.get("trace_enabled").and_then(Json::as_bool),
+        Some(false)
+    );
+    assert_eq!(stats.get("dedup_hits").and_then(Json::as_usize), Some(0));
+    assert_eq!(
+        stats.get("quota_rejections").and_then(Json::as_usize),
+        Some(0)
+    );
+
+    e.enable_trace();
+    let h = e.submit(GenRequest::text("audited request").max_new_tokens(4)).unwrap();
+    e.step().unwrap();
+    let stats = e.stats_json();
+    assert_eq!(
+        stats.get("kv_refcount_ok").and_then(Json::as_bool),
+        Some(true),
+        "a healthy mid-flight engine audits clean"
+    );
+    assert_eq!(stats.get("trace_enabled").and_then(Json::as_bool), Some(true));
+    e.run_to_completion().unwrap();
+    let (_, fin) = h.drain();
+    let reason = fin.expect("request finishes").0;
+    assert!(matches!(
+        reason,
+        FinishReason::Eos | FinishReason::MaxTokens | FinishReason::Stop
+    ));
+    assert!(!e.take_trace().is_empty(), "real trace events were recorded");
+}

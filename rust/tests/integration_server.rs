@@ -187,6 +187,114 @@ fn stats_exposes_per_tenant_counters_and_flow_control_fields() {
     assert!(j.field("queue_depths").is_ok());
     assert_eq!(j.req_usize("backpressure_pauses").unwrap(), 0);
     assert_eq!(j.req_usize("backpressure_drops").unwrap(), 0);
+    // Core-split additions: the audit verdict the simulation oracles
+    // check, surfaced on the production stats path, plus the dedup and
+    // quota counters.
+    assert_eq!(
+        j.get("kv_refcount_ok").and_then(Json::as_bool),
+        Some(true),
+        "a healthy engine audits clean over the wire"
+    );
+    assert_eq!(j.req_usize("blocks_leaked").unwrap(), 0);
+    assert_eq!(
+        j.get("trace_enabled").and_then(Json::as_bool),
+        Some(false),
+        "tracing is off by default in production"
+    );
+    assert_eq!(j.req_usize("dedup_hits").unwrap(), 0);
+    assert_eq!(j.req_usize("quota_rejections").unwrap(), 0);
+}
+
+#[test]
+fn tenant_quota_rejections_surface_as_quota_exceeded() {
+    // Quota 1 + a 2-slot stream that parks its undrained request: the
+    // first submission stays in flight deterministically, so the second
+    // must be rejected with the structured quota code.
+    let budget = 600;
+    let (base_cfg, spec, prompt) = cancelable_workload(budget);
+    let cfg = EngineConfig {
+        tenant_max_inflight: 1,
+        stream_capacity: 2,
+        ..base_cfg
+    };
+    let addr = start_server_with(cfg, spec);
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    c.send(&Json::obj(vec![
+        ("id", Json::Str("q1".into())),
+        ("prompt", Json::Str(prompt.clone())),
+        ("tenant", Json::Str("acme".into())),
+        ("max_new_tokens", Json::Num(budget as f64)),
+    ]))
+    .unwrap();
+    let _global = read_accepted(&mut c, "q1");
+
+    // Same tenant, second request: structured quota_exceeded (not the
+    // generic "rejected"), and the error names the tenant.
+    c.send(&Json::obj(vec![
+        ("id", Json::Str("q2".into())),
+        ("prompt", Json::Str("second acme request".into())),
+        ("tenant", Json::Str("acme".into())),
+        ("max_new_tokens", Json::Num(3.0)),
+    ]))
+    .unwrap();
+    let mut saw_quota_error = false;
+    while !saw_quota_error {
+        let j = c.recv().unwrap();
+        if j.get("error").is_some() {
+            assert_eq!(j.req_str("code").unwrap(), "quota_exceeded");
+            assert!(j.req_str("error").unwrap().contains("acme"));
+            saw_quota_error = true;
+        } else {
+            // q1's token lines may interleave before the error.
+            assert!(
+                j.get("token").is_some(),
+                "unexpected line: {}",
+                j.to_string()
+            );
+        }
+    }
+
+    // A different tenant is admitted despite acme being at its limit.
+    let mut other = Client::connect(&addr).unwrap();
+    other.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    other
+        .send(&Json::obj(vec![
+            ("id", Json::Str("g1".into())),
+            ("prompt", Json::Str("globex request".into())),
+            ("tenant", Json::Str("globex".into())),
+            ("max_new_tokens", Json::Num(3.0)),
+        ]))
+        .unwrap();
+    let _g = read_accepted(&mut other, "g1");
+
+    // Cancel q1 to free the slot: the same submission now succeeds.
+    // (The {"ok"} ack and the done line come from different threads and
+    // may interleave with trailing token lines in either order.)
+    c.cancel("q1").unwrap();
+    let mut done = false;
+    let mut saw_ack = false;
+    while !done || !saw_ack {
+        let j = c.recv().unwrap();
+        if j.get("ok").is_some() {
+            saw_ack = true;
+        } else if j.get("done").is_some() {
+            assert_eq!(j.req_str("reason").unwrap(), "cancelled");
+            done = true;
+        }
+    }
+    c.send(&Json::obj(vec![
+        ("id", Json::Str("q3".into())),
+        ("prompt", Json::Str("third acme request".into())),
+        ("tenant", Json::Str("acme".into())),
+        ("max_new_tokens", Json::Num(3.0)),
+    ]))
+    .unwrap();
+    let _global = read_accepted(&mut c, "q3");
+    // And the stats path counts the rejection.
+    let stats = c.stats().unwrap();
+    let j = fdpp::util::json::parse(&stats).unwrap();
+    assert_eq!(j.req_usize("quota_rejections").unwrap(), 1);
 }
 
 #[test]

@@ -14,7 +14,7 @@ use std::time::Duration;
 use fdpp::api::{FinishReason, GenRequest, InferenceEngine};
 use fdpp::config::{BackpressurePolicy, EngineConfig};
 use fdpp::simengine::{SimEngine, SimSpec, TraceEvent, SIM_STEP};
-use fdpp::simtest::{generate_scenario, run_scenario, Reader};
+use fdpp::simtest::{generate_scenario, run_crash_recovery, run_scenario, Reader};
 
 /// The fixed matrix: 24 seeds (>= 20 scenarios) on every PR. Chosen
 /// densely from 1 so a failure's replay command is obvious.
@@ -61,6 +61,44 @@ fn seed_matrix_passes_all_oracles_and_covers_the_fault_plane() {
     assert!(cancellations > 0, "no scenario exercised cancels");
     assert!(disconnects > 0, "no scenario exercised disconnects");
     assert!(expired > 0, "no scenario exercised the idle timeout");
+}
+
+#[test]
+fn crash_recovery_rebuilds_from_registry_with_oracles_intact() {
+    // Scripted mid-run engine crash over part of the seed matrix: the
+    // core is dropped at a seed-derived step, a fresh core is built,
+    // and the registry's surviving entries are resubmitted. The KV
+    // refcount oracle runs on every step of both engine lives; every
+    // retained client must still receive a terminal event, and the
+    // rebuilt core must drain to a clean audit. The aggregate must
+    // actually exercise recovery (some run resubmits in-flight work) —
+    // otherwise the crash step landed before any request ever started.
+    let mut failures = Vec::new();
+    let mut resubmitted = 0usize;
+    let mut finished_before = 0usize;
+    let mut finished_after = 0u64;
+    for seed in 1..=12u64 {
+        match run_crash_recovery(seed) {
+            Ok(r) => {
+                resubmitted += r.resubmitted;
+                finished_before += r.finished_before_crash;
+                finished_after += r.finished_after_recovery;
+            }
+            Err(v) => {
+                eprintln!("{v}");
+                failures.push(seed);
+            }
+        }
+    }
+    assert!(failures.is_empty(), "failing seeds: {failures:?}");
+    assert!(
+        resubmitted > 0,
+        "no run resubmitted in-flight work after the crash"
+    );
+    assert!(finished_after > 0, "recovered cores finished requests");
+    // Requests that finished before the crash stay finished — recovery
+    // never re-runs them (the registry had already pruned their gids).
+    let _ = finished_before;
 }
 
 #[test]
