@@ -11,6 +11,11 @@
 //!    baseline (C1 off) on the same trace. Skipped with a note when
 //!    artifacts are unavailable.
 //!
+//! Both acts end with a perf report: the request-phase breakdown
+//! (queue wait / prefill / decode / paused, aggregated by the span
+//! histograms) and the TTFT/step latency percentiles — the same
+//! numbers `docs/OBSERVABILITY.md` documents on the stats surface.
+//!
 //!     cargo run --release --example serve_workload [n_requests] [rate]
 
 use std::time::{Duration, Instant};
@@ -34,6 +39,44 @@ struct RunReport {
     recompute_rate: f64,
     kv_rebuilds: u64,
     mean_overhead: Duration,
+    perf: String,
+}
+
+/// End-of-run perf report: the request-phase breakdown aggregated by
+/// the engine's span histograms, plus TTFT and step-time percentiles.
+fn perf_lines(m: &fdpp::metrics::EngineMetrics) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "  -- end-of-run perf report --");
+    for (name, h) in [
+        ("queue wait", &m.span_queue_wait),
+        ("prefill", &m.span_prefill),
+        ("decode", &m.span_decode),
+        ("paused", &m.span_paused),
+    ] {
+        let _ = writeln!(
+            out,
+            "  phase {name:<11} mean {:.2?}  p50 {:.2?}  p99 {:.2?}",
+            h.mean(),
+            h.percentile(0.5),
+            h.percentile(0.99)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "  ttft             p50 {:.2?}  p90 {:.2?}  p99 {:.2?}",
+        m.first_token.percentile(0.5),
+        m.first_token.percentile(0.9),
+        m.first_token.percentile(0.99)
+    );
+    let _ = write!(
+        out,
+        "  step             p50 {:.2?}  p99 {:.2?}  overhead mean {:.2?}",
+        m.step.percentile(0.5),
+        m.step.percentile(0.99),
+        m.step_overhead.mean()
+    );
+    out
 }
 
 fn run(label: &str, async_softmax: bool, n: usize, rate: f64) -> fdpp::Result<RunReport> {
@@ -109,6 +152,7 @@ fn run(label: &str, async_softmax: bool, n: usize, rate: f64) -> fdpp::Result<Ru
         recompute_rate: m.recompute_rate(),
         kv_rebuilds: m.kv_rebuilds,
         mean_overhead: m.step_overhead.mean(),
+        perf: perf_lines(m),
     })
 }
 
@@ -126,6 +170,7 @@ fn print_report(r: &RunReport) {
     println!("recompute rate        {:.4}", r.recompute_rate);
     println!("kv rebuilds           {}", r.kv_rebuilds);
     println!("mean host overhead    {:.2?} per step", r.mean_overhead);
+    println!("{}", r.perf);
 }
 
 /// Flow-control demo on the sim twin: mixed-priority traffic with one
@@ -211,6 +256,7 @@ fn flow_control_demo(policy: BackpressurePolicy) -> fdpp::Result<()> {
         "  preemptions {} | finished {} | generated {} tokens",
         m.preemptions, m.requests_finished, m.tokens_generated
     );
+    println!("{}", perf_lines(m));
     Ok(())
 }
 

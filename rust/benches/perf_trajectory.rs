@@ -1,0 +1,62 @@
+//! Perf-trajectory harness: the pinned, seeded serving workload whose
+//! report CI tracks across commits (`BENCH_serving.json`).
+//!
+//! Runs [`fdpp::bench_support::perf_trajectory_report`] twice at the
+//! pinned seed, asserts the two reports are byte-identical (the whole
+//! point of measuring in virtual time — a perf regression shows up as a
+//! *changed trajectory*, never as run-to-run noise), prints the report
+//! as a table, and writes `BENCH_serving.json` to the working
+//! directory.
+//!
+//!   cargo bench --bench perf_trajectory
+
+use fdpp::bench_support::{banner, perf_trajectory_report, row, PERF_TRAJECTORY_SEED};
+use fdpp::util::json::Json;
+
+fn main() {
+    banner(
+        "BENCH_serving",
+        "pinned serving perf trajectory (sim engine, virtual time)",
+    );
+    let report = perf_trajectory_report(PERF_TRAJECTORY_SEED).expect("harness runs");
+    let again = perf_trajectory_report(PERF_TRAJECTORY_SEED).expect("harness runs");
+    let text = report.to_string();
+    assert_eq!(
+        text,
+        again.to_string(),
+        "perf trajectory must be byte-identical across runs of the same seed"
+    );
+
+    let num = |key: &str| {
+        report
+            .get(key)
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("report missing key {key}"))
+    };
+    row("seed", &[format!("{}", num("seed"))]);
+    row("requests", &[format!("{}", num("requests"))]);
+    row("tokens generated", &[format!("{}", num("tokens_generated"))]);
+    row("virtual time", &[format!("{:.0}ms", num("virtual_ms"))]);
+    row("tokens/s (virtual)", &[format!("{:.1}", num("tokens_per_sec"))]);
+    row("steps/s (virtual)", &[format!("{:.1}", num("steps_per_sec"))]);
+    row(
+        "ttft p50 / p99",
+        &[
+            format!("{}us", num("ttft_p50_us")),
+            format!("{}us", num("ttft_p99_us")),
+        ],
+    );
+    row(
+        "inter-token p50 / p99",
+        &[
+            format!("{}us", num("inter_token_p50_us")),
+            format!("{}us", num("inter_token_p99_us")),
+        ],
+    );
+    row("prefix hit rate", &[format!("{:.3}", num("prefix_hit_rate"))]);
+    let overhead = report.field("step_overhead").expect("step_overhead object");
+    row("step overhead (us sums)", &[overhead.to_string()]);
+
+    std::fs::write("BENCH_serving.json", format!("{text}\n")).expect("write BENCH_serving.json");
+    println!("\nwrote BENCH_serving.json ({} bytes)", text.len() + 1);
+}

@@ -42,6 +42,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::Result;
 use crate::metrics::EngineMetrics;
+use crate::obs::SpanBreakdown;
 use crate::sampling::SamplingParams;
 use crate::scheduler::Action;
 use crate::util::json::Json;
@@ -305,6 +306,11 @@ struct StreamState {
     finish_delivered: bool,
     tx_alive: bool,
     rx_alive: bool,
+    /// Observability side channel: the request's lifecycle phase
+    /// breakdown, stamped by the engine when it closes the span (see
+    /// [`crate::obs`]). Rides next to the terminal event rather than in
+    /// [`Usage`] so the typed event surface is unchanged.
+    breakdown: Option<SpanBreakdown>,
 }
 
 #[derive(Debug)]
@@ -357,6 +363,7 @@ pub fn event_channel_with_wakeup(
             finish_delivered: false,
             tx_alive: true,
             rx_alive: true,
+            breakdown: None,
         }),
         readable: Condvar::new(),
         capacity: capacity.max(1),
@@ -416,6 +423,15 @@ impl EventSender {
 
     pub fn capacity(&self) -> usize {
         self.ch.capacity
+    }
+
+    /// Attach the request's lifecycle phase breakdown (engine-side, at
+    /// span close). The first write wins, mirroring [`EventSender::finish`].
+    pub fn set_breakdown(&self, b: SpanBreakdown) {
+        let mut g = self.ch.state.lock().unwrap();
+        if g.breakdown.is_none() {
+            g.breakdown = Some(b);
+        }
     }
 }
 
@@ -501,6 +517,13 @@ impl EventReceiver {
     pub fn capacity(&self) -> usize {
         self.ch.capacity
     }
+
+    /// The request's lifecycle phase breakdown, available once the
+    /// engine closed its span (at finish). `None` while the request is
+    /// live or for engines without span tracking.
+    pub fn span_breakdown(&self) -> Option<SpanBreakdown> {
+        self.ch.state.lock().unwrap().breakdown
+    }
 }
 
 impl Drop for EventReceiver {
@@ -523,6 +546,12 @@ impl SubmissionHandle {
     /// Token-buffer capacity of this request's stream.
     pub fn capacity(&self) -> usize {
         self.events.capacity()
+    }
+
+    /// This request's phase breakdown (queue wait, prefill, decode,
+    /// paused, TTFT), available once it finished. See [`crate::obs`].
+    pub fn span_breakdown(&self) -> Option<SpanBreakdown> {
+        self.events.span_breakdown()
     }
 
     /// Drain every buffered event: generated tokens plus, once the
@@ -607,6 +636,19 @@ pub trait InferenceEngine {
             map.insert("queue_depths".to_string(), Json::Obj(depths));
         }
         j
+    }
+
+    /// The `{"admin": {"dump_flight": n}}` payload: the newest `n`
+    /// entries of the engine's always-on flight recorder (see
+    /// [`crate::obs::FlightRecorder`]). Engines without one return an
+    /// empty dump.
+    fn dump_flight(&self, _n: usize) -> Json {
+        Json::obj(vec![
+            ("capacity", Json::Num(0.0)),
+            ("recorded", Json::Num(0.0)),
+            ("dropped", Json::Num(0.0)),
+            ("entries", Json::Arr(Vec::new())),
+        ])
     }
 
     /// Tokenize prompt text exactly the way `submit` would.
@@ -741,6 +783,24 @@ mod tests {
         let (toks, fin) = h.drain();
         assert_eq!(toks, vec![7], "buffered token survives");
         assert_eq!(fin.unwrap().0, FinishReason::Overrun);
+    }
+
+    #[test]
+    fn span_breakdown_rides_the_stream_first_write_wins() {
+        let (tx, rx) = event_channel(4);
+        assert_eq!(rx.span_breakdown(), None, "live request has no span yet");
+        let b = SpanBreakdown {
+            queue_wait_us: 10,
+            total_us: 10,
+            ..SpanBreakdown::default()
+        };
+        tx.set_breakdown(b);
+        tx.set_breakdown(SpanBreakdown {
+            queue_wait_us: 999,
+            ..SpanBreakdown::default()
+        });
+        let h = SubmissionHandle { id: 1, events: rx };
+        assert_eq!(h.span_breakdown(), Some(b), "first write wins");
     }
 
     #[test]

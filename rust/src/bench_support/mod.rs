@@ -1,8 +1,18 @@
 //! Shared helpers for the figure-reproduction benches: fixed-width table
-//! printing in the shape of the paper's tables/series, and simple timing
-//! utilities for the real-CPU measurement paths.
+//! printing in the shape of the paper's tables/series, simple timing
+//! utilities for the real-CPU measurement paths, and the
+//! [`perf_trajectory_report`] harness behind `benches/perf_trajectory.rs`
+//! and the CI `perf-trajectory` job.
 
+use std::collections::HashMap;
 use std::time::Instant;
+
+use crate::api::{GenEvent, GenRequest, InferenceEngine};
+use crate::config::EngineConfig;
+use crate::simengine::{SimEngine, SimSpec, SIM_STEP};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
 
 /// Print a header band for one reproduced figure/table.
 pub fn banner(id: &str, title: &str) {
@@ -57,6 +67,144 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+// ---------------------------------------------------------------------
+// Perf-trajectory harness (BENCH_serving.json)
+// ---------------------------------------------------------------------
+
+/// The pinned seed `benches/perf_trajectory.rs` and the CI
+/// `perf-trajectory` job run. Changing it invalidates the perf
+/// trajectory history, so don't.
+pub const PERF_TRAJECTORY_SEED: u64 = 2311;
+
+/// Deterministic nearest-rank percentile over a sorted sample
+/// (microseconds). Zero on an empty sample.
+fn pct(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run the pinned serving workload on the deterministic sim engine and
+/// return the `BENCH_serving.json` report object.
+///
+/// The workload is a pure function of `seed`: 24 requests over two
+/// shared prompt prefixes and three tenants, mixed priorities and
+/// budgets, submitted up front against a decode pool of 8 lanes (so
+/// queue wait is real), drained eagerly every step. All rates are in
+/// *virtual* time (the sim clock advances [`SIM_STEP`] per engine
+/// step), which is what makes the report byte-identical across runs —
+/// the determinism CI asserts by diffing two consecutive runs.
+///
+/// Latency percentiles come from the engine's completed request spans
+/// ([`crate::obs::RequestSpan`]): TTFT directly, inter-token as each
+/// span's decode time over its emitted-token gaps. The `step_overhead`
+/// object carries the step-time attribution sums; under the manual sim
+/// clock intra-step deltas are structurally zero, so the *keys* are
+/// the contract here — real-clock engines fill the same fields with
+/// wall time (see `docs/OBSERVABILITY.md`).
+pub fn perf_trajectory_report(seed: u64) -> Result<Json> {
+    const REQUESTS: usize = 24;
+    let cfg = EngineConfig {
+        kv_block_tokens: 8,
+        kv_total_blocks: 256,
+        max_new_tokens: 32,
+        max_running: 8,
+        prefix_cache: true,
+        stream_capacity: 64,
+        flight_recorder_capacity: 4096,
+        seed,
+        ..EngineConfig::default()
+    };
+    let mut engine = SimEngine::new(cfg, SimSpec::default())?;
+    let mut rng = Rng::seed_from_u64(seed);
+    let prefixes = [
+        "sys: shared serving preamble for the perf trajectory. ",
+        "ctx: common retrieval context for half the pool. ",
+    ];
+    let tenants = ["acme", "globex", "initech"];
+    let mut handles = Vec::with_capacity(REQUESTS);
+    for i in 0..REQUESTS {
+        let prompt = format!("{}request {i:02}", prefixes[i % prefixes.len()]);
+        let req = GenRequest::text(&prompt)
+            .tenant(tenants[i % tenants.len()])
+            .priority(rng.gen_range(0, 5) as i32 - 2)
+            .max_new_tokens(4 + rng.gen_range(0, 28));
+        handles.push(engine.submit(req)?);
+    }
+
+    let mut token_counts = vec![0usize; handles.len()];
+    let mut steps = 0u64;
+    while !engine.is_idle() {
+        if steps > 100_000 {
+            return Err(Error::Request(
+                "perf trajectory workload did not drain".into(),
+            ));
+        }
+        engine.step()?;
+        steps += 1;
+        for (i, h) in handles.iter().enumerate() {
+            while let Ok(ev) = h.events.try_recv() {
+                if matches!(ev, GenEvent::Token(_)) {
+                    token_counts[i] += 1;
+                }
+            }
+        }
+    }
+
+    let by_id: HashMap<_, _> = handles.iter().enumerate().map(|(i, h)| (h.id, i)).collect();
+    let mut ttfts = Vec::new();
+    let mut inter = Vec::new();
+    for s in engine.spans().completed() {
+        if let Some(t) = s.ttft() {
+            ttfts.push(t.as_micros() as u64);
+        }
+        let tokens = by_id.get(&s.id).map(|&i| token_counts[i]).unwrap_or(0);
+        if tokens > 1 {
+            inter.push(s.decode_time().as_micros() as u64 / (tokens as u64 - 1));
+        }
+    }
+    ttfts.sort_unstable();
+    inter.sort_unstable();
+
+    let m = &engine.metrics;
+    let virtual_s = steps as f64 * SIM_STEP.as_secs_f64();
+    let tokens = m.tokens_generated as f64;
+    let hit_rate = if m.prefix_lookups > 0 {
+        m.prefix_hits as f64 / m.prefix_lookups as f64
+    } else {
+        0.0
+    };
+    Ok(Json::obj(vec![
+        ("seed", Json::Num(seed as f64)),
+        ("requests", Json::Num(handles.len() as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("virtual_ms", Json::Num(virtual_s * 1e3)),
+        ("tokens_generated", Json::Num(tokens)),
+        ("tokens_per_sec", Json::Num(tokens / virtual_s)),
+        ("steps_per_sec", Json::Num(steps as f64 / virtual_s)),
+        ("ttft_p50_us", Json::Num(pct(&ttfts, 50.0) as f64)),
+        ("ttft_p99_us", Json::Num(pct(&ttfts, 99.0) as f64)),
+        ("inter_token_p50_us", Json::Num(pct(&inter, 50.0) as f64)),
+        ("inter_token_p99_us", Json::Num(pct(&inter, 99.0) as f64)),
+        ("prefix_hit_rate", Json::Num(hit_rate)),
+        (
+            "step_overhead",
+            Json::obj(vec![
+                (
+                    "stream_service_us",
+                    Json::Num(m.attr_stream_service.sum_us() as f64),
+                ),
+                ("policy_us", Json::Num(m.attr_policy.sum_us() as f64)),
+                ("admission_us", Json::Num(m.attr_admission.sum_us() as f64)),
+                ("prefill_us", Json::Num(m.attr_prefill.sum_us() as f64)),
+                ("decode_us", Json::Num(m.attr_decode.sum_us() as f64)),
+            ]),
+        ),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,6 +220,15 @@ mod tests {
     fn geomean_basic() {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn pct_is_nearest_rank_and_total_on_empty() {
+        assert_eq!(pct(&[], 50.0), 0);
+        assert_eq!(pct(&[10], 99.0), 10);
+        assert_eq!(pct(&[1, 2, 3, 4], 0.0), 1);
+        assert_eq!(pct(&[1, 2, 3, 4], 50.0), 3, "idx 1.5 rounds up");
+        assert_eq!(pct(&[1, 2, 3, 4], 100.0), 4);
     }
 
     #[test]

@@ -195,6 +195,13 @@ pub struct EngineConfig {
     /// further submissions are rejected with a structured
     /// `quota_exceeded` error. 0 disables the quota.
     pub tenant_max_inflight: usize,
+    /// Capacity of the always-on flight recorder: the ring of recent
+    /// scheduling events kept for `{"admin": {"dump_flight": n}}` and
+    /// for simulation-test violation reports (see `src/obs`). Oldest
+    /// entries are evicted when full, so memory stays bounded. Must be
+    /// >= 1; this also bounds how many *finished* request spans are
+    /// retained for inspection.
+    pub flight_recorder_capacity: usize,
 }
 
 impl Default for EngineConfig {
@@ -216,6 +223,7 @@ impl Default for EngineConfig {
             backpressure: BackpressurePolicy::PauseDecode,
             stream_idle_timeout_ms: 0,
             tenant_max_inflight: 0,
+            flight_recorder_capacity: 512,
         }
     }
 }
@@ -271,6 +279,10 @@ impl EngineConfig {
                 d.stream_idle_timeout_ms as usize,
             ) as u64,
             tenant_max_inflight: usizes("tenant_max_inflight", d.tenant_max_inflight),
+            flight_recorder_capacity: usizes(
+                "flight_recorder_capacity",
+                d.flight_recorder_capacity,
+            ),
         })
     }
 
@@ -304,6 +316,11 @@ impl EngineConfig {
         if self.stream_capacity == 0 {
             return Err(Error::Config(
                 "stream_capacity must be at least 1".into(),
+            ));
+        }
+        if self.flight_recorder_capacity == 0 {
+            return Err(Error::Config(
+                "flight_recorder_capacity must be at least 1".into(),
             ));
         }
         Ok(())
@@ -357,6 +374,9 @@ mod tests {
         c.max_running = 4;
         c.stream_capacity = 0;
         assert!(c.validate().is_err(), "zero stream capacity rejected");
+        c.stream_capacity = 256;
+        c.flight_recorder_capacity = 0;
+        assert!(c.validate().is_err(), "zero flight capacity rejected");
     }
 
     #[test]

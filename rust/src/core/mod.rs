@@ -55,6 +55,7 @@ use crate::config::EngineConfig;
 use crate::error::{Error, Result};
 use crate::kvcache::{KvAudit, KvCache, KvGeometry, SeqId};
 use crate::metrics::EngineMetrics;
+use crate::obs::{FlightRecorder, SpanTable};
 use crate::policy::{self, StreamOp};
 use crate::prefixcache::PrefixCache;
 use crate::router::{self, Router, SeqState, Sequence, SubmitContext};
@@ -216,6 +217,32 @@ fn audit_accounting(audit: &EngineAudit) -> (Option<String>, usize) {
         );
     }
     (error, leaked)
+}
+
+/// Compact one-line rendering of a [`TraceEvent`] for the flight
+/// recorder (human-readable in dumps and violation reports; bounded in
+/// size even for large preemption pools).
+fn flight_line(ev: &TraceEvent) -> String {
+    match ev {
+        TraceEvent::Admitted { id, cached } => format!("admitted id={id} cached={cached}"),
+        TraceEvent::Token { id, token } => format!("token id={id} tok={token}"),
+        TraceEvent::Paused { id } => format!("paused id={id}"),
+        TraceEvent::Resumed { id } => format!("resumed id={id}"),
+        TraceEvent::Expired { id } => format!("expired id={id}"),
+        TraceEvent::Preempted { id, priority, pool } => {
+            format!("preempted id={id} prio={priority} pool={}", pool.len())
+        }
+        TraceEvent::AdmissionRelief {
+            id,
+            priority,
+            waiter_priority,
+        } => format!("admission_relief id={id} prio={priority} waiter_prio={waiter_priority}"),
+        TraceEvent::Finished { id, reason, usage } => format!(
+            "finished id={id} reason={} gen={}",
+            reason.as_str(),
+            usage.generated_tokens
+        ),
+    }
 }
 
 /// KV refcount conservation over a full audit snapshot: every block's
@@ -445,6 +472,15 @@ pub struct EngineCore<B: Backend> {
     /// enforced against [`EngineConfig::tenant_max_inflight`] at
     /// submit.
     tenant_inflight: HashMap<String, usize>,
+    /// Request-lifecycle spans (always on; see [`crate::obs`]). A
+    /// write-only side structure: it never feeds back into scheduling,
+    /// so simulation trace fingerprints are identical with or without
+    /// it.
+    spans: SpanTable,
+    /// Always-on bounded ring of recent scheduling events (the black
+    /// box behind `{"admin": {"dump_flight": n}}`), unlike the opt-in
+    /// unbounded `trace`.
+    flight: FlightRecorder,
     pub metrics: EngineMetrics,
     pub tokenizer: ByteTokenizer,
 }
@@ -468,6 +504,8 @@ impl<B: Backend> EngineCore<B> {
             trace: None,
             inflight_prompts: HashMap::new(),
             tenant_inflight: HashMap::new(),
+            spans: SpanTable::new(cfg.flight_recorder_capacity),
+            flight: FlightRecorder::new(cfg.flight_recorder_capacity),
             metrics: EngineMetrics::default(),
             tokenizer,
             backend,
@@ -508,9 +546,28 @@ impl<B: Backend> EngineCore<B> {
     }
 
     fn push_trace(&mut self, ev: TraceEvent) {
+        // Every traceable event also lands in the bounded flight ring,
+        // whether or not the unbounded opt-in trace is armed.
+        self.flight.record(self.clock.now(), flight_line(&ev));
         if let Some(t) = self.trace.as_mut() {
             t.push(ev);
         }
+    }
+
+    /// The request-lifecycle span store (live + recently finished).
+    pub fn spans(&self) -> &SpanTable {
+        &self.spans
+    }
+
+    /// The always-on flight recorder.
+    pub fn flight(&self) -> &FlightRecorder {
+        &self.flight
+    }
+
+    /// The newest `n` flight-recorder entries as text, for violation
+    /// reports and logs.
+    pub fn flight_text(&self, n: usize) -> String {
+        self.flight.render(n)
     }
 
     /// Accounting snapshot for the simulation-test oracles and the
@@ -657,6 +714,9 @@ impl<B: Backend> EngineCore<B> {
         let cached = matched.tokens;
         policy::note_admission(&self.cfg, &mut self.metrics, &mut seq, cached);
         self.push_trace(TraceEvent::Admitted { id: seq.id, cached });
+        let t_admit = self.clock.now();
+        self.metrics.attr_admission.record(t_admit.saturating_sub(t0));
+        self.spans.admitted(seq.id, t_admit);
 
         // Backend compute: write the uncached suffix's KV and return
         // the logits row of the prompt's last real position. The
@@ -682,6 +742,7 @@ impl<B: Backend> EngineCore<B> {
         seq.generated.push(tok);
         let now = self.clock.now();
         seq.first_token_at = Some(now);
+        self.spans.first_token(seq.id, now);
         self.metrics.first_token.record(now.saturating_sub(seq.arrived));
         let _ = seq.emit_token(tok);
         self.push_trace(TraceEvent::Token { id: seq.id, token: tok });
@@ -905,6 +966,7 @@ impl<B: Backend> EngineCore<B> {
                     seq.paused_at = None;
                     self.metrics.backpressure_resumes += 1;
                     self.push_trace(TraceEvent::Resumed { id });
+                    self.spans.resumed(id, now);
                 }
                 StreamOp::ReapPaused(id) => {
                     self.paused.retain(|&p| p != id);
@@ -930,6 +992,7 @@ impl<B: Backend> EngineCore<B> {
                     self.paused.push(id);
                     self.metrics.backpressure_pauses += 1;
                     self.push_trace(TraceEvent::Paused { id });
+                    self.spans.paused(id, now);
                 }
                 StreamOp::DropOverrun(id) => {
                     let mut seq = self.seqs.remove(&id).unwrap();
@@ -973,6 +1036,17 @@ impl<B: Backend> EngineCore<B> {
 
     fn finish_seq(&mut self, seq: &mut Sequence, reason: FinishReason) -> Result<()> {
         seq.state = SeqState::Finished(reason);
+        // Close the span before the terminal event goes out, so by the
+        // time a client sees `Finished` the breakdown is readable on
+        // its stream.
+        if let Some(b) = self.spans.finished(seq.id, self.clock.now(), reason) {
+            let m = &mut self.metrics;
+            m.span_queue_wait.record(Duration::from_micros(b.queue_wait_us));
+            m.span_prefill.record(Duration::from_micros(b.prefill_us));
+            m.span_decode.record(Duration::from_micros(b.decode_us));
+            m.span_paused.record(Duration::from_micros(b.paused_us));
+            seq.stream.set_breakdown(b);
+        }
         let usage = seq.usage();
         seq.emit_finish(reason, usage);
         self.push_trace(TraceEvent::Finished {
@@ -1047,6 +1121,9 @@ impl<B: Backend> InferenceEngine for EngineCore<B> {
             },
         )?;
         *self.tenant_inflight.entry(tenant).or_default() += 1;
+        let now = self.clock.now();
+        self.spans.submitted(handle.id, now);
+        self.flight.record(now, format!("submitted id={}", handle.id));
         Ok(handle)
     }
 
@@ -1059,7 +1136,16 @@ impl<B: Backend> InferenceEngine for EngineCore<B> {
     /// then prefill/decode/idle. Returns the action taken.
     fn step(&mut self) -> Result<Action> {
         self.backend.on_step_start(&self.clock);
+        // Step-time attribution: bucket this step's wall time into
+        // stream-service / policy / prefill / decode histograms (the
+        // admission slice inside a prefill step has its own bucket).
+        // Under a manual clock, time only moves in `on_step_start`, so
+        // every bucket records a deterministic zero — reading the clock
+        // here cannot perturb a simulation.
+        let t0 = self.clock.now();
         self.service_streams()?;
+        let t1 = self.clock.now();
+        self.metrics.attr_stream_service.record(t1.saturating_sub(t0));
         let state = policy::plan_admission(
             &self.cfg,
             &mut self.kv,
@@ -1070,9 +1156,21 @@ impl<B: Backend> InferenceEngine for EngineCore<B> {
             self.batcher.len(),
         );
         let action = decide(state);
+        let t2 = self.clock.now();
+        self.metrics.attr_policy.record(t2.saturating_sub(t1));
         match action {
-            Action::Prefill => self.step_prefill()?,
-            Action::Decode => self.step_decode()?,
+            Action::Prefill => {
+                self.step_prefill()?;
+                self.metrics
+                    .attr_prefill
+                    .record(self.clock.now().saturating_sub(t2));
+            }
+            Action::Decode => {
+                self.step_decode()?;
+                self.metrics
+                    .attr_decode
+                    .record(self.clock.now().saturating_sub(t2));
+            }
             Action::Idle => {}
         }
         Ok(action)
@@ -1160,8 +1258,26 @@ impl<B: Backend> InferenceEngine for EngineCore<B> {
                 "trace_enabled".to_string(),
                 Json::Bool(self.trace_enabled()),
             );
+            map.insert(
+                "spans_active".to_string(),
+                Json::Num(self.spans.active_len() as f64),
+            );
+            map.insert(
+                "flight_recorder".to_string(),
+                Json::obj(vec![
+                    ("capacity", Json::Num(self.flight.capacity() as f64)),
+                    ("len", Json::Num(self.flight.len() as f64)),
+                    ("dropped", Json::Num(self.flight.dropped() as f64)),
+                ]),
+            );
         }
         j
+    }
+
+    /// The newest `n` flight-recorder entries (the engine's always-on
+    /// black box), served to `{"admin": {"dump_flight": n}}`.
+    fn dump_flight(&self, n: usize) -> Json {
+        self.flight.to_json(n)
     }
 
     fn encode(&self, text: &str) -> Vec<u32> {

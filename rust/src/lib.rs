@@ -118,10 +118,12 @@
 //! a manual [`util::clock::Clock`] (one quantum per step), and the
 //! [`simtest`] harness expands a single seed into a scripted world —
 //! adversarial clients, KV-pressure spikes, credit starvation — then
-//! checks four global oracles (KV refcount conservation, stream-credit
-//! bounds/losslessness, priority monotonicity, usage conservation)
-//! after every step. A failing seed prints a replay command and
-//! reproduces byte-identically. The paper kernels are pinned by
+//! checks five global oracles (KV refcount conservation, stream-credit
+//! bounds/losslessness, priority monotonicity, usage conservation, and
+//! span conservation over the [`obs`] request timelines) after every
+//! step. A failing seed prints a replay command, reproduces
+//! byte-identically, and its report carries the engine's flight
+//! recorder. The paper kernels are pinned by
 //! `tests/conformance_softmax.rs` (unified-max vs two-pass softmax,
 //! §3) and `tests/conformance_dataflow.rs` (inflection-table dispatch,
 //! §5). See `docs/ARCHITECTURE.md` § "Testing & determinism".
@@ -132,9 +134,12 @@
 //!   lifecycle (including the backpressure states), the
 //!   paper-technique-to-module table, and the testing & determinism
 //!   guide (oracles, seed replay, adding scenarios).
-//! - `docs/PROTOCOL.md` — the JSON-lines wire protocol (v2.2): stream
-//!   credit semantics, global ids, admin verbs, per-tenant quotas,
-//!   error codes.
+//! - `docs/PROTOCOL.md` — the JSON-lines wire protocol (v2.3): stream
+//!   credit semantics, global ids, admin verbs (`cancel_tenant`,
+//!   `dump_flight`), per-tenant quotas, error codes.
+//! - `docs/OBSERVABILITY.md` — request-lifecycle spans, the flight
+//!   recorder, step-time attribution, the Prometheus exposition, and
+//!   how to read `BENCH_serving.json`.
 //! - `ROADMAP.md` / `PAPER.md` — project north star and source paper.
 
 pub mod api;
@@ -151,6 +156,7 @@ pub mod hwmodel;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod policy;
 pub mod prefixcache;
 pub mod router;

@@ -67,25 +67,69 @@ impl LatencyHistogram {
         Duration::from_micros(if self.count == 0 { 0 } else { self.max_us })
     }
 
-    /// Approximate percentile from bucket boundaries (upper bound).
+    /// Smallest recorded sample ([`Duration::ZERO`] when empty).
+    pub fn min(&self) -> Duration {
+        Duration::from_micros(if self.count == 0 { 0 } else { self.min_us })
+    }
+
+    /// Total of all recorded samples, in microseconds.
+    pub fn sum_us(&self) -> u128 {
+        self.sum_us
+    }
+
+    /// Percentile estimate, interpolated within the winning bucket.
+    ///
+    /// The winning bucket spans `(lower_bound, upper_bound]`; the
+    /// estimate walks linearly through it by in-bucket rank and is
+    /// clamped to the observed `[min, max]`, so a single-valued
+    /// histogram (or a sample landing exactly on a bucket edge) reports
+    /// the recorded value itself rather than the bucket's upper bound.
     pub fn percentile(&self, p: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
         }
-        let target = ((self.count as f64) * p.clamp(0.0, 1.0)).ceil() as u64;
-        let mut seen = 0;
+        let target = (((self.count as f64) * p.clamp(0.0, 1.0)).ceil() as u64).max(1);
+        let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                let us = if i < self.bounds.len() {
-                    self.bounds[i]
+            if c > 0 && seen + c >= target {
+                let hi = if i < self.bounds.len() {
+                    self.bounds[i].min(self.max_us)
                 } else {
                     self.max_us
                 };
-                return Duration::from_micros(us.min(self.max_us));
+                let lo = if i == 0 { 0 } else { self.bounds[i - 1] };
+                let lo = lo.max(self.min_us).min(hi);
+                let frac = (target - seen) as f64 / c as f64;
+                let us = lo as f64 + frac * (hi - lo) as f64;
+                return Duration::from_micros(us.round() as u64);
             }
+            seen += c;
         }
         Duration::from_micros(self.max_us)
+    }
+
+    /// Full export: summary stats plus the raw `bounds`/`counts` arrays
+    /// so external tooling can re-derive any percentile (`counts` has
+    /// one trailing overflow bucket beyond the last bound).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum_us", Json::Num(self.sum_us as f64)),
+            ("mean_us", Json::Num(self.mean().as_micros() as f64)),
+            ("min_us", Json::Num(self.min().as_micros() as f64)),
+            ("max_us", Json::Num(self.max().as_micros() as f64)),
+            ("p50_us", Json::Num(self.percentile(0.5).as_micros() as f64)),
+            ("p90_us", Json::Num(self.percentile(0.9).as_micros() as f64)),
+            ("p99_us", Json::Num(self.percentile(0.99).as_micros() as f64)),
+            (
+                "bounds",
+                Json::Arr(self.bounds.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            (
+                "counts",
+                Json::Arr(self.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+        ])
     }
 }
 
@@ -179,6 +223,24 @@ pub struct EngineMetrics {
     /// Requests reclaimed because the client dropped its event stream
     /// (hang-up detected mid-generation).
     pub client_disconnects: u64,
+    /// Step-time attribution: where each `step()` call's wall time goes,
+    /// recorded around the phases of the engine loop (stream-credit
+    /// service, admission/scheduling policy, prefill, decode). Under the
+    /// sim clock these are deterministically zero — the virtual clock
+    /// only advances at step boundaries — but on the system clock they
+    /// decompose real host overhead.
+    pub attr_stream_service: LatencyHistogram,
+    pub attr_policy: LatencyHistogram,
+    pub attr_admission: LatencyHistogram,
+    pub attr_prefill: LatencyHistogram,
+    pub attr_decode: LatencyHistogram,
+    /// Request-lifecycle span aggregates (see [`crate::obs`]), recorded
+    /// when a request finishes: time spent queued before admission,
+    /// admission→first-token, decoding, and parked on backpressure.
+    pub span_queue_wait: LatencyHistogram,
+    pub span_prefill: LatencyHistogram,
+    pub span_decode: LatencyHistogram,
+    pub span_paused: LatencyHistogram,
     /// Per-tenant generated/cached token counters (recorded at request
     /// finish, exposed in the `{"stats": true}` snapshot).
     pub tenants: BTreeMap<String, TenantCounters>,
@@ -313,8 +375,52 @@ impl EngineMetrics {
                 "first_token_p50_us",
                 Json::Num(self.first_token.percentile(0.5).as_micros() as f64),
             ),
+            ("step_p50_us", pct_us(&self.step, 0.5)),
+            ("step_p90_us", pct_us(&self.step, 0.9)),
+            ("step_p99_us", pct_us(&self.step, 0.99)),
+            ("step_min_us", Json::Num(self.step.min().as_micros() as f64)),
+            ("per_token_p90_us", pct_us(&self.per_token, 0.9)),
+            ("per_token_p99_us", pct_us(&self.per_token, 0.99)),
+            (
+                "per_token_min_us",
+                Json::Num(self.per_token.min().as_micros() as f64),
+            ),
+            ("first_token_p90_us", pct_us(&self.first_token, 0.9)),
+            ("first_token_p99_us", pct_us(&self.first_token, 0.99)),
+            (
+                "first_token_min_us",
+                Json::Num(self.first_token.min().as_micros() as f64),
+            ),
+            (
+                "step_overhead_mean_us",
+                Json::Num(self.step_overhead.mean().as_micros() as f64),
+            ),
+            ("step_overhead_p99_us", pct_us(&self.step_overhead, 0.99)),
+            (
+                "histograms",
+                Json::obj(vec![
+                    ("first_token", self.first_token.to_json()),
+                    ("per_token", self.per_token.to_json()),
+                    ("step", self.step.to_json()),
+                    ("step_overhead", self.step_overhead.to_json()),
+                    ("attr_stream_service", self.attr_stream_service.to_json()),
+                    ("attr_policy", self.attr_policy.to_json()),
+                    ("attr_admission", self.attr_admission.to_json()),
+                    ("attr_prefill", self.attr_prefill.to_json()),
+                    ("attr_decode", self.attr_decode.to_json()),
+                    ("span_queue_wait", self.span_queue_wait.to_json()),
+                    ("span_prefill", self.span_prefill.to_json()),
+                    ("span_decode", self.span_decode.to_json()),
+                    ("span_paused", self.span_paused.to_json()),
+                ]),
+            ),
         ])
     }
+}
+
+/// Percentile of `h` at `p`, in microseconds, as a JSON number.
+fn pct_us(h: &LatencyHistogram, p: f64) -> Json {
+    Json::Num(h.percentile(p).as_micros() as f64)
 }
 
 #[cfg(test)]
@@ -348,6 +454,116 @@ mod tests {
         }
         assert!(h.percentile(0.5) <= h.percentile(0.9));
         assert!(h.percentile(0.9) <= h.percentile(0.999));
+    }
+
+    #[test]
+    fn percentile_exact_for_single_valued_histograms() {
+        // Every sample is the same value: interpolation must clamp to
+        // the observed min/max and report it exactly, not the bucket's
+        // upper bound (37us sits strictly inside a log bucket).
+        let mut h = LatencyHistogram::default();
+        for _ in 0..500 {
+            h.record(Duration::from_micros(37));
+        }
+        for p in [0.0, 0.01, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.percentile(p), Duration::from_micros(37), "p={p}");
+        }
+    }
+
+    #[test]
+    fn percentile_pinned_at_exact_bucket_edge() {
+        // 1us is precisely the first bucket bound: the sample lands in
+        // the first bucket and the estimate must be exactly 1us at
+        // every percentile.
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(1));
+        for p in [0.0, 0.5, 1.0] {
+            assert_eq!(h.percentile(p), Duration::from_micros(1), "p={p}");
+        }
+    }
+
+    #[test]
+    fn percentile_interpolates_and_stays_within_observed_range() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_millis(1));
+        h.record(Duration::from_millis(100));
+        // p50 selects the 1ms sample's bucket; the estimate may not
+        // regress below the sample or escape past the next log bound
+        // (factor 1.47).
+        let p50 = h.percentile(0.5);
+        assert!(p50 >= Duration::from_millis(1), "p50={p50:?}");
+        assert!(p50 <= Duration::from_micros(1500), "p50={p50:?}");
+        // The top of the distribution is clamped to the observed max.
+        assert_eq!(h.percentile(1.0), Duration::from_millis(100));
+        for i in 0..=20 {
+            let p = i as f64 / 20.0;
+            let v = h.percentile(p);
+            assert!(v >= h.min() && v <= h.max(), "p={p} v={v:?}");
+        }
+    }
+
+    #[test]
+    fn histogram_json_exports_raw_buckets() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_millis(5));
+        let j = crate::util::json::parse(&h.to_json().to_string()).unwrap();
+        let bounds = j.req_arr("bounds").unwrap();
+        let counts = j.req_arr("counts").unwrap();
+        assert_eq!(counts.len(), bounds.len() + 1, "one overflow bucket");
+        let total: usize = counts.iter().filter_map(|c| c.as_usize()).sum();
+        assert_eq!(total, 2);
+        assert_eq!(j.get("count").and_then(|c| c.as_usize()), Some(2));
+        assert_eq!(j.get("min_us").and_then(|c| c.as_usize()), Some(10));
+        assert_eq!(j.get("max_us").and_then(|c| c.as_usize()), Some(5000));
+    }
+
+    #[test]
+    fn metrics_json_exposes_tail_percentiles_and_histograms() {
+        let mut m = EngineMetrics::default();
+        for ms in [1u64, 2, 4, 8, 50] {
+            m.first_token.record(Duration::from_millis(ms));
+            m.per_token.record(Duration::from_millis(ms));
+            m.step.record(Duration::from_millis(ms));
+        }
+        let back = crate::util::json::parse(&m.to_json().to_string()).unwrap();
+        for key in [
+            "first_token_p90_us",
+            "first_token_p99_us",
+            "first_token_min_us",
+            "per_token_p90_us",
+            "per_token_p99_us",
+            "step_p50_us",
+            "step_p90_us",
+            "step_p99_us",
+            "step_min_us",
+            "step_overhead_mean_us",
+        ] {
+            assert!(back.get(key).is_some(), "missing {key}");
+        }
+        let hists = back.field("histograms").unwrap();
+        for key in [
+            "first_token",
+            "per_token",
+            "step",
+            "step_overhead",
+            "attr_stream_service",
+            "attr_policy",
+            "attr_admission",
+            "attr_prefill",
+            "attr_decode",
+            "span_queue_wait",
+            "span_prefill",
+            "span_decode",
+            "span_paused",
+        ] {
+            assert!(hists.get(key).is_some(), "missing histograms.{key}");
+        }
+        // p50 <= p90 <= p99 in the flat export too.
+        let p50 = back.get("step_p50_us").and_then(|j| j.as_f64()).unwrap();
+        let p90 = back.get("step_p90_us").and_then(|j| j.as_f64()).unwrap();
+        let p99 = back.get("step_p99_us").and_then(|j| j.as_f64()).unwrap();
+        assert!(p50 <= p90 && p90 <= p99);
     }
 
     #[test]

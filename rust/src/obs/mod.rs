@@ -1,0 +1,798 @@
+//! Observability substrate: request-lifecycle spans, the always-on
+//! bounded flight recorder, and the Prometheus text exposition.
+//!
+//! The serving core ([`crate::core::EngineCore`]) owns one [`SpanTable`]
+//! and one [`FlightRecorder`] and stamps them from the engine's
+//! [`crate::util::clock::Clock`], so every backend — PJRT, sim, stub —
+//! gets the same observability surface, and under the sim clock every
+//! timestamp is a pure function of the scenario (byte-identical across
+//! runs). Neither structure feeds back into scheduling: spans and
+//! flight entries are write-only side channels, which is what keeps the
+//! simulation-test trace fingerprints identical with or without them.
+//!
+//! Three layers, from per-request to fleet-wide:
+//!
+//! - **Spans** ([`RequestSpan`]): each request's transition timeline
+//!   (submitted → admitted → first token → decode ⇄ paused → finished)
+//!   with derived phase times (queue wait, prefill, decode, paused,
+//!   TTFT). The finished request's [`SpanBreakdown`] rides to the
+//!   client on its event stream and shows up in the server's `done`
+//!   line; aggregates land in the `span_*` histograms of
+//!   [`crate::metrics::EngineMetrics`]. The simulation harness checks
+//!   span conservation as its fifth always-on oracle.
+//! - **Flight recorder** ([`FlightRecorder`]): a bounded ring of recent
+//!   scheduling events. Unlike the opt-in, unbounded trace
+//!   ([`crate::core::EngineCore::enable_trace`]) it is always on, so a
+//!   production incident or a failing simulation seed ships its own
+//!   black box (`{"admin": {"dump_flight": n}}` on the wire; appended
+//!   to simtest violation reports).
+//! - **Prometheus exposition** ([`prometheus_text`]): the stats JSON
+//!   snapshot rendered as `# TYPE`-annotated metric lines, histograms
+//!   included, for scrape-based tooling.
+//!
+//! See `docs/OBSERVABILITY.md` for the operator-facing guide.
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use crate::api::FinishReason;
+use crate::kvcache::SeqId;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------
+// Request-lifecycle spans
+// ---------------------------------------------------------------------
+
+/// One phase transition in a request's lifecycle timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanEvent {
+    /// The request entered the intake queue.
+    Submitted,
+    /// Admission succeeded; prefill runs in the same step.
+    Admitted,
+    /// The first generated token was emitted.
+    FirstToken,
+    /// Parked by stream backpressure.
+    Paused,
+    /// Rejoined the decode batch.
+    Resumed,
+    /// Terminal: exactly one per request, always last.
+    Finished(FinishReason),
+}
+
+impl SpanEvent {
+    /// Stable lowercase name (flight-recorder lines, dumps).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanEvent::Submitted => "submitted",
+            SpanEvent::Admitted => "admitted",
+            SpanEvent::FirstToken => "first_token",
+            SpanEvent::Paused => "paused",
+            SpanEvent::Resumed => "resumed",
+            SpanEvent::Finished(_) => "finished",
+        }
+    }
+}
+
+/// Per-request phase-time partition, reported with the `done` line and
+/// aggregated into the engine's `span_*` histograms. All durations are
+/// engine-clock microseconds; the four phase fields partition
+/// `total_us` exactly:
+/// `queue_wait + prefill + decode + paused == total`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SpanBreakdown {
+    /// Submission → admission (or the whole life, if never admitted).
+    pub queue_wait_us: u64,
+    /// Admission → first token (admission → finish when prefill failed
+    /// before a token streamed).
+    pub prefill_us: u64,
+    /// First token → finish, excluding time parked on backpressure.
+    pub decode_us: u64,
+    /// Total time parked on backpressure.
+    pub paused_us: u64,
+    /// Submission → first token; `None` when no token was generated.
+    pub ttft_us: Option<u64>,
+    /// Submission → finish.
+    pub total_us: u64,
+}
+
+impl SpanBreakdown {
+    /// Wire form for the `done` line's `"spans"` object.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue_wait_us", Json::Num(self.queue_wait_us as f64)),
+            ("prefill_us", Json::Num(self.prefill_us as f64)),
+            ("decode_us", Json::Num(self.decode_us as f64)),
+            ("paused_us", Json::Num(self.paused_us as f64)),
+            (
+                "ttft_us",
+                match self.ttft_us {
+                    Some(t) => Json::Num(t as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("total_us", Json::Num(self.total_us as f64)),
+        ])
+    }
+}
+
+/// One request's lifecycle timeline, stamped from the engine clock.
+#[derive(Debug, Clone)]
+pub struct RequestSpan {
+    pub id: SeqId,
+    pub submitted_at: Duration,
+    pub admitted_at: Option<Duration>,
+    pub first_token_at: Option<Duration>,
+    pub finished_at: Option<Duration>,
+    pub reason: Option<FinishReason>,
+    /// Accumulated time parked on backpressure (closed intervals plus,
+    /// for a request finishing while parked, the final open one).
+    pub paused_time: Duration,
+    /// Completed pause intervals.
+    pub pauses: u32,
+    /// The full transition record `(timestamp, event)`, in order.
+    pub timeline: Vec<(Duration, SpanEvent)>,
+    /// Open pause interval's start, while parked.
+    paused_since: Option<Duration>,
+}
+
+impl RequestSpan {
+    fn new(id: SeqId, now: Duration) -> Self {
+        RequestSpan {
+            id,
+            submitted_at: now,
+            admitted_at: None,
+            first_token_at: None,
+            finished_at: None,
+            reason: None,
+            paused_time: Duration::ZERO,
+            pauses: 0,
+            timeline: vec![(now, SpanEvent::Submitted)],
+            paused_since: None,
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished_at.is_some()
+    }
+
+    /// Submission → admission; for a request that never admitted, its
+    /// whole (finished) life was queue wait.
+    pub fn queue_wait(&self) -> Duration {
+        let end = self
+            .admitted_at
+            .or(self.finished_at)
+            .unwrap_or(self.submitted_at);
+        end.saturating_sub(self.submitted_at)
+    }
+
+    /// Admission → first token (→ finish when no token ever streamed,
+    /// e.g. a prefill failure).
+    pub fn prefill_time(&self) -> Duration {
+        let Some(a) = self.admitted_at else {
+            return Duration::ZERO;
+        };
+        let end = self.first_token_at.or(self.finished_at).unwrap_or(a);
+        end.saturating_sub(a)
+    }
+
+    /// First token → finish, excluding parked time.
+    pub fn decode_time(&self) -> Duration {
+        match (self.first_token_at, self.finished_at) {
+            (Some(f), Some(e)) => e.saturating_sub(f).saturating_sub(self.paused_time),
+            _ => Duration::ZERO,
+        }
+    }
+
+    /// Submission → first token.
+    pub fn ttft(&self) -> Option<Duration> {
+        self.first_token_at
+            .map(|f| f.saturating_sub(self.submitted_at))
+    }
+
+    /// Submission → finish (zero while live).
+    pub fn total(&self) -> Duration {
+        self.finished_at
+            .map(|e| e.saturating_sub(self.submitted_at))
+            .unwrap_or(Duration::ZERO)
+    }
+
+    /// The finished request's phase partition. `decode_us` is derived
+    /// as the remainder of `total_us`, not truncated independently:
+    /// under the system clock each phase can carry a sub-microsecond
+    /// remainder, and truncating them separately would break the
+    /// `queue_wait + prefill + decode + paused == total` contract the
+    /// wire format promises.
+    pub fn breakdown(&self) -> SpanBreakdown {
+        let queue_wait_us = self.queue_wait().as_micros() as u64;
+        let prefill_us = self.prefill_time().as_micros() as u64;
+        let paused_us = self.paused_time.as_micros() as u64;
+        let total_us = self.total().as_micros() as u64;
+        SpanBreakdown {
+            queue_wait_us,
+            prefill_us,
+            decode_us: total_us.saturating_sub(queue_wait_us + prefill_us + paused_us),
+            paused_us,
+            ttft_us: self.ttft().map(|t| t.as_micros() as u64),
+            total_us,
+        }
+    }
+
+    /// Validate the timeline: monotone timestamps, a legal transition
+    /// order (the request-lifecycle state machine), a terminal event
+    /// exactly when the span is finished, and pause accounting that
+    /// matches the recorded intervals. Returns the first problem found.
+    /// This is the per-span half of the simulation harness's span
+    /// conservation oracle.
+    pub fn check(&self) -> std::result::Result<(), String> {
+        let id = self.id;
+        if self.timeline.first().map(|(_, e)| *e) != Some(SpanEvent::Submitted) {
+            return Err(format!("span {id}: timeline does not start with submitted"));
+        }
+        #[derive(PartialEq, Clone, Copy)]
+        enum S {
+            Queued,
+            Admitted,
+            Streaming,
+            Parked,
+            Done,
+        }
+        let mut state = S::Queued;
+        let mut prev_t = Duration::ZERO;
+        let mut paused_total = Duration::ZERO;
+        let mut paused_open: Option<Duration> = None;
+        for (i, &(t, ev)) in self.timeline.iter().enumerate() {
+            if t < prev_t {
+                return Err(format!(
+                    "span {id}: timestamp went backwards at event {i} ({ev:?})"
+                ));
+            }
+            prev_t = t;
+            state = match (state, ev) {
+                (S::Queued, SpanEvent::Submitted) if i == 0 => S::Queued,
+                (S::Queued, SpanEvent::Admitted) => S::Admitted,
+                (S::Admitted, SpanEvent::FirstToken) => S::Streaming,
+                (S::Streaming, SpanEvent::Paused) => {
+                    paused_open = Some(t);
+                    S::Parked
+                }
+                (S::Parked, SpanEvent::Resumed) => {
+                    paused_total += t.saturating_sub(paused_open.take().unwrap());
+                    S::Streaming
+                }
+                (S::Queued | S::Admitted | S::Streaming | S::Parked, SpanEvent::Finished(_)) => {
+                    if let Some(p) = paused_open.take() {
+                        paused_total += t.saturating_sub(p);
+                    }
+                    S::Done
+                }
+                (_, ev) => {
+                    return Err(format!("span {id}: illegal transition {ev:?} at event {i}"));
+                }
+            };
+        }
+        if (state == S::Done) != self.is_finished() {
+            return Err(format!(
+                "span {id}: terminal event and finished_at disagree"
+            ));
+        }
+        if self.is_finished() && self.paused_time != paused_total {
+            return Err(format!(
+                "span {id}: paused_time {:?} != {:?} from timeline",
+                self.paused_time, paused_total
+            ));
+        }
+        if self.is_finished() {
+            let parts =
+                self.queue_wait() + self.prefill_time() + self.decode_time() + self.paused_time;
+            if parts != self.total() {
+                return Err(format!(
+                    "span {id}: phases {:?} do not partition total {:?}",
+                    parts,
+                    self.total()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The engine's span store: live spans by id plus a bounded ring of
+/// recently finished ones (oldest evicted first; aggregate histograms
+/// in [`crate::metrics::EngineMetrics`] never lose data). Counters
+/// survive eviction, so conservation checks hold on any horizon.
+#[derive(Debug)]
+pub struct SpanTable {
+    active: HashMap<SeqId, RequestSpan>,
+    completed: VecDeque<RequestSpan>,
+    capacity: usize,
+    /// Finished spans evicted from the ring.
+    pub completed_dropped: u64,
+    pub spans_submitted: u64,
+    pub spans_admitted: u64,
+    pub spans_finished: u64,
+}
+
+impl SpanTable {
+    /// Ring capacity for finished spans (floored to 1).
+    pub fn new(capacity: usize) -> Self {
+        SpanTable {
+            active: HashMap::new(),
+            completed: VecDeque::new(),
+            capacity: capacity.max(1),
+            completed_dropped: 0,
+            spans_submitted: 0,
+            spans_admitted: 0,
+            spans_finished: 0,
+        }
+    }
+
+    pub fn submitted(&mut self, id: SeqId, now: Duration) {
+        self.spans_submitted += 1;
+        self.active.insert(id, RequestSpan::new(id, now));
+    }
+
+    pub fn admitted(&mut self, id: SeqId, now: Duration) {
+        if let Some(s) = self.active.get_mut(&id) {
+            self.spans_admitted += 1;
+            s.admitted_at = Some(now);
+            s.timeline.push((now, SpanEvent::Admitted));
+        }
+    }
+
+    pub fn first_token(&mut self, id: SeqId, now: Duration) {
+        if let Some(s) = self.active.get_mut(&id) {
+            s.first_token_at = Some(now);
+            s.timeline.push((now, SpanEvent::FirstToken));
+        }
+    }
+
+    pub fn paused(&mut self, id: SeqId, now: Duration) {
+        if let Some(s) = self.active.get_mut(&id) {
+            s.paused_since = Some(now);
+            s.timeline.push((now, SpanEvent::Paused));
+        }
+    }
+
+    pub fn resumed(&mut self, id: SeqId, now: Duration) {
+        if let Some(s) = self.active.get_mut(&id) {
+            if let Some(p) = s.paused_since.take() {
+                s.paused_time += now.saturating_sub(p);
+                s.pauses += 1;
+            }
+            s.timeline.push((now, SpanEvent::Resumed));
+        }
+    }
+
+    /// Close the span: stamp the terminal event, fold any open pause
+    /// interval, move it to the completed ring, and return the phase
+    /// breakdown for the `done` line and the aggregate histograms.
+    pub fn finished(
+        &mut self,
+        id: SeqId,
+        now: Duration,
+        reason: FinishReason,
+    ) -> Option<SpanBreakdown> {
+        let mut s = self.active.remove(&id)?;
+        if let Some(p) = s.paused_since.take() {
+            s.paused_time += now.saturating_sub(p);
+            s.pauses += 1;
+        }
+        s.finished_at = Some(now);
+        s.reason = Some(reason);
+        s.timeline.push((now, SpanEvent::Finished(reason)));
+        self.spans_finished += 1;
+        let b = s.breakdown();
+        if self.completed.len() == self.capacity {
+            self.completed.pop_front();
+            self.completed_dropped += 1;
+        }
+        self.completed.push_back(s);
+        Some(b)
+    }
+
+    /// Live (unfinished) spans, in arbitrary order.
+    pub fn active(&self) -> impl Iterator<Item = &RequestSpan> {
+        self.active.values()
+    }
+
+    /// Retained finished spans, oldest first.
+    pub fn completed(&self) -> impl Iterator<Item = &RequestSpan> {
+        self.completed.iter()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn completed_len(&self) -> usize {
+        self.completed.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Flight recorder
+// ---------------------------------------------------------------------
+
+/// One flight-recorder entry: a monotone sequence number (stable across
+/// ring eviction), the engine-clock timestamp, and a compact rendered
+/// event line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlightEntry {
+    pub seq: u64,
+    /// Microseconds since the engine clock's epoch.
+    pub at_us: u64,
+    pub what: String,
+}
+
+/// Always-on bounded ring of recent scheduling events — the engine's
+/// black box. Capacity comes from
+/// [`crate::config::EngineConfig::flight_recorder_capacity`]; when full,
+/// the oldest entry is evicted (and counted in `dropped`), so memory is
+/// bounded no matter how long the engine runs. Dumped via
+/// `{"admin": {"dump_flight": n}}` and appended to simulation-test
+/// violation reports.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    buf: VecDeque<FlightEntry>,
+    capacity: usize,
+    next_seq: u64,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    /// Ring capacity (floored to 1).
+    pub fn new(capacity: usize) -> Self {
+        FlightRecorder {
+            buf: VecDeque::new(),
+            capacity: capacity.max(1),
+            next_seq: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Append one event line, evicting the oldest entry when full.
+    pub fn record(&mut self, at: Duration, what: String) {
+        if self.buf.len() == self.capacity {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(FlightEntry {
+            seq: self.next_seq,
+            at_us: at.as_micros() as u64,
+            what,
+        });
+        self.next_seq += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Entries evicted by the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Total events ever recorded.
+    pub fn recorded(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// The newest `n` entries, oldest first, with ring bookkeeping —
+    /// the `{"flight": ...}` payload of the `dump_flight` reply.
+    pub fn to_json(&self, n: usize) -> Json {
+        let skip = self.buf.len().saturating_sub(n);
+        Json::obj(vec![
+            ("capacity", Json::Num(self.capacity as f64)),
+            ("recorded", Json::Num(self.next_seq as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            (
+                "entries",
+                Json::Arr(
+                    self.buf
+                        .iter()
+                        .skip(skip)
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("seq", Json::Num(e.seq as f64)),
+                                ("at_us", Json::Num(e.at_us as f64)),
+                                ("what", Json::Str(e.what.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// The newest `n` entries as plain text, one per line, oldest first
+    /// — appended to simulation-test violation reports so a failing
+    /// seed ships its own black box.
+    pub fn render(&self, n: usize) -> String {
+        let skip = self.buf.len().saturating_sub(n);
+        let mut out = String::new();
+        for e in self.buf.iter().skip(skip) {
+            let _ = writeln!(out, "  [{:>6}] t={}us {}", e.seq, e.at_us, e.what);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------
+
+/// Format a JSON number the way the in-tree serializer does (integers
+/// without a trailing `.0`), so the exposition is byte-stable.
+fn fmt_num(n: f64, out: &mut String) {
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+fn gauge_line(name: &str, n: f64, out: &mut String) {
+    let _ = write!(out, "# TYPE fdpp_{name} gauge\nfdpp_{name} ");
+    fmt_num(n, out);
+    out.push('\n');
+}
+
+/// Render a histogram export (the `{bounds, counts, sum_us, count}`
+/// shape of `LatencyHistogram::to_json`) as a Prometheus histogram.
+fn histogram_lines(name: &str, h: &Json, out: &mut String) {
+    let (Some(bounds), Some(counts)) = (
+        h.get("bounds").and_then(Json::as_arr),
+        h.get("counts").and_then(Json::as_arr),
+    ) else {
+        return;
+    };
+    let _ = writeln!(out, "# TYPE fdpp_{name}_us histogram");
+    let mut cumulative = 0.0;
+    for (i, c) in counts.iter().enumerate() {
+        cumulative += c.as_f64().unwrap_or(0.0);
+        let _ = write!(out, "fdpp_{name}_us_bucket{{le=\"");
+        match bounds.get(i).and_then(Json::as_f64) {
+            Some(b) => fmt_num(b, out),
+            None => out.push_str("+Inf"),
+        }
+        out.push_str("\"} ");
+        fmt_num(cumulative, out);
+        out.push('\n');
+    }
+    let _ = write!(out, "fdpp_{name}_us_sum ");
+    fmt_num(h.get("sum_us").and_then(Json::as_f64).unwrap_or(0.0), out);
+    let _ = write!(out, "\nfdpp_{name}_us_count ");
+    fmt_num(h.get("count").and_then(Json::as_f64).unwrap_or(0.0), out);
+    out.push('\n');
+}
+
+/// Render a stats snapshot (the `{"stats": true}` JSON object, i.e.
+/// `InferenceEngine::stats_json` plus whatever the front-end merged in)
+/// as Prometheus text exposition: scalar fields become `fdpp_<name>`
+/// gauges, booleans 0/1 gauges, the `histograms` object becomes
+/// `fdpp_<name>_us` histograms with cumulative buckets, and the
+/// `tenants` / `queue_depths` maps become labeled gauges. Key order is
+/// the snapshot's (sorted), so the exposition is deterministic.
+pub fn prometheus_text(stats: &Json) -> String {
+    let mut out = String::new();
+    let Json::Obj(map) = stats else {
+        return out;
+    };
+    for (k, v) in map {
+        match (k.as_str(), v) {
+            (_, Json::Num(n)) => gauge_line(k, *n, &mut out),
+            (_, Json::Bool(b)) => gauge_line(k, if *b { 1.0 } else { 0.0 }, &mut out),
+            ("histograms", Json::Obj(hs)) => {
+                for (name, h) in hs {
+                    histogram_lines(name, h, &mut out);
+                }
+            }
+            ("queue_depths", Json::Obj(depths)) => {
+                let _ = writeln!(out, "# TYPE fdpp_queue_depth gauge");
+                for (priority, n) in depths {
+                    let _ = write!(out, "fdpp_queue_depth{{priority=\"{priority}\"}} ");
+                    fmt_num(n.as_f64().unwrap_or(0.0), &mut out);
+                    out.push('\n');
+                }
+            }
+            ("tenants", Json::Obj(tenants)) => {
+                for field in [
+                    "requests_finished",
+                    "generated_tokens",
+                    "cached_prompt_tokens",
+                ] {
+                    let _ = writeln!(out, "# TYPE fdpp_tenant_{field} gauge");
+                    for (tenant, t) in tenants {
+                        let _ = write!(
+                            out,
+                            "fdpp_tenant_{field}{{tenant=\"{}\"}} ",
+                            tenant.replace('\\', "\\\\").replace('"', "\\\"")
+                        );
+                        fmt_num(
+                            t.get(field).and_then(Json::as_f64).unwrap_or(0.0),
+                            &mut out,
+                        );
+                        out.push('\n');
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn span_partitions_phases_exactly() {
+        let mut t = SpanTable::new(16);
+        t.submitted(1, 2 * MS);
+        t.admitted(1, 5 * MS);
+        t.first_token(1, 5 * MS);
+        t.paused(1, 8 * MS);
+        t.resumed(1, 11 * MS);
+        t.paused(1, 12 * MS);
+        let b = t.finished(1, 20 * MS, FinishReason::Eos).unwrap();
+        assert_eq!(b.queue_wait_us, 3_000);
+        assert_eq!(b.prefill_us, 0);
+        assert_eq!(b.paused_us, 11_000, "3ms closed + 8ms open at finish");
+        assert_eq!(b.decode_us, 4_000);
+        assert_eq!(b.ttft_us, Some(3_000));
+        assert_eq!(b.total_us, 18_000);
+        assert_eq!(
+            b.queue_wait_us + b.prefill_us + b.decode_us + b.paused_us,
+            b.total_us
+        );
+        let span = t.completed().next().unwrap();
+        span.check().unwrap();
+        assert_eq!(span.pauses, 2);
+    }
+
+    #[test]
+    fn span_never_admitted_is_all_queue_wait() {
+        let mut t = SpanTable::new(16);
+        t.submitted(7, MS);
+        let b = t.finished(7, 9 * MS, FinishReason::Cancelled).unwrap();
+        assert_eq!(b.queue_wait_us, 8_000);
+        assert_eq!(b.prefill_us + b.decode_us + b.paused_us, 0);
+        assert_eq!(b.ttft_us, None);
+        assert_eq!(b.total_us, 8_000);
+        t.completed().next().unwrap().check().unwrap();
+    }
+
+    #[test]
+    fn span_check_rejects_illegal_timelines() {
+        // Paused before any token streamed: illegal.
+        let mut t = SpanTable::new(4);
+        t.submitted(1, MS);
+        t.admitted(1, 2 * MS);
+        t.first_token(1, 2 * MS);
+        t.finished(1, 3 * MS, FinishReason::Eos);
+        let mut span = t.completed().next().unwrap().clone();
+        span.check().unwrap();
+        span.timeline.insert(2, (2 * MS, SpanEvent::Paused));
+        assert!(span.check().is_err(), "pause before first token");
+
+        let mut back = t.completed().next().unwrap().clone();
+        back.timeline[1].0 = Duration::ZERO;
+        assert!(back.check().is_err(), "non-monotone timestamps");
+
+        let mut wrong = t.completed().next().unwrap().clone();
+        wrong.paused_time = Duration::from_millis(5);
+        assert!(wrong.check().is_err(), "pause accounting mismatch");
+    }
+
+    #[test]
+    fn span_table_counters_survive_ring_eviction() {
+        let mut t = SpanTable::new(2);
+        for id in 0..5u64 {
+            t.submitted(id, MS);
+            t.finished(id, 2 * MS, FinishReason::Cancelled);
+        }
+        assert_eq!(t.completed_len(), 2, "ring bounded");
+        assert_eq!(t.completed_dropped, 3);
+        assert_eq!(t.spans_submitted, 5);
+        assert_eq!(t.spans_finished, 5);
+        assert_eq!(t.active_len(), 0);
+    }
+
+    #[test]
+    fn flight_recorder_is_bounded_under_flood() {
+        let mut f = FlightRecorder::new(64);
+        for i in 0..10_000u64 {
+            f.record(Duration::from_micros(i), format!("event {i}"));
+        }
+        assert_eq!(f.len(), 64, "ring respects capacity under 10k events");
+        assert_eq!(f.capacity(), 64);
+        assert_eq!(f.dropped(), 10_000 - 64);
+        assert_eq!(f.recorded(), 10_000);
+        // The retained window is the newest entries, in order.
+        let j = f.to_json(3);
+        let entries = j.req_arr("entries").unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(
+            entries[2].get("what").and_then(Json::as_str),
+            Some("event 9999")
+        );
+        assert_eq!(entries[0].get("seq").and_then(Json::as_usize), Some(9997));
+        let text = f.render(2);
+        assert!(text.contains("event 9998") && text.contains("event 9999"));
+        assert!(!text.contains("event 9997"));
+    }
+
+    #[test]
+    fn flight_dump_handles_oversized_n() {
+        let mut f = FlightRecorder::new(8);
+        f.record(MS, "only".into());
+        let j = f.to_json(100);
+        assert_eq!(j.req_arr("entries").unwrap().len(), 1);
+        assert_eq!(j.get("dropped").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn prometheus_renders_gauges_histograms_and_labels() {
+        let mut h = crate::metrics::LatencyHistogram::default();
+        h.record(Duration::from_micros(3));
+        h.record(Duration::from_micros(900));
+        let stats = Json::obj(vec![
+            ("tokens_generated", Json::Num(42.0)),
+            ("kv_refcount_ok", Json::Bool(true)),
+            ("histograms", Json::obj(vec![("step", h.to_json())])),
+            (
+                "queue_depths",
+                Json::obj(vec![("0", Json::Num(2.0)), ("5", Json::Num(1.0))]),
+            ),
+            (
+                "tenants",
+                Json::obj(vec![(
+                    "acme",
+                    Json::obj(vec![("generated_tokens", Json::Num(7.0))]),
+                )]),
+            ),
+        ]);
+        let text = prometheus_text(&stats);
+        assert!(text.contains("fdpp_tokens_generated 42\n"), "{text}");
+        assert!(text.contains("fdpp_kv_refcount_ok 1\n"));
+        assert!(text.contains("# TYPE fdpp_step_us histogram"));
+        assert!(text.contains("fdpp_step_us_count 2\n"));
+        assert!(text.contains("fdpp_step_us_sum 903\n"));
+        assert!(text.contains("le=\"+Inf\"} 2\n"), "cumulative top bucket");
+        assert!(text.contains("fdpp_queue_depth{priority=\"5\"} 1\n"));
+        assert!(text.contains("fdpp_tenant_generated_tokens{tenant=\"acme\"} 7\n"));
+        // Deterministic: same snapshot, same bytes.
+        assert_eq!(text, prometheus_text(&stats));
+    }
+
+    #[test]
+    fn breakdown_json_round_trips() {
+        let b = SpanBreakdown {
+            queue_wait_us: 1,
+            prefill_us: 2,
+            decode_us: 3,
+            paused_us: 4,
+            ttft_us: Some(5),
+            total_us: 10,
+        };
+        let j = crate::util::json::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(j.get("ttft_us").and_then(Json::as_usize), Some(5));
+        assert_eq!(j.get("total_us").and_then(Json::as_usize), Some(10));
+        let none = SpanBreakdown::default().to_json();
+        assert_eq!(none.get("ttft_us"), Some(&Json::Null));
+    }
+}

@@ -9,7 +9,7 @@
 //! [`crate::simengine::SimEngine`] twin (loopback tests, artifact-free
 //! serving demos) — the loop itself is generic and identical for both.
 //!
-//! The full wire protocol (v2.2) — request/response/stats/cancel/admin
+//! The full wire protocol (v2.3) — request/response/stats/cancel/admin
 //! schemas, defaults, and error shapes — is documented in
 //! `docs/PROTOCOL.md`. In short (one JSON object per line):
 //!
@@ -29,10 +29,18 @@
 //!   -> {"admin": {"cancel_tenant": "acme"}}
 //!   <- {"ok": true, "cancelled": 3}    (bulk cancel across connections)
 //!
+//!   -> {"admin": {"dump_flight": 50}}
+//!   <- {"ok": true, "flight": {"capacity": 512, "dropped": 0,
+//!       "entries": [{"seq": 0, "at_us": 1000, "what": "..."}, ...]}}
+//!
 //!   -> {"stats": true}
 //!   <- {"tokens_generated": 512, "prefix_hit_rate": 0.7,
 //!       "registry_depth": 2, "queue_depths": {"0": 1},
 //!       "backpressure_pauses": 4, "tenants": {"acme": {...}}, ...}
+//!
+//!   -> {"stats": "prometheus"}
+//!   <- {"prometheus": true, "text": "# TYPE fdpp_... \n..."}
+//!      (the same snapshot as Prometheus text exposition, JSON-framed)
 //!
 //! Cross-connection cancellation works through the shared
 //! [`RequestRegistry`]: every accepted submission is registered under a
@@ -61,6 +69,7 @@ use crate::api::{
 use crate::config::EngineConfig;
 use crate::engine::Engine;
 use crate::error::{Error, Result};
+use crate::obs::{prometheus_text, SpanBreakdown};
 use crate::router::RequestRegistry;
 use crate::runtime::Runtime;
 use crate::sampling::SamplingParams;
@@ -219,7 +228,20 @@ pub fn token_response(id: &str, token: u32, text: &str) -> String {
 }
 
 pub fn done_response(id: &str, reason: FinishReason, usage: &Usage) -> String {
-    Json::obj(vec![
+    done_response_with_span(id, reason, usage, None)
+}
+
+/// [`done_response`] carrying the request's lifecycle phase breakdown
+/// when the engine recorded one (every `EngineCore` backend does; the
+/// `"spans"` object is simply absent otherwise). See `docs/PROTOCOL.md`
+/// v2.3 and `docs/OBSERVABILITY.md`.
+pub fn done_response_with_span(
+    id: &str,
+    reason: FinishReason,
+    usage: &Usage,
+    span: Option<&SpanBreakdown>,
+) -> String {
+    let mut fields = vec![
         ("id", Json::Str(id.to_string())),
         ("done", Json::Bool(true)),
         ("reason", Json::Str(reason.as_str().to_string())),
@@ -239,8 +261,11 @@ pub fn done_response(id: &str, reason: FinishReason, usage: &Usage) -> String {
                 ),
             ]),
         ),
-    ])
-    .to_string()
+    ];
+    if let Some(b) = span {
+        fields.push(("spans", b.to_json()));
+    }
+    Json::obj(fields).to_string()
 }
 
 pub fn error_response(code: &str, msg: &str) -> String {
@@ -279,6 +304,22 @@ pub fn admin_ack(cancelled: usize) -> String {
     .to_string()
 }
 
+/// Admin flight-recorder dump reply.
+pub fn flight_ack(flight: Json) -> String {
+    Json::obj(vec![("ok", Json::Bool(true)), ("flight", flight)]).to_string()
+}
+
+/// Prometheus exposition reply: the rendered text is JSON-framed so the
+/// one-object-per-line protocol invariant holds (clients unwrap the
+/// `"text"` field to feed a scraper).
+pub fn prometheus_response(stats: &Json) -> String {
+    Json::obj(vec![
+        ("prometheus", Json::Bool(true)),
+        ("text", Json::Str(prometheus_text(stats))),
+    ])
+    .to_string()
+}
+
 /// A request as it travels to the engine thread.
 pub enum EngineJob {
     Submit {
@@ -301,6 +342,12 @@ pub enum EngineJob {
     /// with the structured [`Json`] value so the connection thread can
     /// merge server-side fields (registry depth) without re-parsing.
     Stats {
+        reply: mpsc::Sender<Json>,
+    },
+    /// Flight-recorder dump — the `{"admin": {"dump_flight": n}}` path.
+    /// The engine replies with [`InferenceEngine::dump_flight`]'s JSON.
+    DumpFlight {
+        n: usize,
         reply: mpsc::Sender<Json>,
     },
 }
@@ -430,6 +477,9 @@ fn engine_loop<E: InferenceEngine>(engine: &mut E, rx: mpsc::Receiver<EngineJob>
                 EngineJob::Stats { reply } => {
                     let _ = reply.send(engine.stats_json());
                 }
+                EngineJob::DumpFlight { n, reply } => {
+                    let _ = reply.send(engine.dump_flight(n));
+                }
                 EngineJob::Cancel { id, reply } => {
                     let r = engine.cancel(id);
                     if let Err(e) = &r {
@@ -520,6 +570,12 @@ pub fn is_stats_request(j: &Json) -> bool {
     j.get("stats").and_then(Json::as_bool) == Some(true) && j.get("prompt").is_none()
 }
 
+/// `{"stats": "prometheus"}` exactly, with no prompt (same hijack rule
+/// as stats): the same snapshot, rendered as Prometheus text.
+pub fn is_prometheus_request(j: &Json) -> bool {
+    j.get("stats").and_then(Json::as_str) == Some("prometheus") && j.get("prompt").is_none()
+}
+
 /// `{"cancel": id}` with no prompt (same hijack rule as stats).
 pub fn cancel_request_id(j: &Json) -> Option<String> {
     if j.get("prompt").is_some() {
@@ -581,7 +637,10 @@ fn pump_events(
                 // after our done line — never interleaved under one id.
                 // (Lock order everywhere is ids, then writer.)
                 registry.remove(&global_id);
-                let line = done_response(&wire_id, reason, &usage);
+                // The engine closes the span before emitting the
+                // terminal event, so the breakdown is readable here.
+                let span = events.span_breakdown();
+                let line = done_response_with_span(&wire_id, reason, &usage, span.as_ref());
                 let mut in_flight = ids.lock().unwrap();
                 let _ = write_line(&w, &line);
                 in_flight.remove(&wire_id);
@@ -624,7 +683,7 @@ fn handle_conn(
         // Stats request: one JSON object back, no generation. The
         // engine snapshot is augmented with the server-side registry
         // depth (requests in flight across all connections).
-        if is_stats_request(&j) {
+        if is_stats_request(&j) || is_prometheus_request(&j) {
             let (reply_tx, reply_rx) = mpsc::channel::<Json>();
             if engine_tx.send(EngineJob::Stats { reply: reply_tx }).is_err() {
                 return engine_gone(&w);
@@ -637,40 +696,61 @@ fn handle_conn(
                             Json::Num(registry.depth() as f64),
                         );
                     }
-                    write_line(&w, &stats.to_string())?;
+                    // Same snapshot, two renderings: raw JSON, or
+                    // Prometheus text (JSON-framed to keep the
+                    // one-object-per-line protocol).
+                    if is_prometheus_request(&j) {
+                        write_line(&w, &prometheus_response(&stats))?;
+                    } else {
+                        write_line(&w, &stats.to_string())?;
+                    }
                 }
                 Err(_) => return engine_gone(&w),
             }
             continue;
         }
-        // Admin request: currently one verb, bulk cancel by tenant —
-        // cancels that tenant's in-flight requests on *every*
-        // connection; each affected stream ends with its own done line,
-        // reason "cancelled". The ack reports how many live requests
-        // were actually cancelled (a request racing to completion is
-        // not counted).
+        // Admin request: two verbs. `cancel_tenant` bulk-cancels that
+        // tenant's in-flight requests on *every* connection; each
+        // affected stream ends with its own done line, reason
+        // "cancelled", and the ack reports how many live requests were
+        // actually cancelled (a request racing to completion is not
+        // counted). `dump_flight` returns the newest n entries of the
+        // engine's always-on flight recorder.
         if let Some(admin) = admin_request(&j) {
-            match admin.get("cancel_tenant").and_then(Json::as_str) {
-                Some(tenant) => {
-                    let rids = registry.tenant_ids(tenant);
-                    let (ack_tx, ack_rx) = mpsc::channel::<bool>();
-                    for rid in rids {
-                        let job = EngineJob::Cancel {
-                            id: rid,
-                            reply: Some(ack_tx.clone()),
-                        };
-                        if engine_tx.send(job).is_err() {
-                            return engine_gone(&w);
-                        }
+            if let Some(tenant) = admin.get("cancel_tenant").and_then(Json::as_str) {
+                let rids = registry.tenant_ids(tenant);
+                let (ack_tx, ack_rx) = mpsc::channel::<bool>();
+                for rid in rids {
+                    let job = EngineJob::Cancel {
+                        id: rid,
+                        reply: Some(ack_tx.clone()),
+                    };
+                    if engine_tx.send(job).is_err() {
+                        return engine_gone(&w);
                     }
-                    drop(ack_tx);
-                    let n = ack_rx.iter().filter(|&cancelled| cancelled).count();
-                    write_line(&w, &admin_ack(n))?;
                 }
-                None => {
-                    let msg = "admin supports {\"cancel_tenant\": \"<tenant>\"}";
+                drop(ack_tx);
+                let n = ack_rx.iter().filter(|&cancelled| cancelled).count();
+                write_line(&w, &admin_ack(n))?;
+            } else if let Some(dump) = admin.get("dump_flight") {
+                let Some(n) = non_negative_int(dump) else {
+                    let msg = "dump_flight takes a non-negative entry count";
                     write_line(&w, &error_response("bad_admin", msg))?;
+                    continue;
+                };
+                let (reply_tx, reply_rx) = mpsc::channel::<Json>();
+                let job = EngineJob::DumpFlight { n, reply: reply_tx };
+                if engine_tx.send(job).is_err() {
+                    return engine_gone(&w);
                 }
+                match reply_rx.recv() {
+                    Ok(flight) => write_line(&w, &flight_ack(flight))?,
+                    Err(_) => return engine_gone(&w),
+                }
+            } else {
+                let msg = "admin supports {\"cancel_tenant\": \"<tenant>\"} \
+                           and {\"dump_flight\": <n>}";
+                write_line(&w, &error_response("bad_admin", msg))?;
             }
             continue;
         }
@@ -864,6 +944,29 @@ impl Client {
         self.send(&Json::obj(vec![("stats", Json::Bool(true))]))?;
         Ok(self.recv()?.to_string())
     }
+
+    /// Fetch the stats snapshot as Prometheus text exposition
+    /// (unwrapped from its JSON framing).
+    pub fn stats_prometheus(&mut self) -> Result<String> {
+        self.send(&Json::obj(vec![(
+            "stats",
+            Json::Str("prometheus".to_string()),
+        )]))?;
+        self.recv()?.req_str("text")
+    }
+
+    /// Fetch the newest `n` flight-recorder entries from the engine.
+    pub fn dump_flight(&mut self, n: usize) -> Result<Json> {
+        self.send(&Json::obj(vec![(
+            "admin",
+            Json::obj(vec![("dump_flight", Json::Num(n as f64))]),
+        )]))?;
+        let reply = self.recv()?;
+        if let Some(err) = reply.get("error").and_then(Json::as_str) {
+            return Err(Error::Request(err.to_string()));
+        }
+        Ok(reply.field("flight")?.clone())
+    }
 }
 
 #[cfg(test)]
@@ -945,6 +1048,76 @@ mod tests {
             &parse(r#"{"prompt":"hi","stats":true}"#).unwrap()
         ));
         assert!(!is_stats_request(&parse(r#"{"prompt":"hi"}"#).unwrap()));
+    }
+
+    #[test]
+    fn prometheus_detection_is_exact() {
+        assert!(is_prometheus_request(
+            &parse(r#"{"stats":"prometheus"}"#).unwrap()
+        ));
+        // Wrong value/type, or a generate request carrying the field,
+        // must all fall through — and plain `{"stats":true}` stays on
+        // the JSON stats path.
+        assert!(!is_prometheus_request(&parse(r#"{"stats":true}"#).unwrap()));
+        assert!(!is_prometheus_request(
+            &parse(r#"{"stats":"json"}"#).unwrap()
+        ));
+        assert!(!is_prometheus_request(
+            &parse(r#"{"prompt":"hi","stats":"prometheus"}"#).unwrap()
+        ));
+        assert!(!is_stats_request(&parse(r#"{"stats":"prometheus"}"#).unwrap()));
+    }
+
+    #[test]
+    fn done_response_carries_span_breakdown() {
+        let usage = Usage {
+            prompt_tokens: 5,
+            cached_prompt_tokens: 2,
+            prefill_tokens: 3,
+            generated_tokens: 4,
+        };
+        let b = SpanBreakdown {
+            queue_wait_us: 100,
+            prefill_us: 200,
+            decode_us: 300,
+            paused_us: 0,
+            ttft_us: Some(300),
+            total_us: 600,
+        };
+        let line = done_response_with_span("a", FinishReason::Eos, &usage, Some(&b));
+        let j = parse(&line).unwrap();
+        let spans = j.field("spans").unwrap();
+        assert_eq!(spans.get("queue_wait_us").and_then(Json::as_usize), Some(100));
+        assert_eq!(spans.get("ttft_us").and_then(Json::as_usize), Some(300));
+        assert_eq!(spans.get("total_us").and_then(Json::as_usize), Some(600));
+        // Without a span the field is absent and the legacy shape is
+        // byte-for-byte what done_response always produced.
+        let bare = done_response("a", FinishReason::Eos, &usage);
+        assert!(parse(&bare).unwrap().get("spans").is_none());
+        assert_eq!(
+            bare,
+            done_response_with_span("a", FinishReason::Eos, &usage, None)
+        );
+    }
+
+    #[test]
+    fn flight_ack_and_prometheus_response_are_valid_json() {
+        let flight = Json::obj(vec![
+            ("capacity", Json::Num(8.0)),
+            ("entries", Json::Arr(vec![])),
+        ]);
+        let line = flight_ack(flight);
+        let j = parse(&line).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            j.field("flight").unwrap().get("capacity").and_then(Json::as_usize),
+            Some(8)
+        );
+        let stats = Json::obj(vec![("tokens_generated", Json::Num(3.0))]);
+        let line = prometheus_response(&stats);
+        assert!(!line.contains('\n'), "must stay one JSON line: {line}");
+        let j = parse(&line).unwrap();
+        assert!(j.req_str("text").unwrap().contains("fdpp_tokens_generated 3\n"));
     }
 
     #[test]

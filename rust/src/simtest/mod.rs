@@ -22,7 +22,7 @@
 //! `EngineCore<StubBackend>` in lockstep and assert byte-identical
 //! reports, proving the orchestration core treats backends uniformly.
 //!
-//! After every simulated step four global oracles run:
+//! After every simulated step five global oracles run:
 //!
 //! 1. **KV refcount conservation** — every block's refcount equals the
 //!    owners visible in the audit (sequence block tables + prefix-tree
@@ -43,10 +43,19 @@
 //!    admitted) and `generated` equals the tokens actually emitted;
 //!    globally, the per-request usages sum to the engine's token
 //!    counter.
+//! 5. **Span conservation** — every request timeline the engine's
+//!    observability layer retains ([`crate::obs::RequestSpan`], live
+//!    and finished) is a legal, monotone state machine (submitted →
+//!    admitted → first token → decode ⇄ paused → finished) whose
+//!    finished phases partition its total exactly, and the span
+//!    counters agree with the engine's admission/finish accounting.
 //!
-//! A violation reports the seed, the step, and a replay command; the
-//! same seed reproduces the run byte-identically (equal
-//! [`ScenarioReport::fingerprint`]).
+//! A violation reports the seed, the step, a replay command, and the
+//! newest entries of the engine's always-on flight recorder
+//! ([`crate::obs::FlightRecorder`]) — the failing seed ships its own
+//! black box. The same seed reproduces the run byte-identically (equal
+//! [`ScenarioReport::fingerprint`]); the flight dump is deterministic
+//! too, because it is stamped from the virtual clock.
 //!
 //! [`run_crash_recovery`] additionally scripts a mid-run engine crash:
 //! the core is dropped at a seed-derived step, a fresh core is built,
@@ -77,6 +86,9 @@ pub use crate::util::clock::Clock as SimClock;
 /// Hard cap on harness steps: hitting it is itself a liveness
 /// violation (the stack wedged under some client behavior).
 const MAX_STEPS: usize = 20_000;
+
+/// Flight-recorder lines appended to a violation report.
+const FLIGHT_DUMP_LINES: usize = 40;
 
 // ---------------------------------------------------------------------
 // Scenario model
@@ -461,6 +473,19 @@ pub fn run_scenario_on<B: Backend>(
     run_with_hook(scenario, engine, &mut |_, _| {})
 }
 
+/// Stamp a violation with the newest flight-recorder entries, so a
+/// failing seed ships its own black box. The dump is stamped from the
+/// virtual clock, so a replay still fails byte-identically.
+fn with_flight<B: Backend>(engine: &EngineCore<B>, mut v: Violation) -> Violation {
+    let dump = engine.flight_text(FLIGHT_DUMP_LINES);
+    if !dump.is_empty() {
+        v.message
+            .push_str("\n  flight recorder (newest entries, oldest first):\n");
+        v.message.push_str(&dump);
+    }
+    v
+}
+
 /// Like [`run_scenario_on`], with a per-step hook called right after
 /// the engine step and *before* the oracles — the fault-injection port
 /// the `#[cfg(test)]` double-free test uses.
@@ -489,9 +514,9 @@ fn run_with_hook<B: Backend>(
     let mut step = 0usize;
     loop {
         if step > MAX_STEPS {
-            return Err(violation(
-                step,
-                "scenario did not terminate (liveness wedge)".into(),
+            return Err(with_flight(
+                &engine,
+                violation(step, "scenario did not terminate (liveness wedge)".into()),
             ));
         }
         let cleanup = step >= scenario.horizon;
@@ -551,6 +576,8 @@ fn run_with_hook<B: Backend>(
 
         // Fault-injection port (no-op in normal runs).
         hook(&mut engine, step);
+        // Every oracle below stamps its violation with the engine's
+        // flight recorder via [`with_flight`].
 
         // Trace-driven oracles (3 and 4) + fingerprint.
         for ev in engine.take_trace() {
@@ -563,7 +590,8 @@ fn run_with_hook<B: Backend>(
                 TraceEvent::Resumed { .. } => resumes += 1,
                 TraceEvent::Expired { .. } => expired += 1,
                 TraceEvent::Preempted { id, priority, pool } => {
-                    check_preemption(*id, *priority, pool).map_err(|m| violation(step, m))?;
+                    check_preemption(*id, *priority, pool)
+                        .map_err(|m| with_flight(&engine, violation(step, m)))?;
                 }
                 TraceEvent::AdmissionRelief {
                     id,
@@ -571,46 +599,86 @@ fn run_with_hook<B: Backend>(
                     waiter_priority,
                 } => {
                     if priority >= waiter_priority {
-                        return Err(violation(
-                            step,
-                            format!(
-                                "admission relief preempted seq {id} (priority {priority}) \
-                                 for a waiter of priority {waiter_priority}"
+                        return Err(with_flight(
+                            &engine,
+                            violation(
+                                step,
+                                format!(
+                                    "admission relief preempted seq {id} (priority {priority}) \
+                                     for a waiter of priority {waiter_priority}"
+                                ),
                             ),
                         ));
                     }
                 }
                 TraceEvent::Finished { id, reason, usage } => {
                     if finished_trace.insert(*id, (*reason, *usage)).is_some() {
-                        return Err(violation(
-                            step,
-                            format!("seq {id} emitted two finish events"),
+                        return Err(with_flight(
+                            &engine,
+                            violation(step, format!("seq {id} emitted two finish events")),
                         ));
                     }
                     let n_emitted = emitted.get(id).map(Vec::len).unwrap_or(0);
-                    check_usage(usage, n_emitted)
-                        .map_err(|m| violation(step, format!("seq {id}: {m}")))?;
+                    check_usage(usage, n_emitted).map_err(|m| {
+                        with_flight(&engine, violation(step, format!("seq {id}: {m}")))
+                    })?;
                 }
                 TraceEvent::Admitted { .. } => {}
             }
         }
 
         // Oracle 1: refcount conservation, every step.
-        check_kv_conservation(&engine.audit()).map_err(|m| violation(step, m))?;
+        check_kv_conservation(&engine.audit())
+            .map_err(|m| with_flight(&engine, violation(step, m)))?;
 
         // Oracle 2 (bounds half): live buffers never exceed capacity.
         for (i, s) in states.iter().enumerate() {
             if let Some(h) = &s.handle {
                 if h.events.buffered() > h.capacity() {
-                    return Err(violation(
-                        step,
-                        format!(
-                            "client {i} buffers {} events over capacity {}",
-                            h.events.buffered(),
-                            h.capacity()
+                    return Err(with_flight(
+                        &engine,
+                        violation(
+                            step,
+                            format!(
+                                "client {i} buffers {} events over capacity {}",
+                                h.events.buffered(),
+                                h.capacity()
+                            ),
                         ),
                     ));
                 }
+            }
+        }
+
+        // Oracle 5: span conservation — every request timeline the
+        // engine retains (live and finished) is a legal, monotone
+        // state machine whose finished phases partition its total, and
+        // the span counters agree with the admission/finish accounting.
+        {
+            let spans = engine.spans();
+            let mut all: Vec<_> = spans.active().chain(spans.completed()).collect();
+            all.sort_by_key(|s| s.id);
+            for s in all {
+                s.check()
+                    .map_err(|m| with_flight(&engine, violation(step, m)))?;
+            }
+            if spans.spans_admitted != engine.metrics.requests_admitted
+                || spans.spans_finished != engine.metrics.requests_finished
+            {
+                return Err(with_flight(
+                    &engine,
+                    violation(
+                        step,
+                        format!(
+                            "span counters drifted from engine accounting: \
+                             admitted {} vs {}, finished {} vs {}",
+                            spans.spans_admitted,
+                            engine.metrics.requests_admitted,
+                            spans.spans_finished,
+                            engine.metrics.requests_finished
+                        ),
+                    ),
+                ));
             }
         }
 
@@ -628,18 +696,24 @@ fn run_with_hook<B: Backend>(
     // End-of-run oracles.
     let audit = engine.audit();
     if !audit.live.is_empty() || audit.queued != 0 {
-        return Err(violation(step, "idle engine still holds sequences".into()));
+        return Err(with_flight(
+            &engine,
+            violation(step, "idle engine still holds sequences".into()),
+        ));
     }
     let mut total_generated = 0u64;
     for (_, usage) in finished_trace.values() {
         total_generated += usage.generated_tokens as u64;
     }
     if total_generated != engine.metrics.tokens_generated {
-        return Err(violation(
-            step,
-            format!(
-                "usage sum {total_generated} != engine token counter {}",
-                engine.metrics.tokens_generated
+        return Err(with_flight(
+            &engine,
+            violation(
+                step,
+                format!(
+                    "usage sum {total_generated} != engine token counter {}",
+                    engine.metrics.tokens_generated
+                ),
             ),
         ));
     }
@@ -649,9 +723,12 @@ fn run_with_hook<B: Backend>(
         }
         let Some(id) = s.engine_id else { continue };
         if s.finished.is_none() {
-            return Err(violation(
-                step,
-                format!("client {i} (seq {id}) never received a finish event"),
+            return Err(with_flight(
+                &engine,
+                violation(
+                    step,
+                    format!("client {i} (seq {id}) never received a finish event"),
+                ),
             ));
         }
         // Oracle 2 (lossless half): the retained client drained exactly
@@ -659,13 +736,16 @@ fn run_with_hook<B: Backend>(
         // pause/resume, nothing reordered, nothing duplicated.
         let want = emitted.get(&id).cloned().unwrap_or_default();
         if s.drained != want {
-            return Err(violation(
-                step,
-                format!(
-                    "client {i} (seq {id}) drained {} tokens but the engine emitted {} \
-                     (loss or reorder across pause/resume)",
-                    s.drained.len(),
-                    want.len()
+            return Err(with_flight(
+                &engine,
+                violation(
+                    step,
+                    format!(
+                        "client {i} (seq {id}) drained {} tokens but the engine emitted {} \
+                         (loss or reorder across pause/resume)",
+                        s.drained.len(),
+                        want.len()
+                    ),
                 ),
             ));
         }
@@ -974,6 +1054,48 @@ mod tests {
             queued: 0,
         };
         assert!(check_kv_conservation(&audit).is_ok());
+    }
+
+    #[test]
+    fn violation_reports_carry_the_flight_recorder() {
+        // The injected fault trips the refcount oracle; the report must
+        // ship the engine's black box alongside the message.
+        let v = run_scenario_with_double_free(3)
+            .expect_err("double free must trip the refcount oracle");
+        assert!(
+            v.message.contains("flight recorder"),
+            "violation ships the flight dump: {v}"
+        );
+        assert!(v.message.contains("submitted id="), "dump has entries: {v}");
+    }
+
+    #[test]
+    fn perf_trajectory_report_is_byte_identical_and_complete() {
+        use crate::bench_support::{perf_trajectory_report, PERF_TRAJECTORY_SEED};
+        use crate::util::json::Json;
+        let a = perf_trajectory_report(PERF_TRAJECTORY_SEED).expect("harness runs");
+        let b = perf_trajectory_report(PERF_TRAJECTORY_SEED).expect("harness runs");
+        assert_eq!(
+            a.to_string(),
+            b.to_string(),
+            "BENCH_serving.json must be byte-identical across runs of the same seed"
+        );
+        for key in [
+            "tokens_per_sec",
+            "steps_per_sec",
+            "ttft_p50_us",
+            "ttft_p99_us",
+            "inter_token_p50_us",
+            "inter_token_p99_us",
+            "prefix_hit_rate",
+            "step_overhead",
+        ] {
+            assert!(a.get(key).is_some(), "report missing key {key}");
+        }
+        // The virtual clock gives every request a nonzero TTFT and the
+        // run a nonzero throughput.
+        assert!(a.get("ttft_p50_us").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(a.get("tokens_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
     }
 
     #[test]

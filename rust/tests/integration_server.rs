@@ -8,8 +8,10 @@
 //! depths, backpressure counters), cancel (ack + `cancelled` done line,
 //! including *cross-connection* cancellation by global id and the admin
 //! bulk-cancel verb), stop sequences over the wire, budget clamping,
-//! the structured-error validation path, and slow-client isolation (a
-//! stalled reader never delays other connections' streams).
+//! the structured-error validation path, slow-client isolation (a
+//! stalled reader never delays other connections' streams), and the
+//! v2.3 observability surface: the `done` line's span breakdown, the
+//! `dump_flight` admin verb, and the Prometheus stats rendering.
 
 use std::net::TcpListener;
 use std::thread;
@@ -533,6 +535,72 @@ fn stalled_reader_never_delays_other_connections() {
         assert!(stats.req_usize("requests_finished").unwrap() >= 5);
         drop(slow);
     }
+}
+
+#[test]
+fn observability_surface_over_the_wire() {
+    let cfg = EngineConfig {
+        flight_recorder_capacity: 128,
+        ..test_cfg()
+    };
+    let addr = start_server(cfg);
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+
+    // A finished generation's done line carries the span breakdown,
+    // and the phases partition the request's total time exactly.
+    c.send(&Json::obj(vec![
+        ("id", Json::Str("obs-1".into())),
+        ("prompt", Json::Str("observability probe".into())),
+        ("max_new_tokens", Json::Num(4.0)),
+    ]))
+    .unwrap();
+    let _global = read_accepted(&mut c, "obs-1");
+    let done = loop {
+        let j = c.recv().unwrap();
+        if j.get("done").is_some() {
+            break j;
+        }
+    };
+    let spans = done.field("spans").expect("done line carries spans");
+    let total = spans.req_usize("total_us").unwrap();
+    let parts = spans.req_usize("queue_wait_us").unwrap()
+        + spans.req_usize("prefill_us").unwrap()
+        + spans.req_usize("decode_us").unwrap()
+        + spans.req_usize("paused_us").unwrap();
+    assert_eq!(parts, total, "phases partition the total: {}", spans.to_string());
+    // The sim engine runs on its virtual clock: time demonstrably
+    // passed between submission and the first token.
+    assert!(spans.req_usize("ttft_us").unwrap() >= 1);
+
+    // dump_flight round-trips over loopback: ring bookkeeping plus the
+    // newest entries of the run we just made.
+    let flight = c.dump_flight(16).unwrap();
+    assert_eq!(flight.req_usize("capacity").unwrap(), 128);
+    assert!(flight.req_usize("recorded").unwrap() >= 1);
+    let entries = flight.req_arr("entries").unwrap();
+    assert!(!entries.is_empty(), "the generation left flight entries");
+    assert!(entries.len() <= 16);
+    assert!(entries[0].get("what").and_then(Json::as_str).is_some());
+
+    // Prometheus exposition renders the same stats snapshot as text.
+    let text = c.stats_prometheus().unwrap();
+    assert!(
+        text.contains("# TYPE fdpp_tokens_generated gauge"),
+        "gauges rendered: {text}"
+    );
+    assert!(text.contains("fdpp_step_us_count"), "histograms rendered");
+
+    // A malformed dump_flight argument is a structured error and the
+    // connection survives it.
+    c.send(&Json::obj(vec![(
+        "admin",
+        Json::obj(vec![("dump_flight", Json::Str("nope".into()))]),
+    )]))
+    .unwrap();
+    assert_eq!(c.recv().unwrap().req_str("code").unwrap(), "bad_admin");
+    let flight = c.dump_flight(4).unwrap();
+    assert!(flight.req_arr("entries").unwrap().len() <= 4);
 }
 
 #[test]
