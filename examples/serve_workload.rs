@@ -1,10 +1,14 @@
-//! END-TO-END driver (EXPERIMENTS.md §E2E), two acts:
+//! END-TO-END driver (EXPERIMENTS.md §E2E), three acts:
 //!
 //! 1. **Flow-control demo** (sim engine, runs on a bare checkout):
 //!    mixed-priority traffic with one deliberately slow consumer,
 //!    under both backpressure policies, printing the new
 //!    backpressure / preemption / per-priority metrics.
-//! 2. **PJRT workload** (needs `make artifacts`): serve a
+//! 2. **Fleet demo** (sim engine): three replicas behind the
+//!    cache-aware router serving a Zipf shared-prefix workload, one
+//!    replica drained mid-run; prints per-replica routing decisions
+//!    and prefix-cache hits.
+//! 3. **PJRT workload** (needs `make artifacts`): serve a
 //!    Poisson-arrival workload of batched requests on the real tiny
 //!    model and report latency/throughput, comparing the
 //!    asynchronized-softmax engine (C1 on) against the synchronized
@@ -21,11 +25,12 @@
 use std::time::{Duration, Instant};
 
 use fdpp::api::{GenEvent, GenRequest, InferenceEngine, SubmissionHandle};
-use fdpp::config::{BackpressurePolicy, EngineConfig};
+use fdpp::config::{BackpressurePolicy, EngineConfig, FleetConfig, RoutePolicy};
 use fdpp::engine::Engine;
+use fdpp::fleet::Fleet;
 use fdpp::runtime::Runtime;
 use fdpp::simengine::{SimEngine, SimSpec};
-use fdpp::workload::{generate, WorkloadSpec};
+use fdpp::workload::{generate, shared_prefix_trace, SharedPrefixSpec, WorkloadSpec};
 
 struct RunReport {
     label: String,
@@ -260,6 +265,95 @@ fn flow_control_demo(policy: BackpressurePolicy) -> fdpp::Result<()> {
     Ok(())
 }
 
+/// Fleet demo on the sim twin: three replicas behind the cache-aware
+/// router, a Zipf shared-prefix workload (6 tenants, each repeating a
+/// long system prompt), and one replica drained halfway through the
+/// trace — it finishes its in-flight work, retires, and the router
+/// re-concentrates its tenants on the survivors.
+fn fleet_demo() -> fdpp::Result<()> {
+    let cfg = EngineConfig {
+        kv_block_tokens: 8,
+        kv_total_blocks: 64,
+        max_new_tokens: 16,
+        max_running: 4,
+        prefix_cache: true,
+        ..EngineConfig::default()
+    };
+    let fcfg = FleetConfig {
+        n_replicas: 3,
+        policy: RoutePolicy::CacheAware,
+        ..FleetConfig::default()
+    };
+    let mut fleet = Fleet::sim(cfg, fcfg, SimSpec::default())?;
+    let spec = SharedPrefixSpec {
+        n_tenants: 6,
+        n_requests: 48,
+        seed: 7,
+        ..SharedPrefixSpec::default()
+    };
+    let trace = shared_prefix_trace(&spec);
+    let drain_at = trace.len() / 2;
+    let mut handles = Vec::new();
+    for (i, r) in trace.iter().enumerate() {
+        if i == drain_at {
+            fleet.drain(2)?;
+            println!("  draining replica 2 after {i} placements");
+        }
+        let gen = GenRequest::text(r.prompt.as_str())
+            .tenant(r.tenant.as_str())
+            .max_new_tokens(r.max_new_tokens);
+        handles.push(fleet.submit(gen)?);
+        // A little work between arrivals so the drain lands mid-run.
+        for _ in 0..2 {
+            if !fleet.is_idle() {
+                fleet.step()?;
+            }
+        }
+        for h in &handles {
+            while h.events.try_recv().is_ok() {}
+        }
+    }
+    let mut steps = 0usize;
+    while !fleet.is_idle() && steps < 20_000 {
+        fleet.step()?;
+        steps += 1;
+        for h in &handles {
+            while h.events.try_recv().is_ok() {}
+        }
+    }
+
+    let (decisions, cache_hits) = fleet.routing_counts();
+    println!(
+        "  routing                {} decisions, {} with a mirror-predicted prefix hit",
+        decisions, cache_hits
+    );
+    for k in 0..fleet.n_replicas() {
+        let s = fleet.replica_stats(k).expect("replica exists");
+        println!(
+            "  replica {k}              {:<8} routed {:>3}  prefix hits {:>3}/{:<3}  \
+             finished {:>3}  tokens {:>4}",
+            s.health.as_str(),
+            s.routed,
+            s.prefix_hits,
+            s.prefix_lookups,
+            s.requests_finished,
+            s.tokens_generated
+        );
+    }
+    let m = fleet.metrics();
+    println!(
+        "  fleet totals           finished {} | {} tokens | prefix hit rate {:.3}",
+        m.requests_finished,
+        m.tokens_generated,
+        if m.prefix_lookups > 0 {
+            m.prefix_hits as f64 / m.prefix_lookups as f64
+        } else {
+            0.0
+        }
+    );
+    Ok(())
+}
+
 fn main() -> fdpp::Result<()> {
     let n: usize = std::env::args()
         .nth(1)
@@ -275,6 +369,9 @@ fn main() -> fdpp::Result<()> {
         println!("\npolicy {policy:?}:");
         flow_control_demo(policy)?;
     }
+
+    println!("\n== fleet serving demo (3 sim replicas, cache-aware router) ==");
+    fleet_demo()?;
 
     println!("\n== PJRT workload (requires make artifacts) ==");
     println!("serving {n} requests at ~{rate}/s on the tiny model (CPU PJRT)");

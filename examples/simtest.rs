@@ -5,11 +5,18 @@
 //!   cargo run --example simtest -- --seed 7          # replay one seed
 //!   cargo run --example simtest -- --seeds 1..100    # a seed range
 //!   cargo run --example simtest -- --random-seeds 25 # smoke mode
+//!   cargo run --example simtest -- --fleet 3         # N-replica fleet
+//!   cargo run --example simtest -- --fleet 3 --kill  # + replica death
 //!
-//! Any oracle violation prints the offending seed plus a replay
-//! command and exits nonzero — CI echoes exactly what to run locally.
+//! `--fleet N` runs every selected seed through an N-replica
+//! [`fdpp::fleet::Fleet`] under the same five oracles; `--kill`
+//! additionally kills a seed-chosen replica mid-run and checks that
+//! its in-flight work restarts on the survivors with nothing lost or
+//! duplicated. Any oracle violation prints the offending seed plus a
+//! replay command and exits nonzero — CI echoes exactly what to run
+//! locally.
 
-use fdpp::simtest::run_scenario;
+use fdpp::simtest::{run_replica_kill, run_scenario, run_scenario_fleet};
 
 fn entropy_seed() -> u64 {
     // Smoke mode only: fixed runs never call this.
@@ -22,8 +29,9 @@ fn entropy_seed() -> u64 {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: simtest [--seed N]... [--seeds LO..HI] [--random-seeds N]\n\
-         (no arguments: the fixed seed matrix 1..=24)"
+        "usage: simtest [--seed N]... [--seeds LO..HI] [--random-seeds N] \
+         [--fleet N] [--kill]\n\
+         (no arguments: the fixed seed matrix 1..=24; --kill needs --fleet >= 2)"
     );
     std::process::exit(2)
 }
@@ -31,6 +39,8 @@ fn usage() -> ! {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut seeds: Vec<u64> = Vec::new();
+    let mut fleet: Option<usize> = None;
+    let mut kill = false;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -63,6 +73,16 @@ fn main() {
                     x = x.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
                 }
             }
+            "--fleet" => {
+                i += 1;
+                let s = args.get(i).unwrap_or_else(|| usage());
+                let n: usize = s.parse().unwrap_or_else(|_| usage());
+                if n == 0 {
+                    usage();
+                }
+                fleet = Some(n);
+            }
+            "--kill" => kill = true,
             _ => usage(),
         }
         i += 1;
@@ -70,10 +90,19 @@ fn main() {
     if seeds.is_empty() {
         seeds.extend(1..=24);
     }
+    if kill && fleet.map(|n| n < 2).unwrap_or(true) {
+        eprintln!("--kill needs --fleet with at least 2 replicas");
+        std::process::exit(2);
+    }
 
     let mut failed = false;
     for &seed in &seeds {
-        match run_scenario(seed) {
+        let result = match (fleet, kill) {
+            (Some(n), true) => run_replica_kill(seed, n),
+            (Some(n), false) => run_scenario_fleet(seed, n),
+            (None, _) => run_scenario(seed),
+        };
+        match result {
             Ok(r) => println!(
                 "seed {seed:>20}: ok  ({} steps, {} reqs, {} finished, {} tok, \
                  {} preempt, {} pause/{} resume, {} expired, fp {:016x})",
@@ -97,5 +126,10 @@ fn main() {
     if failed {
         std::process::exit(1);
     }
-    println!("{} scenario(s) passed all oracles", seeds.len());
+    let mode = match (fleet, kill) {
+        (Some(n), true) => format!(" (fleet of {n}, replica kill)"),
+        (Some(n), false) => format!(" (fleet of {n})"),
+        (None, _) => String::new(),
+    };
+    println!("{} scenario(s) passed all oracles{mode}", seeds.len());
 }

@@ -1,0 +1,77 @@
+//! Fleet routing comparison: the pinned Zipf shared-prefix workload
+//! replayed under round-robin, least-loaded, and cache-aware routing
+//! on identical 4-replica sim fleets (`BENCH_fleet.json`).
+//!
+//! Runs [`fdpp::bench_support::fleet_routing_report`] twice at the
+//! pinned seed, asserts the two reports are byte-identical (virtual
+//! time, seeded workload — regressions show up as a *changed* report,
+//! never as noise), asserts cache-aware routing achieves a strictly
+//! higher engine-side prefix-hit rate than both baselines, prints a
+//! per-policy table, and writes `BENCH_fleet.json` to the working
+//! directory.
+//!
+//!   cargo bench --bench fleet_routing
+
+use fdpp::bench_support::{banner, fleet_routing_report, row, FLEET_ROUTING_SEED};
+use fdpp::util::json::Json;
+
+const POLICIES: [&str; 3] = ["round_robin", "least_loaded", "cache_aware"];
+
+fn main() {
+    banner(
+        "BENCH_fleet",
+        "cache-aware fleet routing vs baselines (4 sim replicas, Zipf prefixes)",
+    );
+    let report = fleet_routing_report(FLEET_ROUTING_SEED).expect("harness runs");
+    let again = fleet_routing_report(FLEET_ROUTING_SEED).expect("harness runs");
+    let text = report.to_string();
+    assert_eq!(
+        text,
+        again.to_string(),
+        "fleet routing report must be byte-identical across runs of the same seed"
+    );
+
+    let num = |policy: &str, key: &str| {
+        report
+            .get(policy)
+            .and_then(|p| p.get(key))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("report missing {policy}.{key}"))
+    };
+    row(
+        "policy",
+        &POLICIES.iter().map(|p| p.to_string()).collect::<Vec<_>>(),
+    );
+    for (label, key) in [
+        ("prefix hit rate", "prefix_hit_rate"),
+        ("prefix hits", "prefix_hits"),
+        ("prefill tokens computed", "prefill_tokens_computed"),
+        ("prefix tokens reused", "prefix_tokens_reused"),
+        ("steps to drain", "steps"),
+        ("tokens generated", "tokens_generated"),
+    ] {
+        let vals: Vec<String> = POLICIES
+            .iter()
+            .map(|p| {
+                let v = num(p, key);
+                if key == "prefix_hit_rate" {
+                    format!("{v:.3}")
+                } else {
+                    format!("{v:.0}")
+                }
+            })
+            .collect();
+        row(label, &vals);
+    }
+
+    let hit = |p: &str| num(p, "prefix_hit_rate");
+    let (rr, ll, ca) = (hit("round_robin"), hit("least_loaded"), hit("cache_aware"));
+    assert!(
+        ca > ll && ca > rr,
+        "cache-aware hit rate {ca:.3} must strictly beat least-loaded {ll:.3} \
+         and round-robin {rr:.3}"
+    );
+
+    std::fs::write("BENCH_fleet.json", format!("{text}\n")).expect("write BENCH_fleet.json");
+    println!("\nwrote BENCH_fleet.json ({} bytes)", text.len() + 1);
+}

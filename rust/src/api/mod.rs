@@ -651,6 +651,15 @@ pub trait InferenceEngine {
         ])
     }
 
+    /// Engine-specific admin verbs beyond the protocol's common set
+    /// (the fleet layer handles `drain_replica` / `kill_replica` /
+    /// `fleet_stats` here). Returns `None` when the verb is not
+    /// supported by this engine, which the server maps to a
+    /// `bad_admin` error.
+    fn admin(&mut self, _verb: &str, _arg: &Json) -> Option<Json> {
+        None
+    }
+
     /// Tokenize prompt text exactly the way `submit` would.
     fn encode(&self, text: &str) -> Vec<u32>;
 

@@ -8,10 +8,12 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::api::{GenEvent, GenRequest, InferenceEngine};
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, FleetConfig, RoutePolicy};
+use crate::fleet::Fleet;
 use crate::simengine::{SimEngine, SimSpec, SIM_STEP};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::workload::{shared_prefix_trace, SharedPrefixSpec};
 use crate::{Error, Result};
 
 /// Print a header band for one reproduced figure/table.
@@ -205,6 +207,144 @@ pub fn perf_trajectory_report(seed: u64) -> Result<Json> {
     ]))
 }
 
+// ---------------------------------------------------------------------
+// Fleet-routing harness (BENCH_fleet.json)
+// ---------------------------------------------------------------------
+
+/// The pinned seed `benches/fleet_routing.rs` and the CI
+/// `perf-trajectory` job run. Changing it invalidates the fleet
+/// routing history, so don't.
+pub const FLEET_ROUTING_SEED: u64 = 2324;
+
+/// Replicas in the pinned fleet-routing comparison.
+const FLEET_ROUTING_REPLICAS: usize = 4;
+
+/// The Zipf shared-prefix workload every policy replays: 8 tenants,
+/// a 128-char system prompt each, 96 requests, all arriving up front
+/// so placement is the only degree of freedom.
+fn fleet_routing_spec(seed: u64) -> SharedPrefixSpec {
+    SharedPrefixSpec {
+        seed,
+        ..SharedPrefixSpec::default()
+    }
+}
+
+/// Run the pinned shared-prefix workload through a fleet under one
+/// routing policy and report its cache economics.
+///
+/// The KV budget is sized so one replica can hold only a few tenants'
+/// system prompts: a policy that scatters a tenant across replicas
+/// pays a cold prefill *per replica* and thrashes each replica's
+/// prefix cache, while a cache-affine policy concentrates tenants and
+/// pays roughly one cold prefill per tenant. `prefix_hit_rate` is the
+/// engine-side truth (summed over replicas); `router.cache_hits` is
+/// the router's own mirror-predicted hit count.
+fn fleet_policy_run(seed: u64, policy: RoutePolicy) -> Result<Json> {
+    let cfg = EngineConfig {
+        kv_block_tokens: 8,
+        kv_total_blocks: 64,
+        max_new_tokens: 16,
+        max_running: 4,
+        prefix_cache: true,
+        seed,
+        ..EngineConfig::default()
+    };
+    let fcfg = FleetConfig {
+        n_replicas: FLEET_ROUTING_REPLICAS,
+        policy,
+        cache_vs_balance: 0.8,
+        ..FleetConfig::default()
+    };
+    let mut fleet = Fleet::sim(cfg, fcfg, SimSpec::default())?;
+    let trace = shared_prefix_trace(&fleet_routing_spec(seed));
+    let mut handles = Vec::with_capacity(trace.len());
+    for r in trace {
+        let req = GenRequest::text(r.prompt)
+            .tenant(r.tenant.as_str())
+            .max_new_tokens(r.max_new_tokens);
+        handles.push(fleet.submit(req)?);
+    }
+    let mut steps = 0u64;
+    while !fleet.is_idle() {
+        if steps > 200_000 {
+            return Err(Error::Request("fleet routing workload did not drain".into()));
+        }
+        fleet.step()?;
+        steps += 1;
+        for h in &handles {
+            while h.events.try_recv().is_ok() {}
+        }
+    }
+
+    let m = fleet.metrics();
+    let hit_rate = if m.prefix_lookups > 0 {
+        m.prefix_hits as f64 / m.prefix_lookups as f64
+    } else {
+        0.0
+    };
+    let (decisions, cache_hits) = fleet.routing_counts();
+    let routed: Vec<Json> = (0..fleet.n_replicas())
+        .map(|k| {
+            let s = fleet.replica_stats(k).expect("replica exists");
+            Json::Num(s.routed as f64)
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("policy", Json::Str(policy.as_str().into())),
+        ("steps", Json::Num(steps as f64)),
+        ("requests_finished", Json::Num(m.requests_finished as f64)),
+        ("tokens_generated", Json::Num(m.tokens_generated as f64)),
+        ("prefix_lookups", Json::Num(m.prefix_lookups as f64)),
+        ("prefix_hits", Json::Num(m.prefix_hits as f64)),
+        ("prefix_hit_rate", Json::Num(hit_rate)),
+        (
+            "prefix_tokens_reused",
+            Json::Num(m.prefix_tokens_reused as f64),
+        ),
+        (
+            "prefill_tokens_computed",
+            Json::Num(m.prefill_tokens_computed as f64),
+        ),
+        (
+            "router",
+            Json::obj(vec![
+                ("decisions", Json::Num(decisions as f64)),
+                ("cache_hits", Json::Num(cache_hits as f64)),
+            ]),
+        ),
+        ("replica_routed", Json::Arr(routed)),
+    ]))
+}
+
+/// Run the pinned Zipf shared-prefix workload under all three routing
+/// policies on identical 4-replica sim fleets and return the
+/// `BENCH_fleet.json` report object. Everything is a pure function of
+/// `seed` (manual sim clock, seeded workload), so the report is
+/// byte-identical across runs — the bench and CI assert it by diffing
+/// two consecutive runs.
+pub fn fleet_routing_report(seed: u64) -> Result<Json> {
+    let spec = fleet_routing_spec(seed);
+    Ok(Json::obj(vec![
+        ("seed", Json::Num(seed as f64)),
+        ("replicas", Json::Num(FLEET_ROUTING_REPLICAS as f64)),
+        (
+            "workload",
+            Json::obj(vec![
+                ("n_tenants", Json::Num(spec.n_tenants as f64)),
+                ("zipf_s", Json::Num(spec.zipf_s)),
+                (
+                    "system_prompt_len",
+                    Json::Num(spec.system_prompt_len as f64),
+                ),
+                ("n_requests", Json::Num(spec.n_requests as f64)),
+            ]),
+        ),
+        ("round_robin", fleet_policy_run(seed, RoutePolicy::RoundRobin)?),
+        ("least_loaded", fleet_policy_run(seed, RoutePolicy::LeastLoaded)?),
+        ("cache_aware", fleet_policy_run(seed, RoutePolicy::CacheAware)?),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,5 +377,30 @@ mod tests {
             std::hint::black_box((0..1000).sum::<u64>());
         });
         assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn fleet_routing_report_is_byte_identical_and_cache_aware_wins() {
+        let a = fleet_routing_report(FLEET_ROUTING_SEED).unwrap();
+        let b = fleet_routing_report(FLEET_ROUTING_SEED).unwrap();
+        assert_eq!(a.to_string(), b.to_string(), "report must reproduce");
+        let hit = |policy: &str| {
+            a.get(policy)
+                .and_then(|p| p.get("prefix_hit_rate"))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        let (rr, ll, ca) = (hit("round_robin"), hit("least_loaded"), hit("cache_aware"));
+        assert!(ca > ll, "cache-aware {ca} must beat least-loaded {ll}");
+        assert!(ca > rr, "cache-aware {ca} must beat round-robin {rr}");
+        // Every policy finishes the whole workload.
+        for policy in ["round_robin", "least_loaded", "cache_aware"] {
+            let fin = a
+                .get(policy)
+                .and_then(|p| p.get("requests_finished"))
+                .and_then(Json::as_f64)
+                .unwrap();
+            assert_eq!(fin, 96.0, "{policy} finished all requests");
+        }
     }
 }

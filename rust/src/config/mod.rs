@@ -327,6 +327,112 @@ impl EngineConfig {
     }
 }
 
+/// How the fleet front end picks a replica for each submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Rotate through healthy replicas regardless of state.
+    RoundRobin,
+    /// Pick the replica with the fewest in-flight requests.
+    LeastLoaded,
+    /// Score replicas by `cache_vs_balance * cached-prefix fraction -
+    /// (1 - cache_vs_balance) * normalized load` using the router's
+    /// radix mirror of each replica's prefix cache.
+    CacheAware,
+}
+
+impl RoutePolicy {
+    /// Stable config-file name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round_robin",
+            RoutePolicy::LeastLoaded => "least_loaded",
+            RoutePolicy::CacheAware => "cache_aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "round_robin" => Ok(RoutePolicy::RoundRobin),
+            "least_loaded" => Ok(RoutePolicy::LeastLoaded),
+            "cache_aware" => Ok(RoutePolicy::CacheAware),
+            other => Err(Error::Config(format!(
+                "route policy must be \"round_robin\", \"least_loaded\" or \
+                 \"cache_aware\", got {other:?}"
+            ))),
+        }
+    }
+}
+
+/// Knobs of the replica fleet layered above `EngineCore` (see
+/// `src/fleet`). Per-replica serving knobs stay in [`EngineConfig`];
+/// this covers only what the router in front of the replicas decides.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of engine replicas the fleet owns. Must be >= 1.
+    pub n_replicas: usize,
+    /// Routing policy for new submissions.
+    pub policy: RoutePolicy,
+    /// Cache-aware tradeoff in `[0, 1]`: 1.0 routes purely on cached
+    /// prefix length, 0.0 degenerates to least-loaded.
+    pub cache_vs_balance: f64,
+    /// Fleet-wide per-tenant concurrency quota across all replicas
+    /// (on top of each replica's own `tenant_max_inflight`). 0
+    /// disables it.
+    pub tenant_max_inflight: usize,
+    /// Per-tenant token-rate refill bucket: sustained budget in
+    /// projected tokens (prompt + generation budget) per second of
+    /// engine-clock time. 0.0 disables rate limiting.
+    pub tenant_token_rate: f64,
+    /// Burst capacity of the refill bucket, in tokens. Must be > 0
+    /// when `tenant_token_rate` is set; a fresh tenant starts with a
+    /// full bucket.
+    pub tenant_token_burst: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            n_replicas: 2,
+            policy: RoutePolicy::CacheAware,
+            cache_vs_balance: 0.75,
+            tenant_max_inflight: 0,
+            tenant_token_rate: 0.0,
+            tenant_token_burst: 0.0,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.n_replicas == 0 {
+            return Err(Error::Config("fleet needs at least one replica".into()));
+        }
+        if !self.cache_vs_balance.is_finite()
+            || !(0.0..=1.0).contains(&self.cache_vs_balance)
+        {
+            return Err(Error::Config(
+                "cache_vs_balance must be a finite value in [0, 1]".into(),
+            ));
+        }
+        if !self.tenant_token_rate.is_finite() || self.tenant_token_rate < 0.0 {
+            return Err(Error::Config(
+                "tenant_token_rate must be finite and >= 0".into(),
+            ));
+        }
+        if !self.tenant_token_burst.is_finite() || self.tenant_token_burst < 0.0 {
+            return Err(Error::Config(
+                "tenant_token_burst must be finite and >= 0".into(),
+            ));
+        }
+        if self.tenant_token_rate > 0.0 && self.tenant_token_burst <= 0.0 {
+            return Err(Error::Config(
+                "tenant_token_burst must be > 0 when tenant_token_rate is set".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -398,5 +504,37 @@ mod tests {
             assert_eq!(BackpressurePolicy::parse(p.as_str()).unwrap(), p);
         }
         assert!(BackpressurePolicy::parse("block_forever").is_err());
+    }
+
+    #[test]
+    fn route_policy_names_round_trip() {
+        for p in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastLoaded,
+            RoutePolicy::CacheAware,
+        ] {
+            assert_eq!(RoutePolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(RoutePolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn fleet_config_validation() {
+        let mut f = FleetConfig::default();
+        f.validate().unwrap();
+        f.n_replicas = 0;
+        assert!(f.validate().is_err(), "zero replicas rejected");
+        f.n_replicas = 2;
+        f.cache_vs_balance = 1.5;
+        assert!(f.validate().is_err(), "tradeoff outside [0,1] rejected");
+        f.cache_vs_balance = f64::NAN;
+        assert!(f.validate().is_err(), "NaN tradeoff rejected");
+        f.cache_vs_balance = 0.5;
+        f.tenant_token_rate = 100.0;
+        assert!(f.validate().is_err(), "rate without burst rejected");
+        f.tenant_token_burst = 50.0;
+        f.validate().unwrap();
+        f.tenant_token_rate = -1.0;
+        assert!(f.validate().is_err(), "negative rate rejected");
     }
 }

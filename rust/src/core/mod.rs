@@ -527,6 +527,13 @@ impl<B: Backend> EngineCore<B> {
         &self.backend
     }
 
+    /// Re-base this core's request-id counter so ids stay globally
+    /// unique across a fleet of replicas (replica `k` gets base
+    /// `k << 48`). Must be called before the first submission.
+    pub fn set_seq_id_base(&mut self, base: RequestId) {
+        self.router.set_id_base(base);
+    }
+
     /// Start recording [`TraceEvent`]s (drained with
     /// [`EngineCore::take_trace`]). Available on every backend,
     /// including the production PJRT engine.

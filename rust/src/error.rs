@@ -24,6 +24,10 @@ pub enum Error {
     /// (`EngineConfig::tenant_max_inflight`); surfaced on the wire as
     /// the `quota_exceeded` error code.
     Quota(String),
+    /// A per-tenant token-rate refill bucket rejected the submission
+    /// (`FleetConfig::tenant_token_rate`); surfaced on the wire as the
+    /// `rate_limit_exceeded` error code.
+    RateLimit(String),
     /// I/O.
     Io(std::io::Error),
     /// JSON (manifest, lookup tables).
@@ -40,6 +44,7 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config: {m}"),
             Error::Request(m) => write!(f, "request: {m}"),
             Error::Quota(m) => write!(f, "quota: {m}"),
+            Error::RateLimit(m) => write!(f, "rate limit: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
             Error::Json(e) => write!(f, "json: {e}"),
         }
@@ -49,10 +54,13 @@ impl fmt::Display for Error {
 impl Error {
     /// Stable wire-protocol error code for a rejected submission
     /// (docs/PROTOCOL.md § Errors): quota rejections are
-    /// distinguishable so clients can back off instead of retrying.
+    /// distinguishable so clients can back off instead of retrying,
+    /// and rate limits carry their own code so clients can retry after
+    /// the bucket refills.
     pub fn wire_code(&self) -> &'static str {
         match self {
             Error::Quota(_) => "quota_exceeded",
+            Error::RateLimit(_) => "rate_limit_exceeded",
             _ => "rejected",
         }
     }

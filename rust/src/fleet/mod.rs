@@ -1,0 +1,1267 @@
+//! Fleet serving: N engine replicas behind one cache-aware router.
+//!
+//! FlashDecoding++ makes one engine fast; serving at capacity runs
+//! many. [`Fleet`] owns `n_replicas` [`EngineCore`]s and routes each
+//! request with a per-replica [`RadixMirror`] — an approximate,
+//! router-side copy of that replica's prefix cache, maintained from
+//! placements and the replica's admission trace — so requests land
+//! where their prompt prefix is already resident and prefill compute
+//! is skipped (the same win the in-engine prefix cache gives, lifted
+//! across the fleet). [`RoutePolicy::CacheAware`] trades the mirror
+//! match against load imbalance under `cache_vs_balance`;
+//! `benches/fleet_routing.rs` shows it beating round-robin and
+//! least-loaded on the Zipf shared-prefix workload.
+//!
+//! Replicas have a health lifecycle (`Up` → `Draining` → `Dead`):
+//! draining stops new placements and retires the replica once idle;
+//! [`Fleet::kill`] retires it immediately and resubmits every
+//! in-flight request to the survivors, so a replica death loses at
+//! most the tokens already streamed — never a request. Cross-replica
+//! tenant policy (fleet-wide max in-flight, token-rate refill buckets)
+//! is enforced here, before placement, because no single replica can
+//! see fleet-wide usage; rate rejections surface as
+//! [`Error::RateLimit`] (`rate_limit_exceeded` on the wire).
+//!
+//! Everything is deterministic: the mirror is a `BTreeMap`, routing
+//! ties break on the lowest replica index, kill resubmission walks
+//! victims in id order, and a fleet of one is byte-identical — trace
+//! fingerprints included — to a bare engine (`tests/fleet.rs` proves
+//! both properties over the simtest seed matrix).
+
+use std::collections::{BTreeMap, HashMap};
+use std::mem;
+use std::ops::Bound::{Excluded, Unbounded};
+use std::time::Duration;
+
+use crate::api::{
+    GenRequest, InferenceEngine, RequestId, SubmissionHandle, TryRecvError, Wakeup,
+};
+use crate::config::{EngineConfig, FleetConfig, RoutePolicy};
+use crate::core::{Backend, EngineCore, TraceEvent};
+use crate::error::{Error, Result};
+use crate::metrics::EngineMetrics;
+use crate::router::encode_prompt;
+use crate::scheduler::Action;
+use crate::simengine::{SimBackend, SimSpec};
+use crate::tokenizer::ByteTokenizer;
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+
+/// Replica `k` allocates request ids from base `k << REPLICA_ID_SHIFT`,
+/// so ids are fleet-unique and name their replica. Replica 0 keeps
+/// base 0: a fleet of one assigns exactly the ids a bare engine would,
+/// which the N=1 transparency tests rely on.
+pub const REPLICA_ID_SHIFT: u32 = 48;
+
+// ---------------------------------------------------------------------
+// Radix mirror
+// ---------------------------------------------------------------------
+
+/// Approximate router-side model of one replica's prefix cache.
+///
+/// Keys are block-aligned token prefixes (every `k * block_tokens`
+/// prefix of an inserted prompt), values are last-touch ticks for LRU.
+/// The mirror is fed from two places: optimistically at placement
+/// (assume the prefill will populate the cache) and from the replica's
+/// `Admitted` trace events (confirmation / LRU refresh). Eviction is
+/// approximate — the engine does not trace its own evictions, so the
+/// mirror runs the same capacity bound and LRU discipline on its side
+/// and accepts occasional divergence; a stale entry only costs one
+/// mis-routed request, never correctness.
+///
+/// A `BTreeMap` (not a hash map) keeps iteration — and therefore
+/// eviction order and every routing decision downstream — fully
+/// deterministic.
+#[derive(Debug)]
+pub struct RadixMirror {
+    block_tokens: usize,
+    cap: usize,
+    entries: BTreeMap<Vec<u32>, u64>,
+    tick: u64,
+}
+
+impl RadixMirror {
+    pub fn new(block_tokens: usize, cap: usize) -> Self {
+        RadixMirror {
+            block_tokens: block_tokens.max(1),
+            cap: cap.max(1),
+            entries: BTreeMap::new(),
+            tick: 0,
+        }
+    }
+
+    /// Longest block-aligned prefix of `tokens` believed cached, in
+    /// tokens. Non-mutating: probing every replica must not perturb
+    /// LRU state, or routing would depend on probe order.
+    pub fn probe(&self, tokens: &[u32]) -> usize {
+        let blocks = tokens.len() / self.block_tokens;
+        for k in (1..=blocks).rev() {
+            let len = k * self.block_tokens;
+            if self.entries.contains_key(&tokens[..len]) {
+                return len;
+            }
+        }
+        0
+    }
+
+    /// Record that `tokens` is (about to be) resident: upsert every
+    /// block-aligned prefix at the current tick, then evict down to
+    /// capacity.
+    pub fn insert(&mut self, tokens: &[u32]) {
+        self.tick += 1;
+        let blocks = tokens.len() / self.block_tokens;
+        for k in 1..=blocks {
+            self.entries
+                .insert(tokens[..k * self.block_tokens].to_vec(), self.tick);
+        }
+        self.evict_to_cap();
+    }
+
+    /// Tracked prefix entries (≈ cached blocks).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Evict least-recently-touched *leaves* (prefixes with no longer
+    /// extension still tracked) until within capacity — mirroring the
+    /// engine's own leaf-first block eviction. In a `BTreeMap`, every
+    /// extension of key `K` sorts immediately after `K` and before any
+    /// key that diverges from it, so `K` is a leaf iff its immediate
+    /// successor does not start with `K`.
+    fn evict_to_cap(&mut self) {
+        while self.entries.len() > self.cap {
+            let mut victim: Option<(u64, Vec<u32>)> = None;
+            for (key, &tick) in &self.entries {
+                let has_ext = self
+                    .entries
+                    .range::<[u32], _>((Excluded(&key[..]), Unbounded))
+                    .next()
+                    .map(|(succ, _)| succ.starts_with(key))
+                    .unwrap_or(false);
+                if !has_ext {
+                    let better = match &victim {
+                        None => true,
+                        Some((vt, vk)) => tick < *vt || (tick == *vt && key < vk),
+                    };
+                    if better {
+                        victim = Some((tick, key.clone()));
+                    }
+                }
+            }
+            match victim {
+                Some((_, key)) => {
+                    self.entries.remove(&key);
+                }
+                None => return, // unreachable: a finite map always has a leaf
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tenant token-rate buckets
+// ---------------------------------------------------------------------
+
+/// Classic refill bucket on the fleet clock. A fresh tenant starts
+/// with a full burst allowance.
+#[derive(Debug, Clone, Copy)]
+struct TokenBucket {
+    level: f64,
+    last: Duration,
+}
+
+impl TokenBucket {
+    fn full(burst: f64, now: Duration) -> Self {
+        TokenBucket { level: burst, last: now }
+    }
+
+    /// Refill for elapsed time, then charge `cost` if covered.
+    fn try_charge(&mut self, cost: f64, now: Duration, rate: f64, burst: f64) -> bool {
+        let dt = now.saturating_sub(self.last).as_secs_f64();
+        self.level = (self.level + dt * rate).min(burst);
+        self.last = now;
+        if self.level >= cost {
+            self.level -= cost;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Replicas
+// ---------------------------------------------------------------------
+
+/// Replica lifecycle: `Up` accepts placements; `Draining` finishes
+/// in-flight work but takes nothing new, then retires; `Dead` is
+/// retired (metrics snapshotted, core dropped).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    Up,
+    Draining,
+    Dead,
+}
+
+impl ReplicaHealth {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReplicaHealth::Up => "up",
+            ReplicaHealth::Draining => "draining",
+            ReplicaHealth::Dead => "dead",
+        }
+    }
+}
+
+/// Terminal counters captured when a replica retires, so fleet stats
+/// keep naming the dead replica instead of silently shrinking.
+#[derive(Debug, Clone, Copy, Default)]
+struct ReplicaSnapshot {
+    prefix_hits: u64,
+    prefix_lookups: u64,
+    tokens_generated: u64,
+    requests_finished: u64,
+}
+
+struct Replica<B: Backend> {
+    core: Option<EngineCore<B>>,
+    health: ReplicaHealth,
+    mirror: RadixMirror,
+    /// Trace events drained from the core and not yet handed to
+    /// [`Fleet::take_trace_of`]. Only populated when fleet tracing is
+    /// armed; the observe pass itself always runs (the mirror and the
+    /// in-flight registry are fed from it).
+    pending_trace: Vec<TraceEvent>,
+    /// Requests this replica was chosen for (routing decisions).
+    routed: u64,
+    snapshot: Option<ReplicaSnapshot>,
+}
+
+impl<B: Backend> Replica<B> {
+    fn live(&self) -> Option<&EngineCore<B>> {
+        self.core.as_ref()
+    }
+}
+
+/// Point-in-time view of one replica for operators and the example
+/// drivers (health, load gauges, cache effectiveness, mirror size).
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub health: ReplicaHealth,
+    pub routed: u64,
+    pub queued: usize,
+    pub running: usize,
+    pub paused: usize,
+    pub prefix_hits: u64,
+    pub prefix_lookups: u64,
+    pub tokens_generated: u64,
+    pub requests_finished: u64,
+    pub mirror_blocks: usize,
+}
+
+/// Fleet-side record of one in-flight request: enough to re-route it
+/// if its replica dies mid-stream.
+#[derive(Debug)]
+struct InflightRec {
+    replica: usize,
+    tenant: String,
+    req: GenRequest,
+    prompt_tokens: Vec<u32>,
+}
+
+// ---------------------------------------------------------------------
+// Fleet
+// ---------------------------------------------------------------------
+
+/// N engine replicas behind one cache-aware router; implements
+/// [`InferenceEngine`] so the server, simtest harness, and examples
+/// drive it exactly like a single engine. See the module docs for the
+/// design.
+pub struct Fleet<B: Backend> {
+    fcfg: FleetConfig,
+    replicas: Vec<Replica<B>>,
+    /// Every request admitted to the fleet and not yet finished,
+    /// keyed by the engine-assigned id.
+    inflight: HashMap<RequestId, InflightRec>,
+    tenant_inflight: HashMap<String, usize>,
+    buckets: HashMap<String, TokenBucket>,
+    clock: Clock,
+    tokenizer: ByteTokenizer,
+    /// Tightest per-replica `max_new_tokens` cap, used to bound the
+    /// rate-bucket charge for requests that never set their own cap.
+    max_new_cap: usize,
+    rr_next: usize,
+    trace_armed: bool,
+    /// Cumulative metrics: retired replicas' totals plus every live
+    /// core, re-merged after each mutating call (`metrics()` must
+    /// return a reference, so the merge is kept materialized).
+    merged: EngineMetrics,
+    /// Totals of retired (dead) replicas — counters must survive the
+    /// core being dropped.
+    retired: EngineMetrics,
+    quota_rejections: u64,
+    rate_limited: u64,
+    resubmitted: u64,
+    routing_decisions: u64,
+    routing_cache_hits: u64,
+    /// Handles of kill-resubmitted requests the server-side owner
+    /// never sees; serviced each step so PauseDecode streams drain.
+    orphans: Vec<SubmissionHandle>,
+}
+
+impl<B: Backend> Fleet<B> {
+    /// Assemble a fleet from pre-built replicas. Replica `k` gets the
+    /// id base `k << REPLICA_ID_SHIFT` and always-on core tracing (the
+    /// admission feed for its mirror); all replicas must share a clock
+    /// (replica 0's is adopted as the fleet clock).
+    pub fn from_replicas(cores: Vec<EngineCore<B>>, fcfg: FleetConfig) -> Result<Self> {
+        fcfg.validate()?;
+        if cores.len() != fcfg.n_replicas {
+            return Err(Error::Config(format!(
+                "fleet built with {} replicas but n_replicas={}",
+                cores.len(),
+                fcfg.n_replicas
+            )));
+        }
+        let clock = cores[0].clock();
+        let tokenizer = cores[0].tokenizer.clone();
+        let max_new_cap = cores
+            .iter()
+            .map(|c| c.cfg.max_new_tokens)
+            .min()
+            .unwrap_or(usize::MAX);
+        let mut replicas = Vec::with_capacity(cores.len());
+        for (k, mut core) in cores.into_iter().enumerate() {
+            core.set_seq_id_base((k as RequestId) << REPLICA_ID_SHIFT);
+            core.enable_trace();
+            let mirror = RadixMirror::new(core.cfg.kv_block_tokens, core.cfg.kv_total_blocks);
+            replicas.push(Replica {
+                core: Some(core),
+                health: ReplicaHealth::Up,
+                mirror,
+                pending_trace: Vec::new(),
+                routed: 0,
+                snapshot: None,
+            });
+        }
+        let mut fleet = Fleet {
+            fcfg,
+            replicas,
+            inflight: HashMap::new(),
+            tenant_inflight: HashMap::new(),
+            buckets: HashMap::new(),
+            clock,
+            tokenizer,
+            max_new_cap,
+            rr_next: 0,
+            trace_armed: false,
+            merged: EngineMetrics::default(),
+            retired: EngineMetrics::default(),
+            quota_rejections: 0,
+            rate_limited: 0,
+            resubmitted: 0,
+            routing_decisions: 0,
+            routing_cache_hits: 0,
+            orphans: Vec::new(),
+        };
+        fleet.refresh_merged();
+        Ok(fleet)
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.fcfg
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn clock(&self) -> Clock {
+        self.clock.clone()
+    }
+
+    pub fn health(&self, replica: usize) -> Option<ReplicaHealth> {
+        self.replicas.get(replica).map(|r| r.health)
+    }
+
+    /// Arm fleet-level trace buffering: every replica's events are
+    /// retained for [`Fleet::take_trace_of`]. Without this the observe
+    /// pass still runs but events are dropped after bookkeeping.
+    pub fn enable_trace(&mut self) {
+        self.trace_armed = true;
+    }
+
+    /// Drain buffered trace events of one replica, observing its core
+    /// first — so events emitted outside `step` (a cancel on an idle
+    /// engine) are visible immediately, matching the bare engine's
+    /// `take_trace` semantics.
+    pub fn take_trace_of(&mut self, replica: usize) -> Vec<TraceEvent> {
+        self.observe_replica(replica);
+        self.replicas
+            .get_mut(replica)
+            .map(|r| mem::take(&mut r.pending_trace))
+            .unwrap_or_default()
+    }
+
+    /// Operator view of one replica (live gauges or the terminal
+    /// snapshot for dead replicas).
+    pub fn replica_stats(&self, replica: usize) -> Option<ReplicaStats> {
+        let r = self.replicas.get(replica)?;
+        Some(match r.live() {
+            Some(core) => ReplicaStats {
+                health: r.health,
+                routed: r.routed,
+                queued: core.queued(),
+                running: core.running(),
+                paused: core.paused(),
+                prefix_hits: core.metrics.prefix_hits,
+                prefix_lookups: core.metrics.prefix_lookups,
+                tokens_generated: core.metrics.tokens_generated,
+                requests_finished: core.metrics.requests_finished,
+                mirror_blocks: r.mirror.len(),
+            },
+            None => {
+                let s = r.snapshot.unwrap_or_default();
+                ReplicaStats {
+                    health: r.health,
+                    routed: r.routed,
+                    queued: 0,
+                    running: 0,
+                    paused: 0,
+                    prefix_hits: s.prefix_hits,
+                    prefix_lookups: s.prefix_lookups,
+                    tokens_generated: s.tokens_generated,
+                    requests_finished: s.requests_finished,
+                    mirror_blocks: 0,
+                }
+            }
+        })
+    }
+
+    /// Direct access to a live replica's core (tests, audits).
+    pub fn core(&self, replica: usize) -> Option<&EngineCore<B>> {
+        self.replicas.get(replica).and_then(|r| r.live())
+    }
+
+    /// Requests resubmitted after replica deaths.
+    pub fn resubmitted(&self) -> u64 {
+        self.resubmitted
+    }
+
+    /// Placements made / placements that matched a cached prefix.
+    pub fn routing_counts(&self) -> (u64, u64) {
+        (self.routing_decisions, self.routing_cache_hits)
+    }
+
+    /// Requests rejected by the fleet tenant token-rate limiter.
+    pub fn rate_limited(&self) -> u64 {
+        self.rate_limited
+    }
+
+    // -- routing ------------------------------------------------------
+
+    /// Pick a replica for a prompt: `(index, matched_prefix_tokens)`.
+    /// `None` when no replica is `Up` with a live core.
+    fn route(&mut self, prompt: &[u32]) -> Option<(usize, usize)> {
+        let up: Vec<usize> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.health == ReplicaHealth::Up && r.core.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if up.is_empty() {
+            return None;
+        }
+        let load = |fleet: &Self, i: usize| -> usize {
+            let core = fleet.replicas[i].live().expect("candidate is live");
+            core.queued() + core.running() + core.paused()
+        };
+        match self.fcfg.policy {
+            RoutePolicy::RoundRobin => {
+                let i = up[self.rr_next % up.len()];
+                self.rr_next = self.rr_next.wrapping_add(1);
+                Some((i, self.replicas[i].mirror.probe(prompt)))
+            }
+            RoutePolicy::LeastLoaded => {
+                let i = up
+                    .iter()
+                    .copied()
+                    .min_by_key(|&i| (load(self, i), i))
+                    .expect("non-empty candidate set");
+                Some((i, self.replicas[i].mirror.probe(prompt)))
+            }
+            RoutePolicy::CacheAware => {
+                let w = self.fcfg.cache_vs_balance;
+                let max_load = up.iter().map(|&i| load(self, i)).max().unwrap_or(0);
+                let mut best: Option<(f64, usize, usize)> = None;
+                for &i in &up {
+                    let matched = self.replicas[i].mirror.probe(prompt);
+                    let hit = if prompt.is_empty() {
+                        0.0
+                    } else {
+                        matched as f64 / prompt.len() as f64
+                    };
+                    let balance = load(self, i) as f64 / (max_load as f64 + 1.0);
+                    let score = w * hit - (1.0 - w) * balance;
+                    // Strict `>` keeps the lowest index on ties: the
+                    // decision must be reproducible across runs.
+                    if best.map(|(s, _, _)| score > s).unwrap_or(true) {
+                        best = Some((score, i, matched));
+                    }
+                }
+                best.map(|(_, i, matched)| (i, matched))
+            }
+        }
+    }
+
+    /// Admission + placement. `charge` is false for kill resubmission:
+    /// the request already paid quota and rate on first entry.
+    fn submit_routed(&mut self, req: GenRequest, charge: bool) -> Result<SubmissionHandle> {
+        let tenant = if req.tenant.is_empty() {
+            "default".to_string()
+        } else {
+            req.tenant.clone()
+        };
+        if charge {
+            let cap = self.fcfg.tenant_max_inflight;
+            if cap > 0 && self.tenant_inflight.get(&tenant).copied().unwrap_or(0) >= cap {
+                self.quota_rejections += 1;
+                return Err(Error::Quota(format!(
+                    "tenant '{tenant}' at fleet max_inflight {cap}"
+                )));
+            }
+        }
+        let prompt_tokens = encode_prompt(&self.tokenizer, &req.prompt)?;
+        if charge && self.fcfg.tenant_token_rate > 0.0 {
+            let now = self.clock.now();
+            let (rate, burst) = (self.fcfg.tenant_token_rate, self.fcfg.tenant_token_burst);
+            let cost = (prompt_tokens.len() + req.max_new_tokens.min(self.max_new_cap)) as f64;
+            let bucket = self
+                .buckets
+                .entry(tenant.clone())
+                .or_insert_with(|| TokenBucket::full(burst, now));
+            if !bucket.try_charge(cost, now, rate, burst) {
+                self.rate_limited += 1;
+                return Err(Error::RateLimit(format!(
+                    "tenant '{tenant}' exceeds {rate} tokens/s (burst {burst})"
+                )));
+            }
+        }
+        let (replica, matched) = self
+            .route(&prompt_tokens)
+            .ok_or_else(|| Error::Request("no healthy replica available".into()))?;
+        let handle = self.replicas[replica]
+            .core
+            .as_mut()
+            .expect("routed replica is live")
+            .submit(req.clone())?;
+        self.routing_decisions += 1;
+        if matched > 0 {
+            self.routing_cache_hits += 1;
+        }
+        self.replicas[replica].routed += 1;
+        self.replicas[replica].mirror.insert(&prompt_tokens);
+        self.inflight.insert(
+            handle.id,
+            InflightRec {
+                replica,
+                tenant: tenant.clone(),
+                req,
+                prompt_tokens,
+            },
+        );
+        *self.tenant_inflight.entry(tenant).or_insert(0) += 1;
+        Ok(handle)
+    }
+
+    // -- lifecycle ----------------------------------------------------
+
+    /// Stop placing new work on a replica; it retires (metrics
+    /// snapshotted, core dropped) as soon as it goes idle.
+    pub fn drain(&mut self, replica: usize) -> Result<()> {
+        let r = self
+            .replicas
+            .get(replica)
+            .ok_or_else(|| Error::Request(format!("no replica {replica}")))?;
+        match r.health {
+            ReplicaHealth::Dead => Err(Error::Request(format!("replica {replica} is dead"))),
+            ReplicaHealth::Draining => Ok(()),
+            ReplicaHealth::Up => {
+                self.replicas[replica].health = ReplicaHealth::Draining;
+                let idle = self.replicas[replica]
+                    .live()
+                    .map(|c| c.is_idle())
+                    .unwrap_or(true);
+                if idle {
+                    self.retire_replica(replica);
+                }
+                self.refresh_merged();
+                Ok(())
+            }
+        }
+    }
+
+    /// Kill a replica now: retire it and resubmit every in-flight
+    /// request it held to the survivors. Returns `(old_id, handle)`
+    /// per victim so the owner can rebind streams; tokens already
+    /// streamed from the dead replica are lost (the request restarts),
+    /// but no request is dropped and none runs twice.
+    pub fn kill(&mut self, replica: usize) -> Result<Vec<(RequestId, SubmissionHandle)>> {
+        let r = self
+            .replicas
+            .get(replica)
+            .ok_or_else(|| Error::Request(format!("no replica {replica}")))?;
+        if r.health == ReplicaHealth::Dead {
+            return Err(Error::Request(format!("replica {replica} is dead")));
+        }
+        self.retire_replica(replica);
+        // HashMap iteration order is arbitrary; sort victims so
+        // resubmission order (and thus routing) is deterministic.
+        let mut victims: Vec<RequestId> = self
+            .inflight
+            .iter()
+            .filter(|(_, rec)| rec.replica == replica)
+            .map(|(&id, _)| id)
+            .collect();
+        victims.sort_unstable();
+        let mut moved = Vec::with_capacity(victims.len());
+        for id in victims {
+            let rec = self.inflight.remove(&id).expect("victim is inflight");
+            if let Some(n) = self.tenant_inflight.get_mut(&rec.tenant) {
+                *n = n.saturating_sub(1);
+                if *n == 0 {
+                    self.tenant_inflight.remove(&rec.tenant);
+                }
+            }
+            let handle = self.submit_routed(rec.req, false)?;
+            self.resubmitted += 1;
+            moved.push((id, handle));
+        }
+        self.refresh_merged();
+        Ok(moved)
+    }
+
+    /// Final observe + metrics snapshot, then drop the core.
+    fn retire_replica(&mut self, replica: usize) {
+        self.observe_replica(replica);
+        if let Some(core) = self.replicas[replica].core.take() {
+            self.replicas[replica].snapshot = Some(ReplicaSnapshot {
+                prefix_hits: core.metrics.prefix_hits,
+                prefix_lookups: core.metrics.prefix_lookups,
+                tokens_generated: core.metrics.tokens_generated,
+                requests_finished: core.metrics.requests_finished,
+            });
+            self.retired.merge(&core.metrics);
+        }
+        self.replicas[replica].health = ReplicaHealth::Dead;
+        self.replicas[replica].mirror.clear();
+    }
+
+    /// Retire any draining replica that has gone idle.
+    fn reap_drained(&mut self) {
+        for k in 0..self.replicas.len() {
+            if self.replicas[k].health == ReplicaHealth::Draining
+                && self.replicas[k].live().map(|c| c.is_idle()).unwrap_or(true)
+            {
+                self.retire_replica(k);
+            }
+        }
+    }
+
+    /// Drain one replica's core trace and fold it into fleet state:
+    /// `Finished` retires the in-flight record (and its tenant slot),
+    /// `Admitted` confirms/refreshes the prompt in the mirror. Events
+    /// are buffered for [`Fleet::take_trace_of`] only when armed.
+    fn observe_replica(&mut self, replica: usize) {
+        let Some(r) = self.replicas.get_mut(replica) else {
+            return;
+        };
+        let Some(core) = r.core.as_mut() else {
+            return;
+        };
+        let events = core.take_trace();
+        for ev in &events {
+            match *ev {
+                TraceEvent::Finished { id, .. } => {
+                    if let Some(rec) = self.inflight.remove(&id) {
+                        if let Some(n) = self.tenant_inflight.get_mut(&rec.tenant) {
+                            *n = n.saturating_sub(1);
+                            if *n == 0 {
+                                self.tenant_inflight.remove(&rec.tenant);
+                            }
+                        }
+                    }
+                }
+                TraceEvent::Admitted { id, .. } => {
+                    if let Some(rec) = self.inflight.get(&id) {
+                        self.replicas[replica].mirror.insert(&rec.prompt_tokens);
+                    }
+                }
+                _ => {}
+            }
+        }
+        if self.trace_armed {
+            self.replicas[replica].pending_trace.extend(events);
+        }
+    }
+
+    /// Drain kill-orphaned streams so PauseDecode replicas never park
+    /// forever on a reader that does not exist.
+    fn service_orphans(&mut self) {
+        self.orphans.retain(|h| loop {
+            match h.events.try_recv() {
+                Ok(crate::api::GenEvent::Token(_)) => {}
+                Ok(crate::api::GenEvent::Finished { .. }) => return false,
+                Err(TryRecvError::Empty) => return true,
+                Err(TryRecvError::Closed) => return false,
+            }
+        });
+    }
+
+    /// Rebuild the materialized fleet metrics: retired totals plus
+    /// every live core, plus fleet-level rejections.
+    fn refresh_merged(&mut self) {
+        let mut merged = self.retired.clone();
+        for r in &self.replicas {
+            if let Some(core) = r.live() {
+                merged.merge(&core.metrics);
+            }
+        }
+        merged.quota_rejections += self.quota_rejections;
+        self.merged = merged;
+    }
+
+    fn sum_live<F: Fn(&EngineCore<B>) -> usize>(&self, f: F) -> usize {
+        self.replicas.iter().filter_map(|r| r.live()).map(f).sum()
+    }
+
+    fn fleet_json(&self) -> Json {
+        let count = |h: ReplicaHealth| {
+            self.replicas.iter().filter(|r| r.health == h).count() as f64
+        };
+        Json::obj(vec![
+            ("replicas", Json::Num(self.replicas.len() as f64)),
+            ("replicas_up", Json::Num(count(ReplicaHealth::Up))),
+            ("replicas_draining", Json::Num(count(ReplicaHealth::Draining))),
+            ("replicas_dead", Json::Num(count(ReplicaHealth::Dead))),
+            ("policy", Json::Str(self.fcfg.policy.as_str().to_string())),
+            ("rate_limited", Json::Num(self.rate_limited as f64)),
+            ("resubmitted", Json::Num(self.resubmitted as f64)),
+            (
+                "routing_decisions",
+                Json::Num(self.routing_decisions as f64),
+            ),
+            (
+                "routing_cache_hits",
+                Json::Num(self.routing_cache_hits as f64),
+            ),
+        ])
+    }
+
+    fn replicas_json(&self) -> Json {
+        let mut map = BTreeMap::new();
+        for k in 0..self.replicas.len() {
+            let s = self.replica_stats(k).expect("index in range");
+            map.insert(
+                k.to_string(),
+                Json::obj(vec![
+                    (
+                        "up",
+                        Json::Num(if s.health == ReplicaHealth::Up { 1.0 } else { 0.0 }),
+                    ),
+                    ("health", Json::Str(s.health.as_str().to_string())),
+                    ("routed", Json::Num(s.routed as f64)),
+                    ("queued", Json::Num(s.queued as f64)),
+                    ("running", Json::Num(s.running as f64)),
+                    ("paused", Json::Num(s.paused as f64)),
+                    ("prefix_hits", Json::Num(s.prefix_hits as f64)),
+                    ("prefix_lookups", Json::Num(s.prefix_lookups as f64)),
+                    ("tokens_generated", Json::Num(s.tokens_generated as f64)),
+                    (
+                        "requests_finished",
+                        Json::Num(s.requests_finished as f64),
+                    ),
+                    ("mirror_blocks", Json::Num(s.mirror_blocks as f64)),
+                ]),
+            );
+        }
+        Json::Obj(map)
+    }
+}
+
+impl Fleet<SimBackend> {
+    /// Build a sim fleet: `n_replicas` [`crate::simengine::SimEngine`]s
+    /// sharing one manual clock, each from a clone of `cfg`.
+    pub fn sim(cfg: EngineConfig, fcfg: FleetConfig, spec: SimSpec) -> Result<Self> {
+        let clock = Clock::manual();
+        let mut cores = Vec::with_capacity(fcfg.n_replicas);
+        for _ in 0..fcfg.n_replicas {
+            cores.push(EngineCore::with_clock(cfg.clone(), spec, clock.clone())?);
+        }
+        Fleet::from_replicas(cores, fcfg)
+    }
+}
+
+impl<B: Backend> InferenceEngine for Fleet<B> {
+    fn submit(&mut self, req: GenRequest) -> Result<SubmissionHandle> {
+        let out = self.submit_routed(req, true);
+        self.refresh_merged();
+        out
+    }
+
+    fn set_wakeup(&mut self, wakeup: Wakeup) {
+        for r in &mut self.replicas {
+            if let Some(core) = r.core.as_mut() {
+                core.set_wakeup(wakeup.clone());
+            }
+        }
+    }
+
+    /// One fleet step: step every non-idle live replica once, observe
+    /// all traces, retire drained replicas. Returns the first
+    /// non-`Idle` action so callers can tell whether work happened —
+    /// with one replica this is exactly the bare engine's step.
+    fn step(&mut self) -> Result<Action> {
+        let mut action = Action::Idle;
+        for k in 0..self.replicas.len() {
+            let stepped = match self.replicas[k].core.as_mut() {
+                Some(core) if !core.is_idle() => Some(core.step()?),
+                _ => None,
+            };
+            if let Some(a) = stepped {
+                if action == Action::Idle {
+                    action = a;
+                }
+            }
+            self.observe_replica(k);
+        }
+        self.service_orphans();
+        self.reap_drained();
+        self.refresh_merged();
+        Ok(action)
+    }
+
+    fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        let Some(rec) = self.inflight.get(&id) else {
+            return Ok(false); // unknown or already finished — engine parity
+        };
+        let replica = rec.replica;
+        let out = match self.replicas[replica].core.as_mut() {
+            Some(core) => core.cancel(id),
+            None => Ok(false),
+        };
+        self.observe_replica(replica);
+        self.refresh_merged();
+        out
+    }
+
+    fn metrics(&self) -> &EngineMetrics {
+        &self.merged
+    }
+
+    fn is_idle(&self) -> bool {
+        self.replicas
+            .iter()
+            .filter_map(|r| r.live())
+            .all(|c| c.is_idle())
+    }
+
+    fn queued(&self) -> usize {
+        self.sum_live(|c| c.queued())
+    }
+
+    fn running(&self) -> usize {
+        self.sum_live(|c| c.running())
+    }
+
+    fn paused(&self) -> usize {
+        self.sum_live(|c| c.paused())
+    }
+
+    fn queue_depths(&self) -> Vec<(i32, usize)> {
+        let mut by_priority: BTreeMap<i32, usize> = BTreeMap::new();
+        for r in self.replicas.iter().filter_map(|r| r.live()) {
+            for (p, n) in r.queue_depths() {
+                *by_priority.entry(p).or_insert(0) += n;
+            }
+        }
+        by_priority.into_iter().collect()
+    }
+
+    fn stats_json(&self) -> Json {
+        let mut j = self.merged.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("queued".to_string(), Json::Num(self.queued() as f64));
+            map.insert("running".to_string(), Json::Num(self.running() as f64));
+            map.insert("paused".to_string(), Json::Num(self.paused() as f64));
+            let depths = self
+                .queue_depths()
+                .into_iter()
+                .map(|(p, n)| (p.to_string(), Json::Num(n as f64)))
+                .collect();
+            map.insert("queue_depths".to_string(), Json::Obj(depths));
+            map.insert("fleet".to_string(), self.fleet_json());
+            map.insert("replicas".to_string(), self.replicas_json());
+        }
+        j
+    }
+
+    fn dump_flight(&self, n: usize) -> Json {
+        let mut map = BTreeMap::new();
+        for (k, r) in self.replicas.iter().enumerate() {
+            let dump = match r.live() {
+                Some(core) => core.dump_flight(n),
+                None => Json::obj(vec![
+                    ("capacity", Json::Num(0.0)),
+                    ("recorded", Json::Num(0.0)),
+                    ("dropped", Json::Num(0.0)),
+                    ("entries", Json::Arr(Vec::new())),
+                ]),
+            };
+            map.insert(k.to_string(), dump);
+        }
+        Json::obj(vec![("replicas", Json::Obj(map))])
+    }
+
+    fn admin(&mut self, verb: &str, arg: &Json) -> Option<Json> {
+        match verb {
+            "drain_replica" => {
+                let Some(k) = arg.as_usize() else {
+                    return Some(Json::obj(vec![(
+                        "error",
+                        Json::Str("drain_replica wants a replica index".into()),
+                    )]));
+                };
+                Some(match self.drain(k) {
+                    Ok(()) => Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("replica", Json::Num(k as f64)),
+                        (
+                            "health",
+                            Json::Str(
+                                self.health(k)
+                                    .map(|h| h.as_str())
+                                    .unwrap_or("unknown")
+                                    .to_string(),
+                            ),
+                        ),
+                    ]),
+                    Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
+                })
+            }
+            "kill_replica" => {
+                let Some(k) = arg.as_usize() else {
+                    return Some(Json::obj(vec![(
+                        "error",
+                        Json::Str("kill_replica wants a replica index".into()),
+                    )]));
+                };
+                Some(match self.kill(k) {
+                    Ok(moved) => {
+                        let n = moved.len();
+                        // The original submitters' streams died with
+                        // the replica; the fleet babysits the re-run
+                        // streams so they cannot park a survivor.
+                        self.orphans.extend(moved.into_iter().map(|(_, h)| h));
+                        Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("replica", Json::Num(k as f64)),
+                            ("resubmitted", Json::Num(n as f64)),
+                        ])
+                    }
+                    Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
+                })
+            }
+            "fleet_stats" => Some(self.stats_json()),
+            _ => None,
+        }
+    }
+
+    fn encode(&self, text: &str) -> Vec<u32> {
+        self.tokenizer.encode(text)
+    }
+
+    fn decode(&self, tokens: &[u32]) -> String {
+        self.tokenizer.decode(tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simengine::SimEngine;
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            kv_block_tokens: 8,
+            kv_total_blocks: 128,
+            max_new_tokens: 16,
+            prefix_cache: true,
+            ..EngineConfig::default()
+        }
+    }
+
+    fn fcfg(n: usize, policy: RoutePolicy) -> FleetConfig {
+        FleetConfig {
+            n_replicas: n,
+            policy,
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn mirror_probes_block_aligned_prefixes() {
+        let mut m = RadixMirror::new(4, 16);
+        let p: Vec<u32> = (1..=12).collect();
+        m.insert(&p);
+        assert_eq!(m.len(), 3); // prefixes of 4, 8, 12 tokens
+        assert_eq!(m.probe(&p), 12);
+        assert_eq!(m.probe(&p[..6]), 4);
+        assert_eq!(m.probe(&p[..3]), 0); // under one block
+        assert_eq!(m.probe(&[7, 7, 7, 7]), 0);
+    }
+
+    #[test]
+    fn mirror_evicts_lru_leaves_first() {
+        let mut m = RadixMirror::new(4, 3);
+        let p1: Vec<u32> = (1..=12).collect();
+        m.insert(&p1); // three entries, at capacity
+        m.insert(&[9, 9, 9, 9]); // over cap: the p1 12-token leaf is LRU
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.probe(&p1), 8); // trunk survived, leaf gone
+        assert_eq!(m.probe(&[9, 9, 9, 9]), 4);
+        m.insert(&p1); // refresh p1 fully: now [9,9,9,9] is LRU
+        assert_eq!(m.probe(&[9, 9, 9, 9]), 0);
+        assert_eq!(m.probe(&p1), 12);
+    }
+
+    #[test]
+    fn round_robin_cycles_up_replicas() {
+        let mut f =
+            Fleet::sim(cfg(), fcfg(3, RoutePolicy::RoundRobin), SimSpec::default()).unwrap();
+        for p in ["alpha", "beta", "gamma"] {
+            f.submit(GenRequest::text(p).max_new_tokens(4)).unwrap();
+        }
+        for k in 0..3 {
+            assert_eq!(f.replica_stats(k).unwrap().routed, 1, "replica {k}");
+        }
+        f.run_to_completion().unwrap();
+        assert_eq!(f.metrics().requests_finished, 3);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_replica() {
+        let mut f =
+            Fleet::sim(cfg(), fcfg(2, RoutePolicy::LeastLoaded), SimSpec::default()).unwrap();
+        f.submit(GenRequest::text("first").max_new_tokens(4)).unwrap();
+        f.submit(GenRequest::text("second").max_new_tokens(4)).unwrap();
+        assert_eq!(f.replica_stats(0).unwrap().routed, 1);
+        assert_eq!(f.replica_stats(1).unwrap().routed, 1);
+        f.run_to_completion().unwrap();
+    }
+
+    #[test]
+    fn cache_aware_routes_repeat_prompt_to_its_replica() {
+        let mut f =
+            Fleet::sim(cfg(), fcfg(2, RoutePolicy::CacheAware), SimSpec::default()).unwrap();
+        // 31 chars + BOS = 32 tokens = 4 full blocks.
+        let prompt = "system: shared preamble (0123)!";
+        let h = f.submit(GenRequest::text(prompt).max_new_tokens(4)).unwrap();
+        f.run_to_completion().unwrap();
+        h.drain();
+        // Same prompt again: the mirror match must beat load balance.
+        f.submit(GenRequest::text(prompt).max_new_tokens(4)).unwrap();
+        assert_eq!(f.replica_stats(0).unwrap().routed, 2);
+        assert_eq!(f.replica_stats(1).unwrap().routed, 0);
+        let (decisions, cache_hits) = f.routing_counts();
+        assert_eq!(decisions, 2);
+        assert_eq!(cache_hits, 1);
+        f.run_to_completion().unwrap();
+        // The replica-side prefix cache confirms the routing paid off.
+        assert!(f.replica_stats(0).unwrap().prefix_hits >= 1);
+    }
+
+    #[test]
+    fn drain_stops_placement_then_retires_when_idle() {
+        let mut f =
+            Fleet::sim(cfg(), fcfg(2, RoutePolicy::RoundRobin), SimSpec::default()).unwrap();
+        let h0 = f.submit(GenRequest::text("long one").max_new_tokens(8)).unwrap();
+        f.drain(0).unwrap();
+        assert_eq!(f.health(0), Some(ReplicaHealth::Draining));
+        // New work must land on the survivor while 0 drains.
+        let h1 = f.submit(GenRequest::text("other").max_new_tokens(4)).unwrap();
+        assert_eq!(f.replica_stats(1).unwrap().routed, 1);
+        f.run_to_completion().unwrap();
+        assert_eq!(f.health(0), Some(ReplicaHealth::Dead));
+        assert!(f.core(0).is_none());
+        // Retired counters survive the core being dropped.
+        assert_eq!(f.metrics().requests_finished, 2);
+        assert!(h0.drain().1.is_some());
+        assert!(h1.drain().1.is_some());
+        // Draining an idle replica retires it immediately; a dead fleet
+        // refuses new work.
+        f.drain(1).unwrap();
+        assert_eq!(f.health(1), Some(ReplicaHealth::Dead));
+        let err = f.submit(GenRequest::text("nope")).unwrap_err();
+        assert!(matches!(err, Error::Request(_)));
+        assert!(f.drain(0).is_err()); // already dead
+    }
+
+    #[test]
+    fn kill_resubmits_inflight_to_survivors() {
+        let mut f =
+            Fleet::sim(cfg(), fcfg(2, RoutePolicy::RoundRobin), SimSpec::default()).unwrap();
+        let mut handles = Vec::new();
+        for p in ["a request", "b request", "c request", "d request"] {
+            handles.push(f.submit(GenRequest::text(p).max_new_tokens(8)).unwrap());
+        }
+        f.step().unwrap();
+        f.step().unwrap();
+        let moved = f.kill(0).unwrap();
+        assert_eq!(moved.len(), 2, "both of replica 0's requests move");
+        assert_eq!(f.health(0), Some(ReplicaHealth::Dead));
+        assert_eq!(f.resubmitted(), 2);
+        for (old_id, handle) in &moved {
+            assert_eq!(old_id >> REPLICA_ID_SHIFT, 0, "victims came from replica 0");
+            assert_eq!(handle.id >> REPLICA_ID_SHIFT, 1, "rerouted to replica 1");
+        }
+        f.run_to_completion().unwrap();
+        for (_, handle) in &moved {
+            let (_, fin) = handle.drain();
+            assert!(fin.is_some(), "resubmitted request must finish");
+        }
+        // Survivor finished its own two plus the two refugees.
+        assert_eq!(f.replica_stats(1).unwrap().requests_finished, 4);
+        assert!(f.kill(0).is_err(), "killing a dead replica is an error");
+    }
+
+    #[test]
+    fn fleet_tenant_quota_is_cross_replica() {
+        let mut fc = fcfg(2, RoutePolicy::RoundRobin);
+        fc.tenant_max_inflight = 1;
+        let mut f = Fleet::sim(cfg(), fc, SimSpec::default()).unwrap();
+        let h = f
+            .submit(GenRequest::text("one").tenant("acme").max_new_tokens(4))
+            .unwrap();
+        // Same tenant, would land on the *other* replica — still over
+        // the fleet-wide cap.
+        let err = f
+            .submit(GenRequest::text("two").tenant("acme").max_new_tokens(4))
+            .unwrap_err();
+        assert!(matches!(err, Error::Quota(_)));
+        assert_eq!(err.wire_code(), "quota_exceeded");
+        assert_eq!(f.metrics().quota_rejections, 1);
+        // Other tenants are unaffected.
+        f.submit(GenRequest::text("two").tenant("globex").max_new_tokens(4))
+            .unwrap();
+        f.run_to_completion().unwrap();
+        h.drain();
+        // Slot freed: the tenant can submit again.
+        f.submit(GenRequest::text("three").tenant("acme").max_new_tokens(4))
+            .unwrap();
+        f.run_to_completion().unwrap();
+    }
+
+    #[test]
+    fn tenant_token_rate_bucket_refills_on_the_clock() {
+        let mut fc = fcfg(2, RoutePolicy::RoundRobin);
+        fc.tenant_token_rate = 10.0;
+        fc.tenant_token_burst = 20.0;
+        let mut f = Fleet::sim(cfg(), fc, SimSpec::default()).unwrap();
+        // "abcd" = BOS + 4 bytes = 5 prompt tokens; cost 5 + 4 = 9.
+        let req = || GenRequest::text("abcd").tenant("acme").max_new_tokens(4);
+        f.submit(req()).unwrap(); // level 20 -> 11
+        f.submit(req()).unwrap(); // level 11 -> 2
+        let err = f.submit(req()).unwrap_err();
+        assert!(matches!(err, Error::RateLimit(_)));
+        assert_eq!(err.wire_code(), "rate_limit_exceeded");
+        assert_eq!(f.rate_limited(), 1);
+        // A different tenant has its own bucket.
+        f.submit(GenRequest::text("abcd").tenant("globex").max_new_tokens(4))
+            .unwrap();
+        // Refill: 1 virtual second at 10 tok/s covers the next charge.
+        f.clock().advance(Duration::from_secs(1));
+        f.submit(req()).unwrap();
+        f.run_to_completion().unwrap();
+    }
+
+    #[test]
+    fn stats_and_admin_surface_fleet_state() {
+        let mut f =
+            Fleet::sim(cfg(), fcfg(2, RoutePolicy::CacheAware), SimSpec::default()).unwrap();
+        f.submit(GenRequest::text("hello").max_new_tokens(4)).unwrap();
+        f.run_to_completion().unwrap();
+        let stats = f.stats_json();
+        let fleet = stats.get("fleet").expect("fleet section");
+        assert_eq!(fleet.get("replicas").unwrap().as_usize(), Some(2));
+        assert_eq!(fleet.get("replicas_up").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            fleet.get("policy").unwrap().as_str(),
+            Some("cache_aware")
+        );
+        let replicas = stats.get("replicas").expect("replicas section");
+        assert_eq!(replicas.get("0").unwrap().get("health").unwrap().as_str(), Some("up"));
+        assert_eq!(
+            replicas.get("0").unwrap().get("routed").unwrap().as_usize(),
+            Some(1)
+        );
+
+        // Admin verbs: drain, then kill the survivor, then stats again.
+        let out = f.admin("drain_replica", &Json::Num(0.0)).expect("handled");
+        assert_eq!(out.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(f.health(0), Some(ReplicaHealth::Dead)); // idle -> retired now
+        let out = f.admin("kill_replica", &Json::Num(1.0)).expect("handled");
+        assert_eq!(out.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(out.get("resubmitted").unwrap().as_usize(), Some(0));
+        let out = f.admin("fleet_stats", &Json::Null).expect("handled");
+        assert_eq!(
+            out.get("fleet").unwrap().get("replicas_dead").unwrap().as_usize(),
+            Some(2)
+        );
+        assert!(f.admin("warp_core", &Json::Null).is_none());
+        let out = f.admin("drain_replica", &Json::Str("x".into())).expect("handled");
+        assert!(out.get("error").is_some(), "bad arg reports an error");
+    }
+
+    #[test]
+    fn single_replica_fleet_matches_bare_engine() {
+        let mut bare = SimEngine::new(cfg(), SimSpec::default()).unwrap();
+        bare.set_seq_id_base(0); // no-op, mirrors fleet construction order
+        let mut f =
+            Fleet::sim(cfg(), fcfg(1, RoutePolicy::CacheAware), SimSpec::default()).unwrap();
+        let mut bare_handles = Vec::new();
+        let mut fleet_handles = Vec::new();
+        for p in ["parity one", "parity two", "parity one"] {
+            let req = GenRequest::text(p).max_new_tokens(6);
+            bare_handles.push(bare.submit(req.clone()).unwrap());
+            fleet_handles.push(f.submit(req).unwrap());
+        }
+        bare.run_to_completion().unwrap();
+        f.run_to_completion().unwrap();
+        for (b, fl) in bare_handles.iter().zip(&fleet_handles) {
+            assert_eq!(b.id, fl.id, "replica 0 allocates bare-engine ids");
+            let (bt, bf) = b.drain();
+            let (ft, ff) = fl.drain();
+            assert_eq!(bt, ft, "identical token streams");
+            assert_eq!(
+                bf.expect("bare finished").1,
+                ff.expect("fleet finished").1,
+                "identical usage"
+            );
+        }
+        assert_eq!(
+            bare.metrics.tokens_generated,
+            f.metrics().tokens_generated
+        );
+        assert_eq!(bare.metrics.prefix_hits, f.metrics().prefix_hits);
+    }
+}

@@ -82,6 +82,21 @@
 //! per-request usage record (prefill / cached / generated token
 //! counts), and metrics aggregate per-tenant counters.
 //!
+//! # Fleet serving
+//!
+//! [`fleet::Fleet`] scales the same API across N engine replicas: a
+//! cache-aware router keeps an approximate [`fleet::RadixMirror`] of
+//! each replica's prefix cache (fed from placements and admission
+//! traces) and sends each request to the replica holding its longest
+//! cached prefix, trading cache affinity against load balance under
+//! [`config::FleetConfig::cache_vs_balance`]. Replicas drain or die
+//! without losing requests (in-flight work is resubmitted to
+//! survivors), fleet-wide tenant quotas and token-rate buckets are
+//! enforced before placement, and a fleet of one is byte-identical to
+//! a bare engine. The server drives a fleet through the same
+//! [`api::InferenceEngine`] trait via the `drain_replica` /
+//! `kill_replica` / `fleet_stats` admin verbs (protocol v2.4).
+//!
 //! # End-to-end flow control
 //!
 //! The serving path is flow-controlled end to end, so memory stays
@@ -134,9 +149,10 @@
 //!   lifecycle (including the backpressure states), the
 //!   paper-technique-to-module table, and the testing & determinism
 //!   guide (oracles, seed replay, adding scenarios).
-//! - `docs/PROTOCOL.md` — the JSON-lines wire protocol (v2.3): stream
+//! - `docs/PROTOCOL.md` — the JSON-lines wire protocol (v2.4): stream
 //!   credit semantics, global ids, admin verbs (`cancel_tenant`,
-//!   `dump_flight`), per-tenant quotas, error codes.
+//!   `dump_flight`, `drain_replica`, `kill_replica`, `fleet_stats`),
+//!   per-tenant quotas and rate limits, error codes.
 //! - `docs/OBSERVABILITY.md` — request-lifecycle spans, the flight
 //!   recorder, step-time attribution, the Prometheus exposition, and
 //!   how to read `BENCH_serving.json`.
@@ -151,6 +167,7 @@ pub mod core;
 pub mod dataflow;
 pub mod engine;
 pub mod error;
+pub mod fleet;
 pub mod gemm;
 pub mod hwmodel;
 pub mod kvcache;

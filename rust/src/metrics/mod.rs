@@ -108,6 +108,22 @@ impl LatencyHistogram {
         Duration::from_micros(self.max_us)
     }
 
+    /// Fold another histogram into this one: bucket-wise count sums,
+    /// summed totals, min/max folds. Both sides use the fixed
+    /// [`Default`] bounds, so buckets line up index-for-index (the
+    /// empty-histogram sentinel `min_us == u64::MAX` folds correctly
+    /// through `min`).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        debug_assert_eq!(self.bounds, other.bounds, "histogram bounds must match");
+        for (mine, theirs) in self.counts.iter_mut().zip(&other.counts) {
+            *mine += *theirs;
+        }
+        self.sum_us += other.sum_us;
+        self.count += other.count;
+        self.max_us = self.max_us.max(other.max_us);
+        self.min_us = self.min_us.min(other.min_us);
+    }
+
     /// Full export: summary stats plus the raw `bounds`/`counts` arrays
     /// so external tooling can re-derive any percentile (`counts` has
     /// one trailing overflow bucket beyond the last bound).
@@ -280,6 +296,63 @@ impl EngineMetrics {
         t.requests_finished += 1;
         t.generated_tokens += usage.generated_tokens as u64;
         t.cached_prompt_tokens += usage.cached_prompt_tokens as u64;
+    }
+
+    /// Fold another engine's metrics into this one: counters sum,
+    /// histograms merge bucket-wise, and per-tenant counters accumulate
+    /// under the same [`MAX_TRACKED_TENANTS`] cardinality cap as
+    /// [`record_finish`](Self::record_finish). Used by the fleet layer
+    /// to aggregate N replicas into one stats surface.
+    pub fn merge(&mut self, other: &EngineMetrics) {
+        self.first_token.merge(&other.first_token);
+        self.per_token.merge(&other.per_token);
+        self.step.merge(&other.step);
+        self.step_overhead.merge(&other.step_overhead);
+        self.attr_stream_service.merge(&other.attr_stream_service);
+        self.attr_policy.merge(&other.attr_policy);
+        self.attr_admission.merge(&other.attr_admission);
+        self.attr_prefill.merge(&other.attr_prefill);
+        self.attr_decode.merge(&other.attr_decode);
+        self.span_queue_wait.merge(&other.span_queue_wait);
+        self.span_prefill.merge(&other.span_prefill);
+        self.span_decode.merge(&other.span_decode);
+        self.span_paused.merge(&other.span_paused);
+        self.prefill_steps += other.prefill_steps;
+        self.decode_steps += other.decode_steps;
+        self.tokens_generated += other.tokens_generated;
+        self.requests_finished += other.requests_finished;
+        self.requests_admitted += other.requests_admitted;
+        self.recompute_rows += other.recompute_rows;
+        self.decode_rows += other.decode_rows;
+        self.kv_rebuilds += other.kv_rebuilds;
+        self.kv_inserts += other.kv_inserts;
+        self.prefix_lookups += other.prefix_lookups;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_tokens_reused += other.prefix_tokens_reused;
+        self.prefill_tokens_computed += other.prefill_tokens_computed;
+        self.prefix_blocks_evicted += other.prefix_blocks_evicted;
+        self.preemptions += other.preemptions;
+        self.cancellations += other.cancellations;
+        self.dedup_hits += other.dedup_hits;
+        self.quota_rejections += other.quota_rejections;
+        self.backpressure_pauses += other.backpressure_pauses;
+        self.backpressure_resumes += other.backpressure_resumes;
+        self.backpressure_drops += other.backpressure_drops;
+        self.stream_idle_drops += other.stream_idle_drops;
+        self.client_disconnects += other.client_disconnects;
+        for (tenant, c) in &other.tenants {
+            let key = if self.tenants.contains_key(tenant)
+                || self.tenants.len() < MAX_TRACKED_TENANTS
+            {
+                tenant.as_str()
+            } else {
+                OTHER_TENANTS
+            };
+            let t = self.tenants.entry(key.to_string()).or_default();
+            t.requests_finished += c.requests_finished;
+            t.generated_tokens += c.generated_tokens;
+            t.cached_prompt_tokens += c.cached_prompt_tokens;
+        }
     }
 
     /// Fraction of prefix-cache lookups that hit.
@@ -564,6 +637,120 @@ mod tests {
         let p90 = back.get("step_p90_us").and_then(|j| j.as_f64()).unwrap();
         let p99 = back.get("step_p99_us").and_then(|j| j.as_f64()).unwrap();
         assert!(p50 <= p90 && p90 <= p99);
+    }
+
+    #[test]
+    fn histogram_merge_matches_recording_into_one() {
+        // Merging b into a must be indistinguishable from recording all
+        // samples into a single histogram.
+        let samples_a = [3u64, 17, 240, 9_000];
+        let samples_b = [1u64, 17, 55_000, 2, 2];
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        let mut both = LatencyHistogram::default();
+        for &us in &samples_a {
+            a.record(Duration::from_micros(us));
+            both.record(Duration::from_micros(us));
+        }
+        for &us in &samples_b {
+            b.record(Duration::from_micros(us));
+            both.record(Duration::from_micros(us));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.sum_us(), both.sum_us());
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+        assert_eq!(a.to_json().to_string(), both.to_json().to_string());
+        for p in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.percentile(p), both.percentile(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_with_empty_is_identity() {
+        let mut a = LatencyHistogram::default();
+        a.record(Duration::from_micros(42));
+        let before = a.to_json().to_string();
+        a.merge(&LatencyHistogram::default());
+        assert_eq!(a.to_json().to_string(), before, "merging empty changes nothing");
+
+        // Empty <- non-empty adopts the other side's min/max (the
+        // u64::MAX sentinel must not leak through the fold).
+        let mut e = LatencyHistogram::default();
+        e.merge(&a);
+        assert_eq!(e.min(), Duration::from_micros(42));
+        assert_eq!(e.max(), Duration::from_micros(42));
+        assert_eq!(e.count(), 1);
+    }
+
+    #[test]
+    fn metrics_merge_sums_counters_histograms_and_tenants() {
+        let usage = |cached: usize, generated: usize| Usage {
+            prompt_tokens: cached + 2,
+            cached_prompt_tokens: cached,
+            prefill_tokens: 2,
+            generated_tokens: generated,
+        };
+        let mut a = EngineMetrics::default();
+        a.tokens_generated = 10;
+        a.requests_finished = 2;
+        a.prefix_lookups = 4;
+        a.prefix_hits = 1;
+        a.quota_rejections = 1;
+        a.step.record(Duration::from_millis(2));
+        a.span_decode.record(Duration::from_millis(8));
+        a.record_finish("acme", usage(8, 6));
+
+        let mut b = EngineMetrics::default();
+        b.tokens_generated = 5;
+        b.requests_finished = 1;
+        b.prefix_lookups = 2;
+        b.prefix_hits = 2;
+        b.step.record(Duration::from_millis(4));
+        b.record_finish("acme", usage(0, 3));
+        b.record_finish("globex", usage(4, 2));
+
+        a.merge(&b);
+        assert_eq!(a.tokens_generated, 15);
+        assert_eq!(a.requests_finished, 3);
+        assert_eq!(a.prefix_lookups, 6);
+        assert_eq!(a.prefix_hits, 3);
+        assert_eq!(a.quota_rejections, 1);
+        assert_eq!(a.step.count(), 2);
+        assert_eq!(a.span_decode.count(), 1);
+        assert!((a.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(a.tenants["acme"].requests_finished, 2);
+        assert_eq!(a.tenants["acme"].generated_tokens, 9);
+        assert_eq!(a.tenants["globex"].cached_prompt_tokens, 4);
+    }
+
+    #[test]
+    fn metrics_merge_respects_tenant_cardinality_cap() {
+        let u = Usage {
+            prompt_tokens: 2,
+            cached_prompt_tokens: 0,
+            prefill_tokens: 2,
+            generated_tokens: 1,
+        };
+        let mut a = EngineMetrics::default();
+        for i in 0..MAX_TRACKED_TENANTS {
+            a.record_finish(&format!("a-{i}"), u);
+        }
+        let mut b = EngineMetrics::default();
+        for i in 0..40 {
+            b.record_finish(&format!("b-{i}"), u);
+        }
+        a.merge(&b);
+        assert!(
+            a.tenants.len() <= MAX_TRACKED_TENANTS + 1,
+            "merge must stay bounded, got {}",
+            a.tenants.len()
+        );
+        assert_eq!(a.tenants[OTHER_TENANTS].requests_finished, 40);
+        // Total conservation across the fold.
+        let total: u64 = a.tenants.values().map(|t| t.requests_finished).sum();
+        assert_eq!(total, (MAX_TRACKED_TENANTS + 40) as u64);
     }
 
     #[test]

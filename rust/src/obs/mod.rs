@@ -606,6 +606,32 @@ pub fn prometheus_text(stats: &Json) -> String {
                     out.push('\n');
                 }
             }
+            ("replicas", Json::Obj(replicas)) => {
+                // Fleet stats: one labeled gauge family per numeric
+                // replica field (string fields like `health` are
+                // covered by the numeric `up` gauge).
+                let mut fields = std::collections::BTreeSet::new();
+                for r in replicas.values() {
+                    if let Json::Obj(m) = r {
+                        for (f, v) in m {
+                            if matches!(v, Json::Num(_)) {
+                                fields.insert(f.clone());
+                            }
+                        }
+                    }
+                }
+                for field in &fields {
+                    let _ = writeln!(out, "# TYPE fdpp_replica_{field} gauge");
+                    for (replica, r) in replicas {
+                        let _ = write!(out, "fdpp_replica_{field}{{replica=\"{replica}\"}} ");
+                        fmt_num(
+                            r.get(field).and_then(Json::as_f64).unwrap_or(0.0),
+                            &mut out,
+                        );
+                        out.push('\n');
+                    }
+                }
+            }
             ("tenants", Json::Obj(tenants)) => {
                 for field in [
                     "requests_finished",
@@ -776,6 +802,39 @@ mod tests {
         assert!(text.contains("fdpp_queue_depth{priority=\"5\"} 1\n"));
         assert!(text.contains("fdpp_tenant_generated_tokens{tenant=\"acme\"} 7\n"));
         // Deterministic: same snapshot, same bytes.
+        assert_eq!(text, prometheus_text(&stats));
+    }
+
+    #[test]
+    fn prometheus_renders_per_replica_labels() {
+        let stats = Json::obj(vec![(
+            "replicas",
+            Json::obj(vec![
+                (
+                    "0",
+                    Json::obj(vec![
+                        ("up", Json::Num(1.0)),
+                        ("health", Json::Str("up".into())),
+                        ("routed", Json::Num(5.0)),
+                    ]),
+                ),
+                (
+                    "1",
+                    Json::obj(vec![
+                        ("up", Json::Num(0.0)),
+                        ("health", Json::Str("dead".into())),
+                        ("routed", Json::Num(3.0)),
+                    ]),
+                ),
+            ]),
+        )]);
+        let text = prometheus_text(&stats);
+        assert!(text.contains("# TYPE fdpp_replica_up gauge"));
+        assert!(text.contains("fdpp_replica_up{replica=\"0\"} 1\n"), "{text}");
+        assert!(text.contains("fdpp_replica_up{replica=\"1\"} 0\n"));
+        assert!(text.contains("fdpp_replica_routed{replica=\"1\"} 3\n"));
+        // String fields get no series of their own.
+        assert!(!text.contains("fdpp_replica_health"));
         assert_eq!(text, prometheus_text(&stats));
     }
 

@@ -241,6 +241,15 @@ impl Router {
         id
     }
 
+    /// Re-base the id counter so several engines can mint ids from
+    /// disjoint ranges (the fleet layer gives replica `k` the base
+    /// `k << 48`). Must be called before the first allocation: ids are
+    /// monotone and already-handed-out ids must never repeat.
+    pub fn set_id_base(&mut self, base: RequestId) {
+        debug_assert_eq!(self.next_id, 1, "id base must be set before any allocation");
+        self.next_id = base + 1;
+    }
+
     /// Add a queued sequence to the intake queue.
     pub fn enqueue(&mut self, seq: Sequence) {
         self.queue.push_back(seq);

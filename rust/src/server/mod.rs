@@ -9,7 +9,7 @@
 //! [`crate::simengine::SimEngine`] twin (loopback tests, artifact-free
 //! serving demos) — the loop itself is generic and identical for both.
 //!
-//! The full wire protocol (v2.3) — request/response/stats/cancel/admin
+//! The full wire protocol (v2.4) — request/response/stats/cancel/admin
 //! schemas, defaults, and error shapes — is documented in
 //! `docs/PROTOCOL.md`. In short (one JSON object per line):
 //!
@@ -32,6 +32,16 @@
 //!   -> {"admin": {"dump_flight": 50}}
 //!   <- {"ok": true, "flight": {"capacity": 512, "dropped": 0,
 //!       "entries": [{"seq": 0, "at_us": 1000, "what": "..."}, ...]}}
+//!
+//!   -> {"admin": {"drain_replica": 1}}     (fleet-backed engines only)
+//!   <- {"ok": true, "replica": 1, "health": "draining"}
+//!
+//!   -> {"admin": {"kill_replica": 1}}
+//!   <- {"ok": true, "replica": 1, "resubmitted": 2}
+//!
+//!   -> {"admin": {"fleet_stats": true}}
+//!   <- {"tokens_generated": 512, "fleet": {"replicas": 3, ...},
+//!       "replicas": {"0": {"health": "up", ...}, ...}}
 //!
 //!   -> {"stats": true}
 //!   <- {"tokens_generated": 512, "prefix_hit_rate": 0.7,
@@ -66,9 +76,10 @@ use crate::api::{
     EventReceiver, FinishReason, GenEvent, GenRequest, InferenceEngine, RequestId,
     SubmissionHandle, Usage, Wakeup,
 };
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, FleetConfig};
 use crate::engine::Engine;
 use crate::error::{Error, Result};
+use crate::fleet::Fleet;
 use crate::obs::{prometheus_text, SpanBreakdown};
 use crate::router::RequestRegistry;
 use crate::runtime::Runtime;
@@ -350,6 +361,15 @@ pub enum EngineJob {
         n: usize,
         reply: mpsc::Sender<Json>,
     },
+    /// Engine-specific admin verb ([`InferenceEngine::admin`]): the
+    /// fleet's `drain_replica` / `kill_replica` / `fleet_stats` travel
+    /// here. `None` back means the engine does not know the verb (a
+    /// bare engine behind the same loop answers `bad_admin`).
+    Admin {
+        verb: String,
+        arg: Json,
+        reply: mpsc::Sender<Option<Json>>,
+    },
 }
 
 /// The connection side's channel to the engine thread: an
@@ -432,6 +452,18 @@ pub fn spawn_sim_engine(cfg: EngineConfig, spec: SimSpec) -> Result<EngineHandle
     spawn_engine_thread(move || SimEngine::new(cfg, spec))
 }
 
+/// Spawn a sim-backed [`Fleet`] behind the same serving loop: N
+/// replicas, cache-aware routing, and the `drain_replica` /
+/// `kill_replica` / `fleet_stats` admin verbs live — the loopback way
+/// to exercise fleet serving end to end without artifacts.
+pub fn spawn_sim_fleet(
+    cfg: EngineConfig,
+    fcfg: FleetConfig,
+    spec: SimSpec,
+) -> Result<EngineHandle> {
+    spawn_engine_thread(move || Fleet::sim(cfg, fcfg, spec))
+}
+
 /// The engine thread: drain incoming jobs, then step until idle. Works
 /// for any [`InferenceEngine`] — this is the piece the sim twin shares
 /// with production serving. Event streams flow straight from the
@@ -479,6 +511,9 @@ fn engine_loop<E: InferenceEngine>(engine: &mut E, rx: mpsc::Receiver<EngineJob>
                 }
                 EngineJob::DumpFlight { n, reply } => {
                     let _ = reply.send(engine.dump_flight(n));
+                }
+                EngineJob::Admin { verb, arg, reply } => {
+                    let _ = reply.send(engine.admin(&verb, &arg));
                 }
                 EngineJob::Cancel { id, reply } => {
                     let r = engine.cancel(id);
@@ -596,6 +631,16 @@ pub fn admin_request(j: &Json) -> Option<&Json> {
     j.get("admin")
 }
 
+/// The admin verbs forwarded to [`InferenceEngine::admin`] (fleet
+/// verbs today): the first known verb key present in the admin object,
+/// with its argument. `cancel_tenant` and `dump_flight` are handled
+/// server-side and never reach here.
+pub fn engine_admin_verb(admin: &Json) -> Option<(&'static str, &Json)> {
+    ["drain_replica", "kill_replica", "fleet_stats"]
+        .into_iter()
+        .find_map(|verb| admin.get(verb).map(|arg| (verb, arg)))
+}
+
 type SharedWriter = Arc<Mutex<TcpStream>>;
 /// Wire id -> engine id for one connection's in-flight requests; shared
 /// with the per-request pump threads, which prune their entry when the
@@ -709,13 +754,17 @@ fn handle_conn(
             }
             continue;
         }
-        // Admin request: two verbs. `cancel_tenant` bulk-cancels that
-        // tenant's in-flight requests on *every* connection; each
-        // affected stream ends with its own done line, reason
-        // "cancelled", and the ack reports how many live requests were
-        // actually cancelled (a request racing to completion is not
-        // counted). `dump_flight` returns the newest n entries of the
-        // engine's always-on flight recorder.
+        // Admin request. `cancel_tenant` bulk-cancels that tenant's
+        // in-flight requests on *every* connection; each affected
+        // stream ends with its own done line, reason "cancelled", and
+        // the ack reports how many live requests were actually
+        // cancelled (a request racing to completion is not counted).
+        // `dump_flight` returns the newest n entries of the engine's
+        // always-on flight recorder. The fleet verbs (`drain_replica`,
+        // `kill_replica`, `fleet_stats`) forward to
+        // [`InferenceEngine::admin`]; an engine that does not know the
+        // verb answers `bad_admin`, so a fleet deployment and a bare
+        // engine share one dispatch path.
         if let Some(admin) = admin_request(&j) {
             if let Some(tenant) = admin.get("cancel_tenant").and_then(Json::as_str) {
                 let rids = registry.tenant_ids(tenant);
@@ -747,9 +796,30 @@ fn handle_conn(
                     Ok(flight) => write_line(&w, &flight_ack(flight))?,
                     Err(_) => return engine_gone(&w),
                 }
+            } else if let Some((verb, arg)) = engine_admin_verb(admin) {
+                let (reply_tx, reply_rx) = mpsc::channel::<Option<Json>>();
+                let job = EngineJob::Admin {
+                    verb: verb.to_string(),
+                    arg: arg.clone(),
+                    reply: reply_tx,
+                };
+                if engine_tx.send(job).is_err() {
+                    return engine_gone(&w);
+                }
+                match reply_rx.recv() {
+                    // The engine's reply is already a complete wire
+                    // object (ok ack, stats snapshot, or error shape).
+                    Ok(Some(reply)) => write_line(&w, &reply.to_string())?,
+                    Ok(None) => {
+                        let msg = format!("this engine does not support {verb:?}");
+                        write_line(&w, &error_response("bad_admin", &msg))?;
+                    }
+                    Err(_) => return engine_gone(&w),
+                }
             } else {
-                let msg = "admin supports {\"cancel_tenant\": \"<tenant>\"} \
-                           and {\"dump_flight\": <n>}";
+                let msg = "admin supports {\"cancel_tenant\": \"<tenant>\"}, \
+                           {\"dump_flight\": <n>}, {\"drain_replica\": <k>}, \
+                           {\"kill_replica\": <k>}, and {\"fleet_stats\": true}";
                 write_line(&w, &error_response("bad_admin", msg))?;
             }
             continue;
@@ -955,6 +1025,32 @@ impl Client {
         self.recv()?.req_str("text")
     }
 
+    /// Send one engine-forwarded admin verb and return the reply
+    /// object (an `{"error": ...}` reply becomes an `Err`).
+    pub fn admin_verb(&mut self, verb: &str, arg: Json) -> Result<Json> {
+        self.send(&Json::obj(vec![("admin", Json::obj(vec![(verb, arg)]))]))?;
+        let reply = self.recv()?;
+        if let Some(err) = reply.get("error").and_then(Json::as_str) {
+            return Err(Error::Request(err.to_string()));
+        }
+        Ok(reply)
+    }
+
+    /// Stop placing new work on a fleet replica (it retires once idle).
+    pub fn drain_replica(&mut self, k: usize) -> Result<Json> {
+        self.admin_verb("drain_replica", Json::Num(k as f64))
+    }
+
+    /// Kill a fleet replica; its in-flight work restarts on survivors.
+    pub fn kill_replica(&mut self, k: usize) -> Result<Json> {
+        self.admin_verb("kill_replica", Json::Num(k as f64))
+    }
+
+    /// Fetch the fleet-wide stats snapshot (per-replica breakdown).
+    pub fn fleet_stats(&mut self) -> Result<Json> {
+        self.admin_verb("fleet_stats", Json::Bool(true))
+    }
+
     /// Fetch the newest `n` flight-recorder entries from the engine.
     pub fn dump_flight(&mut self, n: usize) -> Result<Json> {
         self.send(&Json::obj(vec![(
@@ -1148,6 +1244,27 @@ mod tests {
             "generate requests are never hijacked"
         );
         assert!(admin_request(&parse(r#"{"stats":true}"#).unwrap()).is_none());
+    }
+
+    #[test]
+    fn engine_admin_verb_detection() {
+        let j = parse(r#"{"admin":{"drain_replica":1}}"#).unwrap();
+        let admin = admin_request(&j).unwrap();
+        let (verb, arg) = engine_admin_verb(admin).unwrap();
+        assert_eq!(verb, "drain_replica");
+        assert_eq!(arg.as_usize(), Some(1));
+        let j = parse(r#"{"admin":{"fleet_stats":true}}"#).unwrap();
+        let (verb, _) = engine_admin_verb(admin_request(&j).unwrap()).unwrap();
+        assert_eq!(verb, "fleet_stats");
+        // Server-side verbs and unknown verbs never forward.
+        for line in [
+            r#"{"admin":{"cancel_tenant":"acme"}}"#,
+            r#"{"admin":{"dump_flight":5}}"#,
+            r#"{"admin":{"explode":true}}"#,
+        ] {
+            let j = parse(line).unwrap();
+            assert!(engine_admin_verb(admin_request(&j).unwrap()).is_none());
+        }
     }
 
     #[test]

@@ -70,11 +70,12 @@ use std::collections::HashMap;
 use std::fmt;
 
 use crate::api::{FinishReason, GenEvent, GenRequest, InferenceEngine, SubmissionHandle, Usage};
-use crate::config::{BackpressurePolicy, EngineConfig};
+use crate::config::{BackpressurePolicy, EngineConfig, FleetConfig, RoutePolicy};
 use crate::core::{Backend, EngineCore, TraceEvent};
+use crate::fleet::Fleet;
 use crate::kvcache::SeqId;
 use crate::router::RequestRegistry;
-use crate::simengine::{SimEngine, SimSpec};
+use crate::simengine::{SimBackend, SimEngine, SimSpec};
 use crate::util::rng::{splitmix64, Rng};
 
 pub use crate::core::check_kv_conservation;
@@ -935,6 +936,436 @@ pub fn run_crash_recovery(seed: u64) -> Result<CrashRecoveryReport, Violation> {
     })
 }
 
+// ---------------------------------------------------------------------
+// Fleet scenarios
+// ---------------------------------------------------------------------
+
+/// Fleet configuration the fleet scenarios run under: cache-aware
+/// routing with the default affinity/balance tradeoff, no fleet-level
+/// tenant limits (the scenario's own quota planes stay in charge).
+fn fleet_scenario_config(n_replicas: usize) -> FleetConfig {
+    FleetConfig {
+        n_replicas,
+        policy: RoutePolicy::CacheAware,
+        ..FleetConfig::default()
+    }
+}
+
+/// Run a seeded scenario against an `n_replicas` sim fleet, all five
+/// oracles armed per live replica. With `n_replicas == 1` the report —
+/// fingerprint included — must equal [`run_scenario`]'s byte for byte
+/// (the fleet layer is transparent); `tests/fleet.rs` asserts this
+/// over the seed matrix.
+pub fn run_scenario_fleet(seed: u64, n_replicas: usize) -> Result<ScenarioReport, Violation> {
+    let scenario = generate_scenario(seed);
+    let fleet = Fleet::sim(
+        scenario.cfg.clone(),
+        fleet_scenario_config(n_replicas),
+        SimSpec::default(),
+    )
+    .map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("fleet construction failed: {e}"),
+    })?;
+    run_fleet_scenario(&scenario, fleet, None)
+}
+
+/// Like [`run_scenario_fleet`], but a seed-derived replica is killed at
+/// a seed-derived step while the scenario is busy: its in-flight
+/// requests are resubmitted to the survivors and their client streams
+/// rebound. The oracles must hold on every step of the reduced fleet;
+/// no request may be lost or finish twice. Panics if `n_replicas < 2`
+/// (a kill needs a survivor).
+pub fn run_replica_kill(seed: u64, n_replicas: usize) -> Result<ScenarioReport, Violation> {
+    assert!(n_replicas >= 2, "replica-kill scenarios need a survivor");
+    let scenario = generate_scenario(seed);
+    let fleet = Fleet::sim(
+        scenario.cfg.clone(),
+        fleet_scenario_config(n_replicas),
+        SimSpec::default(),
+    )
+    .map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("fleet construction failed: {e}"),
+    })?;
+    // Kill while the scenario is still busy (same window the crash-
+    // recovery scenario uses); which replica dies is seed-derived too.
+    let kill_step = 8 + (seed as usize % 24);
+    let replica = (seed as usize / 7) % n_replicas;
+    run_fleet_scenario(&scenario, fleet, Some((kill_step, replica)))
+}
+
+/// Per-event bookkeeping shared by every replica's trace drain —
+/// exactly the fold and oracle checks [`run_with_hook`] applies, kept
+/// free of fleet borrows so the caller can stamp violations with
+/// flight dumps.
+struct FleetObs {
+    emitted: HashMap<SeqId, Vec<u32>>,
+    finished_trace: HashMap<SeqId, (FinishReason, Usage)>,
+    fingerprint: u64,
+    pauses: u64,
+    resumes: u64,
+    expired: u64,
+    /// Tokens dead replicas had emitted for requests that were then
+    /// resubmitted — lost mid-stream, and accounted against the fleet
+    /// token counter in the end-of-run usage oracle.
+    lost_tokens: u64,
+}
+
+impl FleetObs {
+    fn process(&mut self, ev: &TraceEvent) -> Result<(), String> {
+        self.fingerprint = fold_event(self.fingerprint, ev);
+        match ev {
+            TraceEvent::Token { id, token } => {
+                self.emitted.entry(*id).or_default().push(*token);
+            }
+            TraceEvent::Paused { .. } => self.pauses += 1,
+            TraceEvent::Resumed { .. } => self.resumes += 1,
+            TraceEvent::Expired { .. } => self.expired += 1,
+            TraceEvent::Preempted { id, priority, pool } => {
+                check_preemption(*id, *priority, pool)?;
+            }
+            TraceEvent::AdmissionRelief {
+                id,
+                priority,
+                waiter_priority,
+            } => {
+                if priority >= waiter_priority {
+                    return Err(format!(
+                        "admission relief preempted seq {id} (priority {priority}) \
+                         for a waiter of priority {waiter_priority}"
+                    ));
+                }
+            }
+            TraceEvent::Finished { id, reason, usage } => {
+                if self.finished_trace.insert(*id, (*reason, *usage)).is_some() {
+                    return Err(format!("seq {id} emitted two finish events"));
+                }
+                let n_emitted = self.emitted.get(id).map(Vec::len).unwrap_or(0);
+                check_usage(usage, n_emitted).map_err(|m| format!("seq {id}: {m}"))?;
+            }
+            TraceEvent::Admitted { .. } => {}
+        }
+        Ok(())
+    }
+}
+
+/// Concatenated flight dumps of every live replica, for violation
+/// reports (a dead replica's recorder died with it).
+fn fleet_flight(fleet: &Fleet<SimBackend>, mut v: Violation) -> Violation {
+    let mut dump = String::new();
+    for k in 0..fleet.n_replicas() {
+        if let Some(core) = fleet.core(k) {
+            let text = core.flight_text(FLIGHT_DUMP_LINES);
+            if !text.is_empty() {
+                dump.push_str(&format!("  -- replica {k} --\n"));
+                dump.push_str(&text);
+            }
+        }
+    }
+    if !dump.is_empty() {
+        v.message
+            .push_str("\n  flight recorders (newest entries, oldest first):\n");
+        v.message.push_str(&dump);
+    }
+    v
+}
+
+/// The fleet twin of [`run_with_hook`]: statement-for-statement the
+/// same scripted world (arrivals, seed-shuffled client actions, admin
+/// cancel, one step, trace-driven oracles, per-step invariants,
+/// termination), driving a [`Fleet`] instead of a bare core. `kill`
+/// optionally names `(step, replica)` to kill mid-run.
+fn run_fleet_scenario(
+    scenario: &Scenario,
+    mut fleet: Fleet<SimBackend>,
+    kill: Option<(usize, usize)>,
+) -> Result<ScenarioReport, Violation> {
+    let seed = scenario.seed;
+    let violation = |step: usize, message: String| Violation {
+        seed,
+        step,
+        message,
+    };
+    fleet.enable_trace();
+    let mut shuffle = Rng::seed_from_u64(seed ^ 0xF0F0_1234_5678_9ABC);
+    let n = scenario.clients.len();
+    let mut states: Vec<ClientState> = (0..n).map(|_| ClientState::new()).collect();
+    let mut obs = FleetObs {
+        emitted: HashMap::new(),
+        finished_trace: HashMap::new(),
+        fingerprint: splitmix64(seed),
+        pauses: 0,
+        resumes: 0,
+        expired: 0,
+        lost_tokens: 0,
+    };
+    let mut killed = false;
+
+    let mut step = 0usize;
+    loop {
+        if step > MAX_STEPS {
+            return Err(fleet_flight(
+                &fleet,
+                violation(step, "scenario did not terminate (liveness wedge)".into()),
+            ));
+        }
+        let cleanup = step >= scenario.horizon;
+
+        // Arrivals due this step.
+        for (i, c) in scenario.clients.iter().enumerate() {
+            if c.arrive_step == step && !states[i].submitted {
+                let h = fleet
+                    .submit(c.request())
+                    .map_err(|e| violation(step, format!("submit rejected: {e}")))?;
+                states[i].engine_id = Some(h.id);
+                states[i].handle = Some(h);
+                states[i].submitted = true;
+            }
+        }
+
+        // Scripted client actions in the seed-shuffled order.
+        let mut order: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            order.swap(i, shuffle.gen_range(0, i));
+        }
+        for &i in &order {
+            let c = &scenario.clients[i];
+            if c.cancel_at == Some(step) {
+                if let Some(id) = states[i].engine_id {
+                    let _ = fleet.cancel(id);
+                }
+            }
+            if states[i].dropped || states[i].handle.is_none() {
+                continue;
+            }
+            let reader = if cleanup { Reader::Eager } else { c.reader };
+            states[i].read_scripted(reader, step);
+        }
+
+        // Admin bulk-cancel of one tenant, across "connections".
+        if let Some((admin_step, tenant)) = &scenario.admin_cancel {
+            if *admin_step == step {
+                for (i, c) in scenario.clients.iter().enumerate() {
+                    if &c.tenant == tenant && states[i].finished.is_none() {
+                        if let Some(id) = states[i].engine_id {
+                            let _ = fleet.cancel(id);
+                        }
+                    }
+                }
+            }
+        }
+
+        // The scripted replica death. Trace emitted so far (including
+        // cancels applied this step) is folded first, so the victim
+        // accounting below sees every token the doomed replica ever
+        // streamed.
+        if let Some((kill_step, replica)) = kill {
+            if step == kill_step && !killed {
+                killed = true;
+                for r in 0..fleet.n_replicas() {
+                    for ev in fleet.take_trace_of(r) {
+                        obs.process(&ev)
+                            .map_err(|m| fleet_flight(&fleet, violation(step, m)))?;
+                    }
+                }
+                let moved = fleet
+                    .kill(replica)
+                    .map_err(|e| violation(step, format!("kill failed: {e}")))?;
+                obs.fingerprint = fold(obs.fingerprint, moved.len() as u64);
+                for (old_id, handle) in moved {
+                    obs.lost_tokens +=
+                        obs.emitted.get(&old_id).map(Vec::len).unwrap_or(0) as u64;
+                    let owner = states.iter().position(|s| s.engine_id == Some(old_id));
+                    match owner {
+                        Some(i) if !states[i].dropped => {
+                            // Rebind the client to its re-run: the new
+                            // stream restarts the token sequence.
+                            states[i].engine_id = Some(handle.id);
+                            states[i].handle = Some(handle);
+                            states[i].drained.clear();
+                            states[i].finished = None;
+                        }
+                        // A disconnected (or unknown) owner stays gone:
+                        // dropping the handle tells the survivor to
+                        // reap the re-run as a disconnect.
+                        _ => drop(handle),
+                    }
+                }
+            }
+        }
+
+        // One fleet step (skip when truly idle, as the bare runner
+        // does).
+        if !fleet.is_idle() {
+            fleet
+                .step()
+                .map_err(|e| violation(step, format!("fleet step failed: {e}")))?;
+        }
+
+        // Trace-driven oracles (3 and 4) + fingerprint, replica by
+        // replica in index order.
+        for r in 0..fleet.n_replicas() {
+            for ev in fleet.take_trace_of(r) {
+                obs.process(&ev)
+                    .map_err(|m| fleet_flight(&fleet, violation(step, m)))?;
+            }
+        }
+
+        // Oracle 1: refcount conservation on every live replica.
+        for r in 0..fleet.n_replicas() {
+            if let Some(core) = fleet.core(r) {
+                check_kv_conservation(&core.audit()).map_err(|m| {
+                    fleet_flight(&fleet, violation(step, format!("replica {r}: {m}")))
+                })?;
+            }
+        }
+
+        // Oracle 2 (bounds half): live buffers never exceed capacity.
+        for (i, s) in states.iter().enumerate() {
+            if let Some(h) = &s.handle {
+                if h.events.buffered() > h.capacity() {
+                    return Err(fleet_flight(
+                        &fleet,
+                        violation(
+                            step,
+                            format!(
+                                "client {i} buffers {} events over capacity {}",
+                                h.events.buffered(),
+                                h.capacity()
+                            ),
+                        ),
+                    ));
+                }
+            }
+        }
+
+        // Oracle 5: span conservation per live replica.
+        for r in 0..fleet.n_replicas() {
+            let Some(core) = fleet.core(r) else { continue };
+            let spans = core.spans();
+            let mut all: Vec<_> = spans.active().chain(spans.completed()).collect();
+            all.sort_by_key(|s| s.id);
+            for s in all {
+                s.check().map_err(|m| {
+                    fleet_flight(&fleet, violation(step, format!("replica {r}: {m}")))
+                })?;
+            }
+            if spans.spans_admitted != core.metrics.requests_admitted
+                || spans.spans_finished != core.metrics.requests_finished
+            {
+                return Err(fleet_flight(
+                    &fleet,
+                    violation(
+                        step,
+                        format!(
+                            "replica {r} span counters drifted from engine accounting: \
+                             admitted {} vs {}, finished {} vs {}",
+                            spans.spans_admitted,
+                            core.metrics.requests_admitted,
+                            spans.spans_finished,
+                            core.metrics.requests_finished
+                        ),
+                    ),
+                ));
+            }
+        }
+
+        // Termination: everything arrived and the fleet drained.
+        let all_submitted = states.iter().all(|s| s.submitted);
+        if all_submitted && fleet.is_idle() {
+            for s in states.iter_mut() {
+                s.receive(usize::MAX);
+            }
+            break;
+        }
+        step += 1;
+    }
+
+    // End-of-run oracles, per live replica.
+    for r in 0..fleet.n_replicas() {
+        let Some(core) = fleet.core(r) else { continue };
+        let audit = core.audit();
+        if !audit.live.is_empty() || audit.queued != 0 {
+            return Err(fleet_flight(
+                &fleet,
+                violation(step, format!("idle replica {r} still holds sequences")),
+            ));
+        }
+    }
+    // Usage conservation, fleet-wide: the merged token counter (dead
+    // replicas included) equals the finished usages plus the tokens
+    // dead replicas streamed for requests that were resubmitted.
+    let mut total_generated = 0u64;
+    for (_, usage) in obs.finished_trace.values() {
+        total_generated += usage.generated_tokens as u64;
+    }
+    if total_generated + obs.lost_tokens != fleet.metrics().tokens_generated {
+        return Err(fleet_flight(
+            &fleet,
+            violation(
+                step,
+                format!(
+                    "usage sum {total_generated} + {} lost != fleet token counter {}",
+                    obs.lost_tokens,
+                    fleet.metrics().tokens_generated
+                ),
+            ),
+        ));
+    }
+    for (i, s) in states.iter().enumerate() {
+        if s.dropped {
+            continue; // disconnected clients forfeit delivery checks
+        }
+        let Some(id) = s.engine_id else { continue };
+        if s.finished.is_none() {
+            return Err(fleet_flight(
+                &fleet,
+                violation(
+                    step,
+                    format!("client {i} (seq {id}) never received a finish event"),
+                ),
+            ));
+        }
+        // Oracle 2 (lossless half), against the client's *current*
+        // stream: a rebound victim restarts cleanly on its new id.
+        let want = obs.emitted.get(&id).cloned().unwrap_or_default();
+        if s.drained != want {
+            return Err(fleet_flight(
+                &fleet,
+                violation(
+                    step,
+                    format!(
+                        "client {i} (seq {id}) drained {} tokens but the engine emitted {} \
+                         (loss or reorder across pause/resume)",
+                        s.drained.len(),
+                        want.len()
+                    ),
+                ),
+            ));
+        }
+        obs.fingerprint = fold(obs.fingerprint, s.drained.len() as u64);
+    }
+
+    let m = fleet.metrics();
+    Ok(ScenarioReport {
+        seed,
+        steps: step,
+        requests: n,
+        finished: m.requests_finished,
+        preemptions: m.preemptions,
+        pauses: obs.pauses,
+        resumes: obs.resumes,
+        expired: obs.expired,
+        disconnects: m.client_disconnects,
+        cancellations: m.cancellations,
+        tokens_generated: m.tokens_generated,
+        fingerprint: obs.fingerprint,
+    })
+}
+
 /// Run a scenario with a double-free injected through the KV cache's
 /// `#[cfg(test)]` fault hook at the first step where live KV exists.
 /// The refcount oracle must catch it on that very step.
@@ -1008,6 +1439,36 @@ mod tests {
         // The clean run of the same seed passes — the fault hook, not
         // the scenario, is what broke the invariant.
         run_scenario(seed).expect("clean run passes");
+    }
+
+    #[test]
+    fn single_replica_fleet_report_matches_bare_engine() {
+        for seed in [1u64, 7, 23] {
+            let bare = run_scenario(seed).expect("bare scenario passes");
+            let fleet = run_scenario_fleet(seed, 1).expect("fleet scenario passes");
+            assert_eq!(bare, fleet, "seed {seed}: a fleet of one must be transparent");
+        }
+    }
+
+    #[test]
+    fn fleet_scenarios_pass_oracles_and_reproduce() {
+        for seed in [2u64, 9, 31] {
+            let a = run_scenario_fleet(seed, 3).expect("fleet scenario passes oracles");
+            let b = run_scenario_fleet(seed, 3).expect("fleet scenario passes oracles");
+            assert_eq!(a, b, "seed {seed} must reproduce exactly");
+            assert!(a.finished > 0, "seed {seed} finishes work");
+        }
+    }
+
+    #[test]
+    fn replica_kill_scenarios_pass_oracles_and_reproduce() {
+        for seed in [1u64, 5, 12, 27] {
+            let a = run_replica_kill(seed, 2).expect("kill scenario passes oracles");
+            let b = run_replica_kill(seed, 2).expect("kill scenario passes oracles");
+            assert_eq!(a, b, "seed {seed} must reproduce exactly");
+        }
+        // Wider fleets survive the same seeds.
+        run_replica_kill(5, 3).expect("three-replica kill passes");
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Fleet-layer integration tests: N=1 transparency (a fleet of one is
+//! byte-identical to a bare engine over the full simtest seed matrix),
+//! multi-replica scenarios under all five oracles, replica-kill
+//! scenarios (mid-stream death, resubmission to survivors, nothing
+//! lost or duplicated), and byte-identical reproduction of every fleet
+//! run. See `fdpp::fleet` and docs/ARCHITECTURE.md § "Fleet serving".
+
+use fdpp::api::{GenRequest, InferenceEngine};
+use fdpp::config::{EngineConfig, FleetConfig, RoutePolicy};
+use fdpp::fleet::{Fleet, ReplicaHealth};
+use fdpp::simengine::SimSpec;
+use fdpp::simtest::{run_replica_kill, run_scenario, run_scenario_fleet};
+
+/// The same fixed matrix `sim_scenarios.rs` runs.
+const SEED_MATRIX: std::ops::RangeInclusive<u64> = 1..=24;
+
+#[test]
+fn fleet_of_one_is_fingerprint_identical_to_bare_engine_on_the_matrix() {
+    let mut failures = Vec::new();
+    for seed in SEED_MATRIX {
+        let bare = match run_scenario(seed) {
+            Ok(r) => r,
+            Err(v) => {
+                eprintln!("{v}");
+                failures.push(seed);
+                continue;
+            }
+        };
+        match run_scenario_fleet(seed, 1) {
+            Ok(fleet) => {
+                if bare != fleet {
+                    eprintln!(
+                        "seed {seed}: bare fp {:016x} != fleet fp {:016x}",
+                        bare.fingerprint, fleet.fingerprint
+                    );
+                    failures.push(seed);
+                }
+            }
+            Err(v) => {
+                eprintln!("{v}");
+                failures.push(seed);
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "fleet-of-one transparency broken on seeds: {failures:?}"
+    );
+}
+
+#[test]
+fn multi_replica_matrix_passes_all_oracles_and_reproduces() {
+    let mut failures = Vec::new();
+    let mut tokens = 0u64;
+    for seed in SEED_MATRIX {
+        match run_scenario_fleet(seed, 3) {
+            Ok(a) => {
+                tokens += a.tokens_generated;
+                let b = run_scenario_fleet(seed, 3).expect("second run passes");
+                assert_eq!(a, b, "seed {seed} must reproduce byte-identically");
+            }
+            Err(v) => {
+                eprintln!("{v}");
+                failures.push(seed);
+            }
+        }
+    }
+    assert!(failures.is_empty(), "failing seeds: {failures:?}");
+    assert!(tokens > 100, "matrix generated {tokens} tokens");
+}
+
+#[test]
+fn replica_kill_matrix_passes_all_oracles_and_reproduces() {
+    let mut failures = Vec::new();
+    for seed in SEED_MATRIX {
+        for n_replicas in [2usize, 3] {
+            match run_replica_kill(seed, n_replicas) {
+                Ok(a) => {
+                    let b = run_replica_kill(seed, n_replicas).expect("second run passes");
+                    assert_eq!(
+                        a, b,
+                        "seed {seed} n={n_replicas} must reproduce byte-identically"
+                    );
+                }
+                Err(v) => {
+                    eprintln!("n_replicas {n_replicas}: {v}");
+                    failures.push((seed, n_replicas));
+                }
+            }
+        }
+    }
+    assert!(failures.is_empty(), "failing (seed, n): {failures:?}");
+}
+
+/// Mid-stream kill at the engine-API level: partially streamed
+/// requests restart on a survivor and finish exactly once.
+#[test]
+fn killed_replica_requests_finish_exactly_once_on_survivors() {
+    let cfg = EngineConfig {
+        kv_block_tokens: 8,
+        kv_total_blocks: 128,
+        max_new_tokens: 12,
+        prefix_cache: true,
+        ..EngineConfig::default()
+    };
+    let fcfg = FleetConfig {
+        n_replicas: 3,
+        policy: RoutePolicy::RoundRobin,
+        ..FleetConfig::default()
+    };
+    let mut fleet = Fleet::sim(cfg, fcfg, SimSpec::default()).unwrap();
+    let mut handles = Vec::new();
+    for i in 0..6 {
+        let req = GenRequest::text(format!("request number {i}")).max_new_tokens(12);
+        handles.push(fleet.submit(req).unwrap());
+    }
+    // Let everything admit and stream a little, then kill replica 1.
+    for _ in 0..3 {
+        fleet.step().unwrap();
+    }
+    let moved = fleet.kill(1).unwrap();
+    assert_eq!(moved.len(), 2, "round-robin put two requests on replica 1");
+    assert_eq!(fleet.health(1), Some(ReplicaHealth::Dead));
+    fleet.run_to_completion().unwrap();
+    // Every surviving original handle finishes exactly once...
+    let mut finished = 0;
+    for h in &handles {
+        let (_, fin) = h.drain();
+        if fin.is_some() {
+            finished += 1;
+        }
+    }
+    assert_eq!(finished, 4, "the four requests on survivors finish");
+    // ...and every resubmitted victim finishes exactly once too.
+    for (_, h) in &moved {
+        let (toks, fin) = h.drain();
+        assert!(fin.is_some(), "resubmitted request finished");
+        assert!(!toks.is_empty(), "resubmitted request streamed tokens");
+    }
+    // 4 survivors' originals + 2 re-runs; the dead replica's two
+    // never finished (their tokens restarted on the survivors).
+    assert_eq!(fleet.metrics().requests_finished, 6);
+    assert_eq!(fleet.resubmitted(), 2);
+}

@@ -9,19 +9,22 @@
 //! including *cross-connection* cancellation by global id and the admin
 //! bulk-cancel verb), stop sequences over the wire, budget clamping,
 //! the structured-error validation path, slow-client isolation (a
-//! stalled reader never delays other connections' streams), and the
+//! stalled reader never delays other connections' streams), the
 //! v2.3 observability surface: the `done` line's span breakdown, the
-//! `dump_flight` admin verb, and the Prometheus stats rendering.
+//! `dump_flight` admin verb, and the Prometheus stats rendering — and
+//! the v2.4 fleet surface: a sim-backed [`fdpp::fleet::Fleet`] behind
+//! the same loop, the `drain_replica` / `kill_replica` / `fleet_stats`
+//! admin verbs, and mid-stream replica death with resubmission.
 
 use std::net::TcpListener;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use fdpp::api::{GenRequest, InferenceEngine};
-use fdpp::config::EngineConfig;
-use fdpp::server::{serve_on, spawn_sim_engine, Client};
+use fdpp::config::{EngineConfig, FleetConfig, RoutePolicy};
+use fdpp::server::{serve_on, spawn_sim_engine, spawn_sim_fleet, Client};
 use fdpp::simengine::{SimEngine, SimSpec};
-use fdpp::util::json::Json;
+use fdpp::util::json::{parse, Json};
 
 fn test_cfg() -> EngineConfig {
     EngineConfig {
@@ -706,4 +709,132 @@ fn invalid_requests_get_structured_errors_and_connection_survives() {
     // The connection still serves valid work afterwards.
     let out = c.generate("still alive", 3).unwrap();
     let _ = out; // generation may legitimately decode to specials only
+}
+
+/// Bind port 0, spawn a sim-backed fleet behind the production accept
+/// loop, and return the dialable address.
+fn start_fleet_server(cfg: EngineConfig, fcfg: FleetConfig, spec: SimSpec) -> String {
+    let vocab = spec.vocab;
+    let max_new_cap = cfg.max_new_tokens;
+    let handle = spawn_sim_fleet(cfg, fcfg, spec).expect("sim fleet starts");
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let _ = serve_on(listener, handle, vocab, max_new_cap);
+    });
+    addr
+}
+
+#[test]
+fn fleet_server_generates_and_reports_fleet_stats() {
+    let fcfg = FleetConfig {
+        n_replicas: 2,
+        policy: RoutePolicy::CacheAware,
+        ..FleetConfig::default()
+    };
+    let addr = start_fleet_server(test_cfg(), fcfg, SimSpec::default());
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    // Generation through a fleet is the same wire protocol.
+    c.generate("hello fleet", 8).unwrap();
+    // `{"stats": true}` carries the fleet breakdown plus server fields.
+    let stats = parse(&c.stats().unwrap()).unwrap();
+    assert!(stats.get("registry_depth").is_some());
+    let fleet = stats.field("fleet").expect("stats carry fleet object");
+    assert_eq!(fleet.req_usize("replicas").unwrap(), 2);
+    assert_eq!(fleet.req_str("policy").unwrap(), "cache_aware");
+    // The fleet_stats admin verb returns the same snapshot shape.
+    let fs = c.fleet_stats().unwrap();
+    assert_eq!(fs.field("fleet").unwrap().req_usize("replicas_up").unwrap(), 2);
+    let replicas = fs.field("replicas").expect("per-replica breakdown");
+    let finished: usize = ["0", "1"]
+        .iter()
+        .map(|k| replicas.field(k).unwrap().req_usize("requests_finished").unwrap())
+        .sum();
+    assert_eq!(finished, 1, "exactly one replica served the request");
+    for k in ["0", "1"] {
+        assert_eq!(replicas.field(k).unwrap().req_str("health").unwrap(), "up");
+    }
+}
+
+#[test]
+fn fleet_admin_verbs_are_bad_admin_on_a_bare_engine() {
+    let addr = start_server(test_cfg());
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let err = c.drain_replica(0).unwrap_err();
+    assert!(
+        err.to_string().contains("does not support"),
+        "bare engine rejects fleet verbs: {err}"
+    );
+    // The connection survives and still serves work.
+    c.generate("still alive", 3).unwrap();
+}
+
+#[test]
+fn kill_replica_over_the_wire_resubmits_mid_stream_work() {
+    // Two long generations round-robin onto two replicas; killing
+    // replica 1 mid-stream restarts its request on replica 0. The
+    // victim's wire stream ends without a done line (its submitter's
+    // channel died with the replica); the re-run is serviced by the
+    // fleet and lands in the merged finish counters.
+    let budget = 512;
+    let (cfg, spec, prompt) = cancelable_workload(budget);
+    let fcfg = FleetConfig {
+        n_replicas: 2,
+        policy: RoutePolicy::RoundRobin,
+        ..FleetConfig::default()
+    };
+    let addr = start_fleet_server(cfg, fcfg, spec);
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    for id in ["a", "b"] {
+        c.send(&Json::obj(vec![
+            ("id", Json::Str(id.into())),
+            ("prompt", Json::Str(prompt.clone())),
+            ("max_new_tokens", Json::Num(budget as f64)),
+        ]))
+        .unwrap();
+    }
+    c.send(&Json::obj(vec![(
+        "admin",
+        Json::obj(vec![("kill_replica", Json::Num(1.0))]),
+    )]))
+    .unwrap();
+    // Acks, token lines, the kill reply, and "a"'s done line interleave
+    // on the shared socket; collect until we have the latter two.
+    let mut kill_reply = None;
+    let mut done_a = None;
+    while kill_reply.is_none() || done_a.is_none() {
+        let j = c.recv().unwrap();
+        if j.get("resubmitted").is_some() {
+            kill_reply = Some(j);
+        } else if j.get("done").is_some() {
+            assert_eq!(j.req_str("id").unwrap(), "a", "only a's stream finishes");
+            done_a = Some(j);
+        }
+    }
+    let kill = kill_reply.unwrap();
+    assert_eq!(kill.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(kill.req_usize("resubmitted").unwrap(), 1, "b was mid-stream");
+    assert_eq!(done_a.unwrap().req_usize("n").unwrap(), budget);
+    // The re-run finishes on the survivor: poll the merged counters.
+    let mut c2 = Client::connect(&addr).unwrap();
+    c2.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let t0 = Instant::now();
+    loop {
+        let fs = c2.fleet_stats().unwrap();
+        if fs.req_usize("requests_finished").unwrap() >= 2 {
+            assert_eq!(fs.field("fleet").unwrap().req_usize("resubmitted").unwrap(), 1);
+            let dead = fs.field("replicas").unwrap().field("1").unwrap();
+            assert_eq!(dead.req_str("health").unwrap(), "dead");
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "resubmitted request never finished: {}",
+            fs.to_string()
+        );
+        thread::sleep(Duration::from_millis(10));
+    }
 }
