@@ -7,16 +7,23 @@
 //!   cargo run --example simtest -- --random-seeds 25 # smoke mode
 //!   cargo run --example simtest -- --fleet 3         # N-replica fleet
 //!   cargo run --example simtest -- --fleet 3 --kill  # + replica death
+//!   cargo run --example simtest -- --shards 2        # sharded backend
 //!
 //! `--fleet N` runs every selected seed through an N-replica
 //! [`fdpp::fleet::Fleet`] under the same five oracles; `--kill`
 //! additionally kills a seed-chosen replica mid-run and checks that
 //! its in-flight work restarts on the survivors with nothing lost or
-//! duplicated. Any oracle violation prints the offending seed plus a
-//! replay command and exits nonzero — CI echoes exactly what to run
-//! locally.
+//! duplicated. `--shards M` swaps every engine's backend for
+//! [`fdpp::shard::ShardedBackend`] with M simulated tensor-parallel
+//! lanes (composable with `--fleet`/`--kill`) — the reports, sharded
+//! or not, must be byte-identical, so a divergence is a sharding bug.
+//! Any oracle violation prints the offending seed plus a replay
+//! command and exits nonzero — CI echoes exactly what to run locally.
 
-use fdpp::simtest::{run_replica_kill, run_scenario, run_scenario_fleet};
+use fdpp::simtest::{
+    run_replica_kill, run_replica_kill_sharded, run_scenario, run_scenario_fleet,
+    run_scenario_fleet_sharded, run_scenario_sharded,
+};
 
 fn entropy_seed() -> u64 {
     // Smoke mode only: fixed runs never call this.
@@ -30,7 +37,7 @@ fn entropy_seed() -> u64 {
 fn usage() -> ! {
     eprintln!(
         "usage: simtest [--seed N]... [--seeds LO..HI] [--random-seeds N] \
-         [--fleet N] [--kill]\n\
+         [--fleet N] [--kill] [--shards M]\n\
          (no arguments: the fixed seed matrix 1..=24; --kill needs --fleet >= 2)"
     );
     std::process::exit(2)
@@ -40,6 +47,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut seeds: Vec<u64> = Vec::new();
     let mut fleet: Option<usize> = None;
+    let mut shards: Option<usize> = None;
     let mut kill = false;
     let mut i = 0;
     while i < args.len() {
@@ -83,6 +91,15 @@ fn main() {
                 fleet = Some(n);
             }
             "--kill" => kill = true,
+            "--shards" => {
+                i += 1;
+                let s = args.get(i).unwrap_or_else(|| usage());
+                let m: usize = s.parse().unwrap_or_else(|_| usage());
+                if m == 0 {
+                    usage();
+                }
+                shards = Some(m);
+            }
             _ => usage(),
         }
         i += 1;
@@ -97,10 +114,13 @@ fn main() {
 
     let mut failed = false;
     for &seed in &seeds {
-        let result = match (fleet, kill) {
-            (Some(n), true) => run_replica_kill(seed, n),
-            (Some(n), false) => run_scenario_fleet(seed, n),
-            (None, _) => run_scenario(seed),
+        let result = match (fleet, kill, shards) {
+            (Some(n), true, Some(m)) => run_replica_kill_sharded(seed, n, m),
+            (Some(n), true, None) => run_replica_kill(seed, n),
+            (Some(n), false, Some(m)) => run_scenario_fleet_sharded(seed, n, m),
+            (Some(n), false, None) => run_scenario_fleet(seed, n),
+            (None, _, Some(m)) => run_scenario_sharded(seed, m),
+            (None, _, None) => run_scenario(seed),
         };
         match result {
             Ok(r) => println!(
@@ -118,6 +138,17 @@ fn main() {
             ),
             Err(v) => {
                 eprintln!("{v}");
+                let mut replay = format!("cargo run --example simtest -- --seed {seed}");
+                if let Some(n) = fleet {
+                    replay.push_str(&format!(" --fleet {n}"));
+                }
+                if kill {
+                    replay.push_str(" --kill");
+                }
+                if let Some(m) = shards {
+                    replay.push_str(&format!(" --shards {m}"));
+                }
+                eprintln!("replay: {replay}");
                 eprintln!("SIMTEST FAILING SEED: {seed}");
                 failed = true;
             }
@@ -131,5 +162,8 @@ fn main() {
         (Some(n), false) => format!(" (fleet of {n})"),
         (None, _) => String::new(),
     };
-    println!("{} scenario(s) passed all oracles{mode}", seeds.len());
+    let lanes = shards
+        .map(|m| format!(" ({m} lanes/backend)"))
+        .unwrap_or_default();
+    println!("{} scenario(s) passed all oracles{mode}{lanes}", seeds.len());
 }

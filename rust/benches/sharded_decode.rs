@@ -1,0 +1,79 @@
+//! Sharded decode tradeoff: the pinned seeded workload drained on
+//! `EngineCore<ShardedBackend<SimBackend>>` across the M×batch grid
+//! (M∈{1,2,4,8} × batch∈{1,8,32}), reporting modeled decode tokens/s
+//! and collective overhead per cell (`BENCH_sharded.json`).
+//!
+//! Runs [`fdpp::bench_support::sharded_decode_report`] twice at the
+//! pinned seed, asserts the two reports are byte-identical (virtual
+//! clock, seeded workload, fixed-order f64 accumulation — regressions
+//! show up as a *changed* report, never as noise), asserts collective
+//! overhead is zero at M=1 and strictly increasing in M at batch 1,
+//! prints the grid, and writes `BENCH_sharded.json` to the working
+//! directory.
+//!
+//!   cargo bench --bench sharded_decode
+
+use fdpp::bench_support::{banner, row, sharded_decode_report, SHARDED_DECODE_SEED};
+use fdpp::util::json::Json;
+
+const SHARDS: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
+const BATCHES: [f64; 3] = [1.0, 8.0, 32.0];
+
+fn main() {
+    banner(
+        "BENCH_sharded",
+        "simulated tensor-parallel decode: tokens/s and collective overhead",
+    );
+    let report = sharded_decode_report(SHARDED_DECODE_SEED).expect("harness runs");
+    let again = sharded_decode_report(SHARDED_DECODE_SEED).expect("harness runs");
+    let text = report.to_string();
+    assert_eq!(
+        text,
+        again.to_string(),
+        "sharded decode report must be byte-identical across runs of the same seed"
+    );
+
+    let cells = report
+        .get("grid")
+        .and_then(Json::as_arr)
+        .expect("report carries the grid");
+    let num = |shards: f64, batch: f64, key: &str| {
+        cells
+            .iter()
+            .find(|c| {
+                c.get("shards").and_then(Json::as_f64) == Some(shards)
+                    && c.get("batch").and_then(Json::as_f64) == Some(batch)
+            })
+            .and_then(|c| c.get(key))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("report missing grid[M={shards},batch={batch}].{key}"))
+    };
+
+    row(
+        "M \\ batch",
+        &BATCHES.iter().map(|b| format!("{b:.0}")).collect::<Vec<_>>(),
+    );
+    for &m in &SHARDS {
+        let vals: Vec<String> = BATCHES
+            .iter()
+            .map(|&b| {
+                let tps = num(m, b, "modeled_decode_tokens_per_sec");
+                let ov = num(m, b, "collective_overhead");
+                format!("{tps:.0}/{:.0}%", ov * 100.0)
+            })
+            .collect();
+        row(&format!("M={m:.0} tok/s / coll%"), &vals);
+    }
+
+    let overhead = |m: f64| num(m, 1.0, "collective_overhead");
+    assert_eq!(overhead(1.0), 0.0, "M=1 must run no collectives");
+    let (o2, o4, o8) = (overhead(2.0), overhead(4.0), overhead(8.0));
+    assert!(
+        o2 > 0.0 && o4 > o2 && o8 > o4,
+        "collective overhead at batch 1 must be strictly increasing in M: \
+         {o2:.3} {o4:.3} {o8:.3}"
+    );
+
+    std::fs::write("BENCH_sharded.json", format!("{text}\n")).expect("write BENCH_sharded.json");
+    println!("\nwrote BENCH_sharded.json ({} bytes)", text.len() + 1);
+}

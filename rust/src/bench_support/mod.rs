@@ -9,8 +9,11 @@ use std::time::Instant;
 
 use crate::api::{GenEvent, GenRequest, InferenceEngine};
 use crate::config::{EngineConfig, FleetConfig, RoutePolicy};
+use crate::core::EngineCore;
 use crate::fleet::Fleet;
-use crate::simengine::{SimEngine, SimSpec, SIM_STEP};
+use crate::shard::ShardedBackend;
+use crate::simengine::{SimBackend, SimEngine, SimSpec, SIM_STEP};
+use crate::util::clock::Clock;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::{shared_prefix_trace, SharedPrefixSpec};
@@ -345,6 +348,127 @@ pub fn fleet_routing_report(seed: u64) -> Result<Json> {
     ]))
 }
 
+// ---------------------------------------------------------------------
+// Sharded-decode harness (BENCH_sharded.json)
+// ---------------------------------------------------------------------
+
+/// The pinned seed `benches/sharded_decode.rs` and the CI
+/// `perf-trajectory` job run. Changing it invalidates the sharded
+/// decode history, so don't.
+pub const SHARDED_DECODE_SEED: u64 = 2397;
+
+/// Shard counts the pinned sharded-decode grid sweeps.
+const SHARDED_DECODE_SHARDS: [usize; 4] = [1, 2, 4, 8];
+
+/// Batch sizes the pinned sharded-decode grid sweeps.
+const SHARDED_DECODE_BATCHES: [usize; 3] = [1, 8, 32];
+
+/// One cell of the sharded-decode grid: drain a seeded `batch`-request
+/// workload on `EngineCore<ShardedBackend<SimBackend>>` with `shards`
+/// lanes and report the shard accounting.
+///
+/// The workload is a pure function of `(seed, batch)` — deliberately
+/// *independent of the shard count* — so every M in a column decodes
+/// the exact same rows and the sweep compares like for like. Scheduling
+/// is also shard-invariant (the differential matrix proves it), so the
+/// only thing that moves across M is the modeled budget: per-lane
+/// compute shrinks while collective time grows.
+fn sharded_cell_run(seed: u64, shards: usize, batch: usize) -> Result<Json> {
+    let cfg = EngineConfig {
+        kv_block_tokens: 8,
+        kv_total_blocks: 512,
+        max_new_tokens: 24,
+        max_running: batch,
+        decode_buckets: vec![1, 2, 4, 8, 16, 32],
+        prefix_cache: false,
+        seed,
+        ..EngineConfig::default()
+    };
+    let mut engine = EngineCore::with_backend(
+        ShardedBackend::new(SimBackend::new(SimSpec::default()), shards),
+        cfg,
+        Clock::manual(),
+    )?;
+    let mut rng = Rng::seed_from_u64(seed ^ ((batch as u64) << 16));
+    let mut handles = Vec::with_capacity(batch);
+    for i in 0..batch {
+        let words = 2 + rng.gen_range(0, 12);
+        let mut prompt = format!("shard cell {i:02}");
+        for w in 0..words {
+            prompt.push_str(&format!(" tok{w}"));
+        }
+        let req = GenRequest::text(&prompt).max_new_tokens(8 + rng.gen_range(0, 16));
+        handles.push(engine.submit(req)?);
+    }
+    let mut steps = 0u64;
+    while !engine.is_idle() {
+        if steps > 100_000 {
+            return Err(Error::Request(
+                "sharded decode workload did not drain".into(),
+            ));
+        }
+        engine.step()?;
+        steps += 1;
+        for h in &handles {
+            while h.events.try_recv().is_ok() {}
+        }
+    }
+    let sm = engine.backend().shard_metrics();
+    let decode_s = sm.decode_compute_s + sm.decode_collective_s;
+    let tokens_per_sec = if decode_s > 0.0 {
+        sm.decode_rows as f64 / decode_s
+    } else {
+        0.0
+    };
+    let overhead = if decode_s > 0.0 {
+        sm.decode_collective_s / decode_s
+    } else {
+        0.0
+    };
+    let m = &engine.metrics;
+    Ok(Json::obj(vec![
+        ("shards", Json::Num(shards as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("requests_finished", Json::Num(m.requests_finished as f64)),
+        ("tokens_generated", Json::Num(m.tokens_generated as f64)),
+        ("decode_rows", Json::Num(sm.decode_rows as f64)),
+        ("allgather_ops", Json::Num(sm.allgather_ops as f64)),
+        ("allgather_bytes", Json::Num(sm.allgather_bytes as f64)),
+        ("allreduce_ops", Json::Num(sm.allreduce_ops as f64)),
+        ("allreduce_bytes", Json::Num(sm.allreduce_bytes as f64)),
+        ("decode_compute_ms", Json::Num(sm.decode_compute_s * 1e3)),
+        (
+            "decode_collective_ms",
+            Json::Num(sm.decode_collective_s * 1e3),
+        ),
+        ("modeled_decode_tokens_per_sec", Json::Num(tokens_per_sec)),
+        ("collective_overhead", Json::Num(overhead)),
+    ]))
+}
+
+/// Sweep the pinned M×batch grid (M∈{1,2,4,8} × batch∈{1,8,32}) on the
+/// sharded sim backend and return the `BENCH_sharded.json` report
+/// object: modeled decode tokens/s and collective overhead per cell.
+/// Everything is a pure function of `seed` (manual sim clock, seeded
+/// workload, fixed-order f64 accumulation), so the report is
+/// byte-identical across runs — the bench and CI assert it by diffing
+/// two consecutive runs.
+pub fn sharded_decode_report(seed: u64) -> Result<Json> {
+    let mut grid = Vec::new();
+    for &shards in &SHARDED_DECODE_SHARDS {
+        for &batch in &SHARDED_DECODE_BATCHES {
+            grid.push(sharded_cell_run(seed, shards, batch)?);
+        }
+    }
+    Ok(Json::obj(vec![
+        ("seed", Json::Num(seed as f64)),
+        ("shard_counts", Json::arr_usize(&SHARDED_DECODE_SHARDS)),
+        ("batch_sizes", Json::arr_usize(&SHARDED_DECODE_BATCHES)),
+        ("grid", Json::Arr(grid)),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,6 +525,46 @@ mod tests {
                 .and_then(Json::as_f64)
                 .unwrap();
             assert_eq!(fin, 96.0, "{policy} finished all requests");
+        }
+    }
+
+    #[test]
+    fn sharded_decode_report_is_byte_identical_and_overhead_scales() {
+        let a = sharded_decode_report(SHARDED_DECODE_SEED).unwrap();
+        let b = sharded_decode_report(SHARDED_DECODE_SEED).unwrap();
+        assert_eq!(a.to_string(), b.to_string(), "report must reproduce");
+        let cells = a.get("grid").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 12, "4 shard counts x 3 batch sizes");
+        let cell = |shards: f64, batch: f64| {
+            cells
+                .iter()
+                .find(|c| {
+                    c.get("shards").and_then(Json::as_f64) == Some(shards)
+                        && c.get("batch").and_then(Json::as_f64) == Some(batch)
+                })
+                .expect("grid cell present")
+        };
+        let num = |shards: f64, batch: f64, key: &str| {
+            cell(shards, batch).get(key).and_then(Json::as_f64).unwrap()
+        };
+        // M=1 runs no collectives; at batch 1 the overhead share is
+        // strictly increasing in M (the acceptance headline).
+        assert_eq!(num(1.0, 1.0, "collective_overhead"), 0.0);
+        let (o2, o4, o8) = (
+            num(2.0, 1.0, "collective_overhead"),
+            num(4.0, 1.0, "collective_overhead"),
+            num(8.0, 1.0, "collective_overhead"),
+        );
+        assert!(o2 > 0.0, "M=2 pays for collectives");
+        assert!(o4 > o2 && o8 > o4, "overhead not increasing: {o2} {o4} {o8}");
+        // The workload is shard-invariant: every M decodes the same
+        // rows, so only the modeled budget moves across a column.
+        for &b in &[1.0, 8.0, 32.0] {
+            let r1 = num(1.0, b, "decode_rows");
+            assert!(r1 > 0.0);
+            for &s in &[2.0, 4.0, 8.0] {
+                assert_eq!(num(s, b, "decode_rows"), r1, "rows depend on M at batch {b}");
+            }
         }
     }
 }

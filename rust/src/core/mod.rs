@@ -527,6 +527,13 @@ impl<B: Backend> EngineCore<B> {
         &self.backend
     }
 
+    /// The paged KV store (read-only; invariant checkers — e.g.
+    /// [`crate::shard::ShardedBackend::verify_sharding`] — read dense
+    /// state back through it without perturbing the engine).
+    pub fn kv(&self) -> &KvCache {
+        &self.kv
+    }
+
     /// Re-base this core's request-id counter so ids stay globally
     /// unique across a fleet of replicas (replica `k` gets base
     /// `k << 48`). Must be called before the first submission.

@@ -42,6 +42,7 @@ use crate::error::{Error, Result};
 use crate::metrics::EngineMetrics;
 use crate::router::encode_prompt;
 use crate::scheduler::Action;
+use crate::shard::ShardedBackend;
 use crate::simengine::{SimBackend, SimSpec};
 use crate::tokenizer::ByteTokenizer;
 use crate::util::clock::Clock;
@@ -806,6 +807,32 @@ impl Fleet<SimBackend> {
         let mut cores = Vec::with_capacity(fcfg.n_replicas);
         for _ in 0..fcfg.n_replicas {
             cores.push(EngineCore::with_clock(cfg.clone(), spec, clock.clone())?);
+        }
+        Fleet::from_replicas(cores, fcfg)
+    }
+}
+
+impl Fleet<ShardedBackend<SimBackend>> {
+    /// Build a sim fleet whose replicas each run a
+    /// [`ShardedBackend<SimBackend>`] with `shards` simulated
+    /// tensor-parallel lanes, sharing one manual clock. Sharding is
+    /// invisible to scheduling, so this fleet must behave byte-for-byte
+    /// like [`Fleet::sim`] under any scenario — `tests/fleet.rs`
+    /// asserts it across the replica-kill matrix.
+    pub fn sharded_sim(
+        cfg: EngineConfig,
+        fcfg: FleetConfig,
+        spec: SimSpec,
+        shards: usize,
+    ) -> Result<Self> {
+        let clock = Clock::manual();
+        let mut cores = Vec::with_capacity(fcfg.n_replicas);
+        for _ in 0..fcfg.n_replicas {
+            cores.push(EngineCore::with_backend(
+                ShardedBackend::new(SimBackend::new(spec), shards),
+                cfg.clone(),
+                clock.clone(),
+            )?);
         }
         Fleet::from_replicas(cores, fcfg)
     }

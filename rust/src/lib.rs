@@ -97,6 +97,15 @@
 //! [`api::InferenceEngine`] trait via the `drain_replica` /
 //! `kill_replica` / `fleet_stats` admin verbs (protocol v2.4).
 //!
+//! Within one replica, [`shard::ShardedBackend`] splits any backend's
+//! dense state across M simulated tensor-parallel lanes with per-shard
+//! KV mirrors, collective accounting (all-gather at attention,
+//! all-reduce at logits — [`shard::ShardMetrics`]), and LIMINAL-style
+//! per-lane budgets on [`hwmodel`]. Sharding is invisible to
+//! scheduling: the differential matrix proves byte-identical scenario
+//! fingerprints for every M, and `BENCH_sharded.json` quantifies the
+//! M×batch decode tradeoff.
+//!
 //! # End-to-end flow control
 //!
 //! The serving path is flow-controlled end to end, so memory stays
@@ -181,6 +190,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 pub mod simengine;
 pub mod simtest;
 pub mod softmaxstats;

@@ -632,6 +632,32 @@ pub fn prometheus_text(stats: &Json) -> String {
                     }
                 }
             }
+            ("per_shard", Json::Obj(shards)) => {
+                // Sharded-backend stats: one labeled gauge family per
+                // numeric lane field (`shard::ShardMetrics::to_json`
+                // keys the object by shard index).
+                let mut fields = std::collections::BTreeSet::new();
+                for s in shards.values() {
+                    if let Json::Obj(m) = s {
+                        for (f, v) in m {
+                            if matches!(v, Json::Num(_)) {
+                                fields.insert(f.clone());
+                            }
+                        }
+                    }
+                }
+                for field in &fields {
+                    let _ = writeln!(out, "# TYPE fdpp_shard_{field} gauge");
+                    for (shard, s) in shards {
+                        let _ = write!(out, "fdpp_shard_{field}{{shard=\"{shard}\"}} ");
+                        fmt_num(
+                            s.get(field).and_then(Json::as_f64).unwrap_or(0.0),
+                            &mut out,
+                        );
+                        out.push('\n');
+                    }
+                }
+            }
             ("tenants", Json::Obj(tenants)) => {
                 for field in [
                     "requests_finished",
@@ -835,6 +861,34 @@ mod tests {
         assert!(text.contains("fdpp_replica_routed{replica=\"1\"} 3\n"));
         // String fields get no series of their own.
         assert!(!text.contains("fdpp_replica_health"));
+        assert_eq!(text, prometheus_text(&stats));
+    }
+
+    #[test]
+    fn prometheus_renders_per_shard_labels() {
+        let stats = Json::obj(vec![(
+            "per_shard",
+            Json::obj(vec![
+                (
+                    "0",
+                    Json::obj(vec![
+                        ("joins", Json::Num(4.0)),
+                        ("kv_elems", Json::Num(96.0)),
+                    ]),
+                ),
+                (
+                    "1",
+                    Json::obj(vec![
+                        ("joins", Json::Num(4.0)),
+                        ("kv_elems", Json::Num(64.0)),
+                    ]),
+                ),
+            ]),
+        )]);
+        let text = prometheus_text(&stats);
+        assert!(text.contains("# TYPE fdpp_shard_joins gauge"));
+        assert!(text.contains("fdpp_shard_joins{shard=\"0\"} 4\n"), "{text}");
+        assert!(text.contains("fdpp_shard_kv_elems{shard=\"1\"} 64\n"));
         assert_eq!(text, prometheus_text(&stats));
     }
 

@@ -1,0 +1,867 @@
+//! Sharded backend: simulated tensor-parallel lanes behind one
+//! [`Backend`].
+//!
+//! [`ShardedBackend<B>`] wraps any compute backend and splits its dense
+//! per-token KV state across `M` simulated device lanes: shard `s` owns
+//! a contiguous element range of every token's K/V column (the balanced
+//! partition [`slice_range`] — head/layer agnostic, so any `M` works
+//! with any geometry). Every engine hook is delegated to the inner
+//! backend *verbatim* and then mirrored per lane: the wrapper keeps a
+//! per-shard dense copy of each batched sequence's KV slice, drives the
+//! per-lane bookkeeping for `on_batch_join/leave/pause/resume`, and
+//! accounts the collective points a real tensor-parallel decode step
+//! would synchronize on — an **all-gather** of the attention output at
+//! the end of attention, and an **all-reduce** of the vocab-parallel
+//! logits partials at the head. Counts and bytes land in
+//! [`ShardMetrics`]; modeled per-shard compute and link time build on
+//! [`crate::hwmodel`] the way LIMINAL (arxiv 2507.14397) frames decode
+//! lanes: a bandwidth/compute/synchronization budget per device.
+//!
+//! The headline invariant is that **sharding is invisible to
+//! scheduling**: the wrapper never changes what the inner backend
+//! returns (logits, offsets, exec times) and never touches the paged
+//! [`KvCache`] beyond reads, so `EngineCore<ShardedBackend<SimBackend>>`
+//! produces byte-identical `ScenarioReport` fingerprints to
+//! `EngineCore<SimBackend>` on every seed for every `M` — which
+//! `tests/differential_backends.rs` proves over the whole matrix, and
+//! `tests/prop_shard.rs` strengthens by reconstructing the unsharded
+//! dense state from the per-shard slices after every step
+//! ([`ShardedBackend::verify_sharding`]).
+//!
+//! Budget model (all write-only — virtual time never feeds back into
+//! scheduling): per decode call with `b` rows over `M` shards, each
+//! shard runs `1/M` of the attention sweep
+//! ([`crate::hwmodel::attention_decode_time`], async-unified softmax)
+//! and a vocab-sliced logits GEMM
+//! ([`crate::hwmodel::gemm_time`], flat ImplB over `ceil(V/M)`
+//! columns); the collectives move `(M-1)·E·4` bytes per row for the
+//! attention all-gather (`E` = elements per token column) and
+//! `2·(M-1)·V·4` bytes per row for the ring all-reduce of logits, plus
+//! a per-hop link latency. `M = 1` runs no collectives at all.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::time::Duration;
+
+use crate::batching::{Admission, DecodeBatch};
+use crate::config::EngineConfig;
+use crate::core::{Backend, DecodeRun, LaneInput, PrefillRun};
+use crate::dataflow::ImplKind;
+use crate::error::{Error, Result};
+use crate::hwmodel::{
+    a100, attention_decode_time, attention_prefill_time, gemm_time, GpuProfile, SoftmaxScheme,
+};
+use crate::kvcache::{KvCache, KvGeometry, SeqId};
+use crate::metrics::EngineMetrics;
+use crate::router::Sequence;
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+
+/// The element range of each token's K/V column owned by shard `s` of
+/// `shards`: the balanced contiguous partition of `[0, te)` (low shards
+/// absorb the remainder). Ranges tile the column exactly:
+/// `slice_range(te, m, s).1 == slice_range(te, m, s + 1).0`.
+pub fn slice_range(te: usize, shards: usize, s: usize) -> (usize, usize) {
+    (s * te / shards, (s + 1) * te / shards)
+}
+
+/// Per-shard link/compute budget (LIMINAL-style): every lane is one
+/// `gpu`, lanes talk over links of `link_bw` bytes/s with
+/// `link_latency_s` per ring hop. Purely descriptive — the budget
+/// shapes [`ShardMetrics`] virtual times, never scheduling.
+#[derive(Debug, Clone)]
+pub struct ShardBudget {
+    /// The device model every lane runs on.
+    pub gpu: GpuProfile,
+    /// Inter-shard link bandwidth in bytes/s (NVLink-class default).
+    pub link_bw: f64,
+    /// Per-hop link latency in seconds, charged per ring step.
+    pub link_latency_s: f64,
+}
+
+impl Default for ShardBudget {
+    fn default() -> Self {
+        ShardBudget {
+            gpu: a100(),
+            link_bw: 300.0e9,
+            link_latency_s: 5.0e-6,
+        }
+    }
+}
+
+/// Per-lane counters inside [`ShardMetrics`]: the hook-driving record
+/// (every core hook fires once per lane) plus the lane's mirrored KV
+/// footprint and owned element range.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardLaneMetrics {
+    /// First element of this lane's token-column slice.
+    pub elems_lo: u64,
+    /// One past the last element of this lane's token-column slice.
+    pub elems_hi: u64,
+    /// `on_batch_join` calls driven through this lane.
+    pub joins: u64,
+    /// `on_batch_leave` calls driven through this lane.
+    pub leaves: u64,
+    /// `on_pause` calls driven through this lane.
+    pub pauses: u64,
+    /// `on_resume` calls driven through this lane.
+    pub resumes: u64,
+    /// Decode rows this lane processed (identical across lanes — every
+    /// lane sees the whole batch).
+    pub decode_rows: u64,
+    /// K elements currently mirrored on this lane (V mirrors the same
+    /// count again).
+    pub kv_elems: u64,
+}
+
+/// Collective and budget accounting for a [`ShardedBackend`]. All
+/// counters are exact functions of the observed batch shapes (see
+/// `tests/prop_shard.rs` for the analytic formulas); the `_s` times are
+/// modeled virtual seconds on the [`ShardBudget`], accumulated in a
+/// fixed order so reports are byte-reproducible.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardMetrics {
+    /// The lane count `M`.
+    pub shards: u64,
+    /// Successful prefill calls.
+    pub prefills: u64,
+    /// Successful decode calls.
+    pub decode_calls: u64,
+    /// Decode rows summed over calls.
+    pub decode_rows: u64,
+    /// Attention-output all-gather operations (one per row; zero at
+    /// `M = 1`).
+    pub allgather_ops: u64,
+    /// Bytes moved by attention all-gathers.
+    pub allgather_bytes: u64,
+    /// Logits all-reduce operations (one per row; zero at `M = 1`).
+    pub allreduce_ops: u64,
+    /// Bytes moved by logits all-reduces (ring: `2·(M-1)·V·4` per row).
+    pub allreduce_bytes: u64,
+    /// Modeled per-shard critical-path compute time, all calls.
+    pub compute_s: f64,
+    /// Modeled collective (link) time, all calls.
+    pub collective_s: f64,
+    /// [`ShardMetrics::compute_s`] restricted to decode calls.
+    pub decode_compute_s: f64,
+    /// [`ShardMetrics::collective_s`] restricted to decode calls.
+    pub decode_collective_s: f64,
+    /// Per-lane counters, indexed by shard.
+    pub per_shard: Vec<ShardLaneMetrics>,
+}
+
+impl ShardMetrics {
+    fn new(shards: usize) -> Self {
+        ShardMetrics {
+            shards: shards as u64,
+            per_shard: vec![ShardLaneMetrics::default(); shards],
+            ..ShardMetrics::default()
+        }
+    }
+
+    /// Stats-snapshot rendering. The `per_shard` object is keyed by
+    /// shard index, so [`crate::obs::prometheus_text`] renders one
+    /// labeled gauge family per numeric lane field
+    /// (`fdpp_shard_<field>{shard="s"}`).
+    pub fn to_json(&self) -> Json {
+        let per_shard = Json::Obj(
+            self.per_shard
+                .iter()
+                .enumerate()
+                .map(|(s, l)| {
+                    (
+                        s.to_string(),
+                        Json::obj(vec![
+                            ("elems_lo", Json::Num(l.elems_lo as f64)),
+                            ("elems_hi", Json::Num(l.elems_hi as f64)),
+                            ("joins", Json::Num(l.joins as f64)),
+                            ("leaves", Json::Num(l.leaves as f64)),
+                            ("pauses", Json::Num(l.pauses as f64)),
+                            ("resumes", Json::Num(l.resumes as f64)),
+                            ("decode_rows", Json::Num(l.decode_rows as f64)),
+                            ("kv_elems", Json::Num(l.kv_elems as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("shard_count", Json::Num(self.shards as f64)),
+            ("prefills", Json::Num(self.prefills as f64)),
+            ("decode_calls", Json::Num(self.decode_calls as f64)),
+            ("decode_rows", Json::Num(self.decode_rows as f64)),
+            ("allgather_ops", Json::Num(self.allgather_ops as f64)),
+            ("allgather_bytes", Json::Num(self.allgather_bytes as f64)),
+            ("allreduce_ops", Json::Num(self.allreduce_ops as f64)),
+            ("allreduce_bytes", Json::Num(self.allreduce_bytes as f64)),
+            ("compute_ms", Json::Num(self.compute_s * 1e3)),
+            ("collective_ms", Json::Num(self.collective_s * 1e3)),
+            ("decode_compute_ms", Json::Num(self.decode_compute_s * 1e3)),
+            (
+                "decode_collective_ms",
+                Json::Num(self.decode_collective_s * 1e3),
+            ),
+            ("per_shard", per_shard),
+        ])
+    }
+}
+
+/// One per-lane hook event ([`ShardedBackend::take_hook_trace`]): for
+/// every core-level hook the wrapper records `M` events, shards
+/// ascending, so a lockstep test can pin the exact per-lane call order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardHook {
+    /// A prefill ran for `id`.
+    Prefill { shard: usize, id: SeqId },
+    /// `id` joined the decode batch on `lane`.
+    Join { shard: usize, id: SeqId, lane: usize },
+    /// A decode call covered `rows` lanes.
+    Decode { shard: usize, rows: usize },
+    /// `id` left the decode batch (`shrank`: the bucket shrank).
+    Leave { shard: usize, id: SeqId, shrank: bool },
+    /// A sequence was parked by stream backpressure.
+    Pause { shard: usize },
+    /// A parked sequence rejoined the batch on `lane`.
+    Resume { shard: usize, lane: usize },
+}
+
+impl ShardHook {
+    /// The lane this event was recorded for.
+    pub fn shard(&self) -> usize {
+        match self {
+            ShardHook::Prefill { shard, .. }
+            | ShardHook::Join { shard, .. }
+            | ShardHook::Decode { shard, .. }
+            | ShardHook::Leave { shard, .. }
+            | ShardHook::Pause { shard }
+            | ShardHook::Resume { shard, .. } => *shard,
+        }
+    }
+
+    /// This event re-addressed to another lane (group-shape checks in
+    /// the lockstep test: `hooks[i + s] == hooks[i].at_shard(s)`).
+    pub fn at_shard(&self, shard: usize) -> ShardHook {
+        let mut h = self.clone();
+        match &mut h {
+            ShardHook::Prefill { shard: s, .. }
+            | ShardHook::Join { shard: s, .. }
+            | ShardHook::Decode { shard: s, .. }
+            | ShardHook::Leave { shard: s, .. }
+            | ShardHook::Pause { shard: s }
+            | ShardHook::Resume { shard: s, .. } => *s = shard,
+        }
+        h
+    }
+}
+
+/// Per-sequence per-shard dense KV mirror: token `t` of shard `s`
+/// occupies `k[s][t*w..(t+1)*w]` where `w` is the lane's slice width.
+struct SeqMirror {
+    len: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+/// A compute backend split across `M` simulated tensor-parallel lanes.
+/// See the module docs for the partition, the collectives, and the
+/// invisibility invariant.
+pub struct ShardedBackend<B: Backend> {
+    inner: B,
+    shards: usize,
+    budget: ShardBudget,
+    /// Token-column element count, latched from the first KV-bearing
+    /// hook (fills the per-lane `elems_lo/hi` ranges).
+    te: Option<usize>,
+    /// Per-shard dense mirrors of every batched sequence. Entries for
+    /// sequences the core retires without a backend hook (a paused
+    /// victim of admission relief gets no `on_batch_leave`) are pruned
+    /// lazily at the next KV-bearing hook.
+    mirrors: BTreeMap<SeqId, SeqMirror>,
+    metrics: ShardMetrics,
+    /// Opt-in per-lane hook trace, interior-mutable so integration
+    /// tests can arm and drain it through the core's read-only
+    /// [`crate::core::EngineCore::backend`] accessor.
+    hook_trace: RefCell<Option<Vec<ShardHook>>>,
+}
+
+impl<B: Backend> ShardedBackend<B> {
+    /// Wrap `inner` across `shards` lanes under the default
+    /// [`ShardBudget`]. Panics if `shards == 0`.
+    pub fn new(inner: B, shards: usize) -> Self {
+        Self::with_budget(inner, shards, ShardBudget::default())
+    }
+
+    /// Like [`ShardedBackend::new`] with an explicit budget.
+    pub fn with_budget(inner: B, shards: usize, budget: ShardBudget) -> Self {
+        assert!(shards >= 1, "a sharded backend needs at least one lane");
+        ShardedBackend {
+            inner,
+            shards,
+            budget,
+            te: None,
+            mirrors: BTreeMap::new(),
+            metrics: ShardMetrics::new(shards),
+            hook_trace: RefCell::new(None),
+        }
+    }
+
+    /// The lane count `M`.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// Collective/budget accounting so far.
+    pub fn shard_metrics(&self) -> &ShardMetrics {
+        &self.metrics
+    }
+
+    /// [`ShardMetrics::to_json`] of the current counters.
+    pub fn stats_json(&self) -> Json {
+        self.metrics.to_json()
+    }
+
+    /// Whether `id` currently has a per-shard mirror (every batched or
+    /// parked sequence must; `tests/prop_shard.rs` asserts it).
+    pub fn is_mirrored(&self, id: SeqId) -> bool {
+        self.mirrors.contains_key(&id)
+    }
+
+    /// Start recording per-lane hook events (drained with
+    /// [`ShardedBackend::take_hook_trace`]).
+    pub fn enable_hook_trace(&self) {
+        *self.hook_trace.borrow_mut() = Some(Vec::new());
+    }
+
+    /// Drain the recorded hook events (empty when tracing is off).
+    pub fn take_hook_trace(&self) -> Vec<ShardHook> {
+        self.hook_trace
+            .borrow_mut()
+            .as_mut()
+            .map(std::mem::take)
+            .unwrap_or_default()
+    }
+
+    /// Reconstruct every mirrored sequence's dense state by
+    /// concatenating its per-shard slices and compare element-exact
+    /// against the paged store. Mirrors whose sequence already left the
+    /// store (retired without a backend hook, awaiting lazy pruning)
+    /// are skipped; present ones must match byte for byte.
+    pub fn verify_sharding(&self, kv: &KvCache) -> std::result::Result<(), String> {
+        let te = kv.geometry().token_elems();
+        let mut kcol = vec![0.0f32; te];
+        let mut vcol = vec![0.0f32; te];
+        for (&id, m) in &self.mirrors {
+            let Some(len) = kv.seq_len(id) else {
+                continue;
+            };
+            if m.len != len {
+                return Err(format!(
+                    "seq {id}: mirror holds {} tokens but the store holds {len}",
+                    m.len
+                ));
+            }
+            for pos in 0..len {
+                kv.read_token(id, pos, &mut kcol, &mut vcol)
+                    .map_err(|e| format!("seq {id} pos {pos}: {e}"))?;
+                for s in 0..self.shards {
+                    let (lo, hi) = slice_range(te, self.shards, s);
+                    let w = hi - lo;
+                    if m.k[s][pos * w..(pos + 1) * w] != kcol[lo..hi] {
+                        return Err(format!(
+                            "seq {id} pos {pos} shard {s}: K slice diverged from the store"
+                        ));
+                    }
+                    if m.v[s][pos * w..(pos + 1) * w] != vcol[lo..hi] {
+                        return Err(format!(
+                            "seq {id} pos {pos} shard {s}: V slice diverged from the store"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Latch the token-column width and fill the per-lane element
+    /// ranges on first contact with a KV geometry.
+    fn ensure_ranges(&mut self, te: usize) {
+        if self.te == Some(te) {
+            return;
+        }
+        self.te = Some(te);
+        for s in 0..self.shards {
+            let (lo, hi) = slice_range(te, self.shards, s);
+            self.metrics.per_shard[s].elems_lo = lo as u64;
+            self.metrics.per_shard[s].elems_hi = hi as u64;
+        }
+    }
+
+    /// Record one hook as `M` per-lane events, shards ascending.
+    fn record(&self, mk: impl Fn(usize) -> ShardHook) {
+        if let Some(t) = self.hook_trace.borrow_mut().as_mut() {
+            for s in 0..self.shards {
+                t.push(mk(s));
+            }
+        }
+    }
+
+    /// Drop `id`'s mirror, releasing its per-lane footprint.
+    fn drop_mirror(&mut self, id: SeqId) {
+        if let Some(m) = self.mirrors.remove(&id) {
+            for (s, ks) in m.k.iter().enumerate() {
+                let lane = &mut self.metrics.per_shard[s];
+                lane.kv_elems = lane.kv_elems.saturating_sub(ks.len() as u64);
+            }
+        }
+    }
+
+    /// Drop mirrors whose sequence no longer holds KV (retired through
+    /// a core path with no backend hook, e.g. a parked preemption
+    /// victim).
+    fn prune_mirrors(&mut self, kv: &KvCache) {
+        let stale: Vec<SeqId> = self
+            .mirrors
+            .keys()
+            .copied()
+            .filter(|&id| !kv.contains(id))
+            .collect();
+        for id in stale {
+            self.drop_mirror(id);
+        }
+    }
+
+    /// (Re)build `id`'s mirror from the paged store.
+    fn rebuild_mirror(&mut self, kv: &KvCache, id: SeqId) -> Result<()> {
+        let len = kv
+            .seq_len(id)
+            .ok_or_else(|| Error::KvCache(format!("mirror rebuild: unknown seq {id}")))?;
+        let te = kv.geometry().token_elems();
+        self.ensure_ranges(te);
+        let shards = self.shards;
+        let mut m = SeqMirror {
+            len: 0,
+            k: vec![Vec::new(); shards],
+            v: vec![Vec::new(); shards],
+        };
+        let mut kcol = vec![0.0f32; te];
+        let mut vcol = vec![0.0f32; te];
+        for pos in 0..len {
+            kv.read_token(id, pos, &mut kcol, &mut vcol)?;
+            for s in 0..shards {
+                let (lo, hi) = slice_range(te, shards, s);
+                m.k[s].extend_from_slice(&kcol[lo..hi]);
+                m.v[s].extend_from_slice(&vcol[lo..hi]);
+            }
+            m.len += 1;
+        }
+        self.drop_mirror(id);
+        for s in 0..shards {
+            let (lo, hi) = slice_range(te, shards, s);
+            self.metrics.per_shard[s].kv_elems += (len * (hi - lo)) as u64;
+        }
+        self.mirrors.insert(id, m);
+        Ok(())
+    }
+
+    /// Append the token the inner backend just wrote at `pos` to `id`'s
+    /// mirror; falls back to a full rebuild if the mirror is missing or
+    /// out of sync (defensive — never expected on the sim paths).
+    fn append_mirror_token(&mut self, kv: &KvCache, id: SeqId, pos: usize) -> Result<()> {
+        let in_sync = self.mirrors.get(&id).map(|m| m.len == pos).unwrap_or(false);
+        if !in_sync {
+            return self.rebuild_mirror(kv, id);
+        }
+        let te = kv.geometry().token_elems();
+        let mut kcol = vec![0.0f32; te];
+        let mut vcol = vec![0.0f32; te];
+        kv.read_token(id, pos, &mut kcol, &mut vcol)?;
+        let shards = self.shards;
+        let mirror = self.mirrors.get_mut(&id).expect("mirror checked in sync");
+        for s in 0..shards {
+            let (lo, hi) = slice_range(te, shards, s);
+            mirror.k[s].extend_from_slice(&kcol[lo..hi]);
+            mirror.v[s].extend_from_slice(&vcol[lo..hi]);
+            self.metrics.per_shard[s].kv_elems += (hi - lo) as u64;
+        }
+        mirror.len += 1;
+        Ok(())
+    }
+
+    /// Collective accounting for `rows` result rows: all-gather of the
+    /// attention outputs, ring all-reduce of the logits partials.
+    /// Returns the modeled link time; `M = 1` moves nothing.
+    fn collectives(&mut self, te: usize, vocab: usize, rows: u64) -> f64 {
+        let m = self.shards as u64;
+        if m <= 1 {
+            return 0.0;
+        }
+        let ag_bytes = rows * (m - 1) * te as u64 * 4;
+        let ar_bytes = rows * 2 * (m - 1) * vocab as u64 * 4;
+        self.metrics.allgather_ops += rows;
+        self.metrics.allgather_bytes += ag_bytes;
+        self.metrics.allreduce_ops += rows;
+        self.metrics.allreduce_bytes += ar_bytes;
+        (ag_bytes + ar_bytes) as f64 / self.budget.link_bw
+            + 2.0 * (m - 1) as f64 * self.budget.link_latency_s
+    }
+
+    /// Budget a successful prefill call (one result row).
+    fn account_prefill(&mut self, geo: &KvGeometry, vocab: usize, prompt_len: usize) {
+        let m = self.shards as f64;
+        self.metrics.prefills += 1;
+        let attn = attention_prefill_time(
+            &self.budget.gpu,
+            1,
+            geo.n_heads,
+            geo.head_dim,
+            prompt_len.max(1),
+            false,
+            2,
+        ) * geo.n_layers as f64;
+        let gemm = gemm_time(
+            &self.budget.gpu,
+            ImplKind::B,
+            1,
+            vocab.div_ceil(self.shards),
+            geo.n_heads * geo.head_dim,
+            2,
+        );
+        let comp = attn / m + gemm;
+        let sync = self.collectives(geo.token_elems(), vocab, 1);
+        self.metrics.compute_s += comp;
+        self.metrics.collective_s += sync;
+    }
+
+    /// Budget a successful decode call over `inputs`.
+    fn account_decode(&mut self, geo: &KvGeometry, vocab: usize, inputs: &[LaneInput]) {
+        let rows = inputs.len();
+        if rows == 0 {
+            return;
+        }
+        let kv_len = inputs.iter().map(|i| i.pos + 1).max().unwrap_or(1);
+        let m = self.shards as f64;
+        self.metrics.decode_calls += 1;
+        self.metrics.decode_rows += rows as u64;
+        for s in 0..self.shards {
+            self.metrics.per_shard[s].decode_rows += rows as u64;
+        }
+        let attn = attention_decode_time(
+            &self.budget.gpu,
+            rows,
+            geo.n_heads,
+            geo.head_dim,
+            kv_len,
+            SoftmaxScheme::AsyncUnified,
+            2,
+        ) * geo.n_layers as f64;
+        let gemm = gemm_time(
+            &self.budget.gpu,
+            ImplKind::B,
+            rows,
+            vocab.div_ceil(self.shards),
+            geo.n_heads * geo.head_dim,
+            2,
+        );
+        let comp = attn / m + gemm;
+        let sync = self.collectives(geo.token_elems(), vocab, rows as u64);
+        self.metrics.compute_s += comp;
+        self.metrics.collective_s += sync;
+        self.metrics.decode_compute_s += comp;
+        self.metrics.decode_collective_s += sync;
+    }
+}
+
+impl<B: Backend> Backend for ShardedBackend<B> {
+    type PrefillArtifact = B::PrefillArtifact;
+
+    fn geometry(&self, cfg: &EngineConfig) -> KvGeometry {
+        self.inner.geometry(cfg)
+    }
+
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn validate_prompt(&self, cfg: &EngineConfig, prompt_len: usize) -> Result<()> {
+        self.inner.validate_prompt(cfg, prompt_len)
+    }
+
+    fn on_step_start(&mut self, clock: &Clock) {
+        self.inner.on_step_start(clock);
+    }
+
+    fn prefill(
+        &mut self,
+        cfg: &EngineConfig,
+        kv: &mut KvCache,
+        seq: &Sequence,
+        matched_tokens: usize,
+        clock: &Clock,
+    ) -> Result<PrefillRun<B::PrefillArtifact>> {
+        self.prune_mirrors(kv);
+        let run = self.inner.prefill(cfg, kv, seq, matched_tokens, clock)?;
+        let geo = kv.geometry();
+        self.ensure_ranges(geo.token_elems());
+        let vocab = self.inner.vocab();
+        self.account_prefill(&geo, vocab, seq.prompt.len());
+        self.record(|s| ShardHook::Prefill {
+            shard: s,
+            id: seq.id,
+        });
+        Ok(run)
+    }
+
+    fn on_batch_join(
+        &mut self,
+        kv: &mut KvCache,
+        metrics: &mut EngineMetrics,
+        id: SeqId,
+        admission: Admission,
+        artifact: Self::PrefillArtifact,
+        clock: &Clock,
+    ) -> Result<Duration> {
+        let lane = admission.lane;
+        let d = self
+            .inner
+            .on_batch_join(kv, metrics, id, admission, artifact, clock)?;
+        self.prune_mirrors(kv);
+        self.rebuild_mirror(kv, id)?;
+        for s in 0..self.shards {
+            self.metrics.per_shard[s].joins += 1;
+        }
+        self.record(|s| ShardHook::Join { shard: s, id, lane });
+        Ok(d)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn decode(
+        &mut self,
+        cfg: &EngineConfig,
+        kv: &mut KvCache,
+        seqs: &HashMap<SeqId, Sequence>,
+        batch: &DecodeBatch,
+        inputs: &[LaneInput],
+        metrics: &mut EngineMetrics,
+        clock: &Clock,
+    ) -> Result<DecodeRun> {
+        self.prune_mirrors(kv);
+        let run = self
+            .inner
+            .decode(cfg, kv, seqs, batch, inputs, metrics, clock)?;
+        for inp in inputs {
+            self.append_mirror_token(kv, inp.id, inp.pos)?;
+        }
+        let geo = kv.geometry();
+        self.ensure_ranges(geo.token_elems());
+        let vocab = self.inner.vocab();
+        self.account_decode(&geo, vocab, inputs);
+        self.record(|s| ShardHook::Decode {
+            shard: s,
+            rows: inputs.len(),
+        });
+        Ok(run)
+    }
+
+    fn on_batch_leave(&mut self, kv: &mut KvCache, id: SeqId, shrank: bool) -> Result<()> {
+        self.inner.on_batch_leave(kv, id, shrank)?;
+        self.drop_mirror(id);
+        for s in 0..self.shards {
+            self.metrics.per_shard[s].leaves += 1;
+        }
+        self.record(|s| ShardHook::Leave {
+            shard: s,
+            id,
+            shrank,
+        });
+        Ok(())
+    }
+
+    fn on_pause(&mut self, kv: &mut KvCache) -> Result<()> {
+        self.inner.on_pause(kv)?;
+        for s in 0..self.shards {
+            self.metrics.per_shard[s].pauses += 1;
+        }
+        self.record(|s| ShardHook::Pause { shard: s });
+        Ok(())
+    }
+
+    fn on_resume(&mut self, kv: &mut KvCache, admission: &Admission) -> Result<()> {
+        self.inner.on_resume(kv, admission)?;
+        for s in 0..self.shards {
+            self.metrics.per_shard[s].resumes += 1;
+        }
+        let lane = admission.lane;
+        self.record(|s| ShardHook::Resume { shard: s, lane });
+        Ok(())
+    }
+
+    fn publishable_tokens(&self, kv: &KvCache, seq: &Sequence) -> Vec<u32> {
+        self.inner.publishable_tokens(kv, seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{GenRequest, InferenceEngine};
+    use crate::core::EngineCore;
+    use crate::sampling::SamplingParams;
+    use crate::simengine::{SimBackend, SimEngine, SimSpec};
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            kv_block_tokens: 8,
+            kv_total_blocks: 128,
+            max_new_tokens: 16,
+            prefix_cache: true,
+            ..EngineConfig::default()
+        }
+    }
+
+    fn sharded(m: usize) -> EngineCore<ShardedBackend<SimBackend>> {
+        EngineCore::with_backend(
+            ShardedBackend::new(SimBackend::new(SimSpec::default()), m),
+            cfg(),
+            Clock::manual(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn slice_ranges_tile_the_column_exactly() {
+        for te in [1usize, 5, 16, 33, 64] {
+            for m in 1..=9usize {
+                let mut covered = 0;
+                for s in 0..m {
+                    let (lo, hi) = slice_range(te, m, s);
+                    assert!(lo <= hi);
+                    if s > 0 {
+                        assert_eq!(lo, slice_range(te, m, s - 1).1, "te={te} m={m} s={s}");
+                    }
+                    covered += hi - lo;
+                }
+                assert_eq!(covered, te, "te={te} m={m}");
+                assert_eq!(slice_range(te, m, 0).0, 0);
+                assert_eq!(slice_range(te, m, m - 1).1, te);
+            }
+        }
+    }
+
+    #[test]
+    fn m1_is_transparent_and_runs_no_collectives() {
+        let mut a = sharded(1);
+        let mut b = SimEngine::new(cfg(), SimSpec::default()).unwrap();
+        let ta = a
+            .generate_text("shard transparency probe", 12, SamplingParams::default())
+            .unwrap();
+        let tb = b
+            .generate_text("shard transparency probe", 12, SamplingParams::default())
+            .unwrap();
+        assert_eq!(ta, tb, "M=1 must be bit-transparent");
+        assert_eq!(a.metrics.tokens_generated, b.metrics.tokens_generated);
+        let sm = a.backend().shard_metrics();
+        assert_eq!(sm.allgather_ops, 0, "M=1 runs no collectives");
+        assert_eq!(sm.allreduce_bytes, 0);
+        assert_eq!(sm.collective_s, 0.0);
+        assert!(sm.compute_s > 0.0, "budget accounting still runs");
+    }
+
+    #[test]
+    fn collectives_match_the_analytic_formula() {
+        let mut e = sharded(4);
+        for p in ["alpha", "beta prompt", "gamma gamma gamma"] {
+            e.submit(GenRequest::text(p).max_new_tokens(10)).unwrap();
+        }
+        e.run_to_completion().unwrap();
+        e.backend().verify_sharding(e.kv()).unwrap();
+        let sm = e.backend().shard_metrics();
+        let expected = e.metrics.prefill_steps + e.metrics.decode_rows;
+        assert!(expected > 0);
+        assert_eq!(sm.allgather_ops, expected);
+        assert_eq!(sm.allreduce_ops, expected);
+        let te = e.geometry().token_elems() as u64;
+        let vocab = SimSpec::default().vocab as u64;
+        assert_eq!(sm.allgather_bytes, expected * 3 * te * 4);
+        assert_eq!(sm.allreduce_bytes, expected * 2 * 3 * vocab * 4);
+        assert!(sm.decode_collective_s > 0.0);
+        assert!(
+            e.backend().mirrors.is_empty(),
+            "every retired sequence must release its mirror"
+        );
+    }
+
+    #[test]
+    fn verify_sharding_catches_a_corrupted_slice() {
+        let mut e = sharded(2);
+        e.submit(GenRequest::text("corruption probe prompt").max_new_tokens(12))
+            .unwrap();
+        for _ in 0..4 {
+            e.step().unwrap();
+        }
+        assert!(
+            !e.backend.mirrors.is_empty(),
+            "a decoding sequence must be mirrored"
+        );
+        e.backend().verify_sharding(e.kv()).unwrap();
+        {
+            let m = e.backend.mirrors.values_mut().next().unwrap();
+            m.k[1][0] += 0.5;
+        }
+        assert!(
+            e.backend().verify_sharding(e.kv()).is_err(),
+            "a flipped element must fail reconstruction"
+        );
+    }
+
+    #[test]
+    fn hook_trace_groups_cover_lanes_in_order() {
+        let mut e = sharded(3);
+        e.backend().enable_hook_trace();
+        for p in ["hook order alpha", "hook order beta"] {
+            e.submit(GenRequest::text(p).max_new_tokens(6)).unwrap();
+        }
+        e.run_to_completion().unwrap();
+        let hooks = e.backend().take_hook_trace();
+        assert!(!hooks.is_empty());
+        assert_eq!(hooks.len() % 3, 0, "events come in whole per-lane groups");
+        let mut i = 0;
+        while i < hooks.len() {
+            for s in 0..3 {
+                assert_eq!(
+                    hooks[i + s],
+                    hooks[i].at_shard(s),
+                    "group at {i} must replicate one hook across lanes in order"
+                );
+            }
+            i += 3;
+        }
+        let saw_join = hooks.iter().any(|h| matches!(h, ShardHook::Join { .. }));
+        let saw_leave = hooks.iter().any(|h| matches!(h, ShardHook::Leave { .. }));
+        assert!(saw_join, "joins recorded");
+        assert!(saw_leave, "leaves recorded");
+    }
+
+    #[test]
+    fn shard_metrics_json_carries_per_lane_gauges() {
+        let mut e = sharded(2);
+        e.submit(GenRequest::text("json probe").max_new_tokens(4))
+            .unwrap();
+        e.run_to_completion().unwrap();
+        let j = e.backend().stats_json();
+        assert_eq!(j.get("shard_count").and_then(Json::as_f64), Some(2.0));
+        for key in ["allgather_ops", "allreduce_bytes", "decode_compute_ms"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        let lane0 = j.get("per_shard").and_then(|p| p.get("0")).unwrap();
+        assert!(lane0.get("joins").and_then(Json::as_f64).unwrap() >= 1.0);
+        let lo = lane0.get("elems_lo").and_then(Json::as_f64).unwrap();
+        let hi = lane0.get("elems_hi").and_then(Json::as_f64).unwrap();
+        assert_eq!(lo, 0.0);
+        assert_eq!(hi, 8.0, "16 elements over 2 lanes");
+    }
+}

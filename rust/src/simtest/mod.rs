@@ -75,6 +75,7 @@ use crate::core::{Backend, EngineCore, TraceEvent};
 use crate::fleet::Fleet;
 use crate::kvcache::SeqId;
 use crate::router::RequestRegistry;
+use crate::shard::ShardedBackend;
 use crate::simengine::{SimBackend, SimEngine, SimSpec};
 use crate::util::rng::{splitmix64, Rng};
 
@@ -997,6 +998,75 @@ pub fn run_replica_kill(seed: u64, n_replicas: usize) -> Result<ScenarioReport, 
     run_fleet_scenario(&scenario, fleet, Some((kill_step, replica)))
 }
 
+/// Run one seeded scenario on `EngineCore<ShardedBackend<SimBackend>>`
+/// with `shards` simulated tensor-parallel lanes. Sharding must be
+/// invisible to scheduling, so for every `shards` the report —
+/// fingerprint included — must equal [`run_scenario`]'s byte for byte;
+/// `tests/differential_backends.rs` asserts this over the seed matrix.
+pub fn run_scenario_sharded(seed: u64, shards: usize) -> Result<ScenarioReport, Violation> {
+    let scenario = generate_scenario(seed);
+    let engine = EngineCore::with_backend(
+        ShardedBackend::new(SimBackend::new(SimSpec::default()), shards),
+        scenario.cfg.clone(),
+        SimClock::manual(),
+    )
+    .map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("sharded engine construction failed: {e}"),
+    })?;
+    run_with_hook(&scenario, engine, &mut |_, _| {})
+}
+
+/// [`run_scenario_fleet`] over replicas whose backend is
+/// [`ShardedBackend<SimBackend>`] with `shards` lanes each — the
+/// composition the fleet layer must stay transparent to.
+pub fn run_scenario_fleet_sharded(
+    seed: u64,
+    n_replicas: usize,
+    shards: usize,
+) -> Result<ScenarioReport, Violation> {
+    let scenario = generate_scenario(seed);
+    let fleet = Fleet::sharded_sim(
+        scenario.cfg.clone(),
+        fleet_scenario_config(n_replicas),
+        SimSpec::default(),
+        shards,
+    )
+    .map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("sharded fleet construction failed: {e}"),
+    })?;
+    run_fleet_scenario(&scenario, fleet, None)
+}
+
+/// [`run_replica_kill`] over sharded replicas: the same seed-derived
+/// kill step and victim replica, `shards` lanes per replica. Panics if
+/// `n_replicas < 2`.
+pub fn run_replica_kill_sharded(
+    seed: u64,
+    n_replicas: usize,
+    shards: usize,
+) -> Result<ScenarioReport, Violation> {
+    assert!(n_replicas >= 2, "replica-kill scenarios need a survivor");
+    let scenario = generate_scenario(seed);
+    let fleet = Fleet::sharded_sim(
+        scenario.cfg.clone(),
+        fleet_scenario_config(n_replicas),
+        SimSpec::default(),
+        shards,
+    )
+    .map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("sharded fleet construction failed: {e}"),
+    })?;
+    let kill_step = 8 + (seed as usize % 24);
+    let replica = (seed as usize / 7) % n_replicas;
+    run_fleet_scenario(&scenario, fleet, Some((kill_step, replica)))
+}
+
 /// Per-event bookkeeping shared by every replica's trace drain —
 /// exactly the fold and oracle checks [`run_with_hook`] applies, kept
 /// free of fleet borrows so the caller can stamp violations with
@@ -1054,7 +1124,7 @@ impl FleetObs {
 
 /// Concatenated flight dumps of every live replica, for violation
 /// reports (a dead replica's recorder died with it).
-fn fleet_flight(fleet: &Fleet<SimBackend>, mut v: Violation) -> Violation {
+fn fleet_flight<B: Backend>(fleet: &Fleet<B>, mut v: Violation) -> Violation {
     let mut dump = String::new();
     for k in 0..fleet.n_replicas() {
         if let Some(core) = fleet.core(k) {
@@ -1078,9 +1148,9 @@ fn fleet_flight(fleet: &Fleet<SimBackend>, mut v: Violation) -> Violation {
 /// cancel, one step, trace-driven oracles, per-step invariants,
 /// termination), driving a [`Fleet`] instead of a bare core. `kill`
 /// optionally names `(step, replica)` to kill mid-run.
-fn run_fleet_scenario(
+fn run_fleet_scenario<B: Backend>(
     scenario: &Scenario,
-    mut fleet: Fleet<SimBackend>,
+    mut fleet: Fleet<B>,
     kill: Option<(usize, usize)>,
 ) -> Result<ScenarioReport, Violation> {
     let seed = scenario.seed;

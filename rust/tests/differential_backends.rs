@@ -1,4 +1,4 @@
-//! Backend equivalence: the same scripted worlds, two compute
+//! Backend equivalence: the same scripted worlds, three compute
 //! backends, byte-identical behavior.
 //!
 //! `EngineCore<SimBackend>` derives logits from the KV bytes stored in
@@ -15,14 +15,25 @@
 //!   sim's stored-bytes digest equals the stub's from-first-principles
 //!   digest on every logits row of every scenario).
 //!
+//! The third backend widens the matrix: `ShardedBackend<SimBackend>`
+//! at M∈{1,2,4} lanes must produce the *same* reports again — sharding
+//! is a pure partitioning, invisible to scheduling — and a per-lane
+//! hook-trace lockstep pins the exact order the wrapper drives each
+//! lane's join/leave/pause/resume bookkeeping.
+//!
 //! A divergence names the seed; replay it with
-//! `cargo run --example simtest -- --seed N`.
+//! `cargo run --example simtest -- --seed N` (add `--shards M` for the
+//! sharded run).
 
 use fdpp::api::{GenRequest, InferenceEngine};
 use fdpp::config::EngineConfig;
-use fdpp::core::StubEngine;
-use fdpp::simengine::{SimEngine, SimSpec};
-use fdpp::simtest::{generate_scenario, run_scenario, run_scenario_on, trace_fingerprint};
+use fdpp::core::{EngineCore, StubEngine};
+use fdpp::shard::{ShardHook, ShardedBackend};
+use fdpp::simengine::{SimBackend, SimEngine, SimSpec};
+use fdpp::simtest::{
+    generate_scenario, run_scenario, run_scenario_on, run_scenario_sharded, trace_fingerprint,
+};
+use fdpp::util::clock::Clock;
 
 /// The same fixed matrix CI runs for the sim-only oracle pass.
 const SEED_MATRIX: std::ops::RangeInclusive<u64> = 1..=24;
@@ -105,4 +116,118 @@ fn lockstep_traces_match_step_by_step() {
         sim.metrics.dedup_hits, stub.metrics.dedup_hits,
         "core-owned counters agree across backends"
     );
+}
+
+/// The widened matrix: every seed's report under the sharded sim
+/// backend must equal the plain sim backend's byte for byte, at every
+/// lane count — the "sharding is invisible to scheduling" headline.
+#[test]
+fn seed_matrix_fingerprints_are_shard_count_invariant() {
+    let mut diverged = Vec::new();
+    for seed in SEED_MATRIX {
+        let baseline = run_scenario(seed).expect("sim backend passes oracles");
+        for shards in [1usize, 2, 4] {
+            let sharded =
+                run_scenario_sharded(seed, shards).expect("sharded backend passes oracles");
+            if baseline != sharded {
+                eprintln!(
+                    "seed {seed} M={shards}: sim fp {:016x} != sharded fp {:016x}",
+                    baseline.fingerprint, sharded.fingerprint
+                );
+                diverged.push((seed, shards));
+            }
+        }
+    }
+    assert!(diverged.is_empty(), "diverging (seed, M): {diverged:?}");
+}
+
+/// Step a sharded engine in lockstep with a plain sim engine under a
+/// backpressure-heavy workload (tiny stream credit, periodic drains, so
+/// sequences park and resume), asserting identical core traces every
+/// step — then pin the per-lane hook order: the wrapper must drive
+/// every hook as one whole group of M events, lanes ascending, and the
+/// groups must include pauses and resumes.
+#[test]
+fn sharded_hook_trace_is_per_lane_lockstep() {
+    const M: usize = 3;
+    let cfg = EngineConfig {
+        kv_block_tokens: 8,
+        kv_total_blocks: 64,
+        max_new_tokens: 12,
+        prefix_cache: true,
+        stream_capacity: 2,
+        ..EngineConfig::default()
+    };
+    let spec = SimSpec::default();
+    let mut sim = SimEngine::new(cfg.clone(), spec).unwrap();
+    let mut sharded = EngineCore::with_backend(
+        ShardedBackend::new(SimBackend::new(spec), M),
+        cfg,
+        Clock::manual(),
+    )
+    .unwrap();
+    sim.enable_trace();
+    sharded.enable_trace();
+    sharded.backend().enable_hook_trace();
+
+    let prompts = [
+        "lockstep lane probe: alpha",
+        "lockstep lane probe: beta",
+        "lockstep lane probe: gamma",
+        "lockstep lane probe: delta",
+    ];
+    let mut sim_handles = Vec::new();
+    let mut sharded_handles = Vec::new();
+    for p in prompts {
+        let req = || GenRequest::text(p).max_new_tokens(10);
+        sim_handles.push(sim.submit(req()).unwrap());
+        sharded_handles.push(sharded.submit(req()).unwrap());
+    }
+    let mut step = 0;
+    while !(sim.is_idle() && sharded.is_idle()) {
+        assert!(step < 4_000, "lockstep must terminate");
+        if !sim.is_idle() {
+            sim.step().unwrap();
+        }
+        if !sharded.is_idle() {
+            sharded.step().unwrap();
+        }
+        // Drain only every fourth step: with credit 2 the streams fill
+        // in between, forcing pause/resume churn on both engines.
+        if step % 4 == 3 {
+            for h in &sim_handles {
+                while h.events.try_recv().is_ok() {}
+            }
+            for h in &sharded_handles {
+                while h.events.try_recv().is_ok() {}
+            }
+        }
+        let a = sim.take_trace();
+        let b = sharded.take_trace();
+        assert_eq!(a, b, "trace diverged at step {step}");
+        assert_eq!(trace_fingerprint(&a), trace_fingerprint(&b));
+        step += 1;
+    }
+
+    let hooks = sharded.backend().take_hook_trace();
+    assert!(!hooks.is_empty(), "the run must have driven hooks");
+    assert_eq!(hooks.len() % M, 0, "events come in whole per-lane groups");
+    let mut saw_pause = false;
+    let mut saw_resume = false;
+    let mut i = 0;
+    while i < hooks.len() {
+        assert_eq!(hooks[i].shard(), 0, "group at {i} must start at lane 0");
+        for s in 0..M {
+            assert_eq!(
+                hooks[i + s],
+                hooks[i].at_shard(s),
+                "group at {i} must replicate one hook across lanes in order"
+            );
+        }
+        saw_pause |= matches!(hooks[i], ShardHook::Pause { .. });
+        saw_resume |= matches!(hooks[i], ShardHook::Resume { .. });
+        i += M;
+    }
+    assert!(saw_pause, "backpressure must park at least one sequence");
+    assert!(saw_resume, "parked sequences must resume");
 }

@@ -9,7 +9,7 @@ use fdpp::api::{GenRequest, InferenceEngine};
 use fdpp::config::{EngineConfig, FleetConfig, RoutePolicy};
 use fdpp::fleet::{Fleet, ReplicaHealth};
 use fdpp::simengine::SimSpec;
-use fdpp::simtest::{run_replica_kill, run_scenario, run_scenario_fleet};
+use fdpp::simtest::{run_replica_kill, run_replica_kill_sharded, run_scenario, run_scenario_fleet};
 
 /// The same fixed matrix `sim_scenarios.rs` runs.
 const SEED_MATRIX: std::ops::RangeInclusive<u64> = 1..=24;
@@ -90,6 +90,40 @@ fn replica_kill_matrix_passes_all_oracles_and_reproduces() {
         }
     }
     assert!(failures.is_empty(), "failing (seed, n): {failures:?}");
+}
+
+/// Composition: a fleet of *sharded* replicas (N=2 replicas, M=2 lanes
+/// each) runs the replica-kill scenario under all five oracles, must
+/// reproduce byte-identically, and — because sharding is invisible to
+/// scheduling — must match the plain sim fleet's report byte for byte,
+/// `set_seq_id_base` re-basing and all.
+#[test]
+fn sharded_fleet_composes_under_kill_and_reproduces() {
+    let mut failures = Vec::new();
+    for seed in SEED_MATRIX {
+        match run_replica_kill_sharded(seed, 2, 2) {
+            Ok(a) => {
+                let b = run_replica_kill_sharded(seed, 2, 2).expect("second run passes");
+                assert_eq!(a, b, "seed {seed} must reproduce byte-identically");
+                let plain = run_replica_kill(seed, 2).expect("plain fleet passes");
+                if a != plain {
+                    eprintln!(
+                        "seed {seed}: sharded fleet fp {:016x} != plain fleet fp {:016x}",
+                        a.fingerprint, plain.fingerprint
+                    );
+                    failures.push(seed);
+                }
+            }
+            Err(v) => {
+                eprintln!("{v}");
+                failures.push(seed);
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "sharded fleet composition broken on seeds: {failures:?}"
+    );
 }
 
 /// Mid-stream kill at the engine-API level: partially streamed

@@ -1,0 +1,171 @@
+//! Property test for the sharded backend's headline invariant: at any
+//! point in any run, concatenating the per-shard KV slices reconstructs
+//! the unsharded dense state *exactly*.
+//!
+//! A seeded driver throws a random world at
+//! `EngineCore<ShardedBackend<SimBackend>>` — staggered arrivals,
+//! random cancels, clients that drain at different periods (so streams
+//! fill, park, and resume), and a KV pool tight enough to preempt —
+//! and after **every** step asks the wrapper to verify that every
+//! mirrored sequence's per-shard slices equal the paged store element
+//! for element ([`fdpp::shard::ShardedBackend::verify_sharding`]), and
+//! that every live sequence holding KV is mirrored at all.
+//!
+//! At the end of each run the collective counters must match the
+//! analytic formula for the observed batch shapes: one all-gather and
+//! one all-reduce per result row (prefills + decode rows), with byte
+//! volumes `(M-1)·E·4` and `2·(M-1)·V·4` per row — and exactly zero
+//! at M=1.
+
+use fdpp::api::{GenRequest, InferenceEngine, SubmissionHandle};
+use fdpp::config::EngineConfig;
+use fdpp::core::EngineCore;
+use fdpp::shard::ShardedBackend;
+use fdpp::simengine::{SimBackend, SimSpec};
+use fdpp::util::clock::Clock;
+use fdpp::util::rng::Rng;
+
+struct Client {
+    arrive: usize,
+    cancel_at: Option<usize>,
+    drain_mod: usize,
+    prompt: String,
+    budget: usize,
+    handle: Option<SubmissionHandle>,
+    submitted: bool,
+}
+
+fn run_reconstruction(seed: u64, shards: usize) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let cfg = EngineConfig {
+        kv_block_tokens: 8,
+        kv_total_blocks: 64,
+        max_new_tokens: 12,
+        max_running: 4,
+        prefix_cache: true,
+        stream_capacity: 4,
+        seed,
+        ..EngineConfig::default()
+    };
+    let mut e = EngineCore::with_backend(
+        ShardedBackend::new(SimBackend::new(SimSpec::default()), shards),
+        cfg,
+        Clock::manual(),
+    )
+    .unwrap();
+
+    let n_clients = 8 + rng.gen_range(0, 9);
+    let mut clients: Vec<Client> = (0..n_clients)
+        .map(|i| {
+            let words = 1 + rng.gen_range(0, 10);
+            let mut prompt = format!("prop shard {seed} client {i}");
+            for w in 0..words {
+                prompt.push_str(&format!(" word{w}"));
+            }
+            Client {
+                arrive: rng.gen_range(0, 20),
+                cancel_at: if rng.gen_range(0, 4) == 0 {
+                    Some(rng.gen_range(0, 40))
+                } else {
+                    None
+                },
+                drain_mod: 1 + rng.gen_range(0, 4),
+                prompt,
+                budget: 2 + rng.gen_range(0, 11),
+                handle: None,
+                submitted: false,
+            }
+        })
+        .collect();
+
+    let mut step = 0usize;
+    loop {
+        assert!(step < 5_000, "seed {seed} M={shards}: prop driver wedged");
+        for c in clients.iter_mut() {
+            if !c.submitted && c.arrive <= step {
+                let req = GenRequest::text(&c.prompt).max_new_tokens(c.budget);
+                c.handle = Some(e.submit(req).unwrap());
+                c.submitted = true;
+            }
+        }
+        for c in clients.iter() {
+            if let Some(h) = &c.handle {
+                if c.cancel_at == Some(step) {
+                    let _ = e.cancel(h.id);
+                }
+                // Every client eventually drains (drain_mod <= 4), so
+                // parked streams always resume and the run terminates.
+                if step % c.drain_mod == 0 {
+                    while h.events.try_recv().is_ok() {}
+                }
+            }
+        }
+        if !e.is_idle() {
+            e.step().unwrap();
+        }
+
+        // The reconstruction oracle, after every step.
+        if let Err(msg) = e.backend().verify_sharding(e.kv()) {
+            panic!("seed {seed} M={shards} step {step}: {msg}");
+        }
+        for ls in e.audit().live {
+            if e.kv().seq_len(ls.id).is_some() {
+                assert!(
+                    e.backend().is_mirrored(ls.id),
+                    "seed {seed} M={shards} step {step}: live seq {} has KV but no mirror",
+                    ls.id
+                );
+            }
+        }
+
+        let all_submitted = clients.iter().all(|c| c.submitted);
+        if all_submitted && e.is_idle() {
+            break;
+        }
+        step += 1;
+    }
+
+    // Collective counts are an exact function of the observed batch
+    // shapes: one all-gather + one all-reduce per result row.
+    let m = &e.metrics;
+    let sm = e.backend().shard_metrics();
+    let rows = m.prefill_steps + m.decode_rows;
+    assert!(rows > 0, "seed {seed} M={shards}: the run must do work");
+    let expected = if shards > 1 { rows } else { 0 };
+    assert_eq!(
+        sm.allgather_ops, expected,
+        "seed {seed} M={shards}: all-gather count"
+    );
+    assert_eq!(
+        sm.allreduce_ops, expected,
+        "seed {seed} M={shards}: all-reduce count"
+    );
+    let te = e.geometry().token_elems() as u64;
+    let vocab = SimSpec::default().vocab as u64;
+    let lanes = shards as u64;
+    if shards > 1 {
+        assert_eq!(
+            sm.allgather_bytes,
+            expected * (lanes - 1) * te * 4,
+            "seed {seed} M={shards}: all-gather bytes"
+        );
+        assert_eq!(
+            sm.allreduce_bytes,
+            expected * 2 * (lanes - 1) * vocab * 4,
+            "seed {seed} M={shards}: all-reduce bytes"
+        );
+    } else {
+        assert_eq!(sm.allgather_bytes, 0, "M=1 moves nothing");
+        assert_eq!(sm.allreduce_bytes, 0, "M=1 moves nothing");
+    }
+}
+
+#[test]
+fn per_shard_slices_reconstruct_dense_state_for_random_worlds() {
+    for seed in 101u64..=112 {
+        let shards = 1 + (seed as usize % 5);
+        run_reconstruction(seed, shards);
+    }
+    // One deliberately over-partitioned run: more lanes than heads.
+    run_reconstruction(131, 8);
+}
