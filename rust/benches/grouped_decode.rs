@@ -1,0 +1,78 @@
+//! Prefix-shared grouped decode: the pinned Zipf shared-prefix
+//! workload drained twice on the deterministic sim engine — grouping
+//! off, then on — reporting output fingerprints and attention-reuse
+//! accounting (`BENCH_grouped_decode.json`).
+//!
+//! Runs [`fdpp::bench_support::grouped_decode_report`] twice at the
+//! pinned seed, asserts the two reports are byte-identical (virtual
+//! clock, seeded workload — regressions show up as a *changed*
+//! report, never as noise), asserts the two arms produce identical
+//! output fingerprints (grouping reuses compute, it never changes a
+//! token), asserts the grouped arm saves at least 30% of the decode
+//! attention FLOPs, prints the comparison, and writes
+//! `BENCH_grouped_decode.json` to the working directory.
+//!
+//!   cargo bench --bench grouped_decode
+
+use fdpp::bench_support::{banner, grouped_decode_report, row, GROUPED_DECODE_SEED};
+use fdpp::util::json::Json;
+
+fn main() {
+    banner(
+        "BENCH_grouped_decode",
+        "prefix-shared grouped decode: identical outputs, fewer attention FLOPs",
+    );
+    let report = grouped_decode_report(GROUPED_DECODE_SEED).expect("harness runs");
+    let again = grouped_decode_report(GROUPED_DECODE_SEED).expect("harness runs");
+    let text = report.to_string();
+    assert_eq!(
+        text,
+        again.to_string(),
+        "grouped decode report must be byte-identical across runs of the same seed"
+    );
+
+    let arm = |key: &str, field: &str| {
+        report
+            .get(key)
+            .and_then(|j| j.get(field))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("report missing {key}.{field}"))
+    };
+    row("", &["ungrouped".into(), "grouped".into()]);
+    for field in [
+        "steps",
+        "tokens_generated",
+        "groups_formed",
+        "attn_positions_total",
+        "attn_positions_saved",
+        "attn_flops_saved",
+    ] {
+        row(
+            field,
+            &[
+                format!("{:.0}", arm("ungrouped", field)),
+                format!("{:.0}", arm("grouped", field)),
+            ],
+        );
+    }
+
+    assert_eq!(
+        report.get("fingerprints_match").and_then(Json::as_bool),
+        Some(true),
+        "grouped decode must be byte-identical to the per-sequence path"
+    );
+    let reduction = report
+        .get("attn_flop_reduction")
+        .and_then(Json::as_f64)
+        .expect("report carries attn_flop_reduction");
+    row("attn_flop_reduction", &[format!("{:.1}%", reduction * 100.0)]);
+    assert!(
+        reduction >= 0.30,
+        "grouped decode must save at least 30% of decode attention FLOPs \
+         on the shared-prefix workload, got {reduction:.3}"
+    );
+
+    std::fs::write("BENCH_grouped_decode.json", format!("{text}\n"))
+        .expect("write BENCH_grouped_decode.json");
+    println!("\nwrote BENCH_grouped_decode.json ({} bytes)", text.len() + 1);
+}

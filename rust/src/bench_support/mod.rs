@@ -16,7 +16,7 @@ use crate::simengine::{SimBackend, SimEngine, SimSpec, SIM_STEP};
 use crate::util::clock::Clock;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::workload::{shared_prefix_trace, SharedPrefixSpec};
+use crate::workload::{shared_prefix_trace, tenant_prompts, SharedPrefixSpec};
 use crate::{Error, Result};
 
 /// Print a header band for one reproduced figure/table.
@@ -469,6 +469,169 @@ pub fn sharded_decode_report(seed: u64) -> Result<Json> {
     ]))
 }
 
+// ---------------------------------------------------------------------
+// Grouped-decode harness (BENCH_grouped_decode.json)
+// ---------------------------------------------------------------------
+
+/// The pinned seed `benches/grouped_decode.rs` and the CI
+/// `perf-trajectory` job run. Changing it invalidates the grouped
+/// decode history, so don't.
+pub const GROUPED_DECODE_SEED: u64 = 2408;
+
+fn grouped_decode_spec(seed: u64) -> SharedPrefixSpec {
+    SharedPrefixSpec {
+        seed,
+        ..SharedPrefixSpec::default()
+    }
+}
+
+/// FNV-1a fold for the output fingerprint (stable, dependency-free).
+fn fp_fold(acc: u64, x: u64) -> u64 {
+    (acc ^ x).wrapping_mul(0x100_0000_01b3)
+}
+
+/// One arm of the grouped-decode comparison: warm every tenant's
+/// system prompt into the prefix cache (one retirement per tenant
+/// publishes its blocks — the steady serving state), then drain the
+/// Zipf shared-prefix workload with grouping on or off. Reports the
+/// concatenated output-token fingerprint next to the attention-reuse
+/// accounting; `attn_positions_total` excludes the warm phase so both
+/// arms divide savings by the same measured span.
+fn grouped_arm_run(seed: u64, grouped: bool) -> Result<Json> {
+    let cfg = EngineConfig {
+        kv_block_tokens: 8,
+        kv_total_blocks: 1024,
+        max_new_tokens: 16,
+        max_running: 16,
+        prefix_cache: true,
+        grouped_decode: grouped,
+        seed,
+        ..EngineConfig::default()
+    };
+    let spec = grouped_decode_spec(seed);
+    let mut engine = SimEngine::new(cfg, SimSpec::default())?;
+    for prompt in tenant_prompts(&spec) {
+        let h = engine.submit(GenRequest::text(&prompt).max_new_tokens(2))?;
+        engine.run_to_completion()?;
+        let _ = h.drain();
+    }
+    let warm_total = engine.metrics.decode_attn_positions_total;
+
+    let trace = shared_prefix_trace(&spec);
+    let mut handles = Vec::with_capacity(trace.len());
+    for r in &trace {
+        let req = GenRequest::text(&r.prompt)
+            .tenant(r.tenant.as_str())
+            .max_new_tokens(r.max_new_tokens);
+        handles.push(engine.submit(req)?);
+    }
+    let mut outs: Vec<Vec<u32>> = vec![Vec::new(); handles.len()];
+    let mut steps = 0u64;
+    while !engine.is_idle() {
+        if steps > 200_000 {
+            return Err(Error::Request(
+                "grouped decode workload did not drain".into(),
+            ));
+        }
+        engine.step()?;
+        steps += 1;
+        for (i, h) in handles.iter().enumerate() {
+            while let Ok(ev) = h.events.try_recv() {
+                if let GenEvent::Token(t) = ev {
+                    outs[i].push(t);
+                }
+            }
+        }
+    }
+
+    let mut fp = 0xcbf2_9ce4_8422_2325u64;
+    for toks in &outs {
+        fp = fp_fold(fp, 0x9e37_79b9_7f4a_7c15);
+        for &t in toks {
+            fp = fp_fold(fp, t as u64);
+        }
+    }
+
+    let m = &engine.metrics;
+    let total = m.decode_attn_positions_total - warm_total;
+    let te = engine.geometry().token_elems() as u64;
+    let flops_total = 4 * te * total;
+    let reduction = if flops_total > 0 {
+        m.decode_attn_flops_saved as f64 / flops_total as f64
+    } else {
+        0.0
+    };
+    Ok(Json::obj(vec![
+        ("grouped", Json::Bool(grouped)),
+        ("steps", Json::Num(steps as f64)),
+        ("requests_finished", Json::Num(m.requests_finished as f64)),
+        ("tokens_generated", Json::Num(m.tokens_generated as f64)),
+        ("output_fingerprint", Json::Str(format!("{fp:016x}"))),
+        (
+            "grouped_decode_steps",
+            Json::Num(m.grouped_decode_steps as f64),
+        ),
+        ("groups_formed", Json::Num(m.grouped_groups_formed as f64)),
+        ("grouped_rows", Json::Num(m.grouped_rows as f64)),
+        ("attn_positions_total", Json::Num(total as f64)),
+        (
+            "attn_positions_saved",
+            Json::Num(m.decode_attn_positions_saved as f64),
+        ),
+        (
+            "attn_flops_saved",
+            Json::Num(m.decode_attn_flops_saved as f64),
+        ),
+        (
+            "attn_bytes_saved",
+            Json::Num(m.decode_attn_bytes_saved as f64),
+        ),
+        ("attn_flop_reduction", Json::Num(reduction)),
+    ]))
+}
+
+/// Run the pinned Zipf shared-prefix workload twice — grouped decode
+/// off, then on — and return the `BENCH_grouped_decode.json` report
+/// object. Everything is a pure function of `seed` (manual sim clock,
+/// seeded workload), so the report is byte-identical across runs — the
+/// bench and CI assert it by diffing two consecutive runs. The
+/// headline claims: identical output fingerprints on both arms, and
+/// ≥30% of the decode attention FLOPs saved on the grouped arm.
+pub fn grouped_decode_report(seed: u64) -> Result<Json> {
+    let spec = grouped_decode_spec(seed);
+    let ungrouped = grouped_arm_run(seed, false)?;
+    let grouped = grouped_arm_run(seed, true)?;
+    let fp_of = |j: &Json| {
+        j.get("output_fingerprint")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+    };
+    let fingerprints_match = fp_of(&grouped).is_some() && fp_of(&grouped) == fp_of(&ungrouped);
+    let reduction = grouped
+        .get("attn_flop_reduction")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    Ok(Json::obj(vec![
+        ("seed", Json::Num(seed as f64)),
+        (
+            "workload",
+            Json::obj(vec![
+                ("n_tenants", Json::Num(spec.n_tenants as f64)),
+                ("zipf_s", Json::Num(spec.zipf_s)),
+                (
+                    "system_prompt_len",
+                    Json::Num(spec.system_prompt_len as f64),
+                ),
+                ("n_requests", Json::Num(spec.n_requests as f64)),
+            ]),
+        ),
+        ("ungrouped", ungrouped),
+        ("grouped", grouped),
+        ("fingerprints_match", Json::Bool(fingerprints_match)),
+        ("attn_flop_reduction", Json::Num(reduction)),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -526,6 +689,42 @@ mod tests {
                 .unwrap();
             assert_eq!(fin, 96.0, "{policy} finished all requests");
         }
+    }
+
+    #[test]
+    fn grouped_decode_report_is_byte_identical_and_saves_flops() {
+        let a = grouped_decode_report(GROUPED_DECODE_SEED).unwrap();
+        let b = grouped_decode_report(GROUPED_DECODE_SEED).unwrap();
+        assert_eq!(a.to_string(), b.to_string(), "report must reproduce");
+        assert_eq!(
+            a.get("fingerprints_match").and_then(Json::as_bool),
+            Some(true),
+            "grouping must not change any output token"
+        );
+        let r = a
+            .get("attn_flop_reduction")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(r >= 0.30, "attention FLOP reduction {r} under the 30% bar");
+        let arm = |key: &str, field: &str| {
+            a.get(key)
+                .and_then(|j| j.get(field))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        assert_eq!(arm("ungrouped", "attn_positions_saved"), 0.0);
+        assert_eq!(arm("ungrouped", "groups_formed"), 0.0);
+        assert!(arm("grouped", "groups_formed") > 0.0);
+        assert_eq!(
+            arm("ungrouped", "attn_positions_total"),
+            arm("grouped", "attn_positions_total"),
+            "both arms must decode the same logical attention span"
+        );
+        assert_eq!(arm("ungrouped", "requests_finished"), 104.0, "96 + 8 warm");
+        assert_eq!(
+            arm("ungrouped", "requests_finished"),
+            arm("grouped", "requests_finished")
+        );
     }
 
     #[test]

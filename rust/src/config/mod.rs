@@ -173,6 +173,14 @@ pub struct EngineConfig {
     /// Enable the radix-tree prefix cache: requests reuse the KV of the
     /// longest cached prompt prefix instead of re-prefilling it.
     pub prefix_cache: bool,
+    /// Enable prefix-shared grouped decode (CoDec-style): sequences in
+    /// the decode batch that share a block-aligned KV prefix are
+    /// surfaced to the backend as [`crate::core::DecodeGroup`]s so the
+    /// shared prefix's attention is computed once per group instead of
+    /// once per sequence. Off by default; backends that do not opt in
+    /// fall back to the per-sequence path and outputs are byte-identical
+    /// either way.
+    pub grouped_decode: bool,
     /// Sampling temperature <= 0 means greedy.
     pub temperature: f32,
     pub top_k: usize,
@@ -216,6 +224,7 @@ impl Default for EngineConfig {
             max_new_tokens: 64,
             async_softmax: true,
             prefix_cache: true,
+            grouped_decode: false,
             temperature: 0.0,
             top_k: 0,
             seed: 0,
@@ -263,6 +272,10 @@ impl EngineConfig {
                 .get("prefix_cache")
                 .and_then(Json::as_bool)
                 .unwrap_or(d.prefix_cache),
+            grouped_decode: j
+                .get("grouped_decode")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.grouped_decode),
             temperature: j
                 .get("temperature")
                 .and_then(Json::as_f64)

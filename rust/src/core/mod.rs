@@ -326,6 +326,81 @@ pub struct LaneInput {
     pub pos: usize,
 }
 
+/// One prefix-sharing group within a decode step, formed by the core
+/// when [`crate::config::EngineConfig::grouped_decode`] is on and
+/// handed to [`Backend::decode_grouped`]. Members physically share the
+/// KV blocks of `prefix_blocks`, so a backend may compute the shared
+/// prefix's attention partial once per group and merge it with each
+/// member's divergent-suffix partial (unified-max softmax merging, see
+/// [`crate::softmaxstats`]) instead of re-attending over the prefix
+/// per sequence — the CoDec-style decode-side sibling of prefill
+/// prefix reuse.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeGroup {
+    /// Stable per-step group id (index into this step's group list,
+    /// in ascending first-shared-block order).
+    pub id: usize,
+    /// Physical KV block ids of the shared prefix, in chain order;
+    /// every member's block table starts with exactly this chain.
+    pub prefix_blocks: Vec<usize>,
+    /// Token length of the shared prefix: always a whole number of
+    /// blocks, and at most every member's stored KV length (so every
+    /// prefix position is a stored position for every member).
+    pub prefix_tokens: usize,
+    /// Indices into the step's `inputs` slice, in input (lane) order.
+    /// Always at least two — a group of one is not a group.
+    pub members: Vec<usize>,
+}
+
+/// Form the prefix-sharing groups for one decode step. Deterministic:
+/// inputs are bucketed by their first physical KV block (ascending
+/// block id), members stay in input order, and the shared prefix is
+/// the longest common block chain across all members, clamped down to
+/// whole blocks fully stored by every member (the tail block a member
+/// may still be filling is never shared compute).
+/// Groups need >= 2 members and >= 1 whole shared block; everything
+/// else decodes on the per-sequence path unchanged.
+pub fn form_decode_groups(kv: &KvCache, inputs: &[LaneInput]) -> Vec<DecodeGroup> {
+    let bt = kv.geometry().block_tokens;
+    let chains: Vec<Option<Vec<usize>>> =
+        inputs.iter().map(|inp| kv.seq_blocks(inp.id)).collect();
+    let mut by_first: std::collections::BTreeMap<usize, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for (i, chain) in chains.iter().enumerate() {
+        if let Some(&first) = chain.as_ref().and_then(|c| c.first()) {
+            by_first.entry(first).or_default().push(i);
+        }
+    }
+    let mut groups: Vec<DecodeGroup> = Vec::new();
+    for members in by_first.into_values() {
+        if members.len() < 2 {
+            continue;
+        }
+        let lead = chains[members[0]].as_ref().unwrap();
+        let mut common = lead.len();
+        for &m in &members[1..] {
+            let mb = chains[m].as_ref().unwrap();
+            let mut c = 0;
+            while c < common && c < mb.len() && mb[c] == lead[c] {
+                c += 1;
+            }
+            common = c;
+        }
+        let min_pos = members.iter().map(|&m| inputs[m].pos).min().unwrap();
+        let common = common.min(min_pos / bt);
+        if common == 0 {
+            continue;
+        }
+        groups.push(DecodeGroup {
+            id: groups.len(),
+            prefix_blocks: lead[..common].to_vec(),
+            prefix_tokens: common * bt,
+            members,
+        });
+    }
+    groups
+}
+
 /// The compute half of an engine. Implementations supply KV
 /// materialization and logits; the [`EngineCore`] supplies everything
 /// else (scheduling, flow control, lifecycle, accounting, tracing).
@@ -407,6 +482,37 @@ pub trait Backend {
         metrics: &mut EngineMetrics,
         clock: &Clock,
     ) -> Result<DecodeRun>;
+
+    /// One decode step over the assembled batch with prefix-sharing
+    /// [`DecodeGroup`]s attached. Called instead of [`Backend::decode`]
+    /// when [`crate::config::EngineConfig::grouped_decode`] is on.
+    ///
+    /// The contract is [`Backend::decode`]'s, with one extra freedom:
+    /// within a group the backend may compute the shared prefix's
+    /// attention once and merge per-member suffix partials (the
+    /// unified-max softmax of [`crate::softmaxstats`] makes the merge
+    /// order-free), **provided outputs stay byte-identical to the
+    /// per-sequence path**. Groups are advisory — this default ignores
+    /// them and delegates to [`Backend::decode`], so backends that do
+    /// not opt in (the stub, the sharded wrapper, the PJRT engine)
+    /// behave identically with the flag on or off. A backend that does
+    /// reuse prefix compute records what it saved in
+    /// [`crate::metrics::EngineMetrics::decode_attn_positions_saved`]
+    /// and friends.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_grouped(
+        &mut self,
+        cfg: &EngineConfig,
+        kv: &mut KvCache,
+        seqs: &HashMap<SeqId, Sequence>,
+        batch: &DecodeBatch,
+        inputs: &[LaneInput],
+        _groups: &[DecodeGroup],
+        metrics: &mut EngineMetrics,
+        clock: &Clock,
+    ) -> Result<DecodeRun> {
+        self.decode(cfg, kv, seqs, batch, inputs, metrics, clock)
+    }
 
     /// A sequence left the decode batch (finished, preempted, dropped,
     /// or disconnected); `shrank` reports bucket compaction.
@@ -848,15 +954,43 @@ impl<B: Backend> EngineCore<B> {
                 pos: s.kv_len,
             });
         }
-        let run = self.backend.decode(
-            &self.cfg,
-            &mut self.kv,
-            &self.seqs,
-            &batch,
-            &inputs,
-            &mut self.metrics,
-            &self.clock,
-        )?;
+        // Logical attention span of this step (every row attends over
+        // its full stored prefix + the new token), recorded for every
+        // backend so grouped runs can report their measured savings as
+        // a fraction of the same denominator an ungrouped run has.
+        self.metrics.decode_attn_positions_total += inputs
+            .iter()
+            .map(|inp| (inp.pos + 1) as u64)
+            .sum::<u64>();
+        let run = if self.cfg.grouped_decode {
+            let groups = form_decode_groups(&self.kv, &inputs);
+            if !groups.is_empty() {
+                self.metrics.grouped_decode_steps += 1;
+                self.metrics.grouped_groups_formed += groups.len() as u64;
+                self.metrics.grouped_rows +=
+                    groups.iter().map(|g| g.members.len() as u64).sum::<u64>();
+            }
+            self.backend.decode_grouped(
+                &self.cfg,
+                &mut self.kv,
+                &self.seqs,
+                &batch,
+                &inputs,
+                &groups,
+                &mut self.metrics,
+                &self.clock,
+            )?
+        } else {
+            self.backend.decode(
+                &self.cfg,
+                &mut self.kv,
+                &self.seqs,
+                &batch,
+                &inputs,
+                &mut self.metrics,
+                &self.clock,
+            )?
+        };
         if run.offsets.len() != inputs.len() {
             return Err(Error::Schedule(format!(
                 "backend returned {} logits rows for {} lanes",

@@ -184,17 +184,21 @@ impl TokenBucket {
         TokenBucket { level: burst, last: now }
     }
 
-    /// Refill for elapsed time, then charge `cost` if covered.
-    fn try_charge(&mut self, cost: f64, now: Duration, rate: f64, burst: f64) -> bool {
+    /// Refill for elapsed time and report whether `cost` is covered —
+    /// without deducting it. Admission control checks affordability up
+    /// front but only commits the charge once the request is actually
+    /// accepted downstream; a routing failure or per-replica rejection
+    /// must not consume tenant budget.
+    fn refill_and_check(&mut self, cost: f64, now: Duration, rate: f64, burst: f64) -> bool {
         let dt = now.saturating_sub(self.last).as_secs_f64();
         self.level = (self.level + dt * rate).min(burst);
         self.last = now;
-        if self.level >= cost {
-            self.level -= cost;
-            true
-        } else {
-            false
-        }
+        self.level >= cost
+    }
+
+    /// Deduct a cost previously approved by [`Self::refill_and_check`].
+    fn commit(&mut self, cost: f64) {
+        self.level = (self.level - cost).max(0.0);
     }
 }
 
@@ -542,6 +546,13 @@ impl<B: Backend> Fleet<B> {
             }
         }
         let prompt_tokens = encode_prompt(&self.tokenizer, &req.prompt)?;
+        // Rate limiting is check-then-commit: affordability is decided
+        // here (so an over-budget tenant is rejected before routing),
+        // but the budget is only consumed after the replica accepts the
+        // request. Work rejected downstream — no healthy replica, or a
+        // per-replica quota/validation failure — must not charge the
+        // tenant for tokens that were never admitted.
+        let mut pending_charge = None;
         if charge && self.fcfg.tenant_token_rate > 0.0 {
             let now = self.clock.now();
             let (rate, burst) = (self.fcfg.tenant_token_rate, self.fcfg.tenant_token_burst);
@@ -550,12 +561,13 @@ impl<B: Backend> Fleet<B> {
                 .buckets
                 .entry(tenant.clone())
                 .or_insert_with(|| TokenBucket::full(burst, now));
-            if !bucket.try_charge(cost, now, rate, burst) {
+            if !bucket.refill_and_check(cost, now, rate, burst) {
                 self.rate_limited += 1;
                 return Err(Error::RateLimit(format!(
                     "tenant '{tenant}' exceeds {rate} tokens/s (burst {burst})"
                 )));
             }
+            pending_charge = Some(cost);
         }
         let (replica, matched) = self
             .route(&prompt_tokens)
@@ -565,6 +577,12 @@ impl<B: Backend> Fleet<B> {
             .as_mut()
             .expect("routed replica is live")
             .submit(req.clone())?;
+        if let Some(cost) = pending_charge {
+            self.buckets
+                .get_mut(&tenant)
+                .expect("bucket created during the affordability check")
+                .commit(cost);
+        }
         self.routing_decisions += 1;
         if matched > 0 {
             self.routing_cache_hits += 1;
@@ -598,6 +616,11 @@ impl<B: Backend> Fleet<B> {
             ReplicaHealth::Draining => Ok(()),
             ReplicaHealth::Up => {
                 self.replicas[replica].health = ReplicaHealth::Draining;
+                // A draining replica takes no placements, so its
+                // routing hints are dead weight at best — and a stale
+                // mirror would bias scoring if the replica were ever
+                // considered again. Clear now, not at retirement.
+                self.replicas[replica].mirror.clear();
                 let idle = self.replicas[replica]
                     .live()
                     .map(|c| c.is_idle())
@@ -703,8 +726,14 @@ impl<B: Backend> Fleet<B> {
                     }
                 }
                 TraceEvent::Admitted { id, .. } => {
-                    if let Some(rec) = self.inflight.get(&id) {
-                        self.replicas[replica].mirror.insert(&rec.prompt_tokens);
+                    // Routing hints are only kept for replicas that can
+                    // still receive placements; admissions trickling in
+                    // on a draining replica must not repopulate the
+                    // mirror cleared at drain time.
+                    if self.replicas[replica].health == ReplicaHealth::Up {
+                        if let Some(rec) = self.inflight.get(&id) {
+                            self.replicas[replica].mirror.insert(&rec.prompt_tokens);
+                        }
                     }
                 }
                 _ => {}
@@ -1218,6 +1247,73 @@ mod tests {
         // Refill: 1 virtual second at 10 tok/s covers the next charge.
         f.clock().advance(Duration::from_secs(1));
         f.submit(req()).unwrap();
+        f.run_to_completion().unwrap();
+    }
+
+    #[test]
+    fn downstream_rejection_does_not_consume_rate_budget() {
+        // One replica with a per-replica tenant quota of 1, plus a
+        // fleet token-rate bucket. The second submit passes the
+        // affordability check, routes, and is then rejected by the
+        // replica's own quota — that rejection must not charge the
+        // tenant's bucket, or admitted+rejected work double-bills and
+        // a later legitimate request starves.
+        let mut c = cfg();
+        c.tenant_max_inflight = 1;
+        let mut fc = fcfg(1, RoutePolicy::RoundRobin);
+        fc.tenant_token_rate = 10.0;
+        fc.tenant_token_burst = 20.0;
+        let mut f = Fleet::sim(c, fc, SimSpec::default()).unwrap();
+        // "abcd" = BOS + 4 bytes = 5 prompt tokens; cost 5 + 4 = 9.
+        let req = || GenRequest::text("abcd").tenant("acme").max_new_tokens(4);
+        f.submit(req()).unwrap(); // level 20 -> 11
+        let err = f.submit(req()).unwrap_err();
+        assert!(matches!(err, Error::Quota(_)), "replica quota, not rate: {err}");
+        assert_eq!(f.rate_limited(), 0);
+        // Finish the in-flight request to free the replica quota slot.
+        f.run_to_completion().unwrap();
+        // Level is still ~11 (virtual time barely advanced); cost 9
+        // fits. Before the check/commit split the rejected submit had
+        // already drained the bucket to 2 and this would rate-limit.
+        f.submit(req()).unwrap();
+        assert_eq!(f.rate_limited(), 0);
+        f.run_to_completion().unwrap();
+    }
+
+    #[test]
+    fn drain_and_kill_clear_the_replica_mirror() {
+        let mut f =
+            Fleet::sim(cfg(), fcfg(3, RoutePolicy::CacheAware), SimSpec::default()).unwrap();
+        // 31 chars + BOS = 32 tokens = 4 full blocks of 8.
+        let prompt = "system: shared preamble (0123)!";
+        f.submit(GenRequest::text(prompt).max_new_tokens(4)).unwrap();
+        assert!(
+            f.replica_stats(0).unwrap().mirror_blocks > 0,
+            "placement seeds the routing mirror"
+        );
+        // Drain while the request is still queued: the mirror must be
+        // cleared immediately, not at retirement.
+        f.drain(0).unwrap();
+        assert_eq!(f.replica_stats(0).unwrap().health, ReplicaHealth::Draining);
+        assert_eq!(f.replica_stats(0).unwrap().mirror_blocks, 0);
+        // The admission trace observed on the next step must not
+        // repopulate a draining replica's mirror.
+        f.step().unwrap();
+        assert!(f.replicas[0].mirror.is_empty(), "admission repopulated a draining mirror");
+        f.run_to_completion().unwrap();
+        assert_eq!(f.replica_stats(0).unwrap().health, ReplicaHealth::Dead);
+        assert!(f.replicas[0].mirror.is_empty());
+
+        // Kill: replica 1 takes the next placement (replica 0 is
+        // dead); its mirror must be empty after the kill so a scoring
+        // pass can never match hints on a dead replica.
+        f.submit(GenRequest::text(prompt).max_new_tokens(4)).unwrap();
+        f.step().unwrap();
+        assert!(!f.replicas[1].mirror.is_empty());
+        let moved = f.kill(1).unwrap();
+        assert_eq!(moved.len(), 1, "in-flight victim resubmitted");
+        assert_eq!(f.replica_stats(1).unwrap().health, ReplicaHealth::Dead);
+        assert!(f.replicas[1].mirror.is_empty());
         f.run_to_completion().unwrap();
     }
 

@@ -239,6 +239,31 @@ pub struct EngineMetrics {
     /// Requests reclaimed because the client dropped its event stream
     /// (hang-up detected mid-generation).
     pub client_disconnects: u64,
+    /// Grouped decode (CoDec-style prefix compute reuse; see
+    /// `core::DecodeGroup`): decode steps in which at least one
+    /// prefix-sharing group was formed.
+    pub grouped_decode_steps: u64,
+    /// Prefix-sharing groups formed across all decode steps.
+    pub grouped_groups_formed: u64,
+    /// Decode rows (lane inputs) that were members of some group.
+    pub grouped_rows: u64,
+    /// Logical decode-attention span: for every decode row, the number
+    /// of KV positions it attends over (stored prefix + the new token).
+    /// Recorded by the core on every decode step, grouping or not, so
+    /// grouped runs report savings against the same denominator an
+    /// ungrouped run has.
+    pub decode_attn_positions_total: u64,
+    /// KV positions whose attention partial was reused from a group's
+    /// shared-prefix computation instead of being re-scored per
+    /// sequence. Recorded by backends that implement the grouped path.
+    pub decode_attn_positions_saved: u64,
+    /// Attention FLOPs avoided by grouped decode, using the fixed
+    /// convention of 4 FLOPs per KV element per position (QK^T dot +
+    /// AV accumulate, multiply and add each).
+    pub decode_attn_flops_saved: u64,
+    /// KV bytes not re-read thanks to grouped decode (K + V columns at
+    /// 4 bytes per f32 element per saved position).
+    pub decode_attn_bytes_saved: u64,
     /// Step-time attribution: where each `step()` call's wall time goes,
     /// recorded around the phases of the engine loop (stream-credit
     /// service, admission/scheduling policy, prefill, decode). Under the
@@ -340,6 +365,13 @@ impl EngineMetrics {
         self.backpressure_drops += other.backpressure_drops;
         self.stream_idle_drops += other.stream_idle_drops;
         self.client_disconnects += other.client_disconnects;
+        self.grouped_decode_steps += other.grouped_decode_steps;
+        self.grouped_groups_formed += other.grouped_groups_formed;
+        self.grouped_rows += other.grouped_rows;
+        self.decode_attn_positions_total += other.decode_attn_positions_total;
+        self.decode_attn_positions_saved += other.decode_attn_positions_saved;
+        self.decode_attn_flops_saved += other.decode_attn_flops_saved;
+        self.decode_attn_bytes_saved += other.decode_attn_bytes_saved;
         for (tenant, c) in &other.tenants {
             let key = if self.tenants.contains_key(tenant)
                 || self.tenants.len() < MAX_TRACKED_TENANTS
@@ -371,6 +403,16 @@ impl EngineMetrics {
             0.0
         } else {
             self.prefix_tokens_reused as f64 / total as f64
+        }
+    }
+
+    /// Fraction of the logical decode-attention span whose compute was
+    /// reused from a group's shared prefix (0.0 with grouping off).
+    pub fn decode_attn_savings_rate(&self) -> f64 {
+        if self.decode_attn_positions_total == 0 {
+            0.0
+        } else {
+            self.decode_attn_positions_saved as f64 / self.decode_attn_positions_total as f64
         }
     }
 
@@ -411,6 +453,35 @@ impl EngineMetrics {
             (
                 "client_disconnects",
                 Json::Num(self.client_disconnects as f64),
+            ),
+            (
+                "grouped_decode_steps",
+                Json::Num(self.grouped_decode_steps as f64),
+            ),
+            (
+                "grouped_groups_formed",
+                Json::Num(self.grouped_groups_formed as f64),
+            ),
+            ("grouped_rows", Json::Num(self.grouped_rows as f64)),
+            (
+                "decode_attn_positions_total",
+                Json::Num(self.decode_attn_positions_total as f64),
+            ),
+            (
+                "decode_attn_positions_saved",
+                Json::Num(self.decode_attn_positions_saved as f64),
+            ),
+            (
+                "decode_attn_flops_saved",
+                Json::Num(self.decode_attn_flops_saved as f64),
+            ),
+            (
+                "decode_attn_bytes_saved",
+                Json::Num(self.decode_attn_bytes_saved as f64),
+            ),
+            (
+                "decode_attn_savings_rate",
+                Json::Num(self.decode_attn_savings_rate()),
             ),
             (
                 "tenants",
@@ -682,6 +753,77 @@ mod tests {
         assert_eq!(e.min(), Duration::from_micros(42));
         assert_eq!(e.max(), Duration::from_micros(42));
         assert_eq!(e.count(), 1);
+    }
+
+    #[test]
+    fn histogram_merge_disjoint_ranges_keeps_minmax_clamps_correct() {
+        // One histogram holds only tiny samples, the other only huge
+        // ones; after the merge the percentile clamps must track the
+        // *global* observed range, not either side's.
+        let mut tiny = LatencyHistogram::default();
+        for _ in 0..10 {
+            tiny.record(Duration::from_micros(3));
+        }
+        let mut huge = LatencyHistogram::default();
+        for _ in 0..10 {
+            huge.record(Duration::from_secs(2));
+        }
+        let mut merged = tiny.clone();
+        merged.merge(&huge);
+        assert_eq!(merged.count(), 20);
+        assert_eq!(merged.min(), Duration::from_micros(3));
+        assert_eq!(merged.max(), Duration::from_secs(2));
+        // p0 / p100 pin to the observed extremes.
+        assert_eq!(merged.percentile(0.0), Duration::from_micros(3));
+        assert_eq!(merged.percentile(1.0), Duration::from_secs(2));
+        // The lower half resolves to the tiny side exactly (single
+        // value within its bucket, clamped by observed min); the upper
+        // half interpolates inside the huge side's bucket, bounded by
+        // the observed max.
+        assert_eq!(merged.percentile(0.25), Duration::from_micros(3));
+        let p90 = merged.percentile(0.9);
+        assert!(
+            p90 > Duration::from_secs(1) && p90 <= merged.max(),
+            "p90={p90:?}"
+        );
+        // Merge order must not matter for any summary stat.
+        let mut other_way = huge.clone();
+        other_way.merge(&tiny);
+        assert_eq!(
+            merged.to_json().to_string(),
+            other_way.to_json().to_string(),
+            "merge must be commutative"
+        );
+        // And the merged result equals recording everything into one.
+        let mut both = LatencyHistogram::default();
+        for _ in 0..10 {
+            both.record(Duration::from_micros(3));
+        }
+        for _ in 0..10 {
+            both.record(Duration::from_secs(2));
+        }
+        for p in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0] {
+            assert_eq!(merged.percentile(p), both.percentile(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_overlapping_bucket_keeps_observed_bounds() {
+        // Two samples land in the same log bucket but with different
+        // exact values; the merged histogram's interpolation must stay
+        // inside the union of observed values.
+        let mut a = LatencyHistogram::default();
+        a.record(Duration::from_micros(150));
+        let mut b = LatencyHistogram::default();
+        b.record(Duration::from_micros(170));
+        a.merge(&b);
+        assert_eq!(a.min(), Duration::from_micros(150));
+        assert_eq!(a.max(), Duration::from_micros(170));
+        for i in 0..=10 {
+            let p = i as f64 / 10.0;
+            let v = a.percentile(p);
+            assert!(v >= a.min() && v <= a.max(), "p={p} v={v:?}");
+        }
     }
 
     #[test]

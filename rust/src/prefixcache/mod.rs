@@ -24,6 +24,13 @@
 //! granularity the paged allocator can share. Sub-block overlaps are
 //! handled by the KV cache's copy-on-write when a sequence appends into
 //! a shared partial tail.
+//!
+//! Cache hits reuse *storage*; the block sharing they create is also
+//! what makes *compute* reuse possible downstream: sequences whose
+//! chains share physical prefix blocks are grouped per decode step by
+//! [`crate::core::form_decode_groups`] so an opted-in backend scores
+//! the shared prefix once per group (see the "Grouped decode" section
+//! of `docs/ARCHITECTURE.md`).
 
 use std::collections::HashMap;
 

@@ -26,7 +26,13 @@
 //! `tests/differential_backends.rs` proves over the whole matrix, and
 //! `tests/prop_shard.rs` strengthens by reconstructing the unsharded
 //! dense state from the per-shard slices after every step
-//! ([`ShardedBackend::verify_sharding`]).
+//! ([`ShardedBackend::verify_sharding`]). In the same spirit the
+//! wrapper deliberately does **not** override
+//! [`Backend::decode_grouped`]: grouped decode steps fall through the
+//! trait default to the per-sequence path, so enabling
+//! [`EngineConfig::grouped_decode`] on a sharded engine changes no
+//! output and claims no savings (proved by
+//! `grouped_decode_flag_is_invisible_through_the_default_delegation`).
 //!
 //! Budget model (all write-only — virtual time never feeds back into
 //! scheduling): per decode call with `b` rows over `M` shards, each
@@ -320,9 +326,33 @@ impl<B: Backend> ShardedBackend<B> {
         &self.metrics
     }
 
-    /// [`ShardMetrics::to_json`] of the current counters.
+    /// [`ShardMetrics::to_json`] of the raw counters. Between
+    /// KV-bearing hooks the per-lane `kv_elems` gauges may transiently
+    /// include mirrors awaiting lazy pruning (a parked preemption
+    /// victim gets no `on_batch_leave`); scrape paths should prefer
+    /// [`ShardedBackend::stats_json_with_kv`], which reports post-GC
+    /// values.
     pub fn stats_json(&self) -> Json {
         self.metrics.to_json()
+    }
+
+    /// [`ShardMetrics::to_json`] with the per-lane KV gauges reduced
+    /// to their post-GC values: mirrors whose sequence already left
+    /// the paged store are excluded, so `fdpp_shard_kv_elems` never
+    /// over-reports after a preemption burst just because no
+    /// KV-bearing hook has run since to prune them.
+    pub fn stats_json_with_kv(&self, kv: &KvCache) -> Json {
+        let mut m = self.metrics.clone();
+        for (&id, mirror) in &self.mirrors {
+            if kv.contains(id) {
+                continue;
+            }
+            for (s, ks) in mirror.k.iter().enumerate() {
+                let lane = &mut m.per_shard[s];
+                lane.kv_elems = lane.kv_elems.saturating_sub(ks.len() as u64);
+            }
+        }
+        m.to_json()
     }
 
     /// Whether `id` currently has a per-shard mirror (every batched or
@@ -844,6 +874,122 @@ mod tests {
         let saw_leave = hooks.iter().any(|h| matches!(h, ShardHook::Leave { .. }));
         assert!(saw_join, "joins recorded");
         assert!(saw_leave, "leaves recorded");
+    }
+
+    #[test]
+    fn kv_gauges_report_post_gc_values_with_stale_mirrors() {
+        let mut e = sharded(2);
+        e.submit(GenRequest::text("gauge probe prompt").max_new_tokens(12))
+            .unwrap();
+        for _ in 0..4 {
+            e.step().unwrap();
+        }
+        let live: Vec<u64> = e
+            .backend()
+            .shard_metrics()
+            .per_shard
+            .iter()
+            .map(|l| l.kv_elems)
+            .collect();
+        assert!(live.iter().all(|&n| n > 0), "a decoding seq is mirrored");
+        // Fabricate what a parked preemption victim leaves behind: a
+        // mirror whose sequence no longer holds KV, awaiting lazy
+        // pruning at the next KV-bearing hook.
+        let te = e.geometry().token_elems();
+        let ghost: SeqId = u64::MAX;
+        assert!(!e.kv().contains(ghost));
+        let mut m = SeqMirror {
+            len: 3,
+            k: vec![Vec::new(); 2],
+            v: vec![Vec::new(); 2],
+        };
+        for s in 0..2 {
+            let (lo, hi) = slice_range(te, 2, s);
+            m.k[s] = vec![0.25; 3 * (hi - lo)];
+            m.v[s] = vec![0.5; 3 * (hi - lo)];
+            e.backend.metrics.per_shard[s].kv_elems += (3 * (hi - lo)) as u64;
+        }
+        e.backend.mirrors.insert(ghost, m);
+        let raw = e.backend().stats_json();
+        let post = e.backend().stats_json_with_kv(e.kv());
+        for s in 0..2usize {
+            let key = s.to_string();
+            let elems = |j: &Json| {
+                j.get("per_shard")
+                    .and_then(|p| p.get(&key))
+                    .and_then(|l| l.get("kv_elems"))
+                    .and_then(Json::as_f64)
+                    .unwrap()
+            };
+            let (lo, hi) = slice_range(te, 2, s);
+            assert_eq!(
+                elems(&raw),
+                (live[s] + (3 * (hi - lo)) as u64) as f64,
+                "raw gauge over-reports by the ghost footprint (lane {s})"
+            );
+            assert_eq!(
+                elems(&post),
+                live[s] as f64,
+                "post-GC gauge excludes the stale mirror (lane {s})"
+            );
+        }
+        // The next KV-bearing hook prunes the ghost for real; the two
+        // snapshots agree again.
+        e.step().unwrap();
+        assert!(!e.backend().is_mirrored(ghost));
+        assert_eq!(
+            e.backend().stats_json().to_string(),
+            e.backend().stats_json_with_kv(e.kv()).to_string()
+        );
+    }
+
+    #[test]
+    fn grouped_decode_flag_is_invisible_through_the_default_delegation() {
+        // The wrapper does not override `decode_grouped`, so the trait
+        // default routes grouped steps through the per-sequence decode
+        // path: a sharded engine with grouping enabled must stay
+        // byte-identical to the unsharded ungrouped baseline — groups
+        // are surfaced by the core, ignored by the backend, and no
+        // savings may be claimed.
+        fn wave<E: InferenceEngine>(e: &mut E, shared: &str) -> Vec<Vec<u32>> {
+            let w = e.submit(GenRequest::text(shared).max_new_tokens(2)).unwrap();
+            e.run_to_completion().unwrap();
+            let _ = w.drain();
+            let handles: Vec<_> = (0..4)
+                .map(|i| {
+                    e.submit(GenRequest::text(format!("{shared} user {i}")).max_new_tokens(8))
+                        .unwrap()
+                })
+                .collect();
+            e.run_to_completion().unwrap();
+            handles.iter().map(|h| h.drain().0).collect()
+        }
+        let shared = "system: you are a helpful tool!!"; // 4 full blocks with BOS
+        let mut base = SimEngine::new(cfg(), SimSpec::default()).unwrap();
+        let expect = wave(&mut base, shared);
+        for m in [2usize, 3] {
+            let mut e = EngineCore::with_backend(
+                ShardedBackend::new(SimBackend::new(SimSpec::default()), m),
+                EngineConfig {
+                    grouped_decode: true,
+                    ..cfg()
+                },
+                Clock::manual(),
+            )
+            .unwrap();
+            let got = wave(&mut e, shared);
+            assert_eq!(expect, got, "M={m} grouped must match the baseline");
+            assert!(
+                e.metrics.grouped_groups_formed > 0,
+                "the core must still surface groups (M={m})"
+            );
+            assert_eq!(
+                e.metrics.decode_attn_positions_saved,
+                0,
+                "the default delegation claims no reuse (M={m})"
+            );
+            e.backend().verify_sharding(e.kv()).unwrap();
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@
 use std::time::Duration;
 
 use crate::config::EngineConfig;
-use crate::core::{Backend, DecodeRun, EngineCore, LaneInput, PrefillRun};
+use crate::core::{Backend, DecodeGroup, DecodeRun, EngineCore, LaneInput, PrefillRun};
 use crate::error::{Error, Result};
 use crate::kvcache::{KvCache, KvGeometry, SeqId};
 use crate::router::Sequence;
@@ -138,26 +138,46 @@ pub(crate) fn sim_publishable_tokens(kv: &KvCache, seq: &Sequence) -> Vec<u32> {
     toks
 }
 
-/// Logits for a sequence: a digest over the KV bytes *stored in the
-/// paged cache* (so shared-block corruption is observable), mixed with
-/// the current input token.
-fn logits_from_cache(kv: &KvCache, vocab: usize, id: SeqId, cur_tok: u32) -> Result<Vec<f32>> {
-    let geo = kv.geometry();
-    let te = geo.token_elems();
-    let len = kv
-        .seq_len(id)
-        .ok_or_else(|| Error::KvCache(format!("unknown seq {id}")))?;
+/// Fold the KV bytes stored for `id` at positions `start..end` into a
+/// running digest (strictly left-to-right, K column then V column per
+/// position). Because the fold is positional and reads *stored* bytes,
+/// two sequences that physically share their prefix blocks produce the
+/// identical digest over the prefix range — which is what lets the
+/// grouped decode path compute it once per group. This is the sim's
+/// stand-in for an attention partial: order-free to merge across the
+/// prefix/suffix split the same way the paper's unified-max softmax
+/// ([`crate::softmaxstats::softmax_unified`]) makes real partials
+/// mergeable without a synchronization pass.
+fn fold_kv_digest(kv: &KvCache, id: SeqId, start: usize, end: usize, seed: u64) -> Result<u64> {
+    let te = kv.geometry().token_elems();
     let mut kcol = vec![0.0f32; te];
     let mut vcol = vec![0.0f32; te];
-    let mut digest: u64 = LOGITS_DIGEST_SEED;
-    for pos in 0..len {
+    let mut digest = seed;
+    for pos in start..end {
         kv.read_token(id, pos, &mut kcol, &mut vcol)?;
         for f in kcol.iter().chain(vcol.iter()) {
             digest = mix(digest ^ f.to_bits() as u64);
         }
     }
-    digest = mix(digest ^ ((cur_tok as u64) << 32));
-    Ok((0..vocab).map(|c| hash_f32(digest ^ c as u64)).collect())
+    Ok(digest)
+}
+
+/// Expand a finished KV digest into a logits row, mixed with the
+/// current input token.
+fn logits_from_digest(digest: u64, vocab: usize, cur_tok: u32) -> Vec<f32> {
+    let d = mix(digest ^ ((cur_tok as u64) << 32));
+    (0..vocab).map(|c| hash_f32(d ^ c as u64)).collect()
+}
+
+/// Logits for a sequence: a digest over the KV bytes *stored in the
+/// paged cache* (so shared-block corruption is observable), mixed with
+/// the current input token.
+fn logits_from_cache(kv: &KvCache, vocab: usize, id: SeqId, cur_tok: u32) -> Result<Vec<f32>> {
+    let len = kv
+        .seq_len(id)
+        .ok_or_else(|| Error::KvCache(format!("unknown seq {id}")))?;
+    let digest = fold_kv_digest(kv, id, 0, len, LOGITS_DIGEST_SEED)?;
+    Ok(logits_from_digest(digest, vocab, cur_tok))
 }
 
 // ---------------------------------------------------------------------
@@ -258,6 +278,81 @@ impl Backend for SimBackend {
             kv.write_token(inp.id, inp.pos, &kc, &vc)?;
             offsets.push(logits.len());
             logits.extend(logits_from_cache(kv, self.spec.vocab, inp.id, inp.token)?);
+        }
+        Ok(DecodeRun {
+            logits,
+            offsets,
+            row_len: self.spec.vocab,
+            exec_time: Duration::ZERO,
+        })
+    }
+
+    /// Grouped decode with shared-prefix compute reuse — the sim twin
+    /// of CoDec-style attention grouping. The per-position digest fold
+    /// is the sim's attention partial, and because it runs strictly
+    /// left-to-right over *stored* KV bytes, every member of a group
+    /// (which physically shares its prefix blocks) produces the same
+    /// partial over the prefix range. So the backend folds the prefix
+    /// once per group and continues per member over its divergent
+    /// suffix — exactly the prefix-partial + suffix-partial merge the
+    /// unified-max softmax ([`crate::softmaxstats::softmax_unified`])
+    /// enables on real hardware, where per-group partials merge without
+    /// a synchronization pass.
+    ///
+    /// Byte-identity with [`Backend::decode`] holds because (1) all
+    /// KV appends happen first, in input slice order — the same
+    /// allocation/COW order the ungrouped path produces, since digest
+    /// reads never allocate or mutate — and (2) shared physical blocks
+    /// hold identical bytes for every sharer (COW isolates writers), so
+    /// the group-shared prefix digest equals each member's own.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_grouped(
+        &mut self,
+        _cfg: &EngineConfig,
+        kv: &mut KvCache,
+        _seqs: &std::collections::HashMap<SeqId, Sequence>,
+        _batch: &crate::batching::DecodeBatch,
+        inputs: &[LaneInput],
+        groups: &[DecodeGroup],
+        metrics: &mut crate::metrics::EngineMetrics,
+        _clock: &Clock,
+    ) -> Result<DecodeRun> {
+        let geo = kv.geometry();
+        let te = geo.token_elems() as u64;
+        // Phase 1: append every input's KV, in input slice order.
+        for inp in inputs {
+            kv.grow_one(inp.id)?;
+            let (kc, vc) = sim_token_cols(&geo, inp.token, inp.pos);
+            kv.write_token(inp.id, inp.pos, &kc, &vc)?;
+        }
+        // Phase 2: one shared-prefix partial per group, extended per
+        // member over its suffix; rows outside any group take the full
+        // per-sequence fold.
+        let mut rows: Vec<Option<Vec<f32>>> = vec![None; inputs.len()];
+        for g in groups {
+            let lead = inputs[g.members[0]].id;
+            let shared = fold_kv_digest(kv, lead, 0, g.prefix_tokens, LOGITS_DIGEST_SEED)?;
+            for &m in &g.members {
+                let inp = &inputs[m];
+                let d = fold_kv_digest(kv, inp.id, g.prefix_tokens, inp.pos + 1, shared)?;
+                rows[m] = Some(logits_from_digest(d, self.spec.vocab, inp.token));
+            }
+            // Every member after the first skipped re-scoring the
+            // shared prefix. FLOP/byte conventions are documented on
+            // the metrics fields.
+            let saved = (g.members.len() as u64 - 1) * g.prefix_tokens as u64;
+            metrics.decode_attn_positions_saved += saved;
+            metrics.decode_attn_flops_saved += saved * 4 * te;
+            metrics.decode_attn_bytes_saved += saved * 8 * te;
+        }
+        let mut logits = Vec::with_capacity(inputs.len() * self.spec.vocab);
+        let mut offsets = Vec::with_capacity(inputs.len());
+        for (i, inp) in inputs.iter().enumerate() {
+            offsets.push(logits.len());
+            match rows[i].take() {
+                Some(r) => logits.extend(r),
+                None => logits.extend(logits_from_cache(kv, self.spec.vocab, inp.id, inp.token)?),
+            }
         }
         Ok(DecodeRun {
             logits,
@@ -378,6 +473,52 @@ mod tests {
         assert_eq!(first, base);
         assert_eq!(second, base2);
         assert_eq!(cold.metrics.prefix_lookups, 0);
+    }
+
+    #[test]
+    fn grouped_decode_outputs_byte_identical_with_measured_savings() {
+        // A warmup request caches a 4-block shared prefix; a wave of
+        // four requests over it then decodes concurrently on shared
+        // physical blocks, so the grouped path has real groups to
+        // reuse. Outputs must be byte-identical with grouping on or
+        // off, and only the grouped run may report saved positions.
+        let shared = "system: you are a helpful tool!!"; // 33 tokens with BOS
+        let run = |grouped: bool| {
+            let mut e = SimEngine::new(
+                EngineConfig {
+                    grouped_decode: grouped,
+                    ..cfg(true)
+                },
+                SimSpec::default(),
+            )
+            .unwrap();
+            let w = e.submit(GenRequest::text(shared).max_new_tokens(2)).unwrap();
+            e.run_to_completion().unwrap();
+            let _ = w.drain();
+            let handles: Vec<_> = (0..4)
+                .map(|i| {
+                    e.submit(GenRequest::text(format!("{shared} user {i}")).max_new_tokens(8))
+                        .unwrap()
+                })
+                .collect();
+            e.run_to_completion().unwrap();
+            let outs: Vec<Vec<u32>> = handles.iter().map(|h| h.drain().0).collect();
+            (
+                outs,
+                e.metrics.decode_attn_positions_saved,
+                e.metrics.decode_attn_positions_total,
+                e.metrics.grouped_groups_formed,
+            )
+        };
+        let (base, saved_off, total_off, groups_off) = run(false);
+        let (out, saved_on, total_on, groups_on) = run(true);
+        assert_eq!(base, out, "grouping must not change any output");
+        assert_eq!(saved_off, 0, "ungrouped run reuses nothing");
+        assert_eq!(groups_off, 0, "formation is gated on the flag");
+        assert_eq!(total_off, total_on, "same logical attention span");
+        assert!(groups_on > 0, "the shared-prefix wave must form groups");
+        assert!(saved_on > 0, "groups must yield measured savings");
+        assert!(saved_on < total_on, "savings stay below the total span");
     }
 
     #[test]

@@ -464,6 +464,26 @@ pub fn run_scenario(seed: u64) -> Result<ScenarioReport, Violation> {
     run_with_hook(&scenario, engine, &mut |_, _| {})
 }
 
+/// Run one seeded scenario with prefix-shared grouped decode enabled
+/// (everything else identical to [`run_scenario`]). Grouping reuses
+/// shared-prefix attention compute but must never change an output, so
+/// for every seed the report — fingerprint included — must equal
+/// [`run_scenario`]'s byte for byte; `tests/differential_backends.rs`
+/// asserts this over the seed matrix.
+pub fn run_scenario_grouped(seed: u64) -> Result<ScenarioReport, Violation> {
+    let scenario = generate_scenario(seed);
+    let cfg = EngineConfig {
+        grouped_decode: true,
+        ..scenario.cfg.clone()
+    };
+    let engine = SimEngine::new(cfg, SimSpec::default()).map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("grouped engine construction failed: {e}"),
+    })?;
+    run_with_hook(&scenario, engine, &mut |_, _| {})
+}
+
 /// Run a scenario on any [`Backend`] (the engine must have been built
 /// from `scenario.cfg`). The differential lockstep test drives the sim
 /// and stub backends through the same scenario and asserts equal

@@ -21,6 +21,12 @@
 //! hook-trace lockstep pins the exact order the wrapper drives each
 //! lane's join/leave/pause/resume bookkeeping.
 //!
+//! The grouped-decode matrix closes the loop: with
+//! `EngineConfig::grouped_decode` enabled the sim backend reuses
+//! shared-prefix attention compute per `DecodeGroup`, and every seed's
+//! report must still equal the ungrouped baseline's byte for byte —
+//! reuse is a pure compute optimization, never a behavior change.
+//!
 //! A divergence names the seed; replay it with
 //! `cargo run --example simtest -- --seed N` (add `--shards M` for the
 //! sharded run).
@@ -31,7 +37,8 @@ use fdpp::core::{EngineCore, StubEngine};
 use fdpp::shard::{ShardHook, ShardedBackend};
 use fdpp::simengine::{SimBackend, SimEngine, SimSpec};
 use fdpp::simtest::{
-    generate_scenario, run_scenario, run_scenario_on, run_scenario_sharded, trace_fingerprint,
+    generate_scenario, run_scenario, run_scenario_grouped, run_scenario_on, run_scenario_sharded,
+    trace_fingerprint,
 };
 use fdpp::util::clock::Clock;
 
@@ -139,6 +146,27 @@ fn seed_matrix_fingerprints_are_shard_count_invariant() {
         }
     }
     assert!(diverged.is_empty(), "diverging (seed, M): {diverged:?}");
+}
+
+/// Grouped decode reuses shared-prefix attention compute; it must
+/// never change a scheduling decision or an output token. Every seed's
+/// report with `grouped_decode` enabled must equal the ungrouped
+/// baseline's byte for byte — fingerprint included.
+#[test]
+fn seed_matrix_fingerprints_are_grouping_invariant() {
+    let mut diverged = Vec::new();
+    for seed in SEED_MATRIX {
+        let baseline = run_scenario(seed).expect("sim backend passes oracles");
+        let grouped = run_scenario_grouped(seed).expect("grouped run passes oracles");
+        if baseline != grouped {
+            eprintln!(
+                "seed {seed}: ungrouped fp {:016x} != grouped fp {:016x}",
+                baseline.fingerprint, grouped.fingerprint
+            );
+            diverged.push(seed);
+        }
+    }
+    assert!(diverged.is_empty(), "diverging seeds: {diverged:?}");
 }
 
 /// Step a sharded engine in lockstep with a plain sim engine under a
