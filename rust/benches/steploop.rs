@@ -1,0 +1,130 @@
+//! Step-loop economics: the pinned decode-heavy workload drained
+//! across the chunk×batch grid (chunk∈{1,2,4,8} × batch∈{1,4,8}),
+//! reporting virtual-time throughput, per-step orchestration overhead
+//! share, and allocations per generated token (`BENCH_steploop.json`).
+//!
+//! The bench binary installs a counting global allocator, so the
+//! allocations-per-token column is measured, not modeled. Runs
+//! [`fdpp::bench_support::steploop_report`] twice at the pinned seed,
+//! asserts the two reports are byte-identical (virtual clock, seeded
+//! workload, deterministic allocation sequence — regressions show up
+//! as a *changed* report, never as noise), asserts the overhead share
+//! strictly decreases as the chunk grows and that chunk 4 clears chunk
+//! 1's tokens/s by ≥20% at every batch size, prints the grid, and
+//! writes `BENCH_steploop.json` to the working directory.
+//!
+//!   cargo bench --bench steploop
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fdpp::bench_support::{banner, row, steploop_report, STEPLOOP_SEED};
+use fdpp::util::json::Json;
+
+/// Counts every heap allocation (including reallocations) made through
+/// the global allocator; frees are not counted — the report cares
+/// about allocation *pressure* per token, and a steady-state step that
+/// allocates nothing also frees nothing.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const CHUNKS: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
+const BATCHES: [f64; 3] = [1.0, 4.0, 8.0];
+
+fn main() {
+    banner(
+        "BENCH_steploop",
+        "chunked decode steps: orchestration overhead and allocation pressure",
+    );
+    let counter = || ALLOCS.load(Ordering::Relaxed);
+    let report = steploop_report(STEPLOOP_SEED, Some(&counter)).expect("harness runs");
+    let again = steploop_report(STEPLOOP_SEED, Some(&counter)).expect("harness runs");
+    let text = report.to_string();
+    assert_eq!(
+        text,
+        again.to_string(),
+        "step-loop report must be byte-identical across runs of the same seed"
+    );
+
+    let cells = report
+        .get("grid")
+        .and_then(Json::as_arr)
+        .expect("report carries the grid");
+    let num = |chunk: f64, batch: f64, key: &str| {
+        cells
+            .iter()
+            .find(|c| {
+                c.get("chunk").and_then(Json::as_f64) == Some(chunk)
+                    && c.get("batch").and_then(Json::as_f64) == Some(batch)
+            })
+            .and_then(|c| c.get(key))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("report missing grid[chunk={chunk},batch={batch}].{key}"))
+    };
+
+    row(
+        "chunk \\ batch",
+        &BATCHES.iter().map(|b| format!("{b:.0}")).collect::<Vec<_>>(),
+    );
+    for &c in &CHUNKS {
+        let vals: Vec<String> = BATCHES
+            .iter()
+            .map(|&b| {
+                let tps = num(c, b, "tokens_per_sec");
+                let ov = num(c, b, "overhead_share");
+                format!("{tps:.0}/{:.0}%", ov * 100.0)
+            })
+            .collect();
+        row(&format!("chunk={c:.0} tok/s / ovh%"), &vals);
+    }
+    let apt: Vec<String> = BATCHES
+        .iter()
+        .map(|&b| format!("{:.2}", num(8.0, b, "allocs_per_token")))
+        .collect();
+    row("allocs/token (chunk=8)", &apt);
+
+    for &batch in &BATCHES {
+        let (o1, o2, o4, o8) = (
+            num(1.0, batch, "overhead_share"),
+            num(2.0, batch, "overhead_share"),
+            num(4.0, batch, "overhead_share"),
+            num(8.0, batch, "overhead_share"),
+        );
+        assert!(
+            o1 > o2 && o2 > o4 && o4 > o8,
+            "overhead share at batch {batch} must strictly decrease in chunk: \
+             {o1:.3} {o2:.3} {o4:.3} {o8:.3}"
+        );
+        let (tps1, tps4) = (
+            num(1.0, batch, "tokens_per_sec"),
+            num(4.0, batch, "tokens_per_sec"),
+        );
+        assert!(
+            tps4 >= 1.2 * tps1,
+            "chunk-4 tokens/s {tps4:.0} must clear chunk-1 {tps1:.0} by >=20% at batch {batch}"
+        );
+    }
+
+    std::fs::write("BENCH_steploop.json", format!("{text}\n")).expect("write BENCH_steploop.json");
+    println!("\nwrote BENCH_steploop.json ({} bytes)", text.len() + 1);
+}

@@ -25,7 +25,7 @@ pub fn pick_prefill_bucket(buckets: &[usize], len: usize) -> Option<usize> {
 }
 
 /// The decode batch the engine will execute this step.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct DecodeBatch {
     /// `lanes[i]` holds the sequence in lane i; None = padding hole.
     pub lanes: Vec<Option<SeqId>>,
@@ -82,6 +82,19 @@ impl Batcher {
     /// Sequence ids currently running, in lane order.
     pub fn running_ids(&self) -> Vec<SeqId> {
         self.lanes.iter().filter_map(|l| *l).collect()
+    }
+
+    /// [`Batcher::running_ids`] into a caller-owned buffer (cleared
+    /// first) — the step loop's allocation-free variant; the buffer's
+    /// capacity ratchets up to the largest bucket and stays there.
+    pub fn running_ids_into(&self, out: &mut Vec<SeqId>) {
+        out.clear();
+        out.extend(self.lanes.iter().filter_map(|l| *l));
+    }
+
+    /// Iterate running ids in lane order without allocating.
+    pub fn iter_running(&self) -> impl Iterator<Item = SeqId> + '_ {
+        self.lanes.iter().filter_map(|l| *l)
     }
 
     pub fn contains(&self, id: SeqId) -> bool {
@@ -152,6 +165,18 @@ impl Batcher {
             lanes: self.lanes.clone(),
             bucket: self.lanes.len(),
         })
+    }
+
+    /// [`Batcher::assemble`] into a caller-owned batch (lanes cleared
+    /// and refilled) — the step loop's allocation-free variant.
+    pub fn assemble_into(&self, out: &mut DecodeBatch) -> Result<()> {
+        if self.count == 0 {
+            return Err(Error::Schedule("nothing to decode".into()));
+        }
+        out.lanes.clear();
+        out.lanes.extend_from_slice(&self.lanes);
+        out.bucket = self.lanes.len();
+        Ok(())
     }
 }
 

@@ -210,6 +210,16 @@ pub struct EngineConfig {
     /// >= 1; this also bounds how many *finished* request spans are
     /// retained for inspection.
     pub flight_recorder_capacity: usize,
+    /// Decode chunking (Kernel-Looping-style orchestration
+    /// amortization): each running sequence may generate up to this
+    /// many tokens inside one scheduler step, with per-token early exit
+    /// on stop sequences, `max_new_tokens`, and stream credit — credit
+    /// is checked before every token, so the lossless-stream guarantee
+    /// is unchanged. Policy work (stream servicing, admission planning,
+    /// preemption scans, decode-group formation) runs once per chunk
+    /// boundary instead of once per token. Must be >= 1; 1 is the
+    /// classic one-token-per-step loop.
+    pub decode_chunk: usize,
 }
 
 impl Default for EngineConfig {
@@ -233,6 +243,7 @@ impl Default for EngineConfig {
             stream_idle_timeout_ms: 0,
             tenant_max_inflight: 0,
             flight_recorder_capacity: 512,
+            decode_chunk: 1,
         }
     }
 }
@@ -296,6 +307,7 @@ impl EngineConfig {
                 "flight_recorder_capacity",
                 d.flight_recorder_capacity,
             ),
+            decode_chunk: usizes("decode_chunk", d.decode_chunk),
         })
     }
 
@@ -334,6 +346,11 @@ impl EngineConfig {
         if self.flight_recorder_capacity == 0 {
             return Err(Error::Config(
                 "flight_recorder_capacity must be at least 1".into(),
+            ));
+        }
+        if self.decode_chunk == 0 {
+            return Err(Error::Config(
+                "decode_chunk must be at least 1".into(),
             ));
         }
         Ok(())
@@ -496,6 +513,11 @@ mod tests {
         c.stream_capacity = 256;
         c.flight_recorder_capacity = 0;
         assert!(c.validate().is_err(), "zero flight capacity rejected");
+        c.flight_recorder_capacity = 512;
+        c.decode_chunk = 0;
+        assert!(c.validate().is_err(), "zero decode chunk rejected");
+        c.decode_chunk = 4;
+        c.validate().unwrap();
     }
 
     #[test]

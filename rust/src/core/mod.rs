@@ -45,6 +45,7 @@
 pub mod stub;
 
 use std::collections::HashMap;
+use std::fmt::Write as _;
 use std::time::Duration;
 
 use crate::api::{
@@ -56,11 +57,11 @@ use crate::error::{Error, Result};
 use crate::kvcache::{KvAudit, KvCache, KvGeometry, SeqId};
 use crate::metrics::EngineMetrics;
 use crate::obs::{FlightRecorder, SpanTable};
-use crate::policy::{self, StreamOp};
+use crate::policy::{self, StreamOp, StreamVerdict};
 use crate::prefixcache::PrefixCache;
 use crate::router::{self, Router, SeqState, Sequence, SubmitContext};
 use crate::sampling::Sampler;
-use crate::scheduler::{decide, preemption_victim, Action};
+use crate::scheduler::{decide, preemption_victim, Action, PreemptCandidate};
 use crate::tokenizer::{ByteTokenizer, EOS};
 use crate::util::clock::Clock;
 use crate::util::json::Json;
@@ -219,30 +220,49 @@ fn audit_accounting(audit: &EngineAudit) -> (Option<String>, usize) {
     (error, leaked)
 }
 
-/// Compact one-line rendering of a [`TraceEvent`] for the flight
-/// recorder (human-readable in dumps and violation reports; bounded in
-/// size even for large preemption pools).
-fn flight_line(ev: &TraceEvent) -> String {
-    match ev {
-        TraceEvent::Admitted { id, cached } => format!("admitted id={id} cached={cached}"),
-        TraceEvent::Token { id, token } => format!("token id={id} tok={token}"),
-        TraceEvent::Paused { id } => format!("paused id={id}"),
-        TraceEvent::Resumed { id } => format!("resumed id={id}"),
-        TraceEvent::Expired { id } => format!("expired id={id}"),
+/// Compact one-line rendering of a [`TraceEvent`], written straight
+/// into a flight-recorder entry buffer (human-readable in dumps and
+/// violation reports; bounded in size even for large preemption
+/// pools). Paired with [`FlightRecorder::record_with`], so a full ring
+/// renders into recycled strings and the decode hot path records
+/// without allocating.
+fn flight_write(buf: &mut String, ev: &TraceEvent) {
+    let _ = match ev {
+        TraceEvent::Admitted { id, cached } => write!(buf, "admitted id={id} cached={cached}"),
+        TraceEvent::Token { id, token } => write!(buf, "token id={id} tok={token}"),
+        TraceEvent::Paused { id } => write!(buf, "paused id={id}"),
+        TraceEvent::Resumed { id } => write!(buf, "resumed id={id}"),
+        TraceEvent::Expired { id } => write!(buf, "expired id={id}"),
         TraceEvent::Preempted { id, priority, pool } => {
-            format!("preempted id={id} prio={priority} pool={}", pool.len())
+            write!(buf, "preempted id={id} prio={priority} pool={}", pool.len())
         }
         TraceEvent::AdmissionRelief {
             id,
             priority,
             waiter_priority,
-        } => format!("admission_relief id={id} prio={priority} waiter_prio={waiter_priority}"),
-        TraceEvent::Finished { id, reason, usage } => format!(
+        } => write!(
+            buf,
+            "admission_relief id={id} prio={priority} waiter_prio={waiter_priority}"
+        ),
+        TraceEvent::Finished { id, reason, usage } => write!(
+            buf,
             "finished id={id} reason={} gen={}",
             reason.as_str(),
             usage.generated_tokens
         ),
+    };
+}
+
+/// FNV-1a over a prompt's tokens: the in-flight dedup table's key.
+/// Keying by hash instead of by owned prompt removes the per-admission
+/// prompt `clone()`; collisions are harmless because every lookup
+/// re-verifies the holder's actual prompt against the waiter's.
+fn prompt_key(prompt: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in prompt {
+        h = (h ^ t as u64).wrapping_mul(0x100_0000_01b3);
     }
+    h
 }
 
 /// KV refcount conservation over a full audit snapshot: every block's
@@ -514,6 +534,12 @@ pub trait Backend {
         self.decode(cfg, kv, seqs, batch, inputs, metrics, clock)
     }
 
+    /// The decode step's output buffers are done being read; a backend
+    /// may take them back for its next step (the sim backend reclaims
+    /// its logits/offsets allocations here, closing the last per-round
+    /// allocation on the decode hot path). Default: drop them.
+    fn recycle_run(&mut self, _run: DecodeRun) {}
+
     /// A sequence left the decode batch (finished, preempted, dropped,
     /// or disconnected); `shrank` reports bucket compaction.
     fn on_batch_leave(&mut self, _kv: &mut KvCache, _id: SeqId, _shrank: bool) -> Result<()> {
@@ -542,6 +568,37 @@ pub trait Backend {
 // The core
 // ---------------------------------------------------------------------
 
+/// Persistent step-loop scratch owned by the core: every buffer the
+/// hot path fills and drains each round lives here, cleared and
+/// refilled instead of reallocated, so steady-state decode performs
+/// zero heap allocations per token (the invariant
+/// `tests/prop_steploop.rs` enforces with a counting allocator).
+/// Capacities only ratchet up — to the largest bucket, plan, or pool
+/// seen — and stay there for the engine's life.
+#[derive(Debug, Default)]
+struct StepScratch {
+    /// Occupied-lane inputs for the current decode round.
+    inputs: Vec<LaneInput>,
+    /// Lanes that finished this round, retired after row processing.
+    finished: Vec<(SeqId, FinishReason)>,
+    /// Tokens emitted this round, traced after row processing.
+    emitted: Vec<(SeqId, u32)>,
+    /// Lane-ordered running ids for the stream planner.
+    running_ids: Vec<SeqId>,
+    /// The per-step flow-control plan.
+    stream_ops: Vec<StreamOp>,
+    /// Preemption victim pool (running + paused).
+    pool: Vec<SeqId>,
+    /// Preemption census over `pool`.
+    candidates: Vec<PreemptCandidate>,
+    /// The assembled decode batch.
+    batch: DecodeBatch,
+    /// Prefix-sharing groups, reused across chunk rounds while the
+    /// lane set is unchanged (grouped decode only; reforming allocates,
+    /// so the grouped path is outside the zero-alloc claim).
+    groups: Vec<DecodeGroup>,
+}
+
 /// The serving engine, generic over its compute [`Backend`]. Owns all
 /// sequence state; not `Send` for PJRT backends — run it on a dedicated
 /// thread and talk to it via [`crate::server::EngineJob`] channels.
@@ -569,11 +626,14 @@ pub struct EngineCore<B: Backend> {
     wakeup: Option<Wakeup>,
     /// Scheduling-event trace (None until [`EngineCore::enable_trace`]).
     trace: Option<Vec<TraceEvent>>,
-    /// In-flight prefix table (cross-request dedup): full prompt → the
-    /// admitted, still-decoding sequence computing its KV. A second
-    /// admission of an identical uncached prompt waits for the holder's
-    /// retirement and shares its blocks instead of racing it.
-    inflight_prompts: HashMap<Vec<u32>, SeqId>,
+    /// In-flight prefix table (cross-request dedup): [`prompt_key`]
+    /// hash of the full prompt → the admitted, still-decoding sequence
+    /// computing its KV. A second admission of an identical uncached
+    /// prompt waits for the holder's retirement and shares its blocks
+    /// instead of racing it. Hash-keyed so admission never clones the
+    /// prompt; lookups verify the holder's real prompt, so a collision
+    /// is a missed dedup, never a wrong wait.
+    inflight_prompts: HashMap<u64, SeqId>,
     /// Per-tenant in-flight request counts (queued + running + paused),
     /// enforced against [`EngineConfig::tenant_max_inflight`] at
     /// submit.
@@ -587,6 +647,8 @@ pub struct EngineCore<B: Backend> {
     /// box behind `{"admin": {"dump_flight": n}}`), unlike the opt-in
     /// unbounded `trace`.
     flight: FlightRecorder,
+    /// Reused step-loop buffers (see [`StepScratch`]).
+    scratch: StepScratch,
     pub metrics: EngineMetrics,
     pub tokenizer: ByteTokenizer,
 }
@@ -612,6 +674,7 @@ impl<B: Backend> EngineCore<B> {
             tenant_inflight: HashMap::new(),
             spans: SpanTable::new(cfg.flight_recorder_capacity),
             flight: FlightRecorder::new(cfg.flight_recorder_capacity),
+            scratch: StepScratch::default(),
             metrics: EngineMetrics::default(),
             tokenizer,
             backend,
@@ -667,8 +730,11 @@ impl<B: Backend> EngineCore<B> {
 
     fn push_trace(&mut self, ev: TraceEvent) {
         // Every traceable event also lands in the bounded flight ring,
-        // whether or not the unbounded opt-in trace is armed.
-        self.flight.record(self.clock.now(), flight_line(&ev));
+        // whether or not the unbounded opt-in trace is armed. Rendering
+        // goes through the ring's string-recycling path, so a full ring
+        // records without allocating.
+        self.flight
+            .record_with(self.clock.now(), |buf| flight_write(buf, &ev));
         if let Some(t) = self.trace.as_mut() {
             t.push(ev);
         }
@@ -759,7 +825,19 @@ impl<B: Backend> EngineCore<B> {
         // deferring voluntarily, so same-priority requests with other
         // prompts must keep admitting ahead of it.
         if self.cfg.prefix_cache {
-            let holder = self.inflight_prompts.get(&seq.prompt).copied();
+            // The table is hash-keyed: confirm the holder really
+            // carries this prompt before deferring behind it (a
+            // collision must be a missed dedup, never a wrong wait).
+            let holder = self
+                .inflight_prompts
+                .get(&prompt_key(&seq.prompt))
+                .copied()
+                .filter(|h| {
+                    self.seqs
+                        .get(h)
+                        .map(|s| s.prompt == seq.prompt)
+                        .unwrap_or(false)
+                });
             if let Some(holder) = holder {
                 let holder_running = self
                     .seqs
@@ -776,7 +854,7 @@ impl<B: Backend> EngineCore<B> {
                         self.metrics.dedup_hits += 1;
                     }
                     self.router.enqueue(seq);
-                    return self.step_decode();
+                    return self.step_decode().map(|_| ());
                 }
             }
         }
@@ -820,7 +898,7 @@ impl<B: Backend> EngineCore<B> {
                     }
                 }
                 self.router.requeue_front(seq);
-                return self.step_decode();
+                return self.step_decode().map(|_| ());
             }
             Err(_) => {
                 // Truly stuck: nothing is running and eviction is
@@ -902,9 +980,9 @@ impl<B: Backend> EngineCore<B> {
                 }
             };
             // The dedup table is only ever read under prefix_cache, so
-            // don't pay the prompt clone without it.
+            // don't pay the hash without it.
             if self.cfg.prefix_cache {
-                self.inflight_prompts.insert(seq.prompt.clone(), seq.id);
+                self.inflight_prompts.insert(prompt_key(&seq.prompt), seq.id);
             }
             self.seqs.insert(seq.id, seq);
         }
@@ -919,130 +997,198 @@ impl<B: Backend> EngineCore<B> {
     // Decode
     // -----------------------------------------------------------------
 
-    fn step_decode(&mut self) -> Result<()> {
+    /// One decode step: up to `decode_chunk` rounds of the classic
+    /// one-token-per-lane loop, fused behind a single pass of the
+    /// per-step policy work (stream scan, admission planning,
+    /// scheduling) — the Kernel-Looping move applied to orchestration.
+    /// Rounds after the first run only while chunking is provably
+    /// invisible ([`EngineCore::chunk_can_continue`]); KV headroom and
+    /// preemption still run every round, and stream credit still gates
+    /// every token, so the lossless-stream and conservation oracles
+    /// hold unchanged at any chunk size. Returns the number of tokens
+    /// emitted — the weight [`EngineCore::step`] feeds the chunk-aware
+    /// `attr_decode` attribution.
+    fn step_decode(&mut self) -> Result<usize> {
         let t0 = self.clock.now();
-        // The stream scan may have paused or dropped every running
-        // sequence; there is nothing to decode then.
-        if self.batcher.is_empty() {
-            return Ok(());
-        }
-        // KV headroom via the shared policy: reclaim cached blocks
-        // first, preempt last. The victim pool spans running *and*
-        // backpressure-paused sequences (parked work holds KV too).
-        while policy::reclaim_decode_headroom(
-            &mut self.kv,
-            &mut self.prefix,
-            &mut self.metrics,
-            self.batcher.len(),
-            self.batcher.len() + self.paused.len(),
-        ) {
-            self.preempt_one()?;
-        }
-        if self.batcher.is_empty() {
-            return Ok(()); // preemption may have taken the last runner
-        }
-        let batch = self.batcher.assemble()?;
-        let max_seq = self.kv.geometry().max_seq;
-        let mut inputs = Vec::with_capacity(batch.occupancy());
-        for (lane, slot) in batch.lanes.iter().enumerate() {
-            let Some(id) = slot else { continue };
-            let s = &self.seqs[id];
-            inputs.push(LaneInput {
-                lane,
-                id: *id,
-                token: s.last_token(),
-                pos: s.kv_len,
-            });
-        }
-        // Logical attention span of this step (every row attends over
-        // its full stored prefix + the new token), recorded for every
-        // backend so grouped runs can report their measured savings as
-        // a fraction of the same denominator an ungrouped run has.
-        self.metrics.decode_attn_positions_total += inputs
-            .iter()
-            .map(|inp| (inp.pos + 1) as u64)
-            .sum::<u64>();
-        let run = if self.cfg.grouped_decode {
-            let groups = form_decode_groups(&self.kv, &inputs);
-            if !groups.is_empty() {
-                self.metrics.grouped_decode_steps += 1;
-                self.metrics.grouped_groups_formed += groups.len() as u64;
-                self.metrics.grouped_rows +=
-                    groups.iter().map(|g| g.members.len() as u64).sum::<u64>();
+        let mut total_rows = 0usize;
+        let mut exec_dt = Duration::ZERO;
+        // Decode-group formation is reused across rounds while the
+        // lane set is unchanged; finishes and preemptions mark it
+        // dirty.
+        let mut lanes_dirty = true;
+        for round in 0..self.cfg.decode_chunk.max(1) {
+            // The stream scan (or an earlier round) may have drained
+            // every running sequence; there is nothing to decode then.
+            if self.batcher.is_empty() {
+                break;
             }
-            self.backend.decode_grouped(
-                &self.cfg,
-                &mut self.kv,
-                &self.seqs,
-                &batch,
-                &inputs,
-                &groups,
-                &mut self.metrics,
-                &self.clock,
-            )?
-        } else {
-            self.backend.decode(
-                &self.cfg,
-                &mut self.kv,
-                &self.seqs,
-                &batch,
-                &inputs,
-                &mut self.metrics,
-                &self.clock,
-            )?
-        };
-        if run.offsets.len() != inputs.len() {
-            return Err(Error::Schedule(format!(
-                "backend returned {} logits rows for {} lanes",
-                run.offsets.len(),
-                inputs.len()
-            )));
-        }
-        let mut finished: Vec<(SeqId, FinishReason)> = Vec::new();
-        let mut emitted: Vec<(SeqId, u32)> = Vec::new();
-        for (i, inp) in inputs.iter().enumerate() {
-            let logits = run.row(i);
-            let seq = self.seqs.get_mut(&inp.id).unwrap();
-            seq.kv_len += 1;
-            let new_tok = self.sampler.sample(logits, seq.params);
-            seq.generated.push(new_tok);
-            // Cannot be Full: the pre-decode stream scan guaranteed at
-            // least one credit and this is the step's only token. A
-            // mid-step disconnect is reaped by the next scan.
-            let _ = seq.emit_token(new_tok);
-            emitted.push((inp.id, new_tok));
-            self.metrics.tokens_generated += 1;
-            self.metrics.decode_rows += 1;
-            let done_eos = new_tok == EOS;
-            let done_stop = seq.hit_stop();
-            let done_len =
-                seq.generated.len() >= seq.max_new_tokens || seq.kv_len + 1 >= max_seq;
-            if done_eos || done_stop || done_len {
-                let reason = if done_eos {
-                    FinishReason::Eos
-                } else if done_stop {
-                    FinishReason::Stop
-                } else {
-                    FinishReason::MaxTokens
-                };
-                finished.push((inp.id, reason));
+            if round > 0 && !self.chunk_can_continue() {
+                break;
             }
+            // KV headroom via the shared policy, every round: reclaim
+            // cached blocks first, preempt last. The victim pool spans
+            // running *and* backpressure-paused sequences (parked work
+            // holds KV too).
+            while policy::reclaim_decode_headroom(
+                &mut self.kv,
+                &mut self.prefix,
+                &mut self.metrics,
+                self.batcher.len(),
+                self.batcher.len() + self.paused.len(),
+            ) {
+                self.preempt_one()?;
+                lanes_dirty = true;
+            }
+            if self.batcher.is_empty() {
+                break; // preemption may have taken the last runner
+            }
+            self.batcher.assemble_into(&mut self.scratch.batch)?;
+            let max_seq = self.kv.geometry().max_seq;
+            self.scratch.inputs.clear();
+            for (lane, slot) in self.scratch.batch.lanes.iter().enumerate() {
+                let Some(id) = slot else { continue };
+                let s = &self.seqs[id];
+                self.scratch.inputs.push(LaneInput {
+                    lane,
+                    id: *id,
+                    token: s.last_token(),
+                    pos: s.kv_len,
+                });
+            }
+            // Logical attention span of this round (every row attends
+            // over its full stored prefix + the new token), recorded
+            // for every backend so grouped runs can report their
+            // measured savings as a fraction of the same denominator an
+            // ungrouped run has.
+            self.metrics.decode_attn_positions_total += self
+                .scratch
+                .inputs
+                .iter()
+                .map(|inp| (inp.pos + 1) as u64)
+                .sum::<u64>();
+            let run = if self.cfg.grouped_decode {
+                if lanes_dirty {
+                    // Group membership depends only on lane composition
+                    // and whole *stored* blocks; with the lane set
+                    // stable, a previous round's (possibly shorter)
+                    // prefix is still a valid advisory group — stored
+                    // coverage only grows and full shared blocks are
+                    // never copy-on-written — so reforming every round
+                    // buys nothing.
+                    self.scratch.groups = form_decode_groups(&self.kv, &self.scratch.inputs);
+                }
+                if !self.scratch.groups.is_empty() {
+                    self.metrics.grouped_decode_steps += 1;
+                    self.metrics.grouped_groups_formed += self.scratch.groups.len() as u64;
+                    self.metrics.grouped_rows += self
+                        .scratch
+                        .groups
+                        .iter()
+                        .map(|g| g.members.len() as u64)
+                        .sum::<u64>();
+                }
+                self.backend.decode_grouped(
+                    &self.cfg,
+                    &mut self.kv,
+                    &self.seqs,
+                    &self.scratch.batch,
+                    &self.scratch.inputs,
+                    &self.scratch.groups,
+                    &mut self.metrics,
+                    &self.clock,
+                )?
+            } else {
+                self.backend.decode(
+                    &self.cfg,
+                    &mut self.kv,
+                    &self.seqs,
+                    &self.scratch.batch,
+                    &self.scratch.inputs,
+                    &mut self.metrics,
+                    &self.clock,
+                )?
+            };
+            if run.offsets.len() != self.scratch.inputs.len() {
+                return Err(Error::Schedule(format!(
+                    "backend returned {} logits rows for {} lanes",
+                    run.offsets.len(),
+                    self.scratch.inputs.len()
+                )));
+            }
+            self.scratch.finished.clear();
+            self.scratch.emitted.clear();
+            for i in 0..self.scratch.inputs.len() {
+                let inp = self.scratch.inputs[i];
+                let logits = run.row(i);
+                let seq = self.seqs.get_mut(&inp.id).unwrap();
+                seq.kv_len += 1;
+                let new_tok = self.sampler.sample(logits, seq.params);
+                seq.generated.push(new_tok);
+                // Cannot be Full: the pre-round credit check guaranteed
+                // at least one slot and this is the round's only token
+                // for this lane. A mid-step disconnect is reaped by the
+                // next stream scan.
+                let _ = seq.emit_token(new_tok);
+                self.scratch.emitted.push((inp.id, new_tok));
+                self.metrics.tokens_generated += 1;
+                self.metrics.decode_rows += 1;
+                let done_eos = new_tok == EOS;
+                let done_stop = seq.hit_stop();
+                let done_len =
+                    seq.generated.len() >= seq.max_new_tokens || seq.kv_len + 1 >= max_seq;
+                if done_eos || done_stop || done_len {
+                    let reason = if done_eos {
+                        FinishReason::Eos
+                    } else if done_stop {
+                        FinishReason::Stop
+                    } else {
+                        FinishReason::MaxTokens
+                    };
+                    self.scratch.finished.push((inp.id, reason));
+                }
+            }
+            total_rows += self.scratch.inputs.len();
+            exec_dt += run.exec_time;
+            // Rows are consumed; hand the run's buffers back for reuse.
+            self.backend.recycle_run(run);
+            for i in 0..self.scratch.emitted.len() {
+                let (id, token) = self.scratch.emitted[i];
+                self.push_trace(TraceEvent::Token { id, token });
+            }
+            lanes_dirty = !self.scratch.finished.is_empty();
+            for i in 0..self.scratch.finished.len() {
+                let (id, reason) = self.scratch.finished[i];
+                let mut seq = self.seqs.remove(&id).unwrap();
+                self.remove_from_batch(id)?;
+                self.finish_seq(&mut seq, reason)?;
+            }
+            self.metrics.decode_steps += 1;
         }
-        for (id, token) in emitted {
-            self.push_trace(TraceEvent::Token { id, token });
+        if total_rows > 0 {
+            let dt = self.clock.now().saturating_sub(t0);
+            self.metrics.step.record(dt);
+            self.metrics.step_overhead.record(dt.saturating_sub(exec_dt));
+            self.metrics.per_token.record(dt / total_rows as u32);
         }
-        for (id, reason) in finished {
-            let mut seq = self.seqs.remove(&id).unwrap();
-            self.remove_from_batch(id)?;
-            self.finish_seq(&mut seq, reason)?;
-        }
-        self.metrics.decode_steps += 1;
-        let dt = self.clock.now().saturating_sub(t0);
-        self.metrics.step.record(dt);
-        self.metrics.step_overhead.record(dt.saturating_sub(run.exec_time));
-        let lanes = batch.occupancy().max(1) as u32;
-        self.metrics.per_token.record(dt / lanes);
-        Ok(())
+        Ok(total_rows)
+    }
+
+    /// Whether a later chunk round may run without being observable:
+    /// nothing queued that the skipped admission pass could admit,
+    /// nothing parked that the skipped stream scan could resume, reap,
+    /// or expire, and every running stream still holding credit (so
+    /// that scan would plan zero transitions). In exactly this state
+    /// the between-token policy passes of an unchunked run are provable
+    /// no-ops, so skipping them is invisible; any other state ends the
+    /// chunk early and returns control to the full per-step path — the
+    /// run then behaves like one with a smaller chunk.
+    fn chunk_can_continue(&self) -> bool {
+        self.router.queued() == 0
+            && self.paused.is_empty()
+            && self
+                .batcher
+                .iter_running()
+                .all(|id| policy::stream_verdict(&self.seqs[&id]) == StreamVerdict::Flowing)
     }
 
     /// Remove a sequence from the decode batch, keeping any
@@ -1057,18 +1203,39 @@ impl<B: Backend> EngineCore<B> {
     /// reclaimable like any other), ordered by the scheduler's
     /// (priority asc, parked first, reusable desc, recency) rule.
     fn preempt_one(&mut self) -> Result<()> {
-        let mut pool = self.batcher.running_ids();
-        pool.extend(self.paused.iter().copied());
-        let candidates = policy::preempt_candidates(&self.kv, &self.seqs, &pool);
-        let id = preemption_victim(&candidates)
+        self.batcher.running_ids_into(&mut self.scratch.pool);
+        self.scratch.pool.extend(self.paused.iter().copied());
+        policy::preempt_candidates_into(
+            &self.kv,
+            &self.seqs,
+            &self.scratch.pool,
+            &mut self.scratch.candidates,
+        );
+        let id = preemption_victim(&self.scratch.candidates)
             .ok_or_else(|| Error::Schedule("no preemption victim".into()))?;
         let mut seq = self.seqs.remove(&id).unwrap();
         self.metrics.preemptions += 1;
-        self.push_trace(TraceEvent::Preempted {
-            id,
-            priority: seq.priority,
-            pool: candidates.iter().map(|c| (c.id, c.priority)).collect(),
+        // The flight line carries only the pool *size*, so it renders
+        // through the ring's recycling path without materializing the
+        // pool; the full `(id, priority)` copy exists for oracles to
+        // audit the victim choice, and is built only when the unbounded
+        // trace is armed to record it.
+        let pool_len = self.scratch.candidates.len();
+        let priority = seq.priority;
+        self.flight.record_with(self.clock.now(), |buf| {
+            let _ = write!(buf, "preempted id={id} prio={priority} pool={pool_len}");
         });
+        if self.trace.is_some() {
+            let pool = self
+                .scratch
+                .candidates
+                .iter()
+                .map(|c| (c.id, c.priority))
+                .collect();
+            if let Some(t) = self.trace.as_mut() {
+                t.push(TraceEvent::Preempted { id, priority, pool });
+            }
+        }
         if self.paused.contains(&id) {
             // Paused sequences hold no lane and no backend batch slot.
             self.paused.retain(|&p| p != id);
@@ -1094,17 +1261,22 @@ impl<B: Backend> EngineCore<B> {
     fn service_streams(&mut self) -> Result<()> {
         let free_lanes = self.cfg.max_running.saturating_sub(self.batcher.len());
         let now = self.clock.now();
-        let ops = policy::plan_stream_ops(
+        self.batcher.running_ids_into(&mut self.scratch.running_ids);
+        policy::plan_stream_ops_into(
             &self.seqs,
             &self.paused,
-            &self.batcher.running_ids(),
+            &self.scratch.running_ids,
             self.cfg.backpressure,
             free_lanes,
             now,
             self.cfg.stream_idle_timeout(),
+            &mut self.scratch.stream_ops,
         );
-        for op in ops {
-            match op {
+        // Drain the plan by index: ops are Copy and no transition below
+        // re-enters the planner, so the buffer is stable across the
+        // loop.
+        for i in 0..self.scratch.stream_ops.len() {
+            match self.scratch.stream_ops[i] {
                 StreamOp::Resume(id) => {
                     let admission = self.batcher.admit(id)?;
                     self.backend.on_resume(&mut self.kv, &admission)?;
@@ -1207,8 +1379,11 @@ impl<B: Backend> EngineCore<B> {
         if self.kv.contains(seq.id) {
             self.kv.free_seq(seq.id)?;
         }
-        if self.inflight_prompts.get(&seq.prompt) == Some(&seq.id) {
-            self.inflight_prompts.remove(&seq.prompt);
+        // Holder-id match suffices for removal: a key mapping to this
+        // sequence's id can only have been inserted by this sequence.
+        let key = prompt_key(&seq.prompt);
+        if self.inflight_prompts.get(&key) == Some(&seq.id) {
+            self.inflight_prompts.remove(&key);
         }
         let tenant_drained = match self.tenant_inflight.get_mut(&seq.tenant) {
             Some(n) => {
@@ -1271,7 +1446,10 @@ impl<B: Backend> InferenceEngine for EngineCore<B> {
         *self.tenant_inflight.entry(tenant).or_default() += 1;
         let now = self.clock.now();
         self.spans.submitted(handle.id, now);
-        self.flight.record(now, format!("submitted id={}", handle.id));
+        let id = handle.id;
+        self.flight.record_with(now, |buf| {
+            let _ = write!(buf, "submitted id={id}");
+        });
         Ok(handle)
     }
 
@@ -1314,10 +1492,14 @@ impl<B: Backend> InferenceEngine for EngineCore<B> {
                     .record(self.clock.now().saturating_sub(t2));
             }
             Action::Decode => {
-                self.step_decode()?;
-                self.metrics
-                    .attr_decode
-                    .record(self.clock.now().saturating_sub(t2));
+                // Weight the decode slice by tokens emitted, so the
+                // span partition and per-token attribution stay exact
+                // when one step carries a whole chunk.
+                let tokens = self.step_decode()?;
+                self.metrics.attr_decode.record_weighted(
+                    self.clock.now().saturating_sub(t2),
+                    tokens.max(1) as u64,
+                );
             }
             Action::Idle => {}
         }

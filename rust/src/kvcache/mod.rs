@@ -265,7 +265,12 @@ impl KvCache {
             )));
         }
         self.incref_blocks(shared);
-        let mut blocks = shared.to_vec();
+        // Block-table capacity covers the sequence's full possible life
+        // (`max_seq`), so `grow_one`'s boundary pushes never reallocate
+        // on the decode hot path (the zero-alloc-per-token invariant).
+        let mut blocks =
+            Vec::with_capacity(self.blocks_for(self.geo.max_seq.max(tokens.max(1))));
+        blocks.extend_from_slice(shared);
         for _ in 0..need {
             blocks.push(self.alloc_block().expect("checked free count"));
         }

@@ -43,13 +43,25 @@ impl Default for LatencyHistogram {
 
 impl LatencyHistogram {
     pub fn record(&mut self, d: Duration) {
-        let us = d.as_micros() as u64;
-        let idx = self.bounds.partition_point(|&b| b < us);
-        self.counts[idx] += 1;
-        self.sum_us += us as u128;
-        self.count += 1;
-        self.max_us = self.max_us.max(us);
-        self.min_us = self.min_us.min(us);
+        self.record_weighted(d, 1);
+    }
+
+    /// Record `d` as `weight` equal samples of `d / weight` each — the
+    /// chunked-decode attribution shape: one measured chunk covering
+    /// `weight` tokens lands as `weight` per-token observations whose
+    /// micros sum to the chunk's total, so percentiles stay per-token
+    /// and sums stay exact at any chunk size. `weight == 0` is treated
+    /// as 1 (a chunk that measured time produced at least one sample).
+    pub fn record_weighted(&mut self, d: Duration, weight: u64) {
+        let weight = weight.max(1);
+        let total_us = d.as_micros() as u64;
+        let per_us = total_us / weight;
+        let idx = self.bounds.partition_point(|&b| b < per_us);
+        self.counts[idx] += weight;
+        self.sum_us += total_us as u128;
+        self.count += weight;
+        self.max_us = self.max_us.max(per_us);
+        self.min_us = self.min_us.min(per_us);
     }
 
     pub fn count(&self) -> u64 {

@@ -454,10 +454,26 @@ impl FlightRecorder {
 
     /// Append one event line, evicting the oldest entry when full.
     pub fn record(&mut self, at: Duration, what: String) {
-        if self.buf.len() == self.capacity {
-            self.buf.pop_front();
+        self.record_with(at, |buf| {
+            buf.push_str(&what);
+        });
+    }
+
+    /// Append one event line rendered directly into the entry's string.
+    /// At capacity the evicted entry's `String` is recycled (cleared,
+    /// rewritten in place), so a full ring records without allocating —
+    /// the step loop's hot-path variant. `f` receives an empty buffer
+    /// and writes the line via `std::fmt::Write`.
+    pub fn record_with(&mut self, at: Duration, f: impl FnOnce(&mut String)) {
+        let mut what = if self.buf.len() == self.capacity {
+            let mut old = self.buf.pop_front().expect("capacity >= 1").what;
             self.dropped += 1;
-        }
+            old.clear();
+            old
+        } else {
+            String::with_capacity(96)
+        };
+        f(&mut what);
         self.buf.push_back(FlightEntry {
             seq: self.next_seq,
             at_us: at.as_micros() as u64,

@@ -241,22 +241,33 @@ pub fn preempt_candidates(
     seqs: &HashMap<SeqId, Sequence>,
     pool_ids: &[SeqId],
 ) -> Vec<PreemptCandidate> {
-    pool_ids
-        .iter()
-        .map(|&id| {
-            let reusable = kv
-                .seq_blocks(id)
-                .map(|bs| bs.iter().filter(|&&b| kv.block_refcount(b) > 1).count())
-                .unwrap_or(0);
-            let seq = seqs.get(&id);
-            PreemptCandidate {
-                id,
-                priority: seq.map(|s| s.priority).unwrap_or(0),
-                paused: seq.map(|s| s.state == SeqState::Paused).unwrap_or(false),
-                reusable_blocks: reusable,
-            }
-        })
-        .collect()
+    let mut out = Vec::new();
+    preempt_candidates_into(kv, seqs, pool_ids, &mut out);
+    out
+}
+
+/// [`preempt_candidates`] into a caller-owned buffer (cleared first),
+/// so the decode hot path's headroom scan allocates nothing.
+pub fn preempt_candidates_into(
+    kv: &KvCache,
+    seqs: &HashMap<SeqId, Sequence>,
+    pool_ids: &[SeqId],
+    out: &mut Vec<PreemptCandidate>,
+) {
+    out.clear();
+    out.extend(pool_ids.iter().map(|&id| {
+        let reusable = kv
+            .seq_blocks(id)
+            .map(|bs| bs.iter().filter(|&&b| kv.block_refcount(b) > 1).count())
+            .unwrap_or(0);
+        let seq = seqs.get(&id);
+        PreemptCandidate {
+            id,
+            priority: seq.map(|s| s.priority).unwrap_or(0),
+            paused: seq.map(|s| s.state == SeqState::Paused).unwrap_or(false),
+            reusable_blocks: reusable,
+        }
+    }));
 }
 
 /// Admission-path relief: when a queued request cannot admit and no
@@ -383,11 +394,41 @@ pub fn plan_stream_ops(
     paused: &[SeqId],
     running_ids: &[SeqId],
     policy: BackpressurePolicy,
-    mut free_lanes: usize,
+    free_lanes: usize,
     now: Duration,
     idle_timeout: Option<Duration>,
 ) -> Vec<StreamOp> {
     let mut ops = Vec::new();
+    plan_stream_ops_into(
+        seqs,
+        paused,
+        running_ids,
+        policy,
+        free_lanes,
+        now,
+        idle_timeout,
+        &mut ops,
+    );
+    ops
+}
+
+/// [`plan_stream_ops`] into a caller-owned plan buffer (cleared
+/// first) — the step loop's allocation-free variant. Note the paused
+/// resume ordering still allocates (via [`resume_order`]) only when
+/// `paused` is non-empty; the steady decode window has no parked
+/// sequences and therefore no allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_stream_ops_into(
+    seqs: &HashMap<SeqId, Sequence>,
+    paused: &[SeqId],
+    running_ids: &[SeqId],
+    policy: BackpressurePolicy,
+    mut free_lanes: usize,
+    now: Duration,
+    idle_timeout: Option<Duration>,
+    ops: &mut Vec<StreamOp>,
+) {
+    ops.clear();
     for id in resume_order(seqs, paused) {
         let seq = &seqs[&id];
         if stream_verdict(seq) == StreamVerdict::Disconnected {
@@ -413,7 +454,6 @@ pub fn plan_stream_ops(
             },
         }
     }
-    ops
 }
 
 #[cfg(test)]

@@ -106,7 +106,9 @@ impl Sequence {
             priority: req.priority,
             state: SeqState::Queued,
             prompt: prompt_tokens,
-            generated: Vec::new(),
+            // Reserved up front so steady-state decode pushes never
+            // reallocate (the zero-alloc-per-token invariant).
+            generated: Vec::with_capacity(max_new_tokens),
             max_new_tokens,
             params: req.params,
             stop,

@@ -85,15 +85,31 @@ pub(crate) const LOGITS_DIGEST_SEED: u64 = 0x5EED_CAFE;
 
 /// K/V column for `(token, pos)` in [Lyr, H, Dh] layout.
 pub(crate) fn sim_token_cols(geo: &KvGeometry, token: u32, pos: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut k = Vec::new();
+    let mut v = Vec::new();
+    sim_token_cols_into(geo, token, pos, &mut k, &mut v);
+    (k, v)
+}
+
+/// [`sim_token_cols`] into caller-owned buffers (cleared first), so
+/// the decode hot path stages columns without allocating.
+pub(crate) fn sim_token_cols_into(
+    geo: &KvGeometry,
+    token: u32,
+    pos: usize,
+    k: &mut Vec<f32>,
+    v: &mut Vec<f32>,
+) {
     let te = geo.token_elems();
-    let mut k = Vec::with_capacity(te);
-    let mut v = Vec::with_capacity(te);
+    k.clear();
+    v.clear();
+    k.reserve(te);
+    v.reserve(te);
     let base = ((token as u64) << 32) ^ ((pos as u64) << 8);
     for e in 0..te {
         k.push(hash_f32(base ^ ((e as u64) << 1)));
         v.push(hash_f32(base ^ ((e as u64) << 1) ^ 1));
     }
-    (k, v)
 }
 
 /// Prefill K/V for a whole prompt in [Lyr, 1, H, S, Dh] layout
@@ -148,13 +164,26 @@ pub(crate) fn sim_publishable_tokens(kv: &KvCache, seq: &Sequence) -> Vec<u32> {
 /// prefix/suffix split the same way the paper's unified-max softmax
 /// ([`crate::softmaxstats::softmax_unified`]) makes real partials
 /// mergeable without a synchronization pass.
-fn fold_kv_digest(kv: &KvCache, id: SeqId, start: usize, end: usize, seed: u64) -> Result<u64> {
+/// `kcol`/`vcol` are caller-owned staging for the per-position
+/// read-back (resized in place, so a persistent caller buffer makes
+/// the fold allocation-free).
+fn fold_kv_digest(
+    kv: &KvCache,
+    id: SeqId,
+    start: usize,
+    end: usize,
+    seed: u64,
+    kcol: &mut Vec<f32>,
+    vcol: &mut Vec<f32>,
+) -> Result<u64> {
     let te = kv.geometry().token_elems();
-    let mut kcol = vec![0.0f32; te];
-    let mut vcol = vec![0.0f32; te];
+    kcol.clear();
+    vcol.clear();
+    kcol.resize(te, 0.0);
+    vcol.resize(te, 0.0);
     let mut digest = seed;
     for pos in start..end {
-        kv.read_token(id, pos, &mut kcol, &mut vcol)?;
+        kv.read_token(id, pos, kcol, vcol)?;
         for f in kcol.iter().chain(vcol.iter()) {
             digest = mix(digest ^ f.to_bits() as u64);
         }
@@ -165,18 +194,32 @@ fn fold_kv_digest(kv: &KvCache, id: SeqId, start: usize, end: usize, seed: u64) 
 /// Expand a finished KV digest into a logits row, mixed with the
 /// current input token.
 fn logits_from_digest(digest: u64, vocab: usize, cur_tok: u32) -> Vec<f32> {
+    let mut out = Vec::new();
+    logits_from_digest_into(digest, vocab, cur_tok, &mut out);
+    out
+}
+
+/// [`logits_from_digest`] appended onto a caller-owned flat buffer —
+/// the decode hot path writes every lane's row into one backing
+/// allocation ([`DecodeRun`]'s layout) without a per-row collect.
+fn logits_from_digest_into(digest: u64, vocab: usize, cur_tok: u32, out: &mut Vec<f32>) {
     let d = mix(digest ^ ((cur_tok as u64) << 32));
-    (0..vocab).map(|c| hash_f32(d ^ c as u64)).collect()
+    out.reserve(vocab);
+    for c in 0..vocab {
+        out.push(hash_f32(d ^ c as u64));
+    }
 }
 
 /// Logits for a sequence: a digest over the KV bytes *stored in the
 /// paged cache* (so shared-block corruption is observable), mixed with
-/// the current input token.
+/// the current input token. Allocates its own staging — prefill-path
+/// convenience; decode goes through the scratch-buffer fold directly.
 fn logits_from_cache(kv: &KvCache, vocab: usize, id: SeqId, cur_tok: u32) -> Result<Vec<f32>> {
     let len = kv
         .seq_len(id)
         .ok_or_else(|| Error::KvCache(format!("unknown seq {id}")))?;
-    let digest = fold_kv_digest(kv, id, 0, len, LOGITS_DIGEST_SEED)?;
+    let (mut kcol, mut vcol) = (Vec::new(), Vec::new());
+    let digest = fold_kv_digest(kv, id, 0, len, LOGITS_DIGEST_SEED, &mut kcol, &mut vcol)?;
     Ok(logits_from_digest(digest, vocab, cur_tok))
 }
 
@@ -184,14 +227,31 @@ fn logits_from_cache(kv: &KvCache, vocab: usize, id: SeqId, cur_tok: u32) -> Res
 // The backend
 // ---------------------------------------------------------------------
 
+/// Reused compute buffers: K/V column staging, digest read-back, and
+/// the recycled [`DecodeRun`] output (`logits`/`offsets` come back via
+/// [`Backend::recycle_run`]), so steady-state sim decode performs zero
+/// heap allocations per token. Capacities ratchet up to the largest
+/// batch seen and stay there.
+#[derive(Debug, Default)]
+struct SimScratch {
+    kcol: Vec<f32>,
+    vcol: Vec<f32>,
+    logits: Vec<f32>,
+    offsets: Vec<usize>,
+}
+
 /// The deterministic hash-model compute backend.
 pub struct SimBackend {
     spec: SimSpec,
+    scratch: SimScratch,
 }
 
 impl SimBackend {
     pub fn new(spec: SimSpec) -> Self {
-        SimBackend { spec }
+        SimBackend {
+            spec,
+            scratch: SimScratch::default(),
+        }
     }
 
     pub fn spec(&self) -> SimSpec {
@@ -270,14 +330,37 @@ impl Backend for SimBackend {
         _clock: &Clock,
     ) -> Result<DecodeRun> {
         let geo = kv.geometry();
-        let mut logits = Vec::with_capacity(inputs.len() * self.spec.vocab);
-        let mut offsets = Vec::with_capacity(inputs.len());
+        // The output buffers are the ones the core handed back through
+        // `recycle_run` after the previous step; staging columns are
+        // reused for both the token write and the digest read-back.
+        let mut logits = std::mem::take(&mut self.scratch.logits);
+        let mut offsets = std::mem::take(&mut self.scratch.offsets);
+        logits.clear();
+        offsets.clear();
         for inp in inputs {
             kv.grow_one(inp.id)?;
-            let (kc, vc) = sim_token_cols(&geo, inp.token, inp.pos);
-            kv.write_token(inp.id, inp.pos, &kc, &vc)?;
+            sim_token_cols_into(
+                &geo,
+                inp.token,
+                inp.pos,
+                &mut self.scratch.kcol,
+                &mut self.scratch.vcol,
+            );
+            kv.write_token(inp.id, inp.pos, &self.scratch.kcol, &self.scratch.vcol)?;
             offsets.push(logits.len());
-            logits.extend(logits_from_cache(kv, self.spec.vocab, inp.id, inp.token)?);
+            let len = kv
+                .seq_len(inp.id)
+                .ok_or_else(|| Error::KvCache(format!("unknown seq {}", inp.id)))?;
+            let digest = fold_kv_digest(
+                kv,
+                inp.id,
+                0,
+                len,
+                LOGITS_DIGEST_SEED,
+                &mut self.scratch.kcol,
+                &mut self.scratch.vcol,
+            )?;
+            logits_from_digest_into(digest, self.spec.vocab, inp.token, &mut logits);
         }
         Ok(DecodeRun {
             logits,
@@ -285,6 +368,12 @@ impl Backend for SimBackend {
             row_len: self.spec.vocab,
             exec_time: Duration::ZERO,
         })
+    }
+
+    /// Take the step's output buffers back for the next decode.
+    fn recycle_run(&mut self, run: DecodeRun) {
+        self.scratch.logits = run.logits;
+        self.scratch.offsets = run.offsets;
     }
 
     /// Grouped decode with shared-prefix compute reuse — the sim twin
@@ -322,8 +411,14 @@ impl Backend for SimBackend {
         // Phase 1: append every input's KV, in input slice order.
         for inp in inputs {
             kv.grow_one(inp.id)?;
-            let (kc, vc) = sim_token_cols(&geo, inp.token, inp.pos);
-            kv.write_token(inp.id, inp.pos, &kc, &vc)?;
+            sim_token_cols_into(
+                &geo,
+                inp.token,
+                inp.pos,
+                &mut self.scratch.kcol,
+                &mut self.scratch.vcol,
+            );
+            kv.write_token(inp.id, inp.pos, &self.scratch.kcol, &self.scratch.vcol)?;
         }
         // Phase 2: one shared-prefix partial per group, extended per
         // member over its suffix; rows outside any group take the full
@@ -331,10 +426,26 @@ impl Backend for SimBackend {
         let mut rows: Vec<Option<Vec<f32>>> = vec![None; inputs.len()];
         for g in groups {
             let lead = inputs[g.members[0]].id;
-            let shared = fold_kv_digest(kv, lead, 0, g.prefix_tokens, LOGITS_DIGEST_SEED)?;
+            let shared = fold_kv_digest(
+                kv,
+                lead,
+                0,
+                g.prefix_tokens,
+                LOGITS_DIGEST_SEED,
+                &mut self.scratch.kcol,
+                &mut self.scratch.vcol,
+            )?;
             for &m in &g.members {
                 let inp = &inputs[m];
-                let d = fold_kv_digest(kv, inp.id, g.prefix_tokens, inp.pos + 1, shared)?;
+                let d = fold_kv_digest(
+                    kv,
+                    inp.id,
+                    g.prefix_tokens,
+                    inp.pos + 1,
+                    shared,
+                    &mut self.scratch.kcol,
+                    &mut self.scratch.vcol,
+                )?;
                 rows[m] = Some(logits_from_digest(d, self.spec.vocab, inp.token));
             }
             // Every member after the first skipped re-scoring the

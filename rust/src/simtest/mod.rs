@@ -296,6 +296,33 @@ pub struct ScenarioReport {
     pub fingerprint: u64,
 }
 
+/// Everything a [`ScenarioReport`] says about *behavior*, with the one
+/// field that measures *pacing* (`steps`) projected out. Chunked decode
+/// (`EngineConfig::decode_chunk`) generates several tokens per engine
+/// step, so a chunked run legitimately takes fewer scheduler steps —
+/// and, under the sim's one-`SIM_STEP`-per-step clock, less virtual
+/// time — than an unchunked run of the same world. Every other field,
+/// the order-sensitive trace fingerprint above all, must still match
+/// exactly; `tests/differential_backends.rs` asserts this over the
+/// chunk matrix.
+pub fn behavior_key(
+    r: &ScenarioReport,
+) -> (u64, usize, u64, u64, u64, u64, u64, u64, u64, u64, u64) {
+    (
+        r.seed,
+        r.requests,
+        r.finished,
+        r.preemptions,
+        r.pauses,
+        r.resumes,
+        r.expired,
+        r.disconnects,
+        r.cancellations,
+        r.tokens_generated,
+        r.fingerprint,
+    )
+}
+
 fn fold(acc: u64, v: u64) -> u64 {
     splitmix64(acc ^ v.wrapping_mul(0xD6E8FEB86659FD93))
 }
@@ -480,6 +507,191 @@ pub fn run_scenario_grouped(seed: u64) -> Result<ScenarioReport, Violation> {
         seed,
         step: 0,
         message: format!("grouped engine construction failed: {e}"),
+    })?;
+    run_with_hook(&scenario, engine, &mut |_, _| {})
+}
+
+/// Expand a seed into a *chunk-safe* scenario: a world whose behavior
+/// is invariant under `EngineConfig::decode_chunk`, so chunked and
+/// unchunked runs must agree on [`behavior_key`] exactly.
+///
+/// Chunking compresses the harness step axis (several tokens per
+/// engine step), so anything a scenario keys off the *step counter*
+/// mid-generation would legitimately land at a different point in the
+/// token stream and change behavior. This family therefore scripts:
+///
+/// * all arrivals at step 0 (no mid-run arrival races the compressed
+///   step axis),
+/// * eager readers only (no `EveryK` pacing, stalls, or disconnects
+///   measured in harness steps),
+/// * no client `cancel_at` and no admin bulk-cancel (both are
+///   step-indexed),
+/// * no stream idle timeout (virtual time advances per step, and a
+///   chunked run takes fewer steps),
+/// * stream capacity 32 — comfortably above the largest chunk, so
+///   intra-step token bursts never hit the credit limit.
+///
+/// Everything *engine-internal* stays adversarial: tight-ish KV pools
+/// (preemption and admission queueing still happen — the in-loop
+/// `chunk_can_continue` guard is what keeps those identical), stop
+/// sequences, mixed priorities and token budgets, prefix sharing.
+pub fn generate_chunk_scenario(seed: u64) -> Scenario {
+    let mut rng = Rng::seed_from_u64(seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xC4C_57A7E);
+    let cfg = EngineConfig {
+        kv_block_tokens: if rng.next_u64() % 2 == 0 { 4 } else { 8 },
+        // Moderate pressure: enough blocks that decode runs, few enough
+        // that heavy seeds still preempt.
+        kv_total_blocks: rng.gen_range(24, 64),
+        max_new_tokens: rng.gen_range(8, 24),
+        max_running: rng.gen_range(2, 8),
+        decode_buckets: vec![1, 2, 4, 8],
+        prefix_cache: rng.next_u64() % 4 != 0,
+        stream_capacity: 32,
+        backpressure: BackpressurePolicy::PauseDecode,
+        stream_idle_timeout_ms: 0,
+        seed,
+        ..EngineConfig::default()
+    };
+
+    let prefixes = ["sys0: shared preamble ", "sys1: other preamble! ", "u: "];
+    let tenants = ["acme", "globex", "initech"];
+    let n = rng.gen_range(6, 14);
+    let mut clients = Vec::with_capacity(n);
+    for i in 0..n {
+        let prefix = prefixes[rng.gen_range(0, prefixes.len() - 1)];
+        let prompt = format!("{prefix}{i:02}");
+        let stop = if rng.next_u64() % 5 == 0 {
+            vec![String::from_utf8(vec![rng.gen_range(97, 122) as u8]).unwrap()]
+        } else {
+            Vec::new()
+        };
+        clients.push(ClientScript {
+            arrive_step: 0,
+            prompt,
+            tenant: tenants[rng.gen_range(0, tenants.len() - 1)].to_string(),
+            priority: rng.gen_range(0, 5) as i32 - 2,
+            stop,
+            max_new_tokens: rng.gen_range(4, 20),
+            reader: Reader::Eager,
+            cancel_at: None,
+        });
+    }
+    Scenario {
+        seed,
+        cfg,
+        clients,
+        admin_cancel: None,
+        horizon: 200,
+    }
+}
+
+/// Run one chunk-safe scenario ([`generate_chunk_scenario`]) with
+/// `decode_chunk = chunk`, all five oracles armed. For every seed,
+/// [`behavior_key`] of the report must be identical across all chunk
+/// values (chunk 1 is the unchunked baseline); only `steps` may differ.
+pub fn run_scenario_chunked(seed: u64, chunk: usize) -> Result<ScenarioReport, Violation> {
+    let scenario = generate_chunk_scenario(seed);
+    let cfg = EngineConfig {
+        decode_chunk: chunk,
+        ..scenario.cfg.clone()
+    };
+    let engine = SimEngine::new(cfg, SimSpec::default()).map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("chunked engine construction failed: {e}"),
+    })?;
+    run_with_hook(&scenario, engine, &mut |_, _| {})
+}
+
+/// [`run_scenario_chunked`] with prefix-shared grouped decode on top —
+/// the two decode-loop features composed. Must match the plain
+/// [`run_scenario_chunked`] behavior key for every (seed, chunk), and
+/// transitively the chunk-1 ungrouped baseline.
+pub fn run_scenario_chunked_grouped(seed: u64, chunk: usize) -> Result<ScenarioReport, Violation> {
+    let scenario = generate_chunk_scenario(seed);
+    let cfg = EngineConfig {
+        decode_chunk: chunk,
+        grouped_decode: true,
+        ..scenario.cfg.clone()
+    };
+    let engine = SimEngine::new(cfg, SimSpec::default()).map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("chunked grouped engine construction failed: {e}"),
+    })?;
+    run_with_hook(&scenario, engine, &mut |_, _| {})
+}
+
+/// One chunk-safe scenario on `EngineCore<ShardedBackend<SimBackend>>`
+/// with `decode_chunk = chunk`: sharding must stay invisible under
+/// chunked steps, so the behavior key must match the unsharded
+/// [`run_scenario_chunked`] for every (seed, chunk, shards).
+pub fn run_scenario_chunked_sharded(
+    seed: u64,
+    chunk: usize,
+    shards: usize,
+) -> Result<ScenarioReport, Violation> {
+    let scenario = generate_chunk_scenario(seed);
+    let cfg = EngineConfig {
+        decode_chunk: chunk,
+        ..scenario.cfg.clone()
+    };
+    let engine = EngineCore::with_backend(
+        ShardedBackend::new(SimBackend::new(SimSpec::default()), shards),
+        cfg,
+        SimClock::manual(),
+    )
+    .map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("chunked sharded engine construction failed: {e}"),
+    })?;
+    run_with_hook(&scenario, engine, &mut |_, _| {})
+}
+
+/// One chunk-safe scenario on a single-replica sim [`Fleet`] with
+/// `decode_chunk = chunk`: the fleet layer must stay transparent under
+/// chunked steps, so the behavior key must match the bare-core
+/// [`run_scenario_chunked`] for every (seed, chunk).
+pub fn run_scenario_chunked_fleet(
+    seed: u64,
+    chunk: usize,
+    n_replicas: usize,
+) -> Result<ScenarioReport, Violation> {
+    let scenario = generate_chunk_scenario(seed);
+    let cfg = EngineConfig {
+        decode_chunk: chunk,
+        ..scenario.cfg.clone()
+    };
+    let fleet = Fleet::sim(cfg, fleet_scenario_config(n_replicas), SimSpec::default()).map_err(
+        |e| Violation {
+            seed,
+            step: 0,
+            message: format!("chunked fleet construction failed: {e}"),
+        },
+    )?;
+    run_fleet_scenario(&scenario, fleet, None)
+}
+
+/// Run a fully *adversarial* scenario ([`generate_scenario`] — slow
+/// readers, stalls, disconnects, step-indexed cancels, idle timeouts)
+/// with `decode_chunk = chunk`. Behavior is **not** expected to match
+/// the unchunked run here (the harness scripts are step-indexed and the
+/// step axis compresses); what must hold is that all five oracles pass
+/// and the run is byte-reproducible at the same chunk value.
+pub fn run_scenario_chunked_adversarial(
+    seed: u64,
+    chunk: usize,
+) -> Result<ScenarioReport, Violation> {
+    let scenario = generate_scenario(seed);
+    let cfg = EngineConfig {
+        decode_chunk: chunk,
+        ..scenario.cfg.clone()
+    };
+    let engine = SimEngine::new(cfg, SimSpec::default()).map_err(|e| Violation {
+        seed,
+        step: 0,
+        message: format!("chunked engine construction failed: {e}"),
     })?;
     run_with_hook(&scenario, engine, &mut |_, _| {})
 }
@@ -1647,6 +1859,39 @@ mod tests {
         // run a nonzero throughput.
         assert!(a.get("ttft_p50_us").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(a.get("tokens_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn chunked_scenarios_match_unchunked_behavior() {
+        for seed in [1u64, 7, 23] {
+            let base = run_scenario_chunked(seed, 1).expect("chunk-1 baseline passes");
+            for chunk in [2usize, 4, 8] {
+                let c = run_scenario_chunked(seed, chunk).expect("chunked run passes oracles");
+                assert_eq!(
+                    behavior_key(&base),
+                    behavior_key(&c),
+                    "seed {seed} chunk {chunk}: behavior must be chunk-invariant"
+                );
+                assert!(
+                    c.steps <= base.steps,
+                    "seed {seed} chunk {chunk}: chunking must never add steps"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_adversarial_runs_pass_oracles_and_reproduce() {
+        // Step-indexed client scripts mean behavior legitimately shifts
+        // under chunking; the oracles and same-chunk determinism are
+        // what must survive the adversarial worlds.
+        for seed in [2u64, 9] {
+            for chunk in [2usize, 4] {
+                let a = run_scenario_chunked_adversarial(seed, chunk).expect("oracles pass");
+                let b = run_scenario_chunked_adversarial(seed, chunk).expect("oracles pass");
+                assert_eq!(a, b, "seed {seed} chunk {chunk} must reproduce exactly");
+            }
+        }
     }
 
     #[test]

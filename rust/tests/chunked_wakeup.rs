@@ -1,0 +1,130 @@
+//! The engine-loop nap/wakeup contract re-validated under chunked
+//! decode: when every live request is parked on backpressure, a client
+//! draining its stream across the resume threshold must advance the
+//! [`Wakeup`] epoch *without any engine step* (the drain path itself
+//! notifies — this is what `server::engine_loop` blocks on), and the
+//! resume latency in engine steps must be identical at every chunk
+//! size. Chunking fuses policy work across rounds, but the pause is
+//! observed mid-chunk (credit is checked before every token), so a
+//! parked world looks exactly the same to the loop at chunk 1 and
+//! chunk 4.
+
+use fdpp::api::{GenEvent, GenRequest, InferenceEngine, Wakeup};
+use fdpp::config::{BackpressurePolicy, EngineConfig};
+use fdpp::scheduler::Action;
+use fdpp::simengine::{SimEngine, SimSpec};
+
+struct ParkedRun {
+    /// Tokens emitted before the stream filled and the engine parked.
+    tokens_at_pause: u64,
+    /// Epoch delta produced by the first drain alone (no engine step).
+    epoch_advanced: bool,
+    /// Engine steps from that drain until the next token appeared.
+    resume_latency: u64,
+    /// Tokens delivered over the request's whole life.
+    total_tokens: usize,
+}
+
+/// Drive one request into a backpressure park (capacity-2 stream,
+/// nobody reading), then drain client-side and measure how the wakeup
+/// and the resume behave.
+fn run_parked_world(chunk: usize) -> ParkedRun {
+    let cfg = EngineConfig {
+        kv_block_tokens: 8,
+        kv_total_blocks: 64,
+        max_new_tokens: 12,
+        max_running: 1,
+        stream_capacity: 2,
+        backpressure: BackpressurePolicy::PauseDecode,
+        decode_chunk: chunk,
+        seed: 7,
+        ..EngineConfig::default()
+    };
+    let mut engine = SimEngine::new(cfg, SimSpec::default()).expect("engine builds");
+    let w = Wakeup::new();
+    engine.set_wakeup(w.clone());
+    let h = engine
+        .submit(GenRequest::text("wakeup probe prompt").max_new_tokens(12))
+        .expect("submit accepted");
+
+    // Phase 1: nobody drains; the stream fills and the engine parks
+    // the sequence. `Action::Idle` with work still live is exactly the
+    // state `engine_loop` naps on.
+    let mut guard = 0;
+    loop {
+        assert!(guard < 1000, "chunk {chunk}: engine never parked");
+        guard += 1;
+        let action = engine.step().expect("step succeeds");
+        if action == Action::Idle {
+            break;
+        }
+    }
+    assert!(!engine.is_idle(), "parked is not finished");
+    let tokens_at_pause = engine.metrics.tokens_generated;
+
+    // Phase 2: one client-side drain crosses the resume threshold
+    // (capacity 2: buffered 2 -> 1 crosses half). The epoch must
+    // advance from the drain alone — no engine step in between.
+    let e0 = w.epoch();
+    let mut drained = 0usize;
+    assert!(h.events.try_recv().is_ok(), "a buffered token is waiting");
+    drained += 1;
+    let epoch_advanced = w.epoch() > e0;
+
+    // Phase 3: eager from here on; count steps until the engine emits
+    // again, then drain to completion.
+    let mut resume_latency = 0u64;
+    let mut finished = false;
+    let mut seen_resume = false;
+    let mut guard = 0;
+    while !engine.is_idle() {
+        assert!(guard < 1000, "chunk {chunk}: engine never drained");
+        guard += 1;
+        let before = engine.metrics.tokens_generated;
+        engine.step().expect("step succeeds");
+        if !seen_resume {
+            resume_latency += 1;
+            seen_resume = engine.metrics.tokens_generated > before;
+        }
+        while let Ok(ev) = h.events.try_recv() {
+            match ev {
+                GenEvent::Token(_) => drained += 1,
+                GenEvent::Finished { .. } => finished = true,
+            }
+        }
+    }
+    assert!(finished, "chunk {chunk}: request must finish");
+    ParkedRun {
+        tokens_at_pause,
+        epoch_advanced,
+        resume_latency,
+        total_tokens: drained,
+    }
+}
+
+#[test]
+fn drain_wakes_parked_engine_without_a_step_at_any_chunk() {
+    let base = run_parked_world(1);
+    assert!(
+        base.epoch_advanced,
+        "chunk 1: client drain must notify the wakeup with no engine step"
+    );
+    assert_eq!(base.total_tokens, 12, "chunk 1: full budget delivered");
+    for chunk in [2usize, 4, 8] {
+        let run = run_parked_world(chunk);
+        assert!(
+            run.epoch_advanced,
+            "chunk {chunk}: client drain must notify the wakeup with no engine step"
+        );
+        assert_eq!(
+            run.tokens_at_pause, base.tokens_at_pause,
+            "chunk {chunk}: credit must gate every token, so the park \
+             happens at the same point in the token stream"
+        );
+        assert_eq!(
+            run.resume_latency, base.resume_latency,
+            "chunk {chunk}: resume latency in engine steps must match chunk 1"
+        );
+        assert_eq!(run.total_tokens, 12, "chunk {chunk}: full budget delivered");
+    }
+}

@@ -27,6 +27,18 @@
 //! report must still equal the ungrouped baseline's byte for byte —
 //! reuse is a pure compute optimization, never a behavior change.
 //!
+//! The chunked-decode matrix widens it once more: with
+//! `EngineConfig::decode_chunk > 1` each decode step fuses several
+//! token rounds behind one pass of the per-step policy work. On the
+//! chunk-safe scenario family every chunk size must produce the same
+//! `behavior_key` — every report field including the order-sensitive
+//! fingerprint, with only the step count (pacing) free to shrink — and
+//! the fleet/sharded/grouped wrappers must stay transparent under
+//! chunking. On the fully adversarial family (step-indexed client
+//! scripts, whose meaning legitimately shifts when the step axis
+//! compresses) the five oracles and same-chunk reproducibility must
+//! still hold.
+//!
 //! A divergence names the seed; replay it with
 //! `cargo run --example simtest -- --seed N` (add `--shards M` for the
 //! sharded run).
@@ -37,7 +49,9 @@ use fdpp::core::{EngineCore, StubEngine};
 use fdpp::shard::{ShardHook, ShardedBackend};
 use fdpp::simengine::{SimBackend, SimEngine, SimSpec};
 use fdpp::simtest::{
-    generate_scenario, run_scenario, run_scenario_grouped, run_scenario_on, run_scenario_sharded,
+    behavior_key, generate_scenario, run_scenario, run_scenario_chunked,
+    run_scenario_chunked_adversarial, run_scenario_chunked_fleet, run_scenario_chunked_grouped,
+    run_scenario_chunked_sharded, run_scenario_grouped, run_scenario_on, run_scenario_sharded,
     trace_fingerprint,
 };
 use fdpp::util::clock::Clock;
@@ -167,6 +181,91 @@ fn seed_matrix_fingerprints_are_grouping_invariant() {
         }
     }
     assert!(diverged.is_empty(), "diverging seeds: {diverged:?}");
+}
+
+/// The chunked-decode differential matrix: on the chunk-safe scenario
+/// family, every chunk size must reproduce the chunk-1 baseline's
+/// behavior key exactly — same trace fingerprint, same token/lifecycle
+/// counts — while never taking *more* engine steps. Chunking is an
+/// orchestration amortization, never a behavior change.
+#[test]
+fn seed_matrix_behavior_is_chunk_invariant() {
+    let mut diverged = Vec::new();
+    for seed in SEED_MATRIX {
+        let baseline = run_scenario_chunked(seed, 1).expect("chunk-1 baseline passes oracles");
+        for chunk in [2usize, 4, 8] {
+            let chunked = run_scenario_chunked(seed, chunk).expect("chunked run passes oracles");
+            if behavior_key(&baseline) != behavior_key(&chunked) {
+                eprintln!(
+                    "seed {seed} chunk {chunk}: baseline fp {:016x} != chunked fp {:016x}",
+                    baseline.fingerprint, chunked.fingerprint
+                );
+                diverged.push((seed, chunk));
+            } else if chunked.steps > baseline.steps {
+                eprintln!(
+                    "seed {seed} chunk {chunk}: {} steps exceeds baseline {}",
+                    chunked.steps, baseline.steps
+                );
+                diverged.push((seed, chunk));
+            }
+        }
+    }
+    assert!(diverged.is_empty(), "diverging (seed, chunk): {diverged:?}");
+}
+
+/// Chunking composed with every wrapper: grouped decode on the same
+/// core, a sharded backend underneath, a fleet layer on top. Each
+/// composition must reproduce the bare chunk-1 baseline's behavior key
+/// for every seed — the wrappers proved themselves transparent to the
+/// unchunked step loop, and they must stay transparent to the fused
+/// one.
+#[test]
+fn seed_matrix_chunked_compositions_stay_transparent() {
+    let mut diverged = Vec::new();
+    for seed in SEED_MATRIX {
+        let baseline = run_scenario_chunked(seed, 1).expect("chunk-1 baseline passes oracles");
+        let key = behavior_key(&baseline);
+        for chunk in [2usize, 4, 8] {
+            let grouped =
+                run_scenario_chunked_grouped(seed, chunk).expect("grouped run passes oracles");
+            if behavior_key(&grouped) != key {
+                diverged.push((seed, chunk, "grouped"));
+            }
+        }
+        for chunk in [2usize, 4] {
+            let sharded = run_scenario_chunked_sharded(seed, chunk, 2)
+                .expect("sharded run passes oracles");
+            if behavior_key(&sharded) != key {
+                diverged.push((seed, chunk, "sharded"));
+            }
+            let fleet =
+                run_scenario_chunked_fleet(seed, chunk, 1).expect("fleet run passes oracles");
+            if behavior_key(&fleet) != key {
+                diverged.push((seed, chunk, "fleet"));
+            }
+        }
+    }
+    assert!(
+        diverged.is_empty(),
+        "diverging (seed, chunk, composition): {diverged:?}"
+    );
+}
+
+/// The adversarial half of the chunk matrix: slow readers, stalls,
+/// disconnects, and step-indexed cancels — behaviors chunking
+/// legitimately re-times. What must survive: all five oracles, and
+/// byte-identical reproduction at the same chunk value.
+#[test]
+fn chunked_adversarial_matrix_passes_oracles_and_reproduces() {
+    for seed in SEED_MATRIX {
+        for chunk in [2usize, 4, 8] {
+            let a = run_scenario_chunked_adversarial(seed, chunk)
+                .expect("adversarial chunked run passes oracles");
+            let b = run_scenario_chunked_adversarial(seed, chunk)
+                .expect("adversarial chunked run passes oracles");
+            assert_eq!(a, b, "seed {seed} chunk {chunk} must reproduce exactly");
+        }
+    }
 }
 
 /// Step a sharded engine in lockstep with a plain sim engine under a

@@ -1,0 +1,146 @@
+//! Property test for the step loop's zero-allocation steady state:
+//! once a randomized decode world has warmed up (streams, flight ring,
+//! scratch arenas, and KV block tables all at their high-water
+//! capacity), an engine step that only generates tokens — no
+//! admission, finish, preemption, pause/resume, or cancel — performs
+//! **zero** heap allocations, at every chunk size.
+//!
+//! The test binary installs a counting global allocator and samples it
+//! around each `engine.step()` call. Steps are classified *after the
+//! fact* from the engine's own metrics deltas, so the test needs no
+//! knowledge of the scheduler's plans: a step is steady-state decode
+//! iff `tokens_generated` rose while every lifecycle counter
+//! (admitted, finished, preemptions, pauses, resumes, cancellations)
+//! and `prefill_steps` stayed put. Grouped decode is exempt from the
+//! zero-alloc claim (group formation allocates by design) and is kept
+//! off here.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fdpp::api::{GenRequest, InferenceEngine};
+use fdpp::config::EngineConfig;
+use fdpp::simengine::{SimEngine, SimSpec};
+use fdpp::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Lifecycle counters whose movement disqualifies a step from the
+/// steady-state claim.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct Lifecycle {
+    admitted: u64,
+    finished: u64,
+    preemptions: u64,
+    pauses: u64,
+    resumes: u64,
+    cancellations: u64,
+    prefill_steps: u64,
+}
+
+fn lifecycle(e: &SimEngine) -> Lifecycle {
+    let m = &e.metrics;
+    Lifecycle {
+        admitted: m.requests_admitted,
+        finished: m.requests_finished,
+        preemptions: m.preemptions,
+        pauses: m.backpressure_pauses,
+        resumes: m.backpressure_resumes,
+        cancellations: m.cancellations,
+        prefill_steps: m.prefill_steps,
+    }
+}
+
+/// Tokens generated before a step counts as warmed up: past the flight
+/// ring's fill (64 entries — recycling kicks in after that), every
+/// stream's `VecDeque` growth, and every scratch arena's first
+/// high-water fill.
+const WARMUP_TOKENS: u64 = 96;
+
+#[test]
+fn steady_state_decode_allocates_nothing() {
+    let mut rng = Rng::seed_from_u64(0x57EF_100F);
+    let mut steady_total = 0u64;
+    for world in 0..24u64 {
+        let chunk = [1usize, 2, 4, 8][rng.gen_range(0, 4)];
+        let batch = 1 + rng.gen_range(0, 8);
+        let cfg = EngineConfig {
+            kv_block_tokens: if rng.next_u64() % 2 == 0 { 4 } else { 8 },
+            kv_total_blocks: 512,
+            max_new_tokens: 256,
+            max_running: batch,
+            decode_buckets: vec![1, 2, 4, 8],
+            prefix_cache: false,
+            stream_capacity: 64,
+            flight_recorder_capacity: 64,
+            decode_chunk: chunk,
+            seed: world,
+            ..EngineConfig::default()
+        };
+        let mut engine = SimEngine::new(cfg, SimSpec::default()).expect("engine builds");
+        let mut handles = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let words = 1 + rng.gen_range(0, 8);
+            let mut prompt = format!("world {world} req {i}");
+            for w in 0..words {
+                prompt.push_str(&format!(" tok{w}"));
+            }
+            let req = GenRequest::text(&prompt).max_new_tokens(160 + rng.gen_range(0, 64));
+            handles.push(engine.submit(req).expect("submit accepted"));
+        }
+
+        let mut steps = 0u64;
+        while !engine.is_idle() {
+            assert!(steps < 100_000, "world {world} did not drain");
+            let before = lifecycle(&engine);
+            let tokens_before = engine.metrics.tokens_generated;
+            let a0 = ALLOCS.load(Ordering::Relaxed);
+            engine.step().expect("step succeeds");
+            let a1 = ALLOCS.load(Ordering::Relaxed);
+            let after = lifecycle(&engine);
+            let emitted = engine.metrics.tokens_generated > tokens_before;
+            if emitted && before == after && tokens_before >= WARMUP_TOKENS {
+                assert_eq!(
+                    a1 - a0,
+                    0,
+                    "world {world} (chunk {chunk}, batch {batch}) step {steps}: \
+                     steady-state decode performed {} heap allocations",
+                    a1 - a0
+                );
+                steady_total += 1;
+            }
+            // Drain outside the measured window so client-side reads
+            // never pollute the step's allocation count.
+            for h in &handles {
+                while h.events.try_recv().is_ok() {}
+            }
+            steps += 1;
+        }
+    }
+    assert!(
+        steady_total > 500,
+        "only {steady_total} steady-state steps classified — the worlds \
+         are not exercising the claim"
+    );
+}
